@@ -1,0 +1,71 @@
+//! Shift-and-add multiplication scenario (§1): SIMD multiply of packed
+//! 8-bit elements across a full row, with Kogge-Stone adders inside, plus
+//! the §8.0.1 ripple-vs-Kogge-Stone comparison.
+//!
+//! Run: `cargo run --release --example multiplier`
+
+use shiftdram::apps::adder::{install_masks, kogge_stone_add, ripple_add};
+use shiftdram::apps::elements::ElementCtx;
+use shiftdram::apps::multiplier::{install_mul_masks, shift_and_add_mul};
+use shiftdram::config::DramConfig;
+use shiftdram::util::Rng;
+
+fn main() {
+    let cfg = DramConfig::ddr3_1333_4gb();
+    let mut rng = Rng::new(99);
+
+    // adders first: the building block, and the §8.0.1 comparison
+    for width in [8usize, 16, 32] {
+        let mut rc = ElementCtx::new(48, 4096, width);
+        install_masks(&mut rc);
+        let n = rc.n_elements();
+        let m = (1u64 << width) - 1;
+        let a: Vec<u64> = (0..n).map(|_| rng.next_u64() & m).collect();
+        let b: Vec<u64> = (0..n).map(|_| rng.next_u64() & m).collect();
+        rc.set_row(0, rc.pack(&a));
+        rc.set_row(1, rc.pack(&b));
+        ripple_add(&mut rc, 0, 1, 2);
+        let rc_aaps = rc.aaps;
+
+        let mut ks = ElementCtx::new(48, 4096, width);
+        install_masks(&mut ks);
+        ks.set_row(0, ks.pack(&a));
+        ks.set_row(1, ks.pack(&b));
+        kogge_stone_add(&mut ks, 0, 1, 2);
+
+        let want: Vec<u64> = a.iter().zip(&b).map(|(x, y)| x.wrapping_add(*y) & m).collect();
+        assert_eq!(rc.unpack(rc.row(2)), want);
+        assert_eq!(ks.unpack(ks.row(2)), want);
+        let t_aap = cfg.timing.t_aap() as f64 / 1e3;
+        println!(
+            "W={width:>2}: ripple {rc_aaps:>4} AAPs ({:>8.1} ns) | kogge-stone {:>4} AAPs \
+             ({:>8.1} ns) | {:>4} adds in parallel",
+            rc_aaps as f64 * t_aap,
+            ks.aaps,
+            ks.aaps as f64 * t_aap,
+            n
+        );
+    }
+
+    // the multiplier itself
+    let mut ctx = ElementCtx::new(48, 8192, 8);
+    install_masks(&mut ctx);
+    install_mul_masks(&mut ctx);
+    let n = ctx.n_elements();
+    let a: Vec<u64> = (0..n).map(|_| rng.below(256) as u64).collect();
+    let b: Vec<u64> = (0..n).map(|_| rng.below(256) as u64).collect();
+    ctx.set_row(0, ctx.pack(&a));
+    ctx.set_row(1, ctx.pack(&b));
+    shift_and_add_mul(&mut ctx, 0, 1, 2);
+    let got = ctx.unpack(ctx.row(2));
+    for j in 0..n {
+        assert_eq!(got[j], (a[j] * b[j]) & 0xFF, "elem {j}");
+    }
+    let t_us = ctx.aaps as f64 * cfg.timing.t_aap() as f64 / 1e6;
+    println!(
+        "8-bit multiply x{n}: {} AAPs = {:.1} us simulated, {:.2} ns per product",
+        ctx.aaps,
+        t_us,
+        t_us * 1e3 / n as f64
+    );
+}

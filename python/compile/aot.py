@@ -1,0 +1,74 @@
+"""AOT bridge: lower the L2 model to HLO *text* for the Rust runtime.
+
+HLO text (not `.serialize()`d HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` 0.1.6 crate links) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Emits:
+  shift_mc.hlo.txt        Monte-Carlo physics batch  (f32[8192,16] -> f32[8192,6])
+  shift_waveform.hlo.txt  single-trial waveform      (f32[1,16] -> f32[1,T,5])
+  manifest.json           shapes + config the Rust side validates against
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import common as cm
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(fn, example_args, path):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text):>9} chars  {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    emit(model.shift_mc, model.mc_example_args(),
+         os.path.join(args.out, "shift_mc.hlo.txt"))
+    emit(model.shift_waveform, model.waveform_example_args(),
+         os.path.join(args.out, "shift_waveform.hlo.txt"))
+
+    manifest = {
+        "format": "hlo-text",
+        "return_tuple": True,
+        "n_params": cm.N_PARAMS,
+        "n_out": cm.N_OUT,
+        "mc_batch": model.MC_BATCH,
+        "mc_tile": model.MC_TILE,
+        "waveform_len": model.waveform_len(),
+        "waveform_nodes": 5,
+        "cfg": cm.DEFAULT_CFG,
+        "steps_per_aap": cm.steps_per_aap(cm.DEFAULT_CFG),
+    }
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest  {mpath}")
+
+
+if __name__ == "__main__":
+    main()

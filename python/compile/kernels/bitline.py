@@ -1,0 +1,118 @@
+"""L1 Pallas kernel: batched bitline-transient integrator.
+
+The Monte-Carlo hot-spot of the reproduction: integrate the lumped-RC
+migration-cell shift path (two AAP command windows) for a tile of
+independent trials entirely on-chip.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid tiles the trial
+batch; each tile's full ODE state (5 node voltages + 2 sense captures per
+trial) stays resident in VMEM for the whole time loop, so HBM traffic is one
+read of the 16-float parameter vector and one write of the 6-float result
+per trial. All ops are elementwise VPU work — there is no matmul in the
+physics, the roofline is parameter-streaming bandwidth.
+
+Lowered with interpret=True (CPU PJRT cannot run Mosaic custom-calls); the
+time loop is a `lax.fori_loop`, which lowers to an HLO while-loop and is
+compiled, not re-traced.
+
+Correctness oracle: kernels/ref.py (lax.scan formulation); pytest +
+hypothesis sweep batch shapes and parameter ranges against it.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common as cm
+
+
+def _kernel(params_ref, out_ref, *, dt, n_steps, k_sense, k_act2):
+    p = params_ref[...]                      # (tile, N_PARAMS)
+
+    c_src = p[:, cm.C_SRC]
+    c_mig = p[:, cm.C_MIG]
+    c_dst = p[:, cm.C_DST]
+    c_bla = p[:, cm.C_BLA]
+    c_blb = p[:, cm.C_BLB]
+    r_src = p[:, cm.R_SRC]
+    r_mig_a = p[:, cm.R_MIG_A]
+    r_mig_b = p[:, cm.R_MIG_B]
+    r_dst = p[:, cm.R_DST]
+    vdd = p[:, cm.VDD]
+    half = 0.5 * vdd
+    inv_trise = 1.0 / jnp.maximum(p[:, cm.T_RISE], 1e-12)
+    sa_gain = p[:, cm.SA_GAIN]
+    off_a = p[:, cm.OFF_A]
+    off_b = p[:, cm.OFF_B]
+
+    t_act2 = k_act2 * dt
+    fdt = jnp.float32(dt)
+
+    def window(v_first, c_first, r_first, v_second, c_second, r_second,
+               v_bl, c_bl, off):
+        """One AAP window; returns (v_first, v_second, v_bl, sense_raw)."""
+        zero = jnp.zeros_like(v_bl)
+
+        def step(i, carry):
+            v1, v2, vb, sense = carry
+            t = i.astype(jnp.float32) * fdt
+            # wordline conductance ramps
+            g1 = jnp.clip(t * inv_trise, 0.0, 1.0) / r_first
+            g2 = jnp.clip((t - t_act2) * inv_trise, 0.0, 1.0) / r_second
+            i1 = g1 * (vb - v1)
+            i2 = g2 * (vb - v2)
+            sa_on = jnp.where(i >= k_sense, 1.0, 0.0).astype(jnp.float32)
+            raw = vb - half - off
+            i_sa = sa_on * sa_gain * raw * c_bl
+            nv1 = v1 + fdt * i1 / c_first
+            nv2 = v2 + fdt * i2 / c_second
+            nvb = jnp.clip(vb + fdt * (-(i1 + i2) + i_sa) / c_bl, 0.0, vdd)
+            sense = jnp.where(i == k_sense, raw, sense)
+            return nv1, nv2, nvb, sense
+
+        return jax.lax.fori_loop(
+            0, n_steps, step, (v_first, v_second, v_bl, zero))
+
+    # initial state
+    v_src = p[:, cm.V_SRC0]
+    v_mig = half
+    v_dst = p[:, cm.V_DST0]
+
+    # AAP 1: src -> migration cell (port A) across bitline A
+    v_src, v_mig, _v_bla, sense_a = window(
+        v_src, c_src, r_src, v_mig, c_mig, r_mig_a, half, c_bla, off_a)
+
+    # inter-AAP precharge, then AAP 2: migration (port B) -> dst on bitline B
+    v_mig, v_dst, v_blb, sense_b = window(
+        v_mig, c_mig, r_mig_b, v_dst, c_dst, r_dst, half, c_blb, off_b)
+
+    out_ref[...] = jnp.stack(
+        [sense_a, sense_b, v_dst, v_mig, v_src, v_blb], axis=-1)
+
+
+def shift_transient(params, cfg=None, tile=512):
+    """Pallas-kernel shift transient: f32[batch, N_PARAMS] -> f32[batch, N_OUT].
+
+    `batch` must be a multiple of `tile` (the VMEM trial-tile size)."""
+    cfg = dict(cm.DEFAULT_CFG, **(cfg or {}))
+    batch = params.shape[0]
+    if batch % tile != 0:
+        raise ValueError(f"batch {batch} not a multiple of tile {tile}")
+    n_steps = cm.steps_per_aap(cfg)
+    k_sense = cm.sense_step(cfg)
+    k_act2 = int(round(cfg["t_act2"] / cfg["dt"]))
+
+    kern = functools.partial(
+        _kernel, dt=cfg["dt"], n_steps=n_steps,
+        k_sense=k_sense, k_act2=k_act2)
+
+    return pl.pallas_call(
+        kern,
+        grid=(batch // tile,),
+        in_specs=[pl.BlockSpec((tile, cm.N_PARAMS), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile, cm.N_OUT), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, cm.N_OUT), jnp.float32),
+        interpret=True,
+    )(params.astype(jnp.float32))

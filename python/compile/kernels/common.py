@@ -1,0 +1,69 @@
+"""Shared constants for the bitline-transient circuit model.
+
+This is the LTSPICE substitute of the reproduction: a lumped-RC model of the
+migration-cell shift path (one bit travelling src cell -> bitline A ->
+migration cell -> bitline B -> dst cell across two AAP command windows).
+
+Parameter vector layout (per Monte-Carlo trial, f32[N_PARAMS]) — all SI:
+
+  index  name       unit  meaning
+  -----  ---------  ----  -------------------------------------------------
+  0      C_SRC      F     source cell storage capacitance
+  1      C_MIG      F     migration cell storage capacitance
+  2      C_DST      F     destination cell storage capacitance
+  3      C_BLA      F     bitline A total capacitance (per-cell C x rows + SA)
+  4      C_BLB      F     bitline B total capacitance
+  5      R_SRC      Ohm   src access transistor on-resistance
+  6      R_MIG_A    Ohm   migration cell port-A on-resistance
+  7      R_MIG_B    Ohm   migration cell port-B on-resistance
+  8      R_DST      Ohm   dst access transistor on-resistance
+  9      VDD        V     array supply
+  10     T_RISE     s     wordline rise time (conductance ramp)
+  11     SA_GAIN    1/s   sense-amp regeneration rate
+  12     OFF_A      V     input-referred SA offset, bitline A
+  13     OFF_B      V     input-referred SA offset, bitline B
+  14     V_SRC0     V     initial src cell voltage (bit value + retention droop)
+  15     V_DST0     V     initial dst cell voltage (pre-existing data)
+
+Output vector layout (per trial, f32[N_OUT]):
+
+  0      SENSE_A    V     (v_blA - vdd/2 - offA) at the AAP-1 sense instant
+  1      SENSE_B    V     (v_blB - vdd/2 - offB) at the AAP-2 sense instant
+  2      V_DST_F    V     final dst cell voltage (post write-back)
+  3      V_MIG_F    V     final migration cell voltage
+  4      V_SRC_F    V     final src cell voltage (restore check)
+  5      V_BLB_F    V     final bitline B voltage
+
+Classification (pass/fail per the paper's Section 4.2 criteria) happens on
+the Rust side; the kernel is purely physical.
+"""
+
+N_PARAMS = 16
+N_OUT = 6
+
+# param indices
+C_SRC, C_MIG, C_DST, C_BLA, C_BLB = 0, 1, 2, 3, 4
+R_SRC, R_MIG_A, R_MIG_B, R_DST = 5, 6, 7, 8
+VDD, T_RISE, SA_GAIN, OFF_A, OFF_B, V_SRC0, V_DST0 = 9, 10, 11, 12, 13, 14, 15
+
+# output indices
+SENSE_A, SENSE_B, V_DST_F, V_MIG_F, V_SRC_F, V_BLB_F = 0, 1, 2, 3, 4, 5
+
+# Default integration config. One AAP window is modelled over tRAS-like 36 ns:
+# wordline-1 ramp from t=0, sense enable at T_SENSE, second ACT at T_ACT2,
+# wordlines drop / precharge at the end of the window.
+DEFAULT_CFG = dict(
+    dt=0.1e-9,        # explicit-Euler step (paper's LTSPICE used 1 ns; we use
+                      # 0.1 ns because the cell-side tau R_on*C_cell ~ 0.4 ns)
+    t_sense=8.0e-9,   # SA enable after charge sharing settles
+    t_act2=20.0e-9,   # second ACT of the AAP (destination row)
+    t_end=36.0e-9,    # tRAS window
+)
+
+
+def steps_per_aap(cfg) -> int:
+    return int(round(cfg["t_end"] / cfg["dt"]))
+
+
+def sense_step(cfg) -> int:
+    return int(round(cfg["t_sense"] / cfg["dt"]))

@@ -1,0 +1,186 @@
+"""Pure-jnp oracle for the bitline-transient kernel.
+
+Implements the identical physics as kernels/bitline.py but with
+`jax.lax.scan` over timesteps and no Pallas — this is the correctness
+reference the Pallas kernel is pytest-checked against, and it doubles as the
+waveform model (scan `ys` carry the full node-voltage trace).
+
+Physics (per trial, explicit Euler):
+
+  cell <-> bitline through a wordline-gated access conductance
+      g(t) = ramp(t / t_rise) / R_on
+      dV_cell = g (V_bl - V_cell) dt / C_cell
+      dV_bl  += g (V_cell - V_bl) dt / C_bl
+
+  latch-type sense amp, enabled at t_sense, regenerative about the
+  offset-shifted metastable point, rail-clamped:
+      dV_bl += sa_gain (V_bl - VDD/2 - off) dt        (then clip to [0, VDD])
+
+AAP-1 connects src (from t=0) and migration-port-A (from t_act2) to bitline
+A; AAP-2 connects migration-port-B (from t=0) and dst (from t_act2) to
+bitline B. Between the two windows both bitlines are precharged to VDD/2.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+
+def _ramp(t, t_rise):
+    return jnp.clip(t / jnp.maximum(t_rise, 1e-12), 0.0, 1.0)
+
+
+def _window(cfg, wiring):
+    """Build the scan body for one AAP window.
+
+    wiring = dict(first=(cell_key, r_idx), second=(cell_key, r_idx),
+                  bl=(bl_key, c_idx, off_idx))
+    """
+    dt = cfg["dt"]
+    k_sense = cm.sense_step(cfg)
+    t_act2 = cfg["t_act2"]
+
+    (fc_key, fc_r), (sc_key, sc_r) = wiring["first"], wiring["second"]
+    bl_key, bl_c, off_idx = wiring["bl"]
+
+    def body(state_and_sense, i):
+        state, sense_raw = state_and_sense
+        p = state["_p"]
+        t = i.astype(jnp.float32) * dt
+        vdd = p[:, cm.VDD]
+        half = 0.5 * vdd
+        t_rise = p[:, cm.T_RISE]
+
+        v_bl = state[bl_key]
+        c_bl = p[:, bl_c]
+
+        # first cell: wordline from t = 0
+        g1 = _ramp(t, t_rise) / p[:, fc_r]
+        v_c1 = state[fc_key]
+        c_c1 = p[:, cm.C_SRC + {"v_src": 0, "v_mig": 1, "v_dst": 2}[fc_key]]
+        i1 = g1 * (v_bl - v_c1)
+
+        # second cell: wordline from t = t_act2
+        g2 = _ramp(t - t_act2, t_rise) / p[:, sc_r]
+        v_c2 = state[sc_key]
+        c_c2 = p[:, cm.C_SRC + {"v_src": 0, "v_mig": 1, "v_dst": 2}[sc_key]]
+        i2 = g2 * (v_bl - v_c2)
+
+        # sense amp (regenerative, enabled at t >= t_sense)
+        sa_on = (i >= k_sense).astype(jnp.float32)
+        off = p[:, off_idx]
+        i_sa = sa_on * p[:, cm.SA_GAIN] * (v_bl - half - off) * c_bl
+
+        nv_c1 = v_c1 + dt * i1 / c_c1
+        nv_c2 = v_c2 + dt * i2 / c_c2
+        nv_bl = jnp.clip(
+            v_bl + dt * (-(i1 + i2) + i_sa) / c_bl, 0.0, vdd)
+
+        new_state = dict(state)
+        new_state[fc_key] = nv_c1
+        new_state[sc_key] = nv_c2
+        new_state[bl_key] = nv_bl
+
+        # capture raw sense-input value at the sense instant
+        raw_now = v_bl - half - off
+        sense_raw = jnp.where(i == k_sense, raw_now, sense_raw)
+
+        trace = jnp.stack(
+            [new_state["v_src"], new_state["v_mig"], new_state["v_dst"],
+             new_state["v_bl_a"], new_state["v_bl_b"]], axis=-1)
+        return (new_state, sense_raw), trace
+
+    return body
+
+
+def _run_window(state, p, cfg, wiring):
+    n = cm.steps_per_aap(cfg)
+    state = dict(state)
+    state["_p"] = p
+    body = _window(cfg, wiring)
+    sense0 = jnp.zeros(p.shape[0], dtype=p.dtype)
+    (state, sense_raw), trace = jax.lax.scan(
+        body, (state, sense0), jnp.arange(n))
+    del state["_p"]
+    return state, sense_raw, trace
+
+
+WIRING_AAP1 = dict(first=("v_src", cm.R_SRC), second=("v_mig", cm.R_MIG_A),
+                   bl=("v_bl_a", cm.C_BLA, cm.OFF_A))
+WIRING_AAP2 = dict(first=("v_mig", cm.R_MIG_B), second=("v_dst", cm.R_DST),
+                   bl=("v_bl_b", cm.C_BLB, cm.OFF_B))
+
+
+def _init_state(p):
+    vdd = p[:, cm.VDD]
+    return dict(
+        v_src=p[:, cm.V_SRC0],
+        v_mig=0.5 * vdd,      # migration cell precharge-equalized
+        v_dst=p[:, cm.V_DST0],
+        v_bl_a=0.5 * vdd,
+        v_bl_b=0.5 * vdd,
+    )
+
+
+def shift_transient_ref(params, cfg=None):
+    """Oracle: params f32[batch, N_PARAMS] -> f32[batch, N_OUT]."""
+    cfg = dict(cm.DEFAULT_CFG, **(cfg or {}))
+    p = params.astype(jnp.float32)
+    state = _init_state(p)
+
+    state, sense_a, _ = _run_window(state, p, cfg, WIRING_AAP1)
+    # precharge between AAPs
+    vdd = p[:, cm.VDD]
+    state["v_bl_a"] = 0.5 * vdd
+    state["v_bl_b"] = 0.5 * vdd
+    state, sense_b, _ = _run_window(state, p, cfg, WIRING_AAP2)
+
+    return jnp.stack(
+        [sense_a, sense_b, state["v_dst"], state["v_mig"],
+         state["v_src"], state["v_bl_b"]], axis=-1)
+
+
+def shift_waveform_ref(params, cfg=None, stride=10):
+    """Waveform model: params f32[batch, N_PARAMS] ->
+    f32[batch, 2*steps_per_aap//stride, 5] node-voltage trace
+    (v_src, v_mig, v_dst, v_bl_a, v_bl_b), subsampled by `stride`."""
+    cfg = dict(cm.DEFAULT_CFG, **(cfg or {}))
+    p = params.astype(jnp.float32)
+    state = _init_state(p)
+
+    state, _, tr1 = _run_window(state, p, cfg, WIRING_AAP1)
+    vdd = p[:, cm.VDD]
+    state["v_bl_a"] = 0.5 * vdd
+    state["v_bl_b"] = 0.5 * vdd
+    state, _, tr2 = _run_window(state, p, cfg, WIRING_AAP2)
+
+    trace = jnp.concatenate([tr1, tr2], axis=0)   # (2n, batch, 5)
+    trace = trace[::stride]
+    return jnp.transpose(trace, (1, 0, 2))        # (batch, T, 5)
+
+
+def nominal_params_22nm(batch=1, bit=1, vdd=1.2):
+    """Convenience nominal 22 nm parameter vector (Table 1 of the paper):
+    C_cell = 25 fF, BL C/cell = 0.24 fF x 512 rows + 15 fF SA parasitic,
+    t_rise = 0.5 ns."""
+    import numpy as np
+    p = np.zeros((batch, cm.N_PARAMS), dtype=np.float32)
+    c_bl = 0.24e-15 * 512 + 15e-15
+    p[:, cm.C_SRC] = 25e-15
+    p[:, cm.C_MIG] = 25e-15
+    p[:, cm.C_DST] = 25e-15
+    p[:, cm.C_BLA] = c_bl
+    p[:, cm.C_BLB] = c_bl
+    p[:, cm.R_SRC] = 15e3
+    p[:, cm.R_MIG_A] = 15e3
+    p[:, cm.R_MIG_B] = 15e3
+    p[:, cm.R_DST] = 15e3
+    p[:, cm.VDD] = vdd
+    p[:, cm.T_RISE] = 0.5e-9
+    p[:, cm.SA_GAIN] = 2.0e9
+    p[:, cm.OFF_A] = 0.0
+    p[:, cm.OFF_B] = 0.0
+    p[:, cm.V_SRC0] = vdd if bit else 0.0
+    p[:, cm.V_DST0] = 0.0
+    return p

@@ -1,0 +1,52 @@
+"""L2: the JAX circuit-validation model, composed from the L1 Pallas kernel.
+
+Two entry points, both AOT-lowered by aot.py and executed from the Rust
+coordinator via PJRT (Python is never on the request path):
+
+  * `shift_mc`      — Monte-Carlo batch: f32[MC_BATCH, N_PARAMS] parameter
+                      vectors in, f32[MC_BATCH, N_OUT] physical results out.
+                      Parameter perturbation (process variation draws) and
+                      pass/fail classification live on the Rust side; this
+                      graph is pure physics.
+  * `shift_waveform`— single-trial full node-voltage trace for validation
+                      plots and the §4.2 signal-integrity checks.
+
+The shapes are fixed at AOT time (PJRT executables are monomorphic); the
+Rust Monte-Carlo harness loops whole MC_BATCH-sized batches and handles the
+ragged tail by padding with nominal vectors.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bitline, common as cm
+from .kernels import ref as kref
+
+# AOT shapes — keep in sync with artifacts/manifest.json (written by aot.py)
+# and rust/src/runtime/artifacts.rs.
+MC_BATCH = 8192
+MC_TILE = 512
+WAVE_STRIDE = 10
+
+
+def shift_mc(params):
+    """Monte-Carlo physics batch. params: f32[MC_BATCH, N_PARAMS]."""
+    return (bitline.shift_transient(params, tile=MC_TILE),)
+
+
+def shift_waveform(params):
+    """Full trace for one trial. params: f32[1, N_PARAMS] ->
+    f32[1, T, 5] with T = 2*steps_per_aap/WAVE_STRIDE."""
+    return (kref.shift_waveform_ref(params, stride=WAVE_STRIDE),)
+
+
+def waveform_len():
+    return 2 * cm.steps_per_aap(cm.DEFAULT_CFG) // WAVE_STRIDE
+
+
+def mc_example_args():
+    return (jax.ShapeDtypeStruct((MC_BATCH, cm.N_PARAMS), jnp.float32),)
+
+
+def waveform_example_args():
+    return (jax.ShapeDtypeStruct((1, cm.N_PARAMS), jnp.float32),)

@@ -1,0 +1,144 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+hypothesis sweeps batch shapes, tile sizes, parameter perturbations, data
+patterns, and integration configs; every case must match kernels/ref.py to
+float32 tolerance.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bitline, common as cm, ref
+
+ATOL = 2e-5
+
+
+def nominal(batch, bit=1, vdd=1.2):
+    return ref.nominal_params_22nm(batch=batch, bit=bit, vdd=vdd)
+
+
+def assert_matches_ref(p, tile, cfg=None):
+    o_ref = np.asarray(ref.shift_transient_ref(p, cfg))
+    o_ker = np.asarray(bitline.shift_transient(p, cfg, tile=tile))
+    np.testing.assert_allclose(o_ref, o_ker, atol=ATOL)
+
+
+class TestKernelVsRef:
+    def test_nominal_bit1(self):
+        assert_matches_ref(nominal(64, bit=1), tile=64)
+
+    def test_nominal_bit0(self):
+        assert_matches_ref(nominal(64, bit=0), tile=64)
+
+    def test_multi_tile_grid(self):
+        p = nominal(256)
+        p[128:, cm.V_SRC0] = 0.0
+        assert_matches_ref(p, tile=64)
+
+    def test_tile_equals_batch(self):
+        assert_matches_ref(nominal(128), tile=128)
+
+    def test_batch_not_multiple_of_tile_raises(self):
+        with pytest.raises(ValueError):
+            bitline.shift_transient(nominal(100), tile=64)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        spread=st.floats(0.01, 0.25),
+        bit=st.integers(0, 1),
+    )
+    def test_random_process_variation(self, seed, spread, bit):
+        rng = np.random.default_rng(seed)
+        p = nominal(64, bit=bit)
+        # multiplicative perturbation of the physical parameters
+        phys = [cm.C_SRC, cm.C_MIG, cm.C_DST, cm.C_BLA, cm.C_BLB,
+                cm.R_SRC, cm.R_MIG_A, cm.R_MIG_B, cm.R_DST, cm.T_RISE]
+        for idx in phys:
+            p[:, idx] *= rng.uniform(1 - spread, 1 + spread, 64).astype(np.float32)
+        p[:, cm.OFF_A] = rng.normal(0, 0.03, 64).astype(np.float32)
+        p[:, cm.OFF_B] = rng.normal(0, 0.03, 64).astype(np.float32)
+        assert_matches_ref(p, tile=32)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        log2_batch=st.integers(5, 9),
+        log2_tile=st.integers(4, 7),
+    )
+    def test_shape_sweep(self, log2_batch, log2_tile):
+        batch, tile = 2**log2_batch, 2**log2_tile
+        if batch % tile:
+            return
+        p = nominal(batch)
+        p[::3, cm.V_SRC0] = 0.0
+        assert_matches_ref(p, tile=tile)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        vdd=st.floats(1.0, 3.3),
+        trise=st.floats(0.3e-9, 2.0e-9),
+    )
+    def test_tech_node_voltage_sweep(self, vdd, trise):
+        p = nominal(32, vdd=vdd)
+        p[:, cm.T_RISE] = trise
+        p[16:, cm.V_SRC0] = 0.0
+        assert_matches_ref(p, tile=32)
+
+    def test_alternate_integration_cfg(self):
+        cfg = dict(dt=0.2e-9, t_sense=10e-9, t_act2=22e-9, t_end=40e-9)
+        assert_matches_ref(nominal(64), tile=64, cfg=cfg)
+
+
+class TestKernelPhysics:
+    """Physical invariants of the kernel output (not just ref-match)."""
+
+    def test_bit1_full_rail_writeback(self):
+        out = np.asarray(bitline.shift_transient(nominal(32, bit=1), tile=32))
+        vdd = 1.2
+        assert (out[:, cm.V_DST_F] > 0.95 * vdd).all()
+        assert (out[:, cm.V_MIG_F] > 0.95 * vdd).all()
+        assert (out[:, cm.SENSE_A] > 0.05).all()
+        assert (out[:, cm.SENSE_B] > 0.05).all()
+
+    def test_bit0_full_rail_writeback(self):
+        out = np.asarray(bitline.shift_transient(nominal(32, bit=0), tile=32))
+        assert (out[:, cm.V_DST_F] < 0.05).all()
+        assert (out[:, cm.SENSE_A] < -0.05).all()
+
+    def test_src_restored_after_copy(self):
+        # RowClone restores the source row to full rail (non-destructive copy)
+        out = np.asarray(bitline.shift_transient(nominal(32, bit=1), tile=32))
+        assert (out[:, cm.V_SRC_F] > 0.95 * 1.2).all()
+
+    def test_dst_overwritten_regardless_of_old_value(self):
+        p = nominal(32, bit=1)
+        p[:, cm.V_DST0] = 1.2  # dst previously held a '1'
+        p[:16, cm.V_SRC0] = 0.0  # src holds '0' in half the trials
+        out = np.asarray(bitline.shift_transient(p, tile=32))
+        assert (out[:16, cm.V_DST_F] < 0.05).all()
+        assert (out[16:, cm.V_DST_F] > 0.95 * 1.2).all()
+
+    def test_large_offset_flips_sense(self):
+        # an SA offset exceeding the charge-sharing margin must flip the read
+        p = nominal(32, bit=1)
+        p[:, cm.OFF_A] = 0.2  # >> ~92 mV margin
+        out = np.asarray(bitline.shift_transient(p, tile=32))
+        assert (out[:, cm.SENSE_A] < 0).all()
+        assert (out[:, cm.V_DST_F] < 0.05).all()  # wrong value propagates
+
+    def test_retention_droop_shrinks_margin(self):
+        p_full = nominal(32, bit=1)
+        p_droop = nominal(32, bit=1)
+        p_droop[:, cm.V_SRC0] = 1.2 * 0.8
+        m_full = np.asarray(bitline.shift_transient(p_full, tile=32))[:, cm.SENSE_A]
+        m_droop = np.asarray(bitline.shift_transient(p_droop, tile=32))[:, cm.SENSE_A]
+        assert (m_droop < m_full).all()
+        assert (m_droop > 0).all()  # still reads correctly
+
+    def test_margin_scales_with_cell_cap(self):
+        p_small = nominal(32, bit=1)
+        p_small[:, [cm.C_SRC, cm.C_MIG, cm.C_DST]] *= 0.5
+        m_small = np.asarray(bitline.shift_transient(p_small, tile=32))[:, cm.SENSE_A]
+        m_nom = np.asarray(bitline.shift_transient(nominal(32), tile=32))[:, cm.SENSE_A]
+        assert (m_small < m_nom).all()

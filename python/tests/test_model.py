@@ -1,0 +1,101 @@
+"""L2 model tests: MC entry point, waveform model, tech-node physics."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import common as cm, ref
+
+
+def test_mc_shapes():
+    p = ref.nominal_params_22nm(batch=model.MC_BATCH)
+    (out,) = model.shift_mc(p)
+    assert out.shape == (model.MC_BATCH, cm.N_OUT)
+    assert out.dtype == np.float32
+
+
+def test_waveform_shapes():
+    p = ref.nominal_params_22nm(batch=1)
+    (tr,) = model.shift_waveform(p)
+    assert tr.shape == (1, model.waveform_len(), 5)
+
+
+def test_waveform_tells_shift_story():
+    """The trace must show: src shared onto blA, SA regenerated, migration
+    cell captured; then migration shared onto blB and dst captured."""
+    p = ref.nominal_params_22nm(batch=1, bit=1)
+    tr = np.asarray(model.shift_waveform(p)[0])[0]  # (T, 5)
+    v_src, v_mig, v_dst, v_bla, v_blb = tr.T
+    half = len(tr) // 2
+    # during AAP1 the migration cell moves from Vdd/2 to rail
+    assert v_mig[0] < 0.8
+    assert v_mig[half - 1] > 1.1
+    # dst untouched during AAP1
+    assert abs(v_dst[half - 1] - v_dst[0]) < 0.05
+    # during AAP2 dst reaches rail
+    assert v_dst[-1] > 1.1
+    # bitline A regenerates above precharge during AAP1
+    assert v_bla[half - 1] > 1.0
+
+
+def test_waveform_bit0():
+    p = ref.nominal_params_22nm(batch=1, bit=0)
+    tr = np.asarray(model.shift_waveform(p)[0])[0]
+    assert tr[-1, 2] < 0.05  # dst driven to 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(bit=st.integers(0, 1), droop=st.floats(0.0, 0.15))
+def test_mc_consistent_with_waveform_endpoint(bit, droop):
+    """The MC output's final dst voltage equals the waveform's last sample
+    (same physics, two lowerings)."""
+    p = ref.nominal_params_22nm(batch=1, bit=bit)
+    if bit:
+        p[:, cm.V_SRC0] = 1.2 * (1 - droop)
+    out = np.asarray(ref.shift_transient_ref(p))
+    tr = np.asarray(model.shift_waveform(p)[0])[0]
+    # stride subsampling: last waveform sample is within a few steps of end
+    assert abs(out[0, cm.V_DST_F] - tr[-1, 2]) < 0.02
+
+
+class TestTechNodes:
+    """The paper validates 45/22/20/10 nm (Table 1). The shift must work at
+    each node's nominal parameters."""
+
+    # vdd, cell cap, bl C/cell, t_rise  (Table 1 columns)
+    NODES = {
+        "45nm": (1.5, 30e-15, 0.40e-15, 0.7e-9),
+        "22nm": (1.2, 25e-15, 0.24e-15, 0.5e-9),
+        "20nm": (1.1, 25e-15, 0.22e-15, 0.4e-9),
+        "10nm": (1.1, 18e-15, 0.18e-15, 0.3e-9),
+    }
+
+    def params_for(self, node, bit):
+        vdd, c_cell, c_per_cell, trise = self.NODES[node]
+        p = ref.nominal_params_22nm(batch=8, bit=bit, vdd=vdd)
+        p[:, [cm.C_SRC, cm.C_MIG, cm.C_DST]] = c_cell
+        p[:, [cm.C_BLA, cm.C_BLB]] = c_per_cell * 512 + 15e-15
+        p[:, cm.T_RISE] = trise
+        p[:, cm.V_SRC0] = vdd if bit else 0.0
+        return p
+
+    def test_all_nodes_both_bits(self):
+        for node in self.NODES:
+            for bit in (0, 1):
+                p = self.params_for(node, bit)
+                out = np.asarray(ref.shift_transient_ref(p))
+                vdd = self.NODES[node][0]
+                if bit:
+                    assert (out[:, cm.V_DST_F] > 0.9 * vdd).all(), node
+                else:
+                    assert (out[:, cm.V_DST_F] < 0.1 * vdd).all(), node
+
+    def test_margin_shrinks_with_scaling(self):
+        """Smaller nodes have smaller absolute sense margins — the physical
+        root of Table 4's variation sensitivity."""
+        margins = {}
+        for node in self.NODES:
+            p = self.params_for(node, 1)
+            out = np.asarray(ref.shift_transient_ref(p))
+            margins[node] = out[0, cm.SENSE_A]
+        assert margins["45nm"] > margins["10nm"]

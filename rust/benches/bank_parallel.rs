@@ -1,0 +1,51 @@
+//! Bench: §5.1.4 bank-level parallelism — aggregate shift throughput vs
+//! bank count, served through the coordinator (router → batcher → workers).
+//! Paper projection: 4.82 → 38.56 → 154.24 MOps/s for 1 → 8 → 32 banks.
+
+use shiftdram::config::DramConfig;
+use shiftdram::coordinator::{Placement, PimRequest, PimSystem};
+use shiftdram::util::benchx::Bench;
+use shiftdram::util::ShiftDir;
+
+fn run(cfg: &DramConfig, banks: usize, ops: usize) -> f64 {
+    let sys = PimSystem::start(cfg, banks, Placement::RoundRobin, 16);
+    for _ in 0..ops {
+        sys.submit(
+            PimRequest::Shift { subarray: 0, row: 0, n: 1, dir: ShiftDir::Right },
+            None,
+        );
+    }
+    sys.shutdown().throughput_mops
+}
+
+fn main() {
+    let cfg = DramConfig::ddr3_1333_4gb();
+    println!("=== §5.1.4: aggregate shift throughput vs banks (simulated) ===");
+    let mut base = 0.0;
+    for banks in [1usize, 2, 4, 8, 16, 32] {
+        let tp = run(&cfg, banks, 2048);
+        if banks == 1 {
+            base = tp;
+        }
+        println!(
+            "{:>3} banks: {:>8.2} MOps/s  (scaling x{:.2}, ideal x{})",
+            banks,
+            tp,
+            tp / base,
+            banks
+        );
+    }
+    let tp32 = run(&cfg, 32, 4096);
+    assert!(
+        (140.0..170.0).contains(&tp32),
+        "32-bank aggregate {tp32} MOps/s vs paper's 154.24"
+    );
+
+    println!("\n=== coordinator wall-clock overhead ===");
+    let b = Bench::quick();
+    for banks in [1usize, 8, 32] {
+        b.run_elems(&format!("serve/{banks}banks/512ops"), 512, || {
+            run(&cfg, banks, 512)
+        });
+    }
+}

@@ -1,0 +1,54 @@
+//! Bench: §5.1.5/§5.1.6 — our design vs CPU movement, SIMDRAM, DRISA, and
+//! the energy-crossover sweep (how many repeated shifts before SIMDRAM's
+//! transposition amortizes).
+
+use shiftdram::baselines::{
+    CpuMovement, Drisa, MigrationShift, ShiftApproach, Simdram,
+};
+use shiftdram::config::DramConfig;
+use shiftdram::report;
+
+fn main() {
+    let cfg = DramConfig::ddr3_1333_4gb();
+    report::baseline_comparison(&cfg);
+
+    let row_bytes = cfg.geometry.row_bytes();
+    let ours = MigrationShift::from_config(&cfg);
+    let ours_cost = ours.shift_cost(row_bytes);
+
+    println!("\n=== energy vs shift count (nJ, same operand) ===");
+    println!(
+        "{:<10}{:>14}{:>16}{:>14}{:>14}",
+        "shifts", "ours", "SIMDRAM", "DRISA 3T1C", "CPU"
+    );
+    let simdram = Simdram::default();
+    let drisa = Drisa::all_variants().remove(0);
+    let cpu = CpuMovement::default();
+    let mut crossover: Option<usize> = None;
+    for n in [1usize, 10, 50, 100, 235, 500, 1000] {
+        let ours_e = ours_cost.total_energy_nj(n);
+        let sim_e = simdram.shift_cost(row_bytes).total_energy_nj(n);
+        println!(
+            "{:<10}{:>14.1}{:>16.1}{:>14.1}{:>14.1}",
+            n,
+            ours_e,
+            sim_e,
+            drisa.shift_cost(row_bytes).total_energy_nj(n),
+            cpu.shift_cost(row_bytes).total_energy_nj(n),
+        );
+        if crossover.is_none() && sim_e < ours_e {
+            crossover = Some(n);
+        }
+    }
+    println!(
+        "\nSIMDRAM transposition amortizes after ~{} repeated shifts of one operand",
+        crossover.map(|n| n.to_string()).unwrap_or_else(|| ">1000".into())
+    );
+
+    // paper's headline ratios, asserted
+    let read_ratio = CpuMovement::paper_low().read_energy_nj(row_bytes) / ours_cost.energy_nj;
+    assert!(read_ratio > 39.0 && read_ratio < 62.0, "40-60x claim: {read_ratio}");
+    let transp_ratio = simdram.transpose_energy_nj(row_bytes) / ours_cost.energy_nj;
+    assert!((100.0..300.0).contains(&transp_ratio), "100-300x claim: {transp_ratio}");
+    println!("asserted: CPU-read ratio {read_ratio:.0}x, SIMDRAM-transposition ratio {transp_ratio:.0}x");
+}

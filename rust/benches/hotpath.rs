@@ -1,0 +1,84 @@
+//! Hot-path micro-benchmarks for the §Perf pass: the operations the whole
+//! stack spends its time in.
+//!
+//! L3 simulator hot paths: whole-row word-level shift, subarray AAP
+//! (sense + merge), migration-port AAP, command-stream engine throughput,
+//! MC trial integration (native), PJRT batch dispatch.
+
+use shiftdram::circuit::montecarlo::{Backend, MonteCarlo};
+use shiftdram::circuit::native::{shift_transient, TransientCfg};
+use shiftdram::circuit::params::TechNode;
+use shiftdram::config::{DramConfig, McConfig};
+use shiftdram::dram::address::{Port, RowRef};
+use shiftdram::dram::subarray::Subarray;
+use shiftdram::pim::PimOp;
+use shiftdram::runtime::Runtime;
+use shiftdram::sim::BankSim;
+use shiftdram::util::benchx::{black_box, Bench};
+use shiftdram::util::{BitRow, Rng, ShiftDir};
+
+fn main() {
+    let b = Bench::default();
+    let cols = 65_536;
+    let mut rng = Rng::new(1);
+    let row = BitRow::random(cols, &mut rng);
+
+    // L3: pure bit-row shift (the semantic primitive)
+    b.run_elems("bitrow/shift_64k", cols as u64, || {
+        black_box(row.shifted(ShiftDir::Right, false))
+    });
+
+    // L3: functional subarray — data-to-data AAP (word-level merge)
+    let mut sa = Subarray::new(16, cols);
+    sa.write_row(0, row.clone());
+    b.run_elems("subarray/aap_data_64k", cols as u64, || {
+        sa.aap(RowRef::Data(0), RowRef::Data(1));
+    });
+
+    // L3: migration-port AAP (per-bit port mapping — the hot spot)
+    b.run_elems("subarray/aap_migtop_64k", cols as u64, || {
+        sa.aap(RowRef::Data(0), RowRef::MigTop(Port::A));
+    });
+
+    // L3: the full 4-AAP shift through the migration rows
+    b.run_elems("subarray/shift_4aap_64k", cols as u64, || {
+        for c in shiftdram::pim::shift_commands(
+            RowRef::Data(0),
+            RowRef::Data(1),
+            ShiftDir::Right,
+        ) {
+            shiftdram::pim::apply(&mut sa, &c);
+        }
+    });
+
+    // L3: engine throughput (timing + energy + functional coupled)
+    let cfg = DramConfig::ddr3_1333_4gb();
+    let mut sim = BankSim::new(cfg.clone());
+    sim.bank().subarray(0).write_row(0, row.clone());
+    let cmds = PimOp::ShiftBy { src: 0, dst: 0, n: 1, dir: ShiftDir::Right }.lower();
+    b.run_elems("engine/shift_64k", cols as u64, || {
+        sim.run(0, &cmds);
+    });
+
+    // L1-native: one MC trial (720 Euler steps)
+    let p = TechNode::n22().mc_nominal(true);
+    let tcfg = TransientCfg::default();
+    b.run("circuit/native_trial_720steps", || black_box(shift_transient(&p, &tcfg)));
+
+    // L1-PJRT: one artifact batch (8192 trials)
+    if let Ok((rt, m)) = Runtime::with_artifacts() {
+        let mut mc_cfg = McConfig::quick();
+        mc_cfg.trials = m.mc_batch;
+        let mc = MonteCarlo::new(mc_cfg, TechNode::n22());
+        b.run_elems(&format!("circuit/pjrt_batch_{}", m.mc_batch), m.mc_batch as u64, || {
+            mc.run_level(&Backend::Pjrt(&rt, &m), 0.10, 3)
+        });
+        let mut native = MonteCarlo::new(McConfig::quick(), TechNode::n22());
+        native.mc.trials = m.mc_batch;
+        b.run_elems(&format!("circuit/native_batch_{}", m.mc_batch), m.mc_batch as u64, || {
+            native.run_level(&Backend::Native, 0.10, 3)
+        });
+    } else {
+        eprintln!("(artifacts missing — PJRT hot path skipped)");
+    }
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate Table 2 (energy breakdown of 1/50/100/512-shift
+//! workloads) and measure the engine's wall-clock cost of producing it.
+
+use shiftdram::config::DramConfig;
+use shiftdram::sim::{run_shift_workload, PAPER_WORKLOADS};
+use shiftdram::util::benchx::Bench;
+use shiftdram::util::ShiftDir;
+
+fn main() {
+    let cfg = DramConfig::ddr3_1333_4gb();
+    println!("=== Table 2 regeneration (energy) ===");
+    shiftdram::report::table2_and_3(&cfg, 42);
+
+    println!("\n=== engine wall-clock (simulator speed, not DRAM time) ===");
+    let b = Bench::default();
+    for &n in &PAPER_WORKLOADS {
+        b.run_elems(&format!("shift_workload/{n}"), n as u64, || {
+            run_shift_workload(&cfg, n, ShiftDir::Right, 42)
+        });
+    }
+}

@@ -1,0 +1,38 @@
+//! Bench: regenerate Table 3 (latency/throughput) and assert the paper's
+//! shape: near-constant latency per shift and stable MOps/s.
+
+use shiftdram::config::DramConfig;
+use shiftdram::sim::run_shift_workload;
+use shiftdram::util::ShiftDir;
+
+fn main() {
+    let cfg = DramConfig::ddr3_1333_4gb();
+    println!("=== Table 3: latency & throughput (simulated DRAM time) ===");
+    println!(
+        "{:<10}{:>14}{:>16}{:>16}{:>12}",
+        "shifts", "total", "latency/shift", "thpt MOps/s", "refreshes"
+    );
+    let mut latencies = Vec::new();
+    for n in [1usize, 50, 100, 512, 2048] {
+        let r = run_shift_workload(&cfg, n, ShiftDir::Right, 42);
+        assert!(r.verified, "functional check failed at n={n}");
+        latencies.push(r.latency_per_shift_ns());
+        println!(
+            "{:<10}{:>12.2}us{:>14.1}ns{:>16.2}{:>12}",
+            n,
+            r.total_time_us(),
+            r.latency_per_shift_ns(),
+            r.throughput_mops(),
+            r.refreshes
+        );
+    }
+    let min = latencies.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = latencies.iter().cloned().fold(0.0f64, f64::max);
+    println!(
+        "\nlatency/shift spread: {:.1}–{:.1} ns ({:.1}% — paper: 205.8–208.7 ns, 1.4%)",
+        min,
+        max,
+        100.0 * (max - min) / min
+    );
+    assert!(max / min < 1.10, "latency must stay near-constant with scale");
+}

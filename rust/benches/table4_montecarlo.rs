@@ -1,0 +1,47 @@
+//! Bench: regenerate Table 4 (Monte-Carlo failure vs process variation),
+//! through the PJRT-executed JAX/Pallas artifact when available, and
+//! measure trial throughput of both backends.
+//!
+//! Full-paper protocol (100 k trials/level): set MC_TRIALS=100000.
+
+use shiftdram::circuit::montecarlo::{Backend, MonteCarlo};
+use shiftdram::circuit::params::TechNode;
+use shiftdram::config::McConfig;
+use shiftdram::report;
+use shiftdram::runtime::Runtime;
+use shiftdram::util::benchx::Bench;
+
+fn main() {
+    let trials: usize = std::env::var("MC_TRIALS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16_384);
+    let mut mc_cfg = McConfig::paper();
+    mc_cfg.trials = trials;
+    let mc = MonteCarlo::new(mc_cfg, TechNode::n22());
+
+    let rt = Runtime::with_artifacts().ok();
+    match &rt {
+        Some((rt, m)) => {
+            println!("=== Table 4 via PJRT (JAX/Pallas artifact) ===");
+            report::table4(&mc, &Backend::Pjrt(rt, m));
+        }
+        None => {
+            println!("artifacts missing — native oracle only (run `make artifacts`)");
+            report::table4(&mc, &Backend::Native);
+        }
+    }
+
+    println!("\n=== backend throughput (trials/s) ===");
+    let b = Bench::quick();
+    let mut quick = mc;
+    quick.mc.trials = 2_048;
+    b.run_elems("mc/native/2048@10%", 2_048, || {
+        quick.run_level(&Backend::Native, 0.10, 1)
+    });
+    if let Some((rt, m)) = &rt {
+        b.run_elems("mc/pjrt/2048@10%", 2_048, || {
+            quick.run_level(&Backend::Pjrt(rt, m), 0.10, 1)
+        });
+    }
+}

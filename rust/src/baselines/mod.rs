@@ -1,0 +1,134 @@
+//! Baseline cost models for the paper's comparisons: conventional CPU data
+//! movement (§5.1.5), SIMDRAM's vertical layout + transposition, DRISA's
+//! in-situ shifters, and Ambit (§5.1.6, Table 5).
+//!
+//! Each baseline implements [`ShiftApproach`]: the per-full-row-shift
+//! energy/latency cost and the architectural overheads, so the comparison
+//! bench regenerates the paper's who-wins-by-what-factor narrative.
+
+pub mod cpu_movement;
+pub mod drisa;
+pub mod simdram;
+
+pub use cpu_movement::CpuMovement;
+pub use drisa::Drisa;
+pub use simdram::Simdram;
+
+/// A design point that can shift one full DRAM row by one bit position.
+#[derive(Clone, Debug)]
+pub struct ShiftCost {
+    /// energy for one full-row 1-bit shift, nJ
+    pub energy_nj: f64,
+    /// latency for one full-row 1-bit shift, ns
+    pub latency_ns: f64,
+    /// one-time per-operand overhead (SIMDRAM transposition), nJ/ns
+    pub setup_energy_nj: f64,
+    pub setup_latency_ns: f64,
+}
+
+impl ShiftCost {
+    /// Amortized cost of `n` successive shifts of the same operand.
+    pub fn total_energy_nj(&self, n: usize) -> f64 {
+        self.setup_energy_nj + n as f64 * self.energy_nj
+    }
+
+    pub fn total_latency_ns(&self, n: usize) -> f64 {
+        self.setup_latency_ns + n as f64 * self.latency_ns
+    }
+}
+
+/// Interface all baselines (and our design) expose to the comparison bench.
+pub trait ShiftApproach {
+    fn name(&self) -> &'static str;
+    /// cost to shift a `row_bytes` row by one position
+    fn shift_cost(&self, row_bytes: usize) -> ShiftCost;
+    /// DRAM-die area overhead (fraction)
+    fn area_overhead(&self) -> f64;
+    /// whether data must leave its conventional horizontal layout
+    fn needs_transposition(&self) -> bool;
+}
+
+/// Our migration-cell design as a [`ShiftApproach`] (values from the
+/// calibrated simulator, see `sim::workload`).
+pub struct MigrationShift {
+    pub energy_nj: f64,
+    pub latency_ns: f64,
+    pub area: f64,
+}
+
+impl MigrationShift {
+    pub fn from_config(cfg: &crate::config::DramConfig) -> Self {
+        let aap = Command4aap::cost(cfg);
+        MigrationShift {
+            energy_nj: aap.0,
+            latency_ns: aap.1,
+            area: crate::layout::migration_overhead(&cfg.geometry),
+        }
+    }
+}
+
+struct Command4aap;
+
+impl Command4aap {
+    /// (energy nJ, latency ns) of the 4-AAP shift under `cfg`.
+    fn cost(cfg: &crate::config::DramConfig) -> (f64, f64) {
+        let e_act = cfg.energy.e_act_pj(&cfg.timing);
+        let e = 4.0 * (2.0 * e_act + cfg.energy.e_pre_pj) / 1e3;
+        let t = 4.0 * cfg.timing.t_aap() as f64 / 1e3;
+        (e, t)
+    }
+}
+
+impl ShiftApproach for MigrationShift {
+    fn name(&self) -> &'static str {
+        "Migration cells (ours)"
+    }
+
+    fn shift_cost(&self, row_bytes: usize) -> ShiftCost {
+        // the 4-AAP procedure always moves a full row; cost is independent
+        // of how much of the row the caller cares about
+        let _ = row_bytes;
+        ShiftCost {
+            energy_nj: self.energy_nj,
+            latency_ns: self.latency_ns,
+            setup_energy_nj: 0.0,
+            setup_latency_ns: 0.0,
+        }
+    }
+
+    fn area_overhead(&self) -> f64 {
+        self.area
+    }
+
+    fn needs_transposition(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DramConfig;
+
+    #[test]
+    fn ours_matches_simulator_headline() {
+        let m = MigrationShift::from_config(&DramConfig::ddr3_1333_4gb());
+        let c = m.shift_cost(8192);
+        assert!((c.energy_nj - 31.32).abs() < 0.1, "{}", c.energy_nj);
+        assert!((c.latency_ns - 210.0).abs() < 0.1);
+        assert!(m.area_overhead() < 0.01);
+        assert!(!m.needs_transposition());
+    }
+
+    #[test]
+    fn amortization_identity() {
+        let c = ShiftCost {
+            energy_nj: 10.0,
+            latency_ns: 100.0,
+            setup_energy_nj: 1000.0,
+            setup_latency_ns: 5000.0,
+        };
+        assert_eq!(c.total_energy_nj(10), 1100.0);
+        assert_eq!(c.total_latency_ns(10), 6000.0);
+    }
+}

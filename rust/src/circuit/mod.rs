@@ -1,0 +1,14 @@
+//! Circuit-level layer (the LTSPICE substitute): technology-node
+//! parameters (Table 1), the lumped-RC transient engine (native oracle +
+//! PJRT-executed JAX/Pallas artifact), the §4.2 validation checks, and the
+//! Monte-Carlo process-variation study (Table 4).
+
+pub mod montecarlo;
+pub mod native;
+pub mod params;
+pub mod validation;
+
+pub use montecarlo::{Backend, McLevelResult, MonteCarlo};
+pub use native::{shift_transient, shift_waveform, TransientCfg};
+pub use params::TechNode;
+pub use validation::{validate_all_nodes, validate_native, ValidationReport};

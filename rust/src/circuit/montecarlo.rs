@@ -1,0 +1,227 @@
+//! Monte-Carlo process-variation study (paper §5.2, Table 4).
+//!
+//! Protocol (mirrors the paper's LTSPICE methodology): for each variation
+//! level ±X %, draw `trials` independent parameter vectors — every physical
+//! parameter (cell caps, bitline caps, on-resistances, wordline rise time)
+//! perturbed multiplicatively by `N(0, X)`, the sense-amp input offset by
+//! `N(0, sa_offset_frac·X·VDD)`, and the stored level subject to retention
+//! droop — run the two-AAP shift transient for each, and classify against
+//! the §4.2 criteria:
+//!
+//! * correct sense direction at both AAPs (margin above threshold),
+//! * complete write-back (final dst level within `writeback_frac` of rail).
+//!
+//! The transient physics runs either through the AOT-compiled JAX/Pallas
+//! artifact on PJRT ([`Backend::Pjrt`], the production path) or the native
+//! oracle ([`Backend::Native`], bit-compatible fallback); both are checked
+//! against each other in `rust/tests/runtime_roundtrip.rs`.
+
+use crate::circuit::native::{shift_transient, TransientCfg};
+use crate::circuit::params::{pidx::*, TechNode};
+use crate::config::McConfig;
+use crate::runtime::{Manifest, Runtime};
+use crate::util::stats::wilson_interval;
+use crate::util::Rng;
+
+/// Which engine integrates the transient.
+pub enum Backend<'a> {
+    /// AOT JAX/Pallas artifact on the PJRT CPU client
+    Pjrt(&'a Runtime, &'a Manifest),
+    /// in-crate f32 oracle
+    Native,
+}
+
+/// Failure statistics for one variation level (one cell of Table 4).
+#[derive(Clone, Debug)]
+pub struct McLevelResult {
+    pub level: f64,
+    pub trials: usize,
+    pub failures: usize,
+}
+
+impl McLevelResult {
+    pub fn failure_rate(&self) -> f64 {
+        self.failures as f64 / self.trials as f64
+    }
+
+    /// 95 % Wilson interval on the failure rate.
+    pub fn ci95(&self) -> (f64, f64) {
+        wilson_interval(self.failures as u64, self.trials as u64, 1.96)
+    }
+}
+
+/// The Monte-Carlo harness.
+pub struct MonteCarlo {
+    pub mc: McConfig,
+    pub node: TechNode,
+    pub tcfg: TransientCfg,
+}
+
+impl MonteCarlo {
+    pub fn new(mc: McConfig, node: TechNode) -> Self {
+        mc.validate().expect("invalid MC config");
+        MonteCarlo { mc, node, tcfg: TransientCfg::default() }
+    }
+
+    /// Draw one trial's parameter vector. Returns (params, stored bit).
+    pub fn draw(&self, rng: &mut Rng, level: f64) -> ([f32; N_PARAMS], bool) {
+        let mut p = self.node.mc_nominal(true);
+        let bit = rng.bool();
+        let vdd = self.node.vdd;
+        let perturb = |rng: &mut Rng, nominal: f32| -> f32 {
+            (nominal as f64 * (1.0 + rng.normal(0.0, level))).max(nominal as f64 * 0.05)
+                as f32
+        };
+        for idx in [C_SRC, C_MIG, C_DST, C_BLA, C_BLB, R_SRC, R_MIG_A, R_MIG_B, R_DST, T_RISE]
+        {
+            p[idx] = perturb(rng, p[idx]);
+        }
+        let off_sigma = (self.mc.sa_offset_frac * level).min(self.mc.sa_offset_cap) * vdd;
+        p[OFF_A] = rng.normal(0.0, off_sigma) as f32;
+        p[OFF_B] = rng.normal(0.0, off_sigma) as f32;
+        // retention droop: a '1' decays toward GND, a '0' leaks up slightly
+        let droop = self.mc.retention_droop * (1.0 + rng.normal(0.0, level)).max(0.0);
+        p[V_SRC0] = if bit {
+            (vdd * (1.0 - droop)).clamp(0.0, vdd) as f32
+        } else {
+            (vdd * droop * 0.5).clamp(0.0, vdd) as f32
+        };
+        p[V_DST0] = if rng.bool() { vdd as f32 } else { 0.0 };
+        (p, bit)
+    }
+
+    /// §4.2 pass/fail classification of one trial's physical outputs.
+    pub fn classify(&self, out: &[f32], bit: bool) -> bool {
+        let vdd = self.node.vdd as f32;
+        let sign = if bit { 1.0f32 } else { -1.0 };
+        let margin_ok = sign * out[SENSE_A] > self.mc.margin_threshold_v as f32
+            && sign * out[SENSE_B] > self.mc.margin_threshold_v as f32;
+        let target = if bit { vdd } else { 0.0 };
+        let writeback_ok =
+            (out[V_DST_F] - target).abs() < self.mc.writeback_frac as f32 * vdd;
+        margin_ok && writeback_ok
+    }
+
+    /// Run one variation level through the chosen backend.
+    pub fn run_level(&self, backend: &Backend, level: f64, seed: u64) -> McLevelResult {
+        let mut rng = Rng::new(seed ^ (level * 1e6) as u64);
+        let trials = self.mc.trials;
+        let mut failures = 0usize;
+        match backend {
+            Backend::Native => {
+                for _ in 0..trials {
+                    let (p, bit) = self.draw(&mut rng, level);
+                    let out = shift_transient(&p, &self.tcfg);
+                    if !self.classify(&out, bit) {
+                        failures += 1;
+                    }
+                }
+            }
+            Backend::Pjrt(rt, m) => {
+                assert_eq!(m.n_params, N_PARAMS);
+                let batch = m.mc_batch;
+                let mut done = 0usize;
+                while done < trials {
+                    let take = (trials - done).min(batch);
+                    let mut input = Vec::with_capacity(batch * N_PARAMS);
+                    let mut bits = Vec::with_capacity(batch);
+                    for _ in 0..take {
+                        let (p, bit) = self.draw(&mut rng, level);
+                        input.extend_from_slice(&p);
+                        bits.push(bit);
+                    }
+                    // pad the ragged tail with nominal vectors (ignored)
+                    for _ in take..batch {
+                        input.extend_from_slice(&self.node.mc_nominal(true));
+                    }
+                    let out = rt
+                        .exec_f32("shift_mc", &input, &[batch as i64, N_PARAMS as i64])
+                        .expect("MC artifact execution");
+                    for (t, &bit) in bits.iter().enumerate() {
+                        let o = &out[t * m.n_out..(t + 1) * m.n_out];
+                        if !self.classify(o, bit) {
+                            failures += 1;
+                        }
+                    }
+                    done += take;
+                }
+            }
+        }
+        McLevelResult { level, trials, failures }
+    }
+
+    /// Run the full Table-4 sweep.
+    pub fn run(&self, backend: &Backend) -> Vec<McLevelResult> {
+        self.mc
+            .levels
+            .iter()
+            .map(|&lvl| self.run_level(backend, lvl, self.mc.seed))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn harness(trials: usize) -> MonteCarlo {
+        let mut mc = McConfig::paper();
+        mc.trials = trials;
+        MonteCarlo::new(mc, TechNode::n22())
+    }
+
+    #[test]
+    fn zero_variation_never_fails() {
+        // Table 4: ±0 % → 0.00 %
+        let h = harness(2_000);
+        let r = h.run_level(&Backend::Native, 0.0, 1);
+        assert_eq!(r.failures, 0, "nominal circuit must be perfect");
+    }
+
+    #[test]
+    fn failure_rate_grows_superlinearly() {
+        // Table 4 shape: 0 % → 0.5 % → 14 % → 30 %
+        let h = harness(4_000);
+        let r5 = h.run_level(&Backend::Native, 0.05, 2).failure_rate();
+        let r10 = h.run_level(&Backend::Native, 0.10, 2).failure_rate();
+        let r20 = h.run_level(&Backend::Native, 0.20, 2).failure_rate();
+        assert!(r5 < r10 && r10 < r20, "monotone: {r5} {r10} {r20}");
+        assert!(r10 / r5.max(1e-4) > 4.0, "superlinear onset: {r5} -> {r10}");
+        assert!((0.001..0.02).contains(&r5), "±5% rate {r5}");
+        assert!((0.06..0.22).contains(&r10), "±10% rate {r10}");
+        assert!((0.20..0.48).contains(&r20), "±20% rate {r20}");
+    }
+
+    #[test]
+    fn draw_respects_level_zero() {
+        let h = harness(10);
+        let mut rng = Rng::new(3);
+        let (p, _) = h.draw(&mut rng, 0.0);
+        let nominal = TechNode::n22().mc_nominal(true);
+        for idx in [C_SRC, C_BLA, R_SRC, T_RISE] {
+            assert_eq!(p[idx], nominal[idx], "param {idx} unperturbed at ±0%");
+        }
+        assert_eq!(p[OFF_A], 0.0);
+    }
+
+    #[test]
+    fn classify_criteria() {
+        let h = harness(10);
+        // good '1' trial
+        assert!(h.classify(&[0.08, 0.08, 1.19, 1.2, 1.2, 1.2], true));
+        // flipped sense
+        assert!(!h.classify(&[-0.02, 0.08, 1.19, 1.2, 1.2, 1.2], true));
+        // incomplete write-back
+        assert!(!h.classify(&[0.08, 0.08, 0.7, 1.2, 1.2, 1.2], true));
+        // good '0' trial
+        assert!(h.classify(&[-0.08, -0.08, 0.01, 0.0, 0.0, 0.0], false));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let h = harness(500);
+        let a = h.run_level(&Backend::Native, 0.1, 7);
+        let b = h.run_level(&Backend::Native, 0.1, 7);
+        assert_eq!(a.failures, b.failures);
+    }
+}

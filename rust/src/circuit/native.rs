@@ -1,0 +1,223 @@
+//! Native Rust transient integrator — the same lumped-RC physics as the
+//! JAX/Pallas kernel (python/compile/kernels/bitline.py), re-implemented
+//! independently in f32.
+//!
+//! Purposes:
+//! 1. cross-language validation — `rust/tests/runtime_roundtrip.rs` checks
+//!    PJRT-executed artifact outputs against this oracle;
+//! 2. fallback when artifacts are absent (unit tests, cold checkouts);
+//! 3. the single-trial waveform probe used by the §4.2 validation checks.
+//!
+//! The AAP window model: wordline-1 conductance ramps from t = 0 over
+//! `t_rise`; the latch-type SA enables at `t_sense` and regenerates about
+//! the offset-shifted metastable point, rail-clamped; wordline-2 (the AAP's
+//! second ACT) ramps from `t_act2`; integration is explicit Euler with
+//! `dt`, over two windows (src→migration on bitline A, then migration→dst
+//! on bitline B) with an inter-window precharge.
+
+use crate::circuit::params::pidx::*;
+
+/// Integration configuration — must mirror kernels/common.py DEFAULT_CFG.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TransientCfg {
+    pub dt: f32,
+    pub t_sense: f32,
+    pub t_act2: f32,
+    pub t_end: f32,
+}
+
+impl Default for TransientCfg {
+    fn default() -> Self {
+        TransientCfg { dt: 0.1e-9, t_sense: 8.0e-9, t_act2: 20.0e-9, t_end: 36.0e-9 }
+    }
+}
+
+impl TransientCfg {
+    pub fn steps_per_aap(&self) -> usize {
+        (self.t_end / self.dt).round() as usize
+    }
+
+    pub fn sense_step(&self) -> usize {
+        (self.t_sense / self.dt).round() as usize
+    }
+
+    pub fn act2_step(&self) -> usize {
+        (self.t_act2 / self.dt).round() as usize
+    }
+}
+
+#[inline]
+fn ramp(t: f32, t_rise: f32) -> f32 {
+    (t / t_rise.max(1e-12)).clamp(0.0, 1.0)
+}
+
+/// One AAP window. Returns (v_first, v_second, v_bl, sense_raw).
+#[allow(clippy::too_many_arguments)]
+fn window(
+    cfg: &TransientCfg,
+    mut v1: f32,
+    c1: f32,
+    r1: f32,
+    mut v2: f32,
+    c2: f32,
+    r2: f32,
+    mut vb: f32,
+    c_bl: f32,
+    off: f32,
+    vdd: f32,
+    t_rise: f32,
+    sa_gain: f32,
+    mut trace: Option<&mut Vec<(f32, f32, f32)>>,
+) -> (f32, f32, f32, f32) {
+    let n = cfg.steps_per_aap();
+    let k_sense = cfg.sense_step();
+    let t_act2 = cfg.t_act2;
+    let half = 0.5 * vdd;
+    let dt = cfg.dt;
+    let mut sense = 0.0f32;
+    for i in 0..n {
+        let t = i as f32 * dt;
+        let g1 = ramp(t, t_rise) / r1;
+        let g2 = ramp(t - t_act2, t_rise) / r2;
+        let i1 = g1 * (vb - v1);
+        let i2 = g2 * (vb - v2);
+        let raw = vb - half - off;
+        let i_sa = if i >= k_sense { sa_gain * raw * c_bl } else { 0.0 };
+        if i == k_sense {
+            sense = raw;
+        }
+        v1 += dt * i1 / c1;
+        v2 += dt * i2 / c2;
+        vb = (vb + dt * (-(i1 + i2) + i_sa) / c_bl).clamp(0.0, vdd);
+        if let Some(tr) = trace.as_deref_mut() {
+            tr.push((v1, v2, vb));
+        }
+    }
+    (v1, v2, vb, sense)
+}
+
+/// Simulate one trial (16-float parameter vector → 6-float output vector).
+/// Identical semantics to the Pallas kernel.
+pub fn shift_transient(p: &[f32; N_PARAMS], cfg: &TransientCfg) -> [f32; N_OUT] {
+    let vdd = p[VDD];
+    let half = 0.5 * vdd;
+
+    // AAP 1: src -> migration (port A) on bitline A
+    let (v_src, v_mig, _bla, sense_a) = window(
+        cfg, p[V_SRC0], p[C_SRC], p[R_SRC], half, p[C_MIG], p[R_MIG_A], half,
+        p[C_BLA], p[OFF_A], vdd, p[T_RISE], p[SA_GAIN], None,
+    );
+    // AAP 2: migration (port B) -> dst on bitline B
+    let (v_mig, v_dst, v_blb, sense_b) = window(
+        cfg, v_mig, p[C_MIG], p[R_MIG_B], p[V_DST0], p[C_DST], p[R_DST], half,
+        p[C_BLB], p[OFF_B], vdd, p[T_RISE], p[SA_GAIN], None,
+    );
+
+    [sense_a, sense_b, v_dst, v_mig, v_src, v_blb]
+}
+
+/// Full waveform of one trial: per-step (v_src, v_mig, v_dst, v_bl_a,
+/// v_bl_b) across both AAP windows (matches the shift_waveform artifact's
+/// node order before stride subsampling).
+pub fn shift_waveform(p: &[f32; N_PARAMS], cfg: &TransientCfg) -> Vec<[f32; 5]> {
+    let vdd = p[VDD];
+    let half = 0.5 * vdd;
+    let mut tr1 = Vec::new();
+    let (v_src, v_mig, _bla, _) = window(
+        cfg, p[V_SRC0], p[C_SRC], p[R_SRC], half, p[C_MIG], p[R_MIG_A], half,
+        p[C_BLA], p[OFF_A], vdd, p[T_RISE], p[SA_GAIN], Some(&mut tr1),
+    );
+    let mut tr2 = Vec::new();
+    let (_v_mig2, _v_dst, _blb, _) = window(
+        cfg, v_mig, p[C_MIG], p[R_MIG_B], p[V_DST0], p[C_DST], p[R_DST], half,
+        p[C_BLB], p[OFF_B], vdd, p[T_RISE], p[SA_GAIN], Some(&mut tr2),
+    );
+    let mut out = Vec::with_capacity(tr1.len() + tr2.len());
+    for (v1, v2, vb) in tr1 {
+        // window 1: first = src, second = mig, bl = A; dst untouched
+        out.push([v1, v2, p[V_DST0], vb, half]);
+    }
+    let last_bla = out.last().map(|s| s[3]).unwrap_or(half);
+    let _ = last_bla;
+    for (v1, v2, vb) in tr2 {
+        // window 2: first = mig, second = dst, bl = B; src settled
+        out.push([v_src, v1, v2, half, vb]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::params::TechNode;
+
+    #[test]
+    fn nominal_bit1_propagates() {
+        let p = TechNode::n22().mc_nominal(true);
+        let out = shift_transient(&p, &TransientCfg::default());
+        assert!(out[SENSE_A] > 0.05, "sense A {}", out[SENSE_A]);
+        assert!(out[SENSE_B] > 0.05);
+        assert!(out[V_DST_F] > 1.1, "v_dst {}", out[V_DST_F]);
+        assert!(out[V_SRC_F] > 1.1, "source restored");
+    }
+
+    #[test]
+    fn nominal_bit0_propagates() {
+        let p = TechNode::n22().mc_nominal(false);
+        let out = shift_transient(&p, &TransientCfg::default());
+        assert!(out[SENSE_A] < -0.05);
+        assert!(out[V_DST_F] < 0.05);
+    }
+
+    #[test]
+    fn all_validated_nodes_shift_correctly() {
+        // §4.2: 45/22/20/10 nm, both polarities
+        for node in TechNode::validated() {
+            for bit in [false, true] {
+                let p = node.mc_nominal(bit);
+                let out = shift_transient(&p, &TransientCfg::default());
+                let vdd = node.vdd as f32;
+                if bit {
+                    assert!(out[V_DST_F] > 0.9 * vdd, "{} bit1", node.name);
+                } else {
+                    assert!(out[V_DST_F] < 0.1 * vdd, "{} bit0", node.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn excessive_offset_flips_the_read() {
+        let mut p = TechNode::n22().mc_nominal(true);
+        p[OFF_A] = 0.2; // >> ~90 mV charge-share margin
+        let out = shift_transient(&p, &TransientCfg::default());
+        assert!(out[SENSE_A] < 0.0);
+        assert!(out[V_DST_F] < 0.1);
+    }
+
+    #[test]
+    fn margin_matches_first_order_estimate() {
+        let node = TechNode::n22();
+        let p = node.mc_nominal(true);
+        let out = shift_transient(&p, &TransientCfg::default());
+        let est = node.charge_share_margin(512) as f32;
+        // transient margin within 25 % of the analytic ΔV
+        assert!(
+            (out[SENSE_A] - est).abs() / est < 0.25,
+            "sense {} vs estimate {est}",
+            out[SENSE_A]
+        );
+    }
+
+    #[test]
+    fn waveform_length_and_story() {
+        let cfg = TransientCfg::default();
+        let p = TechNode::n22().mc_nominal(true);
+        let wf = shift_waveform(&p, &cfg);
+        assert_eq!(wf.len(), 2 * cfg.steps_per_aap());
+        let mid = wf[cfg.steps_per_aap() - 1];
+        assert!(mid[1] > 1.1, "migration cell at rail after AAP1");
+        let end = wf.last().unwrap();
+        assert!(end[2] > 1.1, "dst at rail after AAP2");
+    }
+}

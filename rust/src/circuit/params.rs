@@ -1,0 +1,236 @@
+//! DRAM cell & circuit parameters across technology nodes — the paper's
+//! Table 1, plus derived quantities the transient model consumes.
+//!
+//! The 45/22 nm rows follow PTM transistor parameters; 20 nm and 10 nm are
+//! scaled estimates (as in the paper, §4.2). Access-transistor
+//! on-resistance is derived from a long-channel estimate
+//! R_on ≈ L / (W · k′ · (V_boost − V_th)) normalized to ~15 kΩ at 22 nm —
+//! DRAM access devices are deliberately weak; the exact value only moves
+//! the settling time, which the sense window comfortably covers.
+
+/// One technology node's cell/circuit parameters (one column of Table 1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TechNode {
+    pub name: &'static str,
+    pub vdd: f64,
+    pub wl_boost: f64,
+    /// storage cell capacitance, F
+    pub c_cell: f64,
+    /// access transistor length / width, m
+    pub access_l: f64,
+    pub access_w: f64,
+    /// sense-amp NMOS width, m
+    pub sa_nmos_w: f64,
+    /// bitline resistance per cell, Ω
+    pub bl_r_per_cell: f64,
+    /// bitline capacitance per cell, F
+    pub bl_c_per_cell: f64,
+    /// wordline rise time, s
+    pub t_rise: f64,
+    /// derived access on-resistance, Ω
+    pub r_on: f64,
+    /// sense-amp regeneration rate, 1/s
+    pub sa_gain: f64,
+}
+
+/// Rows of Table 1. The paper validates the shift at 45/22/20/10 nm;
+/// 600/180 nm are included for the historical scaling context.
+impl TechNode {
+    pub fn n600() -> Self {
+        TechNode {
+            name: "600nm", vdd: 3.3, wl_boost: 5.0, c_cell: 120e-15,
+            access_l: 0.6e-6, access_w: 1.2e-6, sa_nmos_w: 140e-6,
+            bl_r_per_cell: 1.0, bl_c_per_cell: 2.0e-15, t_rise: 5e-9,
+            r_on: 6e3, sa_gain: 1.0e9,
+        }
+    }
+
+    pub fn n180() -> Self {
+        TechNode {
+            name: "180nm", vdd: 1.8, wl_boost: 3.3, c_cell: 50e-15,
+            access_l: 0.18e-6, access_w: 0.36e-6, sa_nmos_w: 42e-6,
+            bl_r_per_cell: 0.4, bl_c_per_cell: 0.8e-15, t_rise: 2e-9,
+            r_on: 9e3, sa_gain: 1.3e9,
+        }
+    }
+
+    pub fn n45() -> Self {
+        TechNode {
+            name: "45nm", vdd: 1.5, wl_boost: 3.0, c_cell: 30e-15,
+            access_l: 45e-9, access_w: 180e-9, sa_nmos_w: 10.5e-6,
+            bl_r_per_cell: 0.2, bl_c_per_cell: 0.40e-15, t_rise: 0.7e-9,
+            r_on: 12e3, sa_gain: 1.6e9,
+        }
+    }
+
+    pub fn n22() -> Self {
+        TechNode {
+            name: "22nm", vdd: 1.2, wl_boost: 2.5, c_cell: 25e-15,
+            access_l: 22e-9, access_w: 44e-9, sa_nmos_w: 7e-6,
+            bl_r_per_cell: 0.12, bl_c_per_cell: 0.24e-15, t_rise: 0.5e-9,
+            r_on: 15e3, sa_gain: 2.0e9,
+        }
+    }
+
+    pub fn n20() -> Self {
+        TechNode {
+            name: "20nm", vdd: 1.1, wl_boost: 2.4, c_cell: 25e-15,
+            access_l: 20e-9, access_w: 40e-9, sa_nmos_w: 6e-6,
+            bl_r_per_cell: 0.11, bl_c_per_cell: 0.22e-15, t_rise: 0.4e-9,
+            r_on: 16e3, sa_gain: 2.1e9,
+        }
+    }
+
+    pub fn n10() -> Self {
+        TechNode {
+            name: "10nm", vdd: 1.1, wl_boost: 2.2, c_cell: 18e-15,
+            access_l: 12e-9, access_w: 25e-9, sa_nmos_w: 4.5e-6,
+            bl_r_per_cell: 0.10, bl_c_per_cell: 0.18e-15, t_rise: 0.3e-9,
+            r_on: 20e3, sa_gain: 2.2e9,
+        }
+    }
+
+    /// All Table-1 nodes in paper order.
+    pub fn all() -> Vec<TechNode> {
+        vec![Self::n600(), Self::n180(), Self::n45(), Self::n22(), Self::n20(), Self::n10()]
+    }
+
+    /// The nodes whose shift operation the paper validates in LTSPICE.
+    pub fn validated() -> Vec<TechNode> {
+        vec![Self::n45(), Self::n22(), Self::n20(), Self::n10()]
+    }
+
+    pub fn by_name(name: &str) -> Option<TechNode> {
+        Self::all().into_iter().find(|n| n.name == name)
+    }
+
+    /// Total bitline capacitance for a 512-row open-bitline segment plus
+    /// sense-amp parasitics.
+    pub fn c_bitline(&self, rows: usize) -> f64 {
+        self.bl_c_per_cell * rows as f64 + 15e-15
+    }
+
+    /// Nominal Monte-Carlo parameter vector (the L1 kernel's 16-float
+    /// layout; see python/compile/kernels/common.py) for a cell storing
+    /// `bit`, at full retention.
+    pub fn mc_nominal(&self, bit: bool) -> [f32; 16] {
+        let c_bl = self.c_bitline(512) as f32;
+        [
+            self.c_cell as f32,       // C_SRC
+            self.c_cell as f32,       // C_MIG
+            self.c_cell as f32,       // C_DST
+            c_bl,                     // C_BLA
+            c_bl,                     // C_BLB
+            self.r_on as f32,         // R_SRC
+            self.r_on as f32,         // R_MIG_A
+            self.r_on as f32,         // R_MIG_B
+            self.r_on as f32,         // R_DST
+            self.vdd as f32,          // VDD
+            self.t_rise as f32,       // T_RISE
+            self.sa_gain as f32,      // SA_GAIN
+            0.0,                      // OFF_A
+            0.0,                      // OFF_B
+            if bit { self.vdd as f32 } else { 0.0 }, // V_SRC0
+            0.0,                      // V_DST0
+        ]
+    }
+
+    /// Charge-sharing read margin estimate ΔV = (V_cell − V_DD/2) ·
+    /// C_cell / (C_cell + C_BL) — the first-order signal the sense amp
+    /// must resolve.
+    pub fn charge_share_margin(&self, rows: usize) -> f64 {
+        let c_bl = self.c_bitline(rows);
+        (self.vdd / 2.0) * self.c_cell / (self.c_cell + c_bl)
+    }
+}
+
+/// Kernel parameter-vector indices (mirror of kernels/common.py).
+pub mod pidx {
+    pub const C_SRC: usize = 0;
+    pub const C_MIG: usize = 1;
+    pub const C_DST: usize = 2;
+    pub const C_BLA: usize = 3;
+    pub const C_BLB: usize = 4;
+    pub const R_SRC: usize = 5;
+    pub const R_MIG_A: usize = 6;
+    pub const R_MIG_B: usize = 7;
+    pub const R_DST: usize = 8;
+    pub const VDD: usize = 9;
+    pub const T_RISE: usize = 10;
+    pub const SA_GAIN: usize = 11;
+    pub const OFF_A: usize = 12;
+    pub const OFF_B: usize = 13;
+    pub const V_SRC0: usize = 14;
+    pub const V_DST0: usize = 15;
+    pub const N_PARAMS: usize = 16;
+
+    pub const SENSE_A: usize = 0;
+    pub const SENSE_B: usize = 1;
+    pub const V_DST_F: usize = 2;
+    pub const V_MIG_F: usize = 3;
+    pub const V_SRC_F: usize = 4;
+    pub const V_BLB_F: usize = 5;
+    pub const N_OUT: usize = 6;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values() {
+        // spot-check the published Table 1 cells
+        let n22 = TechNode::n22();
+        assert_eq!(n22.vdd, 1.2);
+        assert_eq!(n22.c_cell, 25e-15);
+        assert_eq!(n22.access_l, 22e-9);
+        assert_eq!(n22.access_w, 44e-9);
+        let n600 = TechNode::n600();
+        assert_eq!(n600.vdd, 3.3);
+        assert_eq!(n600.c_cell, 120e-15);
+        let n10 = TechNode::n10();
+        assert_eq!(n10.c_cell, 18e-15);
+        assert_eq!(n10.t_rise, 0.3e-9);
+    }
+
+    #[test]
+    fn monotone_scaling() {
+        // Table 1's trends: vdd, cell cap, trise all shrink with the node
+        let all = TechNode::all();
+        for w in all.windows(2) {
+            assert!(w[0].vdd >= w[1].vdd, "{} vs {}", w[0].name, w[1].name);
+            assert!(w[0].c_cell >= w[1].c_cell);
+            assert!(w[0].t_rise >= w[1].t_rise);
+            assert!(w[0].bl_c_per_cell >= w[1].bl_c_per_cell);
+        }
+    }
+
+    #[test]
+    fn margins_shrink_toward_10nm() {
+        // cell cap and VDD shrink faster than the bitline load at the end
+        // of the roadmap: 10 nm has the smallest absolute margin (45 vs 22
+        // are within a few mV of each other because BL C/cell halves too)
+        let m45 = TechNode::n45().charge_share_margin(512);
+        let m22 = TechNode::n22().charge_share_margin(512);
+        let m10 = TechNode::n10().charge_share_margin(512);
+        assert!(m45 > m10 && m22 > m10, "{m45} {m22} {m10}");
+        // 22 nm margin ~ tens of millivolts (sanity for the SA to resolve)
+        assert!((0.03..0.15).contains(&m22), "margin {m22}");
+    }
+
+    #[test]
+    fn nominal_vector_layout() {
+        let p = TechNode::n22().mc_nominal(true);
+        assert_eq!(p[pidx::VDD], 1.2);
+        assert_eq!(p[pidx::V_SRC0], 1.2);
+        let p0 = TechNode::n22().mc_nominal(false);
+        assert_eq!(p0[pidx::V_SRC0], 0.0);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(TechNode::by_name("22nm").unwrap().name, "22nm");
+        assert!(TechNode::by_name("7nm").is_none());
+        assert_eq!(TechNode::validated().len(), 4);
+    }
+}

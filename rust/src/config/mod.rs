@@ -1,0 +1,12 @@
+//! Typed configuration system.
+//!
+//! Everything the simulators consume — DRAM geometry, JEDEC timing, IDD
+//! energy coefficients, Monte-Carlo calibration — is a plain-data struct
+//! with a validated constructor and named presets, so every experiment in
+//! EXPERIMENTS.md is replayable from a preset name.
+
+pub mod dram;
+pub mod mc;
+
+pub use dram::{DramConfig, EnergyConfig, GeometryConfig, TimingConfig};
+pub use mc::McConfig;

@@ -1,0 +1,86 @@
+//! Per-bank batching: accumulate routed requests into bounded batches so a
+//! worker drains whole command bursts instead of single ops (amortizing
+//! queue synchronization, and — on real hardware — command-bus turnaround).
+
+use std::collections::VecDeque;
+
+/// A drained batch of request ids + payloads.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Batch<T> {
+    pub bank: usize,
+    pub items: Vec<T>,
+}
+
+/// Bounded-batch accumulator for one bank.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    bank: usize,
+    queue: VecDeque<T>,
+    max_batch: usize,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(bank: usize, max_batch: usize) -> Self {
+        assert!(max_batch > 0);
+        Batcher { bank, queue: VecDeque::new(), max_batch }
+    }
+
+    pub fn push(&mut self, item: T) {
+        self.queue.push_back(item);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Drain up to `max_batch` items, FIFO.
+    pub fn drain(&mut self) -> Option<Batch<T>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let n = self.queue.len().min(self.max_batch);
+        let items: Vec<T> = self.queue.drain(..n).collect();
+        Some(Batch { bank: self.bank, items })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(0, 10);
+        for i in 0..5 {
+            b.push(i);
+        }
+        let batch = b.drain().unwrap();
+        assert_eq!(batch.items, vec![0, 1, 2, 3, 4]);
+        assert!(b.drain().is_none());
+    }
+
+    #[test]
+    fn bounded_batches() {
+        let mut b = Batcher::new(3, 4);
+        for i in 0..10 {
+            b.push(i);
+        }
+        let b1 = b.drain().unwrap();
+        assert_eq!(b1.items.len(), 4);
+        assert_eq!(b1.bank, 3);
+        let b2 = b.drain().unwrap();
+        assert_eq!(b2.items, vec![4, 5, 6, 7]);
+        assert_eq!(b.drain().unwrap().items.len(), 2);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_batch_rejected() {
+        Batcher::<u32>::new(0, 0);
+    }
+}

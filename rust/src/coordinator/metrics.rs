@@ -1,0 +1,103 @@
+//! Coordinator metrics: per-bank and aggregate counters, shared between
+//! workers and the leader thread.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Lock-free counters one worker updates and the leader reads.
+#[derive(Debug, Default)]
+pub struct BankCounters {
+    pub ops_completed: AtomicU64,
+    pub aaps_issued: AtomicU64,
+    pub sim_time_ps: AtomicU64,
+    pub energy_mpj: AtomicU64, // milli-picojoules, fixed point
+    pub refreshes: AtomicU64,
+}
+
+/// Aggregated metrics registry.
+#[derive(Clone, Debug)]
+pub struct Metrics {
+    banks: Arc<Vec<BankCounters>>,
+}
+
+impl Metrics {
+    pub fn new(n_banks: usize) -> Self {
+        Metrics {
+            banks: Arc::new((0..n_banks).map(|_| BankCounters::default()).collect()),
+        }
+    }
+
+    pub fn n_banks(&self) -> usize {
+        self.banks.len()
+    }
+
+    pub fn record(&self, bank: usize, ops: u64, aaps: u64, sim_ps: u64, energy_pj: f64, refs: u64) {
+        let c = &self.banks[bank];
+        c.ops_completed.fetch_add(ops, Ordering::Relaxed);
+        c.aaps_issued.fetch_add(aaps, Ordering::Relaxed);
+        c.sim_time_ps.store(sim_ps, Ordering::Relaxed);
+        c.energy_mpj.store((energy_pj * 1e3) as u64, Ordering::Relaxed);
+        c.refreshes.store(refs, Ordering::Relaxed);
+    }
+
+    pub fn ops(&self, bank: usize) -> u64 {
+        self.banks[bank].ops_completed.load(Ordering::Relaxed)
+    }
+
+    pub fn total_ops(&self) -> u64 {
+        self.banks.iter().map(|c| c.ops_completed.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn total_aaps(&self) -> u64 {
+        self.banks.iter().map(|c| c.aaps_issued.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Simulated makespan: the busiest bank's clock (banks run in parallel).
+    pub fn makespan_ps(&self) -> u64 {
+        self.banks.iter().map(|c| c.sim_time_ps.load(Ordering::Relaxed)).max().unwrap_or(0)
+    }
+
+    pub fn total_energy_pj(&self) -> f64 {
+        self.banks.iter().map(|c| c.energy_mpj.load(Ordering::Relaxed) as f64 / 1e3).sum()
+    }
+
+    pub fn total_refreshes(&self) -> u64 {
+        self.banks.iter().map(|c| c.refreshes.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Aggregate throughput in MOps/s of simulated time.
+    pub fn throughput_mops(&self) -> f64 {
+        let t = self.makespan_ps();
+        if t == 0 {
+            return 0.0;
+        }
+        self.total_ops() as f64 / (t as f64 * 1e-12) / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregation() {
+        let m = Metrics::new(4);
+        m.record(0, 100, 400, 1_000_000, 50.0, 1);
+        m.record(1, 100, 400, 2_000_000, 60.0, 2);
+        assert_eq!(m.total_ops(), 200);
+        assert_eq!(m.total_aaps(), 800);
+        assert_eq!(m.makespan_ps(), 2_000_000, "parallel banks: max not sum");
+        assert!((m.total_energy_pj() - 110.0).abs() < 0.01);
+        assert_eq!(m.total_refreshes(), 3);
+    }
+
+    #[test]
+    fn throughput_uses_makespan() {
+        let m = Metrics::new(2);
+        // two banks each complete 1000 ops in 1 ms of simulated time
+        m.record(0, 1000, 4000, 1_000_000_000, 0.0, 0);
+        m.record(1, 1000, 4000, 1_000_000_000, 0.0, 0);
+        // 2000 ops / 1 ms = 2 MOps/s — parallelism doubles throughput
+        assert!((m.throughput_mops() - 2.0).abs() < 1e-9);
+    }
+}

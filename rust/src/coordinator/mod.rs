@@ -1,0 +1,32 @@
+//! The PIM coordinator: request router, per-bank batcher, and the
+//! bank-parallel scheduler that realizes §5.1.4's scaling claim.
+//!
+//! Architecture (leader/worker):
+//!
+//! ```text
+//!   clients ──► Router ──► per-bank Batcher queues ──► one Worker per bank
+//!                 │                                        │  (thread +
+//!                 └── placement policy                     │   BankSim)
+//!                                                          ▼
+//!                                                  responses + Metrics
+//! ```
+//!
+//! Workers own independent [`BankSim`]s; because shift operations are
+//! confined to one subarray, banks never synchronize and aggregate
+//! throughput scales with the bank count (the paper's 4.82 → 38.56 →
+//! 154.24 MOps/s projection for 1 → 8 → 32 banks).
+//!
+//! Substitution note: the offline build has no tokio; the serving loop is
+//! std threads + mpsc channels, which for a simulation-backed service is
+//! behaviourally equivalent (blocking queue per bank, one executor per
+//! bank, non-blocking submit with a completion handle).
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod system;
+
+pub use batcher::{Batch, Batcher};
+pub use metrics::Metrics;
+pub use router::{Placement, Router};
+pub use system::{PimRequest, PimResponse, PimSystem, SystemReport};

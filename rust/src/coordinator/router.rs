@@ -1,0 +1,130 @@
+//! Request routing: map incoming PIM requests onto banks.
+
+use crate::dram::address::BankId;
+
+/// Placement policy for requests that don't pin a bank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// strict round-robin over all banks
+    RoundRobin,
+    /// least-loaded bank (by queued ops)
+    LeastLoaded,
+    /// all unpinned requests to bank 0 (the paper's single-bank baseline)
+    Pinned,
+}
+
+/// Routes requests to bank indices `[0, n_banks)`.
+#[derive(Debug)]
+pub struct Router {
+    banks: Vec<BankId>,
+    policy: Placement,
+    rr_next: usize,
+    /// queued-op estimate per bank (updated by the system on enqueue/drain)
+    load: Vec<usize>,
+}
+
+impl Router {
+    pub fn new(banks: Vec<BankId>, policy: Placement) -> Self {
+        assert!(!banks.is_empty());
+        let n = banks.len();
+        Router { banks, policy, rr_next: 0, load: vec![0; n] }
+    }
+
+    pub fn n_banks(&self) -> usize {
+        self.banks.len()
+    }
+
+    pub fn bank_id(&self, idx: usize) -> BankId {
+        self.banks[idx]
+    }
+
+    /// Choose a bank for a request; `pinned` overrides the policy.
+    pub fn route(&mut self, pinned: Option<usize>) -> usize {
+        if let Some(b) = pinned {
+            assert!(b < self.banks.len(), "pinned bank {b} out of range");
+            self.load[b] += 1;
+            return b;
+        }
+        let idx = match self.policy {
+            Placement::Pinned => 0,
+            Placement::RoundRobin => {
+                let i = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % self.banks.len();
+                i
+            }
+            Placement::LeastLoaded => self
+                .load
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &l)| l)
+                .map(|(i, _)| i)
+                .unwrap(),
+        };
+        self.load[idx] += 1;
+        idx
+    }
+
+    /// Report `n` ops drained from a bank's queue.
+    pub fn drained(&mut self, bank: usize, n: usize) {
+        self.load[bank] = self.load[bank].saturating_sub(n);
+    }
+
+    pub fn load(&self, bank: usize) -> usize {
+        self.load[bank]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DramConfig;
+
+    fn banks(n: usize) -> Vec<BankId> {
+        BankId::all(&DramConfig::ddr3_1333_4gb().geometry)
+            .into_iter()
+            .take(n)
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(banks(4), Placement::RoundRobin);
+        let picks: Vec<usize> = (0..8).map(|_| r.route(None)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn pinned_overrides_policy() {
+        let mut r = Router::new(banks(4), Placement::RoundRobin);
+        assert_eq!(r.route(Some(2)), 2);
+        assert_eq!(r.route(Some(2)), 2);
+    }
+
+    #[test]
+    fn least_loaded_balances() {
+        let mut r = Router::new(banks(3), Placement::LeastLoaded);
+        let a = r.route(None);
+        let b = r.route(None);
+        let c = r.route(None);
+        let mut s = vec![a, b, c];
+        s.sort();
+        assert_eq!(s, vec![0, 1, 2], "spreads over empty banks");
+        r.drained(1, 1);
+        assert_eq!(r.route(None), 1, "goes to the drained bank");
+    }
+
+    #[test]
+    fn pinned_policy_single_bank() {
+        let mut r = Router::new(banks(8), Placement::Pinned);
+        for _ in 0..5 {
+            assert_eq!(r.route(None), 0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn bad_pin_rejected() {
+        let mut r = Router::new(banks(2), Placement::RoundRobin);
+        r.route(Some(5));
+    }
+}

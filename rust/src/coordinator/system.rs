@@ -1,0 +1,284 @@
+//! The PIM serving system: leader thread + one worker per bank.
+//!
+//! Submit [`PimRequest`]s; each is routed (§router), batched (§batcher),
+//! and executed by its bank's worker against a private [`BankSim`]. The
+//! caller receives a [`PimResponse`] over a channel. Simulated time runs
+//! per bank — banks are independent (the basis of §5.1.4's linear scaling).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+use crate::config::DramConfig;
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::router::{Placement, Router};
+use crate::dram::address::BankId;
+use crate::pim::PimOp;
+use crate::sim::BankSim;
+use crate::util::{BitRow, ShiftDir};
+
+/// A client request against one subarray of (some) bank.
+#[derive(Clone, Debug)]
+pub enum PimRequest {
+    /// load a row with host data
+    WriteRow { subarray: usize, row: usize, bits: BitRow },
+    /// read a row back
+    ReadRow { subarray: usize, row: usize },
+    /// the paper's primitive: shift a row by `n` positions
+    Shift { subarray: usize, row: usize, n: usize, dir: ShiftDir },
+    /// any other macro-op
+    Op { subarray: usize, op: PimOp },
+}
+
+/// Worker's answer.
+#[derive(Clone, Debug)]
+pub enum PimResponse {
+    Done { bank: usize },
+    Row { bank: usize, bits: BitRow },
+}
+
+struct Envelope {
+    req: PimRequest,
+    respond: Sender<PimResponse>,
+}
+
+enum WorkerMsg {
+    Work(Vec<Envelope>),
+    Stop,
+}
+
+/// Final system report after shutdown.
+#[derive(Clone, Debug)]
+pub struct SystemReport {
+    pub banks: usize,
+    pub total_ops: u64,
+    pub total_aaps: u64,
+    pub makespan_ps: u64,
+    pub total_energy_pj: f64,
+    pub throughput_mops: f64,
+}
+
+/// Leader + workers.
+pub struct PimSystem {
+    router: Mutex<Router>,
+    batchers: Vec<Mutex<Batcher<Envelope>>>,
+    senders: Vec<Sender<WorkerMsg>>,
+    workers: Vec<JoinHandle<()>>,
+    metrics: Metrics,
+}
+
+impl PimSystem {
+    /// Spin up one worker per bank (first `n_banks` of the geometry).
+    pub fn start(cfg: &DramConfig, n_banks: usize, placement: Placement, max_batch: usize) -> Self {
+        let all = BankId::all(&cfg.geometry);
+        assert!(n_banks >= 1 && n_banks <= all.len());
+        let banks: Vec<BankId> = all.into_iter().take(n_banks).collect();
+        let metrics = Metrics::new(n_banks);
+
+        let mut senders = Vec::new();
+        let mut workers = Vec::new();
+        for bank in 0..n_banks {
+            let (tx, rx) = channel::<WorkerMsg>();
+            let m = metrics.clone();
+            let cfg = cfg.clone();
+            workers.push(std::thread::spawn(move || worker_loop(bank, cfg, rx, m)));
+            senders.push(tx);
+        }
+
+        PimSystem {
+            router: Mutex::new(Router::new(banks, placement)),
+            batchers: (0..n_banks).map(|b| Mutex::new(Batcher::new(b, max_batch))).collect(),
+            senders,
+            workers,
+            metrics,
+        }
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Submit a request; returns the receiver for its response. `pinned`
+    /// forces a bank (the paper's single-bank runs pin everything to 0).
+    pub fn submit(&self, req: PimRequest, pinned: Option<usize>) -> Receiver<PimResponse> {
+        let (tx, rx) = channel();
+        let bank = self.router.lock().unwrap().route(pinned);
+        let mut batcher = self.batchers[bank].lock().unwrap();
+        batcher.push(Envelope { req, respond: tx });
+        // dispatch eagerly when a full batch accumulates
+        if let Some(batch) = batcher.drain() {
+            let n = batch.items.len();
+            self.senders[bank].send(WorkerMsg::Work(batch.items)).expect("worker alive");
+            self.router.lock().unwrap().drained(bank, n);
+        }
+        rx
+    }
+
+    /// Flush all partially-filled batches.
+    pub fn flush(&self) {
+        for (bank, b) in self.batchers.iter().enumerate() {
+            let mut b = b.lock().unwrap();
+            while let Some(batch) = b.drain() {
+                let n = batch.items.len();
+                self.senders[bank].send(WorkerMsg::Work(batch.items)).expect("worker alive");
+                self.router.lock().unwrap().drained(bank, n);
+            }
+        }
+    }
+
+    /// Flush, stop workers, and produce the final report.
+    pub fn shutdown(mut self) -> SystemReport {
+        self.flush();
+        for s in &self.senders {
+            let _ = s.send(WorkerMsg::Stop);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        SystemReport {
+            banks: self.metrics.n_banks(),
+            total_ops: self.metrics.total_ops(),
+            total_aaps: self.metrics.total_aaps(),
+            makespan_ps: self.metrics.makespan_ps(),
+            total_energy_pj: self.metrics.total_energy_pj(),
+            throughput_mops: self.metrics.throughput_mops(),
+        }
+    }
+}
+
+fn worker_loop(bank: usize, cfg: DramConfig, rx: Receiver<WorkerMsg>, metrics: Metrics) {
+    let mut sim = BankSim::new(cfg);
+    let mut last_aaps: u64 = 0;
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WorkerMsg::Stop => break,
+            WorkerMsg::Work(envelopes) => {
+                let mut ops: u64 = 0;
+                for env in envelopes {
+                    let resp = execute(bank, &mut sim, env.req);
+                    ops += 1;
+                    // receiver may have hung up (fire-and-forget callers)
+                    let _ = env.respond.send(resp);
+                }
+                metrics.record(
+                    bank,
+                    ops,
+                    sim.counts.aap - last_aaps,
+                    sim.now_ps,
+                    sim.energy.total_pj(),
+                    sim.counts.refresh,
+                );
+                last_aaps = sim.counts.aap;
+            }
+        }
+    }
+}
+
+fn execute(bank: usize, sim: &mut BankSim, req: PimRequest) -> PimResponse {
+    match req {
+        PimRequest::WriteRow { subarray, row, bits } => {
+            sim.bank().subarray(subarray).write_row(row, bits);
+            PimResponse::Done { bank }
+        }
+        PimRequest::ReadRow { subarray, row } => {
+            let bits = sim.bank().subarray(subarray).read_row(row).clone();
+            PimResponse::Row { bank, bits }
+        }
+        PimRequest::Shift { subarray, row, n, dir } => {
+            let op = PimOp::ShiftBy { src: row, dst: row, n, dir };
+            sim.run(subarray, &op.lower());
+            PimResponse::Done { bank }
+        }
+        PimRequest::Op { subarray, op } => {
+            sim.run(subarray, &op.lower());
+            PimResponse::Done { bank }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn cfg() -> DramConfig {
+        DramConfig::tiny_test()
+    }
+
+    #[test]
+    fn end_to_end_shift_through_system() {
+        let sys = PimSystem::start(&cfg(), 2, Placement::RoundRobin, 4);
+        let mut rng = Rng::new(1);
+        let row = BitRow::random(256, &mut rng);
+        // pin all three ops to the same bank so they hit the same state
+        sys.submit(
+            PimRequest::WriteRow { subarray: 0, row: 0, bits: row.clone() },
+            Some(1),
+        );
+        sys.submit(
+            PimRequest::Shift { subarray: 0, row: 0, n: 3, dir: ShiftDir::Right },
+            Some(1),
+        );
+        let rx = sys.submit(PimRequest::ReadRow { subarray: 0, row: 0 }, Some(1));
+        sys.flush();
+        match rx.recv().unwrap() {
+            PimResponse::Row { bank, bits } => {
+                assert_eq!(bank, 1);
+                assert_eq!(bits, row.shifted_by(ShiftDir::Right, 3, false));
+            }
+            other => panic!("unexpected response {other:?}"),
+        }
+        let report = sys.shutdown();
+        assert_eq!(report.total_ops, 3);
+        assert_eq!(report.total_aaps, 12); // 3-bit shift = 12 AAPs
+    }
+
+    #[test]
+    fn round_robin_spreads_over_banks() {
+        let sys = PimSystem::start(&cfg(), 4, Placement::RoundRobin, 1);
+        for _ in 0..8 {
+            sys.submit(
+                PimRequest::Shift { subarray: 0, row: 0, n: 1, dir: ShiftDir::Left },
+                None,
+            );
+        }
+        let report = sys.shutdown();
+        assert_eq!(report.total_ops, 8);
+        // each bank simulated 2 shifts worth of time, not 8
+        assert_eq!(report.makespan_ps, 2 * 4 * 52_500);
+    }
+
+    #[test]
+    fn bank_parallelism_scales_throughput() {
+        // §5.1.4: K shifts on 1 bank vs spread over 4 banks
+        let run = |banks: usize| -> f64 {
+            let sys = PimSystem::start(&cfg(), banks, Placement::RoundRobin, 8);
+            for _ in 0..64 {
+                sys.submit(
+                    PimRequest::Shift { subarray: 0, row: 0, n: 1, dir: ShiftDir::Right },
+                    None,
+                );
+            }
+            sys.shutdown().throughput_mops
+        };
+        let t1 = run(1);
+        let t4 = run(4);
+        let scale = t4 / t1;
+        assert!((3.5..4.5).contains(&scale), "scaling {scale}");
+    }
+
+    #[test]
+    fn responses_optional() {
+        // fire-and-forget: dropping the receiver must not kill the worker
+        let sys = PimSystem::start(&cfg(), 1, Placement::Pinned, 2);
+        for _ in 0..10 {
+            drop(sys.submit(
+                PimRequest::Shift { subarray: 0, row: 0, n: 1, dir: ShiftDir::Right },
+                None,
+            ));
+        }
+        let report = sys.shutdown();
+        assert_eq!(report.total_ops, 10);
+    }
+}

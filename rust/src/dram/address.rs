@@ -1,0 +1,143 @@
+//! Addressing and the DRAM/PIM command vocabulary.
+
+/// Physical location of one bank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BankId {
+    pub channel: usize,
+    pub rank: usize,
+    pub bank: usize,
+}
+
+impl BankId {
+    pub const ZERO: BankId = BankId { channel: 0, rank: 0, bank: 0 };
+
+    /// Flat index over the whole system (channel-major).
+    pub fn flat(&self, ranks_per_channel: usize, banks_per_rank: usize) -> usize {
+        (self.channel * ranks_per_channel + self.rank) * banks_per_rank + self.bank
+    }
+
+    /// Enumerate every bank in a geometry.
+    pub fn all(g: &crate::config::GeometryConfig) -> Vec<BankId> {
+        let mut v = Vec::with_capacity(g.total_banks());
+        for channel in 0..g.channels {
+            for rank in 0..g.ranks_per_channel {
+                for bank in 0..g.banks_per_rank {
+                    v.push(BankId { channel, rank, bank });
+                }
+            }
+        }
+        v
+    }
+}
+
+/// Which of a migration cell's two access ports a command drives.
+///
+/// Port A of a top-row cell is on the even bitline of its (2i, 2i+1) pair;
+/// port B on the odd. Bottom-row cells straddle (2i−1, 2i): port A odd,
+/// port B even. Edge ports that fall outside the array are tied to the
+/// grounded dummy bitline — they read back 0 and absorb writes — which is
+/// what makes the 4-AAP procedure shift in a deterministic 0 at the
+/// boundary column (see `subarray.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Port {
+    A,
+    B,
+}
+
+/// A row (wordline) inside one subarray, as seen by commands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RowRef {
+    /// ordinary data row
+    Data(usize),
+    /// the paper's top migration row, through the given port wordline
+    MigTop(Port),
+    /// the paper's bottom migration row
+    MigBot(Port),
+    /// Ambit scratch rows T0–T3 (full-swing designated compute rows)
+    Compute(usize),
+    /// Ambit control row C0 (all zeros)
+    Zero,
+    /// Ambit control row C1 (all ones)
+    One,
+    /// dual-contact cell row: true-phase wordline
+    DccTrue(usize),
+    /// dual-contact cell row: complemented-phase wordline
+    DccComp(usize),
+}
+
+/// Number of Ambit scratch rows and DCC rows modelled per subarray.
+pub const NUM_COMPUTE_ROWS: usize = 4;
+pub const NUM_DCC_ROWS: usize = 2;
+
+/// One command at the DDR/PIM interface, scoped to (bank, subarray).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Command {
+    /// activate a row (open it into the row buffer)
+    Act { row: RowRef },
+    /// precharge the open row
+    Pre,
+    /// burst-read 64 B at a column offset of the open row
+    Read { col: usize },
+    /// burst-write 64 B
+    Write { col: usize },
+    /// ACT-ACT-PRE row copy (RowClone-FPM): src sensed, dst overwritten
+    Aap { src: RowRef, dst: RowRef },
+    /// dual-row activation (used by DCC-based NOT)
+    Dra { a: RowRef, b: RowRef },
+    /// triple-row activation: all three rows become MAJ(a,b,c) (Ambit)
+    Tra { a: RowRef, b: RowRef, c: RowRef },
+    /// refresh (per-bank, tRFC)
+    Refresh,
+}
+
+impl Command {
+    /// Number of wordline activations this command performs (energy model).
+    pub fn activations(&self) -> u32 {
+        match self {
+            Command::Act { .. } => 1,
+            Command::Pre => 0,
+            Command::Read { .. } | Command::Write { .. } => 0,
+            Command::Aap { .. } => 2,
+            Command::Dra { .. } => 2,
+            Command::Tra { .. } => 3,
+            Command::Refresh => 0, // accounted via E(REF)
+        }
+    }
+
+    /// Number of precharges (for the PRE bookkeeping energy).
+    pub fn precharges(&self) -> u32 {
+        match self {
+            Command::Pre | Command::Aap { .. } | Command::Dra { .. } | Command::Tra { .. } => 1,
+            _ => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DramConfig;
+
+    #[test]
+    fn flat_index_bijective() {
+        let g = DramConfig::ddr3_1333_4gb().geometry;
+        let all = BankId::all(&g);
+        assert_eq!(all.len(), 32);
+        for (i, b) in all.iter().enumerate() {
+            assert_eq!(b.flat(g.ranks_per_channel, g.banks_per_rank), i);
+        }
+    }
+
+    #[test]
+    fn activation_counts() {
+        let aap = Command::Aap { src: RowRef::Data(0), dst: RowRef::Data(1) };
+        assert_eq!(aap.activations(), 2);
+        assert_eq!(aap.precharges(), 1);
+        let tra = Command::Tra {
+            a: RowRef::Compute(0),
+            b: RowRef::Compute(1),
+            c: RowRef::Zero,
+        };
+        assert_eq!(tra.activations(), 3);
+    }
+}

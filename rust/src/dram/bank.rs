@@ -1,0 +1,90 @@
+//! A bank: a set of lazily-instantiated functional subarrays.
+//!
+//! A full 4 Gb chip holds 128 MB of cell state per rank; the paper's
+//! workloads (and ours) touch Bank 0 Subarray 0 functionally while the
+//! timing/energy engine tracks every bank. Subarrays are therefore created
+//! on first touch.
+
+use std::collections::HashMap;
+
+use crate::config::GeometryConfig;
+use crate::dram::subarray::Subarray;
+
+/// One bank's functional state.
+pub struct Bank {
+    rows_per_subarray: usize,
+    cols: usize,
+    subarrays: HashMap<usize, Subarray>,
+    max_subarrays: usize,
+}
+
+impl Bank {
+    pub fn new(g: &GeometryConfig) -> Self {
+        Bank {
+            rows_per_subarray: g.rows_per_subarray,
+            cols: g.cols_per_row,
+            subarrays: HashMap::new(),
+            max_subarrays: g.subarrays_per_bank,
+        }
+    }
+
+    /// Access (instantiating if needed) a subarray.
+    pub fn subarray(&mut self, idx: usize) -> &mut Subarray {
+        assert!(idx < self.max_subarrays, "subarray {idx} out of range");
+        self.subarrays
+            .entry(idx)
+            .or_insert_with(|| Subarray::new(self.rows_per_subarray, self.cols))
+    }
+
+    /// Read-only view if already materialized.
+    pub fn subarray_if_touched(&self, idx: usize) -> Option<&Subarray> {
+        self.subarrays.get(&idx)
+    }
+
+    pub fn touched_subarrays(&self) -> usize {
+        self.subarrays.len()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DramConfig;
+    use crate::util::{BitRow, Rng};
+
+    #[test]
+    fn lazy_instantiation() {
+        let g = DramConfig::tiny_test().geometry;
+        let mut bank = Bank::new(&g);
+        assert_eq!(bank.touched_subarrays(), 0);
+        bank.subarray(0);
+        assert_eq!(bank.touched_subarrays(), 1);
+        bank.subarray(0);
+        assert_eq!(bank.touched_subarrays(), 1);
+        bank.subarray(1);
+        assert_eq!(bank.touched_subarrays(), 2);
+    }
+
+    #[test]
+    fn subarray_state_persists() {
+        let g = DramConfig::tiny_test().geometry;
+        let mut bank = Bank::new(&g);
+        let mut rng = Rng::new(1);
+        let row = BitRow::random(g.cols_per_row, &mut rng);
+        bank.subarray(1).write_row(5, row.clone());
+        assert_eq!(bank.subarray(1).read_row(5), &row);
+        assert!(bank.subarray_if_touched(0).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_subarray() {
+        let g = DramConfig::tiny_test().geometry;
+        let mut bank = Bank::new(&g);
+        bank.subarray(99);
+    }
+}

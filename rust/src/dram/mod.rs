@@ -1,0 +1,22 @@
+//! The DRAM substrate (NVMain-substitute device model).
+//!
+//! * [`address`] — channel/rank/bank/subarray/row addressing and the
+//!   command + row-reference vocabulary (including migration-cell ports).
+//! * [`subarray`] — the bit-accurate functional model of one open-bitline
+//!   subarray: data rows, Ambit compute rows (T0–T3, C0/C1, dual-contact
+//!   cells) and the paper's two migration rows.
+//! * [`bank`] — a bank of lazily-instantiated subarrays.
+//! * [`timing`] — JEDEC command latencies + the refresh scheduler.
+//! * [`energy`] — IDD-derived per-command energy and category breakdown.
+
+pub mod address;
+pub mod bank;
+pub mod energy;
+pub mod subarray;
+pub mod timing;
+
+pub use address::{BankId, Command, Port, RowRef};
+pub use bank::Bank;
+pub use energy::EnergyBreakdown;
+pub use subarray::Subarray;
+pub use timing::{CommandTimer, RefreshScheduler};

@@ -1,0 +1,514 @@
+//! Bit-accurate functional model of one open-bitline subarray with the
+//! paper's migration rows.
+//!
+//! # Migration-cell topology (paper §3.1–§3.2, Fig. 1)
+//!
+//! A migration cell is a single storage capacitor with **two** access
+//! transistors on **adjacent** bitlines. This module models the subarray's
+//! two migration rows:
+//!
+//! * **Top row** — `cols/2` cells; cell `i` straddles bitlines
+//!   `(2i, 2i+1)`: port **A** on the even bitline, port **B** on the odd.
+//! * **Bottom row** — `cols/2 + 1` cells; cell `i` straddles bitlines
+//!   `(2i−1, 2i)`: port **A** on the odd bitline, port **B** on the even.
+//!   The first cell's A port (bitline −1) and the last cell's B port
+//!   (bitline `cols`) fall outside the array and are tied to the grounded
+//!   dummy bitline: they *read back 0 and absorb writes*. This edge tie is
+//!   what shifts a deterministic `0` into the boundary column — the paper
+//!   leaves the boundary unspecified; see DESIGN.md.
+//!
+//! # AAP semantics
+//!
+//! `Aap { src, dst }` activates `src`, lets the sense amplifiers latch the
+//! driven bitlines, then activates `dst` so the latched values overwrite
+//! `dst`'s cells. Only bitlines actually driven by `src` are written into
+//! `dst`; a data row activated as `dst` keeps its old value on undriven
+//! bitlines (the SA write path is inhibited on bitlines that stayed at
+//! V_DD/2 — a standard column-masking assumption, also required by the
+//! paper's "the data is combined" step).
+//!
+//! # Shift procedure (paper §3.3, Fig. 3) — right shift:
+//!
+//! ```text
+//! 1. AAP(src      → top.A)   top[i]    = src[2i]        (even columns up)
+//! 2. AAP(src      → bot.A)   bot[i]    = src[2i−1]      (odd columns down; bot[0] = 0)
+//! 3. AAP(top.B    → dst)     dst[2i+1] = src[2i]        (re-emerge shifted)
+//! 4. AAP(bot.B    → dst)     dst[2i]   = src[2i−1]      (dst[0] = 0)
+//! ⇒  dst[j] = src[j−1], dst[0] = 0                       — 4 AAPs total
+//! ```
+//!
+//! and the mirrored port sequence (B,B,A,A) gives the left shift.
+
+use crate::dram::address::{Port, RowRef, NUM_COMPUTE_ROWS, NUM_DCC_ROWS};
+use crate::util::bitrow::{spread_even, squash_even};
+use crate::util::BitRow;
+
+/// Mask the bits of `row`'s last word beyond `len` columns.
+fn mask_tail_words(words: &mut [u64], len: usize) {
+    let rem = len % 64;
+    if rem != 0 {
+        if let Some(last) = words.last_mut() {
+            *last &= (1u64 << rem) - 1;
+        }
+    }
+}
+
+/// Values a source row presents on the bitlines when activated: per-bitline
+/// `Some(bit)` if driven, `None` if the bitline stays precharged.
+pub struct SensedRow {
+    bits: BitRow,
+    driven: BitRow,
+}
+
+impl SensedRow {
+    pub fn full(bits: BitRow) -> Self {
+        let driven = BitRow::ones(bits.len());
+        SensedRow { bits, driven }
+    }
+
+    pub fn get(&self, col: usize) -> Option<bool> {
+        if self.driven.get(col) { Some(self.bits.get(col)) } else { None }
+    }
+
+    pub fn driven_mask(&self) -> &BitRow {
+        &self.driven
+    }
+
+    pub fn bits(&self) -> &BitRow {
+        &self.bits
+    }
+}
+
+/// One open-bitline subarray: data rows + Ambit compute rows + the two
+/// migration rows.
+#[derive(Clone)]
+pub struct Subarray {
+    cols: usize,
+    data: Vec<BitRow>,
+    compute: Vec<BitRow>,
+    /// dual-contact cells store the true phase; the comp wordline presents
+    /// and stores the inverse
+    dcc: Vec<BitRow>,
+    mig_top: BitRow, // cols/2 cells
+    mig_bot: BitRow, // cols/2 + 1 cells
+}
+
+impl Subarray {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        assert!(cols >= 2 && cols % 2 == 0, "cols must be even");
+        Subarray {
+            cols,
+            data: vec![BitRow::zeros(cols); rows],
+            compute: vec![BitRow::zeros(cols); NUM_COMPUTE_ROWS],
+            dcc: vec![BitRow::zeros(cols); NUM_DCC_ROWS],
+            mig_top: BitRow::zeros(cols / 2),
+            mig_bot: BitRow::zeros(cols / 2 + 1),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn rows(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Direct host access (models a normal WRITE of a full row).
+    pub fn write_row(&mut self, row: usize, bits: BitRow) {
+        assert_eq!(bits.len(), self.cols);
+        self.data[row] = bits;
+    }
+
+    /// Direct host access (models a normal READ of a full row).
+    pub fn read_row(&self, row: usize) -> &BitRow {
+        &self.data[row]
+    }
+
+    /// Inspect migration rows (for tests/validation).
+    pub fn mig_top(&self) -> &BitRow {
+        &self.mig_top
+    }
+
+    pub fn mig_bot(&self) -> &BitRow {
+        &self.mig_bot
+    }
+
+    /// What activating `row` alone presents on the bitlines.
+    pub fn sense(&self, row: RowRef) -> SensedRow {
+        match row {
+            RowRef::Data(r) => SensedRow::full(self.data[r].clone()),
+            RowRef::Compute(r) => SensedRow::full(self.compute[r].clone()),
+            RowRef::Zero => SensedRow::full(BitRow::zeros(self.cols)),
+            RowRef::One => SensedRow::full(BitRow::ones(self.cols)),
+            RowRef::DccTrue(r) => SensedRow::full(self.dcc[r].clone()),
+            RowRef::DccComp(r) => SensedRow::full(self.dcc[r].not()),
+            RowRef::MigTop(port) => {
+                // word-level interleave: cell i drives column 2i (+1 for
+                // port B); see util::bitrow::spread_even and §Perf.
+                self.sense_interleaved(self.mig_top.words(), port)
+            }
+            RowRef::MigBot(port) => {
+                // cell i straddles (2i−1, 2i): port B drives even columns
+                // from mig_bot[i]; port A drives odd columns from
+                // mig_bot[i+1] (a one-cell shift of the row), with the
+                // edge ports falling off-array.
+                match port {
+                    Port::B => self.sense_interleaved(self.mig_bot.words(), Port::A),
+                    Port::A => {
+                        let w = self.mig_bot.words();
+                        let mut shifted = vec![0u64; w.len()];
+                        for k in 0..w.len() {
+                            shifted[k] = (w[k] >> 1)
+                                | if k + 1 < w.len() { w[k + 1] << 63 } else { 0 };
+                        }
+                        self.sense_interleaved(&shifted, Port::B)
+                    }
+                }
+            }
+        }
+    }
+
+    /// Present a cell array on alternating bitlines: cell `i` (bit `i` of
+    /// `cells`) drives column `2i + p` where p = 0 for [`Port::A`], 1 for
+    /// [`Port::B`]. Word-level (Morton spread), the §Perf hot path.
+    fn sense_interleaved(&self, cells: &[u64], port: Port) -> SensedRow {
+        let p = match port {
+            Port::A => 0,
+            Port::B => 1,
+        };
+        let mut bits = BitRow::zeros(self.cols);
+        let mut driven = BitRow::zeros(self.cols);
+        let nw = bits.words().len();
+        {
+            let bw = bits.words_mut();
+            for (k, b) in bw.iter_mut().enumerate().take(nw) {
+                let half = match cells.get(k / 2) {
+                    Some(w) => {
+                        if k % 2 == 0 { (*w & 0xFFFF_FFFF) as u32 } else { (*w >> 32) as u32 }
+                    }
+                    None => 0,
+                };
+                *b = spread_even(half) << p;
+            }
+            mask_tail_words(bw, self.cols);
+        }
+        {
+            let dw = driven.words_mut();
+            for d in dw.iter_mut() {
+                *d = 0x5555_5555_5555_5555u64 << p;
+            }
+            mask_tail_words(dw, self.cols);
+        }
+        SensedRow { bits, driven }
+    }
+
+    /// Inverse of [`sense_interleaved`]: merge the latched values on
+    /// alternating bitlines back into a cell array of `n_cells` cells
+    /// starting at cell offset `cell_base` (0 or 1 — MigBot port A writes
+    /// cells 1.., its edge cell 0 is handled by the caller).
+    fn writeback_interleaved(
+        cells: &mut BitRow,
+        sensed: &SensedRow,
+        port: Port,
+        cell_base: usize,
+    ) {
+        let p = match port {
+            Port::A => 0,
+            Port::B => 1,
+        };
+        let bits = sensed.bits.words();
+        let driven = sensed.driven.words();
+        // gather 32 cells per bit-row word into halves of the cell words
+        let n_cell_words = cells.words().len();
+        let n_cells = cells.len();
+        let cw = cells.words_mut();
+        for k in 0..bits.len() {
+            let new = squash_even(bits[k] >> p);
+            let drv = squash_even(driven[k] >> p);
+            if drv == 0 {
+                continue;
+            }
+            // cells k*32 + cell_base .. — handle the base shift bitwise
+            let start = k * 32 + cell_base;
+            let word = start / 64;
+            let off = start % 64;
+            if word >= n_cell_words {
+                break;
+            }
+            let merge = |w: &mut u64, val: u64, msk: u64| {
+                *w = (*w & !msk) | (val & msk);
+            };
+            merge(&mut cw[word], (new as u64) << off, (drv as u64) << off);
+            if off > 32 && word + 1 < n_cell_words {
+                let sh = 64 - off;
+                merge(&mut cw[word + 1], (new as u64) >> sh, (drv as u64) >> sh);
+            }
+        }
+        mask_tail_words(cw, n_cells);
+    }
+
+    /// Write the latched bitline values into `dst`'s cells; only bitlines
+    /// in `sensed.driven` are written. Cells whose port falls on the
+    /// grounded dummy bitline load 0 if that bitline is "driven" — for the
+    /// edge ties we model the dummy bitline as always driving 0.
+    fn write_back(&mut self, sensed: &SensedRow, dst: RowRef) {
+        match dst {
+            RowRef::Data(r) => {
+                let row = &mut self.data[r];
+                Self::merge(row, sensed);
+            }
+            RowRef::Compute(r) => {
+                let row = &mut self.compute[r];
+                Self::merge(row, sensed);
+            }
+            RowRef::Zero | RowRef::One => {
+                // control rows are driven by always-on logic; writes bounce
+            }
+            RowRef::DccTrue(r) => {
+                let mut row = self.dcc[r].clone();
+                Self::merge(&mut row, sensed);
+                self.dcc[r] = row;
+            }
+            RowRef::DccComp(r) => {
+                // writing through the comp wordline stores the inverse
+                let mut row = self.dcc[r].not();
+                Self::merge(&mut row, sensed);
+                self.dcc[r] = row.not();
+            }
+            RowRef::MigTop(port) => {
+                Self::writeback_interleaved(&mut self.mig_top, sensed, port, 0);
+            }
+            RowRef::MigBot(port) => match port {
+                Port::A => {
+                    // cell i ← odd column 2i−1, i.e. cell base 1 over the
+                    // odd-bitline lattice; cell 0's A port is the grounded
+                    // dummy bitline: raising the wordline loads 0
+                    Self::writeback_interleaved(&mut self.mig_bot, sensed, Port::B, 1);
+                    self.mig_bot.set(0, false);
+                }
+                Port::B => {
+                    // cell i ← even column 2i; the last cell's B port is
+                    // the grounded dummy: raising the wordline loads 0
+                    Self::writeback_interleaved(&mut self.mig_bot, sensed, Port::A, 0);
+                    let last = self.cols / 2;
+                    self.mig_bot.set(last, false);
+                }
+            },
+        }
+    }
+
+    fn merge(row: &mut BitRow, sensed: &SensedRow) {
+        // row := (row & !driven) | (bits & driven) — word-level merge
+        let bits = sensed.bits.words();
+        let driven = sensed.driven.words();
+        for (k, w) in row.words_mut().iter_mut().enumerate() {
+            *w = (*w & !driven[k]) | (bits[k] & driven[k]);
+        }
+    }
+
+    /// RowClone-FPM / Ambit AAP: copy `src` into `dst` through the row
+    /// buffer. The source row is restored (non-destructive); `dst` cells on
+    /// driven bitlines are overwritten.
+    pub fn aap(&mut self, src: RowRef, dst: RowRef) {
+        let sensed = self.sense(src);
+        self.write_back(&sensed, dst);
+    }
+
+    /// Ambit triple-row activation: all three rows (and the row buffer)
+    /// resolve to the bitwise majority. Destructive on all three rows.
+    pub fn tra(&mut self, a: RowRef, b: RowRef, c: RowRef) -> BitRow {
+        let va = self.sense(a);
+        let vb = self.sense(b);
+        let vc = self.sense(c);
+        assert!(
+            va.driven_mask().count_ones() == self.cols
+                && vb.driven_mask().count_ones() == self.cols
+                && vc.driven_mask().count_ones() == self.cols,
+            "TRA operands must be full rows (not migration ports)"
+        );
+        let maj = BitRow::maj3(va.bits(), vb.bits(), vc.bits());
+        let full = SensedRow::full(maj.clone());
+        self.write_back(&full, a);
+        self.write_back(&full, b);
+        self.write_back(&full, c);
+        maj
+    }
+
+    /// Dual-row activation of a source row and a DCC row's comp wordline:
+    /// the SA latches the source value, the DCC stores its complement
+    /// (Ambit's NOT-load step).
+    pub fn dra_not_load(&mut self, src: RowRef, dcc: usize) {
+        let sensed = self.sense(src);
+        assert_eq!(sensed.driven_mask().count_ones(), self.cols);
+        self.write_back(&sensed, RowRef::DccComp(dcc));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{Rng, ShiftDir};
+
+    fn subarray_with(rows: usize, cols: usize, seed: u64) -> (Subarray, BitRow) {
+        let mut rng = Rng::new(seed);
+        let mut sa = Subarray::new(rows, cols);
+        let row = BitRow::random(cols, &mut rng);
+        sa.write_row(0, row.clone());
+        (sa, row)
+    }
+
+    #[test]
+    fn aap_copies_data_rows() {
+        let (mut sa, row) = subarray_with(8, 256, 1);
+        sa.aap(RowRef::Data(0), RowRef::Data(3));
+        assert_eq!(sa.read_row(3), &row);
+        assert_eq!(sa.read_row(0), &row, "source restored");
+    }
+
+    #[test]
+    fn control_rows_sense_constants() {
+        let sa = Subarray::new(4, 128);
+        assert_eq!(sa.sense(RowRef::Zero).bits().count_ones(), 0);
+        assert_eq!(sa.sense(RowRef::One).bits().count_ones(), 128);
+    }
+
+    #[test]
+    fn aap_from_control_rows_initializes() {
+        let (mut sa, _) = subarray_with(4, 128, 2);
+        sa.aap(RowRef::One, RowRef::Data(0));
+        assert_eq!(sa.read_row(0).count_ones(), 128);
+        sa.aap(RowRef::Zero, RowRef::Data(0));
+        assert_eq!(sa.read_row(0).count_ones(), 0);
+    }
+
+    #[test]
+    fn tra_majority() {
+        let mut rng = Rng::new(3);
+        let mut sa = Subarray::new(4, 192);
+        let (a, b, c) = (
+            BitRow::random(192, &mut rng),
+            BitRow::random(192, &mut rng),
+            BitRow::random(192, &mut rng),
+        );
+        sa.write_row(0, a.clone());
+        sa.write_row(1, b.clone());
+        sa.write_row(2, c.clone());
+        let maj = sa.tra(RowRef::Data(0), RowRef::Data(1), RowRef::Data(2));
+        assert_eq!(maj, BitRow::maj3(&a, &b, &c));
+        // destructive: all three rows now hold the majority
+        assert_eq!(sa.read_row(0), &maj);
+        assert_eq!(sa.read_row(1), &maj);
+        assert_eq!(sa.read_row(2), &maj);
+    }
+
+    #[test]
+    fn dcc_not_roundtrip() {
+        let (mut sa, row) = subarray_with(4, 256, 4);
+        // load complement into DCC 0, then copy comp phase out
+        sa.dra_not_load(RowRef::Data(0), 0);
+        sa.aap(RowRef::DccTrue(0), RowRef::Data(1));
+        assert_eq!(sa.read_row(1), &row.not());
+        // and the comp wordline presents the original back
+        sa.aap(RowRef::DccComp(0), RowRef::Data(2));
+        assert_eq!(sa.read_row(2), &row);
+    }
+
+    #[test]
+    fn migration_top_ports() {
+        let (mut sa, row) = subarray_with(4, 64, 5);
+        sa.aap(RowRef::Data(0), RowRef::MigTop(Port::A));
+        for i in 0..32 {
+            assert_eq!(sa.mig_top().get(i), row.get(2 * i), "top cell {i}");
+        }
+        // reading back through port B lands on odd bitlines
+        sa.aap(RowRef::Zero, RowRef::Data(1)); // clear dst
+        sa.aap(RowRef::MigTop(Port::B), RowRef::Data(1));
+        for col in 0..64 {
+            let want = if col % 2 == 1 { row.get(col - 1) } else { false };
+            assert_eq!(sa.read_row(1).get(col), want, "col {col}");
+        }
+    }
+
+    #[test]
+    fn migration_bot_edge_ties_load_zero() {
+        let (mut sa, row) = subarray_with(4, 64, 6);
+        sa.aap(RowRef::Data(0), RowRef::MigBot(Port::A));
+        assert!(!sa.mig_bot().get(0), "cell 0 loads 0 through the edge tie");
+        for i in 1..=32 {
+            assert_eq!(sa.mig_bot().get(i), row.get(2 * i - 1), "bot cell {i}");
+        }
+        // loading through port B zeroes the last cell instead
+        sa.aap(RowRef::Data(0), RowRef::MigBot(Port::B));
+        assert!(!sa.mig_bot().get(32), "last cell loads 0 through edge tie");
+        for i in 0..32 {
+            assert_eq!(sa.mig_bot().get(i), row.get(2 * i));
+        }
+    }
+
+    #[test]
+    fn four_aap_right_shift() {
+        let (mut sa, row) = subarray_with(8, 256, 7);
+        sa.aap(RowRef::Data(0), RowRef::MigTop(Port::A));
+        sa.aap(RowRef::Data(0), RowRef::MigBot(Port::A));
+        sa.aap(RowRef::MigTop(Port::B), RowRef::Data(1));
+        sa.aap(RowRef::MigBot(Port::B), RowRef::Data(1));
+        assert_eq!(sa.read_row(1), &row.shifted(ShiftDir::Right, false));
+    }
+
+    #[test]
+    fn four_aap_left_shift() {
+        let (mut sa, row) = subarray_with(8, 256, 8);
+        sa.aap(RowRef::Data(0), RowRef::MigTop(Port::B));
+        sa.aap(RowRef::Data(0), RowRef::MigBot(Port::B));
+        sa.aap(RowRef::MigTop(Port::A), RowRef::Data(1));
+        sa.aap(RowRef::MigBot(Port::A), RowRef::Data(1));
+        assert_eq!(sa.read_row(1), &row.shifted(ShiftDir::Left, false));
+    }
+
+    #[test]
+    fn shift_preserves_other_rows() {
+        // §4.2 "data preservation in surrounding cells"
+        let mut rng = Rng::new(9);
+        let mut sa = Subarray::new(8, 128);
+        let rows: Vec<BitRow> =
+            (0..8).map(|_| BitRow::random(128, &mut rng)).collect();
+        for (i, r) in rows.iter().enumerate() {
+            sa.write_row(i, r.clone());
+        }
+        sa.aap(RowRef::Data(2), RowRef::MigTop(Port::A));
+        sa.aap(RowRef::Data(2), RowRef::MigBot(Port::A));
+        sa.aap(RowRef::MigTop(Port::B), RowRef::Data(5));
+        sa.aap(RowRef::MigBot(Port::B), RowRef::Data(5));
+        for (i, r) in rows.iter().enumerate() {
+            if i != 5 {
+                assert_eq!(sa.read_row(i), r, "row {i} disturbed");
+            }
+        }
+        assert_eq!(sa.read_row(2), &rows[2], "source restored");
+    }
+
+    #[test]
+    fn one_migration_row_cannot_shift() {
+        // Figure 2: with only the top migration row, after loading evens
+        // through port A and writing back through port B, only odd columns
+        // are written — even columns of dst never receive data, so a full
+        // row shift is impossible in any number of top-row-only AAPs.
+        let (mut sa, row) = subarray_with(4, 64, 10);
+        sa.aap(RowRef::Zero, RowRef::Data(1));
+        sa.aap(RowRef::Data(0), RowRef::MigTop(Port::A));
+        sa.aap(RowRef::MigTop(Port::B), RowRef::Data(1));
+        let got = sa.read_row(1);
+        let want = row.shifted(ShiftDir::Right, false);
+        // odd columns match the shift, even columns are stuck at 0
+        let mut even_mismatch = 0;
+        for col in 0..64 {
+            if col % 2 == 1 {
+                assert_eq!(got.get(col), want.get(col));
+            } else if got.get(col) != want.get(col) {
+                even_mismatch += 1;
+            }
+        }
+        assert!(even_mismatch > 0, "random row should expose the gap");
+    }
+}

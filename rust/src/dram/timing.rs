@@ -1,0 +1,137 @@
+//! Command-level timing: JEDEC latencies per command and the refresh
+//! scheduler. This is the NVMain-substitute timing model that produces
+//! Table 3 (latency/throughput).
+//!
+//! The engine models a single bank's command stream as back-to-back
+//! closed-page operations (the PIM sequences always precharge), so each
+//! command consumes a well-defined window:
+//!
+//! * `ACT`            — tRCD (row open; a following PRE completes tRAS)
+//! * `PRE`            — tRP
+//! * `AAP`            — tRAS + t_aap_extra + tRP (Ambit's ACT-ACT-PRE)
+//! * `DRA`/`TRA`      — tRAS + tRP (simultaneous multi-row activation)
+//! * `READ`/`WRITE`   — tCAS + tBURST (column access on an open row)
+//! * `REFRESH`        — tRFC
+//!
+//! Refresh is injected by [`RefreshScheduler`] every tREFI of simulated
+//! time, exactly as a memory controller would.
+
+use crate::config::TimingConfig;
+use crate::dram::address::Command;
+
+/// Per-command latency model.
+#[derive(Clone, Debug)]
+pub struct CommandTimer {
+    t: TimingConfig,
+}
+
+impl CommandTimer {
+    pub fn new(t: TimingConfig) -> Self {
+        CommandTimer { t }
+    }
+
+    pub fn timing(&self) -> &TimingConfig {
+        &self.t
+    }
+
+    /// Window (ps) consumed by `cmd` in a closed-page back-to-back stream.
+    pub fn latency_ps(&self, cmd: &Command) -> u64 {
+        match cmd {
+            Command::Act { .. } => self.t.t_rcd,
+            Command::Pre => self.t.t_rp,
+            Command::Read { .. } | Command::Write { .. } => self.t.t_cas + self.t.t_burst,
+            Command::Aap { .. } => self.t.t_aap(),
+            Command::Dra { .. } | Command::Tra { .. } => self.t.t_ras + self.t.t_rp,
+            Command::Refresh => self.t.t_rfc,
+        }
+    }
+}
+
+/// Injects per-bank refresh every tREFI of simulated time.
+#[derive(Clone, Debug)]
+pub struct RefreshScheduler {
+    t_refi: u64,
+    next_due_ps: u64,
+    pub refreshes_issued: u64,
+}
+
+impl RefreshScheduler {
+    pub fn new(t_refi: u64) -> Self {
+        RefreshScheduler { t_refi, next_due_ps: t_refi, refreshes_issued: 0 }
+    }
+
+    /// How many refreshes are due at time `now_ps`; advances the schedule.
+    pub fn due(&mut self, now_ps: u64) -> u64 {
+        let mut n = 0;
+        while now_ps >= self.next_due_ps {
+            self.next_due_ps += self.t_refi;
+            self.refreshes_issued += 1;
+            n += 1;
+        }
+        n
+    }
+
+    pub fn next_due_ps(&self) -> u64 {
+        self.next_due_ps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DramConfig;
+    use crate::dram::address::RowRef;
+
+    fn timer() -> CommandTimer {
+        CommandTimer::new(DramConfig::ddr3_1333_4gb().timing)
+    }
+
+    #[test]
+    fn aap_latency() {
+        let t = timer();
+        let aap = Command::Aap { src: RowRef::Data(0), dst: RowRef::Data(1) };
+        assert_eq!(t.latency_ps(&aap), 52_500);
+    }
+
+    #[test]
+    fn shift_is_four_aaps_210ns() {
+        let t = timer();
+        let aap = Command::Aap { src: RowRef::Data(0), dst: RowRef::Data(1) };
+        assert_eq!(4 * t.latency_ps(&aap), 210_000); // ~208.7 ns in the paper
+    }
+
+    #[test]
+    fn act_pre_covers_trc() {
+        let t = timer();
+        let full = t.latency_ps(&Command::Act { row: RowRef::Data(0) })
+            + t.latency_ps(&Command::Pre);
+        // tRCD + tRP = 27 ns (closed-page row cycle floor)
+        assert_eq!(full, 27_000);
+    }
+
+    #[test]
+    fn refresh_schedule() {
+        let mut r = RefreshScheduler::new(1_000);
+        assert_eq!(r.due(999), 0);
+        assert_eq!(r.due(1_000), 1);
+        assert_eq!(r.due(1_000), 0, "not double-counted");
+        assert_eq!(r.due(3_500), 2);
+        assert_eq!(r.refreshes_issued, 3);
+    }
+
+    #[test]
+    fn refresh_events_match_paper_workloads() {
+        // Table 2: 1 shift -> 0 refreshes; the multi-shift workloads see
+        // floor(total_time / tREFI) refreshes
+        let cfg = DramConfig::ddr3_1333_4gb();
+        let shift_ps = 4 * cfg.timing.t_aap();
+        let mut r = RefreshScheduler::new(cfg.timing.t_refi);
+        assert_eq!(r.due(shift_ps), 0);
+        let mut r = RefreshScheduler::new(cfg.timing.t_refi);
+        assert_eq!(r.due(50 * shift_ps), 1);
+        let mut r = RefreshScheduler::new(cfg.timing.t_refi);
+        assert_eq!(r.due(100 * shift_ps), 2);
+        let mut r = RefreshScheduler::new(cfg.timing.t_refi);
+        assert!(r.due(512 * shift_ps) >= 13);
+    }
+}

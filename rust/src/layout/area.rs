@@ -1,0 +1,138 @@
+//! Area-overhead accounting — Table 5 and §5.3.
+//!
+//! Our design's overhead is computed from first principles on the
+//! subarray geometry (extra rows × wordline pitch, plus strap metal);
+//! the comparison rows (SIMDRAM, DRISA variants) carry the overheads
+//! those papers report, with their added-circuitry descriptions.
+
+use crate::config::GeometryConfig;
+use crate::layout::geometry::{LayoutRules, MigrationCellLayout};
+
+/// One row of Table 5.
+#[derive(Clone, Debug)]
+pub struct AreaRow {
+    pub design: &'static str,
+    pub added_circuitry: &'static str,
+    pub overhead_pct: f64,
+    /// the overhead the source paper states, for the printed table
+    pub reported: &'static str,
+}
+
+/// Our migration-cell design's overhead, from the subarray geometry.
+///
+/// A subarray of `rows` data rows gains 2 migration rows; each migration
+/// row needs 2 wordlines (one per port) instead of 1, so the array grows by
+/// 4 wordline pitches vertically. The strap metal routes over the cells and
+/// adds no plan area. Expressed against the data array:
+///
+///   overhead = 4 / rows            (≈ 0.78 % for 512-row subarrays)
+pub fn migration_overhead(g: &GeometryConfig) -> f64 {
+    4.0 / g.rows_per_subarray as f64
+}
+
+/// Overhead when stacked on Ambit (adds the B-group: 4 compute rows,
+/// 2 DCC rows with dual wordlines, 2 control rows ⇒ ~10 wordline pitches).
+pub fn migration_plus_ambit_overhead(g: &GeometryConfig) -> f64 {
+    migration_overhead(g) + 10.0 / g.rows_per_subarray as f64
+}
+
+/// Build Table 5.
+pub fn table5(g: &GeometryConfig) -> Vec<AreaRow> {
+    let ours = migration_overhead(g) * 100.0;
+    vec![
+        AreaRow {
+            design: "w/ Migration Cells (ours)",
+            added_circuitry: "Wiring",
+            overhead_pct: ours,
+            reported: "<1% (without Ambit)",
+        },
+        AreaRow {
+            design: "SIMDRAM",
+            added_circuitry: "Control unit + Transposition unit",
+            overhead_pct: 0.2,
+            reported: "0.2% (vs Intel Xeon CPU)",
+        },
+        AreaRow {
+            design: "DRISA 3T1C",
+            added_circuitry: "Shifters, controllers, bus, buffers",
+            overhead_pct: 6.8,
+            reported: "~6.8% (vs 8Gb DRAM)",
+        },
+        AreaRow {
+            design: "DRISA 1T1C-nor",
+            added_circuitry: "NOR gates + latches + shifters",
+            overhead_pct: 34.0,
+            reported: "~34% added circuits",
+        },
+        AreaRow {
+            design: "DRISA 1T1C-mixed",
+            added_circuitry: "Mixed logic gates + shifters",
+            overhead_pct: 40.0,
+            reported: "~40% added circuits",
+        },
+        AreaRow {
+            design: "DRISA 1T1C-adder",
+            added_circuitry: "Adders + shifters",
+            overhead_pct: 60.0,
+            reported: "~60% added circuits",
+        },
+    ]
+}
+
+/// Strap-metal overhead as a fraction of subarray metal area — a second,
+/// independent estimate showing the wiring itself is negligible.
+pub fn strap_metal_fraction(g: &GeometryConfig, rules: &LayoutRules) -> f64 {
+    let layout = MigrationCellLayout::new(rules.clone(), 25e-15);
+    // straps: one per migration cell; cells: rows × cols standard cells
+    let n_mig_cells = (g.cols_per_row / 2) + (g.cols_per_row / 2 + 1);
+    let strap_total = layout.strap_area() * n_mig_cells as f64;
+    let array_area =
+        layout.rules.cell_area() * (g.rows_per_subarray * g.cols_per_row) as f64;
+    strap_total / array_area
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DramConfig;
+
+    fn g() -> GeometryConfig {
+        DramConfig::ddr3_1333_4gb().geometry
+    }
+
+    #[test]
+    fn our_overhead_below_one_percent() {
+        // §5.3.1: "<1% area overhead"
+        let o = migration_overhead(&g());
+        assert!(o < 0.01, "overhead {o}");
+        assert!(o > 0.001, "should not be trivially zero");
+    }
+
+    #[test]
+    fn with_ambit_near_two_percent() {
+        // §5.3.1: "+~1% when implemented on top of Ambit" → 1–3 % total
+        let o = migration_plus_ambit_overhead(&g());
+        assert!((0.01..0.03).contains(&o), "overhead {o}");
+    }
+
+    #[test]
+    fn table5_ordering_matches_paper() {
+        let rows = table5(&g());
+        assert_eq!(rows.len(), 6);
+        // ours is the smallest DRAM-die overhead of the shift-capable designs
+        let ours = rows[0].overhead_pct;
+        for r in &rows[2..] {
+            assert!(ours < r.overhead_pct, "{} should exceed ours", r.design);
+        }
+        // DRISA ladder: 3T1C < nor < mixed < adder
+        assert!(rows[2].overhead_pct < rows[3].overhead_pct);
+        assert!(rows[3].overhead_pct < rows[4].overhead_pct);
+        assert!(rows[4].overhead_pct < rows[5].overhead_pct);
+    }
+
+    #[test]
+    fn strap_metal_negligible() {
+        let f = strap_metal_fraction(&g(), &LayoutRules::n22());
+        assert!(f < 0.002, "strap fraction {f}");
+    }
+}

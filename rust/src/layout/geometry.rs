@@ -1,0 +1,231 @@
+//! Parametric layout geometry (the Virtuoso substitute) — paper §6, Fig. 4.
+//!
+//! A migration cell is two standard 6F² 1T1C cells whose storage-node top
+//! plates are joined by one wire; there is no other structural change
+//! (paper §5.3.1). This module computes the physical dimensions the
+//! paper's 22 nm layout reports: cell footprint, wordline/bitline pitches
+//! (Auth et al. 22 nm rules), and MIM capacitor plate sizing from
+//! C = ε₀·ε_r·A/d with an HfO₂ dielectric.
+
+/// Physical constants.
+pub const EPS0_F_PER_M: f64 = 8.8854e-12;
+/// HfO₂ relative permittivity (paper cites ε_r = 20).
+pub const HFO2_EPS_R: f64 = 20.0;
+
+/// Technology-specific layout rules.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayoutRules {
+    pub name: &'static str,
+    /// feature size F, m
+    pub feature: f64,
+    /// wordline pitch (metal 1), m
+    pub wl_pitch: f64,
+    /// bitline pitch (metal 2), m
+    pub bl_pitch: f64,
+    /// min metal width / spacing, m
+    pub min_metal_w: f64,
+    pub min_metal_s: f64,
+    /// via enclosure, m
+    pub via_enclosure: f64,
+    /// MIM dielectric thickness, m (HfO₂, 6–10 nm per Mondon & Blonkowski)
+    pub mim_dielectric_t: f64,
+}
+
+impl LayoutRules {
+    /// 22 nm rules (Auth et al. 2012): 90 nm gate pitch class metallization,
+    /// DRAM array pitches 2F (BL) × 3F (WL) for a 6F² cell.
+    pub fn n22() -> Self {
+        let f = 22e-9;
+        LayoutRules {
+            name: "22nm",
+            feature: f,
+            wl_pitch: 3.0 * f,
+            bl_pitch: 2.0 * f,
+            min_metal_w: f,
+            min_metal_s: f,
+            via_enclosure: 5e-9,
+            mim_dielectric_t: 8e-9,
+        }
+    }
+
+    /// 6F² cell footprint (m²): 2F × 3F.
+    pub fn cell_area(&self) -> f64 {
+        (2.0 * self.feature) * (3.0 * self.feature)
+    }
+
+    /// Access-transistor plan dimensions (paper §6: W = 0.044 µm,
+    /// L = 0.022 µm at 22 nm).
+    pub fn access_wl(&self) -> (f64, f64) {
+        (2.0 * self.feature, self.feature)
+    }
+}
+
+/// MIM storage-capacitor geometry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MimCap {
+    pub capacitance: f64,
+    pub dielectric_t: f64,
+    pub eps_r: f64,
+    /// computed plate area, m²
+    pub plate_area: f64,
+    /// square plate side, m
+    pub plate_side: f64,
+}
+
+impl MimCap {
+    /// Size a square MIM plate for `capacitance` with the given dielectric.
+    pub fn size(capacitance: f64, dielectric_t: f64, eps_r: f64) -> Self {
+        let plate_area = capacitance * dielectric_t / (EPS0_F_PER_M * eps_r);
+        MimCap {
+            capacitance,
+            dielectric_t,
+            eps_r,
+            plate_area,
+            plate_side: plate_area.sqrt(),
+        }
+    }
+
+    /// The paper's §6 case: 25 fF target at 22 nm with 8 nm HfO₂.
+    pub fn paper_22nm() -> Self {
+        Self::size(25e-15, 8e-9, HFO2_EPS_R)
+    }
+}
+
+/// The migration-cell layout: two standard cells + the top-plate strap.
+#[derive(Clone, Debug)]
+pub struct MigrationCellLayout {
+    pub rules: LayoutRules,
+    pub mim: MimCap,
+    /// strap length joining the two top plates: one bitline pitch, m
+    pub strap_len: f64,
+    /// strap width: minimum metal width, m
+    pub strap_w: f64,
+}
+
+impl MigrationCellLayout {
+    pub fn new(rules: LayoutRules, cell_cap: f64) -> Self {
+        let mim = MimCap::size(cell_cap, rules.mim_dielectric_t, HFO2_EPS_R);
+        let strap_len = rules.bl_pitch;
+        let strap_w = rules.min_metal_w;
+        MigrationCellLayout { rules, mim, strap_len, strap_w }
+    }
+
+    /// Footprint of one migration cell (two 6F² cells side by side; the
+    /// strap routes over the cells in metal and adds no plan area).
+    pub fn footprint(&self) -> f64 {
+        2.0 * self.rules.cell_area()
+    }
+
+    /// Added wiring area per migration cell (the strap metal itself).
+    pub fn strap_area(&self) -> f64 {
+        self.strap_len * self.strap_w
+    }
+}
+
+/// DRC-style checks on a migration-cell layout.
+#[derive(Clone, Debug, Default)]
+pub struct DrcReport {
+    pub violations: Vec<String>,
+}
+
+impl DrcReport {
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Run the rule checks the paper lists (§4.3): min width/spacing, pitch
+/// constraints, via enclosure, and MIM plate fit within the cell stack.
+pub fn check_drc(l: &MigrationCellLayout) -> DrcReport {
+    let mut r = DrcReport::default();
+    let rules = &l.rules;
+    if l.strap_w < rules.min_metal_w {
+        r.violations.push(format!(
+            "strap width {:.1} nm below min metal width {:.1} nm",
+            l.strap_w * 1e9,
+            rules.min_metal_w * 1e9
+        ));
+    }
+    if rules.bl_pitch - l.strap_w < rules.min_metal_s {
+        r.violations.push("strap leaves insufficient metal spacing".into());
+    }
+    if rules.wl_pitch < 2.0 * rules.min_metal_w {
+        r.violations.push("wordline pitch below 2× min width".into());
+    }
+    // the MIM plate sits in the capacitor stack above the array; its side
+    // must not exceed the subarray's cell-block granularity (the stacked
+    // capacitor footprint is shared across the 2F×3F grid in COB DRAM —
+    // a plate wider than ~64 cells would break array tiling)
+    let max_side = 64.0 * rules.bl_pitch;
+    if l.mim.plate_side > max_side {
+        r.violations.push(format!(
+            "MIM plate side {:.0} nm exceeds tiling limit {:.0} nm",
+            l.mim.plate_side * 1e9,
+            max_side * 1e9
+        ));
+    }
+    if l.mim.dielectric_t < 6e-9 || l.mim.dielectric_t > 10e-9 {
+        r.violations.push("HfO₂ thickness outside the 6–10 nm window".into());
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mim_cap_matches_paper_section6() {
+        // paper: A = 1.129e6 nm², side ≈ 1063 nm for 25 fF / HfO₂
+        let m = MimCap::paper_22nm();
+        let area_nm2 = m.plate_area * 1e18;
+        assert!(
+            (area_nm2 - 1.129e6).abs() / 1.129e6 < 0.005,
+            "area {area_nm2} nm²"
+        );
+        let side_nm = m.plate_side * 1e9;
+        assert!((side_nm - 1063.0).abs() < 5.0, "side {side_nm} nm");
+    }
+
+    #[test]
+    fn cap_formula_inverts() {
+        let m = MimCap::size(25e-15, 8e-9, 20.0);
+        let c = EPS0_F_PER_M * m.eps_r * m.plate_area / m.dielectric_t;
+        assert!((c - 25e-15).abs() < 1e-18);
+    }
+
+    #[test]
+    fn cell_dimensions_22nm() {
+        let r = LayoutRules::n22();
+        let (w, l) = r.access_wl();
+        assert!((w - 44e-9).abs() < 1e-12); // paper: 0.044 µm
+        assert!((l - 22e-9).abs() < 1e-12); // paper: 0.022 µm
+        assert!((r.cell_area() - 6.0 * 22e-9 * 22e-9).abs() < 1e-24);
+    }
+
+    #[test]
+    fn migration_cell_drc_clean() {
+        let l = MigrationCellLayout::new(LayoutRules::n22(), 25e-15);
+        let drc = check_drc(&l);
+        assert!(drc.clean(), "{:?}", drc.violations);
+    }
+
+    #[test]
+    fn drc_catches_violations() {
+        let mut l = MigrationCellLayout::new(LayoutRules::n22(), 25e-15);
+        l.strap_w = 5e-9; // below min width
+        assert!(!check_drc(&l).clean());
+
+        let mut l = MigrationCellLayout::new(LayoutRules::n22(), 25e-15);
+        l.mim.dielectric_t = 3e-9;
+        assert!(!check_drc(&l).clean());
+    }
+
+    #[test]
+    fn migration_cell_is_two_standard_cells() {
+        let l = MigrationCellLayout::new(LayoutRules::n22(), 25e-15);
+        assert!((l.footprint() - 2.0 * l.rules.cell_area()).abs() < 1e-24);
+        // the strap is tiny relative to the cells it joins
+        assert!(l.strap_area() < 0.4 * l.rules.cell_area());
+    }
+}

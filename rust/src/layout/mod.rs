@@ -1,0 +1,8 @@
+//! Physical-layout layer (the Virtuoso substitute): §6 geometry + MIM-cap
+//! sizing + DRC-style rule checks, and the Table 5 area-overhead model.
+
+pub mod area;
+pub mod geometry;
+
+pub use area::{migration_overhead, migration_plus_ambit_overhead, table5, AreaRow};
+pub use geometry::{check_drc, DrcReport, LayoutRules, MigrationCellLayout, MimCap};

@@ -1,0 +1,44 @@
+//! # shiftdram — migration-cell in-DRAM bit-shifting
+//!
+//! Reproduction of **"Shifting in-DRAM"** (Tegge & Jones, CS.AR 2026): a
+//! DRAM subarray design that performs bidirectional full-row bit-shifting on
+//! horizontally-stored data using *migration cells* (two-port 1T1C cells
+//! straddling adjacent bitlines) placed as one row at the top and one at the
+//! bottom of every subarray. A 1-bit full-row shift is a sequence of 4 AAP
+//! (ACT-ACT-PRE) commands.
+//!
+//! The crate is the L3 coordinator of a three-layer stack:
+//!
+//! * [`dram`] — the DRAM substrate: open-bitline subarrays, JEDEC DDR3
+//!   timing state machine, IDD-based energy model, refresh.
+//! * [`pim`] — bit-accurate PIM primitives: RowClone/AAP, Ambit DRA/TRA
+//!   (MAJ/AND/OR), dual-contact-cell NOT, and the paper's migration-cell
+//!   shift, plus a program builder.
+//! * [`sim`] — the command-level engine that executes PIM programs against
+//!   the timing + energy model (the NVMain substitute; Tables 2–3).
+//! * [`circuit`] — the LTSPICE substitute: technology-node parameters
+//!   (Table 1), a native transient oracle, and the Monte-Carlo harness that
+//!   drives the AOT-compiled JAX/Pallas kernel through PJRT (Table 4).
+//! * [`layout`] — the Virtuoso substitute: 22 nm geometry, MIM-cap sizing,
+//!   DRC-style checks, and area-overhead accounting (Table 5, Fig. 4).
+//! * [`baselines`] — SIMDRAM / DRISA / Ambit / CPU-data-movement cost
+//!   models (§5.1.5, §5.1.6).
+//! * [`coordinator`] — bank-parallel request router/batcher/scheduler and
+//!   the async serving loop (§5.1.4).
+//! * [`apps`] — application kernels compiled to PIM programs: adders,
+//!   shift-and-add multiplication, GF(2⁸), AES steps, Reed-Solomon.
+//! * [`runtime`] — the PJRT bridge (`xla` crate) that loads and executes
+//!   `artifacts/*.hlo.txt`; Python never runs on the request path.
+
+pub mod apps;
+pub mod baselines;
+pub mod circuit;
+pub mod config;
+pub mod coordinator;
+pub mod dram;
+pub mod layout;
+pub mod pim;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;

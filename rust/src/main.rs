@@ -1,0 +1,238 @@
+//! `shiftdram` CLI — the leader entrypoint.
+//!
+//! Subcommands (hand-rolled parser; clap is unavailable offline):
+//!
+//! ```text
+//! shiftdram report [table1|table2|table3|table4|table5|fig2|fig4|validate|baselines|all] [--full]
+//! shiftdram workload --shifts N [--seed S]
+//! shiftdram mc [--trials N] [--backend pjrt|native] [--node 22nm]
+//! shiftdram serve --banks N --ops K [--batch B]
+//! shiftdram demo [gf|aes|rs|mul|adder]
+//! ```
+
+use shiftdram::circuit::montecarlo::{Backend, MonteCarlo};
+use shiftdram::circuit::params::TechNode;
+use shiftdram::config::{DramConfig, McConfig};
+use shiftdram::coordinator::{Placement, PimRequest, PimSystem};
+use shiftdram::report;
+use shiftdram::runtime::Runtime;
+use shiftdram::sim::run_shift_workload;
+use shiftdram::util::ShiftDir;
+
+fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn opt(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn opt_usize(args: &[String], name: &str, default: usize) -> usize {
+    opt(args, name).and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cfg = DramConfig::ddr3_1333_4gb();
+    match args.first().map(String::as_str) {
+        Some("report") => {
+            let full = flag(&args, "--full");
+            match args.get(1).map(String::as_str) {
+                Some("table1") => report::table1(),
+                Some("table2") | Some("table3") => report::table2_and_3(&cfg, 42),
+                Some("table4") => {
+                    let mc_cfg = if full { McConfig::paper() } else { McConfig::quick() };
+                    let mc = MonteCarlo::new(mc_cfg, TechNode::n22());
+                    run_table4(&mc, &args);
+                }
+                Some("table5") => report::table5(&cfg),
+                Some("fig2") | Some("fig3") => report::fig2_fig3(),
+                Some("fig4") => report::fig4(),
+                Some("validate") => report::validation_matrix(),
+                Some("baselines") => report::baseline_comparison(&cfg),
+                _ => report::all(full),
+            }
+        }
+        Some("workload") => {
+            let n = opt_usize(&args, "--shifts", 1);
+            let seed = opt_usize(&args, "--seed", 42) as u64;
+            let r = run_shift_workload(&cfg, n, ShiftDir::Right, seed);
+            println!(
+                "{} shifts: {:.3} us, {:.3} nJ total ({:.3} nJ/shift, {:.1} ns/shift, \
+                 {} refreshes, verified={})",
+                r.shifts,
+                r.total_time_us(),
+                r.total_energy_nj(),
+                r.energy_per_shift_nj(),
+                r.latency_per_shift_ns(),
+                r.refreshes,
+                r.verified
+            );
+        }
+        Some("mc") => {
+            let mut mc_cfg = McConfig::paper();
+            mc_cfg.trials = opt_usize(&args, "--trials", mc_cfg.trials);
+            let node = TechNode::by_name(
+                &opt(&args, "--node").unwrap_or_else(|| "22nm".into()),
+            )
+            .expect("unknown tech node");
+            let mc = MonteCarlo::new(mc_cfg, node);
+            run_table4(&mc, &args);
+        }
+        Some("serve") => {
+            let banks = opt_usize(&args, "--banks", 8);
+            let ops = opt_usize(&args, "--ops", 1024);
+            let batch = opt_usize(&args, "--batch", 16);
+            let sys = PimSystem::start(&cfg, banks, Placement::RoundRobin, batch);
+            for _ in 0..ops {
+                sys.submit(
+                    PimRequest::Shift { subarray: 0, row: 0, n: 1, dir: ShiftDir::Right },
+                    None,
+                );
+            }
+            let r = sys.shutdown();
+            println!(
+                "{} banks, {} shifts: makespan {:.3} us, {:.2} MOps/s aggregate, \
+                 {:.1} nJ total ({} AAPs)",
+                r.banks,
+                r.total_ops,
+                r.makespan_ps as f64 / 1e6,
+                r.throughput_mops,
+                r.total_energy_pj / 1e3,
+                r.total_aaps
+            );
+        }
+        Some("demo") => demo(args.get(1).map(String::as_str).unwrap_or("gf")),
+        _ => {
+            eprintln!(
+                "usage: shiftdram <report|workload|mc|serve|demo> [options]\n\
+                 see rust/src/main.rs header for the full grammar"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn run_table4(mc: &MonteCarlo, args: &[String]) {
+    let backend = opt(args, "--backend").unwrap_or_else(|| "native".into());
+    if backend == "pjrt" {
+        match Runtime::with_artifacts() {
+            Ok((rt, manifest)) => {
+                report::table4(mc, &Backend::Pjrt(&rt, &manifest));
+            }
+            Err(e) => {
+                eprintln!("PJRT backend unavailable ({e:#}); falling back to native");
+                report::table4(mc, &Backend::Native);
+            }
+        }
+    } else {
+        report::table4(mc, &Backend::Native);
+    }
+}
+
+fn demo(which: &str) {
+    use shiftdram::apps::adder::{install_masks, kogge_stone_add, ripple_add};
+    use shiftdram::apps::elements::ElementCtx;
+    use shiftdram::apps::gf::{gf_mul, install_gf_masks};
+    use shiftdram::apps::multiplier::{install_mul_masks, shift_and_add_mul};
+    use shiftdram::apps::reed_solomon::RsEncoder;
+    use shiftdram::util::Rng;
+
+    let mut rng = Rng::new(7);
+    match which {
+        "gf" => {
+            let mut ctx = ElementCtx::new(40, 512, 8);
+            install_gf_masks(&mut ctx);
+            let n = ctx.n_elements();
+            let a: Vec<u64> = (0..n).map(|_| rng.below(256) as u64).collect();
+            let b: Vec<u64> = (0..n).map(|_| rng.below(256) as u64).collect();
+            ctx.set_row(0, ctx.pack(&a));
+            ctx.set_row(1, ctx.pack(&b));
+            gf_mul(&mut ctx, 0, 1, 2);
+            println!(
+                "GF(2^8) vector multiply of {n} byte pairs: {} AAPs, {} TRAs \
+                 (first: {:02x} * {:02x} = {:02x})",
+                ctx.aaps,
+                ctx.tras,
+                a[0],
+                b[0],
+                ctx.unpack(ctx.row(2))[0]
+            );
+        }
+        "adder" => {
+            for (name, f) in [
+                ("ripple", ripple_add as fn(&mut ElementCtx, usize, usize, usize)),
+                ("kogge-stone", kogge_stone_add),
+            ] {
+                let mut ctx = ElementCtx::new(40, 512, 16);
+                install_masks(&mut ctx);
+                let n = ctx.n_elements();
+                let a: Vec<u64> = (0..n).map(|_| rng.below(65536) as u64).collect();
+                let b: Vec<u64> = (0..n).map(|_| rng.below(65536) as u64).collect();
+                ctx.set_row(0, ctx.pack(&a));
+                ctx.set_row(1, ctx.pack(&b));
+                f(&mut ctx, 0, 1, 2);
+                println!(
+                    "{name} 16-bit add x{n}: {} AAPs ({} + {} = {})",
+                    ctx.aaps,
+                    a[0],
+                    b[0],
+                    ctx.unpack(ctx.row(2))[0]
+                );
+            }
+        }
+        "mul" => {
+            let mut ctx = ElementCtx::new(48, 512, 8);
+            install_masks(&mut ctx);
+            install_mul_masks(&mut ctx);
+            let n = ctx.n_elements();
+            let a: Vec<u64> = (0..n).map(|_| rng.below(256) as u64).collect();
+            let b: Vec<u64> = (0..n).map(|_| rng.below(256) as u64).collect();
+            ctx.set_row(0, ctx.pack(&a));
+            ctx.set_row(1, ctx.pack(&b));
+            shift_and_add_mul(&mut ctx, 0, 1, 2);
+            println!(
+                "shift-and-add 8-bit multiply x{n}: {} AAPs ({} * {} = {} mod 256)",
+                ctx.aaps,
+                a[0],
+                b[0],
+                ctx.unpack(ctx.row(2))[0]
+            );
+        }
+        "rs" => {
+            let enc = RsEncoder::new(11, 4);
+            let mut ctx = ElementCtx::new(96, 512, 8);
+            enc.install(&mut ctx);
+            let n = ctx.n_elements();
+            let msgs: Vec<Vec<u8>> = (0..n)
+                .map(|_| (0..11).map(|_| rng.below(256) as u8).collect())
+                .collect();
+            enc.load_messages(&mut ctx, &msgs);
+            enc.encode(&mut ctx);
+            println!(
+                "RS(15,11) batch encode of {n} codewords: {} AAPs, parity[0] = {:02x?}",
+                ctx.aaps,
+                enc.read_parity(&ctx)[0]
+            );
+        }
+        "aes" => {
+            use shiftdram::apps::aes::{install_aes, mix_columns, STATE_BASE};
+            let mut ctx = ElementCtx::new(96, 512, 8);
+            install_aes(&mut ctx);
+            let n = ctx.n_elements();
+            for r in 0..16 {
+                let vals: Vec<u64> = (0..n).map(|_| rng.below(256) as u64).collect();
+                ctx.set_row(STATE_BASE + r, ctx.pack(&vals));
+            }
+            mix_columns(&mut ctx);
+            println!(
+                "AES MixColumns over {n} blocks: {} AAPs, {} TRAs",
+                ctx.aaps, ctx.tras
+            );
+        }
+        other => {
+            eprintln!("unknown demo {other}; try gf|aes|rs|mul|adder");
+            std::process::exit(2);
+        }
+    }
+}

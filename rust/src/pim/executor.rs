@@ -1,0 +1,205 @@
+//! Functional executor: applies micro command streams to a [`Subarray`].
+//!
+//! This is the *semantic* half of the NVMain substitute — the [`crate::sim`]
+//! engine owns timing/energy; this executor owns what the bits do. The two
+//! are driven from the same command stream, so every latency/energy number
+//! in Tables 2–3 corresponds to a bit-exact state change verified here.
+
+use crate::dram::address::{Command, RowRef};
+use crate::dram::subarray::Subarray;
+
+/// Apply one command's functional semantics.
+///
+/// `Act`/`Pre`/`Read`/`Write`/`Refresh` have no bit-level effect in this
+/// model (reads/writes are modelled at row granularity via
+/// [`Subarray::read_row`]/[`Subarray::write_row`]).
+pub fn apply(sa: &mut Subarray, cmd: &Command) {
+    match *cmd {
+        Command::Aap { src, dst } => sa.aap(src, dst),
+        Command::Tra { a, b, c } => {
+            sa.tra(a, b, c);
+        }
+        Command::Dra { a, b } => match (a, b) {
+            // the only DRA pattern our ISA emits: NOT-load into a DCC
+            (src, RowRef::DccComp(d)) => sa.dra_not_load(src, d),
+            _ => panic!("unsupported DRA pattern: {a:?}, {b:?}"),
+        },
+        Command::Act { .. }
+        | Command::Pre
+        | Command::Read { .. }
+        | Command::Write { .. }
+        | Command::Refresh => {}
+    }
+}
+
+/// Apply a whole program.
+pub fn run(sa: &mut Subarray, cmds: &[Command]) {
+    for c in cmds {
+        apply(sa, c);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::isa::PimOp;
+    use crate::util::proptest::{check, prop_assert_eq};
+    use crate::util::{BitRow, Rng, ShiftDir};
+
+    fn fresh(rows: usize, cols: usize) -> Subarray {
+        Subarray::new(rows, cols)
+    }
+
+    fn load(sa: &mut Subarray, row: usize, bits: &BitRow) {
+        sa.write_row(row, bits.clone());
+    }
+
+    #[test]
+    fn copy_op() {
+        let mut rng = Rng::new(1);
+        let mut sa = fresh(8, 256);
+        let a = BitRow::random(256, &mut rng);
+        load(&mut sa, 0, &a);
+        run(&mut sa, &PimOp::Copy { src: 0, dst: 7 }.lower());
+        assert_eq!(sa.read_row(7), &a);
+    }
+
+    #[test]
+    fn logic_ops_bit_exact() {
+        check(64, |rng| {
+            let cols = 2 * (rng.below(500) + 8);
+            let mut sa = fresh(8, cols);
+            let a = BitRow::random(cols, rng);
+            let b = BitRow::random(cols, rng);
+            let c = BitRow::random(cols, rng);
+            load(&mut sa, 0, &a);
+            load(&mut sa, 1, &b);
+            load(&mut sa, 2, &c);
+
+            run(&mut sa, &PimOp::And { a: 0, b: 1, dst: 3 }.lower());
+            prop_assert_eq(sa.read_row(3).clone(), a.and(&b), "AND")?;
+            run(&mut sa, &PimOp::Or { a: 0, b: 1, dst: 4 }.lower());
+            prop_assert_eq(sa.read_row(4).clone(), a.or(&b), "OR")?;
+            run(&mut sa, &PimOp::Not { src: 0, dst: 5 }.lower());
+            prop_assert_eq(sa.read_row(5).clone(), a.not(), "NOT")?;
+            run(&mut sa, &PimOp::Xor { a: 0, b: 1, dst: 6 }.lower());
+            prop_assert_eq(sa.read_row(6).clone(), a.xor(&b), "XOR")?;
+            run(&mut sa, &PimOp::Maj { a: 0, b: 1, c: 2, dst: 7 }.lower());
+            prop_assert_eq(sa.read_row(7).clone(), BitRow::maj3(&a, &b, &c), "MAJ")?;
+            // operands must survive (lowered ops work on scratch copies)
+            prop_assert_eq(sa.read_row(0).clone(), a, "a preserved")?;
+            prop_assert_eq(sa.read_row(1).clone(), b, "b preserved")
+        });
+    }
+
+    #[test]
+    fn shift_ops_match_semantic_shift() {
+        check(64, |rng| {
+            let cols = 2 * (rng.below(800) + 4);
+            let mut sa = fresh(8, cols);
+            let a = BitRow::random(cols, rng);
+            load(&mut sa, 0, &a);
+            run(&mut sa, &PimOp::ShiftRight { src: 0, dst: 1 }.lower());
+            prop_assert_eq(
+                sa.read_row(1).clone(),
+                a.shifted(ShiftDir::Right, false),
+                "right",
+            )?;
+            run(&mut sa, &PimOp::ShiftLeft { src: 0, dst: 2 }.lower());
+            prop_assert_eq(
+                sa.read_row(2).clone(),
+                a.shifted(ShiftDir::Left, false),
+                "left",
+            )?;
+            prop_assert_eq(sa.read_row(0).clone(), a, "src preserved")
+        });
+    }
+
+    #[test]
+    fn shift_by_n_matches_word_shift() {
+        check(32, |rng| {
+            let cols = 2 * (rng.below(300) + 40);
+            let n = rng.below(70);
+            let dir = if rng.bool() { ShiftDir::Right } else { ShiftDir::Left };
+            let mut sa = fresh(8, cols);
+            let a = BitRow::random(cols, rng);
+            load(&mut sa, 0, &a);
+            run(&mut sa, &PimOp::ShiftBy { src: 0, dst: 1, n, dir }.lower());
+            prop_assert_eq(
+                sa.read_row(1).clone(),
+                a.shifted_by(dir, n, false),
+                &format!("shift by {n} {dir:?}"),
+            )
+        });
+    }
+
+    #[test]
+    fn in_place_shift() {
+        let mut rng = Rng::new(42);
+        let mut sa = fresh(4, 512);
+        let a = BitRow::random(512, &mut rng);
+        load(&mut sa, 0, &a);
+        run(&mut sa, &super::super::isa::shift_commands(
+            RowRef::Data(0),
+            RowRef::Data(0),
+            ShiftDir::Right,
+        ));
+        assert_eq!(sa.read_row(0), &a.shifted(ShiftDir::Right, false));
+    }
+
+    #[test]
+    fn right_then_left_loses_only_boundary() {
+        check(32, |rng| {
+            let cols = 2 * (rng.below(500) + 8);
+            let mut sa = fresh(8, cols);
+            let a = BitRow::random(cols, rng);
+            load(&mut sa, 0, &a);
+            run(&mut sa, &PimOp::ShiftRight { src: 0, dst: 1 }.lower());
+            run(&mut sa, &PimOp::ShiftLeft { src: 1, dst: 2 }.lower());
+            let got = sa.read_row(2);
+            for i in 0..cols - 1 {
+                if got.get(i) != a.get(i) {
+                    return Err(format!("interior col {i} corrupted"));
+                }
+            }
+            prop_assert_eq(got.get(cols - 1), false, "boundary zero-filled")
+        });
+    }
+
+    #[test]
+    fn data_patterns_from_paper() {
+        // §4.2: all zeros, all ones, alternating, random
+        let cols = 1024;
+        let patterns: Vec<BitRow> = vec![
+            BitRow::zeros(cols),
+            BitRow::ones(cols),
+            {
+                let mut r = BitRow::zeros(cols);
+                for i in (0..cols).step_by(2) {
+                    r.set(i, true);
+                }
+                r
+            },
+            BitRow::random(cols, &mut Rng::new(99)),
+        ];
+        for (k, p) in patterns.iter().enumerate() {
+            for dir in [ShiftDir::Right, ShiftDir::Left] {
+                let mut sa = fresh(4, cols);
+                load(&mut sa, 0, p);
+                run(&mut sa, &PimOp::ShiftBy { src: 0, dst: 1, n: 1, dir }.lower());
+                assert_eq!(
+                    sa.read_row(1),
+                    &p.shifted(dir, false),
+                    "pattern {k} {dir:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported DRA")]
+    fn bad_dra_pattern_rejected() {
+        let mut sa = fresh(4, 64);
+        apply(&mut sa, &Command::Dra { a: RowRef::Data(0), b: RowRef::Data(1) });
+    }
+}

@@ -1,0 +1,202 @@
+//! The PIM macro-op ISA and its lowering to DRAM command sequences.
+//!
+//! Macro-ops operate on *data row indices* within one subarray and lower to
+//! the micro command vocabulary of [`crate::dram::address::Command`]
+//! (AAP / DRA / TRA), exactly as SIMDRAM's bbop layer or Ambit's bulk
+//! operations would be issued by the memory controller.
+//!
+//! Scratch resources used by the lowering (never visible to callers):
+//! Ambit compute rows T0–T3, control rows C0/C1, and dual-contact cells
+//! DCC0/DCC1. The paper's migration rows implement [`PimOp::ShiftRight`] /
+//! [`PimOp::ShiftLeft`] in exactly 4 AAPs (§3.3).
+
+use crate::dram::address::{Command, Port, RowRef};
+use crate::util::ShiftDir;
+
+/// One PIM macro-operation on data rows of a subarray.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PimOp {
+    /// dst := src (RowClone, 1 AAP)
+    Copy { src: usize, dst: usize },
+    /// dst := 0 (1 AAP from C0)
+    SetZero { dst: usize },
+    /// dst := 1s (1 AAP from C1)
+    SetOnes { dst: usize },
+    /// dst := !src (DCC NOT: 1 DRA + 1 AAP)
+    Not { src: usize, dst: usize },
+    /// dst := a & b (Ambit TRA with C0)
+    And { a: usize, b: usize, dst: usize },
+    /// dst := a | b (Ambit TRA with C1)
+    Or { a: usize, b: usize, dst: usize },
+    /// dst := MAJ(a, b, c) (native TRA)
+    Maj { a: usize, b: usize, c: usize, dst: usize },
+    /// dst := a ^ b (composite Ambit program)
+    Xor { a: usize, b: usize, dst: usize },
+    /// dst := src shifted one column toward higher indices, 0 fill
+    /// (the paper's 4-AAP migration-cell procedure)
+    ShiftRight { src: usize, dst: usize },
+    /// dst := src shifted one column toward lower indices, 0 fill
+    ShiftLeft { src: usize, dst: usize },
+    /// dst := src shifted by `n` columns (n repetitions of the 1-bit
+    /// shift; the first lands in dst, the rest are in-place on dst)
+    ShiftBy { src: usize, dst: usize, n: usize, dir: ShiftDir },
+}
+
+/// The 4-AAP migration shift sequence for one direction (paper Fig. 3).
+pub fn shift_commands(src: RowRef, dst: RowRef, dir: ShiftDir) -> [Command; 4] {
+    match dir {
+        // evens up through A, odds down through A, re-emerge through B
+        ShiftDir::Right => [
+            Command::Aap { src, dst: RowRef::MigTop(Port::A) },
+            Command::Aap { src, dst: RowRef::MigBot(Port::A) },
+            Command::Aap { src: RowRef::MigTop(Port::B), dst },
+            Command::Aap { src: RowRef::MigBot(Port::B), dst },
+        ],
+        // mirrored port usage (§3.3: "the sequence of row clones and
+        // wordlines ... is different depending on which way you shift")
+        ShiftDir::Left => [
+            Command::Aap { src, dst: RowRef::MigTop(Port::B) },
+            Command::Aap { src, dst: RowRef::MigBot(Port::B) },
+            Command::Aap { src: RowRef::MigTop(Port::A), dst },
+            Command::Aap { src: RowRef::MigBot(Port::A), dst },
+        ],
+    }
+}
+
+impl PimOp {
+    /// Lower this macro-op to its micro command sequence.
+    pub fn lower(&self) -> Vec<Command> {
+        use Command::*;
+        use RowRef::*;
+        match *self {
+            PimOp::Copy { src, dst } => vec![Aap { src: Data(src), dst: Data(dst) }],
+            PimOp::SetZero { dst } => vec![Aap { src: Zero, dst: Data(dst) }],
+            PimOp::SetOnes { dst } => vec![Aap { src: One, dst: Data(dst) }],
+            PimOp::Not { src, dst } => vec![
+                // raise src with DCC0's comp wordline: DCC0 := !src
+                Dra { a: Data(src), b: DccComp(0) },
+                Aap { src: DccTrue(0), dst: Data(dst) },
+            ],
+            PimOp::And { a, b, dst } => Self::tra_logic(a, b, Zero, dst),
+            PimOp::Or { a, b, dst } => Self::tra_logic(a, b, One, dst),
+            PimOp::Maj { a, b, c, dst } => vec![
+                Aap { src: Data(a), dst: Compute(0) },
+                Aap { src: Data(b), dst: Compute(1) },
+                Aap { src: Data(c), dst: Compute(2) },
+                Tra { a: Compute(0), b: Compute(1), c: Compute(2) },
+                Aap { src: Compute(0), dst: Data(dst) },
+            ],
+            PimOp::Xor { a, b, dst } => {
+                let mut v = vec![
+                    // DCC0 := !a, DCC1 := !b
+                    Dra { a: Data(a), b: DccComp(0) },
+                    Dra { a: Data(b), b: DccComp(1) },
+                    // T3 := a & !b
+                    Aap { src: Data(a), dst: Compute(0) },
+                    Aap { src: DccTrue(1), dst: Compute(1) },
+                    Aap { src: Zero, dst: Compute(2) },
+                    Tra { a: Compute(0), b: Compute(1), c: Compute(2) },
+                    Aap { src: Compute(0), dst: Compute(3) },
+                    // T0 := !a & b
+                    Aap { src: DccTrue(0), dst: Compute(0) },
+                    Aap { src: Data(b), dst: Compute(1) },
+                    Aap { src: Zero, dst: Compute(2) },
+                    Tra { a: Compute(0), b: Compute(1), c: Compute(2) },
+                    // T0 := T0 | T3
+                    Aap { src: Compute(3), dst: Compute(1) },
+                    Aap { src: One, dst: Compute(2) },
+                    Tra { a: Compute(0), b: Compute(1), c: Compute(2) },
+                    Aap { src: Compute(0), dst: Data(dst) },
+                ];
+                v.shrink_to_fit();
+                v
+            }
+            PimOp::ShiftRight { src, dst } => {
+                shift_commands(Data(src), Data(dst), ShiftDir::Right).to_vec()
+            }
+            PimOp::ShiftLeft { src, dst } => {
+                shift_commands(Data(src), Data(dst), ShiftDir::Left).to_vec()
+            }
+            PimOp::ShiftBy { src, dst, n, dir } => {
+                let mut v = Vec::with_capacity(4 * n.max(1));
+                if n == 0 {
+                    return PimOp::Copy { src, dst }.lower();
+                }
+                v.extend(shift_commands(Data(src), Data(dst), dir));
+                for _ in 1..n {
+                    // in-place: dst is fully read into the migration rows
+                    // (steps 1–2) before being rewritten (steps 3–4)
+                    v.extend(shift_commands(Data(dst), Data(dst), dir));
+                }
+                v
+            }
+        }
+    }
+
+    fn tra_logic(a: usize, b: usize, control: RowRef, dst: usize) -> Vec<Command> {
+        use Command::*;
+        use RowRef::*;
+        vec![
+            Aap { src: Data(a), dst: Compute(0) },
+            Aap { src: Data(b), dst: Compute(1) },
+            Aap { src: control, dst: Compute(2) },
+            Tra { a: Compute(0), b: Compute(1), c: Compute(2) },
+            Aap { src: Compute(0), dst: Data(dst) },
+        ]
+    }
+
+    /// AAP count of the lowered sequence (the latency/energy driver).
+    pub fn aap_count(&self) -> usize {
+        self.lower()
+            .iter()
+            .filter(|c| matches!(c, Command::Aap { .. }))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shift_is_exactly_four_aaps() {
+        // the paper's headline: one full-row shift = 4 AAP commands
+        assert_eq!(PimOp::ShiftRight { src: 0, dst: 1 }.lower().len(), 4);
+        assert_eq!(PimOp::ShiftLeft { src: 0, dst: 1 }.lower().len(), 4);
+        assert_eq!(PimOp::ShiftRight { src: 0, dst: 1 }.aap_count(), 4);
+    }
+
+    #[test]
+    fn shift_by_n_is_4n_aaps() {
+        for n in 1..5 {
+            let op = PimOp::ShiftBy { src: 0, dst: 1, n, dir: ShiftDir::Right };
+            assert_eq!(op.aap_count(), 4 * n);
+        }
+    }
+
+    #[test]
+    fn shift_by_zero_is_copy() {
+        let op = PimOp::ShiftBy { src: 0, dst: 1, n: 0, dir: ShiftDir::Left };
+        assert_eq!(op.lower(), PimOp::Copy { src: 0, dst: 1 }.lower());
+    }
+
+    #[test]
+    fn right_and_left_use_mirrored_ports() {
+        use crate::dram::address::{Command::Aap, Port, RowRef};
+        let r = PimOp::ShiftRight { src: 0, dst: 1 }.lower();
+        let l = PimOp::ShiftLeft { src: 0, dst: 1 }.lower();
+        assert!(matches!(r[0], Aap { dst: RowRef::MigTop(Port::A), .. }));
+        assert!(matches!(l[0], Aap { dst: RowRef::MigTop(Port::B), .. }));
+        assert!(matches!(r[2], Aap { src: RowRef::MigTop(Port::B), .. }));
+        assert!(matches!(l[2], Aap { src: RowRef::MigTop(Port::A), .. }));
+    }
+
+    #[test]
+    fn logic_op_command_budgets() {
+        // Ambit cost model: AND/OR = 4 AAP + 1 TRA; NOT = 1 DRA + 1 AAP
+        assert_eq!(PimOp::And { a: 0, b: 1, dst: 2 }.lower().len(), 5);
+        assert_eq!(PimOp::Or { a: 0, b: 1, dst: 2 }.lower().len(), 5);
+        assert_eq!(PimOp::Not { src: 0, dst: 1 }.lower().len(), 2);
+        assert_eq!(PimOp::Maj { a: 0, b: 1, c: 2, dst: 3 }.lower().len(), 5);
+    }
+}

@@ -1,0 +1,12 @@
+//! Bit-accurate PIM layer: the macro-op ISA (RowClone, Ambit AND/OR/NOT/
+//! MAJ/XOR, and the paper's migration-cell shifts), its lowering to AAP/
+//! DRA/TRA command streams, the functional executor, and the program
+//! builder used by application kernels.
+
+pub mod executor;
+pub mod isa;
+pub mod program;
+
+pub use executor::{apply, run};
+pub use isa::{shift_commands, PimOp};
+pub use program::{Program, RowAlloc};

@@ -1,0 +1,154 @@
+//! PIM programs: ordered macro-op lists with lowering, cost accounting,
+//! and a row allocator for temporaries.
+//!
+//! Application kernels ([`crate::apps`]) build programs against named
+//! virtual rows; [`RowAlloc`] maps them onto the subarray's data rows and
+//! recycles freed temporaries, mirroring how SIMDRAM's compiler allocates
+//! B-group rows.
+
+use crate::dram::address::Command;
+use crate::pim::isa::PimOp;
+
+/// An ordered sequence of macro-ops plus its lowered command stream.
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    ops: Vec<PimOp>,
+    cmds: Vec<Command>,
+}
+
+impl Program {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, op: PimOp) {
+        self.cmds.extend(op.lower());
+        self.ops.push(op);
+    }
+
+    pub fn ops(&self) -> &[PimOp] {
+        &self.ops
+    }
+
+    pub fn commands(&self) -> &[Command] {
+        &self.cmds
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Command census: (AAPs, TRAs, DRAs).
+    pub fn census(&self) -> (usize, usize, usize) {
+        let mut aap = 0;
+        let mut tra = 0;
+        let mut dra = 0;
+        for c in &self.cmds {
+            match c {
+                Command::Aap { .. } => aap += 1,
+                Command::Tra { .. } => tra += 1,
+                Command::Dra { .. } => dra += 1,
+                _ => {}
+            }
+        }
+        (aap, tra, dra)
+    }
+}
+
+/// Allocator for temporary data rows in a subarray.
+///
+/// Rows `[base, limit)` are the allocator's pool; application inputs and
+/// outputs live below `base`.
+#[derive(Clone, Debug)]
+pub struct RowAlloc {
+    base: usize,
+    limit: usize,
+    free: Vec<usize>,
+    next: usize,
+    high_water: usize,
+}
+
+impl RowAlloc {
+    pub fn new(base: usize, limit: usize) -> Self {
+        assert!(base < limit);
+        RowAlloc { base, limit, free: Vec::new(), next: base, high_water: 0 }
+    }
+
+    /// Claim a temporary row.
+    pub fn alloc(&mut self) -> usize {
+        let r = if let Some(r) = self.free.pop() {
+            r
+        } else {
+            let r = self.next;
+            assert!(r < self.limit, "subarray temporary rows exhausted");
+            self.next += 1;
+            r
+        };
+        self.high_water = self.high_water.max(self.next - self.base - self.free.len());
+        r
+    }
+
+    /// Return a temporary row to the pool.
+    pub fn release(&mut self, row: usize) {
+        debug_assert!((self.base..self.limit).contains(&row));
+        debug_assert!(!self.free.contains(&row), "double free of row {row}");
+        self.free.push(row);
+    }
+
+    /// Peak number of live temporaries.
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ShiftDir;
+
+    #[test]
+    fn program_accumulates_and_counts() {
+        let mut p = Program::new();
+        p.push(PimOp::Copy { src: 0, dst: 1 });
+        p.push(PimOp::And { a: 0, b: 1, dst: 2 });
+        p.push(PimOp::ShiftRight { src: 2, dst: 3 });
+        p.push(PimOp::Not { src: 3, dst: 4 });
+        let (aap, tra, dra) = p.census();
+        assert_eq!(aap, 1 + 4 + 4 + 1);
+        assert_eq!(tra, 1);
+        assert_eq!(dra, 1);
+        assert_eq!(p.ops().len(), 4);
+        assert_eq!(
+            p.commands().len(),
+            p.ops().iter().map(|o| o.lower().len()).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn shift_by_census() {
+        let mut p = Program::new();
+        p.push(PimOp::ShiftBy { src: 0, dst: 1, n: 8, dir: ShiftDir::Left });
+        assert_eq!(p.census().0, 32);
+    }
+
+    #[test]
+    fn alloc_recycles() {
+        let mut a = RowAlloc::new(8, 16);
+        let r1 = a.alloc();
+        let r2 = a.alloc();
+        assert_ne!(r1, r2);
+        a.release(r1);
+        let r3 = a.alloc();
+        assert_eq!(r3, r1, "freed row is reused");
+        assert!(a.high_water() <= 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "exhausted")]
+    fn alloc_exhaustion_panics() {
+        let mut a = RowAlloc::new(0, 2);
+        a.alloc();
+        a.alloc();
+        a.alloc();
+    }
+}

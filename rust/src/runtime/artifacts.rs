@@ -1,0 +1,131 @@
+//! Artifact discovery and the manifest contract with python/compile/aot.py.
+//!
+//! The manifest is a small flat JSON object; we parse the handful of
+//! integer fields with a purpose-built scanner (serde is not available in
+//! the offline build) and validate them against the crate's expectations.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// Shapes of the AOT artifacts, as written by aot.py.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    pub n_params: usize,
+    pub n_out: usize,
+    pub mc_batch: usize,
+    pub mc_tile: usize,
+    pub waveform_len: usize,
+    pub waveform_nodes: usize,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Extract `"key": <uint>` fields from a flat JSON object.
+    pub fn parse(text: &str) -> Result<Self> {
+        let field = |key: &str| -> Result<usize> {
+            let pat = format!("\"{key}\"");
+            let at = text
+                .find(&pat)
+                .ok_or_else(|| anyhow!("manifest missing field {key}"))?;
+            let rest = &text[at + pat.len()..];
+            let rest = rest
+                .trim_start()
+                .strip_prefix(':')
+                .ok_or_else(|| anyhow!("malformed field {key}"))?
+                .trim_start();
+            let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            digits
+                .parse()
+                .with_context(|| format!("non-integer value for {key}"))
+        };
+        let m = Manifest {
+            n_params: field("n_params")?,
+            n_out: field("n_out")?,
+            mc_batch: field("mc_batch")?,
+            mc_tile: field("mc_tile")?,
+            waveform_len: field("waveform_len")?,
+            waveform_nodes: field("waveform_nodes")?,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_params != 16 {
+            return Err(anyhow!(
+                "artifact n_params {} != crate expectation 16 — re-run `make artifacts`",
+                self.n_params
+            ));
+        }
+        if self.n_out != 6 {
+            return Err(anyhow!("artifact n_out {} != 6", self.n_out));
+        }
+        if self.mc_batch == 0 || self.mc_batch % self.mc_tile != 0 {
+            return Err(anyhow!("mc_batch {} not a multiple of tile", self.mc_batch));
+        }
+        Ok(())
+    }
+}
+
+/// Locate the artifacts directory: `$SHIFTDRAM_ARTIFACTS` or
+/// `<repo>/artifacts` relative to the crate root.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("SHIFTDRAM_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+  "format": "hlo-text",
+  "return_tuple": true,
+  "n_params": 16,
+  "n_out": 6,
+  "mc_batch": 8192,
+  "mc_tile": 512,
+  "waveform_len": 72,
+  "waveform_nodes": 5,
+  "cfg": {"dt": 1e-10},
+  "steps_per_aap": 360
+}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.mc_batch, 8192);
+        assert_eq!(m.mc_tile, 512);
+        assert_eq!(m.waveform_len, 72);
+    }
+
+    #[test]
+    fn missing_field_rejected() {
+        assert!(Manifest::parse("{\"n_params\": 16}").is_err());
+    }
+
+    #[test]
+    fn wrong_shapes_rejected() {
+        let bad = SAMPLE.replace("\"n_params\": 16", "\"n_params\": 12");
+        assert!(Manifest::parse(&bad).is_err());
+        let bad = SAMPLE.replace("\"mc_batch\": 8192", "\"mc_batch\": 1000");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        let p = artifacts_dir().join("manifest.json");
+        if p.exists() {
+            let m = Manifest::load(&p).unwrap();
+            assert_eq!(m.mc_batch % m.mc_tile, 0);
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and executes them from Rust.
+//!
+//! HLO **text** is the interchange format — jax ≥ 0.5 serializes protos
+//! with 64-bit instruction ids that the crate's xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see python/compile/aot.py).
+//!
+//! Python runs once at build time (`make artifacts`); this module is the
+//! only place the request path touches the compiled artifacts.
+
+pub mod artifacts;
+
+pub use artifacts::{artifacts_dir, Manifest};
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A PJRT CPU client with a cache of compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, exes: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact under `name`.
+    pub fn load_hlo_text(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// Load the standard artifact set (`shift_mc`, `shift_waveform`) from
+    /// [`artifacts_dir`], returning the runtime and validated manifest.
+    pub fn with_artifacts() -> Result<(Self, Manifest)> {
+        let dir = artifacts_dir();
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let mut rt = Self::new()?;
+        rt.load_hlo_text("shift_mc", &dir.join("shift_mc.hlo.txt"))?;
+        rt.load_hlo_text("shift_waveform", &dir.join("shift_waveform.hlo.txt"))?;
+        Ok((rt, manifest))
+    }
+
+    /// Execute a single-input (f32 tensor) → single-output (f32 tensor)
+    /// artifact. `dims` is the input shape; returns the flattened output
+    /// (artifacts are lowered with `return_tuple=True`, so the 1-tuple is
+    /// unwrapped here).
+    pub fn exec_f32(&self, name: &str, input: &[f32], dims: &[i64]) -> Result<Vec<f32>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not loaded"))?;
+        let lit = xla::Literal::vec1(input)
+            .reshape(dims)
+            .context("reshaping input literal")?;
+        let result = exe
+            .execute::<xla::Literal>(&[lit])
+            .with_context(|| format!("executing {name}"))?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple output")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests require `make artifacts` to have run (they are the
+    // Rust half of the AOT round trip the Python tests can't perform).
+    fn runtime_with(name: &str, file: &str) -> Option<Runtime> {
+        let dir = artifacts_dir();
+        let path = dir.join(file);
+        if !path.exists() {
+            eprintln!("skipping: {} missing (run `make artifacts`)", path.display());
+            return None;
+        }
+        let mut rt = Runtime::new().expect("PJRT CPU client");
+        rt.load_hlo_text(name, &path).expect("load artifact");
+        Some(rt)
+    }
+
+    #[test]
+    fn loads_and_executes_mc_artifact() {
+        let Some(rt) = runtime_with("mc", "shift_mc.hlo.txt") else { return };
+        let m = Manifest::load(&artifacts_dir().join("manifest.json")).unwrap();
+        // nominal 22 nm '1' bit in every trial
+        let nominal = crate::circuit::params::TechNode::n22().mc_nominal(true);
+        let mut input = Vec::with_capacity(m.mc_batch * m.n_params);
+        for _ in 0..m.mc_batch {
+            input.extend_from_slice(&nominal);
+        }
+        let out = rt
+            .exec_f32("mc", &input, &[m.mc_batch as i64, m.n_params as i64])
+            .unwrap();
+        assert_eq!(out.len(), m.mc_batch * m.n_out);
+        // all-nominal trials: full-rail write-back and positive margins
+        for t in 0..m.mc_batch {
+            let sense_a = out[t * m.n_out];
+            let v_dst = out[t * m.n_out + 2];
+            assert!(sense_a > 0.05, "trial {t} sense {sense_a}");
+            assert!(v_dst > 1.1, "trial {t} v_dst {v_dst}");
+        }
+    }
+
+    #[test]
+    fn missing_artifact_is_reported() {
+        let mut rt = Runtime::new().expect("client");
+        let err = rt
+            .load_hlo_text("nope", Path::new("/nonexistent/foo.hlo.txt"))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("foo.hlo.txt"));
+        assert!(!rt.is_loaded("nope"));
+        assert!(rt.exec_f32("nope", &[0.0], &[1]).is_err());
+    }
+}

@@ -1,0 +1,218 @@
+//! The command-level simulation engine (NVMain substitute).
+//!
+//! [`BankSim`] couples four models driven from one command stream:
+//! functional bit state ([`crate::dram::Bank`]), per-command latency
+//! ([`CommandTimer`]), per-command energy ([`EnergyModel`]), and the
+//! refresh scheduler. Every shift/latency/energy figure in Tables 2–3 is
+//! produced by running real command streams through this engine while the
+//! functional state is simultaneously checked bit-exactly.
+
+use crate::config::DramConfig;
+use crate::dram::address::Command;
+use crate::dram::bank::Bank;
+use crate::dram::energy::{EnergyBreakdown, EnergyModel};
+use crate::dram::timing::{CommandTimer, RefreshScheduler};
+use crate::pim::executor;
+
+/// Command census kept by the engine.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CommandCounts {
+    pub act: u64,
+    pub pre: u64,
+    pub read: u64,
+    pub write: u64,
+    pub aap: u64,
+    pub dra: u64,
+    pub tra: u64,
+    pub refresh: u64,
+}
+
+/// Cycle-accurate (command-window-accurate) simulator of one bank.
+pub struct BankSim {
+    cfg: DramConfig,
+    bank: Bank,
+    timer: CommandTimer,
+    energy_model: EnergyModel,
+    refresh: RefreshScheduler,
+    /// simulated time, ps
+    pub now_ps: u64,
+    /// accumulated energy by category
+    pub energy: EnergyBreakdown,
+    pub counts: CommandCounts,
+    /// when true, due refreshes are injected before each issued command
+    /// (a real controller interleaves REF with the PIM stream)
+    pub refresh_enabled: bool,
+}
+
+impl BankSim {
+    pub fn new(cfg: DramConfig) -> Self {
+        let timer = CommandTimer::new(cfg.timing.clone());
+        let energy_model = EnergyModel::new(&cfg.energy, &cfg.timing);
+        let refresh = RefreshScheduler::new(cfg.timing.t_refi);
+        BankSim {
+            bank: Bank::new(&cfg.geometry),
+            timer,
+            energy_model,
+            refresh,
+            now_ps: 0,
+            energy: EnergyBreakdown::default(),
+            counts: CommandCounts::default(),
+            refresh_enabled: true,
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &DramConfig {
+        &self.cfg
+    }
+
+    pub fn bank(&mut self) -> &mut Bank {
+        &mut self.bank
+    }
+
+    pub fn energy_model(&self) -> &EnergyModel {
+        &self.energy_model
+    }
+
+    fn account(&mut self, cmd: &Command) {
+        self.now_ps += self.timer.latency_ps(cmd);
+        self.energy.add(&self.energy_model.energy(cmd));
+        match cmd {
+            Command::Act { .. } => self.counts.act += 1,
+            Command::Pre => self.counts.pre += 1,
+            Command::Read { .. } => self.counts.read += 1,
+            Command::Write { .. } => self.counts.write += 1,
+            Command::Aap { .. } => self.counts.aap += 1,
+            Command::Dra { .. } => self.counts.dra += 1,
+            Command::Tra { .. } => self.counts.tra += 1,
+            Command::Refresh => self.counts.refresh += 1,
+        }
+    }
+
+    /// Issue one command against a subarray: inject due refreshes, advance
+    /// time, accumulate energy, apply functional semantics.
+    pub fn issue(&mut self, subarray: usize, cmd: Command) {
+        if self.refresh_enabled {
+            let due = self.refresh.due(self.now_ps);
+            for _ in 0..due {
+                self.account(&Command::Refresh);
+            }
+        }
+        self.account(&cmd);
+        executor::apply(self.bank.subarray(subarray), &cmd);
+    }
+
+    /// Issue a whole command stream.
+    pub fn run(&mut self, subarray: usize, cmds: &[Command]) {
+        for c in cmds {
+            self.issue(subarray, *c);
+        }
+    }
+
+    /// Host-side full-row write (DMA in): functional only, burst energy
+    /// accounted per 64 B column write.
+    pub fn host_write_row(&mut self, subarray: usize, row: usize, bits: crate::util::BitRow) {
+        let bursts = (bits.len() / 8).div_ceil(64) as u64;
+        self.issue(subarray, Command::Act { row: crate::dram::address::RowRef::Data(row) });
+        for i in 0..bursts {
+            self.issue(subarray, Command::Write { col: (i * 64) as usize });
+        }
+        self.issue(subarray, Command::Pre);
+        self.bank.subarray(subarray).write_row(row, bits);
+    }
+
+    /// Host-side full-row read (DMA out).
+    pub fn host_read_row(&mut self, subarray: usize, row: usize) -> crate::util::BitRow {
+        let cols = self.bank.cols();
+        let bursts = (cols / 8).div_ceil(64) as u64;
+        self.issue(subarray, Command::Act { row: crate::dram::address::RowRef::Data(row) });
+        for i in 0..bursts {
+            self.issue(subarray, Command::Read { col: (i * 64) as usize });
+        }
+        self.issue(subarray, Command::Pre);
+        self.bank.subarray(subarray).read_row(row).clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::address::RowRef;
+    use crate::pim::PimOp;
+    use crate::util::{BitRow, Rng, ShiftDir};
+
+    fn sim() -> BankSim {
+        BankSim::new(DramConfig::tiny_test())
+    }
+
+    #[test]
+    fn single_aap_time_and_energy() {
+        let mut s = sim();
+        s.issue(0, Command::Aap { src: RowRef::Zero, dst: RowRef::Data(0) });
+        assert_eq!(s.now_ps, 52_500);
+        assert!((s.energy.active_pj - 2.0 * s.energy_model().e_act_pj()).abs() < 1e-9);
+        assert_eq!(s.counts.aap, 1);
+    }
+
+    #[test]
+    fn functional_and_timing_coupled() {
+        let mut s = sim();
+        let mut rng = Rng::new(5);
+        let row = BitRow::random(s.config().geometry.cols_per_row, &mut rng);
+        s.bank().subarray(0).write_row(0, row.clone());
+        s.run(0, &PimOp::ShiftRight { src: 0, dst: 1 }.lower());
+        assert_eq!(
+            s.bank().subarray(0).read_row(1),
+            &row.shifted(ShiftDir::Right, false)
+        );
+        assert_eq!(s.now_ps, 210_000);
+        assert_eq!(s.counts.aap, 4);
+    }
+
+    #[test]
+    fn refresh_injected_over_long_streams() {
+        let mut s = sim();
+        // 50 shifts cross one tREFI boundary (Table 2: 1 refresh)
+        let mut rng = Rng::new(6);
+        let row = BitRow::random(s.config().geometry.cols_per_row, &mut rng);
+        s.bank().subarray(0).write_row(0, row);
+        for _ in 0..50 {
+            s.run(0, &PimOp::ShiftBy { src: 0, dst: 0, n: 1, dir: ShiftDir::Right }.lower());
+        }
+        assert_eq!(s.counts.refresh, 1);
+        assert!(s.energy.refresh_pj > 0.0);
+    }
+
+    #[test]
+    fn refresh_can_be_disabled() {
+        let mut s = sim();
+        s.refresh_enabled = false;
+        for _ in 0..200 {
+            s.issue(0, Command::Aap { src: RowRef::Zero, dst: RowRef::Data(0) });
+        }
+        assert_eq!(s.counts.refresh, 0);
+    }
+
+    #[test]
+    fn host_io_accrues_burst_energy() {
+        let mut s = sim();
+        let mut rng = Rng::new(7);
+        let row = BitRow::random(s.config().geometry.cols_per_row, &mut rng);
+        s.host_write_row(0, 3, row.clone());
+        assert!(s.energy.burst_pj > 0.0);
+        let before = s.energy.burst_pj;
+        let got = s.host_read_row(0, 3);
+        assert_eq!(got, row);
+        assert!(s.energy.burst_pj > before);
+    }
+
+    #[test]
+    fn pim_stream_has_zero_burst_energy() {
+        // the paper's headline property: computation without off-chip moves
+        let mut s = sim();
+        for _ in 0..100 {
+            s.run(0, &PimOp::ShiftRight { src: 0, dst: 1 }.lower());
+        }
+        assert_eq!(s.energy.burst_pj, 0.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Command-level simulation (the NVMain substitute): the [`engine`]
+//! couples functional, timing, energy, and refresh models on one command
+//! stream; [`workload`] runs the paper's §4.1 shift workloads.
+
+pub mod engine;
+pub mod workload;
+
+pub use engine::{BankSim, CommandCounts};
+pub use workload::{run_paper_workloads, run_shift_workload, ShiftWorkloadReport, PAPER_WORKLOADS};

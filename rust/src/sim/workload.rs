@@ -1,0 +1,166 @@
+//! The paper's evaluation workloads (§4.1): N full-row shift operations
+//! executed sequentially in Bank 0 Subarray 0, with bit-exact verification
+//! and the NVMain-style energy/latency report that regenerates Tables 2–3.
+
+use crate::config::DramConfig;
+use crate::dram::energy::EnergyBreakdown;
+use crate::pim::PimOp;
+use crate::sim::engine::BankSim;
+use crate::util::{BitRow, Rng, ShiftDir};
+
+/// Result of one shift workload (one row of Tables 2 and 3).
+#[derive(Clone, Debug)]
+pub struct ShiftWorkloadReport {
+    pub shifts: usize,
+    pub total_time_ps: u64,
+    pub energy: EnergyBreakdown,
+    pub refreshes: u64,
+    /// functional check: simulated row equals the semantic n-shift
+    pub verified: bool,
+}
+
+impl ShiftWorkloadReport {
+    pub fn total_energy_nj(&self) -> f64 {
+        self.energy.total_nj()
+    }
+
+    /// "Energy per shift" as Table 2 reports it: total (incl. refresh)
+    /// divided by shift count.
+    pub fn energy_per_shift_nj(&self) -> f64 {
+        self.energy.total_nj() / self.shifts as f64
+    }
+
+    pub fn latency_per_shift_ns(&self) -> f64 {
+        self.total_time_ps as f64 / 1e3 / self.shifts as f64
+    }
+
+    pub fn total_time_us(&self) -> f64 {
+        self.total_time_ps as f64 / 1e6
+    }
+
+    /// Shift throughput in MOps/s (Table 3).
+    pub fn throughput_mops(&self) -> f64 {
+        self.shifts as f64 / (self.total_time_ps as f64 * 1e-12) / 1e6
+    }
+
+    /// Energy efficiency in nJ/KB for the row size used (§5.1.1: ~4 nJ/KB).
+    pub fn nj_per_kb(&self, row_bytes: usize) -> f64 {
+        self.energy_per_shift_nj() / (row_bytes as f64 / 1024.0)
+    }
+}
+
+/// Run the paper's shift workload: `shifts` sequential 1-bit full-row
+/// shifts of an 8 KB row in Bank 0 Subarray 0 (in place on the row, as a
+/// multi-bit shift application would issue them).
+pub fn run_shift_workload(
+    cfg: &DramConfig,
+    shifts: usize,
+    dir: ShiftDir,
+    seed: u64,
+) -> ShiftWorkloadReport {
+    assert!(shifts > 0);
+    let mut sim = BankSim::new(cfg.clone());
+    let cols = cfg.geometry.cols_per_row;
+    let mut rng = Rng::new(seed);
+    let initial = BitRow::random(cols, &mut rng);
+    // load functionally (host I/O is not part of the measured PIM workload)
+    sim.bank().subarray(0).write_row(0, initial.clone());
+
+    let t0 = sim.now_ps;
+    for _ in 0..shifts {
+        sim.run(0, &PimOp::ShiftBy { src: 0, dst: 0, n: 1, dir }.lower());
+    }
+    let total_time_ps = sim.now_ps - t0;
+
+    let expected = initial.shifted_by(dir, shifts, false);
+    let verified = sim.bank().subarray(0).read_row(0) == &expected;
+
+    ShiftWorkloadReport {
+        shifts,
+        total_time_ps,
+        energy: sim.energy,
+        refreshes: sim.counts.refresh,
+        verified,
+    }
+}
+
+/// The paper's four workload sizes (§4.1).
+pub const PAPER_WORKLOADS: [usize; 4] = [1, 50, 100, 512];
+
+/// Run all four Table 2/3 workloads.
+pub fn run_paper_workloads(cfg: &DramConfig, seed: u64) -> Vec<ShiftWorkloadReport> {
+    PAPER_WORKLOADS
+        .iter()
+        .map(|&n| run_shift_workload(cfg, n, ShiftDir::Right, seed))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> DramConfig {
+        DramConfig::ddr3_1333_4gb()
+    }
+
+    #[test]
+    fn single_shift_matches_table2_and_3() {
+        let r = run_shift_workload(&cfg(), 1, ShiftDir::Right, 1);
+        assert!(r.verified);
+        // Table 3: 208.7 ns (we model 210.0; ≤1 %)
+        assert!((r.latency_per_shift_ns() - 208.7).abs() / 208.7 < 0.01);
+        // Table 2: 31.321 nJ total, 30.24 active, 0 burst, 0 refresh
+        assert!((r.total_energy_nj() - 31.321).abs() < 0.2, "{}", r.total_energy_nj());
+        assert!((r.energy.active_pj / 1e3 - 30.24).abs() < 0.05);
+        assert_eq!(r.energy.burst_pj, 0.0);
+        assert_eq!(r.refreshes, 0);
+    }
+
+    #[test]
+    fn multi_shift_workloads_scale_linearly() {
+        let c = cfg();
+        let r50 = run_shift_workload(&c, 50, ShiftDir::Right, 2);
+        let r100 = run_shift_workload(&c, 100, ShiftDir::Right, 2);
+        let r512 = run_shift_workload(&c, 512, ShiftDir::Right, 2);
+        assert!(r50.verified && r100.verified && r512.verified);
+        // near-constant energy/shift (Table 2: 31.3–32.3 nJ; we measure up
+        // to ~33.4 because we keep the per-AAP precharge bookkeeping that
+        // the paper's multi-shift rows drop — see EXPERIMENTS.md)
+        for r in [&r50, &r100, &r512] {
+            let e = r.energy_per_shift_nj();
+            assert!((31.0..33.5).contains(&e), "energy/shift {e}");
+        }
+        // refresh events: 1 / 2 / ≥13 (Table 2 trend: 0 → ~6 % refresh share)
+        assert_eq!(r50.refreshes, 1);
+        assert_eq!(r100.refreshes, 2);
+        assert!(r512.refreshes >= 13);
+        let share = r512.energy.refresh_pj / r512.energy.total_pj();
+        assert!((0.02..0.10).contains(&share), "refresh share {share}");
+    }
+
+    #[test]
+    fn throughput_matches_table3() {
+        // Table 3: ~4.82 MOps/s for the multi-shift workloads
+        let r = run_shift_workload(&cfg(), 100, ShiftDir::Right, 3);
+        let tp = r.throughput_mops();
+        assert!((4.4..5.1).contains(&tp), "throughput {tp} MOps/s");
+    }
+
+    #[test]
+    fn energy_efficiency_near_4nj_per_kb() {
+        let c = cfg();
+        let r = run_shift_workload(&c, 512, ShiftDir::Right, 4);
+        let e = r.nj_per_kb(c.geometry.row_bytes());
+        assert!((3.8..4.3).contains(&e), "nJ/KB {e}");
+    }
+
+    #[test]
+    fn left_shifts_equivalent_cost() {
+        let c = cfg();
+        let right = run_shift_workload(&c, 50, ShiftDir::Right, 5);
+        let left = run_shift_workload(&c, 50, ShiftDir::Left, 5);
+        assert!(left.verified);
+        assert_eq!(right.total_time_ps, left.total_time_ps);
+        assert_eq!(right.energy, left.energy);
+    }
+}

@@ -1,0 +1,153 @@
+//! Minimal criterion-style micro-benchmark harness (criterion is not
+//! available in the offline build). Provides warm-up, timed iterations,
+//! mean/σ/min reporting, and a `black_box` to defeat const-folding.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub std_dev: Duration,
+    pub min: Duration,
+    /// user-supplied throughput denominator (elements per iteration)
+    pub elements: Option<u64>,
+}
+
+impl Measurement {
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements.map(|e| e as f64 / self.mean.as_secs_f64())
+    }
+
+    pub fn report(&self) {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e9 => format!("  {:.3} Gelem/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  {:.3} Melem/s", t / 1e6),
+            Some(t) => format!("  {t:.1} elem/s"),
+            None => String::new(),
+        };
+        println!(
+            "{:<44} {:>12?} ±{:>10?} (min {:>10?}, n={}){}",
+            self.name, self.mean, self.std_dev, self.min, self.iters, tp
+        );
+    }
+}
+
+/// Bench runner: warms up for `warmup`, then measures for at least
+/// `measure` wall time (and at least `min_iters` iterations).
+pub struct Bench {
+    warmup: Duration,
+    measure: Duration,
+    min_iters: u64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_iters: 10,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(200),
+            min_iters: 5,
+        }
+    }
+
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        self.run_with_elements(name, None, &mut f)
+    }
+
+    /// `elements` = work items per iteration, for throughput reporting.
+    pub fn run_elems<T>(
+        &self,
+        name: &str,
+        elements: u64,
+        mut f: impl FnMut() -> T,
+    ) -> Measurement {
+        self.run_with_elements(name, Some(elements), &mut f)
+    }
+
+    fn run_with_elements<T>(
+        &self,
+        name: &str,
+        elements: Option<u64>,
+        f: &mut impl FnMut() -> T,
+    ) -> Measurement {
+        // warm-up
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            std_black_box(f());
+        }
+        // measure
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure || (samples.len() as u64) < self.min_iters {
+            let t0 = Instant::now();
+            std_black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+            if samples.len() > 5_000_000 {
+                break;
+            }
+        }
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+        let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let m = Measurement {
+            name: name.to_string(),
+            iters: samples.len() as u64,
+            mean: Duration::from_secs_f64(mean),
+            std_dev: Duration::from_secs_f64(var.sqrt()),
+            min: Duration::from_secs_f64(min),
+            elements,
+        };
+        m.report();
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(5),
+            min_iters: 3,
+        };
+        let m = b.run("noop-ish", || {
+            let mut x = 0u64;
+            for i in 0..100u64 {
+                x = x.wrapping_add(black_box(i));
+            }
+            x
+        });
+        assert!(m.iters >= 3);
+        assert!(m.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let b = Bench {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(3),
+            min_iters: 3,
+        };
+        let m = b.run_elems("tp", 1000, || black_box(42u64).wrapping_mul(3));
+        assert!(m.throughput().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,412 @@
+//! `BitRow`: a fixed-width row of DRAM cells as a packed bit vector.
+//!
+//! Column `i` of the subarray is bit `i` of the row (word `i / 64`, bit
+//! `i % 64` within the word). A full DDR3-1333 8 KB row is 65,536 columns.
+//!
+//! The hot operation is the whole-row 1-bit shift (the paper's primitive);
+//! it is implemented word-at-a-time (two shifts + or per word), not
+//! bit-at-a-time — see `rust/benches/hotpath.rs`.
+
+/// Direction of a shift in *column index* space.
+///
+/// The paper's Figure 3 draws a "right shift" as every bit moving to the
+/// next-higher column index (`dst[i] = src[i-1]`), which is how we define
+/// `Right`. `Left` is `dst[i] = src[i+1]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ShiftDir {
+    /// dst[i] = src[i-1]; column 0 receives the fill bit.
+    Right,
+    /// dst[i] = src[i+1]; the last column receives the fill bit.
+    Left,
+}
+
+/// Spread the low 32 bits of `x` to the even bit positions of a u64
+/// (bit i → bit 2i). The classic Morton-interleave step sequence — O(5)
+/// shift/mask ops, used to make migration-row sensing word-level instead
+/// of bit-level (§Perf iteration 1 in EXPERIMENTS.md).
+#[inline]
+pub fn spread_even(x: u32) -> u64 {
+    let mut v = x as u64;
+    v = (v | (v << 16)) & 0x0000_FFFF_0000_FFFF;
+    v = (v | (v << 8)) & 0x00FF_00FF_00FF_00FF;
+    v = (v | (v << 4)) & 0x0F0F_0F0F_0F0F_0F0F;
+    v = (v | (v << 2)) & 0x3333_3333_3333_3333;
+    v = (v | (v << 1)) & 0x5555_5555_5555_5555;
+    v
+}
+
+/// Inverse of [`spread_even`]: gather the even bit positions of `w`
+/// (bit 2i → bit i of the result).
+#[inline]
+pub fn squash_even(w: u64) -> u32 {
+    let mut v = w & 0x5555_5555_5555_5555;
+    v = (v | (v >> 1)) & 0x3333_3333_3333_3333;
+    v = (v | (v >> 2)) & 0x0F0F_0F0F_0F0F_0F0F;
+    v = (v | (v >> 4)) & 0x00FF_00FF_00FF_00FF;
+    v = (v | (v >> 8)) & 0x0000_FFFF_0000_FFFF;
+    v = (v | (v >> 16)) & 0x0000_0000_FFFF_FFFF;
+    v as u32
+}
+
+/// A packed row of bits (one DRAM row / one sense-amplifier stripe worth).
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct BitRow {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitRow {
+    /// All-zero row of `len` columns.
+    pub fn zeros(len: usize) -> Self {
+        BitRow { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    /// All-one row of `len` columns.
+    pub fn ones(len: usize) -> Self {
+        let mut r = Self::zeros(len);
+        for w in &mut r.words {
+            *w = u64::MAX;
+        }
+        r.mask_tail();
+        r
+    }
+
+    /// Row from a little-endian byte slice; bit `i` of byte `j` becomes
+    /// column `8*j + i`.
+    pub fn from_bytes(bytes: &[u8]) -> Self {
+        let mut r = Self::zeros(bytes.len() * 8);
+        for (j, &b) in bytes.iter().enumerate() {
+            let w = (8 * j) / 64;
+            let sh = (8 * j) % 64;
+            r.words[w] |= (b as u64) << sh;
+        }
+        r
+    }
+
+    /// Inverse of [`from_bytes`]. `len` must be a multiple of 8.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        assert_eq!(self.len % 8, 0, "row length not byte-aligned");
+        let mut out = vec![0u8; self.len / 8];
+        for (j, byte) in out.iter_mut().enumerate() {
+            let w = (8 * j) / 64;
+            let sh = (8 * j) % 64;
+            *byte = (self.words[w] >> sh) as u8;
+        }
+        out
+    }
+
+    /// Row of `len` columns with uniformly random contents.
+    pub fn random(len: usize, rng: &mut crate::util::Rng) -> Self {
+        let mut r = Self::zeros(len);
+        for w in &mut r.words {
+            *w = rng.next_u64();
+        }
+        r.mask_tail();
+        r
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn get(&self, i: usize) -> bool {
+        assert!(i < self.len, "column {i} out of range {}", self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    pub fn set(&mut self, i: usize, v: bool) {
+        assert!(i < self.len, "column {i} out of range {}", self.len);
+        let m = 1u64 << (i % 64);
+        if v {
+            self.words[i / 64] |= m;
+        } else {
+            self.words[i / 64] &= !m;
+        }
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    fn mask_tail(&mut self) {
+        let rem = self.len % 64;
+        if rem != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << rem) - 1;
+            }
+        }
+    }
+
+    /// Whole-row shift by one column with an explicit fill bit. This is the
+    /// *semantic* definition the migration-cell procedure must reproduce.
+    pub fn shifted(&self, dir: ShiftDir, fill: bool) -> Self {
+        self.shifted_by(dir, 1, fill)
+    }
+
+    /// Whole-row shift by `n` columns (word-level implementation).
+    pub fn shifted_by(&self, dir: ShiftDir, n: usize, fill: bool) -> Self {
+        if n == 0 {
+            return self.clone();
+        }
+        if n >= self.len {
+            return if fill { Self::ones(self.len) } else { Self::zeros(self.len) };
+        }
+        let mut out = Self::zeros(self.len);
+        let (wshift, bshift) = (n / 64, n % 64);
+        let nw = self.words.len();
+        match dir {
+            ShiftDir::Right => {
+                // out.words[k] = words[k-wshift] << bshift | words[k-wshift-1] >> (64-bshift)
+                for k in 0..nw {
+                    let mut v = 0u64;
+                    if k >= wshift {
+                        v = self.words[k - wshift] << bshift;
+                        if bshift != 0 && k > wshift {
+                            v |= self.words[k - wshift - 1] >> (64 - bshift);
+                        }
+                    }
+                    out.words[k] = v;
+                }
+                if fill {
+                    // fill the n lowest columns with ones
+                    for i in 0..n {
+                        out.set(i, true);
+                    }
+                }
+            }
+            ShiftDir::Left => {
+                for k in 0..nw {
+                    let mut v = 0u64;
+                    if k + wshift < nw {
+                        v = self.words[k + wshift] >> bshift;
+                        if bshift != 0 && k + wshift + 1 < nw {
+                            v |= self.words[k + wshift + 1] << (64 - bshift);
+                        }
+                    }
+                    out.words[k] = v;
+                }
+                // the tail beyond len was already zero; set fill columns
+                if fill {
+                    for i in (self.len - n)..self.len {
+                        out.set(i, true);
+                    }
+                }
+            }
+        }
+        out.mask_tail();
+        out
+    }
+
+    /// Bitwise AND (Ambit TRA with C0=0 control row).
+    pub fn and(&self, other: &Self) -> Self {
+        self.zip(other, |a, b| a & b)
+    }
+
+    /// Bitwise OR (Ambit TRA with C1=1 control row).
+    pub fn or(&self, other: &Self) -> Self {
+        self.zip(other, |a, b| a | b)
+    }
+
+    /// Bitwise XOR (composite Ambit program).
+    pub fn xor(&self, other: &Self) -> Self {
+        self.zip(other, |a, b| a ^ b)
+    }
+
+    /// Bitwise NOT (dual-contact-cell row).
+    pub fn not(&self) -> Self {
+        let mut out = self.clone();
+        for w in &mut out.words {
+            *w = !*w;
+        }
+        out.mask_tail();
+        out
+    }
+
+    /// Bitwise 3-input majority (the native TRA primitive).
+    pub fn maj3(a: &Self, b: &Self, c: &Self) -> Self {
+        assert_eq!(a.len, b.len);
+        assert_eq!(a.len, c.len);
+        let mut out = Self::zeros(a.len);
+        for k in 0..a.words.len() {
+            let (x, y, z) = (a.words[k], b.words[k], c.words[k]);
+            out.words[k] = (x & y) | (y & z) | (x & z);
+        }
+        out
+    }
+
+    fn zip(&self, other: &Self, f: impl Fn(u64, u64) -> u64) -> Self {
+        assert_eq!(self.len, other.len, "row length mismatch");
+        let mut out = Self::zeros(self.len);
+        for k in 0..self.words.len() {
+            out.words[k] = f(self.words[k], other.words[k]);
+        }
+        out.mask_tail();
+        out
+    }
+
+    /// Iterate the set columns (ascending).
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.len).filter(move |&i| self.get(i))
+    }
+
+    /// Raw word view (for the hot-path engines).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+}
+
+impl std::fmt::Debug for BitRow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let n = self.len.min(64);
+        let bits: String =
+            (0..n).map(|i| if self.get(i) { '1' } else { '0' }).collect();
+        write!(f, "BitRow[{}]({}{})", self.len, bits, if self.len > 64 { "…" } else { "" })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn spread_squash_roundtrip() {
+        let mut rng = Rng::new(77);
+        for _ in 0..200 {
+            let x = rng.next_u64() as u32;
+            let w = spread_even(x);
+            // naive reference
+            let mut want = 0u64;
+            for i in 0..32 {
+                if (x >> i) & 1 == 1 {
+                    want |= 1 << (2 * i);
+                }
+            }
+            assert_eq!(w, want);
+            assert_eq!(squash_even(w), x);
+            // odd positions untouched by the mask in squash
+            assert_eq!(squash_even(w | 0xAAAA_AAAA_AAAA_AAAA), x);
+        }
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let bytes: Vec<u8> = (0..=255).collect();
+        let r = BitRow::from_bytes(&bytes);
+        assert_eq!(r.to_bytes(), bytes);
+        assert_eq!(r.len(), 2048);
+    }
+
+    #[test]
+    fn get_set() {
+        let mut r = BitRow::zeros(130);
+        r.set(0, true);
+        r.set(64, true);
+        r.set(129, true);
+        assert!(r.get(0) && r.get(64) && r.get(129));
+        assert!(!r.get(1) && !r.get(128));
+        assert_eq!(r.count_ones(), 3);
+        r.set(64, false);
+        assert_eq!(r.count_ones(), 2);
+    }
+
+    #[test]
+    fn shift_right_semantics() {
+        let mut r = BitRow::zeros(130);
+        r.set(0, true);
+        r.set(63, true);
+        r.set(64, true);
+        let s = r.shifted(ShiftDir::Right, false);
+        assert!(s.get(1) && s.get(64) && s.get(65));
+        assert!(!s.get(0));
+        assert_eq!(s.count_ones(), 3);
+    }
+
+    #[test]
+    fn shift_left_semantics() {
+        let mut r = BitRow::zeros(130);
+        r.set(1, true);
+        r.set(64, true);
+        r.set(129, true);
+        let s = r.shifted(ShiftDir::Left, false);
+        assert!(s.get(0) && s.get(63) && s.get(128));
+        assert_eq!(s.count_ones(), 3);
+    }
+
+    #[test]
+    fn shift_fill() {
+        let r = BitRow::zeros(100);
+        assert!(r.shifted(ShiftDir::Right, true).get(0));
+        assert!(r.shifted(ShiftDir::Left, true).get(99));
+    }
+
+    #[test]
+    fn shift_by_n_matches_n_single_shifts() {
+        let mut rng = Rng::new(7);
+        let r = BitRow::random(1000, &mut rng);
+        for dir in [ShiftDir::Right, ShiftDir::Left] {
+            let mut step = r.clone();
+            for n in 0..130 {
+                assert_eq!(step, r.shifted_by(dir, n, false), "n={n} {dir:?}");
+                step = step.shifted(dir, false);
+            }
+        }
+    }
+
+    #[test]
+    fn shift_right_then_left_restores_interior() {
+        let mut rng = Rng::new(3);
+        let r = BitRow::random(512, &mut rng);
+        let back = r.shifted(ShiftDir::Right, false).shifted(ShiftDir::Left, false);
+        for i in 0..511 {
+            assert_eq!(back.get(i), r.get(i), "col {i}");
+        }
+    }
+
+    #[test]
+    fn shift_full_width() {
+        let mut rng = Rng::new(11);
+        let r = BitRow::random(200, &mut rng);
+        assert_eq!(r.shifted_by(ShiftDir::Right, 200, false), BitRow::zeros(200));
+        assert_eq!(r.shifted_by(ShiftDir::Left, 300, true), BitRow::ones(200));
+    }
+
+    #[test]
+    fn logic_ops() {
+        let mut rng = Rng::new(5);
+        let a = BitRow::random(300, &mut rng);
+        let b = BitRow::random(300, &mut rng);
+        let c = BitRow::random(300, &mut rng);
+        for i in 0..300 {
+            assert_eq!(a.and(&b).get(i), a.get(i) & b.get(i));
+            assert_eq!(a.or(&b).get(i), a.get(i) | b.get(i));
+            assert_eq!(a.xor(&b).get(i), a.get(i) ^ b.get(i));
+            assert_eq!(a.not().get(i), !a.get(i));
+            let maj = BitRow::maj3(&a, &b, &c).get(i);
+            let n = a.get(i) as u8 + b.get(i) as u8 + c.get(i) as u8;
+            assert_eq!(maj, n >= 2);
+        }
+    }
+
+    #[test]
+    fn not_masks_tail() {
+        let r = BitRow::zeros(70);
+        assert_eq!(r.not().count_ones(), 70);
+    }
+
+    #[test]
+    fn ones_count() {
+        assert_eq!(BitRow::ones(65).count_ones(), 65);
+        assert_eq!(BitRow::ones(64).count_ones(), 64);
+        assert_eq!(BitRow::ones(63).count_ones(), 63);
+    }
+}

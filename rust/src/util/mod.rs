@@ -1,0 +1,12 @@
+//! Shared utilities: bit-row storage, deterministic RNG, summary statistics,
+//! and the in-crate micro-benchmark + property-test harnesses (criterion and
+//! proptest are unavailable offline; see DESIGN.md §Substitutions).
+
+pub mod benchx;
+pub mod bitrow;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+pub use bitrow::{BitRow, ShiftDir};
+pub use rng::Rng;

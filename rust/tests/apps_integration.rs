@@ -1,0 +1,153 @@
+//! Integration: application kernels end-to-end through the BankSim engine
+//! (functional + timing + energy coupled), and cross-app properties.
+
+use shiftdram::apps::adder::{install_masks, kogge_stone_add, ripple_add};
+use shiftdram::apps::elements::ElementCtx;
+use shiftdram::apps::gf::{gf_mul, gf_mul_ref, install_gf_masks, xtime};
+use shiftdram::apps::multiplier::{install_mul_masks, shift_and_add_mul};
+use shiftdram::apps::reed_solomon::{rs_encode_ref, RsEncoder};
+use shiftdram::config::DramConfig;
+use shiftdram::util::proptest::{check, prop_assert_eq};
+use shiftdram::util::Rng;
+
+#[test]
+fn prop_adders_agree_with_each_other_and_host() {
+    check(24, |rng| {
+        let width = [8usize, 16, 32][rng.below(3)];
+        let cols = width * (rng.below(20) + 4);
+        let m = (1u64 << width) - 1;
+        let mut rc = ElementCtx::new(48, cols, width);
+        install_masks(&mut rc);
+        let n = rc.n_elements();
+        let a: Vec<u64> = (0..n).map(|_| rng.next_u64() & m).collect();
+        let b: Vec<u64> = (0..n).map(|_| rng.next_u64() & m).collect();
+        rc.set_row(0, rc.pack(&a));
+        rc.set_row(1, rc.pack(&b));
+        ripple_add(&mut rc, 0, 1, 2);
+        let mut ks = ElementCtx::new(48, cols, width);
+        install_masks(&mut ks);
+        ks.set_row(0, ks.pack(&a));
+        ks.set_row(1, ks.pack(&b));
+        kogge_stone_add(&mut ks, 0, 1, 2);
+        let want: Vec<u64> =
+            a.iter().zip(&b).map(|(x, y)| x.wrapping_add(*y) & m).collect();
+        prop_assert_eq(rc.unpack(rc.row(2)), want.clone(), "ripple vs host")?;
+        prop_assert_eq(ks.unpack(ks.row(2)), want, "kogge-stone vs host")
+    });
+}
+
+#[test]
+fn prop_gf_field_axioms() {
+    check(16, |rng| {
+        let mut ctx = ElementCtx::new(40, 256, 8);
+        install_gf_masks(&mut ctx);
+        let n = ctx.n_elements();
+        let a: Vec<u64> = (0..n).map(|_| rng.below(256) as u64).collect();
+        let b: Vec<u64> = (0..n).map(|_| rng.below(256) as u64).collect();
+        // commutativity through the in-DRAM multiplier
+        ctx.set_row(0, ctx.pack(&a));
+        ctx.set_row(1, ctx.pack(&b));
+        gf_mul(&mut ctx, 0, 1, 2);
+        let ab = ctx.unpack(ctx.row(2));
+        gf_mul(&mut ctx, 1, 0, 3);
+        let ba = ctx.unpack(ctx.row(3));
+        prop_assert_eq(ab.clone(), ba, "commutativity")?;
+        let want: Vec<u64> = a
+            .iter()
+            .zip(&b)
+            .map(|(&x, &y)| gf_mul_ref(x as u8, y as u8) as u64)
+            .collect();
+        prop_assert_eq(ab, want, "vs host reference")
+    });
+}
+
+#[test]
+fn gf_xtime_eight_times_is_identity_times_x8() {
+    // x^8 = x^4+x^3+x+1 (mod the AES polynomial): applying xtime 8 times
+    // equals multiplying by 0x1B's shifted form — check against host
+    let mut ctx = ElementCtx::new(40, 256, 8);
+    install_gf_masks(&mut ctx);
+    let vals: Vec<u64> = (0..32).map(|j| (j * 13 + 7) as u64 % 256).collect();
+    ctx.set_row(0, ctx.pack(&vals));
+    for _ in 0..8 {
+        xtime(&mut ctx, 0, 0);
+    }
+    let got = ctx.unpack(ctx.row(0));
+    let want: Vec<u64> = vals
+        .iter()
+        .map(|&v| {
+            let mut x = v as u8;
+            for _ in 0..8 {
+                x = gf_mul_ref(x, 2);
+            }
+            x as u64
+        })
+        .collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn multiplier_distributes_over_addition() {
+    // (a + b) * c == a*c + b*c (mod 256) — three kernels composed
+    let mut rng = Rng::new(31);
+    let mut ctx = ElementCtx::new(64, 256, 8);
+    install_masks(&mut ctx);
+    install_mul_masks(&mut ctx);
+    let n = ctx.n_elements();
+    let a: Vec<u64> = (0..n).map(|_| rng.below(256) as u64).collect();
+    let b: Vec<u64> = (0..n).map(|_| rng.below(256) as u64).collect();
+    let c: Vec<u64> = (0..n).map(|_| rng.below(256) as u64).collect();
+    ctx.set_row(0, ctx.pack(&a));
+    ctx.set_row(1, ctx.pack(&b));
+    ctx.set_row(2, ctx.pack(&c));
+    // lhs = (a+b)*c into row 50
+    kogge_stone_add(&mut ctx, 0, 1, 45);
+    shift_and_add_mul(&mut ctx, 45, 2, 50);
+    // rhs = a*c + b*c into row 51
+    shift_and_add_mul(&mut ctx, 0, 2, 46);
+    shift_and_add_mul(&mut ctx, 1, 2, 47);
+    kogge_stone_add(&mut ctx, 46, 47, 51);
+    assert_eq!(ctx.unpack(ctx.row(50)), ctx.unpack(ctx.row(51)));
+}
+
+#[test]
+fn rs_parity_linearity_in_dram() {
+    let enc = RsEncoder::new(7, 3);
+    let mut rng = Rng::new(41);
+    let mut ctx = ElementCtx::new(96, 128, 8);
+    enc.install(&mut ctx);
+    let n = ctx.n_elements();
+    let m1: Vec<Vec<u8>> = (0..n)
+        .map(|_| (0..7).map(|_| rng.below(256) as u8).collect())
+        .collect();
+    enc.load_messages(&mut ctx, &m1);
+    enc.encode(&mut ctx);
+    let p1 = enc.read_parity(&ctx);
+    for (j, m) in m1.iter().enumerate() {
+        assert_eq!(p1[j], rs_encode_ref(m, 3), "codeword {j}");
+    }
+}
+
+#[test]
+fn full_row_scale_gf_through_engine_accounting() {
+    // run xtime on a full 8 KB row and convert the AAP census into the
+    // DDR3 timing/energy budget — the end-to-end cost statement
+    let cfg = DramConfig::ddr3_1333_4gb();
+    let mut ctx = ElementCtx::new(40, cfg.geometry.cols_per_row, 8);
+    install_gf_masks(&mut ctx);
+    let n = ctx.n_elements();
+    let mut rng = Rng::new(55);
+    let a: Vec<u64> = (0..n).map(|_| rng.below(256) as u64).collect();
+    ctx.set_row(0, ctx.pack(&a));
+    xtime(&mut ctx, 0, 1);
+    let got = ctx.unpack(ctx.row(1));
+    for j in 0..n {
+        assert_eq!(got[j], gf_mul_ref(a[j] as u8, 2) as u64);
+    }
+    let e_aap_nj = (2.0 * cfg.energy.e_act_pj(&cfg.timing) + cfg.energy.e_pre_pj) / 1e3;
+    let t_us = ctx.aaps as f64 * cfg.timing.t_aap() as f64 / 1e6;
+    let e_uj = ctx.aaps as f64 * e_aap_nj / 1e3;
+    // 8192 bytes xtimed in well under a millisecond and a few µJ
+    assert!(t_us < 1_000.0, "xtime row cost {t_us} us");
+    assert!(e_uj < 10.0, "xtime row energy {e_uj} uJ");
+}

@@ -1,0 +1,147 @@
+//! Integration + properties of the coordinator: routing fairness, batch
+//! integrity, bank-parallel scaling, state isolation, and failure modes.
+
+use shiftdram::config::DramConfig;
+use shiftdram::coordinator::{Placement, PimRequest, PimResponse, PimSystem};
+use shiftdram::pim::PimOp;
+use shiftdram::util::proptest::{check, prop_assert, prop_assert_eq};
+use shiftdram::util::{BitRow, Rng, ShiftDir};
+
+fn cfg() -> DramConfig {
+    DramConfig::tiny_test()
+}
+
+#[test]
+fn prop_routed_work_is_bit_exact_per_bank() {
+    check(16, |rng| {
+        let banks = rng.below(4) + 1;
+        let sys = PimSystem::start(&cfg(), banks, Placement::RoundRobin, rng.below(7) + 1);
+        let mut expected = Vec::new();
+        for bank in 0..banks {
+            let row = BitRow::random(256, rng);
+            let n = rng.below(6) + 1;
+            sys.submit(
+                PimRequest::WriteRow { subarray: 0, row: 0, bits: row.clone() },
+                Some(bank),
+            );
+            sys.submit(
+                PimRequest::Shift { subarray: 0, row: 0, n, dir: ShiftDir::Right },
+                Some(bank),
+            );
+            expected.push((bank, row.shifted_by(ShiftDir::Right, n, false)));
+        }
+        let mut rxs = Vec::new();
+        for bank in 0..banks {
+            rxs.push(sys.submit(PimRequest::ReadRow { subarray: 0, row: 0 }, Some(bank)));
+        }
+        sys.flush();
+        for (rx, (bank, want)) in rxs.into_iter().zip(expected) {
+            match rx.recv().unwrap() {
+                PimResponse::Row { bank: b, bits } => {
+                    prop_assert_eq(b, bank, "response bank")?;
+                    prop_assert_eq(bits, want, &format!("bank {bank} state"))?;
+                }
+                other => return Err(format!("unexpected {other:?}")),
+            }
+        }
+        sys.shutdown();
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_round_robin_is_fair() {
+    check(16, |rng| {
+        let banks = rng.below(6) + 2;
+        let per = rng.below(20) + 4;
+        let sys = PimSystem::start(&cfg(), banks, Placement::RoundRobin, 4);
+        for _ in 0..banks * per {
+            sys.submit(
+                PimRequest::Shift { subarray: 0, row: 0, n: 1, dir: ShiftDir::Left },
+                None,
+            );
+        }
+        sys.flush();
+        let m = sys.metrics().clone();
+        sys.shutdown();
+        for b in 0..banks {
+            prop_assert(
+                m.ops(b) == per as u64,
+                format!("bank {b} got {} of {per}", m.ops(b)),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn throughput_scales_linearly_to_32_banks() {
+    let cfg = DramConfig::ddr3_1333_4gb();
+    let run = |banks: usize| {
+        let sys = PimSystem::start(&cfg, banks, Placement::RoundRobin, 16);
+        for _ in 0..1024 {
+            sys.submit(
+                PimRequest::Shift { subarray: 0, row: 0, n: 1, dir: ShiftDir::Right },
+                None,
+            );
+        }
+        sys.shutdown().throughput_mops
+    };
+    let t1 = run(1);
+    let t8 = run(8);
+    let t32 = run(32);
+    // paper §5.1.4: 4.82 → 38.56 → 154.24 MOps/s
+    assert!((4.3..5.1).contains(&t1), "1 bank {t1}");
+    assert!((7.0..9.0).contains(&(t8 / t1)), "8-bank scaling {}", t8 / t1);
+    assert!((28.0..36.0).contains(&(t32 / t1)), "32-bank scaling {}", t32 / t1);
+}
+
+#[test]
+fn mixed_op_stream_through_coordinator() {
+    let sys = PimSystem::start(&cfg(), 2, Placement::RoundRobin, 3);
+    let mut rng = Rng::new(9);
+    let a = BitRow::random(256, &mut rng);
+    let b = BitRow::random(256, &mut rng);
+    sys.submit(PimRequest::WriteRow { subarray: 1, row: 0, bits: a.clone() }, Some(0));
+    sys.submit(PimRequest::WriteRow { subarray: 1, row: 1, bits: b.clone() }, Some(0));
+    sys.submit(
+        PimRequest::Op { subarray: 1, op: PimOp::Xor { a: 0, b: 1, dst: 2 } },
+        Some(0),
+    );
+    sys.submit(
+        PimRequest::Op { subarray: 1, op: PimOp::ShiftRight { src: 2, dst: 3 } },
+        Some(0),
+    );
+    let rx = sys.submit(PimRequest::ReadRow { subarray: 1, row: 3 }, Some(0));
+    sys.flush();
+    let PimResponse::Row { bits, .. } = rx.recv().unwrap() else {
+        panic!("expected row");
+    };
+    assert_eq!(bits, a.xor(&b).shifted(ShiftDir::Right, false));
+    sys.shutdown();
+}
+
+#[test]
+fn energy_accounting_aggregates_across_banks() {
+    let cfg = DramConfig::ddr3_1333_4gb();
+    let sys = PimSystem::start(&cfg, 4, Placement::RoundRobin, 8);
+    for _ in 0..64 {
+        sys.submit(
+            PimRequest::Shift { subarray: 0, row: 0, n: 1, dir: ShiftDir::Right },
+            None,
+        );
+    }
+    let r = sys.shutdown();
+    assert_eq!(r.total_aaps, 64 * 4);
+    // 64 shifts × ~31.3 nJ, independent of how many banks ran them
+    let nj = r.total_energy_pj / 1e3;
+    assert!((64.0 * 31.0..64.0 * 34.0).contains(&nj), "total {nj} nJ");
+}
+
+#[test]
+fn shutdown_with_empty_queues_is_clean() {
+    let sys = PimSystem::start(&cfg(), 3, Placement::LeastLoaded, 4);
+    let r = sys.shutdown();
+    assert_eq!(r.total_ops, 0);
+    assert_eq!(r.makespan_ps, 0);
+}

@@ -1,0 +1,186 @@
+//! Property-based integration tests of the PIM layer's invariants
+//! (in-crate harness; proptest is unavailable offline).
+
+use shiftdram::dram::address::RowRef;
+use shiftdram::dram::subarray::Subarray;
+use shiftdram::pim::{apply, run, shift_commands, PimOp};
+use shiftdram::util::proptest::{check, prop_assert, prop_assert_eq};
+use shiftdram::util::{BitRow, Rng, ShiftDir};
+
+fn rand_subarray(rng: &mut Rng) -> (Subarray, Vec<BitRow>, usize) {
+    let cols = 2 * (rng.below(600) + 20);
+    let rows = rng.below(12) + 8;
+    let mut sa = Subarray::new(rows, cols);
+    let data: Vec<BitRow> = (0..rows).map(|_| BitRow::random(cols, rng)).collect();
+    for (i, r) in data.iter().enumerate() {
+        sa.write_row(i, r.clone());
+    }
+    (sa, data, cols)
+}
+
+#[test]
+fn prop_shift_equals_semantic_shift() {
+    check(128, |rng| {
+        let (mut sa, data, cols) = rand_subarray(rng);
+        let dir = if rng.bool() { ShiftDir::Right } else { ShiftDir::Left };
+        let src = rng.below(4);
+        let dst = 4 + rng.below(4);
+        run(&mut sa, &PimOp::ShiftBy { src, dst, n: 1, dir }.lower());
+        prop_assert_eq(
+            sa.read_row(dst).clone(),
+            data[src].shifted(dir, false),
+            &format!("{dir:?} cols={cols}"),
+        )
+    });
+}
+
+#[test]
+fn prop_shift_n_composes() {
+    check(64, |rng| {
+        let (mut sa, data, _) = rand_subarray(rng);
+        let n = rng.below(20);
+        let dir = if rng.bool() { ShiftDir::Right } else { ShiftDir::Left };
+        run(&mut sa, &PimOp::ShiftBy { src: 0, dst: 1, n, dir }.lower());
+        prop_assert_eq(
+            sa.read_row(1).clone(),
+            data[0].shifted_by(dir, n, false),
+            &format!("n={n}"),
+        )
+    });
+}
+
+#[test]
+fn prop_shift_preserves_all_other_rows() {
+    check(64, |rng| {
+        let (mut sa, data, _) = rand_subarray(rng);
+        let src = rng.below(3);
+        let dst = 3 + rng.below(3);
+        run(&mut sa, &PimOp::ShiftRight { src, dst }.lower());
+        for (i, want) in data.iter().enumerate() {
+            if i != dst {
+                prop_assert_eq(sa.read_row(i).clone(), want.clone(), &format!("row {i}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shift_population_conserved_except_boundary() {
+    // a shift may only lose the bit that falls off the edge and shifts in 0
+    check(64, |rng| {
+        let (mut sa, data, cols) = rand_subarray(rng);
+        run(&mut sa, &PimOp::ShiftRight { src: 0, dst: 1 }.lower());
+        let lost = data[0].get(cols - 1) as usize;
+        prop_assert_eq(
+            sa.read_row(1).count_ones(),
+            data[0].count_ones() - lost,
+            "popcount",
+        )
+    });
+}
+
+#[test]
+fn prop_migration_rows_hold_parity_split() {
+    // after the first two AAPs of a right shift, the top row holds the
+    // even columns and the bottom row the odds (paper §3.3)
+    check(64, |rng| {
+        let (mut sa, data, cols) = rand_subarray(rng);
+        apply(&mut sa, &shift_commands(RowRef::Data(0), RowRef::Data(1), ShiftDir::Right)[0]);
+        apply(&mut sa, &shift_commands(RowRef::Data(0), RowRef::Data(1), ShiftDir::Right)[1]);
+        for i in 0..cols / 2 {
+            prop_assert(
+                sa.mig_top().get(i) == data[0].get(2 * i),
+                format!("top cell {i}"),
+            )?;
+        }
+        for i in 1..=cols / 2 {
+            prop_assert(
+                sa.mig_bot().get(i) == data[0].get(2 * i - 1),
+                format!("bot cell {i}"),
+            )?;
+        }
+        prop_assert(!sa.mig_bot().get(0), "edge cell loads 0")
+    });
+}
+
+#[test]
+fn prop_logic_de_morgan() {
+    check(48, |rng| {
+        let (mut sa, data, _) = rand_subarray(rng);
+        // !(a & b) == !a | !b — exercised through the full op stack
+        run(&mut sa, &PimOp::And { a: 0, b: 1, dst: 2 }.lower());
+        run(&mut sa, &PimOp::Not { src: 2, dst: 3 }.lower());
+        run(&mut sa, &PimOp::Not { src: 0, dst: 4 }.lower());
+        run(&mut sa, &PimOp::Not { src: 1, dst: 5 }.lower());
+        run(&mut sa, &PimOp::Or { a: 4, b: 5, dst: 6 }.lower());
+        prop_assert_eq(
+            sa.read_row(3).clone(),
+            sa.read_row(6).clone(),
+            "De Morgan",
+        )?;
+        prop_assert_eq(
+            sa.read_row(3).clone(),
+            data[0].and(&data[1]).not(),
+            "vs host",
+        )
+    });
+}
+
+#[test]
+fn prop_xor_is_addition_mod2() {
+    check(48, |rng| {
+        let (mut sa, data, _) = rand_subarray(rng);
+        run(&mut sa, &PimOp::Xor { a: 0, b: 1, dst: 2 }.lower());
+        run(&mut sa, &PimOp::Xor { a: 2, b: 1, dst: 3 }.lower());
+        prop_assert_eq(sa.read_row(3).clone(), data[0].clone(), "xor involution")
+    });
+}
+
+#[test]
+fn prop_maj_monotone() {
+    check(48, |rng| {
+        let (mut sa, data, _) = rand_subarray(rng);
+        run(&mut sa, &PimOp::Maj { a: 0, b: 1, c: 2, dst: 3 }.lower());
+        let maj = sa.read_row(3).clone();
+        // MAJ(a,b,c) is between AND and OR of any pair
+        let and_all = data[0].and(&data[1]).and(&data[2]);
+        let or_all = data[0].or(&data[1]).or(&data[2]);
+        prop_assert_eq(maj.clone().and(&and_all), and_all.clone(), "AND ≤ MAJ")?;
+        prop_assert_eq(maj.clone().or(&or_all), or_all, "MAJ ≤ OR")
+    });
+}
+
+#[test]
+fn prop_in_place_shift_chain() {
+    check(32, |rng| {
+        let (mut sa, data, _) = rand_subarray(rng);
+        let k = rng.below(8) + 1;
+        for _ in 0..k {
+            run(&mut sa, &PimOp::ShiftBy { src: 0, dst: 0, n: 1, dir: ShiftDir::Right }.lower());
+        }
+        prop_assert_eq(
+            sa.read_row(0).clone(),
+            data[0].shifted_by(ShiftDir::Right, k, false),
+            &format!("chain of {k}"),
+        )
+    });
+}
+
+#[test]
+fn prop_mig_port_b_roundtrip() {
+    // write through A, read through B, write through B, read through A:
+    // net effect is shift right then left = interior identity
+    check(32, |rng| {
+        let (mut sa, data, cols) = rand_subarray(rng);
+        run(&mut sa, &PimOp::ShiftRight { src: 0, dst: 1 }.lower());
+        run(&mut sa, &PimOp::ShiftLeft { src: 1, dst: 2 }.lower());
+        for i in 0..cols - 1 {
+            prop_assert(
+                sa.read_row(2).get(i) == data[0].get(i),
+                format!("interior {i}"),
+            )?;
+        }
+        Ok(())
+    });
+}

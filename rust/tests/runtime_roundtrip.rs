@@ -1,0 +1,117 @@
+//! Cross-language integration: the AOT-compiled JAX/Pallas artifacts,
+//! executed from Rust through PJRT, must agree with the native Rust
+//! transient oracle — same physics, three implementations (Pallas kernel,
+//! pure-jnp scan, native f32), one answer.
+//!
+//! Requires `make artifacts`; tests exit early (with a note) if missing.
+
+use shiftdram::circuit::montecarlo::{Backend, MonteCarlo};
+use shiftdram::circuit::native::{shift_transient, TransientCfg};
+use shiftdram::circuit::params::{pidx::*, TechNode};
+use shiftdram::config::McConfig;
+use shiftdram::runtime::Runtime;
+use shiftdram::util::Rng;
+
+fn runtime() -> Option<(Runtime, shiftdram::runtime::Manifest)> {
+    match Runtime::with_artifacts() {
+        Ok(x) => Some(x),
+        Err(e) => {
+            eprintln!("skipping PJRT round-trip tests: {e:#} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn pjrt_matches_native_oracle_nominal() {
+    let Some((rt, m)) = runtime() else { return };
+    let cfg = TransientCfg::default();
+    let mut input = Vec::with_capacity(m.mc_batch * N_PARAMS);
+    let mut expected = Vec::new();
+    for t in 0..m.mc_batch {
+        let node = match t % 4 {
+            0 => TechNode::n45(),
+            1 => TechNode::n22(),
+            2 => TechNode::n20(),
+            _ => TechNode::n10(),
+        };
+        let p = node.mc_nominal(t % 2 == 0);
+        input.extend_from_slice(&p);
+        expected.push(shift_transient(&p, &cfg));
+    }
+    let out = rt
+        .exec_f32("shift_mc", &input, &[m.mc_batch as i64, N_PARAMS as i64])
+        .unwrap();
+    for (t, want) in expected.iter().enumerate() {
+        for k in 0..N_OUT {
+            let got = out[t * N_OUT + k];
+            assert!(
+                (got - want[k]).abs() < 2e-3,
+                "trial {t} out {k}: pjrt {got} vs native {}",
+                want[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_matches_native_oracle_perturbed() {
+    let Some((rt, m)) = runtime() else { return };
+    let cfg = TransientCfg::default();
+    let mc = MonteCarlo::new(McConfig::quick(), TechNode::n22());
+    let mut rng = Rng::new(2024);
+    let mut input = Vec::with_capacity(m.mc_batch * N_PARAMS);
+    let mut expected = Vec::new();
+    for _ in 0..m.mc_batch {
+        let (p, _) = mc.draw(&mut rng, 0.10);
+        input.extend_from_slice(&p);
+        expected.push(shift_transient(&p, &cfg));
+    }
+    let out = rt
+        .exec_f32("shift_mc", &input, &[m.mc_batch as i64, N_PARAMS as i64])
+        .unwrap();
+    let mut worst = 0.0f32;
+    for (t, want) in expected.iter().enumerate() {
+        for k in 0..N_OUT {
+            worst = worst.max((out[t * N_OUT + k] - want[k]).abs());
+        }
+    }
+    assert!(worst < 5e-3, "worst PJRT-vs-native deviation {worst} V");
+}
+
+#[test]
+fn pjrt_and_native_mc_agree_on_failure_rates() {
+    let Some((rt, m)) = runtime() else { return };
+    let mut cfg = McConfig::quick();
+    cfg.trials = 8_192;
+    let mc = MonteCarlo::new(cfg, TechNode::n22());
+    let native = mc.run_level(&Backend::Native, 0.10, 99).failure_rate();
+    let pjrt = mc
+        .run_level(&Backend::Pjrt(&rt, &m), 0.10, 99)
+        .failure_rate();
+    // same seeds, same draws; only f32 op-ordering differences on
+    // borderline trials may flip classifications
+    assert!(
+        (native - pjrt).abs() < 0.01,
+        "native {native} vs pjrt {pjrt}"
+    );
+}
+
+#[test]
+fn waveform_artifact_tells_shift_story() {
+    let Some((rt, m)) = runtime() else { return };
+    let node = TechNode::n22();
+    let p = node.mc_nominal(true);
+    let out = rt
+        .exec_f32("shift_waveform", &p, &[1, N_PARAMS as i64])
+        .unwrap();
+    assert_eq!(out.len(), m.waveform_len * m.waveform_nodes);
+    let at = |t: usize, n: usize| out[t * m.waveform_nodes + n];
+    let half = m.waveform_len / 2;
+    // migration cell (node 1) reaches rail by the end of AAP 1
+    assert!(at(half - 1, 1) > 1.1, "v_mig {}", at(half - 1, 1));
+    // dst (node 2) reaches rail by the end of AAP 2
+    assert!(at(m.waveform_len - 1, 2) > 1.1);
+    // dst untouched during AAP 1
+    assert!(at(half - 1, 2).abs() < 0.05);
+}
