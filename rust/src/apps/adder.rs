@@ -9,10 +9,16 @@
 //! Both use element-boundary masks so carries never cross elements (each
 //! element adds independently, SIMD-style across the row).
 //!
+//! The public entry points ([`ripple_add`], [`kogge_stone_add`]) are
+//! compile-once: the schedule is recorded by the `build_*` body at most
+//! once per (shape, config) and replayed from the shared program cache on
+//! every later call. The `build_*` functions stay public — they compose
+//! into larger cached kernels (see `multiplier`).
+//!
 //! Row map (within the app's subarray): rows 0..=2 inputs/output,
 //! 3..=7 temporaries, 8..=15 boundary masks, 16+ scratch.
 
-use crate::apps::elements::{shift_in_element, Dir, ElementCtx};
+use crate::apps::elements::{shift_in_element, Dir, ElementCtx, PimTape};
 use crate::pim::PimOp;
 
 /// Temporary/mask row assignments.
@@ -50,43 +56,72 @@ pub fn install_masks(ctx: &mut ElementCtx) {
 }
 
 /// Ripple-carry add: `row_out := row_a + row_b` (mod 2^W per element).
-/// Cost: O(W) shift+logic iterations.
+/// Cost: O(W) shift+logic iterations. Cached per shape.
 pub fn ripple_add(ctx: &mut ElementCtx, row_a: usize, row_b: usize, row_out: usize) {
-    let w = ctx.width;
-    ctx.op(PimOp::And { a: row_a, b: row_b, dst: T_G });
-    ctx.op(PimOp::Xor { a: row_a, b: row_b, dst: T_P });
+    ctx.run_kernel(
+        "adder.ripple",
+        &[row_a as u64, row_b as u64, row_out as u64],
+        |t| build_ripple_add(t, row_a, row_b, row_out),
+    );
+}
+
+/// Emit the ripple-carry schedule onto a tape.
+pub fn build_ripple_add(
+    tape: &mut impl PimTape,
+    row_a: usize,
+    row_b: usize,
+    row_out: usize,
+) {
+    let w = tape.width();
+    tape.op(PimOp::And { a: row_a, b: row_b, dst: T_G });
+    tape.op(PimOp::Xor { a: row_a, b: row_b, dst: T_P });
     // c = shift_up(G); then W-1 refinement rounds
-    shift_in_element(ctx, T_G, T_C, Dir::Up, 1, mask_row_for(1));
+    shift_in_element(tape, T_G, T_C, Dir::Up, 1, mask_row_for(1));
     for _ in 0..w.saturating_sub(1) {
         // c' = shift_up(G | (P & c))
-        ctx.op(PimOp::And { a: T_P, b: T_C, dst: T_X });
-        ctx.op(PimOp::Or { a: T_G, b: T_X, dst: T_X });
-        shift_in_element(ctx, T_X, T_C, Dir::Up, 1, mask_row_for(1));
+        tape.op(PimOp::And { a: T_P, b: T_C, dst: T_X });
+        tape.op(PimOp::Or { a: T_G, b: T_X, dst: T_X });
+        shift_in_element(tape, T_X, T_C, Dir::Up, 1, mask_row_for(1));
     }
-    ctx.op(PimOp::Xor { a: T_P, b: T_C, dst: row_out });
+    tape.op(PimOp::Xor { a: T_P, b: T_C, dst: row_out });
 }
 
 /// Kogge-Stone add: `row_out := row_a + row_b` in log₂W prefix rounds.
+/// Cached per shape.
 pub fn kogge_stone_add(ctx: &mut ElementCtx, row_a: usize, row_b: usize, row_out: usize) {
-    let w = ctx.width;
+    ctx.run_kernel(
+        "adder.kogge_stone",
+        &[row_a as u64, row_b as u64, row_out as u64],
+        |t| build_kogge_stone_add(t, row_a, row_b, row_out),
+    );
+}
+
+/// Emit the Kogge-Stone schedule onto a tape.
+pub fn build_kogge_stone_add(
+    tape: &mut impl PimTape,
+    row_a: usize,
+    row_b: usize,
+    row_out: usize,
+) {
+    let w = tape.width();
     assert!(w.is_power_of_two(), "Kogge-Stone wants power-of-two widths");
-    ctx.op(PimOp::And { a: row_a, b: row_b, dst: T_G });
-    ctx.op(PimOp::Xor { a: row_a, b: row_b, dst: T_P });
+    tape.op(PimOp::And { a: row_a, b: row_b, dst: T_G });
+    tape.op(PimOp::Xor { a: row_a, b: row_b, dst: T_P });
     // keep the half-sum: S = P (G/P get consumed by the prefix rounds)
-    ctx.op(PimOp::Copy { src: T_P, dst: T_S });
+    tape.op(PimOp::Copy { src: T_P, dst: T_S });
     let mut d = 1;
     while d < w {
         // G = G | (P & (G << d));  P = P & (P << d)
-        shift_in_element(ctx, T_G, T_X, Dir::Up, d, mask_row_for(d));
-        ctx.op(PimOp::And { a: T_P, b: T_X, dst: T_X });
-        ctx.op(PimOp::Or { a: T_G, b: T_X, dst: T_G });
-        shift_in_element(ctx, T_P, T_X, Dir::Up, d, mask_row_for(d));
-        ctx.op(PimOp::And { a: T_P, b: T_X, dst: T_P });
+        shift_in_element(tape, T_G, T_X, Dir::Up, d, mask_row_for(d));
+        tape.op(PimOp::And { a: T_P, b: T_X, dst: T_X });
+        tape.op(PimOp::Or { a: T_G, b: T_X, dst: T_G });
+        shift_in_element(tape, T_P, T_X, Dir::Up, d, mask_row_for(d));
+        tape.op(PimOp::And { a: T_P, b: T_X, dst: T_P });
         d *= 2;
     }
     // carries into each position: c = G << 1; sum = S ^ c
-    shift_in_element(ctx, T_G, T_C, Dir::Up, 1, mask_row_for(1));
-    ctx.op(PimOp::Xor { a: T_S, b: T_C, dst: row_out });
+    shift_in_element(tape, T_G, T_C, Dir::Up, 1, mask_row_for(1));
+    tape.op(PimOp::Xor { a: T_S, b: T_C, dst: row_out });
 }
 
 #[cfg(test)]
@@ -187,5 +222,28 @@ mod tests {
             ks.aaps,
             rc.aaps
         );
+    }
+
+    #[test]
+    fn repeated_adds_hit_the_kernel_cache() {
+        use crate::config::DramConfig;
+        use crate::pim::compile::ProgramCache;
+        use std::sync::Arc;
+
+        // private cache so counters aren't shared with concurrent tests
+        let cache = Arc::new(ProgramCache::new(16));
+        let mut ctx =
+            ElementCtx::with_config(40, 512, 8, DramConfig::tiny_test(), cache.clone());
+        install_masks(&mut ctx);
+        let n = ctx.n_elements();
+        let vals: Vec<u64> = (0..n).map(|j| j as u64 % 256).collect();
+        ctx.set_row(0, ctx.pack(&vals));
+        ctx.set_row(1, ctx.pack(&vals));
+        kogge_stone_add(&mut ctx, 0, 1, 2);
+        kogge_stone_add(&mut ctx, 0, 1, 2);
+        ripple_add(&mut ctx, 0, 1, 2);
+        let s = cache.stats();
+        assert_eq!(s.misses, 2, "one compile per adder shape: {s:?}");
+        assert_eq!(s.hits, 1, "repeat call served from cache: {s:?}");
     }
 }

@@ -10,13 +10,17 @@
 //! * **MixColumns / InvMixColumns** — GF(2⁸) constant multiplies (xtime
 //!   chains = migration-cell shifts) and XOR accumulation.
 //!
+//! Every step is a cached kernel: the full MixColumns schedule (~3k
+//! macro-ops of xtime chains) compiles once per shape and replays from
+//! the program cache on every round of every batch.
+//!
 //! SubBytes is deliberately out of scope: an 8→8-bit S-box lookup is a
 //! 256-entry table per byte, which neither the paper's design nor Ambit
 //! provides a primitive for (bit-sliced S-box circuits are possible but
 //! orthogonal to the shift contribution; see DESIGN.md §Limitations).
 
-use crate::apps::elements::ElementCtx;
-use crate::apps::gf::{gf_mul_const, gf_mul_ref};
+use crate::apps::elements::{ElementCtx, PimTape};
+use crate::apps::gf::{build_gf_mul_const, gf_mul_ref};
 use crate::pim::PimOp;
 
 /// Row map: rows 0–30 are reserved by the GF layer (adder temps, boundary
@@ -34,17 +38,25 @@ pub fn install_aes(ctx: &mut ElementCtx) {
     crate::apps::gf::install_gf_masks(ctx);
 }
 
-/// AddRoundKey: state[r] ^= key[r] for all 16 rows.
+/// AddRoundKey: state[r] ^= key[r] for all 16 rows. Cached.
 pub fn add_round_key(ctx: &mut ElementCtx) {
+    ctx.run_kernel("aes.add_round_key", &[], |t| build_add_round_key(t));
+}
+
+fn build_add_round_key(tape: &mut impl PimTape) {
     for r in 0..16 {
-        ctx.op(PimOp::Xor { a: STATE_BASE + r, b: KEY_BASE + r, dst: STATE_BASE + r });
+        tape.op(PimOp::Xor { a: STATE_BASE + r, b: KEY_BASE + r, dst: STATE_BASE + r });
     }
 }
 
 /// ShiftRows: AES's byte rotation of state rows 1–3 becomes a pure row
 /// permutation (RowClones through a staging row). State byte index is
-/// `4*col + row` (column-major, as in FIPS-197).
+/// `4*col + row` (column-major, as in FIPS-197). Cached.
 pub fn shift_rows(ctx: &mut ElementCtx) {
+    ctx.run_kernel("aes.shift_rows", &[], |t| build_shift_rows(t));
+}
+
+fn build_shift_rows(tape: &mut impl PimTape) {
     // new[row, col] = old[row, (col + row) % 4]
     for row in 1..4 {
         // rotate the 4 rows {row, row+4, row+8, row+12} left by `row`
@@ -52,10 +64,10 @@ pub fn shift_rows(ctx: &mut ElementCtx) {
         // stage the rotated images
         for col in 0..4 {
             let src = idx[(col + row) % 4];
-            ctx.op(PimOp::Copy { src, dst: OUT_BASE + col });
+            tape.op(PimOp::Copy { src, dst: OUT_BASE + col });
         }
         for col in 0..4 {
-            ctx.op(PimOp::Copy { src: OUT_BASE + col, dst: idx[col] });
+            tape.op(PimOp::Copy { src: OUT_BASE + col, dst: idx[col] });
         }
     }
 }
@@ -63,24 +75,29 @@ pub fn shift_rows(ctx: &mut ElementCtx) {
 /// MixColumns with coefficient matrix rows `coef` (e.g. [2,3,1,1] for
 /// encryption, [0x0E,0x0B,0x0D,0x09] for decryption).
 fn mix_columns_with(ctx: &mut ElementCtx, coef: [u8; 4]) {
+    let packed = u64::from_le_bytes([coef[0], coef[1], coef[2], coef[3], 0, 0, 0, 0]);
+    ctx.run_kernel("aes.mix_columns", &[packed], |t| build_mix_columns_with(t, coef));
+}
+
+fn build_mix_columns_with(tape: &mut impl PimTape, coef: [u8; 4]) {
     for col in 0..4 {
         let s = |r: usize| STATE_BASE + 4 * col + r;
         for out_r in 0..4 {
-            ctx.op(PimOp::SetZero { dst: T_ACC });
+            tape.op(PimOp::SetZero { dst: T_ACC });
             for in_r in 0..4 {
                 let k = coef[(4 + in_r - out_r) % 4];
                 if k == 1 {
-                    ctx.op(PimOp::Xor { a: T_ACC, b: s(in_r), dst: T_ACC });
+                    tape.op(PimOp::Xor { a: T_ACC, b: s(in_r), dst: T_ACC });
                 } else {
-                    gf_mul_const(ctx, s(in_r), T_MIX[0], k);
-                    ctx.op(PimOp::Xor { a: T_ACC, b: T_MIX[0], dst: T_ACC });
+                    build_gf_mul_const(tape, s(in_r), T_MIX[0], k);
+                    tape.op(PimOp::Xor { a: T_ACC, b: T_MIX[0], dst: T_ACC });
                 }
             }
-            ctx.op(PimOp::Copy { src: T_ACC, dst: OUT_BASE + 4 * col + out_r });
+            tape.op(PimOp::Copy { src: T_ACC, dst: OUT_BASE + 4 * col + out_r });
         }
     }
     for r in 0..16 {
-        ctx.op(PimOp::Copy { src: OUT_BASE + r, dst: STATE_BASE + r });
+        tape.op(PimOp::Copy { src: OUT_BASE + r, dst: STATE_BASE + r });
     }
 }
 

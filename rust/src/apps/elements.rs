@@ -11,12 +11,31 @@
 //! Mask rows are host-written constants (like Ambit's control rows, they
 //! are initialized once at boot).
 //!
+//! # Kernels are compiled once, executed from the cache
+//!
+//! Kernel bodies are written against the [`PimTape`] trait — a sink of
+//! macro-ops plus the element width. Two tapes exist:
+//!
+//! * [`ProgramSketch`] records the ops; the entry-point wrappers
+//!   (`adder::ripple_add`, `gf::gf_mul`, …) run a sketch **only on a cache
+//!   miss**, compile it into a [`CompiledProgram`], and store it in the
+//!   shared [`ProgramCache`] keyed by (kernel name, shape parameters,
+//!   config fingerprint). Every later invocation with the same shape
+//!   replays the cached schedule through the word-level semantic executor.
+//! * [`ElementCtx`] itself is a tape that executes eagerly, command by
+//!   command — the reference path the cached path is property-tested
+//!   against, still used for data-dependent fragments.
+//!
 //! NOTE on direction names: a column-space `ShiftDir::Right` moves bit `i`
 //! to bit `i+1`, i.e. it is the *arithmetic left shift* (×2) of the packed
 //! little-endian elements. [`Dir::Up`] / [`Dir::Down`] name the arithmetic
 //! directions to keep callers sane.
 
+use std::sync::Arc;
+
+use crate::config::DramConfig;
 use crate::dram::subarray::Subarray;
+use crate::pim::compile::{CommandCensus, CompiledProgram, ProgramCache, ProgramShape};
 use crate::pim::{executor, PimOp};
 use crate::util::{BitRow, ShiftDir};
 
@@ -38,20 +57,105 @@ impl Dir {
     }
 }
 
+/// A sink of macro-ops over W-bit elements: kernel bodies are generic over
+/// this, so the same body either executes eagerly ([`ElementCtx`]) or
+/// records into a cacheable program ([`ProgramSketch`]).
+pub trait PimTape {
+    /// Element width the kernel is being built for.
+    fn width(&self) -> usize;
+    /// Accept one macro-op.
+    fn op(&mut self, op: PimOp);
+}
+
+/// Recording tape: collects the macro-op schedule of one kernel shape.
+pub struct ProgramSketch {
+    width: usize,
+    ops: Vec<PimOp>,
+}
+
+impl ProgramSketch {
+    pub fn new(width: usize) -> Self {
+        ProgramSketch { width, ops: Vec::new() }
+    }
+
+    pub fn ops(&self) -> &[PimOp] {
+        &self.ops
+    }
+
+    pub fn into_ops(self) -> Vec<PimOp> {
+        self.ops
+    }
+}
+
+impl PimTape for ProgramSketch {
+    fn width(&self) -> usize {
+        self.width
+    }
+
+    fn op(&mut self, op: PimOp) {
+        self.ops.push(op);
+    }
+}
+
 /// A subarray "tape" for element-wise programs: tracks the subarray, the
-/// element width, and the command census of everything executed.
+/// element width, the command census of everything executed, and the
+/// program cache its kernels compile into.
 pub struct ElementCtx {
     pub sa: Subarray,
     pub width: usize,
     pub aaps: usize,
     pub tras: usize,
     pub dras: usize,
+    cfg: DramConfig,
+    cfg_fp: u64,
+    cache: Arc<ProgramCache>,
+}
+
+impl PimTape for ElementCtx {
+    fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Eager execution: lower and apply immediately (the reference path).
+    fn op(&mut self, op: PimOp) {
+        ElementCtx::op(self, op);
+    }
 }
 
 impl ElementCtx {
+    /// Context against the process-wide kernel cache and the paper's DDR3
+    /// pricing config (the config only prices footprints; functional
+    /// behavior depends on `rows`/`cols` alone).
     pub fn new(rows: usize, cols: usize, width: usize) -> Self {
+        Self::with_config(
+            rows,
+            cols,
+            width,
+            DramConfig::ddr3_1333_4gb(),
+            ProgramCache::global(),
+        )
+    }
+
+    /// Context with an explicit pricing config and kernel cache.
+    pub fn with_config(
+        rows: usize,
+        cols: usize,
+        width: usize,
+        cfg: DramConfig,
+        cache: Arc<ProgramCache>,
+    ) -> Self {
         assert!(cols % width == 0, "row must pack whole elements");
-        ElementCtx { sa: Subarray::new(rows, cols), width, aaps: 0, tras: 0, dras: 0 }
+        let cfg_fp = cfg.fingerprint();
+        ElementCtx {
+            sa: Subarray::new(rows, cols),
+            width,
+            aaps: 0,
+            tras: 0,
+            dras: 0,
+            cfg,
+            cfg_fp,
+            cache,
+        }
     }
 
     pub fn cols(&self) -> usize {
@@ -62,18 +166,55 @@ impl ElementCtx {
         self.cols() / self.width
     }
 
-    /// Execute one macro-op, accounting commands.
+    /// The kernel cache this context compiles into.
+    pub fn cache(&self) -> &Arc<ProgramCache> {
+        &self.cache
+    }
+
+    /// Execute one macro-op eagerly, accounting commands (reference path).
     pub fn op(&mut self, op: PimOp) {
         let cmds = op.lower();
-        for c in &cmds {
-            match c {
-                crate::dram::address::Command::Aap { .. } => self.aaps += 1,
-                crate::dram::address::Command::Tra { .. } => self.tras += 1,
-                crate::dram::address::Command::Dra { .. } => self.dras += 1,
-                _ => {}
-            }
-        }
+        self.count(&CommandCensus::from_commands(&cmds));
         executor::run(&mut self.sa, &cmds);
+    }
+
+    fn count(&mut self, census: &CommandCensus) {
+        self.aaps += census.aap as usize;
+        self.tras += census.tra as usize;
+        self.dras += census.dra as usize;
+    }
+
+    /// Fetch (or, on first use of this shape, record + compile) the kernel
+    /// `name` and execute it. `params` must pin down everything the
+    /// builder's op stream depends on besides width/cols — operand rows,
+    /// constants, distances. This is the compile-once entry all app
+    /// kernels route through.
+    pub fn run_kernel(
+        &mut self,
+        name: &'static str,
+        params: &[u64],
+        build: impl FnOnce(&mut ProgramSketch),
+    ) {
+        let mut key_params = Vec::with_capacity(params.len() + 2);
+        key_params.push(self.width as u64);
+        key_params.push(self.cols() as u64);
+        key_params.extend_from_slice(params);
+        let shape = ProgramShape::Kernel { name, params: key_params };
+        let width = self.width;
+        let prog = self.cache.get_or_compile_keyed(shape, &self.cfg, self.cfg_fp, || {
+            let mut sketch = ProgramSketch::new(width);
+            build(&mut sketch);
+            sketch.into_ops()
+        });
+        self.execute(&prog);
+    }
+
+    /// Execute a compiled program (identity binding) through the word-level
+    /// semantic executor, accounting its census in O(1).
+    pub fn execute(&mut self, prog: &CompiledProgram) {
+        executor::run_compiled(&mut self.sa, prog, None);
+        let census = *prog.census();
+        self.count(&census);
     }
 
     /// Host-write a constant/mask row.
@@ -150,20 +291,20 @@ impl ElementCtx {
 /// mask in `mask_row` (which the caller must have initialized with
 /// [`ElementCtx::boundary_mask`] for this (dir, d)).
 pub fn shift_in_element(
-    ctx: &mut ElementCtx,
+    tape: &mut impl PimTape,
     src: usize,
     dst: usize,
     dir: Dir,
     d: usize,
     mask_row: usize,
 ) {
-    assert!(d < ctx.width);
+    assert!(d < tape.width());
     if d == 0 {
-        ctx.op(PimOp::Copy { src, dst });
+        tape.op(PimOp::Copy { src, dst });
         return;
     }
-    ctx.op(PimOp::ShiftBy { src, dst, n: d, dir: dir.col() });
-    ctx.op(PimOp::And { a: dst, b: mask_row, dst });
+    tape.op(PimOp::ShiftBy { src, dst, n: d, dir: dir.col() });
+    tape.op(PimOp::And { a: dst, b: mask_row, dst });
 }
 
 #[cfg(test)]
@@ -232,5 +373,49 @@ mod tests {
         // 4 AAPs for the shift + 5 for the AND (4 AAP + TRA)
         assert_eq!(c.aaps - before, 8);
         assert_eq!(c.tras, 1);
+    }
+
+    #[test]
+    fn sketch_records_without_executing() {
+        let mut sk = ProgramSketch::new(8);
+        shift_in_element(&mut sk, 0, 1, Dir::Up, 2, 10);
+        assert_eq!(
+            sk.ops(),
+            &[
+                PimOp::ShiftBy { src: 0, dst: 1, n: 2, dir: ShiftDir::Right },
+                PimOp::And { a: 1, b: 10, dst: 1 },
+            ]
+        );
+    }
+
+    #[test]
+    fn run_kernel_caches_by_shape_and_matches_eager_path() {
+        let cache = Arc::new(ProgramCache::new(16));
+        let cfg = DramConfig::tiny_test();
+        let mut rng = Rng::new(9);
+        let vals: Vec<u64> = (0..32).map(|_| rng.below(256) as u64).collect();
+
+        let mut eager = ElementCtx::with_config(24, 256, 8, cfg.clone(), cache.clone());
+        let mut cached = ElementCtx::with_config(24, 256, 8, cfg.clone(), cache.clone());
+        let row_img = eager.pack(&vals);
+        let mask = eager.boundary_mask(Dir::Up, 1);
+        for c in [&mut eager, &mut cached] {
+            c.set_row(0, row_img.clone());
+            c.set_row(10, mask.clone());
+        }
+        // reference: eager tape
+        shift_in_element(&mut eager, 0, 1, Dir::Up, 1, 10);
+        // cached kernel, twice — second run must be a cache hit
+        for _ in 0..2 {
+            cached.run_kernel("test.shift1", &[0, 1, 10], |t| {
+                shift_in_element(t, 0, 1, Dir::Up, 1, 10)
+            });
+        }
+        assert_eq!(cached.row(1), eager.row(1), "cached path is bit-exact");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1), "{s:?}");
+        // census accounting matches the eager path per run
+        assert_eq!(cached.aaps, 2 * eager.aaps);
+        assert_eq!(cached.tras, 2 * eager.tras);
     }
 }

@@ -8,11 +8,15 @@
 //! the condition is materialized by *spreading* the carried-out MSB to the
 //! 0x1B bit positions with further shifts (everything stays in-DRAM).
 //!
+//! Entry points ([`xtime`], [`gf_mul_const`], [`gf_mul`]) are cached
+//! kernels; the `build_*` bodies record the schedule once per shape and
+//! compose into the AES and Reed-Solomon kernels.
+//!
 //! Row map: 0..=2 operands/result, 3..7 adder temps (shared), 8..15
 //! boundary masks, 16..19 GF temporaries, 20..23 GF constant masks.
 
 use crate::apps::adder::{install_masks, mask_row_for_dir};
-use crate::apps::elements::{shift_in_element, Dir, ElementCtx};
+use crate::apps::elements::{shift_in_element, Dir, ElementCtx, PimTape};
 use crate::pim::PimOp;
 
 const T_SH: usize = 16;
@@ -41,24 +45,24 @@ pub fn install_gf_masks(ctx: &mut ElementCtx) {
 /// Spread a bit-0 flag to a set of bit positions within each byte:
 /// `dst := OR over p in positions of (src << p)` (src must have data only
 /// at bit 0 of each byte).
-fn spread_bits(ctx: &mut ElementCtx, src: usize, dst: usize, positions: &[usize]) {
-    ctx.op(PimOp::SetZero { dst });
+fn spread_bits(tape: &mut impl PimTape, src: usize, dst: usize, positions: &[usize]) {
+    tape.op(PimOp::SetZero { dst });
     for &p in positions {
         if p == 0 {
-            ctx.op(PimOp::Or { a: dst, b: src, dst });
+            tape.op(PimOp::Or { a: dst, b: src, dst });
         } else {
-            shift_any(ctx, src, T_SPREAD, Dir::Up, p);
-            ctx.op(PimOp::Or { a: dst, b: T_SPREAD, dst });
+            shift_any(tape, src, T_SPREAD, Dir::Up, p);
+            tape.op(PimOp::Or { a: dst, b: T_SPREAD, dst });
         }
     }
 }
 
 /// Element shift by arbitrary distance d, composing the power-of-two
 /// stages whose boundary masks [`install_masks`] provided.
-fn shift_any(ctx: &mut ElementCtx, src: usize, dst: usize, dir: Dir, d: usize) {
-    assert!(d < ctx.width);
+fn shift_any(tape: &mut impl PimTape, src: usize, dst: usize, dir: Dir, d: usize) {
+    assert!(d < tape.width());
     if d == 0 {
-        ctx.op(PimOp::Copy { src, dst });
+        tape.op(PimOp::Copy { src, dst });
         return;
     }
     let mut remaining = d;
@@ -66,7 +70,7 @@ fn shift_any(ctx: &mut ElementCtx, src: usize, dst: usize, dir: Dir, d: usize) {
     let mut cur = src;
     while remaining > 0 {
         if remaining & 1 == 1 {
-            shift_in_element(ctx, cur, dst, dir, stage, mask_row_for_dir(dir, stage));
+            shift_in_element(tape, cur, dst, dir, stage, mask_row_for_dir(dir, stage));
             cur = dst;
         }
         remaining >>= 1;
@@ -74,58 +78,82 @@ fn shift_any(ctx: &mut ElementCtx, src: usize, dst: usize, dir: Dir, d: usize) {
     }
 }
 
-/// `dst := xtime(src)` (multiply by x in GF(2⁸)).
+/// `dst := xtime(src)` (multiply by x in GF(2⁸)). Cached per shape.
 pub fn xtime(ctx: &mut ElementCtx, src: usize, dst: usize) {
+    ctx.run_kernel("gf.xtime", &[src as u64, dst as u64], |t| build_xtime(t, src, dst));
+}
+
+/// Emit the xtime schedule onto a tape.
+pub fn build_xtime(tape: &mut impl PimTape, src: usize, dst: usize) {
     // carry = bytes whose bit 7 is set, flag at bit 0
-    ctx.op(PimOp::And { a: src, b: M_MSB, dst: T_CARRY });
-    shift_any(ctx, T_CARRY, T_CARRY, Dir::Down, 7);
+    tape.op(PimOp::And { a: src, b: M_MSB, dst: T_CARRY });
+    shift_any(tape, T_CARRY, T_CARRY, Dir::Down, 7);
     // shifted = (src << 1) within bytes
-    shift_in_element(ctx, src, T_SH, Dir::Up, 1, mask_row_for_dir(Dir::Up, 1));
+    shift_in_element(tape, src, T_SH, Dir::Up, 1, mask_row_for_dir(Dir::Up, 1));
     // reduction row: 0x1B = bits {0,1,3,4} where carry
-    spread_bits(ctx, T_CARRY, T_RED, &[0, 1, 3, 4]);
-    ctx.op(PimOp::Xor { a: T_SH, b: T_RED, dst });
+    spread_bits(tape, T_CARRY, T_RED, &[0, 1, 3, 4]);
+    tape.op(PimOp::Xor { a: T_SH, b: T_RED, dst });
 }
 
 /// `dst := src ⊗ k` for a compile-time constant k (chain of xtime + XOR —
-/// how AES MixColumns consumes ×2 and ×3).
+/// how AES MixColumns consumes ×2 and ×3). Cached per (shape, k).
 pub fn gf_mul_const(ctx: &mut ElementCtx, src: usize, dst: usize, k: u8) {
+    ctx.run_kernel(
+        "gf.mul_const",
+        &[src as u64, dst as u64, k as u64],
+        |t| build_gf_mul_const(t, src, dst, k),
+    );
+}
+
+/// Emit the constant-multiply schedule onto a tape.
+pub fn build_gf_mul_const(tape: &mut impl PimTape, src: usize, dst: usize, k: u8) {
     assert!(k > 0);
     // Russian peasant with the constant known at build time:
     // acc = Σ_(bits of k) xtime^i(src)
-    ctx.op(PimOp::SetZero { dst: T_ACC });
-    ctx.op(PimOp::Copy { src, dst: T_AA });
+    tape.op(PimOp::SetZero { dst: T_ACC });
+    tape.op(PimOp::Copy { src, dst: T_AA });
     let mut kk = k;
     while kk != 0 {
         if kk & 1 == 1 {
-            ctx.op(PimOp::Xor { a: T_ACC, b: T_AA, dst: T_ACC });
+            tape.op(PimOp::Xor { a: T_ACC, b: T_AA, dst: T_ACC });
         }
         kk >>= 1;
         if kk != 0 {
-            xtime(ctx, T_AA, T_AA);
+            build_xtime(tape, T_AA, T_AA);
         }
     }
-    ctx.op(PimOp::Copy { src: T_ACC, dst });
+    tape.op(PimOp::Copy { src: T_ACC, dst });
 }
 
 /// Full vector `dst := a ⊗ b` (both rows of packed bytes): Russian-peasant
 /// multiplication with the per-byte condition bit broadcast in-DRAM.
+/// Cached per shape.
 pub fn gf_mul(ctx: &mut ElementCtx, row_a: usize, row_b: usize, dst: usize) {
-    ctx.op(PimOp::SetZero { dst: T_ACC });
-    ctx.op(PimOp::Copy { src: row_a, dst: T_AA });
-    ctx.op(PimOp::Copy { src: row_b, dst: T_BB });
+    ctx.run_kernel(
+        "gf.mul",
+        &[row_a as u64, row_b as u64, dst as u64],
+        |t| build_gf_mul(t, row_a, row_b, dst),
+    );
+}
+
+/// Emit the full-multiply schedule onto a tape.
+pub fn build_gf_mul(tape: &mut impl PimTape, row_a: usize, row_b: usize, dst: usize) {
+    tape.op(PimOp::SetZero { dst: T_ACC });
+    tape.op(PimOp::Copy { src: row_a, dst: T_AA });
+    tape.op(PimOp::Copy { src: row_b, dst: T_BB });
     for i in 0..8 {
         // cond = bytes of b with bit0 set, broadcast to all 8 positions
-        ctx.op(PimOp::And { a: T_BB, b: M_LSB, dst: T_LSB });
-        spread_bits(ctx, T_LSB, T_COND, &[0, 1, 2, 3, 4, 5, 6, 7]);
+        tape.op(PimOp::And { a: T_BB, b: M_LSB, dst: T_LSB });
+        spread_bits(tape, T_LSB, T_COND, &[0, 1, 2, 3, 4, 5, 6, 7]);
         // acc ^= a & cond
-        ctx.op(PimOp::And { a: T_AA, b: T_COND, dst: T_COND });
-        ctx.op(PimOp::Xor { a: T_ACC, b: T_COND, dst: T_ACC });
+        tape.op(PimOp::And { a: T_AA, b: T_COND, dst: T_COND });
+        tape.op(PimOp::Xor { a: T_ACC, b: T_COND, dst: T_ACC });
         if i < 7 {
-            xtime(ctx, T_AA, T_AA);
-            shift_any(ctx, T_BB, T_BB, Dir::Down, 1);
+            build_xtime(tape, T_AA, T_AA);
+            shift_any(tape, T_BB, T_BB, Dir::Down, 1);
         }
     }
-    ctx.op(PimOp::Copy { src: T_ACC, dst });
+    tape.op(PimOp::Copy { src: T_ACC, dst });
 }
 
 /// Host-side reference: GF(2⁸) multiply (AES polynomial).
@@ -224,6 +252,27 @@ mod tests {
             .map(|(&x, &y)| gf_mul_ref(x as u8, y as u8) as u64)
             .collect();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn cached_and_eager_paths_agree() {
+        // the same kernel body through the recording tape (cached,
+        // semantic executor) and the eager tape (per-command executor)
+        let mut cached = setup();
+        let mut eager = setup();
+        let mut rng = Rng::new(17);
+        let a: Vec<u64> = (0..32).map(|_| rng.below(256) as u64).collect();
+        let b: Vec<u64> = (0..32).map(|_| rng.below(256) as u64).collect();
+        cached.set_row(0, cached.pack(&a));
+        cached.set_row(1, cached.pack(&b));
+        eager.set_row(0, eager.pack(&a));
+        eager.set_row(1, eager.pack(&b));
+        gf_mul(&mut cached, 0, 1, 2);
+        build_gf_mul(&mut eager, 0, 1, 2); // ElementCtx is the eager tape
+        assert_eq!(cached.row(2), eager.row(2));
+        assert_eq!(cached.aaps, eager.aaps, "census identical across paths");
+        assert_eq!(cached.tras, eager.tras);
+        assert_eq!(cached.dras, eager.dras);
     }
 
     #[test]

@@ -10,6 +10,12 @@
 //!
 //! All of them are element-parallel over a packed horizontal row (see
 //! [`elements`]) — no transposition anywhere, which is the paper's point.
+//!
+//! Kernels are **compiled once**: every entry point records its macro-op
+//! schedule through the [`PimTape`] trait at most once per (kernel shape,
+//! DRAM config), stores the resulting `pim::compile::CompiledProgram` in
+//! the shared program cache, and replays it from there on every later
+//! call (see [`elements::ElementCtx::run_kernel`]).
 
 pub mod adder;
 pub mod aes;
@@ -18,4 +24,4 @@ pub mod gf;
 pub mod multiplier;
 pub mod reed_solomon;
 
-pub use elements::{Dir, ElementCtx};
+pub use elements::{shift_in_element, Dir, ElementCtx, PimTape, ProgramSketch};

@@ -7,11 +7,16 @@
 //! log-doubling shift-OR tree — every step is migration-cell shifts plus
 //! Ambit logic.
 //!
+//! The whole multiply is one cached kernel: [`shift_and_add_mul`] records
+//! the W-round schedule (inlining the Kogge-Stone adder builder) once per
+//! shape, then replays it from the program cache — thousands of macro-ops
+//! fetched with one lookup.
+//!
 //! Row map: 0,1 operands; 2 product; 3..7 adder temps; 8..33 masks;
 //! 34..39 multiplier temps.
 
-use crate::apps::adder::{kogge_stone_add, mask_row_for_dir};
-use crate::apps::elements::{shift_in_element, Dir, ElementCtx};
+use crate::apps::adder::{build_kogge_stone_add, mask_row_for_dir};
+use crate::apps::elements::{shift_in_element, Dir, ElementCtx, PimTape};
 use crate::pim::PimOp;
 
 const T_ACC: usize = 34;
@@ -30,34 +35,48 @@ pub fn install_mul_masks(ctx: &mut ElementCtx) {
 
 /// Broadcast each element's bit-0 flag to all W positions:
 /// `t |= t << 1; t |= t << 2; ...` (log₂W rounds).
-fn broadcast_lsb(ctx: &mut ElementCtx, row: usize) {
+fn broadcast_lsb(tape: &mut impl PimTape, row: usize) {
     let mut d = 1;
-    while d < ctx.width {
-        shift_in_element(ctx, row, T_BCAST, Dir::Up, d, mask_row_for_dir(Dir::Up, d));
-        ctx.op(PimOp::Or { a: row, b: T_BCAST, dst: row });
+    while d < tape.width() {
+        shift_in_element(tape, row, T_BCAST, Dir::Up, d, mask_row_for_dir(Dir::Up, d));
+        tape.op(PimOp::Or { a: row, b: T_BCAST, dst: row });
         d *= 2;
     }
 }
 
-/// `row_out := row_a * row_b (mod 2^W)` per element.
+/// `row_out := row_a * row_b (mod 2^W)` per element. Cached per shape.
 pub fn shift_and_add_mul(ctx: &mut ElementCtx, row_a: usize, row_b: usize, row_out: usize) {
-    let w = ctx.width;
-    ctx.op(PimOp::SetZero { dst: T_ACC });
-    ctx.op(PimOp::Copy { src: row_a, dst: T_SHA });
-    ctx.op(PimOp::Copy { src: row_b, dst: T_B });
+    ctx.run_kernel(
+        "multiplier.shift_and_add",
+        &[row_a as u64, row_b as u64, row_out as u64],
+        |t| build_shift_and_add_mul(t, row_a, row_b, row_out),
+    );
+}
+
+/// Emit the shift-and-add schedule onto a tape.
+pub fn build_shift_and_add_mul(
+    tape: &mut impl PimTape,
+    row_a: usize,
+    row_b: usize,
+    row_out: usize,
+) {
+    let w = tape.width();
+    tape.op(PimOp::SetZero { dst: T_ACC });
+    tape.op(PimOp::Copy { src: row_a, dst: T_SHA });
+    tape.op(PimOp::Copy { src: row_b, dst: T_B });
     for k in 0..w {
         // bit k of b, as a full-element condition mask
-        ctx.op(PimOp::And { a: T_B, b: M_LSB, dst: T_BIT });
-        broadcast_lsb(ctx, T_BIT);
+        tape.op(PimOp::And { a: T_B, b: M_LSB, dst: T_BIT });
+        broadcast_lsb(tape, T_BIT);
         // partial = (a << k) & cond ; acc += partial
-        ctx.op(PimOp::And { a: T_SHA, b: T_BIT, dst: T_PARTIAL });
-        kogge_stone_add(ctx, T_ACC, T_PARTIAL, T_ACC);
+        tape.op(PimOp::And { a: T_SHA, b: T_BIT, dst: T_PARTIAL });
+        build_kogge_stone_add(tape, T_ACC, T_PARTIAL, T_ACC);
         if k + 1 < w {
-            shift_in_element(ctx, T_SHA, T_SHA, Dir::Up, 1, mask_row_for_dir(Dir::Up, 1));
-            shift_in_element(ctx, T_B, T_B, Dir::Down, 1, mask_row_for_dir(Dir::Down, 1));
+            shift_in_element(tape, T_SHA, T_SHA, Dir::Up, 1, mask_row_for_dir(Dir::Up, 1));
+            shift_in_element(tape, T_B, T_B, Dir::Down, 1, mask_row_for_dir(Dir::Down, 1));
         }
     }
-    ctx.op(PimOp::Copy { src: T_ACC, dst: row_out });
+    tape.op(PimOp::Copy { src: T_ACC, dst: row_out });
 }
 
 #[cfg(test)]

@@ -7,12 +7,16 @@
 //! parity row updates with a GF constant multiply (xtime chains = the
 //! paper's shifts) and an XOR.
 //!
+//! The full (k, n_parity) LFSR schedule and each syndrome pass are cached
+//! kernels — an encoder instance compiles once, then batch after batch
+//! replays the same compiled program.
+//!
 //! Row map: message rows `MSG_BASE..MSG_BASE+k`, parity rows
 //! `PAR_BASE..PAR_BASE+(n−k)`, feedback row, plus the GF scratch/masks
 //! installed by `gf::install_gf_masks` (rows 8–30).
 
-use crate::apps::elements::ElementCtx;
-use crate::apps::gf::{gf_mul_const, gf_mul_ref, install_gf_masks};
+use crate::apps::elements::{ElementCtx, PimTape};
+use crate::apps::gf::{build_gf_mul_const, gf_mul_ref, install_gf_masks};
 use crate::pim::PimOp;
 
 pub const MSG_BASE: usize = 40;
@@ -82,28 +86,58 @@ impl RsEncoder {
         }
     }
 
-    /// Run the LFSR encoder over all codewords in parallel.
+    /// Run the LFSR encoder over all codewords in parallel. The whole
+    /// (k, n_parity) schedule is one cached kernel.
     pub fn encode(&self, ctx: &mut ElementCtx) {
+        ctx.run_kernel(
+            "rs.encode",
+            &[self.k as u64, self.n_parity as u64],
+            |t| self.build_encode(t),
+        );
+    }
+
+    /// Emit the LFSR encode schedule onto a tape.
+    fn build_encode(&self, tape: &mut impl PimTape) {
         let np = self.n_parity;
         for j in 0..np {
-            ctx.op(PimOp::SetZero { dst: PAR_BASE + j });
+            tape.op(PimOp::SetZero { dst: PAR_BASE + j });
         }
         for i in 0..self.k {
             // feedback = msg[i] ^ parity[np-1]
-            ctx.op(PimOp::Xor { a: MSG_BASE + i, b: PAR_BASE + np - 1, dst: T_FB });
+            tape.op(PimOp::Xor { a: MSG_BASE + i, b: PAR_BASE + np - 1, dst: T_FB });
             for j in (1..np).rev() {
-                gf_mul_const(ctx, T_FB, T_MUL, self.g[j].max(1));
+                build_gf_mul_const(tape, T_FB, T_MUL, self.g[j].max(1));
                 if self.g[j] == 0 {
-                    ctx.op(PimOp::Copy { src: PAR_BASE + j - 1, dst: PAR_BASE + j });
+                    tape.op(PimOp::Copy { src: PAR_BASE + j - 1, dst: PAR_BASE + j });
                 } else {
-                    ctx.op(PimOp::Xor {
+                    tape.op(PimOp::Xor {
                         a: PAR_BASE + j - 1,
                         b: T_MUL,
                         dst: PAR_BASE + j,
                     });
                 }
             }
-            gf_mul_const(ctx, T_FB, PAR_BASE, self.g[0]);
+            build_gf_mul_const(tape, T_FB, PAR_BASE, self.g[0]);
+        }
+    }
+
+    /// Emit one Horner syndrome pass (root α^i = `alpha_i`) onto a tape.
+    fn build_syndrome_pass(&self, tape: &mut impl PimTape, alpha_i: u8) {
+        let np = self.n_parity;
+        // Horner over symbol rows, highest degree first: message rows
+        // are the high coefficients, parity rows the low ones.
+        tape.op(PimOp::SetZero { dst: T_MUL });
+        for i in 0..self.k {
+            if alpha_i != 1 {
+                build_gf_mul_const(tape, T_MUL, T_MUL, alpha_i);
+            }
+            tape.op(PimOp::Xor { a: T_MUL, b: MSG_BASE + i, dst: T_MUL });
+        }
+        for j in (0..np).rev() {
+            if alpha_i != 1 {
+                build_gf_mul_const(tape, T_MUL, T_MUL, alpha_i);
+            }
+            tape.op(PimOp::Xor { a: T_MUL, b: PAR_BASE + j, dst: T_MUL });
         }
     }
 
@@ -112,28 +146,19 @@ impl RsEncoder {
     /// rule — all row ops (gf_mul_const by α^i + XOR). A zero syndrome row
     /// for every root certifies the codeword; any nonzero byte flags the
     /// corresponding codeword as corrupted. Returns, per codeword, whether
-    /// all syndromes are zero.
+    /// all syndromes are zero. Each root's pass is a cached kernel; only
+    /// the host-side readback between passes stays data-dependent.
     pub fn syndromes_ok(&self, ctx: &mut ElementCtx) -> Vec<bool> {
         let np = self.n_parity;
         let n = ctx.n_elements();
         let mut ok = vec![true; n];
         let mut alpha_i = 1u8;
         for _ in 0..np {
-            // Horner over symbol rows, highest degree first: message rows
-            // are the high coefficients, parity rows the low ones.
-            ctx.op(crate::pim::PimOp::SetZero { dst: T_MUL });
-            for i in 0..self.k {
-                if alpha_i != 1 {
-                    gf_mul_const(ctx, T_MUL, T_MUL, alpha_i);
-                }
-                ctx.op(crate::pim::PimOp::Xor { a: T_MUL, b: MSG_BASE + i, dst: T_MUL });
-            }
-            for j in (0..np).rev() {
-                if alpha_i != 1 {
-                    gf_mul_const(ctx, T_MUL, T_MUL, alpha_i);
-                }
-                ctx.op(crate::pim::PimOp::Xor { a: T_MUL, b: PAR_BASE + j, dst: T_MUL });
-            }
+            ctx.run_kernel(
+                "rs.syndrome_pass",
+                &[self.k as u64, self.n_parity as u64, alpha_i as u64],
+                |t| self.build_syndrome_pass(t, alpha_i),
+            );
             let syn = ctx.unpack(ctx.row(T_MUL));
             for (c, &s) in syn.iter().enumerate() {
                 ok[c] &= s == 0;

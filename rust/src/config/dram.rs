@@ -212,6 +212,23 @@ impl DramConfig {
     pub fn aaps_per_shift(&self) -> u64 {
         4
     }
+
+    /// Stable 64-bit fingerprint of every cost-relevant field (geometry,
+    /// timing, energy — the `name` label is excluded). Two configs with
+    /// the same fingerprint price identical command streams identically,
+    /// which is what keys the compile layer's `ProgramCache` and guards
+    /// `BankSim::run_compiled` against cross-config program reuse.
+    pub fn fingerprint(&self) -> u64 {
+        // FNV-1a over the canonical Debug rendering of the plain-data
+        // sub-structs (deterministic field order and float formatting).
+        let text = format!("{:?}|{:?}|{:?}", self.geometry, self.timing, self.energy);
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in text.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
 }
 
 #[cfg(test)]
@@ -262,6 +279,26 @@ mod tests {
         assert_eq!(shift_ps, 210_000);
         let rel = (shift_ps as f64 - 208_700.0).abs() / 208_700.0;
         assert!(rel < 0.01, "within 1% of paper");
+    }
+
+    #[test]
+    fn fingerprint_tracks_cost_fields_only() {
+        let base = DramConfig::ddr3_1333_4gb();
+        assert_eq!(base.fingerprint(), DramConfig::ddr3_1333_4gb().fingerprint());
+
+        let mut renamed = base.clone();
+        renamed.name = "other-label".into();
+        assert_eq!(base.fingerprint(), renamed.fingerprint(), "name is a label");
+
+        let mut slower = base.clone();
+        slower.timing.t_aap_extra += 1;
+        assert_ne!(base.fingerprint(), slower.fingerprint());
+
+        let mut smaller = base.clone();
+        smaller.geometry.cols_per_row = 256;
+        assert_ne!(base.fingerprint(), smaller.fingerprint());
+
+        assert_ne!(base.fingerprint(), DramConfig::tiny_test().fingerprint());
     }
 
     #[test]

@@ -11,6 +11,32 @@ pub struct Batch<T> {
     pub items: Vec<T>,
 }
 
+impl<T> Batch<T> {
+    /// Split the batch into maximal runs of consecutive items whose keys
+    /// compare equal, as `(start, len)` ranges. FIFO order is preserved —
+    /// requests are never reordered (they may carry read-after-write
+    /// dependencies) — so each run of same-shape compute requests can be
+    /// served from one compiled program fetch. The serving worker currently
+    /// gets the same effect from a one-entry memo that survives across
+    /// batches (`coordinator::system`); this helper is the grouping
+    /// primitive for the dependency-aware batching planned in ROADMAP
+    /// "Open items".
+    pub fn runs_by_key<K: PartialEq>(&self, key: impl Fn(&T) -> K) -> Vec<(usize, usize)> {
+        let mut runs = Vec::new();
+        let mut start = 0usize;
+        while start < self.items.len() {
+            let k = key(&self.items[start]);
+            let mut len = 1usize;
+            while start + len < self.items.len() && key(&self.items[start + len]) == k {
+                len += 1;
+            }
+            runs.push((start, len));
+            start += len;
+        }
+        runs
+    }
+}
+
 /// Bounded-batch accumulator for one bank.
 #[derive(Debug)]
 pub struct Batcher<T> {
@@ -82,5 +108,17 @@ mod tests {
     #[should_panic]
     fn zero_batch_rejected() {
         Batcher::<u32>::new(0, 0);
+    }
+
+    #[test]
+    fn runs_group_consecutive_equal_keys_without_reordering() {
+        let batch = Batch { bank: 0, items: vec![3, 3, 3, 5, 5, 3, 7] };
+        assert_eq!(
+            batch.runs_by_key(|&x| x),
+            vec![(0, 3), (3, 2), (5, 1), (6, 1)],
+            "equal keys only merge when adjacent — FIFO survives"
+        );
+        let empty: Batch<i32> = Batch { bank: 0, items: vec![] };
+        assert!(empty.runs_by_key(|&x| x).is_empty());
     }
 }

@@ -1,8 +1,11 @@
 //! Coordinator metrics: per-bank and aggregate counters, shared between
-//! workers and the leader thread.
+//! workers and the leader thread, plus the attached compile-layer cache
+//! (hit-rate and amortized compile time ride along with the counters).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+
+use crate::pim::compile::{CacheStats, ProgramCache};
 
 /// Lock-free counters one worker updates and the leader reads.
 #[derive(Debug, Default)]
@@ -15,16 +18,40 @@ pub struct BankCounters {
 }
 
 /// Aggregated metrics registry.
-#[derive(Clone, Debug)]
+#[derive(Clone)]
 pub struct Metrics {
     banks: Arc<Vec<BankCounters>>,
+    cache: Option<Arc<ProgramCache>>,
 }
 
 impl Metrics {
     pub fn new(n_banks: usize) -> Self {
         Metrics {
             banks: Arc::new((0..n_banks).map(|_| BankCounters::default()).collect()),
+            cache: None,
         }
+    }
+
+    /// Registry with the serving system's program cache attached, so cache
+    /// hit-rate and amortized compile time report alongside the counters.
+    pub fn with_cache(n_banks: usize, cache: Arc<ProgramCache>) -> Self {
+        Metrics { cache: Some(cache), ..Self::new(n_banks) }
+    }
+
+    /// Compile-layer counters, if a cache is attached.
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
+    }
+
+    /// Fraction of compute requests served without compiling (0 when no
+    /// cache is attached or nothing ran yet).
+    pub fn cache_hit_rate(&self) -> f64 {
+        self.cache_stats().map_or(0.0, |s| s.hit_rate())
+    }
+
+    /// Compile wall-clock amortized per compute request, ns.
+    pub fn amortized_compile_ns(&self) -> f64 {
+        self.cache_stats().map_or(0.0, |s| s.amortized_compile_ns())
     }
 
     pub fn n_banks(&self) -> usize {
@@ -89,6 +116,27 @@ mod tests {
         assert_eq!(m.makespan_ps(), 2_000_000, "parallel banks: max not sum");
         assert!((m.total_energy_pj() - 110.0).abs() < 0.01);
         assert_eq!(m.total_refreshes(), 3);
+    }
+
+    #[test]
+    fn cache_metrics_flow_through() {
+        use crate::config::DramConfig;
+        use crate::pim::PimOp;
+
+        let m = Metrics::new(1);
+        assert!(m.cache_stats().is_none());
+        assert_eq!(m.cache_hit_rate(), 0.0);
+
+        let cache = Arc::new(ProgramCache::new(8));
+        let m = Metrics::with_cache(1, cache.clone());
+        let cfg = DramConfig::tiny_test();
+        let ops = [PimOp::Copy { src: 0, dst: 1 }];
+        let _ = cache.get_or_compile_ops(&ops, &cfg);
+        let _ = cache.get_or_compile_ops(&ops, &cfg);
+        let s = m.cache_stats().unwrap();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert!((m.cache_hit_rate() - 0.5).abs() < 1e-12);
+        assert!(m.amortized_compile_ns() > 0.0);
     }
 
     #[test]

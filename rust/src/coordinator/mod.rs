@@ -7,7 +7,8 @@
 //!   clients ──► Router ──► per-bank Batcher queues ──► one Worker per bank
 //!                 │                                        │  (thread +
 //!                 └── placement policy                     │   BankSim)
-//!                                                          ▼
+//!                          shared Arc<ProgramCache> ───────┤
+//!                          (compile-once schedules)        ▼
 //!                                                  responses + Metrics
 //! ```
 //!
@@ -15,6 +16,14 @@
 //! confined to one subarray, banks never synchronize and aggregate
 //! throughput scales with the bank count (the paper's 4.82 → 38.56 →
 //! 154.24 MOps/s projection for 1 → 8 → 32 banks).
+//!
+//! Compute requests execute through the compile layer: each worker
+//! canonicalizes the request to a position-relative shape, fetches the
+//! [`crate::pim::compile::CompiledProgram`] from the system-wide cache
+//! (compiling at most once per shape and config), and replays it through
+//! `BankSim::run_compiled` with an O(1) slot→row rebase. Consecutive
+//! same-shape requests in a batch reuse the worker's memoized program —
+//! the batched fast path the final report's cache hit-rate accounts for.
 //!
 //! Substitution note: the offline build has no tokio; the serving loop is
 //! std threads + mpsc channels, which for a simulation-backed service is

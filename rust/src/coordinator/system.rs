@@ -4,9 +4,18 @@
 //! and executed by its bank's worker against a private [`BankSim`]. The
 //! caller receives a [`PimResponse`] over a channel. Simulated time runs
 //! per bank — banks are independent (the basis of §5.1.4's linear scaling).
+//!
+//! Compute requests never lower their own command streams: every worker
+//! consults one `Arc`-shared [`ProgramCache`], canonicalizes the request
+//! to a position-relative shape, and replays the cached
+//! [`CompiledProgram`] through [`BankSim::run_compiled`] with an O(1)
+//! slot→row rebase. Consecutive same-shape requests in a batch reuse the
+//! previously fetched program without touching the cache at all (counted
+//! as `batched` in [`CacheStats`]); the final [`SystemReport`] carries the
+//! cache hit-rate and the compile time amortized per request.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::config::DramConfig;
@@ -14,9 +23,13 @@ use crate::coordinator::batcher::Batcher;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::{Placement, Router};
 use crate::dram::address::BankId;
+use crate::pim::compile::{canonicalize, CacheStats, CompiledProgram, ProgramCache, ProgramShape};
 use crate::pim::PimOp;
 use crate::sim::BankSim;
 use crate::util::{BitRow, ShiftDir};
+
+/// Programs the serving cache keeps resident per system.
+const PROGRAM_CACHE_CAPACITY: usize = 256;
 
 /// A client request against one subarray of (some) bank.
 #[derive(Clone, Debug)]
@@ -57,6 +70,12 @@ pub struct SystemReport {
     pub makespan_ps: u64,
     pub total_energy_pj: f64,
     pub throughput_mops: f64,
+    /// program-cache counters at shutdown
+    pub cache: CacheStats,
+    /// fraction of compute requests served without compiling
+    pub cache_hit_rate: f64,
+    /// compile wall-clock amortized over every compute request, ns
+    pub amortized_compile_ns: f64,
 }
 
 /// Leader + workers.
@@ -66,6 +85,7 @@ pub struct PimSystem {
     senders: Vec<Sender<WorkerMsg>>,
     workers: Vec<JoinHandle<()>>,
     metrics: Metrics,
+    cache: Arc<ProgramCache>,
 }
 
 impl PimSystem {
@@ -74,7 +94,8 @@ impl PimSystem {
         let all = BankId::all(&cfg.geometry);
         assert!(n_banks >= 1 && n_banks <= all.len());
         let banks: Vec<BankId> = all.into_iter().take(n_banks).collect();
-        let metrics = Metrics::new(n_banks);
+        let cache = Arc::new(ProgramCache::new(PROGRAM_CACHE_CAPACITY));
+        let metrics = Metrics::with_cache(n_banks, cache.clone());
 
         let mut senders = Vec::new();
         let mut workers = Vec::new();
@@ -82,7 +103,8 @@ impl PimSystem {
             let (tx, rx) = channel::<WorkerMsg>();
             let m = metrics.clone();
             let cfg = cfg.clone();
-            workers.push(std::thread::spawn(move || worker_loop(bank, cfg, rx, m)));
+            let cache = cache.clone();
+            workers.push(std::thread::spawn(move || worker_loop(bank, cfg, rx, m, cache)));
             senders.push(tx);
         }
 
@@ -92,11 +114,17 @@ impl PimSystem {
             senders,
             workers,
             metrics,
+            cache,
         }
     }
 
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// The shared compiled-program cache (all workers consult it).
+    pub fn program_cache(&self) -> &Arc<ProgramCache> {
+        &self.cache
     }
 
     /// Submit a request; returns the receiver for its response. `pinned`
@@ -136,6 +164,7 @@ impl PimSystem {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        let cache = self.cache.stats();
         SystemReport {
             banks: self.metrics.n_banks(),
             total_ops: self.metrics.total_ops(),
@@ -143,20 +172,36 @@ impl PimSystem {
             makespan_ps: self.metrics.makespan_ps(),
             total_energy_pj: self.metrics.total_energy_pj(),
             throughput_mops: self.metrics.throughput_mops(),
+            cache,
+            cache_hit_rate: cache.hit_rate(),
+            amortized_compile_ns: cache.amortized_compile_ns(),
         }
     }
 }
 
-fn worker_loop(bank: usize, cfg: DramConfig, rx: Receiver<WorkerMsg>, metrics: Metrics) {
+/// A worker's one-entry program memo: the shape it last fetched and the
+/// program that serves it. Runs of same-shape requests inside a batch hit
+/// this memo instead of the shared cache (the "batched onto one compiled
+/// program" fast path).
+type ProgramMemo = Option<(Vec<PimOp>, Arc<CompiledProgram>)>;
+
+fn worker_loop(
+    bank: usize,
+    cfg: DramConfig,
+    rx: Receiver<WorkerMsg>,
+    metrics: Metrics,
+    cache: Arc<ProgramCache>,
+) {
     let mut sim = BankSim::new(cfg);
     let mut last_aaps: u64 = 0;
+    let mut memo: ProgramMemo = None;
     while let Ok(msg) = rx.recv() {
         match msg {
             WorkerMsg::Stop => break,
             WorkerMsg::Work(envelopes) => {
                 let mut ops: u64 = 0;
                 for env in envelopes {
-                    let resp = execute(bank, &mut sim, env.req);
+                    let resp = execute(bank, &mut sim, env.req, &cache, &mut memo);
                     ops += 1;
                     // receiver may have hung up (fire-and-forget callers)
                     let _ = env.respond.send(resp);
@@ -175,7 +220,38 @@ fn worker_loop(bank: usize, cfg: DramConfig, rx: Receiver<WorkerMsg>, metrics: M
     }
 }
 
-fn execute(bank: usize, sim: &mut BankSim, req: PimRequest) -> PimResponse {
+/// Fetch the compiled program for a canonical op sequence: the memo serves
+/// consecutive same-shape requests, the shared cache everything else.
+fn fetch_compiled(
+    cache: &ProgramCache,
+    sim: &BankSim,
+    memo: &mut ProgramMemo,
+    ops: Vec<PimOp>,
+) -> Arc<CompiledProgram> {
+    if let Some((memo_ops, prog)) = memo.as_ref() {
+        if *memo_ops == ops {
+            cache.record_batched(1);
+            return prog.clone();
+        }
+    }
+    let build = ops.clone();
+    let prog = cache.get_or_compile_keyed(
+        ProgramShape::Ops(ops.clone()),
+        sim.config(),
+        sim.config_fingerprint(),
+        move || build,
+    );
+    *memo = Some((ops, prog.clone()));
+    prog
+}
+
+fn execute(
+    bank: usize,
+    sim: &mut BankSim,
+    req: PimRequest,
+    cache: &ProgramCache,
+    memo: &mut ProgramMemo,
+) -> PimResponse {
     match req {
         PimRequest::WriteRow { subarray, row, bits } => {
             sim.bank().subarray(subarray).write_row(row, bits);
@@ -186,12 +262,16 @@ fn execute(bank: usize, sim: &mut BankSim, req: PimRequest) -> PimResponse {
             PimResponse::Row { bank, bits }
         }
         PimRequest::Shift { subarray, row, n, dir } => {
-            let op = PimOp::ShiftBy { src: row, dst: row, n, dir };
-            sim.run(subarray, &op.lower());
+            // already canonical: the single row occupies slot 0
+            let ops = vec![PimOp::ShiftBy { src: 0, dst: 0, n, dir }];
+            let prog = fetch_compiled(cache, sim, memo, ops);
+            sim.run_compiled(subarray, &prog, Some(&[row]));
             PimResponse::Done { bank }
         }
         PimRequest::Op { subarray, op } => {
-            sim.run(subarray, &op.lower());
+            let (ops, binding) = canonicalize(std::slice::from_ref(&op));
+            let prog = fetch_compiled(cache, sim, memo, ops);
+            sim.run_compiled(subarray, &prog, Some(&binding));
             PimResponse::Done { bank }
         }
     }
@@ -280,5 +360,65 @@ mod tests {
         }
         let report = sys.shutdown();
         assert_eq!(report.total_ops, 10);
+    }
+
+    #[test]
+    fn same_shape_requests_compile_once() {
+        // 32 identical shifts on one bank: one miss, the rest memo/cache
+        let sys = PimSystem::start(&cfg(), 1, Placement::Pinned, 8);
+        for _ in 0..32 {
+            sys.submit(
+                PimRequest::Shift { subarray: 0, row: 0, n: 2, dir: ShiftDir::Right },
+                None,
+            );
+        }
+        let report = sys.shutdown();
+        assert_eq!(report.total_ops, 32);
+        assert_eq!(report.cache.misses, 1, "one shape, one compile");
+        assert_eq!(report.cache.requests(), 32);
+        assert!(report.cache_hit_rate > 0.96, "rate {}", report.cache_hit_rate);
+        assert!(
+            report.cache.batched >= 24,
+            "runs inside a batch reuse the memo: {:?}",
+            report.cache
+        );
+    }
+
+    #[test]
+    fn shapes_shared_across_banks_and_rows() {
+        // the same shift shape lands on every bank and two different rows —
+        // still exactly one compile, because programs are position-relative
+        let sys = PimSystem::start(&cfg(), 4, Placement::RoundRobin, 4);
+        for i in 0..32 {
+            sys.submit(
+                PimRequest::Shift { subarray: 0, row: i % 2, n: 5, dir: ShiftDir::Left },
+                None,
+            );
+        }
+        let report = sys.shutdown();
+        assert_eq!(report.cache.misses, 1, "{:?}", report.cache);
+        assert_eq!(report.total_aaps, 32 * 20);
+        assert!(report.amortized_compile_ns >= 0.0);
+    }
+
+    #[test]
+    fn mixed_shapes_fill_the_cache_separately() {
+        let sys = PimSystem::start(&cfg(), 1, Placement::Pinned, 4);
+        for n in 1..=4usize {
+            for _ in 0..4 {
+                sys.submit(
+                    PimRequest::Shift { subarray: 0, row: 0, n, dir: ShiftDir::Right },
+                    None,
+                );
+            }
+        }
+        // a row-op shape too: XOR of two rows into a third
+        sys.submit(
+            PimRequest::Op { subarray: 0, op: PimOp::Xor { a: 0, b: 1, dst: 2 } },
+            None,
+        );
+        let report = sys.shutdown();
+        assert_eq!(report.cache.misses, 5, "{:?}", report.cache);
+        assert_eq!(report.total_ops, 17);
     }
 }

@@ -14,8 +14,15 @@
 //! * [`pim`] — bit-accurate PIM primitives: RowClone/AAP, Ambit DRA/TRA
 //!   (MAJ/AND/OR), dual-contact-cell NOT, and the paper's migration-cell
 //!   shift, plus a program builder.
+//! * [`pim::compile`] — the compile-once/execute-anywhere layer:
+//!   position-relative `CompiledProgram`s with precomputed latency/energy/
+//!   census footprints, shared via an `Arc`-held LRU `ProgramCache` and
+//!   retargeted to any (bank, subarray, row) in O(1) — the SIMDRAM-style
+//!   μProgram split between compilation and the thin replay controller.
 //! * [`sim`] — the command-level engine that executes PIM programs against
-//!   the timing + energy model (the NVMain substitute; Tables 2–3).
+//!   the timing + energy model (the NVMain substitute; Tables 2–3), with a
+//!   `run_compiled` fast path that advances per compiled block and stays
+//!   bit-identical to per-command simulation.
 //! * [`circuit`] — the LTSPICE substitute: technology-node parameters
 //!   (Table 1), a native transient oracle, and the Monte-Carlo harness that
 //!   drives the AOT-compiled JAX/Pallas kernel through PJRT (Table 4).
@@ -27,8 +34,10 @@
 //!   the async serving loop (§5.1.4).
 //! * [`apps`] — application kernels compiled to PIM programs: adders,
 //!   shift-and-add multiplication, GF(2⁸), AES steps, Reed-Solomon.
-//! * [`runtime`] — the PJRT bridge (`xla` crate) that loads and executes
-//!   `artifacts/*.hlo.txt`; Python never runs on the request path.
+//! * [`runtime`] — the PJRT bridge that loads and executes
+//!   `artifacts/*.hlo.txt`; Python never runs on the request path. In the
+//!   offline build it is an API-compatible stub and every caller falls
+//!   back to the native oracle (see the module docs).
 
 pub mod apps;
 pub mod baselines;

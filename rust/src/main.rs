@@ -101,6 +101,14 @@ fn main() {
                 r.total_energy_pj / 1e3,
                 r.total_aaps
             );
+            println!(
+                "program cache: {:.1}% hit rate ({} compiles, {} batched), \
+                 {:.0} ns compile amortized per request",
+                100.0 * r.cache_hit_rate,
+                r.cache.misses,
+                r.cache.batched,
+                r.amortized_compile_ns
+            );
         }
         Some("demo") => demo(args.get(1).map(String::as_str).unwrap_or("gf")),
         _ => {

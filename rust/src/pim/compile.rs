@@ -1,0 +1,696 @@
+//! Compile-once, execute-anywhere PIM programs.
+//!
+//! The paper's shift primitive is a *fixed* 4-AAP schedule; a shift-by-n is
+//! n verbatim repetitions of it, and every application kernel is a fixed
+//! macro-op schedule given its shape (element width, operand rows, n).
+//! Re-deriving that schedule per request — as the seed did with
+//! `PimOp::lower()` inside every bank worker — wastes the property SIMDRAM
+//! exploits with its μPrograms: lower **once** per (op shape, DRAM config),
+//! price it once, and let a thin controller replay it anywhere.
+//!
+//! This module provides that layer:
+//!
+//! * [`CommandCensus`] — the named command-count record shared by the
+//!   compile layer and the simulation engine (`sim::CommandCounts` is this
+//!   type), so compiled footprints and engine counters diff directly.
+//! * [`CompiledProgram`] — a bank/subarray-agnostic schedule: the lowered
+//!   command stream plus, per macro-op block, a precomputed latency/energy/
+//!   census footprint against one [`DramConfig`] (identified by
+//!   [`DramConfig::fingerprint`]).
+//! * [`canonicalize`] — renames the data rows of an op sequence to dense
+//!   slots (order of first appearance) and returns the slot→row binding,
+//!   so one compiled program serves every row placement: retargeting is
+//!   O(1) — pass a different binding, nothing is rewritten.
+//! * [`ProgramCache`] — the `Arc`-shared, LRU-bounded map from
+//!   (shape, config fingerprint) to [`CompiledProgram`], with hit/miss/
+//!   batched/compile-time accounting for the coordinator's metrics.
+//!
+//! Execution lives next door: [`crate::pim::executor::run_compiled`]
+//! applies a compiled program's *semantic* (word-level) effect to a
+//! subarray, and [`crate::sim::BankSim::run_compiled`] advances time and
+//! energy per block from the precomputed footprint, falling back to
+//! per-command accounting only around refresh boundaries so its totals
+//! stay bit-identical to per-command simulation.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::config::DramConfig;
+use crate::dram::address::{Command, RowRef};
+use crate::dram::energy::{EnergyBreakdown, EnergyModel};
+use crate::dram::timing::CommandTimer;
+use crate::pim::isa::PimOp;
+
+/// Named command census. One struct serves both the compile layer
+/// (footprints of [`CompiledProgram`] blocks) and the engine
+/// (`sim::CommandCounts` is an alias of this type), replacing the old
+/// anonymous `(aap, tra, dra)` tuple.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CommandCensus {
+    pub act: u64,
+    pub pre: u64,
+    pub read: u64,
+    pub write: u64,
+    pub aap: u64,
+    pub dra: u64,
+    pub tra: u64,
+    pub refresh: u64,
+}
+
+impl CommandCensus {
+    /// Count one command.
+    pub fn record(&mut self, cmd: &Command) {
+        match cmd {
+            Command::Act { .. } => self.act += 1,
+            Command::Pre => self.pre += 1,
+            Command::Read { .. } => self.read += 1,
+            Command::Write { .. } => self.write += 1,
+            Command::Aap { .. } => self.aap += 1,
+            Command::Dra { .. } => self.dra += 1,
+            Command::Tra { .. } => self.tra += 1,
+            Command::Refresh => self.refresh += 1,
+        }
+    }
+
+    pub fn from_commands(cmds: &[Command]) -> Self {
+        let mut c = CommandCensus::default();
+        for cmd in cmds {
+            c.record(cmd);
+        }
+        c
+    }
+
+    pub fn add(&mut self, other: &CommandCensus) {
+        self.act += other.act;
+        self.pre += other.pre;
+        self.read += other.read;
+        self.write += other.write;
+        self.aap += other.aap;
+        self.dra += other.dra;
+        self.tra += other.tra;
+        self.refresh += other.refresh;
+    }
+
+    /// Field-wise difference vs an earlier snapshot (counters only grow).
+    pub fn diff(&self, earlier: &CommandCensus) -> CommandCensus {
+        CommandCensus {
+            act: self.act - earlier.act,
+            pre: self.pre - earlier.pre,
+            read: self.read - earlier.read,
+            write: self.write - earlier.write,
+            aap: self.aap - earlier.aap,
+            dra: self.dra - earlier.dra,
+            tra: self.tra - earlier.tra,
+            refresh: self.refresh - earlier.refresh,
+        }
+    }
+
+    /// The census with the refresh count cleared (compiled programs never
+    /// contain refreshes — the engine injects them).
+    pub fn without_refresh(mut self) -> CommandCensus {
+        self.refresh = 0;
+        self
+    }
+
+    pub fn total(&self) -> u64 {
+        self.act + self.pre + self.read + self.write + self.aap + self.dra + self.tra
+            + self.refresh
+    }
+}
+
+/// One macro-op of a compiled program with its precomputed footprint.
+#[derive(Clone, Debug)]
+pub struct CompiledBlock {
+    /// the (slot-relative) macro-op this block realizes
+    pub op: PimOp,
+    /// range of this block's commands in [`CompiledProgram::commands`]
+    pub cmd_start: usize,
+    pub cmd_len: usize,
+    /// total latency of the block's command stream, ps
+    pub latency_ps: u64,
+    /// latency accumulated before the block's *last* command issues —
+    /// the engine's refresh-boundary test (a refresh check precedes each
+    /// command, so the last check happens at `now + lead_latency_ps`)
+    pub lead_latency_ps: u64,
+    /// precomputed energy by category (sum over the block's commands)
+    pub energy: EnergyBreakdown,
+    pub census: CommandCensus,
+}
+
+/// A lowered, priced, position-relative PIM program.
+///
+/// Produced once per (op shape, [`DramConfig::fingerprint`]) and shared via
+/// [`ProgramCache`]. Row indices inside are *slots* (see [`canonicalize`]);
+/// executing against concrete rows passes a slot→row binding — an O(1)
+/// rebase, no command rewriting.
+#[derive(Clone, Debug)]
+pub struct CompiledProgram {
+    cfg_fingerprint: u64,
+    cmds: Vec<Command>,
+    blocks: Vec<CompiledBlock>,
+    census: CommandCensus,
+    latency_ps: u64,
+    energy: EnergyBreakdown,
+    n_slots: usize,
+}
+
+impl CompiledProgram {
+    /// Lower and price `ops` against `cfg`.
+    pub fn compile(ops: &[PimOp], cfg: &DramConfig) -> Self {
+        Self::compile_with_fingerprint(ops, cfg, cfg.fingerprint())
+    }
+
+    /// Like [`Self::compile`] but with the fingerprint precomputed by the
+    /// caller (the hot path computes it once per worker, not per request).
+    pub fn compile_with_fingerprint(ops: &[PimOp], cfg: &DramConfig, cfg_fp: u64) -> Self {
+        let timer = CommandTimer::new(cfg.timing.clone());
+        let model = EnergyModel::new(&cfg.energy, &cfg.timing);
+        let mut cmds: Vec<Command> = Vec::new();
+        let mut blocks: Vec<CompiledBlock> = Vec::new();
+        let mut total_census = CommandCensus::default();
+        let mut total_latency = 0u64;
+        let mut total_energy = EnergyBreakdown::default();
+        let mut n_slots = 0usize;
+
+        for op in ops {
+            let _ = op.map_rows(|r| {
+                n_slots = n_slots.max(r + 1);
+                r
+            });
+            let lowered = op.lower();
+            let cmd_start = cmds.len();
+            let mut latency = 0u64;
+            let mut last_latency = 0u64;
+            let mut energy = EnergyBreakdown::default();
+            let mut census = CommandCensus::default();
+            for c in &lowered {
+                last_latency = timer.latency_ps(c);
+                latency += last_latency;
+                energy.add(&model.energy(c));
+                census.record(c);
+            }
+            total_latency += latency;
+            total_energy.add(&energy);
+            total_census.add(&census);
+            blocks.push(CompiledBlock {
+                op: *op,
+                cmd_start,
+                cmd_len: lowered.len(),
+                latency_ps: latency,
+                lead_latency_ps: latency - last_latency,
+                energy,
+                census,
+            });
+            cmds.extend(lowered);
+        }
+
+        CompiledProgram {
+            cfg_fingerprint: cfg_fp,
+            cmds,
+            blocks,
+            census: total_census,
+            latency_ps: total_latency,
+            energy: total_energy,
+            n_slots,
+        }
+    }
+
+    /// Fingerprint of the [`DramConfig`] this program was priced against.
+    pub fn cfg_fingerprint(&self) -> u64 {
+        self.cfg_fingerprint
+    }
+
+    /// The full lowered command stream (slot-relative).
+    pub fn commands(&self) -> &[Command] {
+        &self.cmds
+    }
+
+    pub fn blocks(&self) -> &[CompiledBlock] {
+        &self.blocks
+    }
+
+    pub fn block_commands(&self, block: &CompiledBlock) -> &[Command] {
+        &self.cmds[block.cmd_start..block.cmd_start + block.cmd_len]
+    }
+
+    /// Total command census (no refreshes — the engine injects those).
+    pub fn census(&self) -> &CommandCensus {
+        &self.census
+    }
+
+    /// Total latency of the program's own commands, ps (excl. refresh).
+    pub fn latency_ps(&self) -> u64 {
+        self.latency_ps
+    }
+
+    /// Total energy footprint of the program's own commands (excl. refresh).
+    pub fn energy(&self) -> &EnergyBreakdown {
+        &self.energy
+    }
+
+    /// Number of data-row slots a binding must provide.
+    pub fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    /// Command `i` retargeted through `binding` (identity if `None`).
+    pub fn command_rebased(&self, i: usize, binding: Option<&[usize]>) -> Command {
+        remap_command(self.cmds[i], binding)
+    }
+}
+
+/// Retarget a row reference: data slots map through the binding, every
+/// scratch/control/migration reference is position-independent already.
+pub fn remap_rowref(r: RowRef, binding: &[usize]) -> RowRef {
+    match r {
+        RowRef::Data(slot) => RowRef::Data(binding[slot]),
+        other => other,
+    }
+}
+
+/// Retarget one command through an optional slot→row binding.
+pub fn remap_command(cmd: Command, binding: Option<&[usize]>) -> Command {
+    let Some(b) = binding else { return cmd };
+    match cmd {
+        Command::Act { row } => Command::Act { row: remap_rowref(row, b) },
+        Command::Aap { src, dst } => {
+            Command::Aap { src: remap_rowref(src, b), dst: remap_rowref(dst, b) }
+        }
+        Command::Dra { a, b: bb } => {
+            Command::Dra { a: remap_rowref(a, b), b: remap_rowref(bb, b) }
+        }
+        Command::Tra { a, b: bb, c } => Command::Tra {
+            a: remap_rowref(a, b),
+            b: remap_rowref(bb, b),
+            c: remap_rowref(c, b),
+        },
+        other => other,
+    }
+}
+
+/// Rename the data rows of `ops` to dense slots in order of first
+/// appearance. Returns the canonical ops and the slot→row binding that
+/// recovers the original placement. Two op sequences with the same shape
+/// but different row placements canonicalize identically — the heart of
+/// compile-once, execute-anywhere.
+pub fn canonicalize(ops: &[PimOp]) -> (Vec<PimOp>, Vec<usize>) {
+    let mut binding: Vec<usize> = Vec::new();
+    let canonical = ops
+        .iter()
+        .map(|op| {
+            op.map_rows(|row| {
+                if let Some(slot) = binding.iter().position(|&r| r == row) {
+                    slot
+                } else {
+                    binding.push(row);
+                    binding.len() - 1
+                }
+            })
+        })
+        .collect();
+    (canonical, binding)
+}
+
+/// What a cache entry compiles: either a canonical op sequence, or a named
+/// application kernel identified by its shape parameters (the builder runs
+/// only on a miss).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum ProgramShape {
+    /// canonical (slot-relative) macro-op sequence
+    Ops(Vec<PimOp>),
+    /// named app kernel + shape parameters (width, cols, rows, constants…)
+    Kernel { name: &'static str, params: Vec<u64> },
+}
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct ProgramKey {
+    shape: ProgramShape,
+    cfg_fingerprint: u64,
+}
+
+struct CacheEntry {
+    prog: Arc<CompiledProgram>,
+    tick: u64,
+}
+
+struct CacheInner {
+    map: HashMap<ProgramKey, CacheEntry>,
+    tick: u64,
+}
+
+/// Snapshot of a cache's counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// lookups served from the cache
+    pub hits: u64,
+    /// lookups that compiled a new program
+    pub misses: u64,
+    /// requests served without any lookup because a worker batched them
+    /// onto the program fetched for the previous same-shape request
+    pub batched: u64,
+    /// entries evicted by the LRU bound
+    pub evictions: u64,
+    /// cumulative wall-clock spent compiling, ns
+    pub compile_ns: u64,
+}
+
+impl CacheStats {
+    /// Requests that went through the compile layer (lookups + batched).
+    pub fn requests(&self) -> u64 {
+        self.hits + self.misses + self.batched
+    }
+
+    /// Fraction of requests served without compiling.
+    pub fn hit_rate(&self) -> f64 {
+        let req = self.requests();
+        if req == 0 {
+            return 0.0;
+        }
+        (self.hits + self.batched) as f64 / req as f64
+    }
+
+    /// Compile time amortized over every request served, ns.
+    pub fn amortized_compile_ns(&self) -> f64 {
+        let req = self.requests();
+        if req == 0 {
+            return 0.0;
+        }
+        self.compile_ns as f64 / req as f64
+    }
+}
+
+/// `Arc`-shared, LRU-bounded map from (shape, config fingerprint) to
+/// [`CompiledProgram`]. All coordinator workers (and every
+/// [`crate::apps::ElementCtx`]) consult one of these; compile happens at
+/// most once per key while it stays resident.
+pub struct ProgramCache {
+    capacity: usize,
+    inner: Mutex<CacheInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    batched: AtomicU64,
+    evictions: AtomicU64,
+    compile_ns: AtomicU64,
+}
+
+impl ProgramCache {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "cache capacity must be positive");
+        ProgramCache {
+            capacity,
+            inner: Mutex::new(CacheInner { map: HashMap::new(), tick: 0 }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            batched: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            compile_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide cache the application layer defaults to.
+    pub fn global() -> Arc<ProgramCache> {
+        static GLOBAL: OnceLock<Arc<ProgramCache>> = OnceLock::new();
+        GLOBAL.get_or_init(|| Arc::new(ProgramCache::new(512))).clone()
+    }
+
+    /// Fetch or compile the program for `shape` under `cfg`.
+    pub fn get_or_compile(
+        &self,
+        shape: ProgramShape,
+        cfg: &DramConfig,
+        build: impl FnOnce() -> Vec<PimOp>,
+    ) -> Arc<CompiledProgram> {
+        self.get_or_compile_keyed(shape, cfg, cfg.fingerprint(), build)
+    }
+
+    /// Hot-path variant with the config fingerprint precomputed.
+    pub fn get_or_compile_keyed(
+        &self,
+        shape: ProgramShape,
+        cfg: &DramConfig,
+        cfg_fp: u64,
+        build: impl FnOnce() -> Vec<PimOp>,
+    ) -> Arc<CompiledProgram> {
+        let key = ProgramKey { shape, cfg_fingerprint: cfg_fp };
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(entry) = inner.map.get_mut(&key) {
+                entry.tick = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return entry.prog.clone();
+            }
+        }
+        // Miss: compile *outside* the lock so hits on resident shapes never
+        // stall behind a long kernel compile (a multiplier schedule is
+        // thousands of ops). Two workers racing on the same cold key may
+        // both compile; the loser adopts the winner's entry below.
+        let t0 = Instant::now();
+        let ops = build();
+        let prog = Arc::new(CompiledProgram::compile_with_fingerprint(&ops, cfg, cfg_fp));
+        self.compile_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(entry) = inner.map.get_mut(&key) {
+            entry.tick = tick;
+            return entry.prog.clone();
+        }
+        inner.map.insert(key, CacheEntry { prog: prog.clone(), tick });
+        while inner.map.len() > self.capacity {
+            let oldest = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.tick)
+                .map(|(k, _)| k.clone());
+            match oldest {
+                Some(k) => {
+                    inner.map.remove(&k);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                None => break,
+            }
+        }
+        prog
+    }
+
+    /// Canonicalize `ops` and fetch/compile their program; returns the
+    /// program plus the slot→row binding for this placement.
+    pub fn get_or_compile_ops(
+        &self,
+        ops: &[PimOp],
+        cfg: &DramConfig,
+    ) -> (Arc<CompiledProgram>, Vec<usize>) {
+        let (canonical, binding) = canonicalize(ops);
+        let shape = ProgramShape::Ops(canonical.clone());
+        let prog = self.get_or_compile(shape, cfg, move || canonical);
+        (prog, binding)
+    }
+
+    /// Record `n` requests served by reusing the previously fetched program
+    /// (same-shape batching in a worker) without a cache lookup.
+    pub fn record_batched(&self, n: u64) {
+        self.batched.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            batched: self.batched.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            compile_ns: self.compile_ns.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Resident program count.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ShiftDir;
+
+    fn cfg() -> DramConfig {
+        DramConfig::tiny_test()
+    }
+
+    #[test]
+    fn census_matches_lowered_commands() {
+        let ops = [
+            PimOp::Copy { src: 0, dst: 1 },
+            PimOp::And { a: 0, b: 1, dst: 2 },
+            PimOp::ShiftBy { src: 2, dst: 2, n: 3, dir: ShiftDir::Right },
+            PimOp::Not { src: 2, dst: 3 },
+        ];
+        let prog = CompiledProgram::compile(&ops, &cfg());
+        let mut want = CommandCensus::default();
+        for op in &ops {
+            for c in op.lower() {
+                want.record(&c);
+            }
+        }
+        assert_eq!(*prog.census(), want);
+        assert_eq!(prog.census().aap, 1 + 4 + 12 + 1);
+        assert_eq!(prog.census().tra, 1);
+        assert_eq!(prog.census().dra, 1);
+        assert_eq!(prog.census().refresh, 0);
+        assert_eq!(prog.commands().len() as u64, prog.census().total());
+        assert_eq!(prog.n_slots(), 4);
+    }
+
+    #[test]
+    fn footprint_matches_manual_pricing() {
+        let c = cfg();
+        let timer = CommandTimer::new(c.timing.clone());
+        let model = EnergyModel::new(&c.energy, &c.timing);
+        let ops = [PimOp::ShiftBy { src: 0, dst: 0, n: 5, dir: ShiftDir::Left }];
+        let prog = CompiledProgram::compile(&ops, &c);
+        let mut lat = 0u64;
+        let mut energy = EnergyBreakdown::default();
+        for cmd in prog.commands() {
+            lat += timer.latency_ps(cmd);
+            energy.add(&model.energy(cmd));
+        }
+        assert_eq!(prog.latency_ps(), lat);
+        assert_eq!(prog.latency_ps(), 20 * c.timing.t_aap());
+        assert!((prog.energy().total_pj() - energy.total_pj()).abs() < 1e-9);
+        // one block: lead latency excludes exactly the last command
+        let b = &prog.blocks()[0];
+        assert_eq!(b.lead_latency_ps, lat - c.timing.t_aap());
+    }
+
+    #[test]
+    fn canonicalize_is_placement_independent() {
+        let a = [PimOp::Xor { a: 7, b: 9, dst: 12 }];
+        let b = [PimOp::Xor { a: 0, b: 3, dst: 5 }];
+        let (ca, ba) = canonicalize(&a);
+        let (cb, bb) = canonicalize(&b);
+        assert_eq!(ca, cb, "same shape, same canonical form");
+        assert_eq!(ca, vec![PimOp::Xor { a: 0, b: 1, dst: 2 }]);
+        assert_eq!(ba, vec![7, 9, 12]);
+        assert_eq!(bb, vec![0, 3, 5]);
+    }
+
+    #[test]
+    fn canonicalize_reuses_slots_for_repeated_rows() {
+        let ops = [
+            PimOp::ShiftBy { src: 4, dst: 4, n: 2, dir: ShiftDir::Right },
+            PimOp::Copy { src: 4, dst: 6 },
+        ];
+        let (canon, binding) = canonicalize(&ops);
+        assert_eq!(
+            canon,
+            vec![
+                PimOp::ShiftBy { src: 0, dst: 0, n: 2, dir: ShiftDir::Right },
+                PimOp::Copy { src: 0, dst: 1 },
+            ]
+        );
+        assert_eq!(binding, vec![4, 6]);
+    }
+
+    #[test]
+    fn rebase_remaps_only_data_rows() {
+        let ops = [PimOp::ShiftRight { src: 0, dst: 1 }];
+        let prog = CompiledProgram::compile(&ops, &cfg());
+        let binding = [10usize, 20];
+        let first = prog.command_rebased(0, Some(&binding));
+        match first {
+            Command::Aap { src: RowRef::Data(10), dst: RowRef::MigTop(_) } => {}
+            other => panic!("unexpected rebased command {other:?}"),
+        }
+        // identity without a binding
+        assert_eq!(prog.command_rebased(0, None), prog.commands()[0]);
+    }
+
+    #[test]
+    fn cache_hits_and_misses_counted() {
+        let cache = ProgramCache::new(8);
+        let c = cfg();
+        let ops = [PimOp::ShiftBy { src: 3, dst: 3, n: 2, dir: ShiftDir::Right }];
+        let (p1, b1) = cache.get_or_compile_ops(&ops, &c);
+        let other = [PimOp::ShiftBy { src: 9, dst: 9, n: 2, dir: ShiftDir::Right }];
+        let (p2, b2) = cache.get_or_compile_ops(&other, &c);
+        assert!(Arc::ptr_eq(&p1, &p2), "same shape shares one program");
+        assert_eq!(b1, vec![3]);
+        assert_eq!(b2, vec![9]);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert!(s.compile_ns > 0);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        cache.record_batched(2);
+        assert_eq!(cache.stats().batched, 2);
+    }
+
+    #[test]
+    fn distinct_shapes_and_configs_get_distinct_programs() {
+        let cache = ProgramCache::new(8);
+        let tiny = cfg();
+        let big = DramConfig::ddr3_1333_4gb();
+        let ops = [PimOp::ShiftBy { src: 0, dst: 0, n: 1, dir: ShiftDir::Right }];
+        let (p_tiny, _) = cache.get_or_compile_ops(&ops, &tiny);
+        let (p_big, _) = cache.get_or_compile_ops(&ops, &big);
+        assert!(!Arc::ptr_eq(&p_tiny, &p_big), "config fingerprint splits keys");
+        assert_eq!(cache.stats().misses, 2);
+        let ops3 = [PimOp::ShiftBy { src: 0, dst: 0, n: 3, dir: ShiftDir::Right }];
+        let (p3, _) = cache.get_or_compile_ops(&ops3, &tiny);
+        assert_eq!(p3.census().aap, 12, "n is part of the shape");
+        assert_eq!(cache.stats().misses, 3);
+    }
+
+    #[test]
+    fn lru_bound_evicts_oldest() {
+        let cache = ProgramCache::new(2);
+        let c = cfg();
+        for n in 1..=3usize {
+            let ops = [PimOp::ShiftBy { src: 0, dst: 0, n, dir: ShiftDir::Left }];
+            let _ = cache.get_or_compile_ops(&ops, &c);
+        }
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().evictions, 1);
+        // n=1 was the oldest → refetching it recompiles
+        let ops = [PimOp::ShiftBy { src: 0, dst: 0, n: 1, dir: ShiftDir::Left }];
+        let _ = cache.get_or_compile_ops(&ops, &c);
+        assert_eq!(cache.stats().misses, 4);
+    }
+
+    #[test]
+    fn kernel_shapes_key_on_name_and_params() {
+        let cache = ProgramCache::new(8);
+        let c = cfg();
+        let build = || vec![PimOp::Copy { src: 0, dst: 1 }];
+        let k1 = ProgramShape::Kernel { name: "k", params: vec![8, 256] };
+        let k2 = ProgramShape::Kernel { name: "k", params: vec![16, 256] };
+        let a = cache.get_or_compile(k1.clone(), &c, build);
+        let b = cache.get_or_compile(k1, &c, build);
+        let d = cache.get_or_compile(k2, &c, build);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(!Arc::ptr_eq(&a, &d));
+        assert_eq!(cache.stats().hits, 1);
+        assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn empty_program_compiles() {
+        let prog = CompiledProgram::compile(&[], &cfg());
+        assert!(prog.is_empty());
+        assert_eq!(prog.latency_ps(), 0);
+        assert_eq!(prog.n_slots(), 0);
+    }
+}

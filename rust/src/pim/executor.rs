@@ -7,6 +7,9 @@
 
 use crate::dram::address::{Command, RowRef};
 use crate::dram::subarray::Subarray;
+use crate::pim::compile::CompiledProgram;
+use crate::pim::isa::PimOp;
+use crate::util::{BitRow, ShiftDir};
 
 /// Apply one command's functional semantics.
 ///
@@ -36,6 +39,86 @@ pub fn apply(sa: &mut Subarray, cmd: &Command) {
 pub fn run(sa: &mut Subarray, cmds: &[Command]) {
     for c in cmds {
         apply(sa, c);
+    }
+}
+
+/// Apply one macro-op's *semantic* effect on the data rows, word-level.
+///
+/// This is the compiled fast path: instead of replaying the lowered AAP/
+/// DRA/TRA stream bit-for-bit through the migration-port model, it applies
+/// the op's defining data-row transformation directly (e.g. a shift-by-n
+/// is one word-level [`BitRow::shifted_by`] instead of 4n migration AAPs).
+/// Equality of the two paths on data rows is what the executor's per-op
+/// property tests (and `tests/compile_layer.rs`) prove. Scratch state
+/// (compute/DCC/migration rows) is *not* modelled here — every macro-op's
+/// lowering re-initializes its scratch before use, so no macro-op can
+/// observe it.
+///
+/// `binding` maps slot indices to concrete data rows (identity if `None`).
+pub fn apply_op(sa: &mut Subarray, op: &PimOp, binding: Option<&[usize]>) {
+    let m = |slot: usize| -> usize {
+        match binding {
+            Some(b) => b[slot],
+            None => slot,
+        }
+    };
+    let cols = sa.cols();
+    match *op {
+        PimOp::Copy { src, dst } => {
+            let v = sa.read_row(m(src)).clone();
+            sa.write_row(m(dst), v);
+        }
+        PimOp::SetZero { dst } => sa.write_row(m(dst), BitRow::zeros(cols)),
+        PimOp::SetOnes { dst } => sa.write_row(m(dst), BitRow::ones(cols)),
+        PimOp::Not { src, dst } => {
+            let v = sa.read_row(m(src)).not();
+            sa.write_row(m(dst), v);
+        }
+        PimOp::And { a, b, dst } => {
+            let v = sa.read_row(m(a)).and(sa.read_row(m(b)));
+            sa.write_row(m(dst), v);
+        }
+        PimOp::Or { a, b, dst } => {
+            let v = sa.read_row(m(a)).or(sa.read_row(m(b)));
+            sa.write_row(m(dst), v);
+        }
+        PimOp::Xor { a, b, dst } => {
+            let v = sa.read_row(m(a)).xor(sa.read_row(m(b)));
+            sa.write_row(m(dst), v);
+        }
+        PimOp::Maj { a, b, c, dst } => {
+            let v = BitRow::maj3(sa.read_row(m(a)), sa.read_row(m(b)), sa.read_row(m(c)));
+            sa.write_row(m(dst), v);
+        }
+        PimOp::ShiftRight { src, dst } => {
+            let v = sa.read_row(m(src)).shifted(ShiftDir::Right, false);
+            sa.write_row(m(dst), v);
+        }
+        PimOp::ShiftLeft { src, dst } => {
+            let v = sa.read_row(m(src)).shifted(ShiftDir::Left, false);
+            sa.write_row(m(dst), v);
+        }
+        PimOp::ShiftBy { src, dst, n, dir } => {
+            let v = sa.read_row(m(src)).shifted_by(dir, n, false);
+            sa.write_row(m(dst), v);
+        }
+    }
+}
+
+/// Rebase-and-run: apply a compiled program's semantic effect to `sa` with
+/// its data-row slots retargeted through `binding`. Retargeting is O(1) —
+/// the schedule is never rewritten; the binding is consulted per block.
+pub fn run_compiled(sa: &mut Subarray, prog: &CompiledProgram, binding: Option<&[usize]>) {
+    if let Some(b) = binding {
+        assert!(
+            b.len() >= prog.n_slots(),
+            "binding provides {} rows, program needs {}",
+            b.len(),
+            prog.n_slots()
+        );
+    }
+    for block in prog.blocks() {
+        apply_op(sa, &block.op, binding);
     }
 }
 
@@ -194,6 +277,70 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn semantic_apply_op_matches_lowered_execution_on_data_rows() {
+        check(48, |rng| {
+            let cols = 2 * (rng.below(400) + 8);
+            let mut per_cmd = fresh(8, cols);
+            let mut semantic = fresh(8, cols);
+            for r in 0..3 {
+                let bits = BitRow::random(cols, rng);
+                per_cmd.write_row(r, bits.clone());
+                semantic.write_row(r, bits);
+            }
+            let n = rng.below(9);
+            let dir = if rng.bool() { ShiftDir::Right } else { ShiftDir::Left };
+            let ops = [
+                PimOp::And { a: 0, b: 1, dst: 3 },
+                PimOp::Xor { a: 3, b: 2, dst: 4 },
+                PimOp::ShiftBy { src: 4, dst: 5, n, dir },
+                PimOp::Maj { a: 0, b: 1, c: 5, dst: 6 },
+                PimOp::Not { src: 6, dst: 7 },
+            ];
+            for op in &ops {
+                run(&mut per_cmd, &op.lower());
+                apply_op(&mut semantic, op, None);
+            }
+            for r in 0..8 {
+                prop_assert_eq(
+                    semantic.read_row(r).clone(),
+                    per_cmd.read_row(r).clone(),
+                    &format!("data row {r}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn apply_op_honours_binding() {
+        let mut rng = Rng::new(77);
+        let mut sa = fresh(16, 128);
+        let a = BitRow::random(128, &mut rng);
+        sa.write_row(10, a.clone());
+        // slot 0 → row 10, slot 1 → row 12
+        apply_op(
+            &mut sa,
+            &PimOp::ShiftBy { src: 0, dst: 1, n: 3, dir: ShiftDir::Right },
+            Some(&[10, 12]),
+        );
+        assert_eq!(sa.read_row(12), &a.shifted_by(ShiftDir::Right, 3, false));
+        assert_eq!(sa.read_row(10), &a, "source untouched");
+    }
+
+    #[test]
+    #[should_panic(expected = "binding provides")]
+    fn run_compiled_rejects_short_binding() {
+        use crate::config::DramConfig;
+        use crate::pim::compile::CompiledProgram;
+        let prog = CompiledProgram::compile(
+            &[PimOp::Copy { src: 0, dst: 1 }],
+            &DramConfig::tiny_test(),
+        );
+        let mut sa = fresh(4, 64);
+        run_compiled(&mut sa, &prog, Some(&[0]));
     }
 
     #[test]

@@ -14,7 +14,10 @@ use crate::dram::address::{Command, Port, RowRef};
 use crate::util::ShiftDir;
 
 /// One PIM macro-operation on data rows of a subarray.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+///
+/// `Hash` because canonical op sequences key the compile layer's
+/// [`crate::pim::compile::ProgramCache`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum PimOp {
     /// dst := src (RowClone, 1 AAP)
     Copy { src: usize, dst: usize },
@@ -145,6 +148,33 @@ impl PimOp {
         ]
     }
 
+    /// The same op with every data-row operand passed through `f` —
+    /// the compile layer's canonicalization (rows → slots) and rebase
+    /// (slots → rows) both ride on this.
+    pub fn map_rows(&self, mut f: impl FnMut(usize) -> usize) -> PimOp {
+        match *self {
+            PimOp::Copy { src, dst } => PimOp::Copy { src: f(src), dst: f(dst) },
+            PimOp::SetZero { dst } => PimOp::SetZero { dst: f(dst) },
+            PimOp::SetOnes { dst } => PimOp::SetOnes { dst: f(dst) },
+            PimOp::Not { src, dst } => PimOp::Not { src: f(src), dst: f(dst) },
+            PimOp::And { a, b, dst } => PimOp::And { a: f(a), b: f(b), dst: f(dst) },
+            PimOp::Or { a, b, dst } => PimOp::Or { a: f(a), b: f(b), dst: f(dst) },
+            PimOp::Maj { a, b, c, dst } => {
+                PimOp::Maj { a: f(a), b: f(b), c: f(c), dst: f(dst) }
+            }
+            PimOp::Xor { a, b, dst } => PimOp::Xor { a: f(a), b: f(b), dst: f(dst) },
+            PimOp::ShiftRight { src, dst } => {
+                PimOp::ShiftRight { src: f(src), dst: f(dst) }
+            }
+            PimOp::ShiftLeft { src, dst } => {
+                PimOp::ShiftLeft { src: f(src), dst: f(dst) }
+            }
+            PimOp::ShiftBy { src, dst, n, dir } => {
+                PimOp::ShiftBy { src: f(src), dst: f(dst), n, dir }
+            }
+        }
+    }
+
     /// AAP count of the lowered sequence (the latency/energy driver).
     pub fn aap_count(&self) -> usize {
         self.lower()
@@ -189,6 +219,20 @@ mod tests {
         assert!(matches!(l[0], Aap { dst: RowRef::MigTop(Port::B), .. }));
         assert!(matches!(r[2], Aap { src: RowRef::MigTop(Port::B), .. }));
         assert!(matches!(l[2], Aap { src: RowRef::MigTop(Port::A), .. }));
+    }
+
+    #[test]
+    fn map_rows_touches_every_data_operand() {
+        let op = PimOp::Maj { a: 1, b: 2, c: 3, dst: 4 };
+        assert_eq!(
+            op.map_rows(|r| r + 10),
+            PimOp::Maj { a: 11, b: 12, c: 13, dst: 14 }
+        );
+        let op = PimOp::ShiftBy { src: 5, dst: 6, n: 3, dir: ShiftDir::Left };
+        assert_eq!(
+            op.map_rows(|r| r * 2),
+            PimOp::ShiftBy { src: 10, dst: 12, n: 3, dir: ShiftDir::Left }
+        );
     }
 
     #[test]

@@ -1,12 +1,21 @@
 //! Bit-accurate PIM layer: the macro-op ISA (RowClone, Ambit AND/OR/NOT/
 //! MAJ/XOR, and the paper's migration-cell shifts), its lowering to AAP/
-//! DRA/TRA command streams, the functional executor, and the program
-//! builder used by application kernels.
+//! DRA/TRA command streams, the functional executor, the program builder
+//! used by application kernels, and the compile-once/execute-anywhere
+//! layer ([`compile`]): position-relative [`CompiledProgram`]s with
+//! precomputed latency/energy/census footprints, shared through an
+//! LRU-bounded [`ProgramCache`] and retargeted to any (bank, subarray)
+//! in O(1) via slot bindings.
 
+pub mod compile;
 pub mod executor;
 pub mod isa;
 pub mod program;
 
-pub use executor::{apply, run};
+pub use compile::{
+    canonicalize, CacheStats, CommandCensus, CompiledBlock, CompiledProgram, ProgramCache,
+    ProgramShape,
+};
+pub use executor::{apply, apply_op, run, run_compiled};
 pub use isa::{shift_commands, PimOp};
 pub use program::{Program, RowAlloc};

@@ -6,7 +6,9 @@
 //! recycles freed temporaries, mirroring how SIMDRAM's compiler allocates
 //! B-group rows.
 
+use crate::config::DramConfig;
 use crate::dram::address::Command;
+use crate::pim::compile::{CommandCensus, CompiledProgram};
 use crate::pim::isa::PimOp;
 
 /// An ordered sequence of macro-ops plus its lowered command stream.
@@ -38,20 +40,17 @@ impl Program {
         self.ops.is_empty()
     }
 
-    /// Command census: (AAPs, TRAs, DRAs).
-    pub fn census(&self) -> (usize, usize, usize) {
-        let mut aap = 0;
-        let mut tra = 0;
-        let mut dra = 0;
-        for c in &self.cmds {
-            match c {
-                Command::Aap { .. } => aap += 1,
-                Command::Tra { .. } => tra += 1,
-                Command::Dra { .. } => dra += 1,
-                _ => {}
-            }
-        }
-        (aap, tra, dra)
+    /// Named command census of the lowered stream (shared with the engine's
+    /// `sim::CommandCounts`, so program footprints diff directly against
+    /// engine counters).
+    pub fn census(&self) -> CommandCensus {
+        CommandCensus::from_commands(&self.cmds)
+    }
+
+    /// Lower-and-price this program once against `cfg`; the result is the
+    /// bank-agnostic schedule the cache layer shares between executions.
+    pub fn compile(&self, cfg: &DramConfig) -> CompiledProgram {
+        CompiledProgram::compile(&self.ops, cfg)
     }
 }
 
@@ -113,10 +112,10 @@ mod tests {
         p.push(PimOp::And { a: 0, b: 1, dst: 2 });
         p.push(PimOp::ShiftRight { src: 2, dst: 3 });
         p.push(PimOp::Not { src: 3, dst: 4 });
-        let (aap, tra, dra) = p.census();
-        assert_eq!(aap, 1 + 4 + 4 + 1);
-        assert_eq!(tra, 1);
-        assert_eq!(dra, 1);
+        let c = p.census();
+        assert_eq!(c.aap, 1 + 4 + 4 + 1);
+        assert_eq!(c.tra, 1);
+        assert_eq!(c.dra, 1);
         assert_eq!(p.ops().len(), 4);
         assert_eq!(
             p.commands().len(),
@@ -128,7 +127,19 @@ mod tests {
     fn shift_by_census() {
         let mut p = Program::new();
         p.push(PimOp::ShiftBy { src: 0, dst: 1, n: 8, dir: ShiftDir::Left });
-        assert_eq!(p.census().0, 32);
+        assert_eq!(p.census().aap, 32);
+    }
+
+    #[test]
+    fn program_compiles_to_matching_footprint() {
+        let mut p = Program::new();
+        p.push(PimOp::ShiftBy { src: 0, dst: 1, n: 2, dir: ShiftDir::Right });
+        p.push(PimOp::Xor { a: 1, b: 0, dst: 2 });
+        let cfg = DramConfig::tiny_test();
+        let prog = p.compile(&cfg);
+        assert_eq!(*prog.census(), p.census());
+        assert_eq!(prog.commands().len(), p.commands().len());
+        assert_eq!(prog.blocks().len(), p.ops().len());
     }
 
     #[test]

@@ -6,7 +6,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
+use crate::runtime::{Result, RuntimeError};
 
 /// Shapes of the AOT artifacts, as written by aot.py.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -22,7 +22,7 @@ pub struct Manifest {
 impl Manifest {
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading {}", path.display()))?;
+            .map_err(|e| RuntimeError::new(format!("reading {}: {e}", path.display())))?;
         Self::parse(&text)
     }
 
@@ -32,17 +32,17 @@ impl Manifest {
             let pat = format!("\"{key}\"");
             let at = text
                 .find(&pat)
-                .ok_or_else(|| anyhow!("manifest missing field {key}"))?;
+                .ok_or_else(|| RuntimeError::new(format!("manifest missing field {key}")))?;
             let rest = &text[at + pat.len()..];
             let rest = rest
                 .trim_start()
                 .strip_prefix(':')
-                .ok_or_else(|| anyhow!("malformed field {key}"))?
+                .ok_or_else(|| RuntimeError::new(format!("malformed field {key}")))?
                 .trim_start();
             let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
             digits
                 .parse()
-                .with_context(|| format!("non-integer value for {key}"))
+                .map_err(|e| RuntimeError::new(format!("non-integer value for {key}: {e}")))
         };
         let m = Manifest {
             n_params: field("n_params")?,
@@ -58,16 +58,19 @@ impl Manifest {
 
     pub fn validate(&self) -> Result<()> {
         if self.n_params != 16 {
-            return Err(anyhow!(
+            return Err(RuntimeError::new(format!(
                 "artifact n_params {} != crate expectation 16 — re-run `make artifacts`",
                 self.n_params
-            ));
+            )));
         }
         if self.n_out != 6 {
-            return Err(anyhow!("artifact n_out {} != 6", self.n_out));
+            return Err(RuntimeError::new(format!("artifact n_out {} != 6", self.n_out)));
         }
         if self.mc_batch == 0 || self.mc_batch % self.mc_tile != 0 {
-            return Err(anyhow!("mc_batch {} not a multiple of tile", self.mc_batch));
+            return Err(RuntimeError::new(format!(
+                "mc_batch {} not a multiple of tile",
+                self.mc_batch
+            )));
         }
         Ok(())
     }
@@ -118,6 +121,12 @@ mod tests {
         assert!(Manifest::parse(&bad).is_err());
         let bad = SAMPLE.replace("\"mc_batch\": 8192", "\"mc_batch\": 1000");
         assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn missing_file_error_names_path() {
+        let err = Manifest::load(Path::new("/nonexistent/manifest.json")).unwrap_err();
+        assert!(format!("{err}").contains("/nonexistent/manifest.json"));
     }
 
     #[test]

@@ -12,24 +12,18 @@ use crate::dram::address::Command;
 use crate::dram::bank::Bank;
 use crate::dram::energy::{EnergyBreakdown, EnergyModel};
 use crate::dram::timing::{CommandTimer, RefreshScheduler};
+use crate::pim::compile::CompiledProgram;
 use crate::pim::executor;
 
-/// Command census kept by the engine.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub struct CommandCounts {
-    pub act: u64,
-    pub pre: u64,
-    pub read: u64,
-    pub write: u64,
-    pub aap: u64,
-    pub dra: u64,
-    pub tra: u64,
-    pub refresh: u64,
-}
+/// Command census kept by the engine — the same named struct the compile
+/// layer stamps onto [`CompiledProgram`] footprints, so the two diff
+/// directly (see `CommandCensus::diff`).
+pub use crate::pim::compile::CommandCensus as CommandCounts;
 
 /// Cycle-accurate (command-window-accurate) simulator of one bank.
 pub struct BankSim {
     cfg: DramConfig,
+    cfg_fp: u64,
     bank: Bank,
     timer: CommandTimer,
     energy_model: EnergyModel,
@@ -42,6 +36,11 @@ pub struct BankSim {
     /// when true, due refreshes are injected before each issued command
     /// (a real controller interleaves REF with the PIM stream)
     pub refresh_enabled: bool,
+    /// when true, [`Self::run_compiled`] falls back to full per-command
+    /// simulation (bit-level functional semantics included) and asserts
+    /// the compiled census against the per-command census — the
+    /// functional-checking mode the fast path is validated against
+    pub check_bit_exact: bool,
 }
 
 impl BankSim {
@@ -49,6 +48,7 @@ impl BankSim {
         let timer = CommandTimer::new(cfg.timing.clone());
         let energy_model = EnergyModel::new(&cfg.energy, &cfg.timing);
         let refresh = RefreshScheduler::new(cfg.timing.t_refi);
+        let cfg_fp = cfg.fingerprint();
         BankSim {
             bank: Bank::new(&cfg.geometry),
             timer,
@@ -58,12 +58,19 @@ impl BankSim {
             energy: EnergyBreakdown::default(),
             counts: CommandCounts::default(),
             refresh_enabled: true,
+            check_bit_exact: false,
+            cfg_fp,
             cfg,
         }
     }
 
     pub fn config(&self) -> &DramConfig {
         &self.cfg
+    }
+
+    /// Cached [`DramConfig::fingerprint`] of this bank's config.
+    pub fn config_fingerprint(&self) -> u64 {
+        self.cfg_fp
     }
 
     pub fn bank(&mut self) -> &mut Bank {
@@ -77,27 +84,23 @@ impl BankSim {
     fn account(&mut self, cmd: &Command) {
         self.now_ps += self.timer.latency_ps(cmd);
         self.energy.add(&self.energy_model.energy(cmd));
-        match cmd {
-            Command::Act { .. } => self.counts.act += 1,
-            Command::Pre => self.counts.pre += 1,
-            Command::Read { .. } => self.counts.read += 1,
-            Command::Write { .. } => self.counts.write += 1,
-            Command::Aap { .. } => self.counts.aap += 1,
-            Command::Dra { .. } => self.counts.dra += 1,
-            Command::Tra { .. } => self.counts.tra += 1,
-            Command::Refresh => self.counts.refresh += 1,
-        }
+        self.counts.record(cmd);
     }
 
-    /// Issue one command against a subarray: inject due refreshes, advance
-    /// time, accumulate energy, apply functional semantics.
-    pub fn issue(&mut self, subarray: usize, cmd: Command) {
+    /// The refresh check that precedes every issued command.
+    fn inject_due_refreshes(&mut self) {
         if self.refresh_enabled {
             let due = self.refresh.due(self.now_ps);
             for _ in 0..due {
                 self.account(&Command::Refresh);
             }
         }
+    }
+
+    /// Issue one command against a subarray: inject due refreshes, advance
+    /// time, accumulate energy, apply functional semantics.
+    pub fn issue(&mut self, subarray: usize, cmd: Command) {
+        self.inject_due_refreshes();
         self.account(&cmd);
         executor::apply(self.bank.subarray(subarray), &cmd);
     }
@@ -106,6 +109,91 @@ impl BankSim {
     pub fn run(&mut self, subarray: usize, cmds: &[Command]) {
         for c in cmds {
             self.issue(subarray, *c);
+        }
+    }
+
+    /// Execute a compiled program: the batched fast path.
+    ///
+    /// Per block (= one macro-op), functional state advances through the
+    /// word-level semantic executor and time/census advance in O(1) from
+    /// the precomputed footprint; per-command energy values are re-added
+    /// in command order so the running f64 totals stay **bit-identical**
+    /// to per-command simulation. A block that would straddle a refresh
+    /// boundary (a few per tREFI window — one block is ~210 ns, tREFI is
+    /// 7.8 µs) falls back to exact per-command accounting, reproducing
+    /// the per-command engine's refresh interleaving precisely. With
+    /// [`Self::check_bit_exact`] set, the whole program runs through the
+    /// per-command path (bit-level functional semantics included) and the
+    /// compiled census is asserted against the engine's census delta.
+    ///
+    /// `binding` retargets the program's data-row slots (identity if
+    /// `None`) — the O(1) rebase that makes one compiled program serve
+    /// every (bank, subarray, row) placement.
+    pub fn run_compiled(
+        &mut self,
+        subarray: usize,
+        prog: &CompiledProgram,
+        binding: Option<&[usize]>,
+    ) {
+        assert_eq!(
+            prog.cfg_fingerprint(),
+            self.cfg_fp,
+            "compiled program was priced against a different DramConfig"
+        );
+        if let Some(b) = binding {
+            assert!(
+                b.len() >= prog.n_slots(),
+                "binding provides {} rows, program needs {}",
+                b.len(),
+                prog.n_slots()
+            );
+        }
+
+        if self.check_bit_exact {
+            let before = self.counts;
+            for i in 0..prog.commands().len() {
+                let cmd = prog.command_rebased(i, binding);
+                self.issue(subarray, cmd);
+            }
+            let delta = self.counts.diff(&before).without_refresh();
+            assert_eq!(
+                delta,
+                *prog.census(),
+                "compiled census diverges from per-command simulation"
+            );
+            return;
+        }
+
+        for block in prog.blocks() {
+            if self.refresh_enabled {
+                // the check that precedes the block's first command
+                self.inject_due_refreshes();
+                // would the check before any *later* command of this block
+                // fire? The last such check happens once the block's lead
+                // latency has elapsed.
+                if self.now_ps + block.lead_latency_ps >= self.refresh.next_due_ps() {
+                    // slow block: exact per-command accounting (identical
+                    // to issue(), minus the bit-level functional apply —
+                    // latency/energy/census don't depend on row indices)
+                    for (j, cmd) in prog.block_commands(block).iter().enumerate() {
+                        if j > 0 {
+                            self.inject_due_refreshes();
+                        }
+                        self.account(cmd);
+                    }
+                    executor::apply_op(self.bank.subarray(subarray), &block.op, binding);
+                    continue;
+                }
+            }
+            // fast block: O(1) time/census advance from the footprint;
+            // energy re-added per command (same values, same order as the
+            // per-command engine → bit-identical f64 totals)
+            self.now_ps += block.latency_ps;
+            self.counts.add(&block.census);
+            for cmd in prog.block_commands(block) {
+                self.energy.add(&self.energy_model.energy(cmd));
+            }
+            executor::apply_op(self.bank.subarray(subarray), &block.op, binding);
         }
     }
 
@@ -204,6 +292,72 @@ mod tests {
         let got = s.host_read_row(0, 3);
         assert_eq!(got, row);
         assert!(s.energy.burst_pj > before);
+    }
+
+    #[test]
+    fn run_compiled_totals_bit_identical_to_per_command() {
+        // the acceptance property: same config, same initial state, same
+        // request stream — fast path and per-command path must agree on
+        // every counter, the simulated clock, every energy category (f64
+        // equality, not epsilon), and the data rows. 300 shifts cross
+        // several tREFI boundaries, exercising the slow-block fallback.
+        let cfg = DramConfig::tiny_test();
+        let mut fast = BankSim::new(cfg.clone());
+        let mut slow = BankSim::new(cfg.clone());
+        let mut rng = Rng::new(11);
+        let row = BitRow::random(cfg.geometry.cols_per_row, &mut rng);
+        fast.bank().subarray(0).write_row(3, row.clone());
+        slow.bank().subarray(0).write_row(3, row.clone());
+
+        let op = PimOp::ShiftBy { src: 0, dst: 0, n: 1, dir: ShiftDir::Right };
+        let prog = CompiledProgram::compile(&[op.map_rows(|_| 0)], &cfg);
+        let cmds = PimOp::ShiftBy { src: 3, dst: 3, n: 1, dir: ShiftDir::Right }.lower();
+        for _ in 0..300 {
+            fast.run_compiled(0, &prog, Some(&[3]));
+            slow.run(0, &cmds);
+        }
+        assert!(fast.counts.refresh > 0, "stream must cross refresh windows");
+        assert_eq!(fast.now_ps, slow.now_ps);
+        assert_eq!(fast.counts, slow.counts);
+        assert_eq!(fast.energy.active_pj, slow.energy.active_pj);
+        assert_eq!(fast.energy.precharge_pj, slow.energy.precharge_pj);
+        assert_eq!(fast.energy.refresh_pj, slow.energy.refresh_pj);
+        assert_eq!(fast.energy.burst_pj, slow.energy.burst_pj);
+        assert_eq!(fast.bank().subarray(0).read_row(3), slow.bank().subarray(0).read_row(3));
+    }
+
+    #[test]
+    fn check_bit_exact_mode_replays_per_command() {
+        let cfg = DramConfig::tiny_test();
+        let mut checked = BankSim::new(cfg.clone());
+        checked.check_bit_exact = true;
+        let mut reference = BankSim::new(cfg.clone());
+        let mut rng = Rng::new(12);
+        let row = BitRow::random(cfg.geometry.cols_per_row, &mut rng);
+        checked.bank().subarray(0).write_row(0, row.clone());
+        reference.bank().subarray(0).write_row(0, row.clone());
+
+        let op = PimOp::ShiftBy { src: 0, dst: 0, n: 7, dir: ShiftDir::Left };
+        let prog = CompiledProgram::compile(&[op], &cfg);
+        checked.run_compiled(0, &prog, None);
+        reference.run(0, &op.lower());
+        assert_eq!(checked.now_ps, reference.now_ps);
+        assert_eq!(checked.counts, reference.counts);
+        assert_eq!(
+            checked.bank().subarray(0).read_row(0),
+            reference.bank().subarray(0).read_row(0)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "different DramConfig")]
+    fn run_compiled_rejects_foreign_config() {
+        let prog = CompiledProgram::compile(
+            &[PimOp::Copy { src: 0, dst: 1 }],
+            &DramConfig::ddr3_1333_4gb(),
+        );
+        let mut s = sim(); // tiny_test config
+        s.run_compiled(0, &prog, None);
     }
 
     #[test]

@@ -1,0 +1,223 @@
+//! Integration + properties of the compile-once layer: cached compiled
+//! programs must be bit-exact against both the reference `BitRow`
+//! semantics and the per-command simulation engine — functionally *and*
+//! in every latency/energy/census total.
+
+use std::sync::Arc;
+
+use shiftdram::config::DramConfig;
+use shiftdram::dram::subarray::Subarray;
+use shiftdram::pim::{canonicalize, CompiledProgram, PimOp, ProgramCache};
+use shiftdram::sim::BankSim;
+use shiftdram::util::proptest::{check, prop_assert, prop_assert_eq};
+use shiftdram::util::{BitRow, Rng, ShiftDir};
+
+/// The paper's §4.2 data patterns plus random fills.
+fn pattern_row(cols: usize, rng: &mut Rng) -> BitRow {
+    match rng.below(4) {
+        0 => BitRow::zeros(cols),
+        1 => BitRow::ones(cols),
+        2 => {
+            let mut r = BitRow::zeros(cols);
+            for i in (0..cols).step_by(2) {
+                r.set(i, true);
+            }
+            r
+        }
+        _ => BitRow::random(cols, rng),
+    }
+}
+
+#[test]
+fn prop_cached_shift_by_n_equals_n_reference_shifts() {
+    // satellite property: executing the cached compiled shift-by-n equals
+    // n applications of the reference BitRow 1-bit shift, for random rows,
+    // fill patterns, and n — through a shared cache, so later cases replay
+    // programs compiled by earlier ones.
+    let cache = Arc::new(ProgramCache::new(64));
+    let cfg = DramConfig::tiny_test();
+    check(96, |rng| {
+        let cols = 2 * (rng.below(600) + 8);
+        let n = rng.below(80);
+        let dir = if rng.bool() { ShiftDir::Right } else { ShiftDir::Left };
+        let row = rng.below(6);
+        let mut sa = Subarray::new(8, cols);
+        let data = pattern_row(cols, rng);
+        sa.write_row(row, data.clone());
+
+        let ops = [PimOp::ShiftBy { src: 0, dst: 0, n, dir }];
+        let (prog, _) = cache.get_or_compile_ops(&ops, &cfg);
+        shiftdram::pim::run_compiled(&mut sa, &prog, Some(&[row]));
+
+        let mut want = data;
+        for _ in 0..n {
+            want = want.shifted(dir, false);
+        }
+        prop_assert_eq(
+            sa.read_row(row).clone(),
+            want,
+            &format!("n={n} {dir:?} cols={cols}"),
+        )
+    });
+    let stats = cache.stats();
+    assert!(stats.hits > 0, "96 cases over ~160 shapes must replay: {stats:?}");
+}
+
+#[test]
+fn prop_compiled_footprint_equals_per_command_engine_totals() {
+    // satellite property: CompiledProgram's precomputed latency/energy/
+    // census equal the per-command engine's totals for random op mixes
+    // (refresh disabled: the footprint prices the program's own commands).
+    let cfg = DramConfig::tiny_test();
+    check(48, |rng| {
+        let mut ops = Vec::new();
+        for _ in 0..rng.below(6) + 1 {
+            let r = |rng: &mut Rng| rng.below(8);
+            ops.push(match rng.below(7) {
+                0 => PimOp::Copy { src: r(rng), dst: r(rng) },
+                1 => PimOp::Not { src: r(rng), dst: r(rng) },
+                2 => PimOp::And { a: r(rng), b: r(rng), dst: r(rng) },
+                3 => PimOp::Xor { a: r(rng), b: r(rng), dst: r(rng) },
+                4 => PimOp::Maj { a: r(rng), b: r(rng), c: r(rng), dst: r(rng) },
+                5 => PimOp::ShiftBy {
+                    src: r(rng),
+                    dst: r(rng),
+                    n: rng.below(12),
+                    dir: if rng.bool() { ShiftDir::Right } else { ShiftDir::Left },
+                },
+                _ => PimOp::SetOnes { dst: r(rng) },
+            });
+        }
+        let prog = CompiledProgram::compile(&ops, &cfg);
+
+        let mut sim = BankSim::new(cfg.clone());
+        sim.refresh_enabled = false;
+        for op in &ops {
+            sim.run(0, &op.lower());
+        }
+        prop_assert_eq(prog.latency_ps(), sim.now_ps, "latency")?;
+        prop_assert_eq(*prog.census(), sim.counts, "census")?;
+        let (pe, se) = (prog.energy().total_pj(), sim.energy.total_pj());
+        prop_assert(
+            (pe - se).abs() <= 1e-9 * se.abs().max(1.0),
+            format!("energy footprint {pe} vs engine {se}"),
+        )
+    });
+}
+
+#[test]
+fn prop_run_compiled_matches_per_command_simulation_exactly() {
+    // the acceptance property: for random op mixes and random row
+    // placements, the cached fast path and the seed per-command path agree
+    // on data rows, the clock, the census, and every energy category —
+    // with refresh enabled and f64 equality, not epsilon.
+    let cache = Arc::new(ProgramCache::new(64));
+    let cfg = DramConfig::tiny_test();
+    check(32, |rng| {
+        let mut fast = BankSim::new(cfg.clone());
+        let mut slow = BankSim::new(cfg.clone());
+        let cols = cfg.geometry.cols_per_row;
+        for r in 0..8 {
+            let bits = BitRow::random(cols, rng);
+            fast.bank().subarray(0).write_row(r, bits.clone());
+            slow.bank().subarray(0).write_row(r, bits);
+        }
+        // a stream long enough to cross refresh boundaries
+        for _ in 0..rng.below(40) + 30 {
+            let r = rng.below(8);
+            let op = match rng.below(4) {
+                0 => PimOp::Xor { a: r, b: (r + 1) % 8, dst: (r + 2) % 8 },
+                1 => PimOp::Copy { src: r, dst: (r + 3) % 8 },
+                _ => PimOp::ShiftBy {
+                    src: r,
+                    dst: r,
+                    n: rng.below(6) + 1,
+                    dir: if rng.bool() { ShiftDir::Right } else { ShiftDir::Left },
+                },
+            };
+            let (canon, binding) = canonicalize(std::slice::from_ref(&op));
+            let (prog, _) = cache.get_or_compile_ops(&canon, &cfg);
+            fast.run_compiled(0, &prog, Some(&binding));
+            slow.run(0, &op.lower());
+        }
+        prop_assert_eq(fast.now_ps, slow.now_ps, "clock")?;
+        prop_assert_eq(fast.counts, slow.counts, "census")?;
+        prop_assert(
+            fast.energy.active_pj == slow.energy.active_pj
+                && fast.energy.precharge_pj == slow.energy.precharge_pj
+                && fast.energy.refresh_pj == slow.energy.refresh_pj
+                && fast.energy.burst_pj == slow.energy.burst_pj,
+            format!("energy bit-identical: {:?} vs {:?}", fast.energy, slow.energy),
+        )?;
+        for r in 0..8 {
+            prop_assert_eq(
+                fast.bank().subarray(0).read_row(r).clone(),
+                slow.bank().subarray(0).read_row(r).clone(),
+                &format!("data row {r}"),
+            )?;
+        }
+        Ok(())
+    });
+    assert!(cache.stats().hit_rate() > 0.5, "{:?}", cache.stats());
+}
+
+#[test]
+fn prop_check_bit_exact_mode_agrees_with_fast_path() {
+    // the functional-checking fallback (full per-command simulation +
+    // census assertion inside run_compiled) must land in the same state
+    // as the fast path
+    let cfg = DramConfig::tiny_test();
+    let cache = Arc::new(ProgramCache::new(32));
+    check(24, |rng| {
+        let mut fast = BankSim::new(cfg.clone());
+        let mut checked = BankSim::new(cfg.clone());
+        checked.check_bit_exact = true;
+        let cols = cfg.geometry.cols_per_row;
+        let bits = BitRow::random(cols, rng);
+        fast.bank().subarray(0).write_row(2, bits.clone());
+        checked.bank().subarray(0).write_row(2, bits);
+
+        let n = rng.below(10) + 1;
+        let dir = if rng.bool() { ShiftDir::Right } else { ShiftDir::Left };
+        let ops = [PimOp::ShiftBy { src: 0, dst: 0, n, dir }];
+        let (prog, _) = cache.get_or_compile_ops(&ops, &cfg);
+        for _ in 0..5 {
+            fast.run_compiled(0, &prog, Some(&[2]));
+            checked.run_compiled(0, &prog, Some(&[2]));
+        }
+        prop_assert_eq(fast.now_ps, checked.now_ps, "clock")?;
+        prop_assert_eq(fast.counts, checked.counts, "census")?;
+        prop_assert_eq(
+            fast.bank().subarray(0).read_row(2).clone(),
+            checked.bank().subarray(0).read_row(2).clone(),
+            "row state",
+        )
+    });
+}
+
+#[test]
+fn one_program_serves_every_bank_subarray_and_row() {
+    // execute-anywhere: a single compiled shift retargets across
+    // subarrays and rows of independent banks with O(1) rebases
+    let cfg = DramConfig::tiny_test();
+    let cache = ProgramCache::new(8);
+    let ops = [PimOp::ShiftBy { src: 0, dst: 0, n: 4, dir: ShiftDir::Right }];
+    let (prog, _) = cache.get_or_compile_ops(&ops, &cfg);
+
+    let mut rng = Rng::new(5);
+    let cols = cfg.geometry.cols_per_row;
+    for subarray in 0..2 {
+        for row in [0usize, 7, 19] {
+            let mut sim = BankSim::new(cfg.clone());
+            let bits = BitRow::random(cols, &mut rng);
+            sim.bank().subarray(subarray).write_row(row, bits.clone());
+            sim.run_compiled(subarray, &prog, Some(&[row]));
+            assert_eq!(
+                sim.bank().subarray(subarray).read_row(row),
+                &bits.shifted_by(ShiftDir::Right, 4, false),
+                "subarray {subarray} row {row}"
+            );
+        }
+    }
+    assert_eq!(cache.stats().misses, 1, "one compile for all placements");
+}
