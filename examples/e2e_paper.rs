@@ -9,7 +9,7 @@
 use shiftdram::circuit::montecarlo::{Backend, MonteCarlo};
 use shiftdram::circuit::params::TechNode;
 use shiftdram::config::{DramConfig, McConfig};
-use shiftdram::coordinator::{Placement, PimRequest, PimSystem};
+use shiftdram::coordinator::{Kernel, SystemBuilder};
 use shiftdram::report;
 use shiftdram::runtime::Runtime;
 use shiftdram::util::ShiftDir;
@@ -55,17 +55,21 @@ fn main() {
     }
     println!();
 
-    // §5.1.4 bank-level parallelism, served through the coordinator
-    println!("§5.1.4 bank-level parallelism (coordinator, round-robin, 512 shifts):");
+    // §5.1.4 bank-level parallelism, served through the client API:
+    // one session per bank, each submitting shift kernels against its
+    // own system-placed row handle
+    println!("§5.1.4 bank-level parallelism (PimClient sessions, 512 shift kernels):");
+    let shift = Kernel::shift_by(1, ShiftDir::Right);
     for banks in [1usize, 8, 32] {
-        let sys = PimSystem::start(&cfg, banks, Placement::RoundRobin, 16);
-        for _ in 0..512 {
-            sys.submit(
-                PimRequest::Shift { subarray: 0, row: 0, n: 1, dir: ShiftDir::Right },
-                None,
-            );
+        let sys = SystemBuilder::new(&cfg).banks(banks).max_batch(16).build();
+        let clients: Vec<_> = (0..banks).map(|b| sys.client_on(b)).collect();
+        let rows: Vec<_> = clients.iter().map(|c| c.alloc().expect("row")).collect();
+        for i in 0..512 {
+            let b = i % banks;
+            clients[b].submit(&shift, std::slice::from_ref(&rows[b]));
         }
         let r = sys.shutdown();
+        assert!(r.is_clean(), "workers exited clean");
         println!(
             "  {:>2} banks: {:>8.2} MOps/s aggregate (paper projects {:>7})",
             r.banks,

@@ -26,7 +26,7 @@ fn main() {
     let before = ctx.aaps;
     xtime(&mut ctx, 0, 2);
     println!("xtime over {n} bytes: {} AAPs", ctx.aaps - before);
-    let got = ctx.unpack(ctx.row(2));
+    let got = ctx.unpack(&ctx.row(2));
     assert!(got
         .iter()
         .zip(&a)
@@ -35,7 +35,7 @@ fn main() {
     let before = ctx.aaps;
     gf_mul(&mut ctx, 0, 1, 3);
     println!("full GF multiply over {n} byte pairs: {} AAPs", ctx.aaps - before);
-    let got = ctx.unpack(ctx.row(3));
+    let got = ctx.unpack(&ctx.row(3));
     for j in 0..n {
         assert_eq!(got[j], gf_mul_ref(a[j] as u8, b[j] as u8) as u64, "elem {j}");
     }
@@ -66,7 +66,7 @@ fn main() {
     add_round_key(&mut aes);
     // involution: we must be back at the plaintext states
     for r in 0..16 {
-        let vals = aes.unpack(aes.row(STATE_BASE + r));
+        let vals = aes.unpack(&aes.row(STATE_BASE + r));
         for (j, &v) in vals.iter().enumerate() {
             assert_eq!(v as u8, states[j][r], "block {j} byte {r}");
         }

@@ -34,8 +34,8 @@ fn main() {
         kogge_stone_add(&mut ks, 0, 1, 2);
 
         let want: Vec<u64> = a.iter().zip(&b).map(|(x, y)| x.wrapping_add(*y) & m).collect();
-        assert_eq!(rc.unpack(rc.row(2)), want);
-        assert_eq!(ks.unpack(ks.row(2)), want);
+        assert_eq!(rc.unpack(&rc.row(2)), want);
+        assert_eq!(ks.unpack(&ks.row(2)), want);
         let t_aap = cfg.timing.t_aap() as f64 / 1e3;
         println!(
             "W={width:>2}: ripple {rc_aaps:>4} AAPs ({:>8.1} ns) | kogge-stone {:>4} AAPs \
@@ -57,7 +57,7 @@ fn main() {
     ctx.set_row(0, ctx.pack(&a));
     ctx.set_row(1, ctx.pack(&b));
     shift_and_add_mul(&mut ctx, 0, 1, 2);
-    let got = ctx.unpack(ctx.row(2));
+    let got = ctx.unpack(&ctx.row(2));
     for j in 0..n {
         assert_eq!(got[j], (a[j] * b[j]) & 0xFF, "elem {j}");
     }

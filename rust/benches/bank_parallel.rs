@@ -1,19 +1,21 @@
 //! Bench: §5.1.4 bank-level parallelism — aggregate shift throughput vs
-//! bank count, served through the coordinator (router → batcher → workers).
+//! bank count, served through the handle-based client API (one session
+//! per bank, kernel-granular submission).
 //! Paper projection: 4.82 → 38.56 → 154.24 MOps/s for 1 → 8 → 32 banks.
 
 use shiftdram::config::DramConfig;
-use shiftdram::coordinator::{Placement, PimRequest, PimSystem};
+use shiftdram::coordinator::{Kernel, SystemBuilder};
 use shiftdram::util::benchx::Bench;
 use shiftdram::util::ShiftDir;
 
 fn run(cfg: &DramConfig, banks: usize, ops: usize) -> f64 {
-    let sys = PimSystem::start(cfg, banks, Placement::RoundRobin, 16);
-    for _ in 0..ops {
-        sys.submit(
-            PimRequest::Shift { subarray: 0, row: 0, n: 1, dir: ShiftDir::Right },
-            None,
-        );
+    let sys = SystemBuilder::new(cfg).banks(banks).max_batch(16).build();
+    let clients: Vec<_> = (0..banks).map(|b| sys.client_on(b)).collect();
+    let rows: Vec<_> = clients.iter().map(|c| c.alloc().expect("row")).collect();
+    let shift = Kernel::shift_by(1, ShiftDir::Right);
+    for i in 0..ops {
+        let b = i % banks;
+        clients[b].submit(&shift, std::slice::from_ref(&rows[b]));
     }
     sys.shutdown().throughput_mops
 }

@@ -10,10 +10,11 @@
 //! element adds independently, SIMD-style across the row).
 //!
 //! The public entry points ([`ripple_add`], [`kogge_stone_add`]) are
-//! compile-once: the schedule is recorded by the `build_*` body at most
-//! once per (shape, config) and replayed from the shared program cache on
-//! every later call. The `build_*` functions stay public — they compose
-//! into larger cached kernels (see `multiplier`).
+//! compile-once: the schedule is recorded by the `build_*` body, submitted
+//! through the serving client as **one kernel** (one cache fetch, one
+//! replay), and replayed from the shared program cache on every later
+//! call. The `build_*` functions stay public — they compose into larger
+//! cached kernels (see `multiplier`).
 //!
 //! Row map (within the app's subarray): rows 0..=2 inputs/output,
 //! 3..=7 temporaries, 8..=15 boundary masks, 16+ scratch.
@@ -149,7 +150,7 @@ mod tests {
             "ripple" => ripple_add(&mut ctx, 0, 1, 2),
             _ => kogge_stone_add(&mut ctx, 0, 1, 2),
         }
-        let got = ctx.unpack(ctx.row(2));
+        let got = ctx.unpack(&ctx.row(2));
         let want: Vec<u64> = a
             .iter()
             .zip(&b)
@@ -198,7 +199,7 @@ mod tests {
         ctx.set_row(0, ctx.pack(&a));
         ctx.set_row(1, ctx.pack(&b));
         kogge_stone_add(&mut ctx, 0, 1, 2);
-        let got = ctx.unpack(ctx.row(2));
+        let got = ctx.unpack(&ctx.row(2));
         for (j, (x, y)) in cases.iter().enumerate() {
             assert_eq!(got[j], (x + y) & 0xFF, "case {j}");
         }
@@ -244,6 +245,10 @@ mod tests {
         ripple_add(&mut ctx, 0, 1, 2);
         let s = cache.stats();
         assert_eq!(s.misses, 2, "one compile per adder shape: {s:?}");
-        assert_eq!(s.hits, 1, "repeat call served from cache: {s:?}");
+        assert_eq!(
+            s.hits + s.batched,
+            1,
+            "repeat call served without recompiling: {s:?}"
+        );
     }
 }

@@ -150,7 +150,7 @@ mod tests {
         let n = ctx.n_elements();
         let mut out = vec![[0u8; 16]; n];
         for r in 0..16 {
-            let vals = ctx.unpack(ctx.row(STATE_BASE + r));
+            let vals = ctx.unpack(&ctx.row(STATE_BASE + r));
             for (j, &v) in vals.iter().enumerate() {
                 out[j][r] = v as u8;
             }

@@ -11,20 +11,24 @@
 //! Mask rows are host-written constants (like Ambit's control rows, they
 //! are initialized once at boot).
 //!
-//! # Kernels are compiled once, executed from the cache
+//! # One execution path, two entry points
 //!
 //! Kernel bodies are written against the [`PimTape`] trait — a sink of
-//! macro-ops plus the element width. Two tapes exist:
+//! macro-ops plus the element width — and [`ElementCtx`] is a **thin
+//! client of the serving system**: it wraps a private single-bank
+//! [`crate::coordinator::PimSystem`] plus a [`PimClient`] session whose
+//! [`RowHandle`]s back the context's row indices. Both entry points go through the same
+//! client path external callers use — there is no second lowering or
+//! replay implementation in the app layer:
 //!
-//! * [`ProgramSketch`] records the ops; the entry-point wrappers
-//!   (`adder::ripple_add`, `gf::gf_mul`, …) run a sketch **only on a cache
-//!   miss**, compile it into a [`CompiledProgram`], and store it in the
-//!   shared [`ProgramCache`] keyed by (kernel name, shape parameters,
-//!   config fingerprint). Every later invocation with the same shape
-//!   replays the cached schedule through the word-level semantic executor.
-//! * [`ElementCtx`] itself is a tape that executes eagerly, command by
-//!   command — the reference path the cached path is property-tested
-//!   against, still used for data-dependent fragments.
+//! * [`ElementCtx::run_kernel`] records the body once into a named
+//!   [`Kernel`] and submits it whole: one wire request, one program-cache
+//!   fetch, one `run_compiled` replay, regardless of how many macro-ops
+//!   the body emitted.
+//! * [`ElementCtx::op`] (the [`PimTape`] impl) submits each macro-op as a
+//!   single-op kernel — the incremental tape used for data-dependent
+//!   fragments and as the reference the whole-kernel path is
+//!   property-tested against.
 //!
 //! NOTE on direction names: a column-space `ShiftDir::Right` moves bit `i`
 //! to bit `i+1`, i.e. it is the *arithmetic left shift* (×2) of the packed
@@ -33,11 +37,13 @@
 
 use std::sync::Arc;
 
-use crate::config::DramConfig;
-use crate::dram::subarray::Subarray;
-use crate::pim::compile::{CommandCensus, CompiledProgram, ProgramCache, ProgramShape};
-use crate::pim::{executor, PimOp};
+use crate::config::{DramConfig, GeometryConfig};
+use crate::coordinator::{Kernel, PimClient, RowHandle, SystemBuilder};
+use crate::pim::compile::{CommandCensus, ProgramCache};
+use crate::pim::PimOp;
 use crate::util::{BitRow, ShiftDir};
+
+pub use crate::pim::program::{PimTape, ProgramSketch};
 
 /// Arithmetic shift direction within elements.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -57,58 +63,17 @@ impl Dir {
     }
 }
 
-/// A sink of macro-ops over W-bit elements: kernel bodies are generic over
-/// this, so the same body either executes eagerly ([`ElementCtx`]) or
-/// records into a cacheable program ([`ProgramSketch`]).
-pub trait PimTape {
-    /// Element width the kernel is being built for.
-    fn width(&self) -> usize;
-    /// Accept one macro-op.
-    fn op(&mut self, op: PimOp);
-}
-
-/// Recording tape: collects the macro-op schedule of one kernel shape.
-pub struct ProgramSketch {
-    width: usize,
-    ops: Vec<PimOp>,
-}
-
-impl ProgramSketch {
-    pub fn new(width: usize) -> Self {
-        ProgramSketch { width, ops: Vec::new() }
-    }
-
-    pub fn ops(&self) -> &[PimOp] {
-        &self.ops
-    }
-
-    pub fn into_ops(self) -> Vec<PimOp> {
-        self.ops
-    }
-}
-
-impl PimTape for ProgramSketch {
-    fn width(&self) -> usize {
-        self.width
-    }
-
-    fn op(&mut self, op: PimOp) {
-        self.ops.push(op);
-    }
-}
-
-/// A subarray "tape" for element-wise programs: tracks the subarray, the
-/// element width, the command census of everything executed, and the
-/// program cache its kernels compile into.
+/// An element-wise programming context: a client session against a
+/// private single-bank serving system, with one [`RowHandle`] per context
+/// row, the element width, and the command census of everything executed.
 pub struct ElementCtx {
-    pub sa: Subarray,
     pub width: usize,
     pub aaps: usize,
     pub tras: usize,
     pub dras: usize,
-    cfg: DramConfig,
-    cfg_fp: u64,
-    cache: Arc<ProgramCache>,
+    cols: usize,
+    client: PimClient,
+    rows: Vec<RowHandle>,
 }
 
 impl PimTape for ElementCtx {
@@ -116,7 +81,8 @@ impl PimTape for ElementCtx {
         self.width
     }
 
-    /// Eager execution: lower and apply immediately (the reference path).
+    /// Incremental execution: each macro-op is a single-op kernel through
+    /// the client path (the reference entry point).
     fn op(&mut self, op: PimOp) {
         ElementCtx::op(self, op);
     }
@@ -136,7 +102,9 @@ impl ElementCtx {
         )
     }
 
-    /// Context with an explicit pricing config and kernel cache.
+    /// Context with an explicit pricing config and kernel cache. The
+    /// config's timing/energy model is kept; its geometry is replaced by
+    /// a single bank of one `rows × cols` subarray sized to this context.
     pub fn with_config(
         rows: usize,
         cols: usize,
@@ -145,37 +113,54 @@ impl ElementCtx {
         cache: Arc<ProgramCache>,
     ) -> Self {
         assert!(cols % width == 0, "row must pack whole elements");
-        let cfg_fp = cfg.fingerprint();
-        ElementCtx {
-            sa: Subarray::new(rows, cols),
-            width,
-            aaps: 0,
-            tras: 0,
-            dras: 0,
-            cfg,
-            cfg_fp,
-            cache,
-        }
+        let mut cfg = cfg;
+        cfg.geometry = GeometryConfig {
+            channels: 1,
+            ranks_per_channel: 1,
+            banks_per_rank: 1,
+            subarrays_per_bank: 1,
+            rows_per_subarray: rows,
+            cols_per_row: cols,
+        };
+        let sys = SystemBuilder::new(&cfg).banks(1).shared_cache(cache).build();
+        let client = sys.client();
+        let handles = client
+            .alloc_rows(rows)
+            .expect("context rows fit the freshly built subarray");
+        ElementCtx { width, aaps: 0, tras: 0, dras: 0, cols, client, rows: handles }
     }
 
     pub fn cols(&self) -> usize {
-        self.sa.cols()
+        self.cols
     }
 
     pub fn n_elements(&self) -> usize {
-        self.cols() / self.width
+        self.cols / self.width
+    }
+
+    /// The client session this context executes through.
+    pub fn client(&self) -> &PimClient {
+        &self.client
     }
 
     /// The kernel cache this context compiles into.
     pub fn cache(&self) -> &Arc<ProgramCache> {
-        &self.cache
+        self.client.system().program_cache()
     }
 
-    /// Execute one macro-op eagerly, accounting commands (reference path).
+    /// Execute one macro-op as a single-op kernel (reference entry point).
     pub fn op(&mut self, op: PimOp) {
-        let cmds = op.lower();
-        self.count(&CommandCensus::from_commands(&cmds));
-        executor::run(&mut self.sa, &cmds);
+        self.run(&Kernel::op(op));
+    }
+
+    /// Submit a kernel against this context's row table and account its
+    /// census.
+    fn run(&mut self, kernel: &Kernel) {
+        let receipt = self
+            .client
+            .run(kernel, &self.rows)
+            .expect("context kernels execute on the private bank");
+        self.count(&receipt.census);
     }
 
     fn count(&mut self, census: &CommandCensus) {
@@ -184,46 +169,37 @@ impl ElementCtx {
         self.dras += census.dra as usize;
     }
 
-    /// Fetch (or, on first use of this shape, record + compile) the kernel
-    /// `name` and execute it. `params` must pin down everything the
-    /// builder's op stream depends on besides width/cols — operand rows,
-    /// constants, distances. This is the compile-once entry all app
-    /// kernels route through.
+    /// Record the kernel `name` (at most once per shape — the program
+    /// cache replays it afterwards) and submit it whole. `params` must pin
+    /// down everything the builder's op stream depends on besides
+    /// width/cols — operand rows, constants, distances. This is the
+    /// compile-once entry all app kernels route through, and it is the
+    /// same client path external callers use.
     pub fn run_kernel(
         &mut self,
         name: &'static str,
         params: &[u64],
         build: impl FnOnce(&mut ProgramSketch),
     ) {
-        let mut key_params = Vec::with_capacity(params.len() + 2);
-        key_params.push(self.width as u64);
-        key_params.push(self.cols() as u64);
+        let mut key_params = Vec::with_capacity(params.len() + 1);
+        key_params.push(self.cols as u64);
         key_params.extend_from_slice(params);
-        let shape = ProgramShape::Kernel { name, params: key_params };
-        let width = self.width;
-        let prog = self.cache.get_or_compile_keyed(shape, &self.cfg, self.cfg_fp, || {
-            let mut sketch = ProgramSketch::new(width);
-            build(&mut sketch);
-            sketch.into_ops()
-        });
-        self.execute(&prog);
-    }
-
-    /// Execute a compiled program (identity binding) through the word-level
-    /// semantic executor, accounting its census in O(1).
-    pub fn execute(&mut self, prog: &CompiledProgram) {
-        executor::run_compiled(&mut self.sa, prog, None);
-        let census = *prog.census();
-        self.count(&census);
+        let kernel = Kernel::named(name, self.width, &key_params, build);
+        self.run(&kernel);
     }
 
     /// Host-write a constant/mask row.
     pub fn set_row(&mut self, row: usize, bits: BitRow) {
-        self.sa.write_row(row, bits);
+        self.client
+            .write_now(&self.rows[row], bits)
+            .expect("host write to a context row");
     }
 
-    pub fn row(&self, row: usize) -> &BitRow {
-        self.sa.read_row(row)
+    /// Read a row back from the device.
+    pub fn row(&self, row: usize) -> BitRow {
+        self.client
+            .read_now(&self.rows[row])
+            .expect("host read of a context row")
     }
 
     /// Pack u64 element values into a row image.
@@ -345,7 +321,7 @@ mod tests {
         let m = c.boundary_mask(Dir::Up, 1);
         c.set_row(10, m);
         shift_in_element(&mut c, 0, 1, Dir::Up, 1, 10);
-        let got = c.unpack(c.row(1));
+        let got = c.unpack(&c.row(1));
         let want: Vec<u64> = vals.iter().map(|v| (v << 1) & 0xFF).collect();
         assert_eq!(got, want);
     }
@@ -359,7 +335,7 @@ mod tests {
         let m = c.boundary_mask(Dir::Down, 3);
         c.set_row(10, m);
         shift_in_element(&mut c, 0, 1, Dir::Down, 3, 10);
-        let got = c.unpack(c.row(1));
+        let got = c.unpack(&c.row(1));
         let want: Vec<u64> = vals.iter().map(|v| v >> 3).collect();
         assert_eq!(got, want);
     }
@@ -389,33 +365,39 @@ mod tests {
     }
 
     #[test]
-    fn run_kernel_caches_by_shape_and_matches_eager_path() {
+    fn run_kernel_caches_by_shape_and_matches_incremental_path() {
         let cache = Arc::new(ProgramCache::new(16));
         let cfg = DramConfig::tiny_test();
         let mut rng = Rng::new(9);
         let vals: Vec<u64> = (0..32).map(|_| rng.below(256) as u64).collect();
 
-        let mut eager = ElementCtx::with_config(24, 256, 8, cfg.clone(), cache.clone());
-        let mut cached = ElementCtx::with_config(24, 256, 8, cfg.clone(), cache.clone());
-        let row_img = eager.pack(&vals);
-        let mask = eager.boundary_mask(Dir::Up, 1);
-        for c in [&mut eager, &mut cached] {
+        let mut tape = ElementCtx::with_config(24, 256, 8, cfg.clone(), cache.clone());
+        let mut whole = ElementCtx::with_config(24, 256, 8, cfg.clone(), cache.clone());
+        let row_img = tape.pack(&vals);
+        let mask = tape.boundary_mask(Dir::Up, 1);
+        for c in [&mut tape, &mut whole] {
             c.set_row(0, row_img.clone());
             c.set_row(10, mask.clone());
         }
-        // reference: eager tape
-        shift_in_element(&mut eager, 0, 1, Dir::Up, 1, 10);
-        // cached kernel, twice — second run must be a cache hit
+        // reference: op-by-op through the same client path
+        shift_in_element(&mut tape, 0, 1, Dir::Up, 1, 10);
+        // whole-kernel submission, twice — the second run must not
+        // recompile (memo/cache serve it)
         for _ in 0..2 {
-            cached.run_kernel("test.shift1", &[0, 1, 10], |t| {
+            whole.run_kernel("test.shift1", &[0, 1, 10], |t| {
                 shift_in_element(t, 0, 1, Dir::Up, 1, 10)
             });
         }
-        assert_eq!(cached.row(1), eager.row(1), "cached path is bit-exact");
+        assert_eq!(whole.row(1), tape.row(1), "kernel path is bit-exact");
         let s = cache.stats();
-        assert_eq!((s.hits, s.misses), (1, 1), "{s:?}");
-        // census accounting matches the eager path per run
-        assert_eq!(cached.aaps, 2 * eager.aaps);
-        assert_eq!(cached.tras, 2 * eager.tras);
+        assert_eq!(s.misses, 3, "shift1 kernel + 2 single-op shapes: {s:?}");
+        assert_eq!(
+            s.hits + s.batched,
+            1,
+            "repeat kernel served without compiling: {s:?}"
+        );
+        // census accounting matches the incremental path per run
+        assert_eq!(whole.aaps, 2 * tape.aaps);
+        assert_eq!(whole.tras, 2 * tape.tras);
     }
 }

@@ -190,7 +190,7 @@ mod tests {
         let vals: Vec<u64> = (0..32).map(|j| (j * 8 + 3) as u64 % 256).collect();
         ctx.set_row(0, ctx.pack(&vals));
         xtime(&mut ctx, 0, 1);
-        let got = ctx.unpack(ctx.row(1));
+        let got = ctx.unpack(&ctx.row(1));
         let want: Vec<u64> = vals.iter().map(|&v| gf_mul_ref(v as u8, 2) as u64).collect();
         assert_eq!(got, want);
     }
@@ -204,7 +204,7 @@ mod tests {
         vals[2] = 0xFF;
         ctx.set_row(0, ctx.pack(&vals));
         xtime(&mut ctx, 0, 1);
-        let got = ctx.unpack(ctx.row(1));
+        let got = ctx.unpack(&ctx.row(1));
         assert_eq!(got[0], 0x1B);
         assert_eq!(got[1], 0x80);
         assert_eq!(got[2], (0xFFu64 * 2 ^ 0x11B) & 0xFF);
@@ -217,7 +217,7 @@ mod tests {
         let vals: Vec<u64> = (0..32).map(|_| rng.below(256) as u64).collect();
         ctx.set_row(0, ctx.pack(&vals));
         gf_mul_const(&mut ctx, 0, 1, 3);
-        let got = ctx.unpack(ctx.row(1));
+        let got = ctx.unpack(&ctx.row(1));
         let want: Vec<u64> = vals.iter().map(|&v| gf_mul_ref(v as u8, 3) as u64).collect();
         assert_eq!(got, want);
     }
@@ -229,7 +229,7 @@ mod tests {
         for k in [1u8, 2, 9, 0x0E, 0x1D, 0x80] {
             ctx.set_row(0, ctx.pack(&vals));
             gf_mul_const(&mut ctx, 0, 1, k);
-            let got = ctx.unpack(ctx.row(1));
+            let got = ctx.unpack(&ctx.row(1));
             let want: Vec<u64> =
                 vals.iter().map(|&v| gf_mul_ref(v as u8, k) as u64).collect();
             assert_eq!(got, want, "k={k:#x}");
@@ -245,7 +245,7 @@ mod tests {
         ctx.set_row(0, ctx.pack(&a));
         ctx.set_row(1, ctx.pack(&b));
         gf_mul(&mut ctx, 0, 1, 2);
-        let got = ctx.unpack(ctx.row(2));
+        let got = ctx.unpack(&ctx.row(2));
         let want: Vec<u64> = a
             .iter()
             .zip(&b)

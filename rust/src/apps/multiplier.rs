@@ -102,7 +102,7 @@ mod tests {
         ctx.set_row(0, ctx.pack(&a));
         ctx.set_row(1, ctx.pack(&b));
         shift_and_add_mul(&mut ctx, 0, 1, 2);
-        let got = ctx.unpack(ctx.row(2));
+        let got = ctx.unpack(&ctx.row(2));
         let want: Vec<u64> = a.iter().zip(&b).map(|(x, y)| (x * y) & 0xFF).collect();
         assert_eq!(got, want);
     }
@@ -116,16 +116,16 @@ mod tests {
         ctx.set_row(0, ctx.pack(&a));
         ctx.set_row(1, ctx.pack(&vec![1; n]));
         shift_and_add_mul(&mut ctx, 0, 1, 2);
-        assert_eq!(ctx.unpack(ctx.row(2)), a);
+        assert_eq!(ctx.unpack(&ctx.row(2)), a);
         // ×0 = zero
         ctx.set_row(1, ctx.pack(&vec![0; n]));
         shift_and_add_mul(&mut ctx, 0, 1, 2);
-        assert_eq!(ctx.unpack(ctx.row(2)), vec![0; n]);
+        assert_eq!(ctx.unpack(&ctx.row(2)), vec![0; n]);
         // ×2 = shift
         ctx.set_row(1, ctx.pack(&vec![2; n]));
         shift_and_add_mul(&mut ctx, 0, 1, 2);
         let want: Vec<u64> = a.iter().map(|x| (x << 1) & 0xFF).collect();
-        assert_eq!(ctx.unpack(ctx.row(2)), want);
+        assert_eq!(ctx.unpack(&ctx.row(2)), want);
     }
 
     #[test]
@@ -138,7 +138,7 @@ mod tests {
         ctx.set_row(0, ctx.pack(&a));
         ctx.set_row(1, ctx.pack(&b));
         shift_and_add_mul(&mut ctx, 0, 1, 2);
-        let got = ctx.unpack(ctx.row(2));
+        let got = ctx.unpack(&ctx.row(2));
         let want: Vec<u64> = a.iter().zip(&b).map(|(x, y)| (x * y) & 0xFFFF).collect();
         assert_eq!(got, want);
     }

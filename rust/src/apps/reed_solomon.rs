@@ -159,7 +159,7 @@ impl RsEncoder {
                 &[self.k as u64, self.n_parity as u64, alpha_i as u64],
                 |t| self.build_syndrome_pass(t, alpha_i),
             );
-            let syn = ctx.unpack(ctx.row(T_MUL));
+            let syn = ctx.unpack(&ctx.row(T_MUL));
             for (c, &s) in syn.iter().enumerate() {
                 ok[c] &= s == 0;
             }
@@ -173,7 +173,7 @@ impl RsEncoder {
         let n = ctx.n_elements();
         let mut out = vec![vec![0u8; self.n_parity]; n];
         for j in 0..self.n_parity {
-            let vals = ctx.unpack(ctx.row(PAR_BASE + j));
+            let vals = ctx.unpack(&ctx.row(PAR_BASE + j));
             for (c, &v) in vals.iter().enumerate() {
                 out[c][j] = v as u8;
             }
@@ -246,7 +246,7 @@ mod tests {
         assert!(ok.iter().all(|&b| b), "clean codewords must certify");
         // corrupt one message symbol of codeword 5 (after encoding):
         // its syndromes must flag, the others stay clean
-        let mut vals = ctx.unpack(ctx.row(MSG_BASE + 2));
+        let mut vals = ctx.unpack(&ctx.row(MSG_BASE + 2));
         vals[5] ^= 0x21;
         let packed = ctx.pack(&vals);
         ctx.set_row(MSG_BASE + 2, packed);

@@ -1,0 +1,442 @@
+//! The handle-based client API: sessions, typed tickets, and
+//! kernel-granular submission.
+//!
+//! Clients never name device coordinates. A [`PimClient`] session is
+//! placed on a bank by the router; [`PimClient::alloc`] hands out opaque,
+//! system-placed [`RowHandle`]s from that bank's row slab; work is
+//! submitted as whole [`Kernel`]s — canonical macro-op sequences recorded
+//! once through the [`crate::pim::ProgramSketch`] tape — and every
+//! submission returns a typed [`Ticket`] that resolves to
+//! `Result<T, PimError>` instead of panicking a worker thread.
+//!
+//! Kernel-granular submission is the point: a kernel of K macro-ops
+//! travels as *one* request, costs *one* program-cache fetch, and is
+//! served by *one* `BankSim::run_compiled` replay — the per-op
+//! request/response churn of the old device-addressed API collapses into
+//! a single round trip.
+//!
+//! ```text
+//!   let sys = SystemBuilder::new(&cfg).banks(8).build();
+//!   let client = sys.client();                    // session, placed
+//!   let row = client.alloc()?;                    // opaque handle
+//!   client.write(&row, bits).wait()?;             // Ticket<()>
+//!   let k = Kernel::shift_by(3, ShiftDir::Right); // 1-op kernel
+//!   client.run(&k, std::slice::from_ref(&row))?;  // Ticket<Receipt>
+//!   let out = client.read(&row).wait()?;          // Ticket<BitRow>
+//! ```
+
+use std::fmt;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+
+use crate::coordinator::system::{PimRequest, PimResponse, PimSystem};
+use crate::pim::compile::{canonicalize, CommandCensus, ProgramShape};
+use crate::pim::{PimOp, ProgramSketch};
+use crate::util::{BitRow, ShiftDir};
+
+/// Why a request could not be served. Carried by [`Ticket`]s — a bad
+/// request fails its own ticket; the worker, its bank, and every other
+/// client keep running.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PimError {
+    /// the session's subarray has no free rows left
+    AllocExhausted { bank: usize, subarray: usize },
+    /// a request named a row outside the subarray
+    RowOutOfRange { row: usize, rows: usize },
+    /// a request named a subarray outside the bank
+    SubarrayOutOfRange { subarray: usize, subarrays: usize },
+    /// a written row image has the wrong width for the subarray
+    WidthMismatch { got: usize, cols: usize },
+    /// the handle table passed to `submit` does not cover every row the
+    /// kernel touches
+    HandleTableTooShort { needs: usize, got: usize },
+    /// a handle from another session's placement (bank or subarray) was
+    /// passed to this session
+    ForeignHandle {
+        expected_bank: usize,
+        expected_subarray: usize,
+        got_bank: usize,
+        got_subarray: usize,
+    },
+    /// the bank's worker thread is gone (it panicked or was shut down)
+    WorkerLost { bank: usize },
+    /// the worker answered with the wrong response kind (a bug)
+    Protocol(&'static str),
+}
+
+impl fmt::Display for PimError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PimError::AllocExhausted { bank, subarray } => {
+                write!(f, "no free rows left in bank {bank} subarray {subarray}")
+            }
+            PimError::RowOutOfRange { row, rows } => {
+                write!(f, "row {row} out of range (subarray has {rows} rows)")
+            }
+            PimError::SubarrayOutOfRange { subarray, subarrays } => {
+                write!(f, "subarray {subarray} out of range (bank has {subarrays})")
+            }
+            PimError::WidthMismatch { got, cols } => {
+                write!(f, "row image is {got} bits, subarray rows are {cols}")
+            }
+            PimError::HandleTableTooShort { needs, got } => {
+                write!(f, "kernel touches row index {} but only {got} handles given", needs - 1)
+            }
+            PimError::ForeignHandle {
+                expected_bank,
+                expected_subarray,
+                got_bank,
+                got_subarray,
+            } => write!(
+                f,
+                "handle placed on bank {got_bank} subarray {got_subarray}, \
+                 session is on bank {expected_bank} subarray {expected_subarray}"
+            ),
+            PimError::WorkerLost { bank } => write!(f, "bank {bank} worker is gone"),
+            PimError::Protocol(what) => write!(f, "protocol violation: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for PimError {}
+
+/// An opaque, system-placed row. Only the system knows (and chooses) the
+/// concrete `(bank, subarray, row)` behind it — clients move data and
+/// submit kernels purely in terms of handles, which is what lets the
+/// coordinator own placement (sharding, migration) underneath them.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RowHandle {
+    pub(crate) bank: usize,
+    pub(crate) subarray: usize,
+    pub(crate) row: usize,
+}
+
+impl RowHandle {
+    /// The bank this row was placed on (exposed for diagnostics/affinity;
+    /// the row coordinate itself stays private).
+    pub fn bank(&self) -> usize {
+        self.bank
+    }
+}
+
+/// Completion receipt of one kernel submission: the command census the
+/// replay executed (AAP/TRA/DRA counts — refreshes excluded, the engine
+/// injects those).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Receipt {
+    pub census: CommandCensus,
+}
+
+/// A typed completion handle. `wait` blocks until the worker answers and
+/// decodes the response into `T`; a dead worker resolves to
+/// [`PimError::WorkerLost`] instead of poisoning the caller.
+///
+/// Tickets for batched requests resolve once the batch is dispatched —
+/// call [`PimClient::flush`] (or use the synchronous helpers
+/// [`PimClient::run`] / [`PimClient::read_now`] / [`PimClient::write_now`])
+/// before blocking on a partially filled batch.
+pub struct Ticket<T> {
+    rx: Receiver<Result<PimResponse, PimError>>,
+    decode: fn(PimResponse) -> Result<T, PimError>,
+    bank: usize,
+}
+
+impl<T> Ticket<T> {
+    pub(crate) fn new(
+        rx: Receiver<Result<PimResponse, PimError>>,
+        decode: fn(PimResponse) -> Result<T, PimError>,
+        bank: usize,
+    ) -> Self {
+        Ticket { rx, decode, bank }
+    }
+
+    /// A ticket that is already failed (client-side validation).
+    pub(crate) fn failed(err: PimError, bank: usize) -> Self {
+        let (tx, rx) = channel();
+        let _ = tx.send(Err(err));
+        Ticket { rx, decode: decode_never::<T>, bank }
+    }
+
+    /// Block until the response arrives and decode it.
+    pub fn wait(self) -> Result<T, PimError> {
+        match self.rx.recv() {
+            Ok(Ok(resp)) => (self.decode)(resp),
+            Ok(Err(e)) => Err(e),
+            Err(_) => Err(PimError::WorkerLost { bank: self.bank }),
+        }
+    }
+}
+
+fn decode_never<T>(_: PimResponse) -> Result<T, PimError> {
+    Err(PimError::Protocol("response on a pre-failed ticket"))
+}
+
+fn decode_done(resp: PimResponse) -> Result<(), PimError> {
+    match resp {
+        PimResponse::Done => Ok(()),
+        _ => Err(PimError::Protocol("expected completion")),
+    }
+}
+
+fn decode_row(resp: PimResponse) -> Result<BitRow, PimError> {
+    match resp {
+        PimResponse::Row(bits) => Ok(bits),
+        _ => Err(PimError::Protocol("expected a row")),
+    }
+}
+
+fn decode_receipt(resp: PimResponse) -> Result<Receipt, PimError> {
+    match resp {
+        PimResponse::Ran(census) => Ok(Receipt { census }),
+        _ => Err(PimError::Protocol("expected a kernel receipt")),
+    }
+}
+
+/// A canonical, submittable op sequence: the client-side unit of work.
+///
+/// A kernel is recorded **once** (through the same
+/// [`crate::pim::ProgramSketch`] tape the app kernels use), canonicalized
+/// to dense row slots, and from then on is a cheap `Arc` clone. Rows are
+/// *recording indices*: `submit` binds recording index `i` to the caller's
+/// `rows[i]` handle, so the same kernel replays against any allocation.
+#[derive(Clone, Debug)]
+pub struct Kernel {
+    inner: Arc<KernelInner>,
+}
+
+#[derive(Debug)]
+struct KernelInner {
+    /// program-cache key (ops for anonymous kernels, name+params for named)
+    shape: ProgramShape,
+    /// canonical slot-relative macro-ops (shared with the cache key /
+    /// wire format — never deep-copied after recording)
+    ops: Arc<Vec<PimOp>>,
+    /// slot → recording row (the binding template `submit` resolves
+    /// through the handle table)
+    slots: Vec<usize>,
+    /// minimum handle-table length: 1 + max recording row touched
+    n_rows: usize,
+    /// queued-work weight: total lowered command count (a shift-by-n op
+    /// weighs 4n, not 1), computed once at recording time
+    cost: usize,
+}
+
+impl Kernel {
+    fn build(shape: Option<(&'static str, Vec<u64>)>, raw_ops: &[PimOp]) -> Kernel {
+        let (canonical, slots) = canonicalize(raw_ops);
+        let ops = Arc::new(canonical);
+        let shape = match shape {
+            Some((name, params)) => ProgramShape::Kernel { name, params },
+            None => ProgramShape::Ops(ops.clone()),
+        };
+        let n_rows = slots.iter().map(|&r| r + 1).max().unwrap_or(0);
+        let cost = ops.iter().map(|op| op.lower().len()).sum::<usize>().max(1);
+        Kernel { inner: Arc::new(KernelInner { shape, ops, slots, n_rows, cost }) }
+    }
+
+    /// Record an anonymous kernel: the builder emits macro-ops onto a
+    /// fresh tape; the canonical op sequence itself keys the program
+    /// cache.
+    pub fn record(width: usize, build: impl FnOnce(&mut ProgramSketch)) -> Kernel {
+        let mut sketch = ProgramSketch::new(width);
+        build(&mut sketch);
+        Self::build(None, sketch.ops())
+    }
+
+    /// Record a named kernel. `(name, width, params)` key the program
+    /// cache — `params` must pin down everything the builder's op stream
+    /// depends on besides `width` (operand count, constants, distances),
+    /// exactly the contract app kernels already follow.
+    pub fn named(
+        name: &'static str,
+        width: usize,
+        params: &[u64],
+        build: impl FnOnce(&mut ProgramSketch),
+    ) -> Kernel {
+        let mut sketch = ProgramSketch::new(width);
+        build(&mut sketch);
+        let mut key = Vec::with_capacity(params.len() + 1);
+        key.push(width as u64);
+        key.extend_from_slice(params);
+        Self::build(Some((name, key)), sketch.ops())
+    }
+
+    /// A kernel from a raw macro-op sequence.
+    pub fn from_ops(ops: &[PimOp]) -> Kernel {
+        Self::build(None, ops)
+    }
+
+    /// A single-op kernel.
+    pub fn op(op: PimOp) -> Kernel {
+        Self::from_ops(std::slice::from_ref(&op))
+    }
+
+    /// The paper's primitive as a kernel: shift one row by `n`.
+    pub fn shift_by(n: usize, dir: ShiftDir) -> Kernel {
+        Self::op(PimOp::ShiftBy { src: 0, dst: 0, n, dir })
+    }
+
+    /// Macro-ops in this kernel.
+    pub fn n_ops(&self) -> usize {
+        self.inner.ops.len()
+    }
+
+    /// Minimum handle-table length `submit` requires.
+    pub fn n_rows(&self) -> usize {
+        self.inner.n_rows
+    }
+
+    /// Queued-work cost in router load units (lowered command count).
+    pub(crate) fn cost(&self) -> usize {
+        self.inner.cost
+    }
+
+    pub(crate) fn shape(&self) -> &ProgramShape {
+        &self.inner.shape
+    }
+
+    pub(crate) fn ops(&self) -> &Arc<Vec<PimOp>> {
+        &self.inner.ops
+    }
+
+    pub(crate) fn slots(&self) -> &[usize] {
+        &self.inner.slots
+    }
+}
+
+/// A client session: pinned by the router to one `(bank, subarray)` so
+/// every row it allocates is co-resident (kernels can only combine rows of
+/// one subarray). Cheap to create — open one session per independent
+/// stream of work and the placement policy spreads them over banks.
+pub struct PimClient {
+    sys: PimSystem,
+    bank: usize,
+    subarray: usize,
+}
+
+impl PimClient {
+    pub(crate) fn new(sys: PimSystem, bank: usize, subarray: usize) -> Self {
+        PimClient { sys, bank, subarray }
+    }
+
+    /// The bank this session was placed on.
+    pub fn bank(&self) -> usize {
+        self.bank
+    }
+
+    /// The system this session talks to.
+    pub fn system(&self) -> &PimSystem {
+        &self.sys
+    }
+
+    /// Allocate one system-placed row.
+    pub fn alloc(&self) -> Result<RowHandle, PimError> {
+        self.sys.alloc_row(self.bank, self.subarray)
+    }
+
+    /// Allocate `n` rows (all-or-nothing: on exhaustion every row already
+    /// claimed is returned to the slab).
+    pub fn alloc_rows(&self, n: usize) -> Result<Vec<RowHandle>, PimError> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            match self.alloc() {
+                Ok(h) => out.push(h),
+                Err(e) => {
+                    for h in out {
+                        self.sys.free_row(&h);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Return a row to the system. False on double free.
+    pub fn free(&self, handle: RowHandle) -> bool {
+        self.sys.free_row(&handle)
+    }
+
+    /// Load host data into a row.
+    pub fn write(&self, handle: &RowHandle, bits: BitRow) -> Ticket<()> {
+        if let Err(e) = self.check_handle(handle) {
+            return Ticket::failed(e, self.bank);
+        }
+        let req = PimRequest::WriteRow { subarray: handle.subarray, row: handle.row, bits };
+        Ticket::new(self.sys.submit_wire(self.bank, 1, req), decode_done, self.bank)
+    }
+
+    /// Read a row back.
+    pub fn read(&self, handle: &RowHandle) -> Ticket<BitRow> {
+        if let Err(e) = self.check_handle(handle) {
+            return Ticket::failed(e, self.bank);
+        }
+        let req = PimRequest::ReadRow { subarray: handle.subarray, row: handle.row };
+        Ticket::new(self.sys.submit_wire(self.bank, 1, req), decode_row, self.bank)
+    }
+
+    /// Submit a kernel: recording row `i` executes against `rows[i]`.
+    /// One request on the wire, one program-cache fetch, one
+    /// `run_compiled` replay — however many macro-ops the kernel holds.
+    pub fn submit(&self, kernel: &Kernel, rows: &[RowHandle]) -> Ticket<Receipt> {
+        if kernel.n_rows() > rows.len() {
+            return Ticket::failed(
+                PimError::HandleTableTooShort { needs: kernel.n_rows(), got: rows.len() },
+                self.bank,
+            );
+        }
+        let mut binding = Vec::with_capacity(kernel.slots().len());
+        for &r in kernel.slots() {
+            let h = &rows[r];
+            if let Err(e) = self.check_handle(h) {
+                return Ticket::failed(e, self.bank);
+            }
+            binding.push(h.row);
+        }
+        let req = PimRequest::RunKernel {
+            subarray: self.subarray,
+            shape: kernel.shape().clone(),
+            ops: kernel.ops().clone(),
+            binding,
+        };
+        Ticket::new(self.sys.submit_wire(self.bank, kernel.cost(), req), decode_receipt, self.bank)
+    }
+
+    /// Dispatch this session's partially filled batch.
+    pub fn flush(&self) {
+        self.sys.flush_bank(self.bank);
+    }
+
+    /// Submit, flush, and wait — the synchronous kernel call.
+    pub fn run(&self, kernel: &Kernel, rows: &[RowHandle]) -> Result<Receipt, PimError> {
+        let t = self.submit(kernel, rows);
+        self.flush();
+        t.wait()
+    }
+
+    /// Write synchronously.
+    pub fn write_now(&self, handle: &RowHandle, bits: BitRow) -> Result<(), PimError> {
+        let t = self.write(handle, bits);
+        self.flush();
+        t.wait()
+    }
+
+    /// Read synchronously.
+    pub fn read_now(&self, handle: &RowHandle) -> Result<BitRow, PimError> {
+        let t = self.read(handle);
+        self.flush();
+        t.wait()
+    }
+
+    fn check_handle(&self, h: &RowHandle) -> Result<(), PimError> {
+        if h.bank != self.bank || h.subarray != self.subarray {
+            return Err(PimError::ForeignHandle {
+                expected_bank: self.bank,
+                expected_subarray: self.subarray,
+                got_bank: h.bank,
+                got_subarray: h.subarray,
+            });
+        }
+        Ok(())
+    }
+}

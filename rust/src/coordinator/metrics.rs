@@ -1,16 +1,48 @@
-//! Coordinator metrics: per-bank and aggregate counters, shared between
-//! workers and the leader thread, plus the attached compile-layer cache
-//! (hit-rate and amortized compile time ride along with the counters).
+//! Coordinator metrics: per-bank and aggregate counters at *kernel*
+//! granularity, shared between workers and the leader thread, plus the
+//! attached compile-layer cache (hit-rate and amortized compile time ride
+//! along with the counters).
+//!
+//! A worker reports one [`WorkerDelta`] per drained batch: how many
+//! requests it completed, how many of those were kernel submissions, how
+//! many macro-ops those kernels contained, and how many
+//! `BankSim::run_compiled` replays served them — the counters the
+//! kernel-granular acceptance tests assert (K ops through one submission
+//! ⇒ one cache fetch, one replay).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::pim::compile::{CacheStats, ProgramCache};
 
+/// One batch worth of worker progress.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerDelta {
+    /// envelopes completed (writes + reads + kernels)
+    pub requests: u64,
+    /// kernel submissions among them
+    pub kernels: u64,
+    /// macro-ops executed inside those kernels
+    pub macro_ops: u64,
+    /// `run_compiled` replays that served them (one per kernel)
+    pub replays: u64,
+    /// AAP commands issued since the last report
+    pub aaps: u64,
+    /// the bank's simulated clock, ps (absolute, not a delta)
+    pub sim_time_ps: u64,
+    /// the bank's accumulated energy, pJ (absolute)
+    pub energy_pj: f64,
+    /// refreshes injected so far (absolute)
+    pub refreshes: u64,
+}
+
 /// Lock-free counters one worker updates and the leader reads.
 #[derive(Debug, Default)]
 pub struct BankCounters {
-    pub ops_completed: AtomicU64,
+    pub requests: AtomicU64,
+    pub kernels: AtomicU64,
+    pub macro_ops: AtomicU64,
+    pub replays: AtomicU64,
     pub aaps_issued: AtomicU64,
     pub sim_time_ps: AtomicU64,
     pub energy_mpj: AtomicU64, // milli-picojoules, fixed point
@@ -43,13 +75,13 @@ impl Metrics {
         self.cache.as_ref().map(|c| c.stats())
     }
 
-    /// Fraction of compute requests served without compiling (0 when no
+    /// Fraction of kernel fetches served without compiling (0 when no
     /// cache is attached or nothing ran yet).
     pub fn cache_hit_rate(&self) -> f64 {
         self.cache_stats().map_or(0.0, |s| s.hit_rate())
     }
 
-    /// Compile wall-clock amortized per compute request, ns.
+    /// Compile wall-clock amortized per kernel fetch, ns.
     pub fn amortized_compile_ns(&self) -> f64 {
         self.cache_stats().map_or(0.0, |s| s.amortized_compile_ns())
     }
@@ -58,21 +90,37 @@ impl Metrics {
         self.banks.len()
     }
 
-    pub fn record(&self, bank: usize, ops: u64, aaps: u64, sim_ps: u64, energy_pj: f64, refs: u64) {
+    pub fn record(&self, bank: usize, d: &WorkerDelta) {
         let c = &self.banks[bank];
-        c.ops_completed.fetch_add(ops, Ordering::Relaxed);
-        c.aaps_issued.fetch_add(aaps, Ordering::Relaxed);
-        c.sim_time_ps.store(sim_ps, Ordering::Relaxed);
-        c.energy_mpj.store((energy_pj * 1e3) as u64, Ordering::Relaxed);
-        c.refreshes.store(refs, Ordering::Relaxed);
+        c.requests.fetch_add(d.requests, Ordering::Relaxed);
+        c.kernels.fetch_add(d.kernels, Ordering::Relaxed);
+        c.macro_ops.fetch_add(d.macro_ops, Ordering::Relaxed);
+        c.replays.fetch_add(d.replays, Ordering::Relaxed);
+        c.aaps_issued.fetch_add(d.aaps, Ordering::Relaxed);
+        c.sim_time_ps.store(d.sim_time_ps, Ordering::Relaxed);
+        c.energy_mpj.store((d.energy_pj * 1e3) as u64, Ordering::Relaxed);
+        c.refreshes.store(d.refreshes, Ordering::Relaxed);
     }
 
-    pub fn ops(&self, bank: usize) -> u64 {
-        self.banks[bank].ops_completed.load(Ordering::Relaxed)
+    /// Requests completed by one bank.
+    pub fn requests(&self, bank: usize) -> u64 {
+        self.banks[bank].requests.load(Ordering::Relaxed)
     }
 
-    pub fn total_ops(&self) -> u64 {
-        self.banks.iter().map(|c| c.ops_completed.load(Ordering::Relaxed)).sum()
+    pub fn total_requests(&self) -> u64 {
+        self.banks.iter().map(|c| c.requests.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn total_kernels(&self) -> u64 {
+        self.banks.iter().map(|c| c.kernels.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn total_macro_ops(&self) -> u64 {
+        self.banks.iter().map(|c| c.macro_ops.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn total_replays(&self) -> u64 {
+        self.banks.iter().map(|c| c.replays.load(Ordering::Relaxed)).sum()
     }
 
     pub fn total_aaps(&self) -> u64 {
@@ -92,13 +140,13 @@ impl Metrics {
         self.banks.iter().map(|c| c.refreshes.load(Ordering::Relaxed)).sum()
     }
 
-    /// Aggregate throughput in MOps/s of simulated time.
+    /// Aggregate throughput in requests (MOps/s) of simulated time.
     pub fn throughput_mops(&self) -> f64 {
         let t = self.makespan_ps();
         if t == 0 {
             return 0.0;
         }
-        self.total_ops() as f64 / (t as f64 * 1e-12) / 1e6
+        self.total_requests() as f64 / (t as f64 * 1e-12) / 1e6
     }
 }
 
@@ -106,16 +154,52 @@ impl Metrics {
 mod tests {
     use super::*;
 
+    fn delta(reqs: u64, aaps: u64, sim_ps: u64, energy_pj: f64, refs: u64) -> WorkerDelta {
+        WorkerDelta {
+            requests: reqs,
+            kernels: reqs,
+            macro_ops: reqs,
+            replays: reqs,
+            aaps,
+            sim_time_ps: sim_ps,
+            energy_pj,
+            refreshes: refs,
+        }
+    }
+
     #[test]
     fn aggregation() {
         let m = Metrics::new(4);
-        m.record(0, 100, 400, 1_000_000, 50.0, 1);
-        m.record(1, 100, 400, 2_000_000, 60.0, 2);
-        assert_eq!(m.total_ops(), 200);
+        m.record(0, &delta(100, 400, 1_000_000, 50.0, 1));
+        m.record(1, &delta(100, 400, 2_000_000, 60.0, 2));
+        assert_eq!(m.total_requests(), 200);
+        assert_eq!(m.total_kernels(), 200);
         assert_eq!(m.total_aaps(), 800);
         assert_eq!(m.makespan_ps(), 2_000_000, "parallel banks: max not sum");
         assert!((m.total_energy_pj() - 110.0).abs() < 0.01);
         assert_eq!(m.total_refreshes(), 3);
+    }
+
+    #[test]
+    fn kernel_counters_accumulate_independently() {
+        let m = Metrics::new(1);
+        // a 7-op kernel served by one replay, then two data-movement reqs
+        m.record(
+            0,
+            &WorkerDelta {
+                requests: 1,
+                kernels: 1,
+                macro_ops: 7,
+                replays: 1,
+                aaps: 28,
+                ..WorkerDelta::default()
+            },
+        );
+        m.record(0, &WorkerDelta { requests: 2, ..WorkerDelta::default() });
+        assert_eq!(m.total_requests(), 3);
+        assert_eq!(m.total_kernels(), 1);
+        assert_eq!(m.total_macro_ops(), 7);
+        assert_eq!(m.total_replays(), 1, "K ops, one replay");
     }
 
     #[test]
@@ -142,10 +226,10 @@ mod tests {
     #[test]
     fn throughput_uses_makespan() {
         let m = Metrics::new(2);
-        // two banks each complete 1000 ops in 1 ms of simulated time
-        m.record(0, 1000, 4000, 1_000_000_000, 0.0, 0);
-        m.record(1, 1000, 4000, 1_000_000_000, 0.0, 0);
-        // 2000 ops / 1 ms = 2 MOps/s — parallelism doubles throughput
+        // two banks each complete 1000 requests in 1 ms of simulated time
+        m.record(0, &delta(1000, 4000, 1_000_000_000, 0.0, 0));
+        m.record(1, &delta(1000, 4000, 1_000_000_000, 0.0, 0));
+        // 2000 requests / 1 ms = 2 MOps/s — parallelism doubles throughput
         assert!((m.throughput_mops() - 2.0).abs() < 1e-9);
     }
 }

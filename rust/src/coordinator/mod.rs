@@ -1,41 +1,61 @@
-//! The PIM coordinator: request router, per-bank batcher, and the
-//! bank-parallel scheduler that realizes §5.1.4's scaling claim.
+//! The PIM coordinator: handle-based client sessions in front of a
+//! bank-parallel scheduler — the serving layer that realizes §5.1.4's
+//! scaling claim.
 //!
-//! Architecture (leader/worker):
+//! Architecture (client/leader/worker):
 //!
 //! ```text
-//!   clients ──► Router ──► per-bank Batcher queues ──► one Worker per bank
-//!                 │                                        │  (thread +
-//!                 └── placement policy                     │   BankSim)
-//!                          shared Arc<ProgramCache> ───────┤
-//!                          (compile-once schedules)        ▼
-//!                                                  responses + Metrics
+//!   PimClient sessions ──► Router ──► per-bank Batcher ──► one Worker
+//!     │  alloc() → RowHandle  │          queues              per bank
+//!     │  submit(Kernel)       │  (thread + BankSim)             │
+//!     │  Ticket<T> ◄──────────┼── placement policy +            │
+//!     │                       │   per-bank row slabs            │
+//!     │        shared Arc<ProgramCache> ────────────────────────┤
+//!     │        (compile-once schedules)                         ▼
+//!     └──────────────── Result<T, PimError> responses + Metrics
 //! ```
 //!
-//! Workers own independent [`BankSim`]s; because shift operations are
-//! confined to one subarray, banks never synchronize and aggregate
-//! throughput scales with the bank count (the paper's 4.82 → 38.56 →
-//! 154.24 MOps/s projection for 1 → 8 → 32 banks).
+//! **Clients hold handles, the system owns placement.** A session
+//! ([`PimClient`], opened via [`PimSystem::client`]) is placed on a bank
+//! by the [`Router`]; every row it allocates is an opaque [`RowHandle`]
+//! drawn from that bank's row slab. Work is submitted as whole
+//! [`Kernel`]s — canonical macro-op sequences recorded once through the
+//! [`crate::pim::ProgramSketch`] tape — and completion comes back through
+//! typed [`Ticket`]s that resolve to `Result<T, PimError>`; a bad request
+//! fails its own ticket instead of panicking a bank worker, and worker
+//! panics that do happen surface in [`SystemReport::worker_failures`].
 //!
-//! Compute requests execute through the compile layer: each worker
-//! canonicalizes the request to a position-relative shape, fetches the
-//! [`crate::pim::compile::CompiledProgram`] from the system-wide cache
-//! (compiling at most once per shape and config), and replays it through
-//! `BankSim::run_compiled` with an O(1) slot→row rebase. Consecutive
-//! same-shape requests in a batch reuse the worker's memoized program —
-//! the batched fast path the final report's cache hit-rate accounts for.
+//! **Kernel granularity everywhere.** One kernel of K macro-ops is one
+//! wire request, one program-cache fetch (a shape-keyed worker memo
+//! serves same-shape runs without even touching the cache), and one
+//! `BankSim::run_compiled` replay with an O(1) slot→row rebase. The
+//! batcher batches kernels, the router weighs load in lowered-command
+//! cost units (so [`Placement::LeastLoaded`] balances real work under
+//! uneven kernel sizes), and [`Metrics`]/[`SystemReport`] count
+//! requests, kernels, macro-ops, and replays separately.
+//!
+//! Workers own independent [`crate::sim::BankSim`]s; because shift
+//! operations are confined to one subarray, banks never synchronize and
+//! aggregate throughput scales with the bank count (the paper's 4.82 →
+//! 38.56 → 154.24 MOps/s projection for 1 → 8 → 32 banks).
+//!
+//! The application layer is a client of this same API:
+//! [`crate::apps::ElementCtx`] wraps a single-bank system + session, so
+//! app kernels and external callers share one lowering/replay path.
 //!
 //! Substitution note: the offline build has no tokio; the serving loop is
 //! std threads + mpsc channels, which for a simulation-backed service is
 //! behaviourally equivalent (blocking queue per bank, one executor per
-//! bank, non-blocking submit with a completion handle).
+//! bank, non-blocking submit with a typed completion handle).
 
 pub mod batcher;
+pub mod client;
 pub mod metrics;
 pub mod router;
 pub mod system;
 
 pub use batcher::{Batch, Batcher};
-pub use metrics::Metrics;
+pub use client::{Kernel, PimClient, PimError, Receipt, RowHandle, Ticket};
+pub use metrics::{Metrics, WorkerDelta};
 pub use router::{Placement, Router};
-pub use system::{PimRequest, PimResponse, PimSystem, SystemReport};
+pub use system::{PimSystem, SystemBuilder, SystemReport, DEFAULT_CACHE_CAPACITY};

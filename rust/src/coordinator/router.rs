@@ -1,33 +1,132 @@
-//! Request routing: map incoming PIM requests onto banks.
+//! Placement: the router owns where data lives and where work runs.
+//!
+//! Clients never name `(bank, subarray, row)` coordinates. A session is
+//! *placed* on a bank by policy ([`Router::place_session`]), and every row
+//! the session allocates comes out of that bank's [`RowSlab`] — the
+//! per-bank free-row allocator behind [`crate::coordinator::RowHandle`].
+//! Load accounting is in *cost units* (one unit per lowered command of a
+//! submitted kernel, one per data-movement request), so
+//! [`Placement::LeastLoaded`] balances real work — a shift-by-10 kernel
+//! weighs 40, not 1 — instead of request counts.
 
 use crate::dram::address::BankId;
 
-/// Placement policy for requests that don't pin a bank.
+/// Placement policy for new client sessions.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Placement {
     /// strict round-robin over all banks
     RoundRobin,
-    /// least-loaded bank (by queued ops)
+    /// least-loaded bank (by queued cost units)
     LeastLoaded,
-    /// all unpinned requests to bank 0 (the paper's single-bank baseline)
+    /// all sessions on bank 0 (the paper's single-bank baseline)
     Pinned,
 }
 
-/// Routes requests to bank indices `[0, n_banks)`.
+/// Free-row allocator for one subarray: freed rows are reused LIFO, fresh
+/// rows are handed out in ascending order.
+#[derive(Debug)]
+struct SubarraySlab {
+    rows: usize,
+    next_fresh: usize,
+    freed: Vec<usize>,
+    in_use: Vec<bool>,
+}
+
+impl SubarraySlab {
+    fn new(rows: usize) -> Self {
+        SubarraySlab { rows, next_fresh: 0, freed: Vec::new(), in_use: vec![false; rows] }
+    }
+
+    fn alloc(&mut self) -> Option<usize> {
+        let row = match self.freed.pop() {
+            Some(r) => r,
+            None if self.next_fresh < self.rows => {
+                let r = self.next_fresh;
+                self.next_fresh += 1;
+                r
+            }
+            None => return None,
+        };
+        self.in_use[row] = true;
+        Some(row)
+    }
+
+    /// Returns false on a double free / foreign row (the slab is left
+    /// untouched so one buggy client can't corrupt placement state).
+    fn free(&mut self, row: usize) -> bool {
+        if row >= self.rows || !self.in_use[row] {
+            return false;
+        }
+        self.in_use[row] = false;
+        self.freed.push(row);
+        true
+    }
+
+    fn available(&self) -> usize {
+        (self.rows - self.next_fresh) + self.freed.len()
+    }
+}
+
+/// Per-bank row slab: one [`SubarraySlab`] per subarray.
+#[derive(Debug)]
+pub struct RowSlab {
+    subarrays: Vec<SubarraySlab>,
+}
+
+impl RowSlab {
+    fn new(subarrays: usize, rows: usize) -> Self {
+        RowSlab { subarrays: (0..subarrays).map(|_| SubarraySlab::new(rows)).collect() }
+    }
+
+    /// Total allocatable rows left in this bank.
+    pub fn available(&self) -> usize {
+        self.subarrays.iter().map(|s| s.available()).sum()
+    }
+
+    /// The subarray with the most free rows (sessions land there).
+    fn roomiest(&self) -> usize {
+        self.subarrays
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, s)| s.available())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// Routes sessions to bank indices `[0, n_banks)` and owns every bank's
+/// row slab.
 #[derive(Debug)]
 pub struct Router {
     banks: Vec<BankId>,
     policy: Placement,
     rr_next: usize,
-    /// queued-op estimate per bank (updated by the system on enqueue/drain)
+    /// queued-cost estimate per bank (charged on submit, relieved on drain)
     load: Vec<usize>,
+    /// sessions placed per bank — the LeastLoaded tiebreaker, so sessions
+    /// opened on an idle system still spread over banks
+    sessions: Vec<usize>,
+    slabs: Vec<RowSlab>,
 }
 
 impl Router {
-    pub fn new(banks: Vec<BankId>, policy: Placement) -> Self {
+    pub fn new(
+        banks: Vec<BankId>,
+        policy: Placement,
+        subarrays_per_bank: usize,
+        rows_per_subarray: usize,
+    ) -> Self {
         assert!(!banks.is_empty());
+        assert!(subarrays_per_bank >= 1 && rows_per_subarray >= 1);
         let n = banks.len();
-        Router { banks, policy, rr_next: 0, load: vec![0; n] }
+        Router {
+            banks,
+            policy,
+            rr_next: 0,
+            load: vec![0; n],
+            sessions: vec![0; n],
+            slabs: (0..n).map(|_| RowSlab::new(subarrays_per_bank, rows_per_subarray)).collect(),
+        }
     }
 
     pub fn n_banks(&self) -> usize {
@@ -38,35 +137,55 @@ impl Router {
         self.banks[idx]
     }
 
-    /// Choose a bank for a request; `pinned` overrides the policy.
-    pub fn route(&mut self, pinned: Option<usize>) -> usize {
-        if let Some(b) = pinned {
-            assert!(b < self.banks.len(), "pinned bank {b} out of range");
-            self.load[b] += 1;
-            return b;
-        }
-        let idx = match self.policy {
-            Placement::Pinned => 0,
-            Placement::RoundRobin => {
-                let i = self.rr_next;
-                self.rr_next = (self.rr_next + 1) % self.banks.len();
-                i
+    /// Place a new session: choose its bank by policy (`pinned` overrides)
+    /// and the subarray with the most free rows within it. LeastLoaded
+    /// orders banks by queued cost, then by sessions already placed — so
+    /// sessions opened on an idle system still spread over banks.
+    pub fn place_session(&mut self, pinned: Option<usize>) -> (usize, usize) {
+        let bank = match pinned {
+            Some(b) => {
+                assert!(b < self.banks.len(), "pinned bank {b} out of range");
+                b
             }
-            Placement::LeastLoaded => self
-                .load
-                .iter()
-                .enumerate()
-                .min_by_key(|(_, &l)| l)
-                .map(|(i, _)| i)
-                .unwrap(),
+            None => match self.policy {
+                Placement::Pinned => 0,
+                Placement::RoundRobin => {
+                    let i = self.rr_next;
+                    self.rr_next = (self.rr_next + 1) % self.banks.len();
+                    i
+                }
+                Placement::LeastLoaded => (0..self.banks.len())
+                    .min_by_key(|&i| (self.load[i], self.sessions[i]))
+                    .unwrap(),
+            },
         };
-        self.load[idx] += 1;
-        idx
+        self.sessions[bank] += 1;
+        (bank, self.slabs[bank].roomiest())
     }
 
-    /// Report `n` ops drained from a bank's queue.
-    pub fn drained(&mut self, bank: usize, n: usize) {
-        self.load[bank] = self.load[bank].saturating_sub(n);
+    /// Allocate one row from a bank's subarray slab.
+    pub fn alloc_row(&mut self, bank: usize, subarray: usize) -> Option<usize> {
+        self.slabs[bank].subarrays[subarray].alloc()
+    }
+
+    /// Return a row to its slab; false on double free / foreign row.
+    pub fn free_row(&mut self, bank: usize, subarray: usize, row: usize) -> bool {
+        self.slabs[bank].subarrays[subarray].free(row)
+    }
+
+    /// Allocatable rows left on a bank.
+    pub fn rows_available(&self, bank: usize) -> usize {
+        self.slabs[bank].available()
+    }
+
+    /// Charge `cost` units of queued work to a bank (on submit).
+    pub fn charge(&mut self, bank: usize, cost: usize) {
+        self.load[bank] += cost;
+    }
+
+    /// Relieve `cost` units drained from a bank's queue to its worker.
+    pub fn drained(&mut self, bank: usize, cost: usize) {
+        self.load[bank] = self.load[bank].saturating_sub(cost);
     }
 
     pub fn load(&self, bank: usize) -> usize {
@@ -86,45 +205,100 @@ mod tests {
             .collect()
     }
 
+    fn router(n: usize, policy: Placement) -> Router {
+        Router::new(banks(n), policy, 2, 8)
+    }
+
     #[test]
-    fn round_robin_cycles() {
-        let mut r = Router::new(banks(4), Placement::RoundRobin);
-        let picks: Vec<usize> = (0..8).map(|_| r.route(None)).collect();
+    fn round_robin_cycles_sessions() {
+        let mut r = router(4, Placement::RoundRobin);
+        let picks: Vec<usize> = (0..8).map(|_| r.place_session(None).0).collect();
         assert_eq!(picks, vec![0, 1, 2, 3, 0, 1, 2, 3]);
     }
 
     #[test]
     fn pinned_overrides_policy() {
-        let mut r = Router::new(banks(4), Placement::RoundRobin);
-        assert_eq!(r.route(Some(2)), 2);
-        assert_eq!(r.route(Some(2)), 2);
-    }
-
-    #[test]
-    fn least_loaded_balances() {
-        let mut r = Router::new(banks(3), Placement::LeastLoaded);
-        let a = r.route(None);
-        let b = r.route(None);
-        let c = r.route(None);
-        let mut s = vec![a, b, c];
-        s.sort();
-        assert_eq!(s, vec![0, 1, 2], "spreads over empty banks");
-        r.drained(1, 1);
-        assert_eq!(r.route(None), 1, "goes to the drained bank");
+        let mut r = router(4, Placement::RoundRobin);
+        assert_eq!(r.place_session(Some(2)).0, 2);
+        assert_eq!(r.place_session(Some(2)).0, 2);
     }
 
     #[test]
     fn pinned_policy_single_bank() {
-        let mut r = Router::new(banks(8), Placement::Pinned);
+        let mut r = router(8, Placement::Pinned);
         for _ in 0..5 {
-            assert_eq!(r.route(None), 0);
+            assert_eq!(r.place_session(None).0, 0);
         }
     }
 
     #[test]
     #[should_panic(expected = "out of range")]
     fn bad_pin_rejected() {
-        let mut r = Router::new(banks(2), Placement::RoundRobin);
-        r.route(Some(5));
+        let mut r = router(2, Placement::RoundRobin);
+        r.place_session(Some(5));
+    }
+
+    #[test]
+    fn least_loaded_spreads_sessions_on_an_idle_system() {
+        // all loads tie at 0: the session-count tiebreaker must still
+        // spread placements instead of stacking every session on bank 0
+        let mut r = router(3, Placement::LeastLoaded);
+        let picks: Vec<usize> = (0..6).map(|_| r.place_session(None).0).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_weighs_kernel_cost_not_request_count() {
+        // one 100-op kernel on bank 0 outweighs three 5-op kernels on
+        // bank 1: the next session must land on neither-loaded bank 2,
+        // and the one after that on bank 1 (15 < 100).
+        let mut r = router(3, Placement::LeastLoaded);
+        let (b0, _) = r.place_session(None);
+        r.charge(b0, 100);
+        let (b1, _) = r.place_session(None);
+        assert_ne!(b1, b0, "loaded bank avoided");
+        for _ in 0..3 {
+            r.charge(b1, 5);
+        }
+        let (b2, _) = r.place_session(None);
+        assert!(b2 != b0 && b2 != b1, "empty bank wins");
+        r.charge(b2, 50);
+        assert_eq!(r.place_session(None).0, b1, "15 queued ops < 50 < 100");
+        // draining bank 0 makes it cheapest again
+        r.drained(b0, 100);
+        assert_eq!(r.place_session(None).0, b0);
+    }
+
+    #[test]
+    fn slab_allocates_ascending_and_reuses_freed() {
+        let mut r = router(1, Placement::Pinned);
+        let rows: Vec<usize> = (0..4).map(|_| r.alloc_row(0, 0).unwrap()).collect();
+        assert_eq!(rows, vec![0, 1, 2, 3]);
+        assert!(r.free_row(0, 0, 1));
+        assert!(!r.free_row(0, 0, 1), "double free rejected");
+        assert_eq!(r.alloc_row(0, 0), Some(1), "freed row reused first");
+        assert_eq!(r.alloc_row(0, 0), Some(4), "then fresh rows resume");
+    }
+
+    #[test]
+    fn slab_exhausts_cleanly() {
+        let mut r = router(1, Placement::Pinned);
+        for _ in 0..8 {
+            assert!(r.alloc_row(0, 0).is_some());
+        }
+        assert_eq!(r.alloc_row(0, 0), None, "subarray 0 exhausted");
+        // the other subarray still has its 8 rows
+        assert_eq!(r.rows_available(0), 8);
+        assert!(r.alloc_row(0, 1).is_some());
+    }
+
+    #[test]
+    fn sessions_land_on_the_roomiest_subarray() {
+        let mut r = router(1, Placement::Pinned);
+        for _ in 0..3 {
+            r.alloc_row(0, 0);
+        }
+        let (_, sa) = r.place_session(None);
+        assert_eq!(sa, 1, "subarray 1 has more free rows");
     }
 }

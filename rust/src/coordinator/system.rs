@@ -1,59 +1,81 @@
-//! The PIM serving system: leader thread + one worker per bank.
+//! The PIM serving system: leader-side session/batch plumbing + one worker
+//! per bank.
 //!
-//! Submit [`PimRequest`]s; each is routed (§router), batched (§batcher),
-//! and executed by its bank's worker against a private [`BankSim`]. The
-//! caller receives a [`PimResponse`] over a channel. Simulated time runs
-//! per bank — banks are independent (the basis of §5.1.4's linear scaling).
+//! Built with [`SystemBuilder`] and spoken to through [`PimClient`]
+//! sessions (see [`crate::coordinator::client`]): clients allocate opaque
+//! [`crate::coordinator::RowHandle`]s and submit whole
+//! [`crate::coordinator::Kernel`]s; the leader batches the resulting wire
+//! requests per bank and each bank's worker executes them against a
+//! private [`BankSim`]. Simulated time runs per bank — banks are
+//! independent (the basis of §5.1.4's linear scaling).
 //!
-//! Compute requests never lower their own command streams: every worker
-//! consults one `Arc`-shared [`ProgramCache`], canonicalizes the request
-//! to a position-relative shape, and replays the cached
-//! [`CompiledProgram`] through [`BankSim::run_compiled`] with an O(1)
-//! slot→row rebase. Consecutive same-shape requests in a batch reuse the
-//! previously fetched program without touching the cache at all (counted
-//! as `batched` in [`CacheStats`]); the final [`SystemReport`] carries the
-//! cache hit-rate and the compile time amortized per request.
+//! [`PimRequest`]/[`PimResponse`] are the *internal wire format only*;
+//! they are not exported from the coordinator. Workers never panic on bad
+//! requests: every request is validated against the bank geometry and
+//! answered with `Result<PimResponse, PimError>`, so one bad ticket can't
+//! take a bank down. If a worker does die (a simulator bug), its panic
+//! payload is captured at [`PimSystem::shutdown`] and reported in
+//! [`SystemReport::worker_failures`] — a crashed bank can't report clean
+//! totals.
+//!
+//! Kernel-granular execution: a kernel of K macro-ops arrives as one
+//! request; the worker fetches its [`CompiledProgram`] **once** (a
+//! shape-keyed one-entry memo serves consecutive same-shape kernels
+//! without touching the shared cache — counted as `batched` in
+//! `CacheStats`) and replays it through **one** `BankSim::run_compiled`
+//! call with an O(1) slot→row rebase.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::config::DramConfig;
-use crate::coordinator::batcher::Batcher;
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::batcher::{Batch, Batcher};
+use crate::coordinator::client::{PimClient, PimError, RowHandle};
+use crate::coordinator::metrics::{Metrics, WorkerDelta};
 use crate::coordinator::router::{Placement, Router};
 use crate::dram::address::BankId;
-use crate::pim::compile::{canonicalize, CacheStats, CompiledProgram, ProgramCache, ProgramShape};
+use crate::pim::compile::{CacheStats, CompiledProgram, ProgramCache, ProgramShape};
 use crate::pim::PimOp;
 use crate::sim::BankSim;
-use crate::util::{BitRow, ShiftDir};
+use crate::util::BitRow;
 
-/// Programs the serving cache keeps resident per system.
-const PROGRAM_CACHE_CAPACITY: usize = 256;
+/// Programs the serving cache keeps resident unless
+/// [`SystemBuilder::cache_capacity`] overrides it.
+pub const DEFAULT_CACHE_CAPACITY: usize = 256;
 
-/// A client request against one subarray of (some) bank.
+/// Internal wire format: what actually travels to a bank worker. Clients
+/// never see this — they hold handles and kernels.
 #[derive(Clone, Debug)]
-pub enum PimRequest {
+pub(crate) enum PimRequest {
     /// load a row with host data
     WriteRow { subarray: usize, row: usize, bits: BitRow },
     /// read a row back
     ReadRow { subarray: usize, row: usize },
-    /// the paper's primitive: shift a row by `n` positions
-    Shift { subarray: usize, row: usize, n: usize, dir: ShiftDir },
-    /// any other macro-op
-    Op { subarray: usize, op: PimOp },
+    /// replay one compiled kernel against a concrete row binding
+    RunKernel {
+        subarray: usize,
+        shape: ProgramShape,
+        ops: Arc<Vec<PimOp>>,
+        binding: Vec<usize>,
+    },
+    /// test hook: make the worker panic (exercises failure propagation)
+    #[cfg(test)]
+    Crash,
 }
 
-/// Worker's answer.
-#[derive(Clone, Debug)]
-pub enum PimResponse {
-    Done { bank: usize },
-    Row { bank: usize, bits: BitRow },
+/// Internal wire format: a worker's answer (decoded by `Ticket<T>`).
+#[derive(Clone, Debug, PartialEq)]
+pub(crate) enum PimResponse {
+    Done,
+    Row(BitRow),
+    Ran(crate::pim::compile::CommandCensus),
 }
 
 struct Envelope {
     req: PimRequest,
-    respond: Sender<PimResponse>,
+    cost: usize,
+    respond: Sender<Result<PimResponse, PimError>>,
 }
 
 enum WorkerMsg {
@@ -65,36 +87,100 @@ enum WorkerMsg {
 #[derive(Clone, Debug)]
 pub struct SystemReport {
     pub banks: usize,
+    /// requests served (kernel submissions + row writes/reads)
+    pub requests: u64,
+    /// kernel submissions among them
+    pub kernels: u64,
+    /// macro-ops executed inside those kernels
     pub total_ops: u64,
+    /// `run_compiled` replays that served them (one per kernel)
+    pub replays: u64,
     pub total_aaps: u64,
     pub makespan_ps: u64,
     pub total_energy_pj: f64,
     pub throughput_mops: f64,
     /// program-cache counters at shutdown
     pub cache: CacheStats,
-    /// fraction of compute requests served without compiling
+    /// fraction of kernel fetches served without compiling
     pub cache_hit_rate: f64,
-    /// compile wall-clock amortized over every compute request, ns
+    /// compile wall-clock amortized over every kernel fetch, ns
     pub amortized_compile_ns: f64,
+    /// panic messages of workers that died (empty on a clean run)
+    pub worker_failures: Vec<String>,
 }
 
-/// Leader + workers.
-pub struct PimSystem {
-    router: Mutex<Router>,
-    batchers: Vec<Mutex<Batcher<Envelope>>>,
-    senders: Vec<Sender<WorkerMsg>>,
-    workers: Vec<JoinHandle<()>>,
-    metrics: Metrics,
-    cache: Arc<ProgramCache>,
+impl SystemReport {
+    /// True when every bank worker exited without panicking.
+    pub fn is_clean(&self) -> bool {
+        self.worker_failures.is_empty()
+    }
 }
 
-impl PimSystem {
-    /// Spin up one worker per bank (first `n_banks` of the geometry).
-    pub fn start(cfg: &DramConfig, n_banks: usize, placement: Placement, max_batch: usize) -> Self {
-        let all = BankId::all(&cfg.geometry);
-        assert!(n_banks >= 1 && n_banks <= all.len());
-        let banks: Vec<BankId> = all.into_iter().take(n_banks).collect();
-        let cache = Arc::new(ProgramCache::new(PROGRAM_CACHE_CAPACITY));
+/// Configures and launches a [`PimSystem`].
+pub struct SystemBuilder {
+    cfg: DramConfig,
+    banks: usize,
+    placement: Placement,
+    max_batch: usize,
+    capacity: usize,
+    shared_cache: Option<Arc<ProgramCache>>,
+}
+
+impl SystemBuilder {
+    pub fn new(cfg: &DramConfig) -> Self {
+        SystemBuilder {
+            cfg: cfg.clone(),
+            banks: 1,
+            placement: Placement::RoundRobin,
+            max_batch: 16,
+            capacity: DEFAULT_CACHE_CAPACITY,
+            shared_cache: None,
+        }
+    }
+
+    /// Use the first `n` banks of the geometry (default 1).
+    pub fn banks(mut self, n: usize) -> Self {
+        self.banks = n;
+        self
+    }
+
+    /// Session placement policy (default round-robin).
+    pub fn placement(mut self, p: Placement) -> Self {
+        self.placement = p;
+        self
+    }
+
+    /// Requests a bank accumulates before its worker is kicked
+    /// (default 16; partially filled batches dispatch on `flush`).
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.max_batch = n;
+        self
+    }
+
+    /// Compiled programs the serving cache keeps resident
+    /// (default [`DEFAULT_CACHE_CAPACITY`]).
+    pub fn cache_capacity(mut self, n: usize) -> Self {
+        self.capacity = n;
+        self
+    }
+
+    /// Share an existing program cache instead of creating one (kernels
+    /// compiled elsewhere under the same config fingerprint are reused).
+    pub fn shared_cache(mut self, cache: Arc<ProgramCache>) -> Self {
+        self.shared_cache = Some(cache);
+        self
+    }
+
+    /// Spin up the leader state and one worker thread per bank.
+    pub fn build(self) -> PimSystem {
+        let all = BankId::all(&self.cfg.geometry);
+        assert!(self.banks >= 1 && self.banks <= all.len(), "bank count outside geometry");
+        let banks: Vec<BankId> = all.into_iter().take(self.banks).collect();
+        let n_banks = banks.len();
+        let cache = match self.shared_cache {
+            Some(shared) => shared,
+            None => Arc::new(ProgramCache::new(self.capacity)),
+        };
         let metrics = Metrics::with_cache(n_banks, cache.clone());
 
         let mut senders = Vec::new();
@@ -102,88 +188,215 @@ impl PimSystem {
         for bank in 0..n_banks {
             let (tx, rx) = channel::<WorkerMsg>();
             let m = metrics.clone();
-            let cfg = cfg.clone();
+            let cfg = self.cfg.clone();
             let cache = cache.clone();
             workers.push(std::thread::spawn(move || worker_loop(bank, cfg, rx, m, cache)));
             senders.push(tx);
         }
 
+        let router = Router::new(
+            banks,
+            self.placement,
+            self.cfg.geometry.subarrays_per_bank,
+            self.cfg.geometry.rows_per_subarray,
+        );
         PimSystem {
-            router: Mutex::new(Router::new(banks, placement)),
-            batchers: (0..n_banks).map(|b| Mutex::new(Batcher::new(b, max_batch))).collect(),
-            senders,
-            workers,
-            metrics,
-            cache,
-        }
-    }
-
-    pub fn metrics(&self) -> &Metrics {
-        &self.metrics
-    }
-
-    /// The shared compiled-program cache (all workers consult it).
-    pub fn program_cache(&self) -> &Arc<ProgramCache> {
-        &self.cache
-    }
-
-    /// Submit a request; returns the receiver for its response. `pinned`
-    /// forces a bank (the paper's single-bank runs pin everything to 0).
-    pub fn submit(&self, req: PimRequest, pinned: Option<usize>) -> Receiver<PimResponse> {
-        let (tx, rx) = channel();
-        let bank = self.router.lock().unwrap().route(pinned);
-        let mut batcher = self.batchers[bank].lock().unwrap();
-        batcher.push(Envelope { req, respond: tx });
-        // dispatch eagerly when a full batch accumulates
-        if let Some(batch) = batcher.drain() {
-            let n = batch.items.len();
-            self.senders[bank].send(WorkerMsg::Work(batch.items)).expect("worker alive");
-            self.router.lock().unwrap().drained(bank, n);
-        }
-        rx
-    }
-
-    /// Flush all partially-filled batches.
-    pub fn flush(&self) {
-        for (bank, b) in self.batchers.iter().enumerate() {
-            let mut b = b.lock().unwrap();
-            while let Some(batch) = b.drain() {
-                let n = batch.items.len();
-                self.senders[bank].send(WorkerMsg::Work(batch.items)).expect("worker alive");
-                self.router.lock().unwrap().drained(bank, n);
-            }
-        }
-    }
-
-    /// Flush, stop workers, and produce the final report.
-    pub fn shutdown(mut self) -> SystemReport {
-        self.flush();
-        for s in &self.senders {
-            let _ = s.send(WorkerMsg::Stop);
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
-        let cache = self.cache.stats();
-        SystemReport {
-            banks: self.metrics.n_banks(),
-            total_ops: self.metrics.total_ops(),
-            total_aaps: self.metrics.total_aaps(),
-            makespan_ps: self.metrics.makespan_ps(),
-            total_energy_pj: self.metrics.total_energy_pj(),
-            throughput_mops: self.metrics.throughput_mops(),
-            cache,
-            cache_hit_rate: cache.hit_rate(),
-            amortized_compile_ns: cache.amortized_compile_ns(),
+            core: Arc::new(Core {
+                router: Mutex::new(router),
+                batchers: (0..n_banks)
+                    .map(|b| Mutex::new(Batcher::new(b, self.max_batch)))
+                    .collect(),
+                max_batch: self.max_batch,
+                senders,
+                workers: Mutex::new(workers),
+                failures: Mutex::new(Vec::new()),
+                metrics,
+                cache,
+            }),
         }
     }
 }
 
-/// A worker's one-entry program memo: the shape it last fetched and the
-/// program that serves it. Runs of same-shape requests inside a batch hit
-/// this memo instead of the shared cache (the "batched onto one compiled
-/// program" fast path).
-type ProgramMemo = Option<(Vec<PimOp>, Arc<CompiledProgram>)>;
+/// A cheap, cloneable handle to the serving system. Clones share the same
+/// leader state and workers; sessions hold one internally, so the system
+/// stays alive as long as any client does.
+#[derive(Clone)]
+pub struct PimSystem {
+    core: Arc<Core>,
+}
+
+struct Core {
+    router: Mutex<Router>,
+    batchers: Vec<Mutex<Batcher<Envelope>>>,
+    max_batch: usize,
+    senders: Vec<Sender<WorkerMsg>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    failures: Mutex<Vec<String>>,
+    metrics: Metrics,
+    cache: Arc<ProgramCache>,
+}
+
+impl Drop for Core {
+    fn drop(&mut self) {
+        for s in &self.senders {
+            let _ = s.send(WorkerMsg::Stop);
+        }
+        if let Ok(workers) = self.workers.get_mut() {
+            for w in workers.drain(..) {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+impl PimSystem {
+    /// Open a session placed by the configured policy.
+    pub fn client(&self) -> PimClient {
+        let (bank, subarray) = self.core.router.lock().unwrap().place_session(None);
+        PimClient::new(self.clone(), bank, subarray)
+    }
+
+    /// Open a session pinned to a bank (panics if out of range — a
+    /// configuration error, not a request error).
+    pub fn client_on(&self, bank: usize) -> PimClient {
+        let (bank, subarray) = self.core.router.lock().unwrap().place_session(Some(bank));
+        PimClient::new(self.clone(), bank, subarray)
+    }
+
+    pub fn n_banks(&self) -> usize {
+        self.core.metrics.n_banks()
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.core.metrics
+    }
+
+    /// The shared compiled-program cache (all workers consult it).
+    pub fn program_cache(&self) -> &Arc<ProgramCache> {
+        &self.core.cache
+    }
+
+    pub(crate) fn alloc_row(&self, bank: usize, subarray: usize) -> Result<RowHandle, PimError> {
+        match self.core.router.lock().unwrap().alloc_row(bank, subarray) {
+            Some(row) => Ok(RowHandle { bank, subarray, row }),
+            None => Err(PimError::AllocExhausted { bank, subarray }),
+        }
+    }
+
+    pub(crate) fn free_row(&self, h: &RowHandle) -> bool {
+        self.core.router.lock().unwrap().free_row(h.bank, h.subarray, h.row)
+    }
+
+    /// Enqueue one wire request on a bank; dispatches the batch when full.
+    pub(crate) fn submit_wire(
+        &self,
+        bank: usize,
+        cost: usize,
+        req: PimRequest,
+    ) -> Receiver<Result<PimResponse, PimError>> {
+        let (tx, rx) = channel();
+        self.core.router.lock().unwrap().charge(bank, cost);
+        let full = {
+            let mut b = self.core.batchers[bank].lock().unwrap();
+            b.push(Envelope { req, cost, respond: tx });
+            b.len() >= self.core.max_batch
+        };
+        if full {
+            self.flush_bank(bank);
+        }
+        rx
+    }
+
+    /// Dispatch a bank's partially filled batch.
+    pub fn flush_bank(&self, bank: usize) {
+        loop {
+            let batch = self.core.batchers[bank].lock().unwrap().drain();
+            match batch {
+                Some(b) => self.dispatch(bank, b),
+                None => break,
+            }
+        }
+    }
+
+    /// Flush all partially-filled batches.
+    pub fn flush(&self) {
+        for bank in 0..self.core.batchers.len() {
+            self.flush_bank(bank);
+        }
+    }
+
+    fn dispatch(&self, bank: usize, batch: Batch<Envelope>) {
+        let cost: usize = batch.items.iter().map(|e| e.cost).sum();
+        if let Err(lost) = self.core.senders[bank].send(WorkerMsg::Work(batch.items)) {
+            // worker gone: fail every ticket instead of panicking the leader
+            if let WorkerMsg::Work(items) = lost.0 {
+                for env in items {
+                    let _ = env.respond.send(Err(PimError::WorkerLost { bank }));
+                }
+            }
+        }
+        self.core.router.lock().unwrap().drained(bank, cost);
+    }
+
+    /// Flush, stop workers, and produce the final report. Worker panics
+    /// are joined here and surface in [`SystemReport::worker_failures`].
+    pub fn shutdown(&self) -> SystemReport {
+        self.flush();
+        for s in &self.core.senders {
+            let _ = s.send(WorkerMsg::Stop);
+        }
+        {
+            let mut workers = self.core.workers.lock().unwrap();
+            let mut failures = self.core.failures.lock().unwrap();
+            for (bank, w) in workers.drain(..).enumerate() {
+                if let Err(payload) = w.join() {
+                    failures.push(format!(
+                        "bank {bank} worker panicked: {}",
+                        panic_message(payload.as_ref())
+                    ));
+                }
+            }
+        }
+        let m = &self.core.metrics;
+        let cache = self.core.cache.stats();
+        SystemReport {
+            banks: m.n_banks(),
+            requests: m.total_requests(),
+            kernels: m.total_kernels(),
+            total_ops: m.total_macro_ops(),
+            replays: m.total_replays(),
+            total_aaps: m.total_aaps(),
+            makespan_ps: m.makespan_ps(),
+            total_energy_pj: m.total_energy_pj(),
+            throughput_mops: m.throughput_mops(),
+            cache,
+            cache_hit_rate: cache.hit_rate(),
+            amortized_compile_ns: cache.amortized_compile_ns(),
+            worker_failures: self.core.failures.lock().unwrap().clone(),
+        }
+    }
+
+    /// Test/bench hook: route a raw wire request (bypasses handle checks).
+    #[cfg(test)]
+    fn submit_raw(&self, bank: usize, req: PimRequest) -> Receiver<Result<PimResponse, PimError>> {
+        self.submit_wire(bank, 1, req)
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// A worker's one-entry program memo, keyed by program shape: consecutive
+/// same-shape kernels inside and across batches hit this memo instead of
+/// the shared cache (the kernel-granular "batched" fast path).
+type ProgramMemo = Option<(ProgramShape, Arc<CompiledProgram>)>;
 
 fn worker_loop(
     bank: usize,
@@ -199,132 +412,157 @@ fn worker_loop(
         match msg {
             WorkerMsg::Stop => break,
             WorkerMsg::Work(envelopes) => {
-                let mut ops: u64 = 0;
+                let mut delta = WorkerDelta::default();
                 for env in envelopes {
-                    let resp = execute(bank, &mut sim, env.req, &cache, &mut memo);
-                    ops += 1;
+                    let resp = execute(&mut sim, env.req, &cache, &mut memo, &mut delta);
+                    delta.requests += 1;
                     // receiver may have hung up (fire-and-forget callers)
                     let _ = env.respond.send(resp);
                 }
-                metrics.record(
-                    bank,
-                    ops,
-                    sim.counts.aap - last_aaps,
-                    sim.now_ps,
-                    sim.energy.total_pj(),
-                    sim.counts.refresh,
-                );
+                delta.aaps = sim.counts.aap - last_aaps;
+                delta.sim_time_ps = sim.now_ps;
+                delta.energy_pj = sim.energy.total_pj();
+                delta.refreshes = sim.counts.refresh;
+                metrics.record(bank, &delta);
                 last_aaps = sim.counts.aap;
             }
         }
     }
 }
 
-/// Fetch the compiled program for a canonical op sequence: the memo serves
-/// consecutive same-shape requests, the shared cache everything else.
+/// Fetch the compiled program for a kernel shape: the shape-keyed memo
+/// serves consecutive same-shape kernels; the shared cache everything
+/// else. Shapes hold their ops behind an `Arc`, so the hot path performs
+/// **zero** op-vector copies and even a cache miss clones nothing — the
+/// build closure hands the shared vector straight to the compiler.
 fn fetch_compiled(
     cache: &ProgramCache,
     sim: &BankSim,
     memo: &mut ProgramMemo,
-    ops: Vec<PimOp>,
+    shape: ProgramShape,
+    ops: &Arc<Vec<PimOp>>,
 ) -> Arc<CompiledProgram> {
-    if let Some((memo_ops, prog)) = memo.as_ref() {
-        if *memo_ops == ops {
+    if let Some((memo_shape, prog)) = memo.as_ref() {
+        if *memo_shape == shape {
             cache.record_batched(1);
             return prog.clone();
         }
     }
     let build = ops.clone();
     let prog = cache.get_or_compile_keyed(
-        ProgramShape::Ops(ops.clone()),
+        shape.clone(),
         sim.config(),
         sim.config_fingerprint(),
         move || build,
     );
-    *memo = Some((ops, prog.clone()));
+    *memo = Some((shape, prog.clone()));
     prog
 }
 
 fn execute(
-    bank: usize,
     sim: &mut BankSim,
     req: PimRequest,
     cache: &ProgramCache,
     memo: &mut ProgramMemo,
-) -> PimResponse {
+    delta: &mut WorkerDelta,
+) -> Result<PimResponse, PimError> {
+    let subarrays = sim.config().geometry.subarrays_per_bank;
+    let rows = sim.config().geometry.rows_per_subarray;
+    let cols = sim.config().geometry.cols_per_row;
+    let check_subarray = |subarray: usize| {
+        if subarray >= subarrays {
+            Err(PimError::SubarrayOutOfRange { subarray, subarrays })
+        } else {
+            Ok(())
+        }
+    };
+    let check_row = |row: usize| {
+        if row >= rows {
+            Err(PimError::RowOutOfRange { row, rows })
+        } else {
+            Ok(())
+        }
+    };
     match req {
         PimRequest::WriteRow { subarray, row, bits } => {
+            check_subarray(subarray)?;
+            check_row(row)?;
+            if bits.len() != cols {
+                return Err(PimError::WidthMismatch { got: bits.len(), cols });
+            }
             sim.bank().subarray(subarray).write_row(row, bits);
-            PimResponse::Done { bank }
+            Ok(PimResponse::Done)
         }
         PimRequest::ReadRow { subarray, row } => {
+            check_subarray(subarray)?;
+            check_row(row)?;
             let bits = sim.bank().subarray(subarray).read_row(row).clone();
-            PimResponse::Row { bank, bits }
+            Ok(PimResponse::Row(bits))
         }
-        PimRequest::Shift { subarray, row, n, dir } => {
-            // already canonical: the single row occupies slot 0
-            let ops = vec![PimOp::ShiftBy { src: 0, dst: 0, n, dir }];
-            let prog = fetch_compiled(cache, sim, memo, ops);
-            sim.run_compiled(subarray, &prog, Some(&[row]));
-            PimResponse::Done { bank }
-        }
-        PimRequest::Op { subarray, op } => {
-            let (ops, binding) = canonicalize(std::slice::from_ref(&op));
-            let prog = fetch_compiled(cache, sim, memo, ops);
+        PimRequest::RunKernel { subarray, shape, ops, binding } => {
+            check_subarray(subarray)?;
+            for &row in &binding {
+                check_row(row)?;
+            }
+            let prog = fetch_compiled(cache, sim, memo, shape, &ops);
+            if binding.len() < prog.n_slots() {
+                return Err(PimError::Protocol("binding shorter than program slots"));
+            }
             sim.run_compiled(subarray, &prog, Some(&binding));
-            PimResponse::Done { bank }
+            delta.kernels += 1;
+            delta.macro_ops += prog.blocks().len() as u64;
+            delta.replays += 1;
+            Ok(PimResponse::Ran(*prog.census()))
         }
+        #[cfg(test)]
+        PimRequest::Crash => panic!("injected worker crash"),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::Rng;
+    use crate::coordinator::client::Kernel;
+    use crate::pim::PimTape;
+    use crate::util::{Rng, ShiftDir};
 
     fn cfg() -> DramConfig {
         DramConfig::tiny_test()
     }
 
-    #[test]
-    fn end_to_end_shift_through_system() {
-        let sys = PimSystem::start(&cfg(), 2, Placement::RoundRobin, 4);
-        let mut rng = Rng::new(1);
-        let row = BitRow::random(256, &mut rng);
-        // pin all three ops to the same bank so they hit the same state
-        sys.submit(
-            PimRequest::WriteRow { subarray: 0, row: 0, bits: row.clone() },
-            Some(1),
-        );
-        sys.submit(
-            PimRequest::Shift { subarray: 0, row: 0, n: 3, dir: ShiftDir::Right },
-            Some(1),
-        );
-        let rx = sys.submit(PimRequest::ReadRow { subarray: 0, row: 0 }, Some(1));
-        sys.flush();
-        match rx.recv().unwrap() {
-            PimResponse::Row { bank, bits } => {
-                assert_eq!(bank, 1);
-                assert_eq!(bits, row.shifted_by(ShiftDir::Right, 3, false));
-            }
-            other => panic!("unexpected response {other:?}"),
-        }
-        let report = sys.shutdown();
-        assert_eq!(report.total_ops, 3);
-        assert_eq!(report.total_aaps, 12); // 3-bit shift = 12 AAPs
+    fn shift(n: usize) -> Kernel {
+        Kernel::shift_by(n, ShiftDir::Right)
     }
 
     #[test]
-    fn round_robin_spreads_over_banks() {
-        let sys = PimSystem::start(&cfg(), 4, Placement::RoundRobin, 1);
+    fn end_to_end_shift_through_client() {
+        let sys = SystemBuilder::new(&cfg()).banks(2).max_batch(4).build();
+        let client = sys.client_on(1);
+        let row = client.alloc().unwrap();
+        let mut rng = Rng::new(1);
+        let bits = BitRow::random(256, &mut rng);
+        client.write(&row, bits.clone());
+        let receipt = client.run(&shift(3), std::slice::from_ref(&row)).unwrap();
+        assert_eq!(receipt.census.aap, 12, "3-bit shift = 12 AAPs");
+        let got = client.read_now(&row).unwrap();
+        assert_eq!(got, bits.shifted_by(ShiftDir::Right, 3, false));
+        let report = sys.shutdown();
+        assert_eq!(report.requests, 3);
+        assert_eq!(report.kernels, 1);
+        assert_eq!(report.total_aaps, 12);
+        assert!(report.is_clean(), "{:?}", report.worker_failures);
+    }
+
+    #[test]
+    fn round_robin_spreads_sessions_over_banks() {
+        let sys = SystemBuilder::new(&cfg()).banks(4).max_batch(1).build();
         for _ in 0..8 {
-            sys.submit(
-                PimRequest::Shift { subarray: 0, row: 0, n: 1, dir: ShiftDir::Left },
-                None,
-            );
+            let c = sys.client();
+            let row = c.alloc().unwrap();
+            c.run(&shift(1), std::slice::from_ref(&row)).unwrap();
         }
         let report = sys.shutdown();
-        assert_eq!(report.total_ops, 8);
+        assert_eq!(report.requests, 8);
         // each bank simulated 2 shifts worth of time, not 8
         assert_eq!(report.makespan_ps, 2 * 4 * 52_500);
     }
@@ -333,12 +571,12 @@ mod tests {
     fn bank_parallelism_scales_throughput() {
         // §5.1.4: K shifts on 1 bank vs spread over 4 banks
         let run = |banks: usize| -> f64 {
-            let sys = PimSystem::start(&cfg(), banks, Placement::RoundRobin, 8);
-            for _ in 0..64 {
-                sys.submit(
-                    PimRequest::Shift { subarray: 0, row: 0, n: 1, dir: ShiftDir::Right },
-                    None,
-                );
+            let sys = SystemBuilder::new(&cfg()).banks(banks).max_batch(8).build();
+            let clients: Vec<_> = (0..banks).map(|b| sys.client_on(b)).collect();
+            let rows: Vec<_> = clients.iter().map(|c| c.alloc().unwrap()).collect();
+            for i in 0..64 {
+                let b = i % banks;
+                clients[b].submit(&shift(1), std::slice::from_ref(&rows[b]));
             }
             sys.shutdown().throughput_mops
         };
@@ -349,51 +587,60 @@ mod tests {
     }
 
     #[test]
-    fn responses_optional() {
-        // fire-and-forget: dropping the receiver must not kill the worker
-        let sys = PimSystem::start(&cfg(), 1, Placement::Pinned, 2);
+    fn dropped_tickets_are_fire_and_forget() {
+        let sys = SystemBuilder::new(&cfg()).banks(1).max_batch(2).build();
+        let c = sys.client();
+        let row = c.alloc().unwrap();
         for _ in 0..10 {
-            drop(sys.submit(
-                PimRequest::Shift { subarray: 0, row: 0, n: 1, dir: ShiftDir::Right },
-                None,
-            ));
+            drop(c.submit(&shift(1), std::slice::from_ref(&row)));
         }
         let report = sys.shutdown();
-        assert_eq!(report.total_ops, 10);
+        assert_eq!(report.requests, 10);
+        assert!(report.is_clean());
     }
 
     #[test]
-    fn same_shape_requests_compile_once() {
-        // 32 identical shifts on one bank: one miss, the rest memo/cache
-        let sys = PimSystem::start(&cfg(), 1, Placement::Pinned, 8);
+    fn same_shape_kernels_compile_once() {
+        // 32 identical shift kernels on one bank: one compile, the rest
+        // served by the worker's shape memo without touching the cache
+        let sys = SystemBuilder::new(&cfg()).banks(1).max_batch(8).build();
+        let c = sys.client();
+        let row = c.alloc().unwrap();
+        let k = shift(2);
         for _ in 0..32 {
-            sys.submit(
-                PimRequest::Shift { subarray: 0, row: 0, n: 2, dir: ShiftDir::Right },
-                None,
-            );
+            c.submit(&k, std::slice::from_ref(&row));
         }
         let report = sys.shutdown();
-        assert_eq!(report.total_ops, 32);
+        assert_eq!(report.kernels, 32);
+        assert_eq!(report.replays, 32);
         assert_eq!(report.cache.misses, 1, "one shape, one compile");
         assert_eq!(report.cache.requests(), 32);
         assert!(report.cache_hit_rate > 0.96, "rate {}", report.cache_hit_rate);
         assert!(
             report.cache.batched >= 24,
-            "runs inside a batch reuse the memo: {:?}",
+            "same-shape kernels reuse the memo: {:?}",
             report.cache
         );
     }
 
+    // (the kernel-granular one-fetch/one-replay acceptance is asserted
+    // through the public API in tests/coordinator_integration.rs)
+
     #[test]
     fn shapes_shared_across_banks_and_rows() {
-        // the same shift shape lands on every bank and two different rows —
+        // the same shift shape lands on every bank and different rows —
         // still exactly one compile, because programs are position-relative
-        let sys = PimSystem::start(&cfg(), 4, Placement::RoundRobin, 4);
-        for i in 0..32 {
-            sys.submit(
-                PimRequest::Shift { subarray: 0, row: i % 2, n: 5, dir: ShiftDir::Left },
-                None,
-            );
+        let sys = SystemBuilder::new(&cfg()).banks(4).max_batch(4).build();
+        let k = shift(5);
+        // warm the shape synchronously so the 4 workers don't race the
+        // first compile (racers would each count a miss)
+        let warm = sys.client();
+        let warm_row = warm.alloc().unwrap();
+        warm.run(&k, std::slice::from_ref(&warm_row)).unwrap();
+        for i in 0..31 {
+            let c = sys.client();
+            let rows = c.alloc_rows(1 + (i % 2)).unwrap();
+            c.submit(&k, std::slice::from_ref(rows.last().unwrap()));
         }
         let report = sys.shutdown();
         assert_eq!(report.cache.misses, 1, "{:?}", report.cache);
@@ -403,22 +650,159 @@ mod tests {
 
     #[test]
     fn mixed_shapes_fill_the_cache_separately() {
-        let sys = PimSystem::start(&cfg(), 1, Placement::Pinned, 4);
+        let sys = SystemBuilder::new(&cfg()).banks(1).max_batch(4).build();
+        let c = sys.client();
+        let rows = c.alloc_rows(3).unwrap();
         for n in 1..=4usize {
             for _ in 0..4 {
-                sys.submit(
-                    PimRequest::Shift { subarray: 0, row: 0, n, dir: ShiftDir::Right },
-                    None,
-                );
+                c.submit(&shift(n), std::slice::from_ref(&rows[0]));
             }
         }
         // a row-op shape too: XOR of two rows into a third
-        sys.submit(
-            PimRequest::Op { subarray: 0, op: PimOp::Xor { a: 0, b: 1, dst: 2 } },
-            None,
-        );
+        c.submit(&Kernel::op(PimOp::Xor { a: 0, b: 1, dst: 2 }), &rows);
         let report = sys.shutdown();
         assert_eq!(report.cache.misses, 5, "{:?}", report.cache);
-        assert_eq!(report.total_ops, 17);
+        assert_eq!(report.kernels, 17);
+    }
+
+    #[test]
+    fn capacity_one_cache_still_serves_mixed_shapes() {
+        // satellite: a capacity-1 cache thrashes (every alternation
+        // recompiles) but stays bit-exact
+        let sys = SystemBuilder::new(&cfg()).banks(1).cache_capacity(1).max_batch(2).build();
+        let c = sys.client();
+        let row = c.alloc().unwrap();
+        let mut rng = Rng::new(7);
+        let bits = BitRow::random(256, &mut rng);
+        c.write(&row, bits.clone());
+        let mut want = bits;
+        for i in 0..8 {
+            let n = 1 + (i % 2);
+            c.run(&shift(n), std::slice::from_ref(&row)).unwrap();
+            want = want.shifted_by(ShiftDir::Right, n, false);
+        }
+        let got = c.read_now(&row).unwrap();
+        assert_eq!(got, want, "evictions must not corrupt results");
+        let report = sys.shutdown();
+        assert!(report.cache.evictions >= 6, "{:?}", report.cache);
+        assert!(report.cache.misses >= 7, "alternating shapes recompile: {:?}", report.cache);
+        assert_eq!(sys.program_cache().len(), 1, "bounded at one program");
+    }
+
+    #[test]
+    fn worker_panic_propagates_into_the_report() {
+        // satellite: a crashed bank can't report clean totals
+        let sys = SystemBuilder::new(&cfg()).banks(2).max_batch(1).build();
+        let rx = sys.submit_raw(1, PimRequest::Crash);
+        assert_eq!(
+            rx.recv().unwrap_or(Err(PimError::WorkerLost { bank: 1 })),
+            Err(PimError::WorkerLost { bank: 1 }),
+            "the crashing request's ticket fails instead of hanging"
+        );
+        // the other bank still serves
+        let c = sys.client_on(0);
+        let row = c.alloc().unwrap();
+        c.run(&shift(1), std::slice::from_ref(&row)).unwrap();
+        let report = sys.shutdown();
+        assert!(!report.is_clean());
+        assert_eq!(report.worker_failures.len(), 1);
+        assert!(
+            report.worker_failures[0].contains("injected worker crash"),
+            "payload surfaces: {:?}",
+            report.worker_failures
+        );
+    }
+
+    #[test]
+    fn requests_to_a_dead_worker_fail_their_tickets() {
+        let sys = SystemBuilder::new(&cfg()).banks(1).max_batch(1).build();
+        let _ = sys.submit_raw(0, PimRequest::Crash).recv();
+        let c = sys.client();
+        let row = c.alloc().unwrap();
+        let err = c.run(&shift(1), std::slice::from_ref(&row)).unwrap_err();
+        assert_eq!(err, PimError::WorkerLost { bank: 0 });
+    }
+
+    #[test]
+    fn invalid_wire_requests_fail_softly() {
+        let sys = SystemBuilder::new(&cfg()).banks(1).max_batch(1).build();
+        // tiny_test geometry: 2 subarrays, 32 rows
+        let r1 = sys.submit_raw(0, PimRequest::ReadRow { subarray: 0, row: 99 });
+        assert_eq!(r1.recv().unwrap(), Err(PimError::RowOutOfRange { row: 99, rows: 32 }));
+        let r2 = sys.submit_raw(0, PimRequest::ReadRow { subarray: 5, row: 0 });
+        assert_eq!(
+            r2.recv().unwrap(),
+            Err(PimError::SubarrayOutOfRange { subarray: 5, subarrays: 2 })
+        );
+        // the worker survived both
+        let c = sys.client();
+        let row = c.alloc().unwrap();
+        assert!(c.run(&shift(1), std::slice::from_ref(&row)).is_ok());
+        assert!(sys.shutdown().is_clean());
+    }
+
+    #[test]
+    fn alloc_exhaustion_is_an_error_not_a_panic() {
+        let sys = SystemBuilder::new(&cfg()).banks(1).build();
+        let c = sys.client();
+        // tiny_test: 32 rows per subarray, session pinned to one subarray
+        let rows = c.alloc_rows(32).unwrap();
+        assert_eq!(rows.len(), 32);
+        let err = c.alloc().unwrap_err();
+        assert!(matches!(err, PimError::AllocExhausted { .. }));
+        // freeing returns capacity
+        assert!(c.free(rows.into_iter().next_back().unwrap()));
+        assert!(c.alloc().is_ok());
+    }
+
+    #[test]
+    fn foreign_handles_are_rejected_client_side() {
+        let sys = SystemBuilder::new(&cfg()).banks(2).build();
+        let c0 = sys.client_on(0);
+        let c1 = sys.client_on(1);
+        let theirs = c1.alloc().unwrap();
+        let err = c0.run(&shift(1), std::slice::from_ref(&theirs)).unwrap_err();
+        assert!(matches!(err, PimError::ForeignHandle { .. }));
+        let err = c0.read(&theirs).wait().unwrap_err();
+        assert!(matches!(err, PimError::ForeignHandle { .. }));
+    }
+
+    #[test]
+    fn least_loaded_places_sessions_by_queued_kernel_cost() {
+        // satellite: LeastLoaded under uneven kernel sizes — one heavy
+        // session must not attract followers while its work is queued
+        let heavy_kernel = Kernel::record(8, |t| {
+            for _ in 0..64 {
+                t.op(PimOp::Xor { a: 0, b: 1, dst: 2 });
+            }
+        });
+        let sys = SystemBuilder::new(&cfg())
+            .banks(3)
+            .placement(Placement::LeastLoaded)
+            .max_batch(1024) // keep work queued so load is visible
+            .build();
+        let heavy = sys.client();
+        let hrows = heavy.alloc_rows(3).unwrap();
+        heavy.submit(&heavy_kernel, &hrows);
+        let light_a = sys.client();
+        assert_ne!(light_a.bank(), heavy.bank(), "the 64-op kernel's cost repels placement");
+        let a_row = light_a.alloc().unwrap();
+        for _ in 0..5 {
+            light_a.submit(&shift(1), std::slice::from_ref(&a_row));
+        }
+        let light_b = sys.client();
+        assert_ne!(light_b.bank(), heavy.bank());
+        assert_ne!(light_b.bank(), light_a.bank(), "empty bank wins over 5 queued shifts");
+        let b_row = light_b.alloc().unwrap();
+        for _ in 0..10 {
+            light_b.submit(&shift(1), std::slice::from_ref(&b_row));
+        }
+        // 5 shifts < 10 shifts < the 64-op kernel: the next session joins
+        // light_a's bank
+        assert_eq!(sys.client().bank(), light_a.bank());
+        sys.flush();
+        let report = sys.shutdown();
+        assert_eq!(report.kernels, 16);
+        assert!(report.is_clean());
     }
 }

@@ -30,10 +30,15 @@
 //!   DRC-style checks, and area-overhead accounting (Table 5, Fig. 4).
 //! * [`baselines`] — SIMDRAM / DRISA / Ambit / CPU-data-movement cost
 //!   models (§5.1.5, §5.1.6).
-//! * [`coordinator`] — bank-parallel request router/batcher/scheduler and
-//!   the async serving loop (§5.1.4).
+//! * [`coordinator`] — the handle-based serving layer (§5.1.4): client
+//!   sessions allocate opaque, system-placed row handles, submit whole
+//!   kernels, and receive typed tickets that resolve to
+//!   `Result<T, PimError>`; underneath, a bank-parallel router (with
+//!   per-bank row slabs and cost-weighted load), per-bank batchers, and
+//!   one worker per bank replay compiled programs kernel-at-a-time.
 //! * [`apps`] — application kernels compiled to PIM programs: adders,
-//!   shift-and-add multiplication, GF(2⁸), AES steps, Reed-Solomon.
+//!   shift-and-add multiplication, GF(2⁸), AES steps, Reed-Solomon —
+//!   each a thin client of the same serving API (`apps::ElementCtx`).
 //! * [`runtime`] — the PJRT bridge that loads and executes
 //!   `artifacts/*.hlo.txt`; Python never runs on the request path. In the
 //!   offline build it is an API-compatible stub and every caller falls

@@ -13,7 +13,7 @@
 use shiftdram::circuit::montecarlo::{Backend, MonteCarlo};
 use shiftdram::circuit::params::TechNode;
 use shiftdram::config::{DramConfig, McConfig};
-use shiftdram::coordinator::{Placement, PimRequest, PimSystem};
+use shiftdram::coordinator::{Kernel, SystemBuilder};
 use shiftdram::report;
 use shiftdram::runtime::Runtime;
 use shiftdram::sim::run_shift_workload;
@@ -83,32 +83,40 @@ fn main() {
             let banks = opt_usize(&args, "--banks", 8);
             let ops = opt_usize(&args, "--ops", 1024);
             let batch = opt_usize(&args, "--batch", 16);
-            let sys = PimSystem::start(&cfg, banks, Placement::RoundRobin, batch);
-            for _ in 0..ops {
-                sys.submit(
-                    PimRequest::Shift { subarray: 0, row: 0, n: 1, dir: ShiftDir::Right },
-                    None,
-                );
+            let sys = SystemBuilder::new(&cfg).banks(banks).max_batch(batch).build();
+            // one session per bank; each allocs one system-placed row and
+            // submits shift kernels against its handle
+            let clients: Vec<_> = (0..banks).map(|b| sys.client_on(b)).collect();
+            let rows: Vec<_> = clients.iter().map(|c| c.alloc().expect("row")).collect();
+            let shift = Kernel::shift_by(1, ShiftDir::Right);
+            for i in 0..ops {
+                let b = i % banks;
+                clients[b].submit(&shift, std::slice::from_ref(&rows[b]));
             }
             let r = sys.shutdown();
             println!(
-                "{} banks, {} shifts: makespan {:.3} us, {:.2} MOps/s aggregate, \
-                 {:.1} nJ total ({} AAPs)",
+                "{} banks, {} shift kernels: makespan {:.3} us, {:.2} MOps/s aggregate, \
+                 {:.1} nJ total ({} AAPs, {} replays)",
                 r.banks,
-                r.total_ops,
+                r.kernels,
                 r.makespan_ps as f64 / 1e6,
                 r.throughput_mops,
                 r.total_energy_pj / 1e3,
-                r.total_aaps
+                r.total_aaps,
+                r.replays
             );
             println!(
-                "program cache: {:.1}% hit rate ({} compiles, {} batched), \
-                 {:.0} ns compile amortized per request",
+                "program cache: {:.1}% hit rate ({} compiles, {} memo-batched), \
+                 {:.0} ns compile amortized per kernel",
                 100.0 * r.cache_hit_rate,
                 r.cache.misses,
                 r.cache.batched,
                 r.amortized_compile_ns
             );
+            if !r.is_clean() {
+                eprintln!("worker failures: {:?}", r.worker_failures);
+                std::process::exit(1);
+            }
         }
         Some("demo") => demo(args.get(1).map(String::as_str).unwrap_or("gf")),
         _ => {
@@ -164,7 +172,7 @@ fn demo(which: &str) {
                 ctx.tras,
                 a[0],
                 b[0],
-                ctx.unpack(ctx.row(2))[0]
+                ctx.unpack(&ctx.row(2))[0]
             );
         }
         "adder" => {
@@ -185,7 +193,7 @@ fn demo(which: &str) {
                     ctx.aaps,
                     a[0],
                     b[0],
-                    ctx.unpack(ctx.row(2))[0]
+                    ctx.unpack(&ctx.row(2))[0]
                 );
             }
         }
@@ -204,7 +212,7 @@ fn demo(which: &str) {
                 ctx.aaps,
                 a[0],
                 b[0],
-                ctx.unpack(ctx.row(2))[0]
+                ctx.unpack(&ctx.row(2))[0]
             );
         }
         "rs" => {

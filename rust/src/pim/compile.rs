@@ -320,10 +320,15 @@ pub fn canonicalize(ops: &[PimOp]) -> (Vec<PimOp>, Vec<usize>) {
 /// What a cache entry compiles: either a canonical op sequence, or a named
 /// application kernel identified by its shape parameters (the builder runs
 /// only on a miss).
+///
+/// The op sequence is held behind an `Arc` so that shapes travel the
+/// coordinator's wire format, worker memos, and cache keys without deep
+/// copies: cloning a `ProgramShape` is a pointer bump, and the op vector
+/// is deep-cloned at most once per cache miss (inside the build closure).
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub enum ProgramShape {
     /// canonical (slot-relative) macro-op sequence
-    Ops(Vec<PimOp>),
+    Ops(Arc<Vec<PimOp>>),
     /// named app kernel + shape parameters (width, cols, rows, constants…)
     Kernel { name: &'static str, params: Vec<u64> },
 }
@@ -419,12 +424,16 @@ impl ProgramCache {
         GLOBAL.get_or_init(|| Arc::new(ProgramCache::new(512))).clone()
     }
 
-    /// Fetch or compile the program for `shape` under `cfg`.
+    /// Fetch or compile the program for `shape` under `cfg`. The build
+    /// closure runs only on a miss and hands back the (shared) op vector
+    /// to lower — returning an `Arc` lets callers that already hold the
+    /// ops shared (the coordinator wire format, `ProgramShape::Ops` keys)
+    /// avoid any deep copy at all.
     pub fn get_or_compile(
         &self,
         shape: ProgramShape,
         cfg: &DramConfig,
-        build: impl FnOnce() -> Vec<PimOp>,
+        build: impl FnOnce() -> Arc<Vec<PimOp>>,
     ) -> Arc<CompiledProgram> {
         self.get_or_compile_keyed(shape, cfg, cfg.fingerprint(), build)
     }
@@ -435,7 +444,7 @@ impl ProgramCache {
         shape: ProgramShape,
         cfg: &DramConfig,
         cfg_fp: u64,
-        build: impl FnOnce() -> Vec<PimOp>,
+        build: impl FnOnce() -> Arc<Vec<PimOp>>,
     ) -> Arc<CompiledProgram> {
         let key = ProgramKey { shape, cfg_fingerprint: cfg_fp };
         {
@@ -454,7 +463,8 @@ impl ProgramCache {
         // both compile; the loser adopts the winner's entry below.
         let t0 = Instant::now();
         let ops = build();
-        let prog = Arc::new(CompiledProgram::compile_with_fingerprint(&ops, cfg, cfg_fp));
+        let prog =
+            Arc::new(CompiledProgram::compile_with_fingerprint(ops.as_slice(), cfg, cfg_fp));
         self.compile_ns
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         self.misses.fetch_add(1, Ordering::Relaxed);
@@ -491,6 +501,7 @@ impl ProgramCache {
         cfg: &DramConfig,
     ) -> (Arc<CompiledProgram>, Vec<usize>) {
         let (canonical, binding) = canonicalize(ops);
+        let canonical = Arc::new(canonical);
         let shape = ProgramShape::Ops(canonical.clone());
         let prog = self.get_or_compile(shape, cfg, move || canonical);
         (prog, binding)
@@ -674,7 +685,7 @@ mod tests {
     fn kernel_shapes_key_on_name_and_params() {
         let cache = ProgramCache::new(8);
         let c = cfg();
-        let build = || vec![PimOp::Copy { src: 0, dst: 1 }];
+        let build = || Arc::new(vec![PimOp::Copy { src: 0, dst: 1 }]);
         let k1 = ProgramShape::Kernel { name: "k", params: vec![8, 256] };
         let k2 = ProgramShape::Kernel { name: "k", params: vec![16, 256] };
         let a = cache.get_or_compile(k1.clone(), &c, build);

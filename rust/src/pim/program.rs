@@ -1,5 +1,6 @@
 //! PIM programs: ordered macro-op lists with lowering, cost accounting,
-//! and a row allocator for temporaries.
+//! the [`PimTape`] recording abstraction kernel bodies are written
+//! against, and a row allocator for temporaries.
 //!
 //! Application kernels ([`crate::apps`]) build programs against named
 //! virtual rows; [`RowAlloc`] maps them onto the subarray's data rows and
@@ -10,6 +11,47 @@ use crate::config::DramConfig;
 use crate::dram::address::Command;
 use crate::pim::compile::{CommandCensus, CompiledProgram};
 use crate::pim::isa::PimOp;
+
+/// A sink of macro-ops over W-bit elements: kernel bodies are generic over
+/// this, so one body can execute eagerly (`apps::ElementCtx`), record into
+/// a client-submittable [`crate::coordinator::Kernel`], or record into a
+/// cacheable [`ProgramSketch`] shape.
+pub trait PimTape {
+    /// Element width the kernel is being built for.
+    fn width(&self) -> usize;
+    /// Accept one macro-op.
+    fn op(&mut self, op: PimOp);
+}
+
+/// Recording tape: collects the macro-op schedule of one kernel shape.
+pub struct ProgramSketch {
+    width: usize,
+    ops: Vec<PimOp>,
+}
+
+impl ProgramSketch {
+    pub fn new(width: usize) -> Self {
+        ProgramSketch { width, ops: Vec::new() }
+    }
+
+    pub fn ops(&self) -> &[PimOp] {
+        &self.ops
+    }
+
+    pub fn into_ops(self) -> Vec<PimOp> {
+        self.ops
+    }
+}
+
+impl PimTape for ProgramSketch {
+    fn width(&self) -> usize {
+        self.width
+    }
+
+    fn op(&mut self, op: PimOp) {
+        self.ops.push(op);
+    }
+}
 
 /// An ordered sequence of macro-ops plus its lowered command stream.
 #[derive(Clone, Debug, Default)]

@@ -1,5 +1,7 @@
-//! Integration: application kernels end-to-end through the BankSim engine
-//! (functional + timing + energy coupled), and cross-app properties.
+//! Integration: application kernels end-to-end through the serving
+//! client (one execution path for apps and external callers), and
+//! cross-app properties — including the redesign's bit-exactness anchor:
+//! the client path against the pre-redesign per-command executor.
 
 use shiftdram::apps::adder::{install_masks, kogge_stone_add, ripple_add};
 use shiftdram::apps::elements::ElementCtx;
@@ -7,8 +9,10 @@ use shiftdram::apps::gf::{gf_mul, gf_mul_ref, install_gf_masks, xtime};
 use shiftdram::apps::multiplier::{install_mul_masks, shift_and_add_mul};
 use shiftdram::apps::reed_solomon::{rs_encode_ref, RsEncoder};
 use shiftdram::config::DramConfig;
+use shiftdram::dram::subarray::Subarray;
+use shiftdram::pim::{executor, PimOp};
 use shiftdram::util::proptest::{check, prop_assert_eq};
-use shiftdram::util::Rng;
+use shiftdram::util::{BitRow, Rng, ShiftDir};
 
 #[test]
 fn prop_adders_agree_with_each_other_and_host() {
@@ -31,8 +35,8 @@ fn prop_adders_agree_with_each_other_and_host() {
         kogge_stone_add(&mut ks, 0, 1, 2);
         let want: Vec<u64> =
             a.iter().zip(&b).map(|(x, y)| x.wrapping_add(*y) & m).collect();
-        prop_assert_eq(rc.unpack(rc.row(2)), want.clone(), "ripple vs host")?;
-        prop_assert_eq(ks.unpack(ks.row(2)), want, "kogge-stone vs host")
+        prop_assert_eq(rc.unpack(&rc.row(2)), want.clone(), "ripple vs host")?;
+        prop_assert_eq(ks.unpack(&ks.row(2)), want, "kogge-stone vs host")
     });
 }
 
@@ -48,9 +52,9 @@ fn prop_gf_field_axioms() {
         ctx.set_row(0, ctx.pack(&a));
         ctx.set_row(1, ctx.pack(&b));
         gf_mul(&mut ctx, 0, 1, 2);
-        let ab = ctx.unpack(ctx.row(2));
+        let ab = ctx.unpack(&ctx.row(2));
         gf_mul(&mut ctx, 1, 0, 3);
-        let ba = ctx.unpack(ctx.row(3));
+        let ba = ctx.unpack(&ctx.row(3));
         prop_assert_eq(ab.clone(), ba, "commutativity")?;
         let want: Vec<u64> = a
             .iter()
@@ -72,7 +76,7 @@ fn gf_xtime_eight_times_is_identity_times_x8() {
     for _ in 0..8 {
         xtime(&mut ctx, 0, 0);
     }
-    let got = ctx.unpack(ctx.row(0));
+    let got = ctx.unpack(&ctx.row(0));
     let want: Vec<u64> = vals
         .iter()
         .map(|&v| {
@@ -107,7 +111,7 @@ fn multiplier_distributes_over_addition() {
     shift_and_add_mul(&mut ctx, 0, 2, 46);
     shift_and_add_mul(&mut ctx, 1, 2, 47);
     kogge_stone_add(&mut ctx, 46, 47, 51);
-    assert_eq!(ctx.unpack(ctx.row(50)), ctx.unpack(ctx.row(51)));
+    assert_eq!(ctx.unpack(&ctx.row(50)), ctx.unpack(&ctx.row(51)));
 }
 
 #[test]
@@ -129,6 +133,52 @@ fn rs_parity_linearity_in_dram() {
 }
 
 #[test]
+fn prop_client_path_bit_exact_against_per_command_executor() {
+    // the redesign's anchor: ElementCtx now executes every macro-op
+    // through the serving client (compiled-kernel replay); the
+    // pre-redesign reference is the per-command executor applied to a raw
+    // subarray. Random op sequences over random rows must agree on every
+    // data row.
+    check(24, |rng| {
+        let rows = 8;
+        let cols = 2 * (rng.below(200) + 8);
+        let mut reference = Subarray::new(rows, cols);
+        let mut ctx = ElementCtx::new(rows, cols, 2);
+        for r in 0..3 {
+            let bits = BitRow::random(cols, rng);
+            reference.write_row(r, bits.clone());
+            ctx.set_row(r, bits);
+        }
+        for _ in 0..rng.below(12) + 3 {
+            let pick = |rng: &mut Rng| rng.below(rows);
+            let op = match rng.below(6) {
+                0 => PimOp::Copy { src: pick(rng), dst: pick(rng) },
+                1 => PimOp::And { a: pick(rng), b: pick(rng), dst: pick(rng) },
+                2 => PimOp::Or { a: pick(rng), b: pick(rng), dst: pick(rng) },
+                3 => PimOp::Xor { a: pick(rng), b: pick(rng), dst: pick(rng) },
+                4 => PimOp::Not { src: pick(rng), dst: pick(rng) },
+                _ => PimOp::ShiftBy {
+                    src: pick(rng),
+                    dst: pick(rng),
+                    n: rng.below(5) + 1,
+                    dir: if rng.bool() { ShiftDir::Right } else { ShiftDir::Left },
+                },
+            };
+            executor::run(&mut reference, &op.lower());
+            ctx.op(op);
+        }
+        for r in 0..rows {
+            prop_assert_eq(
+                ctx.row(r),
+                reference.read_row(r).clone(),
+                &format!("data row {r}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn full_row_scale_gf_through_engine_accounting() {
     // run xtime on a full 8 KB row and convert the AAP census into the
     // DDR3 timing/energy budget — the end-to-end cost statement
@@ -140,7 +190,7 @@ fn full_row_scale_gf_through_engine_accounting() {
     let a: Vec<u64> = (0..n).map(|_| rng.below(256) as u64).collect();
     ctx.set_row(0, ctx.pack(&a));
     xtime(&mut ctx, 0, 1);
-    let got = ctx.unpack(ctx.row(1));
+    let got = ctx.unpack(&ctx.row(1));
     for j in 0..n {
         assert_eq!(got[j], gf_mul_ref(a[j] as u8, 2) as u64);
     }

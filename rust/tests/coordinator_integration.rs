@@ -1,9 +1,10 @@
-//! Integration + properties of the coordinator: routing fairness, batch
-//! integrity, bank-parallel scaling, state isolation, and failure modes.
+//! Integration + properties of the coordinator's handle-based client API:
+//! session placement, kernel-granular submission, bank-parallel scaling,
+//! state isolation, typed-ticket failure modes, and the builder knobs.
 
 use shiftdram::config::DramConfig;
-use shiftdram::coordinator::{Placement, PimRequest, PimResponse, PimSystem};
-use shiftdram::pim::PimOp;
+use shiftdram::coordinator::{Kernel, Placement, PimError, SystemBuilder};
+use shiftdram::pim::{PimOp, PimTape};
 use shiftdram::util::proptest::{check, prop_assert, prop_assert_eq};
 use shiftdram::util::{BitRow, Rng, ShiftDir};
 
@@ -11,63 +12,57 @@ fn cfg() -> DramConfig {
     DramConfig::tiny_test()
 }
 
+fn shift(n: usize) -> Kernel {
+    Kernel::shift_by(n, ShiftDir::Right)
+}
+
 #[test]
-fn prop_routed_work_is_bit_exact_per_bank() {
+fn prop_session_work_is_bit_exact_per_bank() {
     check(16, |rng| {
         let banks = rng.below(4) + 1;
-        let sys = PimSystem::start(&cfg(), banks, Placement::RoundRobin, rng.below(7) + 1);
-        let mut expected = Vec::new();
+        let sys = SystemBuilder::new(&cfg())
+            .banks(banks)
+            .max_batch(rng.below(7) + 1)
+            .build();
+        let mut sessions = Vec::new();
         for bank in 0..banks {
+            let client = sys.client_on(bank);
+            let handle = client.alloc().map_err(|e| e.to_string())?;
             let row = BitRow::random(256, rng);
             let n = rng.below(6) + 1;
-            sys.submit(
-                PimRequest::WriteRow { subarray: 0, row: 0, bits: row.clone() },
-                Some(bank),
-            );
-            sys.submit(
-                PimRequest::Shift { subarray: 0, row: 0, n, dir: ShiftDir::Right },
-                Some(bank),
-            );
-            expected.push((bank, row.shifted_by(ShiftDir::Right, n, false)));
+            client.write(&handle, row.clone());
+            client.submit(&shift(n), std::slice::from_ref(&handle));
+            sessions.push((client, handle, row.shifted_by(ShiftDir::Right, n, false)));
         }
-        let mut rxs = Vec::new();
-        for bank in 0..banks {
-            rxs.push(sys.submit(PimRequest::ReadRow { subarray: 0, row: 0 }, Some(bank)));
+        for (bank, (client, handle, want)) in sessions.iter().enumerate() {
+            let got = client.read_now(handle).map_err(|e| e.to_string())?;
+            prop_assert_eq(got, want.clone(), &format!("bank {bank} state"))?;
         }
-        sys.flush();
-        for (rx, (bank, want)) in rxs.into_iter().zip(expected) {
-            match rx.recv().unwrap() {
-                PimResponse::Row { bank: b, bits } => {
-                    prop_assert_eq(b, bank, "response bank")?;
-                    prop_assert_eq(bits, want, &format!("bank {bank} state"))?;
-                }
-                other => return Err(format!("unexpected {other:?}")),
-            }
-        }
-        sys.shutdown();
-        Ok(())
+        prop_assert(sys.shutdown().is_clean(), "workers exited clean")
     });
 }
 
 #[test]
-fn prop_round_robin_is_fair() {
+fn prop_round_robin_place_sessions_fairly() {
     check(16, |rng| {
         let banks = rng.below(6) + 2;
-        let per = rng.below(20) + 4;
-        let sys = PimSystem::start(&cfg(), banks, Placement::RoundRobin, 4);
-        for _ in 0..banks * per {
-            sys.submit(
-                PimRequest::Shift { subarray: 0, row: 0, n: 1, dir: ShiftDir::Left },
-                None,
-            );
+        let per = (rng.below(20) + 4) as u64;
+        let sys = SystemBuilder::new(&cfg()).banks(banks).max_batch(4).build();
+        // `banks` sessions opened round-robin: one lands on each bank
+        for _ in 0..banks {
+            let client = sys.client();
+            let handle = client.alloc().map_err(|e| e.to_string())?;
+            for _ in 0..per {
+                client.submit(&shift(1), std::slice::from_ref(&handle));
+            }
         }
         sys.flush();
-        let m = sys.metrics().clone();
-        sys.shutdown();
+        let report = sys.shutdown();
+        prop_assert_eq(report.kernels, banks as u64 * per, "all kernels served")?;
         for b in 0..banks {
             prop_assert(
-                m.ops(b) == per as u64,
-                format!("bank {b} got {} of {per}", m.ops(b)),
+                sys.metrics().requests(b) == per,
+                format!("bank {b} got {} of {per}", sys.metrics().requests(b)),
             )?;
         }
         Ok(())
@@ -78,12 +73,13 @@ fn prop_round_robin_is_fair() {
 fn throughput_scales_linearly_to_32_banks() {
     let cfg = DramConfig::ddr3_1333_4gb();
     let run = |banks: usize| {
-        let sys = PimSystem::start(&cfg, banks, Placement::RoundRobin, 16);
-        for _ in 0..1024 {
-            sys.submit(
-                PimRequest::Shift { subarray: 0, row: 0, n: 1, dir: ShiftDir::Right },
-                None,
-            );
+        let sys = SystemBuilder::new(&cfg).banks(banks).max_batch(16).build();
+        let clients: Vec<_> = (0..banks).map(|b| sys.client_on(b)).collect();
+        let rows: Vec<_> = clients.iter().map(|c| c.alloc().expect("row")).collect();
+        let k = shift(1);
+        for i in 0..1024 {
+            let b = i % banks;
+            clients[b].submit(&k, std::slice::from_ref(&rows[b]));
         }
         sys.shutdown().throughput_mops
     };
@@ -97,39 +93,65 @@ fn throughput_scales_linearly_to_32_banks() {
 }
 
 #[test]
-fn mixed_op_stream_through_coordinator() {
-    let sys = PimSystem::start(&cfg(), 2, Placement::RoundRobin, 3);
+fn multi_row_kernel_through_one_submission() {
+    let sys = SystemBuilder::new(&cfg()).banks(2).max_batch(3).build();
+    let client = sys.client();
+    let rows = client.alloc_rows(4).expect("rows");
     let mut rng = Rng::new(9);
     let a = BitRow::random(256, &mut rng);
     let b = BitRow::random(256, &mut rng);
-    sys.submit(PimRequest::WriteRow { subarray: 1, row: 0, bits: a.clone() }, Some(0));
-    sys.submit(PimRequest::WriteRow { subarray: 1, row: 1, bits: b.clone() }, Some(0));
-    sys.submit(
-        PimRequest::Op { subarray: 1, op: PimOp::Xor { a: 0, b: 1, dst: 2 } },
-        Some(0),
-    );
-    sys.submit(
-        PimRequest::Op { subarray: 1, op: PimOp::ShiftRight { src: 2, dst: 3 } },
-        Some(0),
-    );
-    let rx = sys.submit(PimRequest::ReadRow { subarray: 1, row: 3 }, Some(0));
-    sys.flush();
-    let PimResponse::Row { bits, .. } = rx.recv().unwrap() else {
-        panic!("expected row");
-    };
-    assert_eq!(bits, a.xor(&b).shifted(ShiftDir::Right, false));
-    sys.shutdown();
+    client.write(&rows[0], a.clone());
+    client.write(&rows[1], b.clone());
+    // XOR then shift — two macro-ops, one kernel, one replay
+    let k = Kernel::record(8, |t| {
+        t.op(PimOp::Xor { a: 0, b: 1, dst: 2 });
+        t.op(PimOp::ShiftRight { src: 2, dst: 3 });
+    });
+    let receipt = client.run(&k, &rows).expect("kernel");
+    assert_eq!(receipt.census.tra, 3, "the XOR lowering's three TRAs");
+    assert_eq!(receipt.census.dra, 2, "the XOR lowering's two DCC loads");
+    let got = client.read_now(&rows[3]).expect("read");
+    assert_eq!(got, a.xor(&b).shifted(ShiftDir::Right, false));
+    let report = sys.shutdown();
+    assert_eq!(report.kernels, 1);
+    assert_eq!(report.replays, 1, "two ops, one replay");
+    assert_eq!(report.cache.requests(), 1, "two ops, one cache fetch");
+    assert!(report.is_clean());
+}
+
+#[test]
+fn kernel_granular_submission_is_one_fetch_one_replay() {
+    // acceptance: K ops submitted through the client = exactly one cache
+    // fetch and one run_compiled call, asserted by the cache counters
+    const K: usize = 10;
+    let sys = SystemBuilder::new(&cfg()).banks(1).build();
+    let client = sys.client();
+    let rows = client.alloc_rows(2).expect("rows");
+    let k = Kernel::record(8, |t| {
+        for i in 0..K {
+            let dir = if i % 2 == 0 { ShiftDir::Right } else { ShiftDir::Left };
+            t.op(PimOp::ShiftBy { src: 0, dst: 1, n: 1 + (i % 3), dir });
+        }
+    });
+    assert_eq!(k.n_ops(), K);
+    client.run(&k, &rows).expect("kernel");
+    let report = sys.shutdown();
+    assert_eq!(report.cache.requests(), 1, "one fetch: {:?}", report.cache);
+    assert_eq!(report.cache.misses, 1);
+    assert_eq!(report.replays, 1, "one run_compiled call");
+    assert_eq!(report.total_ops, K as u64);
 }
 
 #[test]
 fn energy_accounting_aggregates_across_banks() {
     let cfg = DramConfig::ddr3_1333_4gb();
-    let sys = PimSystem::start(&cfg, 4, Placement::RoundRobin, 8);
-    for _ in 0..64 {
-        sys.submit(
-            PimRequest::Shift { subarray: 0, row: 0, n: 1, dir: ShiftDir::Right },
-            None,
-        );
+    let sys = SystemBuilder::new(&cfg).banks(4).max_batch(8).build();
+    let clients: Vec<_> = (0..4).map(|b| sys.client_on(b)).collect();
+    let rows: Vec<_> = clients.iter().map(|c| c.alloc().expect("row")).collect();
+    let k = shift(1);
+    for i in 0..64 {
+        let b = i % 4;
+        clients[b].submit(&k, std::slice::from_ref(&rows[b]));
     }
     let r = sys.shutdown();
     assert_eq!(r.total_aaps, 64 * 4);
@@ -139,9 +161,101 @@ fn energy_accounting_aggregates_across_banks() {
 }
 
 #[test]
+fn least_loaded_placement_balances_uneven_kernel_sizes() {
+    // the heavy session's queued macro-ops repel new sessions even though
+    // it issued fewer *requests* than the light ones
+    let sys = SystemBuilder::new(&cfg())
+        .banks(2)
+        .placement(Placement::LeastLoaded)
+        .max_batch(256)
+        .build();
+    let heavy = sys.client();
+    let hrow = heavy.alloc().expect("row");
+    // four requests, but each shift-by-10 kernel weighs 40 lowered
+    // commands of queued cost — request count alone would say "4"
+    for _ in 0..4 {
+        heavy.submit(&shift(10), std::slice::from_ref(&hrow));
+    }
+    let light = sys.client();
+    assert_ne!(light.bank(), heavy.bank(), "the queued shift-by-10s repel the session");
+    let lrow = light.alloc().expect("row");
+    for _ in 0..8 {
+        light.submit(&shift(1), std::slice::from_ref(&lrow));
+    }
+    // 8 shift-by-1s (32 commands) < 4 shift-by-10s (160 commands): the
+    // next session still avoids the heavy bank even though it has FEWER
+    // queued requests
+    assert_eq!(sys.client().bank(), light.bank());
+    sys.flush();
+    let report = sys.shutdown();
+    assert_eq!(report.kernels, 12);
+    assert!(report.is_clean());
+}
+
+#[test]
+fn cache_capacity_knob_bounds_the_resident_set() {
+    let sys = SystemBuilder::new(&cfg()).banks(1).cache_capacity(2).max_batch(1).build();
+    let client = sys.client();
+    let row = client.alloc().expect("row");
+    let mut rng = Rng::new(3);
+    let bits = BitRow::random(256, &mut rng);
+    client.write_now(&row, bits.clone()).expect("write");
+    let mut want = bits;
+    // cycle three shapes through a two-entry cache; results stay bit-exact
+    for i in 0..9 {
+        let n = 1 + (i % 3);
+        client.run(&shift(n), std::slice::from_ref(&row)).expect("kernel");
+        want = want.shifted_by(ShiftDir::Right, n, false);
+    }
+    assert_eq!(client.read_now(&row).expect("read"), want);
+    assert!(sys.program_cache().len() <= 2, "capacity bound respected");
+    let report = sys.shutdown();
+    assert!(report.cache.evictions > 0, "{:?}", report.cache);
+    assert!(report.is_clean());
+}
+
+#[test]
+fn bad_submissions_fail_their_tickets_not_the_worker() {
+    let sys = SystemBuilder::new(&cfg()).banks(2).max_batch(1).build();
+    let client = sys.client_on(0);
+    let row = client.alloc().expect("row");
+    // kernel touching 3 rows, handle table of 1
+    let k3 = Kernel::record(8, |t| t.op(PimOp::Xor { a: 0, b: 1, dst: 2 }));
+    let err = client.run(&k3, std::slice::from_ref(&row)).unwrap_err();
+    assert!(matches!(err, PimError::HandleTableTooShort { needs: 3, got: 1 }));
+    // foreign handle: a row placed on the other bank
+    let other = sys.client_on(1);
+    let foreign = other.alloc().expect("row");
+    let err = client.read(&foreign).wait().unwrap_err();
+    assert!(matches!(err, PimError::ForeignHandle { .. }));
+    // the session still works after both failures
+    client.run(&shift(1), std::slice::from_ref(&row)).expect("healthy worker");
+    assert!(sys.shutdown().is_clean());
+}
+
+#[test]
 fn shutdown_with_empty_queues_is_clean() {
-    let sys = PimSystem::start(&cfg(), 3, Placement::LeastLoaded, 4);
+    let sys = SystemBuilder::new(&cfg())
+        .banks(3)
+        .placement(Placement::LeastLoaded)
+        .build();
     let r = sys.shutdown();
-    assert_eq!(r.total_ops, 0);
+    assert_eq!(r.requests, 0);
     assert_eq!(r.makespan_ps, 0);
+    assert!(r.is_clean());
+}
+
+#[test]
+fn handles_do_not_leak_rows_across_free() {
+    let sys = SystemBuilder::new(&cfg()).banks(1).build();
+    let client = sys.client();
+    // tiny_test: 32 rows per subarray — exhaust, free, re-alloc
+    let rows = client.alloc_rows(32).expect("fill the subarray");
+    assert!(matches!(client.alloc(), Err(PimError::AllocExhausted { .. })));
+    for h in rows {
+        assert!(client.free(h));
+    }
+    let again = client.alloc_rows(32).expect("slab fully recycled");
+    assert_eq!(again.len(), 32);
+    assert!(sys.shutdown().is_clean());
 }
