@@ -1,12 +1,18 @@
 //! Bench: §5.1.4 bank-level parallelism — aggregate shift throughput vs
 //! bank count, served through the handle-based client API (one session
-//! per bank, kernel-granular submission).
+//! per bank, kernel-granular submission) — plus the multi-channel fabric's
+//! shard-scaling axis: the same uneven kernel mix skewed onto one channel,
+//! served by 1 vs 2 channels, where work stealing is what moves the
+//! makespan.
 //! Paper projection: 4.82 → 38.56 → 154.24 MOps/s for 1 → 8 → 32 banks.
+//!
+//! Emits `BENCH_bank_parallel.json` (machine-readable measurements +
+//! metrics) via `util::benchx::JsonReport`; CI uploads it as an artifact.
 
 use shiftdram::config::DramConfig;
-use shiftdram::coordinator::{Kernel, SystemBuilder};
-use shiftdram::util::benchx::Bench;
-use shiftdram::util::ShiftDir;
+use shiftdram::coordinator::{JobSpec, Kernel, SystemBuilder, SystemReport};
+use shiftdram::util::benchx::{Bench, JsonReport};
+use shiftdram::util::{BitRow, Rng, ShiftDir};
 
 fn run(cfg: &DramConfig, banks: usize, ops: usize) -> f64 {
     let sys = SystemBuilder::new(cfg).banks(banks).max_batch(16).build();
@@ -20,7 +26,38 @@ fn run(cfg: &DramConfig, banks: usize, ops: usize) -> f64 {
     sys.shutdown().throughput_mops
 }
 
+/// The shard-scaling measurement: `n_jobs` unplaced jobs with an uneven
+/// kernel mix (every 4th job is a 32-bit shift, the rest 1-bit), all
+/// homed on shard 0. With one channel they serialize there; with two,
+/// the idle shard's dispatcher steals whole kernels off shard 0's deque.
+/// Every result is checked bit-exact against the reference shift.
+fn run_fabric(cfg: &DramConfig, channels: usize, n_jobs: usize) -> SystemReport {
+    let fabric = SystemBuilder::new(cfg)
+        .channels(channels)
+        .banks(1)
+        .max_batch(8)
+        .build_fabric();
+    let mut rng = Rng::new(42);
+    let cols = cfg.geometry.cols_per_row;
+    let mut pending = Vec::with_capacity(n_jobs);
+    for i in 0..n_jobs {
+        let n = if i % 4 == 0 { 32 } else { 1 };
+        let bits = BitRow::random(cols, &mut rng);
+        let want = bits.shifted_by(ShiftDir::Right, n, false);
+        let spec = JobSpec::new(Kernel::shift_by(n, ShiftDir::Right))
+            .input(0, bits)
+            .read_back(0);
+        pending.push((fabric.submit_job_on(0, spec), want));
+    }
+    for (ticket, want) in pending {
+        let out = ticket.wait().expect("fabric job");
+        assert_eq!(out.rows[0], want, "fabric-routed result must be bit-exact");
+    }
+    fabric.shutdown()
+}
+
 fn main() {
+    let mut jr = JsonReport::new("bank_parallel");
     let cfg = DramConfig::ddr3_1333_4gb();
     println!("=== §5.1.4: aggregate shift throughput vs banks (simulated) ===");
     let mut base = 0.0;
@@ -29,6 +66,7 @@ fn main() {
         if banks == 1 {
             base = tp;
         }
+        jr.metric(&format!("mops_{banks}banks"), tp);
         println!(
             "{:>3} banks: {:>8.2} MOps/s  (scaling x{:.2}, ideal x{})",
             banks,
@@ -43,11 +81,55 @@ fn main() {
         "32-bank aggregate {tp32} MOps/s vs paper's 154.24"
     );
 
+    println!("\n=== fabric: shard scaling, uneven kernel mix skewed onto one channel ===");
+    const JOBS: usize = 256;
+    let r1 = run_fabric(&cfg, 1, JOBS);
+    // stealing needs the idle shard's dispatcher to get scheduled while
+    // shard 0's backlog lasts; on a starved CI runner one pass can miss,
+    // so escalate the backlog before calling it a failure
+    let mut r2 = run_fabric(&cfg, 2, JOBS);
+    for retry_jobs in [4 * JOBS, 16 * JOBS] {
+        if r2.steals >= 1 {
+            break;
+        }
+        println!("(no steal landed — retrying with {retry_jobs} jobs)");
+        r2 = run_fabric(&cfg, 2, retry_jobs);
+    }
+    for (label, r) in [("1 channel", &r1), ("2 channels", &r2)] {
+        println!(
+            "{label}: {:.2} MOps/s over {} banks — {} jobs, {} steals, \
+             per-shard jobs {:?}",
+            r.throughput_mops,
+            r.banks,
+            r.jobs,
+            r.steals,
+            r.shards.iter().map(|s| s.jobs_run).collect::<Vec<_>>()
+        );
+    }
+    jr.metric("fabric_mops_1ch", r1.throughput_mops);
+    jr.metric("fabric_mops_2ch", r2.throughput_mops);
+    jr.metric("fabric_steals_2ch", r2.steals as f64);
+    assert_eq!(r1.steals, 0, "a single shard has nobody to steal from");
+    assert!(
+        r2.steals >= 1,
+        "the idle channel must steal from the loaded one ({} steals)",
+        r2.steals
+    );
+    assert!(
+        r2.throughput_mops > r1.throughput_mops,
+        "2-channel fabric must beat 1 channel on the skewed mix: {:.2} vs {:.2} MOps/s",
+        r2.throughput_mops,
+        r1.throughput_mops
+    );
+
     println!("\n=== coordinator wall-clock overhead ===");
     let b = Bench::quick();
     for banks in [1usize, 8, 32] {
-        b.run_elems(&format!("serve/{banks}banks/512ops"), 512, || {
+        jr.push(&b.run_elems(&format!("serve/{banks}banks/512ops"), 512, || {
             run(&cfg, banks, 512)
-        });
+        }));
     }
+
+    let path = jr.write().expect("write bench json");
+    println!("\nwrote {}", path.display());
 }

@@ -4,46 +4,51 @@
 //! L3 simulator hot paths: whole-row word-level shift, subarray AAP
 //! (sense + merge), migration-port AAP, command-stream engine throughput,
 //! compile-layer cache hit/miss, kernel-granular vs per-op client
-//! submission, MC trial integration (native), PJRT batch dispatch.
+//! submission, fabric shard scaling (1 vs 2 channels, uneven mix), MC
+//! trial integration (native), PJRT batch dispatch.
+//!
+//! Emits `BENCH_hotpath.json` (machine-readable measurements + metrics)
+//! via `util::benchx::JsonReport`; CI uploads it as an artifact.
 
 use shiftdram::circuit::montecarlo::{Backend, MonteCarlo};
 use shiftdram::circuit::native::{shift_transient, TransientCfg};
 use shiftdram::circuit::params::TechNode;
 use shiftdram::config::{DramConfig, McConfig};
-use shiftdram::coordinator::{Kernel, SystemBuilder};
+use shiftdram::coordinator::{JobSpec, Kernel, SystemBuilder};
 use shiftdram::dram::address::{Port, RowRef};
 use shiftdram::dram::subarray::Subarray;
 use shiftdram::pim::{CompiledProgram, PimOp, PimTape, ProgramCache};
 use shiftdram::runtime::Runtime;
 use shiftdram::sim::BankSim;
-use shiftdram::util::benchx::{black_box, Bench};
+use shiftdram::util::benchx::{black_box, Bench, JsonReport};
 use shiftdram::util::{BitRow, Rng, ShiftDir};
 
 fn main() {
     let b = Bench::default();
+    let mut jr = JsonReport::new("hotpath");
     let cols = 65_536;
     let mut rng = Rng::new(1);
     let row = BitRow::random(cols, &mut rng);
 
     // L3: pure bit-row shift (the semantic primitive)
-    b.run_elems("bitrow/shift_64k", cols as u64, || {
+    jr.push(&b.run_elems("bitrow/shift_64k", cols as u64, || {
         black_box(row.shifted(ShiftDir::Right, false))
-    });
+    }));
 
     // L3: functional subarray — data-to-data AAP (word-level merge)
     let mut sa = Subarray::new(16, cols);
     sa.write_row(0, row.clone());
-    b.run_elems("subarray/aap_data_64k", cols as u64, || {
+    jr.push(&b.run_elems("subarray/aap_data_64k", cols as u64, || {
         sa.aap(RowRef::Data(0), RowRef::Data(1));
-    });
+    }));
 
     // L3: migration-port AAP (per-bit port mapping — the hot spot)
-    b.run_elems("subarray/aap_migtop_64k", cols as u64, || {
+    jr.push(&b.run_elems("subarray/aap_migtop_64k", cols as u64, || {
         sa.aap(RowRef::Data(0), RowRef::MigTop(Port::A));
-    });
+    }));
 
     // L3: the full 4-AAP shift through the migration rows
-    b.run_elems("subarray/shift_4aap_64k", cols as u64, || {
+    jr.push(&b.run_elems("subarray/shift_4aap_64k", cols as u64, || {
         for c in shiftdram::pim::shift_commands(
             RowRef::Data(0),
             RowRef::Data(1),
@@ -51,34 +56,34 @@ fn main() {
         ) {
             shiftdram::pim::apply(&mut sa, &c);
         }
-    });
+    }));
 
     // L3: engine throughput (timing + energy + functional coupled)
     let cfg = DramConfig::ddr3_1333_4gb();
     let mut sim = BankSim::new(cfg.clone());
     sim.bank().subarray(0).write_row(0, row.clone());
     let cmds = PimOp::ShiftBy { src: 0, dst: 0, n: 1, dir: ShiftDir::Right }.lower();
-    b.run_elems("engine/shift_64k", cols as u64, || {
+    jr.push(&b.run_elems("engine/shift_64k", cols as u64, || {
         sim.run(0, &cmds);
-    });
+    }));
 
     // ── compile layer ────────────────────────────────────────────────
     // cache miss: lower + price a shift-by-8 from scratch every time
     let shift8 = [PimOp::ShiftBy { src: 0, dst: 0, n: 8, dir: ShiftDir::Right }];
-    b.run("compile/shift8_cache_miss", || {
+    jr.push(&b.run("compile/shift8_cache_miss", || {
         let fresh = ProgramCache::new(4);
         black_box(fresh.get_or_compile_ops(&shift8, &cfg))
-    });
+    }));
     // cache hit: one shared LRU cache, same shape every time
     let cache = ProgramCache::new(64);
     let _warm = cache.get_or_compile_ops(&shift8, &cfg);
-    b.run("compile/shift8_cache_hit", || {
+    jr.push(&b.run("compile/shift8_cache_hit", || {
         black_box(cache.get_or_compile_ops(&shift8, &cfg))
-    });
+    }));
     // raw compile cost, for the amortization story
-    b.run("compile/shift8_compile_only", || {
+    jr.push(&b.run("compile/shift8_compile_only", || {
         black_box(CompiledProgram::compile(&shift8, &cfg))
-    });
+    }));
 
     // ── the acceptance measurement ───────────────────────────────────
     // a batch of shift-by-8 requests against an 8 KB row, served two ways:
@@ -95,6 +100,7 @@ fn main() {
             slow_sim.run(0, &cmds);
         }
     });
+    jr.push(&m_slow);
     let mut fast_sim = BankSim::new(cfg.clone());
     fast_sim.bank().subarray(0).write_row(0, row.clone());
     let m_fast = b.run_elems("engine/batch32_shift8_run_compiled", BATCH as u64, || {
@@ -103,6 +109,7 @@ fn main() {
             fast_sim.run_compiled(0, &prog, Some(&binding));
         }
     });
+    jr.push(&m_fast);
     let speedup = m_slow.mean.as_secs_f64() / m_fast.mean.as_secs_f64();
     println!(
         "compiled fast path speedup over seed lower-and-simulate: {speedup:.1}x \
@@ -134,6 +141,7 @@ fn main() {
         client.flush();
         last.unwrap().wait().expect("per-op kernel")
     });
+    jr.push(&m_per_op);
     let big = Kernel::record(8, |t| {
         for _ in 0..KOPS {
             t.op(PimOp::ShiftBy { src: 0, dst: 0, n: 1, dir: ShiftDir::Right });
@@ -142,6 +150,7 @@ fn main() {
     let m_kernel = b.run_elems("serve/16ops_one_kernel", KOPS as u64, || {
         client.run(&big, hrows).expect("kernel")
     });
+    jr.push(&m_kernel);
     let kernel_speedup = m_per_op.mean.as_secs_f64() / m_kernel.mean.as_secs_f64();
     println!(
         "kernel-granular submission speedup over per-op submission: {kernel_speedup:.1}x \
@@ -151,27 +160,74 @@ fn main() {
     let report = sys.shutdown();
     assert!(report.is_clean(), "workers must exit clean: {:?}", report.worker_failures);
 
+    // ── fabric: shard-scaling axis (1 vs 2 channels, uneven mix) ─────
+    // wall-clock of pushing 64 unplaced jobs (every 4th heavy) skewed
+    // onto shard 0 and waiting them all; with 2 channels the idle shard
+    // steals, with 1 it cannot
+    let run_skewed_jobs = |channels: usize| -> u64 {
+        let fabric = SystemBuilder::new(&cfg)
+            .channels(channels)
+            .banks(1)
+            .max_batch(8)
+            .build_fabric();
+        let tickets: Vec<_> = (0..64)
+            .map(|i| {
+                let n = if i % 4 == 0 { 16 } else { 1 };
+                let spec = JobSpec::new(Kernel::shift_by(n, ShiftDir::Right))
+                    .input(0, row.clone())
+                    .read_back(0);
+                fabric.submit_job_on(0, spec)
+            })
+            .collect();
+        for t in tickets {
+            t.wait().expect("fabric job");
+        }
+        fabric.shutdown().steals
+    };
+    let mut fabric_steals = 0u64;
+    for channels in [1usize, 2] {
+        jr.push(&b.run_elems(&format!("fabric/64jobs_{channels}ch_skewed"), 64, || {
+            let steals = run_skewed_jobs(channels);
+            if channels == 2 {
+                fabric_steals = fabric_steals.max(steals);
+            }
+            steals
+        }));
+    }
+    jr.metric("fabric_steals_2ch_64jobs", fabric_steals as f64);
+
     // L1-native: one MC trial (720 Euler steps)
     let p = TechNode::n22().mc_nominal(true);
     let tcfg = TransientCfg::default();
-    b.run("circuit/native_trial_720steps", || black_box(shift_transient(&p, &tcfg)));
+    jr.push(&b.run("circuit/native_trial_720steps", || {
+        black_box(shift_transient(&p, &tcfg))
+    }));
 
     // L1-PJRT: one artifact batch (8192 trials)
     if let Ok((rt, m)) = Runtime::with_artifacts() {
         let mut mc_cfg = McConfig::quick();
         mc_cfg.trials = m.mc_batch;
         let mc = MonteCarlo::new(mc_cfg, TechNode::n22());
-        b.run_elems(&format!("circuit/pjrt_batch_{}", m.mc_batch), m.mc_batch as u64, || {
-            mc.run_level(&Backend::Pjrt(&rt, &m), 0.10, 3)
-        });
+        jr.push(&b.run_elems(
+            &format!("circuit/pjrt_batch_{}", m.mc_batch),
+            m.mc_batch as u64,
+            || mc.run_level(&Backend::Pjrt(&rt, &m), 0.10, 3),
+        ));
         let mut native = MonteCarlo::new(McConfig::quick(), TechNode::n22());
         native.mc.trials = m.mc_batch;
-        b.run_elems(&format!("circuit/native_batch_{}", m.mc_batch), m.mc_batch as u64, || {
-            native.run_level(&Backend::Native, 0.10, 3)
-        });
+        jr.push(&b.run_elems(
+            &format!("circuit/native_batch_{}", m.mc_batch),
+            m.mc_batch as u64,
+            || native.run_level(&Backend::Native, 0.10, 3),
+        ));
     } else {
         eprintln!("(artifacts missing — PJRT hot path skipped)");
     }
+
+    jr.metric("run_compiled_speedup", speedup);
+    jr.metric("kernel_granular_speedup", kernel_speedup);
+    let path = jr.write().expect("write bench json");
+    println!("wrote {}", path.display());
 
     // acceptance criteria (asserted at the end of main so a slow machine
     // doesn't abort the remaining measurements):

@@ -37,7 +37,7 @@
 
 use std::sync::Arc;
 
-use crate::config::{DramConfig, GeometryConfig};
+use crate::config::DramConfig;
 use crate::coordinator::{Kernel, PimClient, RowHandle, SystemBuilder};
 use crate::pim::compile::{CommandCensus, ProgramCache};
 use crate::pim::PimOp;
@@ -103,8 +103,9 @@ impl ElementCtx {
     }
 
     /// Context with an explicit pricing config and kernel cache. The
-    /// config's timing/energy model is kept; its geometry is replaced by
-    /// a single bank of one `rows × cols` subarray sized to this context.
+    /// config's timing/energy model is kept; its geometry is replaced via
+    /// [`DramConfig::single_channel`] — a single bank of one `rows × cols`
+    /// subarray sized to this context.
     pub fn with_config(
         rows: usize,
         cols: usize,
@@ -113,15 +114,7 @@ impl ElementCtx {
         cache: Arc<ProgramCache>,
     ) -> Self {
         assert!(cols % width == 0, "row must pack whole elements");
-        let mut cfg = cfg;
-        cfg.geometry = GeometryConfig {
-            channels: 1,
-            ranks_per_channel: 1,
-            banks_per_rank: 1,
-            subarrays_per_bank: 1,
-            rows_per_subarray: rows,
-            cols_per_row: cols,
-        };
+        let cfg = cfg.single_channel(rows, cols);
         let sys = SystemBuilder::new(&cfg).banks(1).shared_cache(cache).build();
         let client = sys.client();
         let handles = client

@@ -172,6 +172,24 @@ impl DramConfig {
         cfg
     }
 
+    /// This config shrunk to a private 1-channel/1-rank/1-bank geometry of
+    /// a single `rows × cols` subarray, keeping the timing and energy
+    /// models. The app layer's private systems ([`crate::apps`]'s
+    /// `ElementCtx`) derive their geometry from this one constructor, so
+    /// geometry edits cannot silently diverge from the shared definition.
+    pub fn single_channel(&self, rows_per_subarray: usize, cols_per_row: usize) -> Self {
+        let mut cfg = self.clone();
+        cfg.geometry = GeometryConfig {
+            channels: 1,
+            ranks_per_channel: 1,
+            banks_per_rank: 1,
+            subarrays_per_bank: 1,
+            rows_per_subarray,
+            cols_per_row,
+        };
+        cfg
+    }
+
     /// A small config for fast functional tests (256-column rows).
     pub fn tiny_test() -> Self {
         let mut cfg = Self::ddr3_1333_4gb();
@@ -299,6 +317,22 @@ mod tests {
         assert_ne!(base.fingerprint(), smaller.fingerprint());
 
         assert_ne!(base.fingerprint(), DramConfig::tiny_test().fingerprint());
+    }
+
+    #[test]
+    fn single_channel_keeps_pricing_and_shrinks_geometry() {
+        let base = DramConfig::ddr3_1333_4gb();
+        let small = base.single_channel(24, 256);
+        assert_eq!(small.geometry.channels, 1);
+        assert_eq!(small.geometry.ranks_per_channel, 1);
+        assert_eq!(small.geometry.banks_per_rank, 1);
+        assert_eq!(small.geometry.subarrays_per_bank, 1);
+        assert_eq!(small.geometry.rows_per_subarray, 24);
+        assert_eq!(small.geometry.cols_per_row, 256);
+        assert_eq!(small.geometry.total_banks(), 1);
+        assert_eq!(small.timing, base.timing, "pricing models are preserved");
+        assert_eq!(small.energy, base.energy);
+        small.validate().unwrap();
     }
 
     #[test]

@@ -1,6 +1,11 @@
 //! Per-bank batching: accumulate routed requests into bounded batches so a
 //! worker drains whole command bursts instead of single ops (amortizing
 //! queue synchronization, and — on real hardware — command-bus turnaround).
+//!
+//! Also home of [`OverflowDeque`] — the cost-tracked work queue behind the
+//! multi-channel fabric's work stealing ([`crate::coordinator::fabric`]):
+//! the owning shard drains FIFO at the front, thieves scan newest-first
+//! from the back and may take only items a `stealable` predicate admits.
 
 use std::collections::VecDeque;
 
@@ -74,6 +79,79 @@ impl<T> Batcher<T> {
     }
 }
 
+/// Cost-tracked overflow deque for one fabric shard.
+///
+/// The owner pushes at the back and drains FIFO from the front; a thief
+/// scans from the back (newest work first — the oldest entries are about
+/// to be drained by the owner anyway) and takes the first item its
+/// `stealable` predicate admits. Items the predicate rejects (kernels
+/// pinned to the victim's banks by their row handles) are **left in
+/// place** — logically re-enqueued, never split off or reordered.
+///
+/// `queued_cost` tracks the total cost units resident in the queue, so
+/// thieves can pick the busiest victim and placement can weigh shards by
+/// real queued work rather than item counts.
+#[derive(Debug)]
+pub struct OverflowDeque<T> {
+    items: VecDeque<(T, usize)>,
+    queued_cost: usize,
+}
+
+impl<T> Default for OverflowDeque<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> OverflowDeque<T> {
+    pub fn new() -> Self {
+        OverflowDeque { items: VecDeque::new(), queued_cost: 0 }
+    }
+
+    /// Owner-side enqueue with the item's queued-work weight.
+    pub fn push_back(&mut self, item: T, cost: usize) {
+        self.queued_cost += cost;
+        self.items.push_back((item, cost));
+    }
+
+    /// Owner-side FIFO drain.
+    pub fn pop_front(&mut self) -> Option<T> {
+        let (item, cost) = self.items.pop_front()?;
+        self.queued_cost -= cost;
+        Some(item)
+    }
+
+    /// Thief-side take: scan from the back for the first item `stealable`
+    /// admits and remove it; everything rejected stays in place. Returns
+    /// the stolen item (if any) and how many pinned items were skipped
+    /// over before finding it.
+    pub fn steal_back(&mut self, stealable: impl Fn(&T) -> bool) -> (Option<T>, usize) {
+        let mut skipped = 0;
+        for i in (0..self.items.len()).rev() {
+            if stealable(&self.items[i].0) {
+                let (item, cost) = self.items.remove(i).expect("index in range");
+                self.queued_cost -= cost;
+                return (Some(item), skipped);
+            }
+            skipped += 1;
+        }
+        (None, skipped)
+    }
+
+    /// Total cost units queued (the steal-victim ordering key).
+    pub fn queued_cost(&self) -> usize {
+        self.queued_cost
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,5 +198,47 @@ mod tests {
         );
         let empty: Batch<i32> = Batch { bank: 0, items: vec![] };
         assert!(empty.runs_by_key(|&x| x).is_empty());
+    }
+
+    #[test]
+    fn overflow_deque_owner_drains_fifo_and_tracks_cost() {
+        let mut q = OverflowDeque::new();
+        q.push_back("a", 3);
+        q.push_back("b", 5);
+        q.push_back("c", 1);
+        assert_eq!(q.queued_cost(), 9);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop_front(), Some("a"));
+        assert_eq!(q.queued_cost(), 6);
+        assert_eq!(q.pop_front(), Some("b"));
+        assert_eq!(q.pop_front(), Some("c"));
+        assert_eq!(q.pop_front(), None);
+        assert_eq!(q.queued_cost(), 0);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn overflow_deque_steals_newest_admissible_item() {
+        // items are (name, pinned); only unpinned items may migrate
+        let mut q = OverflowDeque::new();
+        q.push_back(("job1", false), 2);
+        q.push_back(("pinned", true), 10);
+        q.push_back(("job2", false), 4);
+        // newest-first: job2 goes, pinned untouched, no skips counted
+        let (got, skipped) = q.steal_back(|&(_, pinned)| !pinned);
+        assert_eq!(got, Some(("job2", false)));
+        assert_eq!(skipped, 0);
+        assert_eq!(q.queued_cost(), 12);
+        // next steal must skip over the pinned entry to reach job1
+        let (got, skipped) = q.steal_back(|&(_, pinned)| !pinned);
+        assert_eq!(got, Some(("job1", false)));
+        assert_eq!(skipped, 1, "the pinned kernel was scanned and left in place");
+        // only the pinned item remains, still FIFO-drainable by the owner
+        let (got, skipped) = q.steal_back(|&(_, pinned)| !pinned);
+        assert_eq!(got, None);
+        assert_eq!(skipped, 1);
+        assert_eq!(q.queued_cost(), 10);
+        assert_eq!(q.pop_front(), Some(("pinned", true)));
+        assert!(q.is_empty());
     }
 }

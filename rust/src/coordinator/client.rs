@@ -60,6 +60,9 @@ pub enum PimError {
     },
     /// the bank's worker thread is gone (it panicked or was shut down)
     WorkerLost { bank: usize },
+    /// the multi-channel fabric was shut down before this work could be
+    /// queued or answered (see [`crate::coordinator::fabric`])
+    FabricDown,
     /// the worker answered with the wrong response kind (a bug)
     Protocol(&'static str),
 }
@@ -93,6 +96,7 @@ impl fmt::Display for PimError {
                  session is on bank {expected_bank} subarray {expected_subarray}"
             ),
             PimError::WorkerLost { bank } => write!(f, "bank {bank} worker is gone"),
+            PimError::FabricDown => write!(f, "the fabric is shut down"),
             PimError::Protocol(what) => write!(f, "protocol violation: {what}"),
         }
     }
@@ -322,6 +326,12 @@ impl PimClient {
     /// The bank this session was placed on.
     pub fn bank(&self) -> usize {
         self.bank
+    }
+
+    /// The subarray this session's rows live in (the fabric's pinned
+    /// deferred submissions re-create an equivalent session later).
+    pub(crate) fn subarray(&self) -> usize {
+        self.subarray
     }
 
     /// The system this session talks to.

@@ -1,0 +1,814 @@
+//! The sharded multi-channel fabric: per-channel coordinators with
+//! two-level placement and cost-weighted work stealing.
+//!
+//! A [`PimFabric`] (built with
+//! [`crate::coordinator::SystemBuilder::build_fabric`] after setting
+//! [`crate::coordinator::SystemBuilder::channels`]) is a set of
+//! per-channel **shards**.
+//! Each shard is a full serving coordinator over its channel's banks — its
+//! own worker pool, row slabs, [`crate::pim::compile::ProgramCache`], and
+//! [`crate::coordinator::Metrics`] — so shards never contend on locks,
+//! caches, or simulated clocks: channel-level parallelism extends §5.1.4's
+//! bank scaling to the full geometry.
+//!
+//! ```text
+//!   FabricClient sessions ─► two-level placement (shard, then bank)
+//!   JobSpec submissions  ─► home shard's overflow deque ──► dispatcher
+//!                                     ▲                        │
+//!                 steal (unplaced jobs only, whole kernels) ───┘
+//!                                     │
+//!        shard 0: PimSystem ▪ cache ▪ slabs ▪ metrics   (channel 0)
+//!        shard 1: PimSystem ▪ cache ▪ slabs ▪ metrics   (channel 1)
+//! ```
+//!
+//! **Placement is two-level.** [`Placement::RoundRobin`] /
+//! [`Placement::LeastLoaded`] first pick the shard (LeastLoaded weighs the
+//! shard's queued deque cost plus its banks' queued wire cost, with placed
+//! sessions as the tiebreaker), then the shard's own router picks the bank
+//! — the same policy applied at both levels.
+//!
+//! **Work stealing moves only unplaced work.** [`RowHandle`]s pin data to
+//! a bank, so a kernel bound to handles can never migrate. The stealable
+//! unit is therefore the [`JobSpec`]: a whole *unplaced* alloc+kernel
+//! session (input row images, one kernel, read-back list) that carries its
+//! data with it. Each shard's dispatcher drains its own deque FIFO; when
+//! idle it scans the busiest other shard's deque from the newest end and
+//! pulls a whole job — never a fragment of one. Handle-pinned deferred
+//! kernels ([`FabricClient::submit_deferred`]) share the deque but are
+//! skipped by thieves and left in place (counted as `pinned_skips`), so
+//! they always execute on their home banks. A stolen job allocates fresh
+//! rows on the thief's banks and replays the identical kernel through the
+//! identical compile/replay path, so results are bit-identical wherever it
+//! runs, and its [`FabricTicket`] — created at submission — resolves
+//! normally.
+//!
+//! [`PimFabric::shutdown`] drains every deque, joins the dispatchers, and
+//! aggregates the per-shard [`SystemReport`]s into one report whose
+//! `shards` vector carries the per-shard breakdowns and whose
+//! `jobs`/`steals`/`pinned_skips` counters record the stealing traffic.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::batcher::OverflowDeque;
+use crate::coordinator::client::{Kernel, PimClient, PimError, Receipt, RowHandle, Ticket};
+use crate::coordinator::metrics::{FabricCounters, Metrics};
+use crate::coordinator::router::Placement;
+use crate::coordinator::system::{panic_message, PimSystem, ShardReport, SystemReport};
+use crate::pim::compile::CacheStats;
+use crate::util::BitRow;
+
+/// How long an idle dispatcher sleeps between steal scans.
+const IDLE_POLL: Duration = Duration::from_micros(500);
+
+/// A whole *unplaced* unit of work: input row images, one kernel, and the
+/// rows to read back — everything needed to run anywhere. Because nothing
+/// in a `JobSpec` names a bank or holds a [`RowHandle`], it is the unit
+/// the fabric's work stealing is allowed to migrate.
+///
+/// Row indices are the kernel's *recording* indices (see
+/// [`Kernel`]): the executing shard allocates a row per index, writes the
+/// inputs, binds the kernel, and reads the requested rows back. Rows are
+/// drawn from the shard's recycling slab, so any row the kernel reads
+/// before writing must be covered by [`Self::input`] — uninitialized rows
+/// hold whatever a previous tenant left (and would differ between shards,
+/// breaking the stolen-execution bit-identity guarantee).
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    kernel: Kernel,
+    inputs: Vec<(usize, BitRow)>,
+    outputs: Vec<usize>,
+}
+
+impl JobSpec {
+    pub fn new(kernel: Kernel) -> Self {
+        JobSpec { kernel, inputs: Vec::new(), outputs: Vec::new() }
+    }
+
+    /// Preload recording row `slot` with `bits` before the kernel runs.
+    pub fn input(mut self, slot: usize, bits: BitRow) -> Self {
+        self.inputs.push((slot, bits));
+        self
+    }
+
+    /// Read recording row `slot` back after the kernel runs (rows appear
+    /// in [`JobOutput::rows`] in the order requested).
+    pub fn read_back(mut self, slot: usize) -> Self {
+        self.outputs.push(slot);
+        self
+    }
+
+    /// Rows the executing shard must allocate.
+    fn n_rows(&self) -> usize {
+        let mut n = self.kernel.n_rows();
+        for (slot, _) in &self.inputs {
+            n = n.max(slot + 1);
+        }
+        for slot in &self.outputs {
+            n = n.max(slot + 1);
+        }
+        n
+    }
+
+    /// Queued-work weight: the kernel's lowered-command cost plus one unit
+    /// per data-movement request.
+    fn cost(&self) -> usize {
+        self.kernel.cost() + self.inputs.len() + self.outputs.len()
+    }
+}
+
+/// What a completed [`JobSpec`] resolves to.
+#[derive(Clone, Debug)]
+pub struct JobOutput {
+    /// the kernel's completion receipt (command census)
+    pub receipt: Receipt,
+    /// the read-back rows, in [`JobSpec::read_back`] order
+    pub rows: Vec<BitRow>,
+    /// shard that executed the job
+    pub shard: usize,
+    /// shard placement originally queued it on (`shard != home` ⇔ stolen)
+    pub home: usize,
+}
+
+impl JobOutput {
+    /// True when an idle shard pulled this job off its home shard's deque.
+    pub fn was_stolen(&self) -> bool {
+        self.shard != self.home
+    }
+}
+
+/// Completion handle for fabric-queued work. Unlike [`Ticket`], the
+/// response may come from *any* shard's dispatcher (stolen jobs resolve
+/// their original ticket from the thief).
+pub struct FabricTicket<T> {
+    rx: Receiver<Result<T, PimError>>,
+}
+
+impl<T> FabricTicket<T> {
+    fn failed(err: PimError) -> Self {
+        let (tx, rx) = channel();
+        let _ = tx.send(Err(err));
+        FabricTicket { rx }
+    }
+
+    /// Block until the job/kernel completes anywhere in the fabric.
+    pub fn wait(self) -> Result<T, PimError> {
+        self.rx.recv().unwrap_or(Err(PimError::FabricDown))
+    }
+}
+
+/// An unplaced job queued on its home shard (the stealable task kind).
+struct FabricJob {
+    spec: JobSpec,
+    home: usize,
+    respond: Sender<Result<JobOutput, PimError>>,
+}
+
+/// A deferred kernel pinned to its session's bank by row handles — rides
+/// the same deque but never migrates.
+struct PinnedTask {
+    shard: usize,
+    bank: usize,
+    subarray: usize,
+    kernel: Kernel,
+    rows: Vec<RowHandle>,
+    respond: Sender<Result<Receipt, PimError>>,
+}
+
+enum FabricTask {
+    Job(FabricJob),
+    Pinned(PinnedTask),
+}
+
+struct ShardQueue {
+    deque: Mutex<OverflowDeque<FabricTask>>,
+    ready: Condvar,
+}
+
+impl ShardQueue {
+    fn new() -> Self {
+        ShardQueue { deque: Mutex::new(OverflowDeque::new()), ready: Condvar::new() }
+    }
+}
+
+pub(crate) struct FabricCore {
+    shards: Vec<PimSystem>,
+    queues: Vec<ShardQueue>,
+    placement: Placement,
+    rr_next: AtomicUsize,
+    counters: FabricCounters,
+    stop: AtomicBool,
+    dispatchers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl FabricCore {
+    pub(crate) fn new(shards: Vec<PimSystem>, placement: Placement) -> Self {
+        assert!(!shards.is_empty());
+        let n = shards.len();
+        FabricCore {
+            shards,
+            queues: (0..n).map(|_| ShardQueue::new()).collect(),
+            placement,
+            rr_next: AtomicUsize::new(0),
+            counters: FabricCounters::new(n),
+            stop: AtomicBool::new(false),
+            dispatchers: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Queued cost visible at shard level: the shard's overflow deque plus
+    /// the wire cost queued on its banks.
+    fn shard_load(&self, shard: usize) -> usize {
+        self.queues[shard].deque.lock().unwrap().queued_cost() + self.shards[shard].queued_cost()
+    }
+
+    /// Level-one placement: choose the shard for a new session or job.
+    fn pick_shard(&self) -> usize {
+        let n = self.shards.len();
+        match self.placement {
+            Placement::Pinned => 0,
+            Placement::RoundRobin => self.rr_next.fetch_add(1, Ordering::Relaxed) % n,
+            Placement::LeastLoaded => (0..n)
+                .min_by_key(|&s| (self.shard_load(s), self.counters.sessions(s)))
+                .expect("at least one shard"),
+        }
+    }
+
+    /// Enqueue a task on `shard`'s deque; fails the ticket if the fabric
+    /// is shutting down (checked under the deque lock, so a task accepted
+    /// here is guaranteed to be drained by the shard's dispatcher).
+    fn push(&self, shard: usize, task: FabricTask, cost: usize) {
+        let rejected = {
+            let mut dq = self.queues[shard].deque.lock().unwrap();
+            if self.stop.load(Ordering::SeqCst) {
+                Some(task)
+            } else {
+                dq.push_back(task, cost);
+                None
+            }
+        };
+        match rejected {
+            None => self.queues[shard].ready.notify_all(),
+            Some(FabricTask::Job(job)) => {
+                let _ = job.respond.send(Err(PimError::FabricDown));
+            }
+            Some(FabricTask::Pinned(task)) => {
+                let _ = task.respond.send(Err(PimError::FabricDown));
+            }
+        }
+    }
+
+    fn enqueue_job(&self, home: usize, spec: JobSpec) -> FabricTicket<JobOutput> {
+        let (tx, rx) = channel();
+        let cost = spec.cost();
+        self.push(home, FabricTask::Job(FabricJob { spec, home, respond: tx }), cost);
+        FabricTicket { rx }
+    }
+
+    /// Cost-weighted steal: scan other shards busiest-first and pull the
+    /// newest *unplaced* job from the first non-empty deque; pinned tasks
+    /// are scanned past and left in place.
+    fn try_steal(&self, thief: usize) -> Option<FabricJob> {
+        let mut victims: Vec<(usize, usize)> = (0..self.queues.len())
+            .filter(|&s| s != thief)
+            .map(|s| (self.queues[s].deque.lock().unwrap().queued_cost(), s))
+            .collect();
+        victims.sort_unstable_by(|a, b| b.0.cmp(&a.0));
+        for (cost, victim) in victims {
+            if cost == 0 {
+                break;
+            }
+            let (taken, skipped) = self.queues[victim]
+                .deque
+                .lock()
+                .unwrap()
+                .steal_back(|t| matches!(t, FabricTask::Job(_)));
+            if let Some(FabricTask::Job(job)) = taken {
+                // count skips only on a successful steal — an idle shard
+                // re-scans every poll, and recounting the same parked
+                // pinned task thousands of times per second would make
+                // the counter meaningless
+                self.counters.record_pinned_skips(skipped as u64);
+                self.counters.record_steal(victim, thief);
+                return Some(job);
+            }
+        }
+        None
+    }
+
+    /// Execute one task on `shard` (for a stolen job, the thief).
+    fn execute(&self, shard: usize, task: FabricTask) {
+        match task {
+            FabricTask::Job(job) => {
+                let FabricJob { spec, home, respond } = job;
+                let result = self
+                    .run_job_on(shard, spec)
+                    .map(|(receipt, rows)| JobOutput { receipt, rows, shard, home });
+                self.counters.record_job(shard);
+                let _ = respond.send(result);
+            }
+            FabricTask::Pinned(task) => {
+                // always the home shard's banks — thieves never take these
+                let client = PimClient::new(
+                    self.shards[task.shard].clone(),
+                    task.bank,
+                    task.subarray,
+                );
+                let _ = task.respond.send(client.run(&task.kernel, &task.rows));
+            }
+        }
+    }
+
+    /// The whole unplaced-session lifecycle on one shard: allocate rows,
+    /// write inputs, run the kernel, read outputs back, free the rows.
+    fn run_job_on(&self, shard: usize, spec: JobSpec) -> Result<(Receipt, Vec<BitRow>), PimError> {
+        let client = self.shards[shard].client();
+        let rows = client.alloc_rows(spec.n_rows())?;
+        let mut writes = Vec::with_capacity(spec.inputs.len());
+        for (slot, bits) in &spec.inputs {
+            writes.push(client.write(&rows[*slot], bits.clone()));
+        }
+        let run = client.submit(&spec.kernel, &rows);
+        client.flush();
+        let mut first_err: Option<PimError> = None;
+        for w in writes {
+            if let Err(e) = w.wait() {
+                first_err.get_or_insert(e);
+            }
+        }
+        let receipt = run.wait();
+        let mut out_rows = Vec::with_capacity(spec.outputs.len());
+        if first_err.is_none() && receipt.is_ok() {
+            for &slot in &spec.outputs {
+                match client.read_now(&rows[slot]) {
+                    Ok(bits) => out_rows.push(bits),
+                    Err(e) => {
+                        first_err.get_or_insert(e);
+                        break;
+                    }
+                }
+            }
+        }
+        for h in rows {
+            client.free(h);
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        Ok((receipt?, out_rows))
+    }
+}
+
+/// One shard's dispatcher: drain own deque FIFO; when idle, steal from the
+/// busiest shard; park briefly when there is nothing anywhere. Exits when
+/// the fabric shuts down (own deque drained — `push` rejects new work once
+/// `stop` is set) or every user handle is dropped (the `Weak` upgrade
+/// fails and the final `Arc` drop tears the shard systems down).
+fn dispatcher_loop(me: usize, core: Weak<FabricCore>) {
+    loop {
+        let Some(core) = core.upgrade() else { break };
+        let task = core.queues[me].deque.lock().unwrap().pop_front();
+        if let Some(task) = task {
+            core.execute(me, task);
+            continue;
+        }
+        if let Some(job) = core.try_steal(me) {
+            core.execute(me, FabricTask::Job(job));
+            continue;
+        }
+        let guard = core.queues[me].deque.lock().unwrap();
+        if !guard.is_empty() {
+            continue;
+        }
+        if core.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let (_guard, _timed_out) =
+            core.queues[me].ready.wait_timeout(guard, IDLE_POLL).unwrap();
+    }
+}
+
+/// A cheap, cloneable handle to the sharded fabric. Built with
+/// [`crate::coordinator::SystemBuilder::build_fabric`].
+#[derive(Clone)]
+pub struct PimFabric {
+    core: Arc<FabricCore>,
+}
+
+impl PimFabric {
+    pub(crate) fn launch(shards: Vec<PimSystem>, placement: Placement) -> PimFabric {
+        let core = Arc::new(FabricCore::new(shards, placement));
+        {
+            let mut dispatchers = core.dispatchers.lock().unwrap();
+            for shard in 0..core.shards.len() {
+                let weak = Arc::downgrade(&core);
+                dispatchers.push(std::thread::spawn(move || dispatcher_loop(shard, weak)));
+            }
+        }
+        PimFabric { core }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.core.shards.len()
+    }
+
+    /// One shard's live metrics registry.
+    pub fn shard_metrics(&self, shard: usize) -> &Metrics {
+        self.core.shards[shard].metrics()
+    }
+
+    /// Jobs stolen so far (live counter; the final value is in the report).
+    pub fn steals(&self) -> u64 {
+        self.core.counters.steals()
+    }
+
+    /// Open a session: placement picks the shard, then the shard's router
+    /// picks the bank and subarray.
+    pub fn client(&self) -> FabricClient {
+        let shard = self.core.pick_shard();
+        self.client_inner(shard)
+    }
+
+    /// Open a session pinned to a shard (the bank within it is still
+    /// chosen by the shard's router).
+    pub fn client_on(&self, shard: usize) -> FabricClient {
+        assert!(shard < self.n_shards(), "shard {shard} out of range");
+        self.client_inner(shard)
+    }
+
+    fn client_inner(&self, shard: usize) -> FabricClient {
+        self.core.counters.record_session(shard);
+        FabricClient {
+            fabric: self.clone(),
+            shard,
+            client: self.core.shards[shard].client(),
+        }
+    }
+
+    /// Queue an unplaced job; placement picks its home shard, and an idle
+    /// shard may steal it before the home dispatcher gets to it.
+    pub fn submit_job(&self, spec: JobSpec) -> FabricTicket<JobOutput> {
+        let home = self.core.pick_shard();
+        self.core.enqueue_job(home, spec)
+    }
+
+    /// Queue an unplaced job homed on a specific shard (it may still be
+    /// stolen — only handles pin work).
+    pub fn submit_job_on(&self, shard: usize, spec: JobSpec) -> FabricTicket<JobOutput> {
+        assert!(shard < self.n_shards(), "shard {shard} out of range");
+        self.core.enqueue_job(shard, spec)
+    }
+
+    /// Dispatch every shard's partially filled wire batches.
+    pub fn flush(&self) {
+        for shard in &self.core.shards {
+            shard.flush();
+        }
+    }
+
+    /// Stop the dispatchers (draining every deque first), shut each shard
+    /// down, and aggregate the per-shard reports: sums for work counters,
+    /// max for the makespan (shards run in parallel), per-shard breakdowns
+    /// under [`SystemReport::shards`], and the steal counters.
+    pub fn shutdown(&self) -> SystemReport {
+        self.core.stop.store(true, Ordering::SeqCst);
+        for q in &self.core.queues {
+            q.ready.notify_all();
+        }
+        let mut failures: Vec<String> = Vec::new();
+        {
+            let mut dispatchers = self.core.dispatchers.lock().unwrap();
+            for (shard, d) in dispatchers.drain(..).enumerate() {
+                if let Err(payload) = d.join() {
+                    failures.push(format!(
+                        "shard {shard} dispatcher panicked: {}",
+                        panic_message(payload.as_ref())
+                    ));
+                }
+            }
+        }
+
+        let counters = &self.core.counters;
+        let mut shards = Vec::with_capacity(self.core.shards.len());
+        for (i, sys) in self.core.shards.iter().enumerate() {
+            shards.push(ShardReport {
+                shard: i,
+                jobs_run: counters.jobs_run(i),
+                stolen_in: counters.stolen_in(i),
+                stolen_out: counters.stolen_out(i),
+                sessions: counters.sessions(i),
+                report: sys.shutdown(),
+            });
+        }
+
+        // merge cache stats over *distinct* caches (shards built with a
+        // shared cache all point at one — count it once)
+        let mut cache = CacheStats::default();
+        let mut seen: Vec<&Arc<crate::pim::compile::ProgramCache>> = Vec::new();
+        for sys in &self.core.shards {
+            let c = sys.program_cache();
+            if !seen.iter().any(|s| Arc::ptr_eq(s, c)) {
+                seen.push(c);
+                let s = c.stats();
+                cache.hits += s.hits;
+                cache.misses += s.misses;
+                cache.batched += s.batched;
+                cache.evictions += s.evictions;
+                cache.compile_ns += s.compile_ns;
+            }
+        }
+
+        let banks = shards.iter().map(|s| s.report.banks).sum();
+        let requests: u64 = shards.iter().map(|s| s.report.requests).sum();
+        let makespan_ps = shards.iter().map(|s| s.report.makespan_ps).max().unwrap_or(0);
+        let throughput_mops = if makespan_ps == 0 {
+            0.0
+        } else {
+            requests as f64 / (makespan_ps as f64 * 1e-12) / 1e6
+        };
+        for s in &shards {
+            failures.extend(s.report.worker_failures.iter().cloned());
+        }
+        SystemReport {
+            banks,
+            requests,
+            kernels: shards.iter().map(|s| s.report.kernels).sum(),
+            total_ops: shards.iter().map(|s| s.report.total_ops).sum(),
+            replays: shards.iter().map(|s| s.report.replays).sum(),
+            total_aaps: shards.iter().map(|s| s.report.total_aaps).sum(),
+            makespan_ps,
+            total_energy_pj: shards.iter().map(|s| s.report.total_energy_pj).sum(),
+            throughput_mops,
+            cache,
+            cache_hit_rate: cache.hit_rate(),
+            amortized_compile_ns: cache.amortized_compile_ns(),
+            worker_failures: failures,
+            jobs: counters.jobs_total(),
+            steals: counters.steals(),
+            pinned_skips: counters.pinned_skips(),
+            shards,
+        }
+    }
+}
+
+/// A session on one fabric shard: a thin wrapper over the shard's
+/// [`PimClient`] plus the fabric-level deferred-submission path.
+pub struct FabricClient {
+    fabric: PimFabric,
+    shard: usize,
+    client: PimClient,
+}
+
+impl FabricClient {
+    /// The shard (channel) this session was placed on.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// The bank within the shard.
+    pub fn bank(&self) -> usize {
+        self.client.bank()
+    }
+
+    /// The underlying shard session, for anything not delegated here.
+    pub fn session(&self) -> &PimClient {
+        &self.client
+    }
+
+    /// The fabric this session belongs to.
+    pub fn fabric(&self) -> &PimFabric {
+        &self.fabric
+    }
+
+    pub fn alloc(&self) -> Result<RowHandle, PimError> {
+        self.client.alloc()
+    }
+
+    pub fn alloc_rows(&self, n: usize) -> Result<Vec<RowHandle>, PimError> {
+        self.client.alloc_rows(n)
+    }
+
+    pub fn free(&self, handle: RowHandle) -> bool {
+        self.client.free(handle)
+    }
+
+    pub fn write(&self, handle: &RowHandle, bits: BitRow) -> Ticket<()> {
+        self.client.write(handle, bits)
+    }
+
+    pub fn read(&self, handle: &RowHandle) -> Ticket<BitRow> {
+        self.client.read(handle)
+    }
+
+    pub fn submit(&self, kernel: &Kernel, rows: &[RowHandle]) -> Ticket<Receipt> {
+        self.client.submit(kernel, rows)
+    }
+
+    pub fn run(&self, kernel: &Kernel, rows: &[RowHandle]) -> Result<Receipt, PimError> {
+        self.client.run(kernel, rows)
+    }
+
+    pub fn write_now(&self, handle: &RowHandle, bits: BitRow) -> Result<(), PimError> {
+        self.client.write_now(handle, bits)
+    }
+
+    pub fn read_now(&self, handle: &RowHandle) -> Result<BitRow, PimError> {
+        self.client.read_now(handle)
+    }
+
+    pub fn flush(&self) {
+        self.client.flush();
+    }
+
+    /// Queue a kernel on this shard's deque instead of submitting it
+    /// straight to the bank: the home dispatcher executes it
+    /// asynchronously. Because its row handles pin it to this session's
+    /// bank, thieves scan past it (`pinned_skips`) and it **never
+    /// migrates** — the deferred path trades latency for letting the
+    /// dispatcher interleave it with fabric jobs.
+    pub fn submit_deferred(&self, kernel: &Kernel, rows: &[RowHandle]) -> FabricTicket<Receipt> {
+        if kernel.n_rows() > rows.len() {
+            return FabricTicket::failed(PimError::HandleTableTooShort {
+                needs: kernel.n_rows(),
+                got: rows.len(),
+            });
+        }
+        let (tx, rx) = channel();
+        let task = PinnedTask {
+            shard: self.shard,
+            bank: self.client.bank(),
+            subarray: self.client.subarray(),
+            kernel: kernel.clone(),
+            rows: rows.to_vec(),
+            respond: tx,
+        };
+        self.fabric.core.push(self.shard, FabricTask::Pinned(task), kernel.cost());
+        FabricTicket { rx }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Deterministic fabric mechanics: these tests assemble a [`FabricCore`]
+    //! *without* dispatcher threads and drive placement, stealing, and
+    //! execution synchronously. End-to-end behavior with live dispatchers
+    //! is covered by `tests/fabric_integration.rs`.
+
+    use super::*;
+    use crate::config::DramConfig;
+    use crate::coordinator::system::SystemBuilder;
+    use crate::pim::{PimOp, PimTape};
+    use crate::util::{BitRow, Rng, ShiftDir};
+
+    fn core(channels: usize, placement: Placement) -> FabricCore {
+        let (shards, placement) = SystemBuilder::new(&DramConfig::tiny_test())
+            .channels(channels)
+            .banks(2)
+            .placement(placement)
+            .max_batch(4)
+            .fabric_shards();
+        FabricCore::new(shards, placement)
+    }
+
+    fn shift_job(bits: BitRow, n: usize) -> JobSpec {
+        JobSpec::new(Kernel::shift_by(n, ShiftDir::Right))
+            .input(0, bits)
+            .read_back(0)
+    }
+
+    #[test]
+    fn shards_own_their_channels_banks_and_caches() {
+        let core = core(2, Placement::RoundRobin);
+        assert_eq!(core.shards.len(), 2);
+        for sys in &core.shards {
+            assert_eq!(sys.n_banks(), 2);
+        }
+        assert!(
+            !Arc::ptr_eq(core.shards[0].program_cache(), core.shards[1].program_cache()),
+            "per-channel caches are private"
+        );
+    }
+
+    #[test]
+    fn round_robin_cycles_shards() {
+        let core = core(2, Placement::RoundRobin);
+        let picks: Vec<usize> = (0..5).map(|_| core.pick_shard()).collect();
+        assert_eq!(picks, vec![0, 1, 0, 1, 0]);
+    }
+
+    #[test]
+    fn least_loaded_avoids_the_queued_shard() {
+        let core = core(2, Placement::LeastLoaded);
+        // queue a heavy job on shard 0 (no dispatcher runs in this test,
+        // so the cost stays visible)
+        let mut rng = Rng::new(1);
+        let _t = core.enqueue_job(0, shift_job(BitRow::random(256, &mut rng), 30));
+        assert!(core.shard_load(0) > 0);
+        assert_eq!(core.pick_shard(), 1, "queued cost repels placement");
+        // session counts break the tie once loads equalize
+        core.counters.record_session(1);
+        let _t2 = core.enqueue_job(1, shift_job(BitRow::random(256, &mut rng), 30));
+        assert_eq!(core.pick_shard(), 0, "shard 1 now carries the load");
+    }
+
+    #[test]
+    fn steal_takes_newest_job_from_busiest_victim_and_skips_pinned() {
+        let core = core(2, Placement::Pinned);
+        let mut rng = Rng::new(2);
+        let a = BitRow::random(256, &mut rng);
+        let b = BitRow::random(256, &mut rng);
+        let ta = core.enqueue_job(0, shift_job(a.clone(), 1));
+        // a pinned deferred kernel sits *behind* the job in the deque
+        let session = core.shards[0].client();
+        let row = session.alloc().unwrap();
+        session.write_now(&row, b.clone()).unwrap();
+        let (ptx, prx) = channel();
+        core.push(
+            0,
+            FabricTask::Pinned(PinnedTask {
+                shard: 0,
+                bank: session.bank(),
+                subarray: session.subarray(),
+                kernel: Kernel::shift_by(2, ShiftDir::Right),
+                rows: vec![row.clone()],
+                respond: ptx,
+            }),
+            8,
+        );
+        // thief scans from the back: skips the pinned kernel, takes the job
+        let stolen = core.try_steal(1).expect("the unplaced job migrates");
+        assert_eq!(stolen.home, 0);
+        assert_eq!(core.counters.steals(), 1);
+        assert_eq!(core.counters.pinned_skips(), 1);
+        assert_eq!(core.counters.stolen_out(0), 1);
+        assert_eq!(core.counters.stolen_in(1), 1);
+        // nothing else stealable — the pinned task stays in place
+        assert!(core.try_steal(1).is_none());
+        assert_eq!(core.queues[0].deque.lock().unwrap().len(), 1);
+        // the stolen job executes on the thief and resolves the original
+        // ticket with a bit-identical result
+        core.execute(1, FabricTask::Job(stolen));
+        let out = ta.wait().expect("stolen job completes");
+        assert_eq!(out.shard, 1);
+        assert_eq!(out.home, 0);
+        assert!(out.was_stolen());
+        assert_eq!(out.rows[0], a.shifted_by(ShiftDir::Right, 1, false));
+        // the pinned kernel still runs on its home bank and mutates the
+        // session's own row
+        let pinned = core.queues[0].deque.lock().unwrap().pop_front().unwrap();
+        core.execute(0, pinned);
+        assert_eq!(prx.recv().unwrap().unwrap().census.aap, 8, "shift-by-2");
+        assert_eq!(
+            session.read_now(&row).unwrap(),
+            b.shifted_by(ShiftDir::Right, 2, false)
+        );
+    }
+
+    #[test]
+    fn thief_never_scans_its_own_queue() {
+        let core = core(2, Placement::Pinned);
+        // nothing to steal from an empty fabric
+        assert!(core.try_steal(0).is_none());
+        let mut rng = Rng::new(3);
+        let _own = core.enqueue_job(1, shift_job(BitRow::random(256, &mut rng), 1));
+        // shard 1 has queued work, but its own steal pass skips itself
+        assert!(core.try_steal(1).is_none());
+        let stolen = core.try_steal(0).expect("shard 0 steals shard 1's job");
+        assert_eq!(stolen.home, 1);
+    }
+
+    #[test]
+    fn job_errors_fail_the_ticket_not_the_shard() {
+        let core = core(1, Placement::Pinned);
+        // tiny_test: 32 rows per subarray — a 33-row job cannot allocate
+        let kernel = Kernel::record(8, |t| {
+            for i in 0..32 {
+                t.op(PimOp::Copy { src: i, dst: i + 1 });
+            }
+        });
+        let ticket = core.enqueue_job(0, JobSpec::new(kernel));
+        let task = core.queues[0].deque.lock().unwrap().pop_front().unwrap();
+        core.execute(0, task);
+        assert!(matches!(
+            ticket.wait().unwrap_err(),
+            PimError::AllocExhausted { .. }
+        ));
+        // the shard still serves
+        let c = core.shards[0].client();
+        let row = c.alloc().unwrap();
+        assert!(c.run(&Kernel::shift_by(1, ShiftDir::Right), std::slice::from_ref(&row)).is_ok());
+    }
+
+    #[test]
+    fn push_after_stop_fails_the_ticket() {
+        let core = core(2, Placement::Pinned);
+        core.stop.store(true, Ordering::SeqCst);
+        let mut rng = Rng::new(4);
+        let t = core.enqueue_job(0, shift_job(BitRow::random(256, &mut rng), 1));
+        assert_eq!(t.wait().unwrap_err(), PimError::FabricDown);
+        assert!(core.queues[0].deque.lock().unwrap().is_empty());
+    }
+}

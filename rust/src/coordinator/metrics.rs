@@ -10,7 +10,7 @@
 //! kernel-granular acceptance tests assert (K ops through one submission
 //! ⇒ one cache fetch, one replay).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use crate::pim::compile::{CacheStats, ProgramCache};
@@ -150,6 +150,93 @@ impl Metrics {
     }
 }
 
+/// Shard-level counters of the multi-channel fabric
+/// ([`crate::coordinator::fabric`]): sessions placed, jobs executed, and
+/// the work-stealing traffic between shards. Lock-free — dispatchers on
+/// every shard update them concurrently; the fabric's shutdown report and
+/// the two-level `LeastLoaded` placement read them.
+#[derive(Debug)]
+pub struct FabricCounters {
+    sessions: Vec<AtomicUsize>,
+    jobs_run: Vec<AtomicU64>,
+    stolen_in: Vec<AtomicU64>,
+    stolen_out: Vec<AtomicU64>,
+    steals: AtomicU64,
+    pinned_skips: AtomicU64,
+}
+
+impl FabricCounters {
+    pub fn new(n_shards: usize) -> Self {
+        FabricCounters {
+            sessions: (0..n_shards).map(|_| AtomicUsize::new(0)).collect(),
+            jobs_run: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
+            stolen_in: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
+            stolen_out: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
+            steals: AtomicU64::new(0),
+            pinned_skips: AtomicU64::new(0),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// A session was placed on `shard` (the LeastLoaded tiebreaker).
+    pub fn record_session(&self, shard: usize) {
+        self.sessions[shard].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn sessions(&self, shard: usize) -> usize {
+        self.sessions[shard].load(Ordering::Relaxed)
+    }
+
+    /// A fabric job finished executing on `shard`.
+    pub fn record_job(&self, shard: usize) {
+        self.jobs_run[shard].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn jobs_run(&self, shard: usize) -> u64 {
+        self.jobs_run[shard].load(Ordering::Relaxed)
+    }
+
+    pub fn jobs_total(&self) -> u64 {
+        self.jobs_run.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// `thief` pulled a queued job homed on `victim`.
+    pub fn record_steal(&self, victim: usize, thief: usize) {
+        self.steals.fetch_add(1, Ordering::Relaxed);
+        self.stolen_out[victim].fetch_add(1, Ordering::Relaxed);
+        self.stolen_in[thief].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn steals(&self) -> u64 {
+        self.steals.load(Ordering::Relaxed)
+    }
+
+    pub fn stolen_in(&self, shard: usize) -> u64 {
+        self.stolen_in[shard].load(Ordering::Relaxed)
+    }
+
+    pub fn stolen_out(&self, shard: usize) -> u64 {
+        self.stolen_out[shard].load(Ordering::Relaxed)
+    }
+
+    /// A successful steal scanned past `n` pinned (handle-bound) tasks
+    /// and left them in place — the never-migrate guarantee made visible.
+    /// (Fruitless idle scans are not counted, so a parked pinned task is
+    /// not re-counted every poll.)
+    pub fn record_pinned_skips(&self, n: u64) {
+        if n > 0 {
+            self.pinned_skips.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn pinned_skips(&self) -> u64 {
+        self.pinned_skips.load(Ordering::Relaxed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -221,6 +308,29 @@ mod tests {
         assert_eq!((s.hits, s.misses), (1, 1));
         assert!((m.cache_hit_rate() - 0.5).abs() < 1e-12);
         assert!(m.amortized_compile_ns() > 0.0);
+    }
+
+    #[test]
+    fn fabric_counters_track_steal_traffic_by_shard() {
+        let c = FabricCounters::new(3);
+        assert_eq!(c.n_shards(), 3);
+        c.record_session(1);
+        c.record_session(1);
+        assert_eq!((c.sessions(0), c.sessions(1)), (0, 2));
+        c.record_job(0);
+        c.record_job(2);
+        c.record_job(2);
+        assert_eq!(c.jobs_total(), 3);
+        assert_eq!(c.jobs_run(2), 2);
+        c.record_steal(0, 2);
+        c.record_steal(0, 1);
+        assert_eq!(c.steals(), 2);
+        assert_eq!(c.stolen_out(0), 2);
+        assert_eq!((c.stolen_in(1), c.stolen_in(2)), (1, 1));
+        c.record_pinned_skips(0);
+        assert_eq!(c.pinned_skips(), 0);
+        c.record_pinned_skips(3);
+        assert_eq!(c.pinned_skips(), 3);
     }
 
     #[test]

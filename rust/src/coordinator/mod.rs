@@ -43,6 +43,15 @@
 //! [`crate::apps::ElementCtx`] wraps a single-bank system + session, so
 //! app kernels and external callers share one lowering/replay path.
 //!
+//! **Multi-channel fabric.** Above the single coordinator sits the
+//! sharded fabric ([`fabric`], built via [`SystemBuilder::channels`] +
+//! `build_fabric`): one coordinator shard per channel — each with its own
+//! worker pool, row slabs, program cache, and metrics — fronted by
+//! two-level placement (shard, then bank) and a cost-weighted
+//! work-stealing scheduler. Only *unplaced* [`fabric::JobSpec`] work
+//! migrates between shards; handle-pinned kernels never do, because
+//! [`RowHandle`]s pin data to a bank.
+//!
 //! Substitution note: the offline build has no tokio; the serving loop is
 //! std threads + mpsc channels, which for a simulation-backed service is
 //! behaviourally equivalent (blocking queue per bank, one executor per
@@ -50,12 +59,16 @@
 
 pub mod batcher;
 pub mod client;
+pub mod fabric;
 pub mod metrics;
 pub mod router;
 pub mod system;
 
-pub use batcher::{Batch, Batcher};
+pub use batcher::{Batch, Batcher, OverflowDeque};
 pub use client::{Kernel, PimClient, PimError, Receipt, RowHandle, Ticket};
-pub use metrics::{Metrics, WorkerDelta};
+pub use fabric::{FabricClient, FabricTicket, JobOutput, JobSpec, PimFabric};
+pub use metrics::{FabricCounters, Metrics, WorkerDelta};
 pub use router::{Placement, Router};
-pub use system::{PimSystem, SystemBuilder, SystemReport, DEFAULT_CACHE_CAPACITY};
+pub use system::{
+    PimSystem, ShardReport, SystemBuilder, SystemReport, DEFAULT_CACHE_CAPACITY,
+};

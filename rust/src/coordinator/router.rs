@@ -191,6 +191,13 @@ impl Router {
     pub fn load(&self, bank: usize) -> usize {
         self.load[bank]
     }
+
+    /// Queued cost summed over every bank — the shard-level load signal
+    /// the fabric's two-level `LeastLoaded` placement and steal-victim
+    /// ordering read.
+    pub fn total_load(&self) -> usize {
+        self.load.iter().sum()
+    }
 }
 
 #[cfg(test)]
@@ -264,9 +271,11 @@ mod tests {
         assert!(b2 != b0 && b2 != b1, "empty bank wins");
         r.charge(b2, 50);
         assert_eq!(r.place_session(None).0, b1, "15 queued ops < 50 < 100");
+        assert_eq!(r.total_load(), 100 + 15 + 50);
         // draining bank 0 makes it cheapest again
         r.drained(b0, 100);
         assert_eq!(r.place_session(None).0, b0);
+        assert_eq!(r.total_load(), 65);
     }
 
     #[test]

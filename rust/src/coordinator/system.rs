@@ -32,6 +32,7 @@ use std::thread::JoinHandle;
 use crate::config::DramConfig;
 use crate::coordinator::batcher::{Batch, Batcher};
 use crate::coordinator::client::{PimClient, PimError, RowHandle};
+use crate::coordinator::fabric::PimFabric;
 use crate::coordinator::metrics::{Metrics, WorkerDelta};
 use crate::coordinator::router::{Placement, Router};
 use crate::dram::address::BankId;
@@ -107,6 +108,16 @@ pub struct SystemReport {
     pub amortized_compile_ns: f64,
     /// panic messages of workers that died (empty on a clean run)
     pub worker_failures: Vec<String>,
+    /// per-shard breakdowns — empty for a single-coordinator system,
+    /// one entry per channel for a fabric ([`crate::coordinator::fabric`])
+    pub shards: Vec<ShardReport>,
+    /// fabric jobs executed (0 outside the fabric)
+    pub jobs: u64,
+    /// queued jobs an idle shard pulled from a busier shard's deque
+    pub steals: u64,
+    /// handle-pinned tasks successful steals scanned past and left in
+    /// place (fruitless idle scans are not counted)
+    pub pinned_skips: u64,
 }
 
 impl SystemReport {
@@ -116,7 +127,27 @@ impl SystemReport {
     }
 }
 
-/// Configures and launches a [`PimSystem`].
+/// One fabric shard's slice of the final report: the shard's own
+/// [`SystemReport`] (its `shards` vector is empty) plus the job and
+/// steal traffic it saw.
+#[derive(Clone, Debug)]
+pub struct ShardReport {
+    /// shard index == channel index
+    pub shard: usize,
+    /// fabric jobs this shard executed (its own plus stolen ones)
+    pub jobs_run: u64,
+    /// jobs this shard pulled from other shards' deques
+    pub stolen_in: u64,
+    /// jobs other shards pulled from this shard's deque
+    pub stolen_out: u64,
+    /// sessions placed on this shard
+    pub sessions: usize,
+    /// the shard's own serving report
+    pub report: SystemReport,
+}
+
+/// Configures and launches a [`PimSystem`] — or, with [`Self::channels`],
+/// a sharded multi-channel [`PimFabric`] via [`Self::build_fabric`].
 pub struct SystemBuilder {
     cfg: DramConfig,
     banks: usize,
@@ -124,6 +155,9 @@ pub struct SystemBuilder {
     max_batch: usize,
     capacity: usize,
     shared_cache: Option<Arc<ProgramCache>>,
+    channels: usize,
+    per_channel_capacity: Option<usize>,
+    fused: bool,
 }
 
 impl SystemBuilder {
@@ -135,16 +169,21 @@ impl SystemBuilder {
             max_batch: 16,
             capacity: DEFAULT_CACHE_CAPACITY,
             shared_cache: None,
+            channels: 1,
+            per_channel_capacity: None,
+            fused: false,
         }
     }
 
-    /// Use the first `n` banks of the geometry (default 1).
+    /// Use the first `n` banks of the geometry (default 1). For a fabric
+    /// ([`Self::build_fabric`]) this is banks *per channel*.
     pub fn banks(mut self, n: usize) -> Self {
         self.banks = n;
         self
     }
 
-    /// Session placement policy (default round-robin).
+    /// Session placement policy (default round-robin). A fabric applies
+    /// it at two levels: shard first, then bank within the shard.
     pub fn placement(mut self, p: Placement) -> Self {
         self.placement = p;
         self
@@ -166,19 +205,111 @@ impl SystemBuilder {
 
     /// Share an existing program cache instead of creating one (kernels
     /// compiled elsewhere under the same config fingerprint are reused).
+    /// A fabric built with a shared cache shares it across every shard.
     pub fn shared_cache(mut self, cache: Arc<ProgramCache>) -> Self {
         self.shared_cache = Some(cache);
         self
     }
 
+    /// Shard the system over the first `n` channels of the geometry
+    /// (default 1). Build the result with [`Self::build_fabric`].
+    pub fn channels(mut self, n: usize) -> Self {
+        self.channels = n;
+        self
+    }
+
+    /// Compiled programs *each shard's* private cache keeps resident
+    /// (defaults to the [`Self::cache_capacity`] value).
+    pub fn per_channel_cache_capacity(mut self, n: usize) -> Self {
+        self.per_channel_capacity = Some(n);
+        self
+    }
+
+    /// Compile serving kernels with the cross-op AAP fusion peephole
+    /// ([`crate::pim::compile::CompiledProgram::compile_fused`]): chained
+    /// logic ops drop their redundant scratch-row reloads, shrinking every
+    /// receipt's census/latency while staying bit-exact. Off by default —
+    /// app-kernel censuses are calibrated against the unfused lowering.
+    pub fn fuse_aap(mut self, on: bool) -> Self {
+        self.fused = on;
+        self
+    }
+
     /// Spin up the leader state and one worker thread per bank.
     pub fn build(self) -> PimSystem {
+        assert_eq!(
+            self.channels, 1,
+            "multi-channel systems are built with build_fabric()"
+        );
         let all = BankId::all(&self.cfg.geometry);
         assert!(self.banks >= 1 && self.banks <= all.len(), "bank count outside geometry");
         let banks: Vec<BankId> = all.into_iter().take(self.banks).collect();
+        self.build_on(banks)
+    }
+
+    /// Build a sharded multi-channel fabric: one coordinator shard per
+    /// channel (each with its own workers, row slabs, program cache, and
+    /// metrics), fronted by two-level placement and work stealing. See
+    /// [`crate::coordinator::fabric`].
+    pub fn build_fabric(self) -> PimFabric {
+        let (shards, placement) = self.fabric_shards();
+        PimFabric::launch(shards, placement)
+    }
+
+    /// The fabric's shard systems (one per channel) plus the shared
+    /// placement policy — split out so tests can assemble a fabric core
+    /// without spawning dispatcher threads.
+    pub(crate) fn fabric_shards(self) -> (Vec<PimSystem>, Placement) {
+        let g = self.cfg.geometry.clone();
+        assert!(
+            self.channels >= 1 && self.channels <= g.channels,
+            "channel count outside geometry"
+        );
+        let per_channel = g.ranks_per_channel * g.banks_per_rank;
+        assert!(
+            self.banks >= 1 && self.banks <= per_channel,
+            "banks-per-channel outside geometry"
+        );
+        let placement = self.placement;
+        let mut shards = Vec::with_capacity(self.channels);
+        for channel in 0..self.channels {
+            let banks: Vec<BankId> = BankId::all(&g)
+                .into_iter()
+                .filter(|b| b.channel == channel)
+                .take(self.banks)
+                .collect();
+            let shard_builder = SystemBuilder {
+                cfg: self.cfg.clone(),
+                banks: self.banks,
+                placement: self.placement,
+                max_batch: self.max_batch,
+                capacity: self.per_channel_capacity.unwrap_or(self.capacity),
+                shared_cache: self.shared_cache.clone(),
+                channels: 1,
+                per_channel_capacity: None,
+                fused: self.fused,
+            };
+            shards.push(shard_builder.build_on(banks));
+        }
+        (shards, placement)
+    }
+
+    /// Spin up one system over an explicit bank list.
+    fn build_on(self, banks: Vec<BankId>) -> PimSystem {
         let n_banks = banks.len();
         let cache = match self.shared_cache {
-            Some(shared) => shared,
+            Some(shared) => {
+                // fusion is a cache-wide policy: a shared cache must agree
+                // with the builder's knob, or the knob would be silently
+                // ignored
+                assert_eq!(
+                    shared.is_fused(),
+                    self.fused,
+                    "shared cache fusion policy conflicts with fuse_aap()"
+                );
+                shared
+            }
+            None if self.fused => Arc::new(ProgramCache::new_fused(self.capacity)),
             None => Arc::new(ProgramCache::new(self.capacity)),
         };
         let metrics = Metrics::with_cache(n_banks, cache.clone());
@@ -274,6 +405,13 @@ impl PimSystem {
     /// The shared compiled-program cache (all workers consult it).
     pub fn program_cache(&self) -> &Arc<ProgramCache> {
         &self.core.cache
+    }
+
+    /// Cost units currently queued across every bank — the shard-level
+    /// load the fabric's placement and steal-victim ordering add to its
+    /// own deque costs.
+    pub(crate) fn queued_cost(&self) -> usize {
+        self.core.router.lock().unwrap().total_load()
     }
 
     pub(crate) fn alloc_row(&self, bank: usize, subarray: usize) -> Result<RowHandle, PimError> {
@@ -373,6 +511,10 @@ impl PimSystem {
             cache_hit_rate: cache.hit_rate(),
             amortized_compile_ns: cache.amortized_compile_ns(),
             worker_failures: self.core.failures.lock().unwrap().clone(),
+            shards: Vec::new(),
+            jobs: 0,
+            steals: 0,
+            pinned_skips: 0,
         }
     }
 
@@ -383,7 +525,7 @@ impl PimSystem {
     }
 }
 
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {

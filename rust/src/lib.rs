@@ -36,6 +36,10 @@
 //!   `Result<T, PimError>`; underneath, a bank-parallel router (with
 //!   per-bank row slabs and cost-weighted load), per-bank batchers, and
 //!   one worker per bank replay compiled programs kernel-at-a-time.
+//!   Above that, the sharded multi-channel fabric
+//!   ([`coordinator::fabric`]) runs one such coordinator per channel —
+//!   private caches, slabs, and metrics per shard — with two-level
+//!   placement and cost-weighted work stealing of unplaced jobs.
 //! * [`apps`] — application kernels compiled to PIM programs: adders,
 //!   shift-and-add multiplication, GF(2⁸), AES steps, Reed-Solomon —
 //!   each a thin client of the same serving API (`apps::ElementCtx`).

@@ -6,7 +6,7 @@
 //! shiftdram report [table1|table2|table3|table4|table5|fig2|fig4|validate|baselines|all] [--full]
 //! shiftdram workload --shifts N [--seed S]
 //! shiftdram mc [--trials N] [--backend pjrt|native] [--node 22nm]
-//! shiftdram serve --banks N --ops K [--batch B]
+//! shiftdram serve --banks N --ops K [--batch B] [--channels C]
 //! shiftdram demo [gf|aes|rs|mul|adder]
 //! ```
 
@@ -83,6 +83,11 @@ fn main() {
             let banks = opt_usize(&args, "--banks", 8);
             let ops = opt_usize(&args, "--ops", 1024);
             let batch = opt_usize(&args, "--batch", 16);
+            let channels = opt_usize(&args, "--channels", 1);
+            if channels > 1 {
+                serve_fabric(&cfg, channels, banks, ops, batch);
+                return;
+            }
             let sys = SystemBuilder::new(&cfg).banks(banks).max_batch(batch).build();
             // one session per bank; each allocs one system-placed row and
             // submits shift kernels against its handle
@@ -126,6 +131,63 @@ fn main() {
             );
             std::process::exit(2);
         }
+    }
+}
+
+/// `serve --channels C`: the sharded fabric path. Unplaced shift jobs
+/// (an uneven heavy/light mix) are all homed on shard 0; idle shards pull
+/// whole kernels off its deque, and the report shows the traffic.
+fn serve_fabric(cfg: &DramConfig, channels: usize, banks: usize, ops: usize, batch: usize) {
+    use shiftdram::coordinator::JobSpec;
+    use shiftdram::util::{BitRow, Rng};
+
+    let fabric = SystemBuilder::new(cfg)
+        .channels(channels)
+        .banks(banks)
+        .max_batch(batch)
+        .build_fabric();
+    let mut rng = Rng::new(7);
+    let cols = cfg.geometry.cols_per_row;
+    let tickets: Vec<_> = (0..ops)
+        .map(|i| {
+            let n = if i % 4 == 0 { 16 } else { 1 };
+            let spec = JobSpec::new(Kernel::shift_by(n, ShiftDir::Right))
+                .input(0, BitRow::random(cols, &mut rng))
+                .read_back(0);
+            fabric.submit_job_on(0, spec)
+        })
+        .collect();
+    for t in tickets {
+        t.wait().expect("fabric job");
+    }
+    let r = fabric.shutdown();
+    println!(
+        "{} channels x {} banks, {} jobs: makespan {:.3} us, {:.2} MOps/s aggregate, \
+         {} steals ({} pinned skips)",
+        r.shards.len(),
+        banks,
+        r.jobs,
+        r.makespan_ps as f64 / 1e6,
+        r.throughput_mops,
+        r.steals,
+        r.pinned_skips
+    );
+    for s in &r.shards {
+        println!(
+            "  shard {}: {} jobs run ({} stolen in, {} stolen out), {} kernels, \
+             makespan {:.3} us, cache {:.1}% hit",
+            s.shard,
+            s.jobs_run,
+            s.stolen_in,
+            s.stolen_out,
+            s.report.kernels,
+            s.report.makespan_ps as f64 / 1e6,
+            100.0 * s.report.cache_hit_rate
+        );
+    }
+    if !r.is_clean() {
+        eprintln!("worker failures: {:?}", r.worker_failures);
+        std::process::exit(1);
     }
 }
 

@@ -154,6 +154,9 @@ pub struct CompiledProgram {
     latency_ps: u64,
     energy: EnergyBreakdown,
     n_slots: usize,
+    /// scratch-row copies removed by the cross-op AAP fusion peephole
+    /// (0 unless compiled with fusion enabled)
+    elided_aaps: u64,
 }
 
 impl CompiledProgram {
@@ -162,9 +165,35 @@ impl CompiledProgram {
         Self::compile_with_fingerprint(ops, cfg, cfg.fingerprint())
     }
 
+    /// Like [`Self::compile`] but with the cross-op AAP fusion peephole
+    /// enabled (see [`Self::compile_opts`]).
+    pub fn compile_fused(ops: &[PimOp], cfg: &DramConfig) -> Self {
+        Self::compile_opts(ops, cfg, cfg.fingerprint(), true)
+    }
+
     /// Like [`Self::compile`] but with the fingerprint precomputed by the
     /// caller (the hot path computes it once per worker, not per request).
     pub fn compile_with_fingerprint(ops: &[PimOp], cfg: &DramConfig, cfg_fp: u64) -> Self {
+        Self::compile_opts(ops, cfg, cfg_fp, false)
+    }
+
+    /// Lower, optionally peephole-fuse, and price `ops` against `cfg`.
+    ///
+    /// With `fuse_aap` set, the cross-op AAP fusion peephole runs once at
+    /// compile time, before pricing: when one op's *trailing* AAP
+    /// (`Aap { src: S, dst: D }` — materializing its result row `D` from
+    /// scratch row `S`) is immediately followed by the next op's *leading*
+    /// AAP `Aap { src: D, dst: S }` (re-loading the same operand into the
+    /// same scratch row), the leading AAP is elided — `S` still holds
+    /// exactly `D`'s value, so the copy through the scratch row is
+    /// redundant at the bit level. Adjacent commands only, so nothing can
+    /// disturb `S` or `D` in between, and the test is on canonical *slots*
+    /// (equal slots stay equal under every rebinding), so one fused
+    /// program remains valid for every placement. Chained logic ops
+    /// (`And{a,b,t}; And{t,c,u}` …) each save one AAP; census, latency,
+    /// and energy footprints shrink accordingly while functional replay
+    /// stays bit-exact.
+    pub fn compile_opts(ops: &[PimOp], cfg: &DramConfig, cfg_fp: u64, fuse_aap: bool) -> Self {
         let timer = CommandTimer::new(cfg.timing.clone());
         let model = EnergyModel::new(&cfg.energy, &cfg.timing);
         let mut cmds: Vec<Command> = Vec::new();
@@ -173,13 +202,26 @@ impl CompiledProgram {
         let mut total_latency = 0u64;
         let mut total_energy = EnergyBreakdown::default();
         let mut n_slots = 0usize;
+        let mut elided_aaps = 0u64;
 
         for op in ops {
             let _ = op.map_rows(|r| {
                 n_slots = n_slots.max(r + 1);
                 r
             });
-            let lowered = op.lower();
+            let mut lowered = op.lower();
+            if fuse_aap {
+                if let (
+                    Some(&Command::Aap { src: prev_src, dst: prev_dst }),
+                    Some(&Command::Aap { src: next_src, dst: next_dst }),
+                ) = (cmds.last(), lowered.first())
+                {
+                    if next_src == prev_dst && next_dst == prev_src {
+                        lowered.remove(0);
+                        elided_aaps += 1;
+                    }
+                }
+            }
             let cmd_start = cmds.len();
             let mut latency = 0u64;
             let mut last_latency = 0u64;
@@ -214,6 +256,7 @@ impl CompiledProgram {
             latency_ps: total_latency,
             energy: total_energy,
             n_slots,
+            elided_aaps,
         }
     }
 
@@ -253,6 +296,12 @@ impl CompiledProgram {
     /// Number of data-row slots a binding must provide.
     pub fn n_slots(&self) -> usize {
         self.n_slots
+    }
+
+    /// Scratch-row copies the cross-op AAP fusion peephole removed (0 for
+    /// programs compiled without fusion).
+    pub fn elided_aaps(&self) -> u64 {
+        self.elided_aaps
     }
 
     pub fn is_empty(&self) -> bool {
@@ -396,6 +445,9 @@ impl CacheStats {
 /// most once per key while it stays resident.
 pub struct ProgramCache {
     capacity: usize,
+    /// compile with the cross-op AAP fusion peephole — a *cache-wide*
+    /// policy, so one shape always maps to one program within a cache
+    fused: bool,
     inner: Mutex<CacheInner>,
     hits: AtomicU64,
     misses: AtomicU64,
@@ -406,9 +458,20 @@ pub struct ProgramCache {
 
 impl ProgramCache {
     pub fn new(capacity: usize) -> Self {
+        Self::with_fusion(capacity, false)
+    }
+
+    /// A cache whose programs are compiled with the cross-op AAP fusion
+    /// peephole ([`CompiledProgram::compile_fused`]).
+    pub fn new_fused(capacity: usize) -> Self {
+        Self::with_fusion(capacity, true)
+    }
+
+    fn with_fusion(capacity: usize, fused: bool) -> Self {
         assert!(capacity > 0, "cache capacity must be positive");
         ProgramCache {
             capacity,
+            fused,
             inner: Mutex::new(CacheInner { map: HashMap::new(), tick: 0 }),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -416,6 +479,11 @@ impl ProgramCache {
             evictions: AtomicU64::new(0),
             compile_ns: AtomicU64::new(0),
         }
+    }
+
+    /// Whether this cache compiles with the AAP fusion peephole.
+    pub fn is_fused(&self) -> bool {
+        self.fused
     }
 
     /// The process-wide cache the application layer defaults to.
@@ -464,7 +532,7 @@ impl ProgramCache {
         let t0 = Instant::now();
         let ops = build();
         let prog =
-            Arc::new(CompiledProgram::compile_with_fingerprint(ops.as_slice(), cfg, cfg_fp));
+            Arc::new(CompiledProgram::compile_opts(ops.as_slice(), cfg, cfg_fp, self.fused));
         self.compile_ns
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         self.misses.fetch_add(1, Ordering::Relaxed);
@@ -703,5 +771,111 @@ mod tests {
         assert!(prog.is_empty());
         assert_eq!(prog.latency_ps(), 0);
         assert_eq!(prog.n_slots(), 0);
+    }
+
+    #[test]
+    fn aap_peephole_elides_scratch_copies_and_stays_bit_exact() {
+        use crate::dram::subarray::Subarray;
+        use crate::pim::executor;
+        use crate::util::{BitRow, Rng};
+
+        let c = cfg();
+        // And(0,1→2); And(2,3→4); Or(4,1→5): each successor's leading
+        // Aap{Data(d)→Compute(0)} re-loads the row its predecessor's
+        // trailing Aap{Compute(0)→Data(d)} just wrote — two elisions
+        let ops = [
+            PimOp::And { a: 0, b: 1, dst: 2 },
+            PimOp::And { a: 2, b: 3, dst: 4 },
+            PimOp::Or { a: 4, b: 1, dst: 5 },
+        ];
+        let plain = CompiledProgram::compile(&ops, &c);
+        let fused = CompiledProgram::compile_fused(&ops, &c);
+        assert_eq!(plain.elided_aaps(), 0);
+        assert_eq!(fused.elided_aaps(), 2);
+        // census, latency, and energy totals all shrink by the elided AAPs
+        assert_eq!(fused.census().aap + 2, plain.census().aap);
+        assert_eq!(fused.census().total() + 2, plain.census().total());
+        assert_eq!(fused.latency_ps() + 2 * c.timing.t_aap(), plain.latency_ps());
+        assert!(fused.energy().total_pj() < plain.energy().total_pj());
+        assert_eq!(fused.blocks().len(), plain.blocks().len(), "blocks stay 1:1 with ops");
+        // functional replay is bit-exact: both command streams land every
+        // data row in the same state
+        let mut rng = Rng::new(21);
+        let mut sa_plain = Subarray::new(8, 256);
+        let mut sa_fused = Subarray::new(8, 256);
+        for r in 0..4 {
+            let bits = BitRow::random(256, &mut rng);
+            sa_plain.write_row(r, bits.clone());
+            sa_fused.write_row(r, bits);
+        }
+        executor::run(&mut sa_plain, plain.commands());
+        executor::run(&mut sa_fused, fused.commands());
+        for r in 0..8 {
+            assert_eq!(sa_fused.read_row(r), sa_plain.read_row(r), "data row {r}");
+        }
+        // the engine's checking mode asserts the fused census against its
+        // own per-command replay of the fused stream
+        let mut sim = crate::sim::BankSim::new(c.clone());
+        sim.check_bit_exact = true;
+        sim.run_compiled(0, &fused, None);
+    }
+
+    #[test]
+    fn peephole_leaves_shift_chains_alone() {
+        // shift lowerings hand off through the migration rows, never a
+        // reverse AAP pair — fused output is identical to plain
+        let c = cfg();
+        let ops = [
+            PimOp::ShiftBy { src: 0, dst: 0, n: 2, dir: ShiftDir::Right },
+            PimOp::ShiftBy { src: 0, dst: 1, n: 3, dir: ShiftDir::Left },
+        ];
+        let plain = CompiledProgram::compile(&ops, &c);
+        let fused = CompiledProgram::compile_fused(&ops, &c);
+        assert_eq!(fused.elided_aaps(), 0);
+        assert_eq!(fused.census(), plain.census());
+        assert_eq!(fused.latency_ps(), plain.latency_ps());
+        assert_eq!(fused.commands(), plain.commands());
+    }
+
+    #[test]
+    fn redundant_copy_back_collapses_to_an_empty_block() {
+        use crate::sim::BankSim;
+        use crate::util::{BitRow, Rng};
+
+        let c = cfg();
+        // Copy{0→1}; Copy{1→0}: the second copy's only command is the
+        // exact reverse of the first — it fuses away entirely
+        let ops = [PimOp::Copy { src: 0, dst: 1 }, PimOp::Copy { src: 1, dst: 0 }];
+        let fused = CompiledProgram::compile_fused(&ops, &c);
+        assert_eq!(fused.elided_aaps(), 1);
+        assert_eq!(fused.census().aap, 1);
+        assert_eq!(fused.blocks()[1].cmd_len, 0, "second copy fully elided");
+        assert_eq!(fused.blocks()[1].latency_ps, 0);
+        assert_eq!(fused.blocks()[1].lead_latency_ps, 0);
+        // the empty block still replays through the engine (its semantic
+        // apply is a no-op) and the rebase still works
+        let mut sim = BankSim::new(c.clone());
+        let mut rng = Rng::new(3);
+        let bits = BitRow::random(c.geometry.cols_per_row, &mut rng);
+        sim.bank().subarray(0).write_row(5, bits.clone());
+        sim.run_compiled(0, &fused, Some(&[5, 6]));
+        assert_eq!(sim.bank().subarray(0).read_row(6), &bits);
+        assert_eq!(sim.bank().subarray(0).read_row(5), &bits);
+        assert_eq!(sim.now_ps, c.timing.t_aap(), "one AAP of simulated time");
+    }
+
+    #[test]
+    fn fused_cache_policy_is_cache_wide() {
+        let c = cfg();
+        let ops = [PimOp::And { a: 0, b: 1, dst: 2 }, PimOp::And { a: 2, b: 3, dst: 4 }];
+        let plain_cache = ProgramCache::new(4);
+        let fused_cache = ProgramCache::new_fused(4);
+        assert!(!plain_cache.is_fused());
+        assert!(fused_cache.is_fused());
+        let (p, _) = plain_cache.get_or_compile_ops(&ops, &c);
+        let (f, _) = fused_cache.get_or_compile_ops(&ops, &c);
+        assert_eq!(p.elided_aaps(), 0);
+        assert_eq!(f.elided_aaps(), 1);
+        assert_eq!(f.census().aap + 1, p.census().aap);
     }
 }

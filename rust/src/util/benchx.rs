@@ -1,6 +1,8 @@
 //! Minimal criterion-style micro-benchmark harness (criterion is not
 //! available in the offline build). Provides warm-up, timed iterations,
-//! mean/σ/min reporting, and a `black_box` to defeat const-folding.
+//! mean/σ/min reporting, a `black_box` to defeat const-folding, and a
+//! machine-readable [`JsonReport`] sink (`BENCH_<name>.json`) so CI can
+//! archive the perf trajectory as artifacts.
 
 use std::hint::black_box as std_black_box;
 use std::time::{Duration, Instant};
@@ -118,6 +120,101 @@ impl Bench {
     }
 }
 
+/// Collects [`Measurement`]s and named scalar metrics of one bench binary
+/// and writes them as `BENCH_<name>.json` (hand-rolled JSON — no serde
+/// offline). CI uploads these files as artifacts, giving every run a
+/// machine-readable perf record.
+#[derive(Clone, Debug)]
+pub struct JsonReport {
+    bench: String,
+    measurements: Vec<Measurement>,
+    metrics: Vec<(String, f64)>,
+}
+
+impl JsonReport {
+    pub fn new(bench: &str) -> Self {
+        JsonReport { bench: bench.to_string(), measurements: Vec::new(), metrics: Vec::new() }
+    }
+
+    /// Record one measurement (call sites wrap `Bench::run*`).
+    pub fn push(&mut self, m: &Measurement) {
+        self.measurements.push(m.clone());
+    }
+
+    /// Record a named scalar (a speedup, a steal count, a throughput).
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.push((name.to_string(), value));
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(&self.bench)));
+        s.push_str("  \"measurements\": [\n");
+        for (i, m) in self.measurements.iter().enumerate() {
+            let sep = if i + 1 < self.measurements.len() { "," } else { "" };
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {}, \
+                 \"std_dev_ns\": {}, \"min_ns\": {}, \"elements\": {}, \
+                 \"throughput_per_s\": {}}}{sep}\n",
+                json_escape(&m.name),
+                m.iters,
+                json_f64(m.mean.as_secs_f64() * 1e9),
+                json_f64(m.std_dev.as_secs_f64() * 1e9),
+                json_f64(m.min.as_secs_f64() * 1e9),
+                match m.elements {
+                    Some(e) => e.to_string(),
+                    None => "null".to_string(),
+                },
+                match m.throughput() {
+                    Some(t) => json_f64(t),
+                    None => "null".to_string(),
+                },
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"metrics\": {");
+        for (i, (name, value)) in self.metrics.iter().enumerate() {
+            let sep = if i + 1 < self.metrics.len() { "," } else { "" };
+            s.push_str(&format!("\"{}\": {}{sep}", json_escape(name), json_f64(*value)));
+        }
+        s.push_str("}\n}\n");
+        s
+    }
+
+    /// Write `BENCH_<name>.json` into the working directory (the crate
+    /// root under `cargo bench`) and return its path.
+    pub fn write(&self) -> std::io::Result<std::path::PathBuf> {
+        let path = std::path::PathBuf::from(format!("BENCH_{}.json", self.bench));
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+}
+
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,5 +246,48 @@ mod tests {
         };
         let m = b.run_elems("tp", 1000, || black_box(42u64).wrapping_mul(3));
         assert!(m.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_report_is_well_formed() {
+        let mut jr = JsonReport::new("unit");
+        jr.push(&Measurement {
+            name: "alpha/\"quoted\"".to_string(),
+            iters: 7,
+            mean: Duration::from_nanos(1500),
+            std_dev: Duration::from_nanos(10),
+            min: Duration::from_nanos(1400),
+            elements: Some(64),
+        });
+        jr.push(&Measurement {
+            name: "beta".to_string(),
+            iters: 3,
+            mean: Duration::from_nanos(100),
+            std_dev: Duration::from_nanos(1),
+            min: Duration::from_nanos(99),
+            elements: None,
+        });
+        jr.metric("speedup", 2.5);
+        jr.metric("steals", 3.0);
+        let json = jr.to_json();
+        assert!(json.contains("\"bench\": \"unit\""));
+        assert!(json.contains("alpha/\\\"quoted\\\""));
+        assert!(json.contains("\"elements\": 64"));
+        assert!(json.contains("\"elements\": null"));
+        assert!(json.contains("\"speedup\": 2.5"));
+        assert!(json.contains("\"steals\": 3"));
+        // structurally: braces/brackets balance
+        for (open, close) in [('{', '}'), ('[', ']')] {
+            let o = json.matches(open).count();
+            let c = json.matches(close).count();
+            assert_eq!(o, c, "unbalanced {open}{close}");
+        }
+    }
+
+    #[test]
+    fn json_f64_guards_non_finite() {
+        assert_eq!(json_f64(1.5), "1.5");
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_f64(f64::INFINITY), "null");
     }
 }
