@@ -160,6 +160,61 @@ fn main() {
     let report = sys.shutdown();
     assert!(report.is_clean(), "workers must exit clean: {:?}", report.worker_failures);
 
+    // ── reorderer: interleaved two-client workload, FIFO vs window-8 ─
+    // two sessions on ONE bank alternate two kernel shapes (A B A B …):
+    // FIFO dispatch finds no same-shape adjacency and replays every
+    // kernel separately; the hazard-checked reorder window regroups the
+    // batch into merged runs — fewer replays, more kernels per replay —
+    // while results stay bit-identical (tests/reorder_differential.rs).
+    const INTERLEAVED: usize = 64;
+    let run_interleaved = |window: usize| {
+        let sys = SystemBuilder::new(&cfg)
+            .banks(1)
+            .max_batch(32)
+            .reorder_window(window)
+            .build();
+        let c1 = sys.client_on(0);
+        let c2 = sys.client_on(0);
+        let r1 = c1.alloc().expect("row");
+        let r2 = c2.alloc().expect("row");
+        let (k1, k2) = (
+            Kernel::shift_by(2, ShiftDir::Right),
+            Kernel::shift_by(5, ShiftDir::Right),
+        );
+        for _ in 0..INTERLEAVED / 2 {
+            c1.submit(&k1, std::slice::from_ref(&r1));
+            c2.submit(&k2, std::slice::from_ref(&r2));
+        }
+        sys.flush();
+        sys.shutdown()
+    };
+    let fifo_report = b.run_elems(
+        &format!("serve/{INTERLEAVED}kernels_interleaved_fifo"),
+        INTERLEAVED as u64,
+        || run_interleaved(0),
+    );
+    jr.push(&fifo_report);
+    let planned_report = b.run_elems(
+        &format!("serve/{INTERLEAVED}kernels_interleaved_window8"),
+        INTERLEAVED as u64,
+        || run_interleaved(8),
+    );
+    jr.push(&planned_report);
+    let fifo = run_interleaved(0);
+    let planned = run_interleaved(8);
+    let fifo_kpr = fifo.kernels as f64 / fifo.replays as f64;
+    let planned_kpr = planned.kernels as f64 / planned.replays as f64;
+    println!(
+        "interleaved 2-client mix: FIFO {} replays ({:.2} kernels/replay) vs window-8 \
+         {} replays ({:.2} kernels/replay), {} reordered, {} hazard-blocked",
+        fifo.replays, fifo_kpr, planned.replays, planned_kpr, planned.reordered,
+        planned.hazard_blocked
+    );
+    jr.metric("interleaved_fifo_replays", fifo.replays as f64);
+    jr.metric("interleaved_window8_replays", planned.replays as f64);
+    jr.metric("interleaved_window8_kernels_per_replay", planned_kpr);
+    jr.metric("interleaved_window8_reordered", planned.reordered as f64);
+
     // ── fabric: shard-scaling axis (1 vs 2 channels, uneven mix) ─────
     // wall-clock of pushing 64 unplaced jobs (every 4th heavy) skewed
     // onto shard 0 and waiting them all; with 2 channels the idle shard
@@ -244,4 +299,18 @@ fn main() {
         kernel_speedup >= 1.0,
         "kernel-granular submission must meet the per-op path, got {kernel_speedup:.2}x"
     );
+    // 3. the reorderer's acceptance: on the interleaved two-client mix,
+    //    window-8 dispatch must serve the same kernels with FEWER merged
+    //    replays than FIFO (more kernels per replay), having actually
+    //    hoisted kernels out of FIFO position
+    assert_eq!(fifo.kernels, planned.kernels);
+    assert_eq!(fifo.replays, fifo.kernels, "FIFO: one replay per kernel");
+    assert!(
+        planned.replays < fifo.replays,
+        "reordered dispatch must merge replays: {} vs {}",
+        planned.replays,
+        fifo.replays
+    );
+    assert!(planned_kpr > fifo_kpr, "kernels-per-replay must improve");
+    assert!(planned.reordered > 0, "the interleaving forces real hoists");
 }

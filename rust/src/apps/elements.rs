@@ -71,6 +71,10 @@ pub struct ElementCtx {
     pub aaps: usize,
     pub tras: usize,
     pub dras: usize,
+    /// scratch-reload AAPs the cross-op fusion peephole elided across
+    /// everything executed (0 when the context's cache is unfused);
+    /// `aaps + elided_aaps` recovers the unfused calibration totals
+    pub elided_aaps: usize,
     cols: usize,
     client: PimClient,
     rows: Vec<RowHandle>,
@@ -105,7 +109,10 @@ impl ElementCtx {
     /// Context with an explicit pricing config and kernel cache. The
     /// config's timing/energy model is kept; its geometry is replaced via
     /// [`DramConfig::single_channel`] — a single bank of one `rows × cols`
-    /// subarray sized to this context.
+    /// subarray sized to this context. Fusion policy follows the cache
+    /// ([`ProgramCache::is_fused`]): the process-wide default is fused,
+    /// and passing an unfused cache serves the paper's literal per-op
+    /// lowering.
     pub fn with_config(
         rows: usize,
         cols: usize,
@@ -115,12 +122,17 @@ impl ElementCtx {
     ) -> Self {
         assert!(cols % width == 0, "row must pack whole elements");
         let cfg = cfg.single_channel(rows, cols);
-        let sys = SystemBuilder::new(&cfg).banks(1).shared_cache(cache).build();
+        let fused = cache.is_fused();
+        let sys = SystemBuilder::new(&cfg)
+            .banks(1)
+            .shared_cache(cache)
+            .fuse_aap(fused)
+            .build();
         let client = sys.client();
         let handles = client
             .alloc_rows(rows)
             .expect("context rows fit the freshly built subarray");
-        ElementCtx { width, aaps: 0, tras: 0, dras: 0, cols, client, rows: handles }
+        ElementCtx { width, aaps: 0, tras: 0, dras: 0, elided_aaps: 0, cols, client, rows: handles }
     }
 
     pub fn cols(&self) -> usize {
@@ -154,6 +166,7 @@ impl ElementCtx {
             .run(kernel, &self.rows)
             .expect("context kernels execute on the private bank");
         self.count(&receipt.census);
+        self.elided_aaps += receipt.elided_aaps as usize;
     }
 
     fn count(&mut self, census: &CommandCensus) {

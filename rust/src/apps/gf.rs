@@ -270,7 +270,17 @@ mod tests {
         gf_mul(&mut cached, 0, 1, 2);
         build_gf_mul(&mut eager, 0, 1, 2); // ElementCtx is the eager tape
         assert_eq!(cached.row(2), eager.row(2));
-        assert_eq!(cached.aaps, eager.aaps, "census identical across paths");
+        // fused-default re-baseline: the whole-kernel path compiles with
+        // the cross-op AAP peephole, the per-op eager path cannot fuse
+        // across its single-op programs — the elided count reconciles the
+        // two censuses exactly
+        assert!(cached.elided_aaps > 0, "gf_mul's chained logic ops must fuse");
+        assert_eq!(eager.elided_aaps, 0, "single-op programs have nothing to fuse");
+        assert_eq!(
+            cached.aaps + cached.elided_aaps,
+            eager.aaps,
+            "fused + elided recovers the unfused census"
+        );
         assert_eq!(cached.tras, eager.tras);
         assert_eq!(cached.dras, eager.dras);
     }

@@ -19,13 +19,12 @@ pub struct Batch<T> {
 impl<T> Batch<T> {
     /// Split the batch into maximal runs of consecutive items whose keys
     /// compare equal, as `(start, len)` ranges. FIFO order is preserved —
-    /// requests are never reordered (they may carry read-after-write
-    /// dependencies) — so each run of same-shape compute requests can be
-    /// served from one compiled program fetch. The serving worker currently
-    /// gets the same effect from a one-entry memo that survives across
-    /// batches (`coordinator::system`); this helper is the grouping
-    /// primitive for the dependency-aware batching planned in ROADMAP
-    /// "Open items".
+    /// this helper never moves anything; it only *finds* adjacency. The
+    /// dependency-aware reorderer ([`crate::coordinator::reorder`])
+    /// is what *creates* adjacency: it hoists non-adjacent same-shape
+    /// kernels together (hazard-checked against row footprints) and marks
+    /// the merged run for the worker, which serves it from one compiled
+    /// program fetch and one merged replay.
     pub fn runs_by_key<K: PartialEq>(&self, key: impl Fn(&T) -> K) -> Vec<(usize, usize)> {
         let mut runs = Vec::new();
         let mut start = 0usize;
@@ -126,16 +125,92 @@ impl<T> OverflowDeque<T> {
     /// the stolen item (if any) and how many pinned items were skipped
     /// over before finding it.
     pub fn steal_back(&mut self, stealable: impl Fn(&T) -> bool) -> (Option<T>, usize) {
-        let mut skipped = 0;
-        for i in (0..self.items.len()).rev() {
-            if stealable(&self.items[i].0) {
+        let (mut run, skipped) = self.steal_back_run(0, stealable, |_, _| false);
+        (run.pop(), skipped)
+    }
+
+    /// Owner-side merged-run drain: pop the front item unconditionally
+    /// (FIFO), then scan up to `window` following entries and also take
+    /// those `merge` admits against the first item (same-shape unpinned
+    /// jobs, in the fabric's case). Taken items keep their FIFO order;
+    /// everything else — pinned tasks included — stays in place with its
+    /// order preserved.
+    ///
+    /// Every admission decision is evaluated against the **live** queue
+    /// position at the moment of removal: earlier removals shift the
+    /// deque, so a cached index/verdict could silently land on a
+    /// different (possibly pinned) entry. The regression tests below pin
+    /// this re-check behavior down.
+    pub fn pop_front_run(&mut self, window: usize, merge: impl Fn(&T, &T) -> bool) -> Vec<T> {
+        let Some(first) = self.pop_front() else {
+            return Vec::new();
+        };
+        let mut run = vec![first];
+        let mut i = 0usize;
+        let mut scanned = 0usize;
+        while i < self.items.len() && scanned < window {
+            scanned += 1;
+            // re-evaluated in place — `i` always names the element being
+            // judged, not one remembered from before a removal
+            if merge(&run[0], &self.items[i].0) {
                 let (item, cost) = self.items.remove(i).expect("index in range");
                 self.queued_cost -= cost;
-                return (Some(item), skipped);
+                run.push(item);
+            } else {
+                i += 1;
             }
-            skipped += 1;
         }
-        (None, skipped)
+        run
+    }
+
+    /// Thief-side run steal: find the newest item `stealable` admits (the
+    /// seed), then examine at most `window` further entries toward the
+    /// front and take those that are both stealable and `same` as the
+    /// seed — a whole merged run migrates in one steal. Returns the run
+    /// in FIFO (oldest-first) order plus how many **non-stealable**
+    /// (pinned) items the scan stepped over and left in place; stealable
+    /// items of another shape are passed over without being counted.
+    /// Bounding the post-seed scan keeps a thief's pass O(window) past
+    /// the seed instead of walking a deep victim deque under its lock.
+    ///
+    /// Like [`Self::pop_front_run`], the `stealable` predicate is
+    /// re-checked per element on the live deque (scanning back-to-front,
+    /// removals never shift the indices still to be visited), so a pinned
+    /// task can never be swept up by a stale decision.
+    pub fn steal_back_run(
+        &mut self,
+        window: usize,
+        stealable: impl Fn(&T) -> bool,
+        same: impl Fn(&T, &T) -> bool,
+    ) -> (Vec<T>, usize) {
+        let mut taken_rev: Vec<T> = Vec::new();
+        let mut skipped = 0usize;
+        let mut past_seed = 0usize;
+        let mut i = self.items.len();
+        while i > 0 && taken_rev.len() <= window {
+            if !taken_rev.is_empty() {
+                if past_seed == window {
+                    break;
+                }
+                past_seed += 1;
+            }
+            i -= 1;
+            let admissible = stealable(&self.items[i].0);
+            let admit = admissible
+                && match taken_rev.first() {
+                    Some(seed) => same(seed, &self.items[i].0),
+                    None => true,
+                };
+            if admit {
+                let (item, cost) = self.items.remove(i).expect("index in range");
+                self.queued_cost -= cost;
+                taken_rev.push(item);
+            } else if !admissible {
+                skipped += 1;
+            }
+        }
+        taken_rev.reverse();
+        (taken_rev, skipped)
     }
 
     /// Total cost units queued (the steal-victim ordering key).
@@ -214,6 +289,116 @@ mod tests {
         assert_eq!(q.pop_front(), Some("c"));
         assert_eq!(q.pop_front(), None);
         assert_eq!(q.queued_cost(), 0);
+        assert!(q.is_empty());
+    }
+
+    /// (name, shape, pinned) — the shape models a kernel's merge key.
+    type Task = (&'static str, u32, bool);
+
+    fn unpinned(t: &Task) -> bool {
+        !t.2
+    }
+
+    fn same_shape(a: &Task, b: &Task) -> bool {
+        a.1 == b.1
+    }
+
+    #[test]
+    fn pop_front_run_takes_same_shape_and_leaves_pinned_in_place() {
+        let mut q: OverflowDeque<Task> = OverflowDeque::new();
+        q.push_back(("a1", 1, false), 2);
+        q.push_back(("p", 1, true), 10); // pinned, same shape — must stay
+        q.push_back(("a2", 1, false), 2);
+        q.push_back(("b", 2, false), 3);
+        q.push_back(("a3", 1, false), 2);
+        let run = q.pop_front_run(8, |f, t| unpinned(t) && same_shape(f, t));
+        assert_eq!(run, vec![("a1", 1, false), ("a2", 1, false), ("a3", 1, false)]);
+        // everything not taken is still there, order preserved
+        assert_eq!(q.pop_front(), Some(("p", 1, true)));
+        assert_eq!(q.pop_front(), Some(("b", 2, false)));
+        assert_eq!(q.pop_front(), None);
+        assert_eq!(q.queued_cost(), 0);
+    }
+
+    #[test]
+    fn pop_front_run_regression_pinned_recheck_after_queue_mutation() {
+        // Regression (steal/merge scan vs queue mutation): taking "a2"
+        // shifts every later entry one slot down. An implementation that
+        // cached its scan verdicts by index would now judge the pinned
+        // entry with "a3"'s stale verdict and sweep it into the run. The
+        // fix re-checks admissibility per element on the live deque.
+        let mut q: OverflowDeque<Task> = OverflowDeque::new();
+        q.push_back(("a1", 1, false), 1);
+        q.push_back(("a2", 1, false), 1);
+        q.push_back(("p", 1, true), 9); // pinned lands exactly on the shifted slot
+        q.push_back(("a3", 1, false), 1);
+        let run = q.pop_front_run(8, |f, t| unpinned(t) && same_shape(f, t));
+        assert_eq!(run, vec![("a1", 1, false), ("a2", 1, false), ("a3", 1, false)]);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.queued_cost(), 9, "the pinned task is exactly what remains");
+        assert_eq!(q.pop_front(), Some(("p", 1, true)));
+    }
+
+    #[test]
+    fn pop_front_run_window_zero_is_plain_pop() {
+        let mut q: OverflowDeque<Task> = OverflowDeque::new();
+        q.push_back(("a1", 1, false), 1);
+        q.push_back(("a2", 1, false), 1);
+        let run = q.pop_front_run(0, |f, t| unpinned(t) && same_shape(f, t));
+        assert_eq!(run, vec![("a1", 1, false)]);
+        assert_eq!(q.len(), 1);
+        assert!(q.pop_front_run(0, |_, _| true).len() == 1);
+        assert!(q.pop_front_run(0, |_, _| true).is_empty(), "empty deque → empty run");
+    }
+
+    #[test]
+    fn steal_back_run_regression_interleaved_pinned_never_migrate() {
+        // pinned entries sit between the same-shape jobs a run steal
+        // wants; every removal must re-check the live element, so the
+        // pinned tasks stay put no matter how the indices shift
+        let mut q: OverflowDeque<Task> = OverflowDeque::new();
+        q.push_back(("p0", 7, true), 5);
+        q.push_back(("a1", 1, false), 1);
+        q.push_back(("p1", 1, true), 5);
+        q.push_back(("a2", 1, false), 1);
+        q.push_back(("p2", 1, true), 5);
+        q.push_back(("a3", 1, false), 1);
+        let (run, skipped) = q.steal_back_run(4, unpinned, same_shape);
+        assert_eq!(
+            run,
+            vec![("a1", 1, false), ("a2", 1, false), ("a3", 1, false)],
+            "the run comes out oldest-first"
+        );
+        assert_eq!(
+            skipped, 2,
+            "p1/p2 were scanned and left in place; p0 sits beyond the post-seed window"
+        );
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.queued_cost(), 15);
+        assert_eq!(q.pop_front(), Some(("p0", 7, true)));
+        assert_eq!(q.pop_front(), Some(("p1", 1, true)));
+        assert_eq!(q.pop_front(), Some(("p2", 1, true)));
+    }
+
+    #[test]
+    fn steal_back_run_takes_only_the_seeds_shape_and_respects_window() {
+        let mut q: OverflowDeque<Task> = OverflowDeque::new();
+        q.push_back(("a1", 1, false), 1);
+        q.push_back(("b1", 2, false), 1);
+        q.push_back(("a2", 1, false), 1);
+        q.push_back(("b2", 2, false), 1);
+        // seed is the newest stealable: b2; only b-shapes may join
+        let (run, skipped) = q.steal_back_run(4, unpinned, same_shape);
+        assert_eq!(run, vec![("b1", 2, false), ("b2", 2, false)]);
+        assert_eq!(skipped, 0, "stealable a-shape jobs are passed over, not counted");
+        assert_eq!(q.len(), 2);
+        // window 0 behaves exactly like the single steal_back
+        let (run, skipped) = q.steal_back_run(0, unpinned, same_shape);
+        assert_eq!(run, vec![("a2", 1, false)]);
+        assert_eq!(skipped, 0);
+        let (got, skipped) = q.steal_back(unpinned);
+        assert_eq!(got, Some(("a1", 1, false)));
+        assert_eq!(skipped, 0);
         assert!(q.is_empty());
     }
 

@@ -29,9 +29,10 @@ use std::fmt;
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
 
+use crate::coordinator::reorder::Access;
 use crate::coordinator::system::{PimRequest, PimResponse, PimSystem};
 use crate::pim::compile::{canonicalize, CommandCensus, ProgramShape};
-use crate::pim::{PimOp, ProgramSketch};
+use crate::pim::{PimOp, ProgramSketch, RowFootprint};
 use crate::util::{BitRow, ShiftDir};
 
 /// Why a request could not be served. Carried by [`Ticket`]s — a bad
@@ -125,10 +126,14 @@ impl RowHandle {
 
 /// Completion receipt of one kernel submission: the command census the
 /// replay executed (AAP/TRA/DRA counts — refreshes excluded, the engine
-/// injects those).
+/// injects those) plus how many scratch-reload AAPs the cross-op fusion
+/// peephole elided relative to the unfused lowering (0 on an unfused
+/// system) — `census.aap + elided_aaps` recovers the unfused AAP count
+/// the pre-fusion calibrations were written against.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Receipt {
     pub census: CommandCensus,
+    pub elided_aaps: u64,
 }
 
 /// A typed completion handle. `wait` blocks until the worker answers and
@@ -191,7 +196,7 @@ fn decode_row(resp: PimResponse) -> Result<BitRow, PimError> {
 
 fn decode_receipt(resp: PimResponse) -> Result<Receipt, PimError> {
     match resp {
-        PimResponse::Ran(census) => Ok(Receipt { census }),
+        PimResponse::Ran { census, elided_aaps } => Ok(Receipt { census, elided_aaps }),
         _ => Err(PimError::Protocol("expected a kernel receipt")),
     }
 }
@@ -223,6 +228,11 @@ struct KernelInner {
     /// queued-work weight: total lowered command count (a shift-by-n op
     /// weighs 4n, not 1), computed once at recording time
     cost: usize,
+    /// slot-space row footprint (reads/writes over canonical slots),
+    /// computed once at recording time; `submit` rebases it through the
+    /// handle table into the concrete footprint the hazard-checked
+    /// reorderer ([`crate::coordinator::reorder`]) plans with
+    footprint: RowFootprint,
 }
 
 impl Kernel {
@@ -235,7 +245,8 @@ impl Kernel {
         };
         let n_rows = slots.iter().map(|&r| r + 1).max().unwrap_or(0);
         let cost = ops.iter().map(|op| op.lower().len()).sum::<usize>().max(1);
-        Kernel { inner: Arc::new(KernelInner { shape, ops, slots, n_rows, cost }) }
+        let footprint = RowFootprint::of_ops(&ops);
+        Kernel { inner: Arc::new(KernelInner { shape, ops, slots, n_rows, cost, footprint }) }
     }
 
     /// Record an anonymous kernel: the builder emits macro-ops onto a
@@ -306,6 +317,12 @@ impl Kernel {
     pub(crate) fn slots(&self) -> &[usize] {
         &self.inner.slots
     }
+
+    /// The slot-space row footprint: which canonical slots the kernel
+    /// reads and writes (see [`RowFootprint`]).
+    pub fn footprint(&self) -> &RowFootprint {
+        &self.inner.footprint
+    }
 }
 
 /// A client session: pinned by the router to one `(bank, subarray)` so
@@ -372,8 +389,9 @@ impl PimClient {
         if let Err(e) = self.check_handle(handle) {
             return Ticket::failed(e, self.bank);
         }
+        let access = Access::write_row(handle.subarray, handle.row);
         let req = PimRequest::WriteRow { subarray: handle.subarray, row: handle.row, bits };
-        Ticket::new(self.sys.submit_wire(self.bank, 1, req), decode_done, self.bank)
+        Ticket::new(self.sys.submit_wire(self.bank, 1, access, req), decode_done, self.bank)
     }
 
     /// Read a row back.
@@ -381,8 +399,9 @@ impl PimClient {
         if let Err(e) = self.check_handle(handle) {
             return Ticket::failed(e, self.bank);
         }
+        let access = Access::read_row(handle.subarray, handle.row);
         let req = PimRequest::ReadRow { subarray: handle.subarray, row: handle.row };
-        Ticket::new(self.sys.submit_wire(self.bank, 1, req), decode_row, self.bank)
+        Ticket::new(self.sys.submit_wire(self.bank, 1, access, req), decode_row, self.bank)
     }
 
     /// Submit a kernel: recording row `i` executes against `rows[i]`.
@@ -403,13 +422,23 @@ impl PimClient {
             }
             binding.push(h.row);
         }
+        // rebase the recorded slot footprint onto the bound rows — the
+        // hazard record the reorder planner checks this kernel against
+        let access = Access::Touch {
+            subarray: self.subarray,
+            rows: kernel.footprint().map(|slot| binding[slot]),
+        };
         let req = PimRequest::RunKernel {
             subarray: self.subarray,
             shape: kernel.shape().clone(),
             ops: kernel.ops().clone(),
             binding,
         };
-        Ticket::new(self.sys.submit_wire(self.bank, kernel.cost(), req), decode_receipt, self.bank)
+        Ticket::new(
+            self.sys.submit_wire(self.bank, kernel.cost(), access, req),
+            decode_receipt,
+            self.bank,
+        )
     }
 
     /// Dispatch this session's partially filled batch.

@@ -42,6 +42,20 @@
 //! runs, and its [`FabricTicket`] — created at submission — resolves
 //! normally.
 //!
+//! **Merged-run dispatch.** With a reorder window open
+//! ([`crate::coordinator::SystemBuilder::reorder_window`]), each
+//! dispatcher drains *runs* instead of single tasks: the front task plus
+//! any same-shape unplaced jobs within the window
+//! ([`OverflowDeque::pop_front_run`]), and an idle thief steals a whole
+//! same-shape run in one pass ([`OverflowDeque::steal_back_run`]). A
+//! merged group executes phase-ordered on one session — inputs written
+//! first, kernels submitted back-to-back — so the shard's reorder-aware
+//! bank worker serves the group with one `run_compiled_many` replay.
+//! Pinned tasks are re-checked on the live deque at every step of a run
+//! scan and never merge or migrate; if allocating a group up front would
+//! exhaust a row slab, the group falls back to job-at-a-time execution,
+//! so merged dispatch never fails work FIFO dispatch would have served.
+//!
 //! [`PimFabric::shutdown`] drains every deque, joins the dispatchers, and
 //! aggregates the per-shard [`SystemReport`]s into one report whose
 //! `shards` vector carries the per-shard breakdowns and whose
@@ -194,6 +208,18 @@ impl ShardQueue {
     }
 }
 
+/// Whether two queued tasks may ride one merged run: both unplaced jobs,
+/// same kernel shape (⇒ one compiled program serves both). Pinned tasks
+/// never merge — and never migrate.
+fn mergeable(a: &FabricTask, b: &FabricTask) -> bool {
+    match (a, b) {
+        (FabricTask::Job(x), FabricTask::Job(y)) => {
+            x.spec.kernel.shape() == y.spec.kernel.shape()
+        }
+        _ => false,
+    }
+}
+
 pub(crate) struct FabricCore {
     shards: Vec<PimSystem>,
     queues: Vec<ShardQueue>,
@@ -202,12 +228,17 @@ pub(crate) struct FabricCore {
     counters: FabricCounters,
     stop: AtomicBool,
     dispatchers: Mutex<Vec<JoinHandle<()>>>,
+    /// the shards' hazard-checked reorder window, reused as the
+    /// dispatcher's merged-run lookahead over its deque (0 = one task at
+    /// a time, exactly the pre-reorder behavior)
+    window: usize,
 }
 
 impl FabricCore {
     pub(crate) fn new(shards: Vec<PimSystem>, placement: Placement) -> Self {
         assert!(!shards.is_empty());
         let n = shards.len();
+        let window = shards[0].reorder_window();
         FabricCore {
             shards,
             queues: (0..n).map(|_| ShardQueue::new()).collect(),
@@ -216,6 +247,7 @@ impl FabricCore {
             counters: FabricCounters::new(n),
             stop: AtomicBool::new(false),
             dispatchers: Mutex::new(Vec::new()),
+            window,
         }
     }
 
@@ -272,6 +304,15 @@ impl FabricCore {
     /// newest *unplaced* job from the first non-empty deque; pinned tasks
     /// are scanned past and left in place.
     fn try_steal(&self, thief: usize) -> Option<FabricJob> {
+        self.try_steal_run(thief, 0).map(|mut run| run.pop().expect("non-empty run"))
+    }
+
+    /// Run steal: like [`Self::try_steal`], but a whole same-shape run of
+    /// up to `1 + window` unplaced jobs migrates in one steal (the thief
+    /// executes it as one merged run). Pinned tasks are re-checked per
+    /// element on the live deque and never taken. Each stolen job counts
+    /// one steal.
+    fn try_steal_run(&self, thief: usize, window: usize) -> Option<Vec<FabricJob>> {
         let mut victims: Vec<(usize, usize)> = (0..self.queues.len())
             .filter(|&s| s != thief)
             .map(|s| (self.queues[s].deque.lock().unwrap().queued_cost(), s))
@@ -281,20 +322,32 @@ impl FabricCore {
             if cost == 0 {
                 break;
             }
-            let (taken, skipped) = self.queues[victim]
-                .deque
-                .lock()
-                .unwrap()
-                .steal_back(|t| matches!(t, FabricTask::Job(_)));
-            if let Some(FabricTask::Job(job)) = taken {
-                // count skips only on a successful steal — an idle shard
-                // re-scans every poll, and recounting the same parked
-                // pinned task thousands of times per second would make
-                // the counter meaningless
-                self.counters.record_pinned_skips(skipped as u64);
-                self.counters.record_steal(victim, thief);
-                return Some(job);
+            let (taken, skipped) = self.queues[victim].deque.lock().unwrap().steal_back_run(
+                window,
+                |t| matches!(t, FabricTask::Job(_)),
+                mergeable,
+            );
+            if taken.is_empty() {
+                continue;
             }
+            // count skips only on a successful steal — an idle shard
+            // re-scans every poll, and recounting the same parked
+            // pinned task thousands of times per second would make
+            // the counter meaningless
+            self.counters.record_pinned_skips(skipped as u64);
+            let jobs: Vec<FabricJob> = taken
+                .into_iter()
+                .map(|t| match t {
+                    FabricTask::Job(job) => job,
+                    FabricTask::Pinned(_) => {
+                        unreachable!("steal predicate admits unplaced jobs only")
+                    }
+                })
+                .collect();
+            for _ in &jobs {
+                self.counters.record_steal(victim, thief);
+            }
+            return Some(jobs);
         }
         None
     }
@@ -322,6 +375,89 @@ impl FabricCore {
         }
     }
 
+    /// Execute a merged-run drain result: a single task goes through the
+    /// ordinary path (it may be pinned); a longer run is all same-shape
+    /// unplaced jobs and executes as one merged group.
+    fn execute_run(&self, shard: usize, run: Vec<FabricTask>) {
+        if run.len() == 1 {
+            self.execute(shard, run.into_iter().next().expect("len checked"));
+            return;
+        }
+        let mut jobs = Vec::with_capacity(run.len());
+        for task in run {
+            match task {
+                FabricTask::Job(job) => jobs.push(job),
+                // defensive: `mergeable` never admits pinned tasks
+                pinned => self.execute(shard, pinned),
+            }
+        }
+        if !jobs.is_empty() {
+            self.execute_jobs(shard, jobs);
+        }
+    }
+
+    /// Execute a same-shape job group on one shard as a merged run: one
+    /// session, every input written first, then the kernels submitted
+    /// back-to-back — so they reach the bank adjacently and the shard's
+    /// reorder-aware worker serves them with one `run_compiled_many`
+    /// replay. Each job still resolves its own ticket.
+    ///
+    /// If allocating the whole group up front would exhaust the slab
+    /// (sequential FIFO execution would not — each job frees its rows
+    /// before the next allocates), the group falls back to job-at-a-time
+    /// execution, so merged dispatch can never fail work FIFO dispatch
+    /// would have served.
+    fn execute_jobs(&self, shard: usize, jobs: Vec<FabricJob>) {
+        if jobs.len() == 1 {
+            let job = jobs.into_iter().next().expect("len checked");
+            self.execute(shard, FabricTask::Job(job));
+            return;
+        }
+        let client = self.shards[shard].client();
+        let mut allocs: Vec<Vec<RowHandle>> = Vec::with_capacity(jobs.len());
+        for job in &jobs {
+            match client.alloc_rows(job.spec.n_rows()) {
+                Ok(rows) => allocs.push(rows),
+                Err(_) => {
+                    for rows in allocs {
+                        for h in rows {
+                            client.free(h);
+                        }
+                    }
+                    for job in jobs {
+                        self.execute(shard, FabricTask::Job(job));
+                    }
+                    return;
+                }
+            }
+        }
+        let mut write_tickets: Vec<Vec<Ticket<()>>> = Vec::with_capacity(jobs.len());
+        for (job, rows) in jobs.iter().zip(&allocs) {
+            write_tickets.push(
+                job.spec
+                    .inputs
+                    .iter()
+                    .map(|(slot, bits)| client.write(&rows[*slot], bits.clone()))
+                    .collect(),
+            );
+        }
+        let run_tickets: Vec<Ticket<Receipt>> = jobs
+            .iter()
+            .zip(&allocs)
+            .map(|(job, rows)| client.submit(&job.spec.kernel, rows))
+            .collect();
+        client.flush();
+        for (((job, rows), writes), run) in
+            jobs.into_iter().zip(allocs).zip(write_tickets).zip(run_tickets)
+        {
+            let FabricJob { spec, home, respond } = job;
+            let result = finish_job(&client, &spec, rows, writes, run)
+                .map(|(receipt, rows)| JobOutput { receipt, rows, shard, home });
+            self.counters.record_job(shard);
+            let _ = respond.send(result);
+        }
+    }
+
     /// The whole unplaced-session lifecycle on one shard: allocate rows,
     /// write inputs, run the kernel, read outputs back, free the rows.
     fn run_job_on(&self, shard: usize, spec: JobSpec) -> Result<(Receipt, Vec<BitRow>), PimError> {
@@ -333,33 +469,47 @@ impl FabricCore {
         }
         let run = client.submit(&spec.kernel, &rows);
         client.flush();
-        let mut first_err: Option<PimError> = None;
-        for w in writes {
-            if let Err(e) = w.wait() {
-                first_err.get_or_insert(e);
-            }
+        finish_job(&client, &spec, rows, writes, run)
+    }
+}
+
+/// Resolve one in-flight job — the tail shared by the single-job and
+/// merged-run execution paths: wait the input writes (folding the first
+/// error), wait the kernel receipt, read the requested rows back, and
+/// free the job's rows.
+fn finish_job(
+    client: &PimClient,
+    spec: &JobSpec,
+    rows: Vec<RowHandle>,
+    writes: Vec<Ticket<()>>,
+    run: Ticket<Receipt>,
+) -> Result<(Receipt, Vec<BitRow>), PimError> {
+    let mut first_err: Option<PimError> = None;
+    for w in writes {
+        if let Err(e) = w.wait() {
+            first_err.get_or_insert(e);
         }
-        let receipt = run.wait();
-        let mut out_rows = Vec::with_capacity(spec.outputs.len());
-        if first_err.is_none() && receipt.is_ok() {
-            for &slot in &spec.outputs {
-                match client.read_now(&rows[slot]) {
-                    Ok(bits) => out_rows.push(bits),
-                    Err(e) => {
-                        first_err.get_or_insert(e);
-                        break;
-                    }
+    }
+    let receipt = run.wait();
+    let mut out_rows = Vec::with_capacity(spec.outputs.len());
+    if first_err.is_none() && receipt.is_ok() {
+        for &slot in &spec.outputs {
+            match client.read_now(&rows[slot]) {
+                Ok(bits) => out_rows.push(bits),
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                    break;
                 }
             }
         }
-        for h in rows {
-            client.free(h);
-        }
-        if let Some(e) = first_err {
-            return Err(e);
-        }
-        Ok((receipt?, out_rows))
     }
+    for h in rows {
+        client.free(h);
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    Ok((receipt?, out_rows))
 }
 
 /// One shard's dispatcher: drain own deque FIFO; when idle, steal from the
@@ -370,13 +520,20 @@ impl FabricCore {
 fn dispatcher_loop(me: usize, core: Weak<FabricCore>) {
     loop {
         let Some(core) = core.upgrade() else { break };
-        let task = core.queues[me].deque.lock().unwrap().pop_front();
-        if let Some(task) = task {
-            core.execute(me, task);
+        // merged-run drain: the front task plus (with a reorder window
+        // open) any same-shape unplaced jobs within the lookahead —
+        // pinned tasks are left in place and never merge
+        let run = core.queues[me]
+            .deque
+            .lock()
+            .unwrap()
+            .pop_front_run(core.window, mergeable);
+        if !run.is_empty() {
+            core.execute_run(me, run);
             continue;
         }
-        if let Some(job) = core.try_steal(me) {
-            core.execute(me, FabricTask::Job(job));
+        if let Some(jobs) = core.try_steal_run(me, core.window) {
+            core.execute_jobs(me, jobs);
             continue;
         }
         let guard = core.queues[me].deque.lock().unwrap();
@@ -549,6 +706,8 @@ impl PimFabric {
             jobs: counters.jobs_total(),
             steals: counters.steals(),
             pinned_skips: counters.pinned_skips(),
+            reordered: shards.iter().map(|s| s.report.reordered).sum(),
+            hazard_blocked: shards.iter().map(|s| s.report.hazard_blocked).sum(),
             shards,
         }
     }
@@ -778,6 +937,111 @@ mod tests {
         assert!(core.try_steal(1).is_none());
         let stolen = core.try_steal(0).expect("shard 0 steals shard 1's job");
         assert_eq!(stolen.home, 1);
+    }
+
+    #[test]
+    fn run_steal_migrates_whole_same_shape_runs_past_pinned_tasks() {
+        let core = {
+            let (shards, placement) = SystemBuilder::new(&DramConfig::tiny_test())
+                .channels(2)
+                .banks(2)
+                .placement(Placement::Pinned)
+                .max_batch(4)
+                .reorder_window(8)
+                .fabric_shards();
+            FabricCore::new(shards, placement)
+        };
+        let mut rng = Rng::new(31);
+        let inputs: Vec<BitRow> = (0..3).map(|_| BitRow::random(256, &mut rng)).collect();
+        let t0 = core.enqueue_job(0, shift_job(inputs[0].clone(), 2));
+        // a pinned deferred kernel parked in the middle of the run
+        let session = core.shards[0].client();
+        let row = session.alloc().unwrap();
+        let pbits = BitRow::random(256, &mut rng);
+        session.write_now(&row, pbits.clone()).unwrap();
+        let (ptx, prx) = channel();
+        core.push(
+            0,
+            FabricTask::Pinned(PinnedTask {
+                shard: 0,
+                bank: session.bank(),
+                subarray: session.subarray(),
+                kernel: Kernel::shift_by(1, ShiftDir::Right),
+                rows: vec![row.clone()],
+                respond: ptx,
+            }),
+            4,
+        );
+        let t1 = core.enqueue_job(0, shift_job(inputs[1].clone(), 2));
+        let t2 = core.enqueue_job(0, shift_job(inputs[2].clone(), 2));
+        let run = core.try_steal_run(1, 8).expect("same-shape run migrates");
+        assert_eq!(run.len(), 3, "the whole run steals in one pass");
+        assert_eq!(core.counters.steals(), 3, "one steal counted per job");
+        assert_eq!(core.counters.stolen_out(0), 3);
+        assert_eq!(core.counters.stolen_in(1), 3);
+        assert_eq!(core.counters.pinned_skips(), 1);
+        assert_eq!(
+            core.queues[0].deque.lock().unwrap().len(),
+            1,
+            "the pinned task never migrates"
+        );
+        core.execute_jobs(1, run);
+        assert_eq!(core.counters.jobs_run(1), 3);
+        for (t, bits) in [t0, t1, t2].into_iter().zip(&inputs) {
+            let out = t.wait().expect("merged stolen job completes");
+            assert_eq!(out.shard, 1);
+            assert!(out.was_stolen());
+            assert_eq!(out.rows[0], bits.shifted_by(ShiftDir::Right, 2, false));
+        }
+        // the pinned kernel still runs at home against its own row
+        let pinned = core.queues[0].deque.lock().unwrap().pop_front().unwrap();
+        core.execute(0, pinned);
+        assert!(prx.recv().unwrap().is_ok());
+        assert_eq!(
+            session.read_now(&row).unwrap(),
+            pbits.shifted_by(ShiftDir::Right, 1, false)
+        );
+    }
+
+    #[test]
+    fn merged_job_group_falls_back_when_rows_run_out() {
+        // three same-shape 20-row jobs: allocating the group up front
+        // (60 rows) exhausts a 32-row subarray, so the merged path must
+        // fall back to job-at-a-time execution — which succeeds, exactly
+        // as FIFO dispatch would
+        let core = {
+            let (shards, placement) = SystemBuilder::new(&DramConfig::tiny_test())
+                .channels(1)
+                .banks(1)
+                .placement(Placement::Pinned)
+                .reorder_window(8)
+                .fabric_shards();
+            FabricCore::new(shards, placement)
+        };
+        let chain = Kernel::record(8, |t| {
+            for i in 0..19 {
+                t.op(PimOp::Copy { src: i, dst: i + 1 });
+            }
+        });
+        let mut rng = Rng::new(37);
+        let inputs: Vec<BitRow> = (0..3).map(|_| BitRow::random(256, &mut rng)).collect();
+        let tickets: Vec<_> = inputs
+            .iter()
+            .map(|bits| {
+                core.enqueue_job(
+                    0,
+                    JobSpec::new(chain.clone()).input(0, bits.clone()).read_back(19),
+                )
+            })
+            .collect();
+        let run = core.queues[0].deque.lock().unwrap().pop_front_run(8, super::mergeable);
+        assert_eq!(run.len(), 3, "same-shape jobs drain as one run");
+        core.execute_run(0, run);
+        for (t, bits) in tickets.into_iter().zip(&inputs) {
+            let out = t.wait().expect("fallback executes every job");
+            assert_eq!(out.rows[0], *bits, "the copy chain lands the input on row 19");
+        }
+        assert_eq!(core.counters.jobs_total(), 3);
     }
 
     #[test]

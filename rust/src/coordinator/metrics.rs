@@ -13,6 +13,7 @@
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
+use crate::coordinator::reorder::PlanStats;
 use crate::pim::compile::{CacheStats, ProgramCache};
 
 /// One batch worth of worker progress.
@@ -49,11 +50,23 @@ pub struct BankCounters {
     pub refreshes: AtomicU64,
 }
 
+/// Leader-side counters of the hazard-checked reorder planner
+/// ([`crate::coordinator::reorder`]): how many kernels were hoisted into
+/// merged runs, how many continuation kernels were marked, and how many
+/// same-shape candidates a hazard pinned in place.
+#[derive(Debug, Default)]
+pub struct ReorderCounters {
+    pub reordered: AtomicU64,
+    pub hazard_blocked: AtomicU64,
+    pub merged: AtomicU64,
+}
+
 /// Aggregated metrics registry.
 #[derive(Clone)]
 pub struct Metrics {
     banks: Arc<Vec<BankCounters>>,
     cache: Option<Arc<ProgramCache>>,
+    reorder: Arc<ReorderCounters>,
 }
 
 impl Metrics {
@@ -61,6 +74,7 @@ impl Metrics {
         Metrics {
             banks: Arc::new((0..n_banks).map(|_| BankCounters::default()).collect()),
             cache: None,
+            reorder: Arc::new(ReorderCounters::default()),
         }
     }
 
@@ -138,6 +152,31 @@ impl Metrics {
 
     pub fn total_refreshes(&self) -> u64 {
         self.banks.iter().map(|c| c.refreshes.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Record one reorder-planner pass over a dispatched batch.
+    pub fn record_plan(&self, stats: &PlanStats) {
+        self.reorder.reordered.fetch_add(stats.reordered, Ordering::Relaxed);
+        self.reorder
+            .hazard_blocked
+            .fetch_add(stats.hazard_blocked, Ordering::Relaxed);
+        self.reorder.merged.fetch_add(stats.merged, Ordering::Relaxed);
+    }
+
+    /// Kernels hoisted out of FIFO position into merged same-shape runs.
+    pub fn reordered(&self) -> u64 {
+        self.reorder.reordered.load(Ordering::Relaxed)
+    }
+
+    /// Same-shape merge candidates a RAW/WAW/WAR hazard pinned in place.
+    pub fn hazard_blocked(&self) -> u64 {
+        self.reorder.hazard_blocked.load(Ordering::Relaxed)
+    }
+
+    /// Kernels marked as continuations of merged runs (hoisted or
+    /// already adjacent).
+    pub fn merged_kernels(&self) -> u64 {
+        self.reorder.merged.load(Ordering::Relaxed)
     }
 
     /// Aggregate throughput in requests (MOps/s) of simulated time.
@@ -331,6 +370,21 @@ mod tests {
         assert_eq!(c.pinned_skips(), 0);
         c.record_pinned_skips(3);
         assert_eq!(c.pinned_skips(), 3);
+    }
+
+    #[test]
+    fn reorder_counters_accumulate_across_plans() {
+        let m = Metrics::new(2);
+        assert_eq!((m.reordered(), m.hazard_blocked(), m.merged_kernels()), (0, 0, 0));
+        m.record_plan(&PlanStats { reordered: 3, hazard_blocked: 1, merged: 5 });
+        m.record_plan(&PlanStats { reordered: 0, hazard_blocked: 2, merged: 0 });
+        assert_eq!(m.reordered(), 3);
+        assert_eq!(m.hazard_blocked(), 3);
+        assert_eq!(m.merged_kernels(), 5);
+        // clones share the same registry
+        let c = m.clone();
+        c.record_plan(&PlanStats { reordered: 1, hazard_blocked: 0, merged: 1 });
+        assert_eq!(m.reordered(), 4);
     }
 
     #[test]

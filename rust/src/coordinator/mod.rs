@@ -61,6 +61,7 @@ pub mod batcher;
 pub mod client;
 pub mod fabric;
 pub mod metrics;
+pub mod reorder;
 pub mod router;
 pub mod system;
 
@@ -68,6 +69,7 @@ pub use batcher::{Batch, Batcher, OverflowDeque};
 pub use client::{Kernel, PimClient, PimError, Receipt, RowHandle, Ticket};
 pub use fabric::{FabricClient, FabricTicket, JobOutput, JobSpec, PimFabric};
 pub use metrics::{FabricCounters, Metrics, WorkerDelta};
+pub use reorder::{Access, PlanStats, Reorderable};
 pub use router::{Placement, Router};
 pub use system::{
     PimSystem, ShardReport, SystemBuilder, SystemReport, DEFAULT_CACHE_CAPACITY,

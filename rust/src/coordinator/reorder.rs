@@ -1,0 +1,429 @@
+//! Hazard-checked kernel reordering: the window planner behind
+//! [`crate::coordinator::SystemBuilder::reorder_window`].
+//!
+//! The paper's kernels are short macro-op sequences whose serving cost is
+//! dominated by program fetch + replay, so throughput hinges on merging
+//! same-shape kernels onto one compiled-program replay. The batcher's
+//! queue is FIFO, though, and one interleaved client (`A B A B …`) leaves
+//! no adjacent same-shape runs for [`crate::coordinator::Batch::runs_by_key`]
+//! to find. This module closes that gap: [`plan`] scans a bounded
+//! lookahead window over a drained batch and **hoists** non-adjacent
+//! same-shape kernels up to the head kernel of their shape, so the bank
+//! worker can serve the whole group with one fetch and one merged
+//! `run_compiled_many` replay.
+//!
+//! Reordering is semantics-risky, so every hoist is hazard-checked
+//! against the row footprints ([`crate::pim::RowFootprint`]) of the
+//! requests it would jump over:
+//!
+//! * a candidate moves only when it has **no RAW/WAW/WAR overlap** with
+//!   any intervening request (writes/reads are tracked per `(subarray,
+//!   row)`; requests with unknown footprints are total barriers);
+//! * **FIFO order survives per conflicting pair**: a blocked candidate
+//!   joins the barrier set, so anything that conflicts with it cannot
+//!   leapfrog it (non-conflicting kernels — even of the same shape — may
+//!   commute, which is observationally invisible);
+//! * everything not hoisted keeps its relative order, and so do the
+//!   hoisted kernels of one run.
+//!
+//! Under those rules the planned order is observationally equivalent to
+//! FIFO execution — the property the differential replay harness
+//! (`tests/reorder_differential.rs`) checks bit-for-bit across hundreds
+//! of seeded interleavings.
+
+use crate::pim::compile::ProgramShape;
+use crate::pim::RowFootprint;
+use std::collections::VecDeque;
+
+/// What a queued request touches, for hazard purposes.
+#[derive(Clone, Debug)]
+pub enum Access {
+    /// unknown footprint: conflicts with everything, hoists past nothing
+    Barrier,
+    /// known rows of one subarray (rows in different subarrays never
+    /// alias, so they never conflict)
+    Touch { subarray: usize, rows: RowFootprint },
+}
+
+impl Access {
+    /// A single-row read (the wire `ReadRow` request).
+    pub fn read_row(subarray: usize, row: usize) -> Access {
+        let mut rows = RowFootprint::new();
+        rows.add_read(row);
+        Access::Touch { subarray, rows }
+    }
+
+    /// A single-row write (the wire `WriteRow` request).
+    pub fn write_row(subarray: usize, row: usize) -> Access {
+        let mut rows = RowFootprint::new();
+        rows.add_write(row);
+        Access::Touch { subarray, rows }
+    }
+
+    /// True when executing the two accesses in either order could differ.
+    pub fn conflicts_with(&self, other: &Access) -> bool {
+        match (self, other) {
+            (Access::Barrier, _) | (_, Access::Barrier) => true,
+            (
+                Access::Touch { subarray: sa, rows: ra },
+                Access::Touch { subarray: sb, rows: rb },
+            ) => sa == sb && ra.conflicts_with(rb),
+        }
+    }
+}
+
+/// A queue item the planner can inspect and annotate.
+pub trait Reorderable {
+    /// The merge key: `Some(shape)` for kernel submissions (same shape ⇒
+    /// same compiled program ⇒ mergeable into one replay), `None` for
+    /// data movement and anything else.
+    fn merge_shape(&self) -> Option<&ProgramShape>;
+
+    /// The rows this item touches.
+    fn access(&self) -> &Access;
+
+    /// Called on every item the planner appends to an already-emitted
+    /// same-shape kernel: the executor replays the whole marked run
+    /// through one `run_compiled_many` call.
+    fn mark_merged(&mut self);
+}
+
+/// What one [`plan`] pass did.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanStats {
+    /// kernels hoisted out of FIFO position to join a same-shape run
+    pub reordered: u64,
+    /// same-shape candidates inside the window that a RAW/WAW/WAR
+    /// conflict pinned in place
+    pub hazard_blocked: u64,
+    /// kernels marked as continuations of a merged run (includes
+    /// already-adjacent ones that needed no hoisting)
+    pub merged: u64,
+}
+
+impl PlanStats {
+    /// Fold another pass's counts into this one.
+    pub fn accumulate(&mut self, other: &PlanStats) {
+        self.reordered += other.reordered;
+        self.hazard_blocked += other.hazard_blocked;
+        self.merged += other.merged;
+    }
+}
+
+/// Plan one batch: stable, window-bounded, hazard-checked grouping of
+/// same-shape kernels. `items` is rewritten in the planned execution
+/// order with merged continuations marked; with `window == 0` the batch
+/// is left untouched (pure FIFO).
+///
+/// For each emitted kernel, the planner scans up to `window` of the
+/// still-pending items. Same-shape candidates are hoisted to extend the
+/// head kernel's run **unless** they conflict with something they would
+/// jump over; blocked candidates and every skipped item join the barrier
+/// set the remaining candidates are checked against, so nothing ever
+/// leapfrogs a request it conflicts with. Hoisted kernels keep their
+/// relative order, so even mutually-conflicting same-shape kernels
+/// (aliased handles) replay in submission order within the merged run.
+/// (Mutually non-conflicting kernels may commute across a blocked
+/// same-shape sibling — invisible by construction.)
+pub fn plan<T: Reorderable>(items: &mut Vec<T>, window: usize) -> PlanStats {
+    let mut stats = PlanStats::default();
+    if window == 0 || items.len() < 2 {
+        return stats;
+    }
+    let mut pending: VecDeque<T> = items.drain(..).collect();
+    let mut out: Vec<T> = Vec::with_capacity(pending.len());
+    while let Some(head) = pending.pop_front() {
+        let key: Option<ProgramShape> = head.merge_shape().cloned();
+        out.push(head);
+        let Some(key) = key else { continue };
+        // barrier set: footprints of everything the next hoist would jump
+        // over (skipped items + hazard-blocked same-shape candidates)
+        let mut barrier: Vec<Access> = Vec::new();
+        let mut i = 0usize;
+        let mut scanned = 0usize;
+        while i < pending.len() && scanned < window {
+            scanned += 1;
+            if pending[i].merge_shape() == Some(&key) {
+                let blocked = barrier
+                    .iter()
+                    .any(|b| pending[i].access().conflicts_with(b));
+                if blocked {
+                    stats.hazard_blocked += 1;
+                    barrier.push(pending[i].access().clone());
+                    i += 1;
+                } else {
+                    let mut item = pending.remove(i).expect("index in range");
+                    item.mark_merged();
+                    if i > 0 {
+                        stats.reordered += 1;
+                    }
+                    stats.merged += 1;
+                    out.push(item);
+                    // no i += 1: the next pending item shifted into slot i
+                }
+            } else {
+                barrier.push(pending[i].access().clone());
+                i += 1;
+            }
+        }
+    }
+    *items = out;
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::PimOp;
+    use std::sync::Arc;
+
+    /// A minimal queue item for deterministic planner tests.
+    #[derive(Clone, Debug)]
+    struct Item {
+        name: &'static str,
+        shape: Option<ProgramShape>,
+        access: Access,
+        merged: bool,
+    }
+
+    impl Reorderable for Item {
+        fn merge_shape(&self) -> Option<&ProgramShape> {
+            self.shape.as_ref()
+        }
+        fn access(&self) -> &Access {
+            &self.access
+        }
+        fn mark_merged(&mut self) {
+            self.merged = true;
+        }
+    }
+
+    fn shape(tag: u64) -> ProgramShape {
+        ProgramShape::Kernel { name: "t", params: vec![tag] }
+    }
+
+    /// A kernel item of shape `tag` reading `reads` and writing `writes`
+    /// in subarray 0.
+    fn kernel(name: &'static str, tag: u64, reads: &[usize], writes: &[usize]) -> Item {
+        let mut rows = RowFootprint::new();
+        for &r in reads {
+            rows.add_read(r);
+        }
+        for &w in writes {
+            rows.add_write(w);
+        }
+        Item {
+            name,
+            shape: Some(shape(tag)),
+            access: Access::Touch { subarray: 0, rows },
+            merged: false,
+        }
+    }
+
+    fn write(name: &'static str, row: usize) -> Item {
+        Item { name, shape: None, access: Access::write_row(0, row), merged: false }
+    }
+
+    fn order(items: &[Item]) -> Vec<&'static str> {
+        items.iter().map(|i| i.name).collect()
+    }
+
+    #[test]
+    fn window_zero_is_fifo() {
+        let mut items = vec![
+            kernel("a1", 1, &[0], &[0]),
+            kernel("b1", 2, &[1], &[1]),
+            kernel("a2", 1, &[0], &[0]),
+        ];
+        let stats = plan(&mut items, 0);
+        assert_eq!(stats, PlanStats::default());
+        assert_eq!(order(&items), vec!["a1", "b1", "a2"]);
+        assert!(items.iter().all(|i| !i.merged));
+    }
+
+    #[test]
+    fn interleaved_shapes_regroup_without_hazards() {
+        // A B A B A B on disjoint rows → A A A, B B B
+        let mut items = vec![
+            kernel("a1", 1, &[0], &[0]),
+            kernel("b1", 2, &[1], &[1]),
+            kernel("a2", 1, &[2], &[2]),
+            kernel("b2", 2, &[3], &[3]),
+            kernel("a3", 1, &[4], &[4]),
+            kernel("b3", 2, &[5], &[5]),
+        ];
+        let stats = plan(&mut items, 8);
+        assert_eq!(order(&items), vec!["a1", "a2", "a3", "b1", "b2", "b3"]);
+        assert_eq!(stats.reordered, 2, "a2 and a3 hoisted; the Bs collapse for free");
+        assert_eq!(stats.hazard_blocked, 0);
+        assert_eq!(stats.merged, 4, "two continuations per shape");
+        let merged: Vec<bool> = items.iter().map(|i| i.merged).collect();
+        assert_eq!(merged, vec![false, true, true, false, true, true]);
+    }
+
+    #[test]
+    fn raw_hazard_pins_the_candidate() {
+        // a2 reads row 7, which w writes in between → a2 must not hoist
+        let mut items = vec![
+            kernel("a1", 1, &[0], &[0]),
+            write("w", 7),
+            kernel("a2", 1, &[7], &[8]),
+        ];
+        let stats = plan(&mut items, 8);
+        assert_eq!(order(&items), vec!["a1", "w", "a2"]);
+        assert_eq!(stats.hazard_blocked, 1);
+        assert_eq!(stats.reordered, 0);
+        assert!(!items[2].merged, "blocked candidates execute standalone");
+    }
+
+    #[test]
+    fn waw_and_war_hazards_block_too() {
+        // WAW: both the intervening write and a2 write row 3
+        let mut items = vec![
+            kernel("a1", 1, &[0], &[0]),
+            write("w", 3),
+            kernel("a2", 1, &[1], &[3]),
+        ];
+        assert_eq!(plan(&mut items, 8).hazard_blocked, 1);
+        assert_eq!(order(&items), vec!["a1", "w", "a2"]);
+        // WAR: b reads row 4, a2 writes it — hoisting a2 over b would
+        // make b read the shifted value
+        let mut items = vec![
+            kernel("a1", 1, &[0], &[0]),
+            kernel("b", 2, &[4], &[5]),
+            kernel("a2", 1, &[1], &[4]),
+        ];
+        assert_eq!(plan(&mut items, 8).hazard_blocked, 1);
+        assert_eq!(order(&items), vec!["a1", "b", "a2"]);
+    }
+
+    #[test]
+    fn conflicting_same_shape_candidates_stay_in_fifo_order() {
+        // a2 is blocked by w; a3 (same shape, no conflict with w) must NOT
+        // leapfrog a2 — it conflicts with a2 through the barrier set
+        let mut items = vec![
+            kernel("a1", 1, &[0], &[0]),
+            write("w", 7),
+            kernel("a2", 1, &[7], &[9]),
+            kernel("a3", 1, &[9], &[1]),
+        ];
+        let stats = plan(&mut items, 8);
+        assert_eq!(order(&items), vec!["a1", "w", "a2", "a3"]);
+        assert_eq!(stats.hazard_blocked, 2, "a2 blocked by w, a3 by a2");
+        // …but a3 merges with a2 on the next head pass? No: the pass for
+        // head a2 runs with a3 directly adjacent and conflict-free
+        let mut items = vec![
+            kernel("a2", 1, &[7], &[9]),
+            kernel("a3", 1, &[9], &[1]),
+        ];
+        let stats = plan(&mut items, 8);
+        assert_eq!(stats.merged, 1, "adjacent same-shape kernels still merge");
+        assert_eq!(stats.reordered, 0, "…without counting as a reorder");
+        assert!(items[1].merged);
+    }
+
+    #[test]
+    fn aliased_same_shape_kernels_merge_in_order() {
+        // three same-shape kernels all touching row 0: mutually
+        // conflicting, but hoisting preserves their relative order, so
+        // grouping them is safe
+        let mut items = vec![
+            kernel("a1", 1, &[0], &[0]),
+            kernel("b", 2, &[5], &[6]),
+            kernel("a2", 1, &[0], &[0]),
+            kernel("a3", 1, &[0], &[0]),
+        ];
+        let stats = plan(&mut items, 8);
+        assert_eq!(order(&items), vec!["a1", "a2", "a3", "b"]);
+        assert_eq!(stats.reordered, 2);
+        assert_eq!(stats.hazard_blocked, 0, "b's rows are disjoint");
+    }
+
+    #[test]
+    fn different_subarrays_never_conflict() {
+        let a2 = Item {
+            name: "a2",
+            shape: Some(shape(1)),
+            access: Access::Touch {
+                subarray: 1,
+                rows: RowFootprint::of_op(&PimOp::Copy { src: 7, dst: 7 }),
+            },
+            merged: false,
+        };
+        // w writes row 7 of subarray 0; a2 touches row 7 of subarray 1
+        let mut items = vec![kernel("a1", 1, &[0], &[0]), write("w", 7), a2];
+        let stats = plan(&mut items, 8);
+        assert_eq!(order(&items), vec!["a1", "a2", "w"]);
+        assert_eq!(stats.reordered, 1);
+    }
+
+    #[test]
+    fn barriers_stop_everything() {
+        let barrier = Item {
+            name: "x",
+            shape: None,
+            access: Access::Barrier,
+            merged: false,
+        };
+        let mut items = vec![
+            kernel("a1", 1, &[0], &[0]),
+            barrier,
+            kernel("a2", 1, &[1], &[1]),
+        ];
+        let stats = plan(&mut items, 8);
+        assert_eq!(order(&items), vec!["a1", "x", "a2"]);
+        assert_eq!(stats.hazard_blocked, 1);
+    }
+
+    #[test]
+    fn window_bounds_the_lookahead() {
+        // a2 sits 3 positions ahead; a window of 2 never sees it
+        let mut items = vec![
+            kernel("a1", 1, &[0], &[0]),
+            write("w1", 10),
+            write("w2", 11),
+            write("w3", 12),
+            kernel("a2", 1, &[1], &[1]),
+        ];
+        let stats = plan(&mut items, 2);
+        assert_eq!(order(&items), vec!["a1", "w1", "w2", "w3", "a2"]);
+        assert_eq!(stats, PlanStats::default());
+        // a window of 4 hoists it
+        let stats = plan(&mut items, 4);
+        assert_eq!(order(&items), vec!["a1", "a2", "w1", "w2", "w3"]);
+        assert_eq!(stats.reordered, 1);
+    }
+
+    #[test]
+    fn shapes_compare_structurally() {
+        // two Ops shapes recorded separately but structurally equal merge
+        let ops = Arc::new(vec![PimOp::Copy { src: 0, dst: 1 }]);
+        let s1 = ProgramShape::Ops(ops.clone());
+        let s2 = ProgramShape::Ops(Arc::new(vec![PimOp::Copy { src: 0, dst: 1 }]));
+        assert_eq!(s1, s2);
+        let mut items = vec![
+            Item {
+                name: "k1",
+                shape: Some(s1),
+                access: Access::Touch {
+                    subarray: 0,
+                    rows: RowFootprint::of_op(&PimOp::Copy { src: 0, dst: 1 }),
+                },
+                merged: false,
+            },
+            write("w", 9),
+            Item {
+                name: "k2",
+                shape: Some(s2),
+                access: Access::Touch {
+                    subarray: 0,
+                    rows: RowFootprint::of_op(&PimOp::Copy { src: 2, dst: 3 }),
+                },
+                merged: false,
+            },
+        ];
+        let stats = plan(&mut items, 8);
+        assert_eq!(order(&items), vec!["k1", "k2", "w"]);
+        assert_eq!(stats.merged, 1);
+    }
+}

@@ -24,6 +24,15 @@
 //! without touching the shared cache — counted as `batched` in
 //! `CacheStats`) and replays it through **one** `BankSim::run_compiled`
 //! call with an O(1) slot→row rebase.
+//!
+//! With [`SystemBuilder::reorder_window`] set, dispatched batches first
+//! pass through the hazard-checked reorder planner
+//! ([`crate::coordinator::reorder`]): non-adjacent same-shape kernels are
+//! hoisted into merged runs — whenever no RAW/WAW/WAR conflict exists on
+//! any jumped-over request's row footprint — and each run is served by
+//! one `BankSim::run_compiled_many` replay. Results stay bit-identical to
+//! FIFO execution (proved per-seed by `tests/reorder_differential.rs`);
+//! the `reordered`/`hazard_blocked` counters report the traffic.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -34,6 +43,7 @@ use crate::coordinator::batcher::{Batch, Batcher};
 use crate::coordinator::client::{PimClient, PimError, RowHandle};
 use crate::coordinator::fabric::PimFabric;
 use crate::coordinator::metrics::{Metrics, WorkerDelta};
+use crate::coordinator::reorder::{self, Access, Reorderable};
 use crate::coordinator::router::{Placement, Router};
 use crate::dram::address::BankId;
 use crate::pim::compile::{CacheStats, CompiledProgram, ProgramCache, ProgramShape};
@@ -70,13 +80,36 @@ pub(crate) enum PimRequest {
 pub(crate) enum PimResponse {
     Done,
     Row(BitRow),
-    Ran(crate::pim::compile::CommandCensus),
+    Ran { census: crate::pim::compile::CommandCensus, elided_aaps: u64 },
 }
 
 struct Envelope {
     req: PimRequest,
     cost: usize,
+    /// hazard record for the reorder planner (rows this request touches)
+    access: Access,
+    /// set by the planner: this kernel continues the merged run started
+    /// by the nearest preceding envelope (same shape, one shared
+    /// `run_compiled_many` replay)
+    merged: bool,
     respond: Sender<Result<PimResponse, PimError>>,
+}
+
+impl Reorderable for Envelope {
+    fn merge_shape(&self) -> Option<&ProgramShape> {
+        match &self.req {
+            PimRequest::RunKernel { shape, .. } => Some(shape),
+            _ => None,
+        }
+    }
+
+    fn access(&self) -> &Access {
+        &self.access
+    }
+
+    fn mark_merged(&mut self) {
+        self.merged = true;
+    }
 }
 
 enum WorkerMsg {
@@ -118,6 +151,11 @@ pub struct SystemReport {
     /// handle-pinned tasks successful steals scanned past and left in
     /// place (fruitless idle scans are not counted)
     pub pinned_skips: u64,
+    /// kernels the hazard-checked reorderer hoisted out of FIFO position
+    /// to join a same-shape merged run (0 with `reorder_window(0)`)
+    pub reordered: u64,
+    /// same-shape merge candidates a RAW/WAW/WAR conflict pinned in place
+    pub hazard_blocked: u64,
 }
 
 impl SystemReport {
@@ -158,6 +196,7 @@ pub struct SystemBuilder {
     channels: usize,
     per_channel_capacity: Option<usize>,
     fused: bool,
+    reorder_window: usize,
 }
 
 impl SystemBuilder {
@@ -171,7 +210,8 @@ impl SystemBuilder {
             shared_cache: None,
             channels: 1,
             per_channel_capacity: None,
-            fused: false,
+            fused: true,
+            reorder_window: default_reorder_window(),
         }
     }
 
@@ -228,10 +268,29 @@ impl SystemBuilder {
     /// Compile serving kernels with the cross-op AAP fusion peephole
     /// ([`crate::pim::compile::CompiledProgram::compile_fused`]): chained
     /// logic ops drop their redundant scratch-row reloads, shrinking every
-    /// receipt's census/latency while staying bit-exact. Off by default —
-    /// app-kernel censuses are calibrated against the unfused lowering.
+    /// receipt's census/latency while staying bit-exact. **On by
+    /// default** — the app-kernel AAP calibrations are baselined against
+    /// the fused lowering, and every [`Receipt`](crate::coordinator::Receipt)
+    /// carries `elided_aaps` to recover the unfused count. Pass `false`
+    /// to serve the paper's literal per-op lowering.
     pub fn fuse_aap(mut self, on: bool) -> Self {
         self.fused = on;
+        self
+    }
+
+    /// Hazard-checked kernel-reorder window (default: the
+    /// `PIM_REORDER_WINDOW` env var, else 0 = strict FIFO). With `n > 0`,
+    /// each dispatched batch is planned by [`crate::coordinator::reorder`]:
+    /// same-shape kernels within `n` queue positions of an emitted kernel
+    /// are hoisted adjacent — when no RAW/WAW/WAR conflict exists on any
+    /// intervening request's row footprint — and the whole run is served
+    /// by **one** merged `run_compiled_many` replay. FIFO order is
+    /// preserved per conflicting pair — nothing leapfrogs a request it
+    /// conflicts with — so results stay bit-identical to FIFO execution; the `reordered`/`hazard_blocked`
+    /// report counters record the traffic. A fabric applies the same
+    /// window on every shard (and to its dispatcher's merged-run drain).
+    pub fn reorder_window(mut self, n: usize) -> Self {
+        self.reorder_window = n;
         self
     }
 
@@ -288,6 +347,7 @@ impl SystemBuilder {
                 channels: 1,
                 per_channel_capacity: None,
                 fused: self.fused,
+                reorder_window: self.reorder_window,
             };
             shards.push(shard_builder.build_on(banks));
         }
@@ -338,6 +398,7 @@ impl SystemBuilder {
                     .map(|b| Mutex::new(Batcher::new(b, self.max_batch)))
                     .collect(),
                 max_batch: self.max_batch,
+                reorder_window: self.reorder_window,
                 senders,
                 workers: Mutex::new(workers),
                 failures: Mutex::new(Vec::new()),
@@ -346,6 +407,16 @@ impl SystemBuilder {
             }),
         }
     }
+}
+
+/// The builder's reorder-window default: `PIM_REORDER_WINDOW` when set
+/// (CI runs the tier-1 suite under both `0` and `8` so the FIFO and the
+/// merged dispatch path both stay green), else 0.
+fn default_reorder_window() -> usize {
+    std::env::var("PIM_REORDER_WINDOW")
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(0)
 }
 
 /// A cheap, cloneable handle to the serving system. Clones share the same
@@ -360,6 +431,7 @@ struct Core {
     router: Mutex<Router>,
     batchers: Vec<Mutex<Batcher<Envelope>>>,
     max_batch: usize,
+    reorder_window: usize,
     senders: Vec<Sender<WorkerMsg>>,
     workers: Mutex<Vec<JoinHandle<()>>>,
     failures: Mutex<Vec<String>>,
@@ -425,18 +497,25 @@ impl PimSystem {
         self.core.router.lock().unwrap().free_row(h.bank, h.subarray, h.row)
     }
 
+    /// The hazard-checked reorder window dispatched batches are planned
+    /// with (0 = strict FIFO).
+    pub fn reorder_window(&self) -> usize {
+        self.core.reorder_window
+    }
+
     /// Enqueue one wire request on a bank; dispatches the batch when full.
     pub(crate) fn submit_wire(
         &self,
         bank: usize,
         cost: usize,
+        access: Access,
         req: PimRequest,
     ) -> Receiver<Result<PimResponse, PimError>> {
         let (tx, rx) = channel();
         self.core.router.lock().unwrap().charge(bank, cost);
         let full = {
             let mut b = self.core.batchers[bank].lock().unwrap();
-            b.push(Envelope { req, cost, respond: tx });
+            b.push(Envelope { req, cost, access, merged: false, respond: tx });
             b.len() >= self.core.max_batch
         };
         if full {
@@ -446,10 +525,18 @@ impl PimSystem {
     }
 
     /// Dispatch a bank's partially filled batch.
+    ///
+    /// The batcher lock is held across the worker send: draining and
+    /// delivering must be atomic per bank, or two threads flushing the
+    /// same bank (a fabric dispatcher and a user session, say) could
+    /// deliver their drained batches out of order — breaking the per-bank
+    /// FIFO that every hazard guarantee of the reorder planner builds on.
+    /// (Safe: nothing takes the batcher lock while holding the router
+    /// lock, and the worker channel send never blocks.)
     pub fn flush_bank(&self, bank: usize) {
         loop {
-            let batch = self.core.batchers[bank].lock().unwrap().drain();
-            match batch {
+            let mut batcher = self.core.batchers[bank].lock().unwrap();
+            match batcher.drain() {
                 Some(b) => self.dispatch(bank, b),
                 None => break,
             }
@@ -463,8 +550,15 @@ impl PimSystem {
         }
     }
 
-    fn dispatch(&self, bank: usize, batch: Batch<Envelope>) {
+    fn dispatch(&self, bank: usize, mut batch: Batch<Envelope>) {
         let cost: usize = batch.items.iter().map(|e| e.cost).sum();
+        // hazard-checked reorder pass over the drained queue prefix:
+        // same-shape kernels regroup into merged runs when nothing they
+        // would jump over conflicts (no-op with a zero window)
+        if self.core.reorder_window > 0 && batch.items.len() > 1 {
+            let stats = reorder::plan(&mut batch.items, self.core.reorder_window);
+            self.core.metrics.record_plan(&stats);
+        }
         if let Err(lost) = self.core.senders[bank].send(WorkerMsg::Work(batch.items)) {
             // worker gone: fail every ticket instead of panicking the leader
             if let WorkerMsg::Work(items) = lost.0 {
@@ -515,13 +609,15 @@ impl PimSystem {
             jobs: 0,
             steals: 0,
             pinned_skips: 0,
+            reordered: m.reordered(),
+            hazard_blocked: m.hazard_blocked(),
         }
     }
 
     /// Test/bench hook: route a raw wire request (bypasses handle checks).
     #[cfg(test)]
     fn submit_raw(&self, bank: usize, req: PimRequest) -> Receiver<Result<PimResponse, PimError>> {
-        self.submit_wire(bank, 1, req)
+        self.submit_wire(bank, 1, Access::Barrier, req)
     }
 }
 
@@ -555,11 +651,29 @@ fn worker_loop(
             WorkerMsg::Stop => break,
             WorkerMsg::Work(envelopes) => {
                 let mut delta = WorkerDelta::default();
-                for env in envelopes {
-                    let resp = execute(&mut sim, env.req, &cache, &mut memo, &mut delta);
-                    delta.requests += 1;
-                    // receiver may have hung up (fire-and-forget callers)
-                    let _ = env.respond.send(resp);
+                let mut queue: std::collections::VecDeque<Envelope> = envelopes.into();
+                while let Some(env) = queue.pop_front() {
+                    // collect the merged run the planner marked: the head
+                    // kernel plus every immediately following envelope
+                    // flagged as its continuation (same shape by
+                    // construction)
+                    let mut group: Vec<Envelope> = Vec::new();
+                    if matches!(env.req, PimRequest::RunKernel { .. }) {
+                        while queue.front().is_some_and(|e| {
+                            e.merged && matches!(e.req, PimRequest::RunKernel { .. })
+                        }) {
+                            group.push(queue.pop_front().expect("front checked"));
+                        }
+                    }
+                    if group.is_empty() {
+                        let resp = execute(&mut sim, env.req, &cache, &mut memo, &mut delta);
+                        delta.requests += 1;
+                        // receiver may have hung up (fire-and-forget callers)
+                        let _ = env.respond.send(resp);
+                    } else {
+                        group.insert(0, env);
+                        execute_merged(&mut sim, group, &cache, &mut memo, &mut delta);
+                    }
                 }
                 delta.aaps = sim.counts.aap - last_aaps;
                 delta.sim_time_ps = sim.now_ps;
@@ -569,6 +683,83 @@ fn worker_loop(
                 last_aaps = sim.counts.aap;
             }
         }
+    }
+}
+
+/// One validated member of a merged run: its subarray, its slot→row
+/// binding, and the ticket to resolve.
+type MergedKernel = (usize, Vec<usize>, Sender<Result<PimResponse, PimError>>);
+
+/// Serve one merged run: K same-shape kernels fetched once and replayed
+/// through **one** [`BankSim::run_compiled_many`] call. Each kernel is
+/// still validated individually — a bad binding fails its own ticket and
+/// drops out of the replay without disturbing the rest of the run.
+fn execute_merged(
+    sim: &mut BankSim,
+    group: Vec<Envelope>,
+    cache: &ProgramCache,
+    memo: &mut ProgramMemo,
+    delta: &mut WorkerDelta,
+) {
+    let subarrays = sim.config().geometry.subarrays_per_bank;
+    let rows = sim.config().geometry.rows_per_subarray;
+    let mut prog: Option<Arc<CompiledProgram>> = None;
+    let mut batched: u64 = 0;
+    let mut valid: Vec<MergedKernel> = Vec::new();
+    for env in group {
+        let Envelope { req, respond, .. } = env;
+        match req {
+            PimRequest::RunKernel { subarray, shape, ops, binding } => {
+                delta.requests += 1;
+                if subarray >= subarrays {
+                    let _ = respond
+                        .send(Err(PimError::SubarrayOutOfRange { subarray, subarrays }));
+                    continue;
+                }
+                if let Some(&row) = binding.iter().find(|&&r| r >= rows) {
+                    let _ = respond.send(Err(PimError::RowOutOfRange { row, rows }));
+                    continue;
+                }
+                if prog.is_none() {
+                    prog = Some(fetch_compiled(cache, sim, memo, shape, &ops));
+                } else {
+                    // continuation kernels reuse the run's fetched program
+                    // without a cache lookup of their own
+                    batched += 1;
+                }
+                valid.push((subarray, binding, respond));
+            }
+            // the planner only marks kernel submissions; a non-kernel here
+            // is a planner bug — serve it standalone rather than drop it
+            other => {
+                delta.requests += 1;
+                let resp = execute(sim, other, cache, memo, delta);
+                let _ = respond.send(resp);
+            }
+        }
+    }
+    let Some(prog) = prog else { return };
+    cache.record_batched(batched);
+    let mut runs: Vec<(usize, &[usize])> = Vec::with_capacity(valid.len());
+    let mut responders = Vec::with_capacity(valid.len());
+    for (subarray, binding, respond) in &valid {
+        if binding.len() < prog.n_slots() {
+            let _ = respond.send(Err(PimError::Protocol("binding shorter than program slots")));
+            continue;
+        }
+        runs.push((*subarray, binding.as_slice()));
+        responders.push(respond);
+    }
+    if runs.is_empty() {
+        return;
+    }
+    sim.run_compiled_many(&prog, &runs);
+    delta.kernels += runs.len() as u64;
+    delta.macro_ops += (prog.blocks().len() * runs.len()) as u64;
+    delta.replays += 1;
+    let resp = PimResponse::Ran { census: *prog.census(), elided_aaps: prog.elided_aaps() };
+    for respond in responders {
+        let _ = respond.send(Ok(resp.clone()));
     }
 }
 
@@ -654,7 +845,7 @@ fn execute(
             delta.kernels += 1;
             delta.macro_ops += prog.blocks().len() as u64;
             delta.replays += 1;
-            Ok(PimResponse::Ran(*prog.census()))
+            Ok(PimResponse::Ran { census: *prog.census(), elided_aaps: prog.elided_aaps() })
         }
         #[cfg(test)]
         PimRequest::Crash => panic!("injected worker crash"),
@@ -744,8 +935,10 @@ mod tests {
     #[test]
     fn same_shape_kernels_compile_once() {
         // 32 identical shift kernels on one bank: one compile, the rest
-        // served by the worker's shape memo without touching the cache
-        let sys = SystemBuilder::new(&cfg()).banks(1).max_batch(8).build();
+        // served by the worker's shape memo without touching the cache.
+        // Pinned to FIFO dispatch — per-kernel replay granularity is the
+        // subject here; merged runs are covered separately below.
+        let sys = SystemBuilder::new(&cfg()).banks(1).max_batch(8).reorder_window(0).build();
         let c = sys.client();
         let row = c.alloc().unwrap();
         let k = shift(2);
@@ -767,6 +960,121 @@ mod tests {
 
     // (the kernel-granular one-fetch/one-replay acceptance is asserted
     // through the public API in tests/coordinator_integration.rs)
+
+    #[test]
+    fn adjacent_same_shape_kernels_merge_into_one_replay() {
+        // 8 identical kernels in one batch with the reorder window open:
+        // one merged run_compiled_many replay serves all of them, and the
+        // cache still counts one compile-layer request per kernel
+        let sys = SystemBuilder::new(&cfg()).banks(1).max_batch(8).reorder_window(8).build();
+        let c = sys.client();
+        let row = c.alloc().unwrap();
+        let mut rng = Rng::new(19);
+        let bits = BitRow::random(256, &mut rng);
+        c.write_now(&row, bits.clone()).unwrap();
+        let k = shift(1);
+        for _ in 0..8 {
+            c.submit(&k, std::slice::from_ref(&row));
+        }
+        sys.flush();
+        assert_eq!(
+            c.read_now(&row).unwrap(),
+            bits.shifted_by(ShiftDir::Right, 8, false),
+            "aliased same-shape kernels replay in submission order"
+        );
+        let report = sys.shutdown();
+        assert_eq!(report.kernels, 8);
+        assert_eq!(report.total_ops, 8);
+        assert!(
+            report.replays <= 2,
+            "8 same-shape kernels collapse onto merged replays: {}",
+            report.replays
+        );
+        assert_eq!(report.cache.requests(), 8, "{:?}", report.cache);
+        assert_eq!(report.cache.misses, 1);
+        assert_eq!(report.total_aaps, 8 * 4);
+        assert!(report.is_clean());
+    }
+
+    #[test]
+    fn interleaved_shapes_reorder_into_merged_runs() {
+        // two sessions alternate two shapes on one bank: FIFO finds no
+        // adjacency, the window-8 planner regroups them — and because the
+        // sessions' rows are disjoint, nothing is hazard-blocked
+        let run = |window: usize| -> SystemReport {
+            let sys = SystemBuilder::new(&cfg())
+                .banks(1)
+                .max_batch(16)
+                .reorder_window(window)
+                .build();
+            let c1 = sys.client_on(0);
+            let c2 = sys.client_on(0);
+            let r1 = c1.alloc().unwrap();
+            let r2 = c2.alloc().unwrap();
+            let (k1, k2) = (shift(1), shift(2));
+            for _ in 0..8 {
+                c1.submit(&k1, std::slice::from_ref(&r1));
+                c2.submit(&k2, std::slice::from_ref(&r2));
+            }
+            sys.flush();
+            sys.shutdown()
+        };
+        let fifo = run(0);
+        let planned = run(8);
+        assert_eq!(fifo.kernels, 16);
+        assert_eq!(planned.kernels, 16);
+        assert_eq!(fifo.replays, 16, "FIFO: one replay per kernel");
+        assert!(
+            planned.replays < fifo.replays,
+            "reordered dispatch must merge replays: {} vs {}",
+            planned.replays,
+            fifo.replays
+        );
+        assert!(planned.reordered > 0, "hoists are counted");
+        assert_eq!(planned.hazard_blocked, 0, "disjoint rows block nothing");
+        assert_eq!(fifo.reordered, 0);
+        // simulated cost is order-independent: same total AAPs and time
+        assert_eq!(planned.total_aaps, fifo.total_aaps);
+        assert_eq!(planned.makespan_ps, fifo.makespan_ps);
+        assert!(planned.is_clean());
+    }
+
+    #[test]
+    fn hazards_keep_reordered_execution_bit_identical() {
+        // one session interleaves two shapes over ALIASED rows: shape B
+        // reads what shape A writes, so hoisting is hazard-blocked where
+        // it would change results, and the final row state matches FIFO
+        let run = |window: usize| -> (BitRow, SystemReport) {
+            let sys = SystemBuilder::new(&cfg())
+                .banks(1)
+                .max_batch(16)
+                .reorder_window(window)
+                .build();
+            let c = sys.client();
+            let rows = c.alloc_rows(2).unwrap();
+            let mut rng = Rng::new(29);
+            c.write(&rows[0], BitRow::random(256, &mut rng));
+            c.write(&rows[1], BitRow::random(256, &mut rng));
+            let shift_in_place = shift(1); // reads+writes rows[0]
+            let xor = Kernel::op(PimOp::Xor { a: 0, b: 1, dst: 1 }); // reads rows[0]
+            for _ in 0..6 {
+                c.submit(&shift_in_place, std::slice::from_ref(&rows[0]));
+                c.submit(&xor, &rows);
+            }
+            sys.flush();
+            let out = c.read_now(&rows[1]).unwrap();
+            (out, sys.shutdown())
+        };
+        let (fifo_out, fifo) = run(0);
+        let (planned_out, planned) = run(8);
+        assert_eq!(planned_out, fifo_out, "hazard checks preserve FIFO semantics");
+        assert_eq!(planned.kernels, fifo.kernels);
+        assert!(
+            planned.hazard_blocked > 0,
+            "the aliased interleaving must trip the hazard check"
+        );
+        assert!(planned.is_clean());
+    }
 
     #[test]
     fn shapes_shared_across_banks_and_rows() {

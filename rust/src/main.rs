@@ -6,7 +6,7 @@
 //! shiftdram report [table1|table2|table3|table4|table5|fig2|fig4|validate|baselines|all] [--full]
 //! shiftdram workload --shifts N [--seed S]
 //! shiftdram mc [--trials N] [--backend pjrt|native] [--node 22nm]
-//! shiftdram serve --banks N --ops K [--batch B] [--channels C]
+//! shiftdram serve --banks N --ops K [--batch B] [--channels C] [--reorder-window W]
 //! shiftdram demo [gf|aes|rs|mul|adder]
 //! ```
 
@@ -84,11 +84,16 @@ fn main() {
             let ops = opt_usize(&args, "--ops", 1024);
             let batch = opt_usize(&args, "--batch", 16);
             let channels = opt_usize(&args, "--channels", 1);
+            let window = opt_usize(&args, "--reorder-window", 0);
             if channels > 1 {
-                serve_fabric(&cfg, channels, banks, ops, batch);
+                serve_fabric(&cfg, channels, banks, ops, batch, window);
                 return;
             }
-            let sys = SystemBuilder::new(&cfg).banks(banks).max_batch(batch).build();
+            let sys = SystemBuilder::new(&cfg)
+                .banks(banks)
+                .max_batch(batch)
+                .reorder_window(window)
+                .build();
             // one session per bank; each allocs one system-placed row and
             // submits shift kernels against its handle
             let clients: Vec<_> = (0..banks).map(|b| sys.client_on(b)).collect();
@@ -101,14 +106,16 @@ fn main() {
             let r = sys.shutdown();
             println!(
                 "{} banks, {} shift kernels: makespan {:.3} us, {:.2} MOps/s aggregate, \
-                 {:.1} nJ total ({} AAPs, {} replays)",
+                 {:.1} nJ total ({} AAPs, {} replays, {} reordered, {} hazard-blocked)",
                 r.banks,
                 r.kernels,
                 r.makespan_ps as f64 / 1e6,
                 r.throughput_mops,
                 r.total_energy_pj / 1e3,
                 r.total_aaps,
-                r.replays
+                r.replays,
+                r.reordered,
+                r.hazard_blocked
             );
             println!(
                 "program cache: {:.1}% hit rate ({} compiles, {} memo-batched), \
@@ -137,7 +144,14 @@ fn main() {
 /// `serve --channels C`: the sharded fabric path. Unplaced shift jobs
 /// (an uneven heavy/light mix) are all homed on shard 0; idle shards pull
 /// whole kernels off its deque, and the report shows the traffic.
-fn serve_fabric(cfg: &DramConfig, channels: usize, banks: usize, ops: usize, batch: usize) {
+fn serve_fabric(
+    cfg: &DramConfig,
+    channels: usize,
+    banks: usize,
+    ops: usize,
+    batch: usize,
+    window: usize,
+) {
     use shiftdram::coordinator::JobSpec;
     use shiftdram::util::{BitRow, Rng};
 
@@ -145,6 +159,7 @@ fn serve_fabric(cfg: &DramConfig, channels: usize, banks: usize, ops: usize, bat
         .channels(channels)
         .banks(banks)
         .max_batch(batch)
+        .reorder_window(window)
         .build_fabric();
     let mut rng = Rng::new(7);
     let cols = cfg.geometry.cols_per_row;

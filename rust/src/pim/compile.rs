@@ -487,9 +487,15 @@ impl ProgramCache {
     }
 
     /// The process-wide cache the application layer defaults to.
+    ///
+    /// Fused ([`Self::new_fused`]) since the serving default flipped to
+    /// `fuse_aap(true)`: app kernels compiled here drop their redundant
+    /// cross-op scratch reloads, and the app AAP calibrations are
+    /// baselined against the fused totals (`Receipt::elided_aaps`
+    /// recovers the paper's literal unfused counts).
     pub fn global() -> Arc<ProgramCache> {
         static GLOBAL: OnceLock<Arc<ProgramCache>> = OnceLock::new();
-        GLOBAL.get_or_init(|| Arc::new(ProgramCache::new(512))).clone()
+        GLOBAL.get_or_init(|| Arc::new(ProgramCache::new_fused(512))).clone()
     }
 
     /// Fetch or compile the program for `shape` under `cfg`. The build

@@ -18,4 +18,4 @@ pub use compile::{
 };
 pub use executor::{apply, apply_op, run, run_compiled};
 pub use isa::{shift_commands, PimOp};
-pub use program::{PimTape, Program, ProgramSketch, RowAlloc};
+pub use program::{PimTape, Program, ProgramSketch, RowAlloc, RowFootprint};

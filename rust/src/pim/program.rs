@@ -1,6 +1,8 @@
 //! PIM programs: ordered macro-op lists with lowering, cost accounting,
 //! the [`PimTape`] recording abstraction kernel bodies are written
-//! against, and a row allocator for temporaries.
+//! against, per-op [`RowFootprint`] extraction (the hazard record behind
+//! the coordinator's kernel reorderer), and a row allocator for
+//! temporaries.
 //!
 //! Application kernels ([`crate::apps`]) build programs against named
 //! virtual rows; [`RowAlloc`] maps them onto the subarray's data rows and
@@ -11,6 +13,145 @@ use crate::config::DramConfig;
 use crate::dram::address::Command;
 use crate::pim::compile::{CommandCensus, CompiledProgram};
 use crate::pim::isa::PimOp;
+
+/// The data rows an op (or op sequence) reads and writes — the hazard
+/// record behind the coordinator's dependency-aware kernel reorderer
+/// ([`crate::coordinator::reorder`]).
+///
+/// Footprints live in whatever row space the ops use: canonical slots for
+/// a recorded kernel shape, concrete subarray rows after a binding is
+/// applied ([`Self::map`]). Only *data* rows appear — the scratch
+/// resources a lowering touches (Ambit compute rows, DCCs, the migration
+/// cells) are re-initialized by every macro-op before use and carry no
+/// value between kernels, so they are invisible to cross-kernel hazard
+/// analysis. That stays true under the cross-op AAP fusion peephole
+/// (`CompiledProgram::compile_fused`): fusion elides a scratch *reload*
+/// whose value was established by the adjacent command of the same
+/// program, never a data-row access.
+///
+/// Semantics are op-level, not command-level: a row counts as read only
+/// when its *prior* value can affect the result. A multi-step
+/// `ShiftBy { src, dst, .. }` fully overwrites `dst` before the lowered
+/// stream ever senses its prior value, so `dst` is write-only (unless it
+/// aliases `src`) even though later migration AAPs of the same block
+/// re-read it.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RowFootprint {
+    /// rows whose prior contents the ops observe (sorted, deduplicated)
+    reads: Vec<usize>,
+    /// rows the ops overwrite (sorted, deduplicated)
+    writes: Vec<usize>,
+}
+
+impl RowFootprint {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Footprint of a single macro-op.
+    pub fn of_op(op: &PimOp) -> Self {
+        let mut fp = RowFootprint::new();
+        fp.absorb_op(op);
+        fp
+    }
+
+    /// Union footprint of an op sequence.
+    pub fn of_ops(ops: &[PimOp]) -> Self {
+        let mut fp = RowFootprint::new();
+        for op in ops {
+            fp.absorb_op(op);
+        }
+        fp
+    }
+
+    /// Add one op's reads and writes to this footprint.
+    pub fn absorb_op(&mut self, op: &PimOp) {
+        match *op {
+            PimOp::Copy { src, dst }
+            | PimOp::Not { src, dst }
+            | PimOp::ShiftRight { src, dst }
+            | PimOp::ShiftLeft { src, dst }
+            | PimOp::ShiftBy { src, dst, .. } => {
+                self.add_read(src);
+                self.add_write(dst);
+            }
+            PimOp::SetZero { dst } | PimOp::SetOnes { dst } => self.add_write(dst),
+            PimOp::And { a, b, dst } | PimOp::Or { a, b, dst } | PimOp::Xor { a, b, dst } => {
+                self.add_read(a);
+                self.add_read(b);
+                self.add_write(dst);
+            }
+            PimOp::Maj { a, b, c, dst } => {
+                self.add_read(a);
+                self.add_read(b);
+                self.add_read(c);
+                self.add_write(dst);
+            }
+        }
+    }
+
+    pub fn add_read(&mut self, row: usize) {
+        if let Err(i) = self.reads.binary_search(&row) {
+            self.reads.insert(i, row);
+        }
+    }
+
+    pub fn add_write(&mut self, row: usize) {
+        if let Err(i) = self.writes.binary_search(&row) {
+            self.writes.insert(i, row);
+        }
+    }
+
+    /// Rows read (sorted). A row both read and written appears in both.
+    pub fn reads(&self) -> &[usize] {
+        &self.reads
+    }
+
+    /// Rows written (sorted).
+    pub fn writes(&self) -> &[usize] {
+        &self.writes
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.reads.is_empty() && self.writes.is_empty()
+    }
+
+    /// The footprint with every row passed through `f` — how a slot-space
+    /// kernel footprint becomes a concrete row footprint at submission
+    /// (aliased bindings collapse into one entry).
+    pub fn map(&self, mut f: impl FnMut(usize) -> usize) -> RowFootprint {
+        let mut out = RowFootprint::new();
+        for &r in &self.reads {
+            out.add_read(f(r));
+        }
+        for &r in &self.writes {
+            out.add_write(f(r));
+        }
+        out
+    }
+
+    /// True when executing `self` and `other` in either order could give
+    /// different results: any RAW, WAR, or WAW overlap. (Read–read
+    /// overlap commutes, so it is not a conflict.) Symmetric.
+    pub fn conflicts_with(&self, other: &RowFootprint) -> bool {
+        sorted_intersect(&self.writes, &other.writes)
+            || sorted_intersect(&self.writes, &other.reads)
+            || sorted_intersect(&self.reads, &other.writes)
+    }
+}
+
+/// Whether two sorted slices share an element.
+fn sorted_intersect(a: &[usize], b: &[usize]) -> bool {
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => return true,
+        }
+    }
+    false
+}
 
 /// A sink of macro-ops over W-bit elements: kernel bodies are generic over
 /// this, so one body can execute eagerly (`apps::ElementCtx`), record into
@@ -182,6 +323,166 @@ mod tests {
         assert_eq!(*prog.census(), p.census());
         assert_eq!(prog.commands().len(), p.commands().len());
         assert_eq!(prog.blocks().len(), p.ops().len());
+    }
+
+    fn fp(op: PimOp) -> RowFootprint {
+        RowFootprint::of_op(&op)
+    }
+
+    #[test]
+    fn footprint_of_every_op_kind() {
+        // satellite: every `PimOp` kind maps to the correct read/write sets
+        assert_eq!(fp(PimOp::Copy { src: 3, dst: 5 }).reads(), &[3]);
+        assert_eq!(fp(PimOp::Copy { src: 3, dst: 5 }).writes(), &[5]);
+        assert_eq!(fp(PimOp::SetZero { dst: 2 }).reads(), &[] as &[usize]);
+        assert_eq!(fp(PimOp::SetZero { dst: 2 }).writes(), &[2]);
+        assert_eq!(fp(PimOp::SetOnes { dst: 7 }).reads(), &[] as &[usize]);
+        assert_eq!(fp(PimOp::SetOnes { dst: 7 }).writes(), &[7]);
+        assert_eq!(fp(PimOp::Not { src: 1, dst: 0 }).reads(), &[1]);
+        assert_eq!(fp(PimOp::Not { src: 1, dst: 0 }).writes(), &[0]);
+        for op in [
+            PimOp::And { a: 4, b: 2, dst: 9 },
+            PimOp::Or { a: 4, b: 2, dst: 9 },
+            PimOp::Xor { a: 4, b: 2, dst: 9 },
+        ] {
+            assert_eq!(fp(op).reads(), &[2, 4], "{op:?}");
+            assert_eq!(fp(op).writes(), &[9], "{op:?}");
+        }
+        let maj = fp(PimOp::Maj { a: 6, b: 1, c: 3, dst: 6 });
+        assert_eq!(maj.reads(), &[1, 3, 6]);
+        assert_eq!(maj.writes(), &[6], "in-place MAJ reads and writes its dst");
+        for op in [
+            PimOp::ShiftRight { src: 0, dst: 1 },
+            PimOp::ShiftLeft { src: 0, dst: 1 },
+            PimOp::ShiftBy { src: 0, dst: 1, n: 5, dir: ShiftDir::Right },
+            PimOp::ShiftBy { src: 0, dst: 1, n: 0, dir: ShiftDir::Left },
+        ] {
+            assert_eq!(fp(op).reads(), &[0], "{op:?}");
+            assert_eq!(
+                fp(op).writes(),
+                &[1],
+                "dst is fully overwritten before the lowering re-reads it: {op:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn footprint_union_and_map() {
+        let ops = [
+            PimOp::Xor { a: 0, b: 1, dst: 2 },
+            PimOp::ShiftBy { src: 2, dst: 2, n: 3, dir: ShiftDir::Right },
+            PimOp::And { a: 2, b: 3, dst: 4 },
+        ];
+        let fp = RowFootprint::of_ops(&ops);
+        assert_eq!(fp.reads(), &[0, 1, 2, 3]);
+        assert_eq!(fp.writes(), &[2, 4]);
+        // slot→row binding: slots 0..=4 land on rows [10, 11, 12, 10, 14]
+        // (slot 3 aliases slot 0's row — aliasing collapses, not duplicates)
+        let binding = [10usize, 11, 12, 10, 14];
+        let bound = fp.map(|slot| binding[slot]);
+        assert_eq!(bound.reads(), &[10, 11, 12]);
+        assert_eq!(bound.writes(), &[12, 14]);
+    }
+
+    #[test]
+    fn footprint_conflicts_are_raw_waw_war_only() {
+        let w2 = fp(PimOp::Xor { a: 0, b: 1, dst: 2 });
+        // read-read overlap commutes
+        let r01 = fp(PimOp::And { a: 0, b: 1, dst: 3 });
+        assert!(!w2.conflicts_with(&r01));
+        assert!(!r01.conflicts_with(&w2));
+        // RAW: the second reads what the first wrote
+        let reads2 = fp(PimOp::Copy { src: 2, dst: 4 });
+        assert!(w2.conflicts_with(&reads2));
+        assert!(reads2.conflicts_with(&w2), "conflict is symmetric");
+        // WAW
+        let also_w2 = fp(PimOp::SetZero { dst: 2 });
+        assert!(w2.conflicts_with(&also_w2));
+        // WAR: the second writes what the first reads
+        let writes1 = fp(PimOp::SetOnes { dst: 1 });
+        assert!(w2.conflicts_with(&writes1));
+        // fully disjoint
+        let disjoint = fp(PimOp::Copy { src: 8, dst: 9 });
+        assert!(!w2.conflicts_with(&disjoint));
+        assert!(RowFootprint::new().is_empty());
+        assert!(!RowFootprint::new().conflicts_with(&w2));
+    }
+
+    /// Walk a lowered command stream and check the declared footprint
+    /// covers it: every *data-row* source that is sensed before the stream
+    /// first overwrites that row must be a declared read, and every
+    /// data-row destination must be a declared write. Scratch references
+    /// (compute/DCC/migration/control rows) are exempt by design.
+    fn assert_footprint_covers(cmds: &[Command], fp: &RowFootprint) {
+        use crate::dram::address::RowRef;
+        let mut written: Vec<usize> = Vec::new();
+        let check_src = |r: &RowRef, written: &Vec<usize>| {
+            if let RowRef::Data(row) = r {
+                if !written.contains(row) {
+                    assert!(
+                        fp.reads().contains(row),
+                        "data row {row} sensed before first write but not in reads"
+                    );
+                }
+            }
+        };
+        for cmd in cmds {
+            match cmd {
+                Command::Aap { src, dst } => {
+                    check_src(src, &written);
+                    if let RowRef::Data(row) = dst {
+                        assert!(fp.writes().contains(row), "data row {row} written");
+                        // a partial (single-port) overwrite still merges the
+                        // old value, but every shift writes both ports before
+                        // the block ends; treat the first write as covering
+                        written.push(*row);
+                    }
+                }
+                Command::Dra { a, b } => {
+                    check_src(a, &written);
+                    check_src(b, &written);
+                }
+                Command::Tra { a, b, c } => {
+                    check_src(a, &written);
+                    check_src(b, &written);
+                    check_src(c, &written);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn footprint_covers_lowered_streams_plain_and_fused() {
+        // satellite: footprints stay valid for the command streams the
+        // engine actually replays — including fused programs, whose elided
+        // scratch reloads must not remove any *data-row* dependency
+        let cfg = DramConfig::tiny_test();
+        let chains: [&[PimOp]; 3] = [
+            &[
+                PimOp::And { a: 0, b: 1, dst: 2 },
+                PimOp::And { a: 2, b: 3, dst: 4 },
+                PimOp::Or { a: 4, b: 1, dst: 5 },
+            ],
+            &[
+                PimOp::Xor { a: 0, b: 1, dst: 0 },
+                PimOp::ShiftBy { src: 0, dst: 1, n: 2, dir: ShiftDir::Left },
+                PimOp::Maj { a: 0, b: 1, c: 2, dst: 3 },
+                PimOp::Not { src: 3, dst: 3 },
+            ],
+            &[PimOp::Copy { src: 0, dst: 1 }, PimOp::Copy { src: 1, dst: 0 }],
+        ];
+        for ops in chains {
+            let fp = RowFootprint::of_ops(ops);
+            let plain = CompiledProgram::compile(ops, &cfg);
+            let fused = CompiledProgram::compile_fused(ops, &cfg);
+            assert_footprint_covers(plain.commands(), &fp);
+            assert_footprint_covers(fused.commands(), &fp);
+        }
+        // the first chain really exercises elision, so the fused coverage
+        // above is not vacuous
+        let fused = CompiledProgram::compile_fused(chains[0], &cfg);
+        assert!(fused.elided_aaps() > 0);
     }
 
     #[test]

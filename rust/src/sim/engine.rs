@@ -197,6 +197,20 @@ impl BankSim {
         }
     }
 
+    /// Replay one compiled program against several `(subarray, binding)`
+    /// placements in a single call — the merged-run fast path behind the
+    /// coordinator's hazard-checked kernel reorderer: K same-shape
+    /// kernels cost one program fetch and one replay dispatch. Time,
+    /// energy, census, and functional state advance exactly as K
+    /// consecutive [`Self::run_compiled`] calls would (same command
+    /// order, same refresh interleaving), so merged and FIFO dispatch
+    /// stay bit-identical.
+    pub fn run_compiled_many(&mut self, prog: &CompiledProgram, runs: &[(usize, &[usize])]) {
+        for &(subarray, binding) in runs {
+            self.run_compiled(subarray, prog, Some(binding));
+        }
+    }
+
     /// Host-side full-row write (DMA in): functional only, burst energy
     /// accounted per 64 B column write.
     pub fn host_write_row(&mut self, subarray: usize, row: usize, bits: crate::util::BitRow) {
@@ -324,6 +338,42 @@ mod tests {
         assert_eq!(fast.energy.refresh_pj, slow.energy.refresh_pj);
         assert_eq!(fast.energy.burst_pj, slow.energy.burst_pj);
         assert_eq!(fast.bank().subarray(0).read_row(3), slow.bank().subarray(0).read_row(3));
+    }
+
+    #[test]
+    fn run_compiled_many_matches_sequential_run_compiled() {
+        let cfg = DramConfig::tiny_test();
+        let mut merged = BankSim::new(cfg.clone());
+        let mut seq = BankSim::new(cfg.clone());
+        let mut rng = Rng::new(23);
+        let cols = cfg.geometry.cols_per_row;
+        for sa in 0..2 {
+            for row in 0..3 {
+                let bits = BitRow::random(cols, &mut rng);
+                merged.bank().subarray(sa).write_row(row, bits.clone());
+                seq.bank().subarray(sa).write_row(row, bits);
+            }
+        }
+        let op = PimOp::ShiftBy { src: 0, dst: 1, n: 2, dir: ShiftDir::Right };
+        let prog = CompiledProgram::compile(&[op], &cfg);
+        // three placements: two subarrays, aliased rows included
+        let bindings: [(usize, &[usize]); 3] = [(0, &[0, 1]), (1, &[2, 0]), (0, &[1, 1])];
+        merged.run_compiled_many(&prog, &bindings);
+        for &(sa, b) in &bindings {
+            seq.run_compiled(sa, &prog, Some(b));
+        }
+        assert_eq!(merged.now_ps, seq.now_ps);
+        assert_eq!(merged.counts, seq.counts);
+        assert_eq!(merged.energy.active_pj, seq.energy.active_pj);
+        for sa in 0..2 {
+            for row in 0..3 {
+                assert_eq!(
+                    merged.bank().subarray(sa).read_row(row),
+                    seq.bank().subarray(sa).read_row(row),
+                    "subarray {sa} row {row}"
+                );
+            }
+        }
     }
 
     #[test]

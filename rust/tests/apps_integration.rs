@@ -3,14 +3,17 @@
 //! cross-app properties — including the redesign's bit-exactness anchor:
 //! the client path against the pre-redesign per-command executor.
 
+use std::sync::Arc;
+
 use shiftdram::apps::adder::{install_masks, kogge_stone_add, ripple_add};
+use shiftdram::apps::aes::{install_aes, mix_columns, STATE_BASE};
 use shiftdram::apps::elements::ElementCtx;
 use shiftdram::apps::gf::{gf_mul, gf_mul_ref, install_gf_masks, xtime};
 use shiftdram::apps::multiplier::{install_mul_masks, shift_and_add_mul};
 use shiftdram::apps::reed_solomon::{rs_encode_ref, RsEncoder};
 use shiftdram::config::DramConfig;
 use shiftdram::dram::subarray::Subarray;
-use shiftdram::pim::{executor, PimOp};
+use shiftdram::pim::{executor, PimOp, ProgramCache};
 use shiftdram::util::proptest::{check, prop_assert_eq};
 use shiftdram::util::{BitRow, Rng, ShiftDir};
 
@@ -176,6 +179,119 @@ fn prop_client_path_bit_exact_against_per_command_executor() {
         }
         Ok(())
     });
+}
+
+/// Run one app-kernel body through a fused context and an unfused one,
+/// assert every data row lands bit-identically, and return the two AAP
+/// calibrations as `((fused_aaps, elided), unfused_aaps)`.
+fn calibrate(
+    rows: usize,
+    cols: usize,
+    width: usize,
+    body: impl Fn(&mut ElementCtx),
+) -> ((usize, usize), usize) {
+    let cfg = DramConfig::ddr3_1333_4gb();
+    let mut fused = ElementCtx::with_config(
+        rows,
+        cols,
+        width,
+        cfg.clone(),
+        Arc::new(ProgramCache::new_fused(256)),
+    );
+    let mut plain =
+        ElementCtx::with_config(rows, cols, width, cfg, Arc::new(ProgramCache::new(256)));
+    body(&mut fused);
+    body(&mut plain);
+    for r in 0..rows {
+        assert_eq!(fused.row(r), plain.row(r), "fusion must be invisible in row {r}");
+    }
+    assert_eq!(plain.elided_aaps, 0, "unfused context elides nothing");
+    assert_eq!(fused.tras, plain.tras, "fusion elides AAPs only");
+    assert_eq!(fused.dras, plain.dras);
+    ((fused.aaps, fused.elided_aaps), plain.aaps)
+}
+
+#[test]
+fn fused_default_aap_calibrations_for_app_kernels() {
+    // The serving default flipped to fuse_aap(true) (fused global cache),
+    // so the adder/gf/aes/reed_solomon censuses are now baselined against
+    // the fused lowering. This is the re-baseline anchor: for every app
+    // kernel family, fused + elided reproduces the old unfused
+    // calibration exactly, results stay bit-identical, and the chained
+    // kernels really do get cheaper.
+    let mut total_elided = 0usize;
+    let mut reconcile = |name: &str, got: ((usize, usize), usize)| {
+        let ((fused, elided), unfused) = got;
+        assert_eq!(
+            fused + elided,
+            unfused,
+            "{name}: fused census + elided must recover the unfused calibration"
+        );
+        total_elided += elided;
+    };
+
+    // adder (kogge-stone, the serving-path adder)
+    reconcile(
+        "adder",
+        calibrate(48, 128, 8, |ctx| {
+            install_masks(ctx);
+            let n = ctx.n_elements();
+            let a: Vec<u64> = (0..n).map(|j| (j as u64 * 37 + 11) & 0xFF).collect();
+            let b: Vec<u64> = (0..n).map(|j| (j as u64 * 59 + 3) & 0xFF).collect();
+            ctx.set_row(0, ctx.pack(&a));
+            ctx.set_row(1, ctx.pack(&b));
+            kogge_stone_add(ctx, 0, 1, 2);
+        }),
+    );
+
+    // gf (full vector multiply)
+    reconcile(
+        "gf",
+        calibrate(40, 128, 8, |ctx| {
+            install_gf_masks(ctx);
+            let n = ctx.n_elements();
+            let a: Vec<u64> = (0..n).map(|j| (j as u64 * 13 + 7) & 0xFF).collect();
+            let b: Vec<u64> = (0..n).map(|j| (j as u64 * 29 + 1) & 0xFF).collect();
+            ctx.set_row(0, ctx.pack(&a));
+            ctx.set_row(1, ctx.pack(&b));
+            gf_mul(ctx, 0, 1, 2);
+        }),
+    );
+
+    // aes (MixColumns — the xtime-chain heavy round step)
+    reconcile(
+        "aes",
+        calibrate(96, 128, 8, |ctx| {
+            install_aes(ctx);
+            let n = ctx.n_elements();
+            for r in 0..16 {
+                let vals: Vec<u64> =
+                    (0..n).map(|j| ((r * 31 + j * 17 + 5) as u64) & 0xFF).collect();
+                ctx.set_row(STATE_BASE + r, ctx.pack(&vals));
+            }
+            mix_columns(ctx);
+        }),
+    );
+
+    // reed_solomon (RS(7,3) encode)
+    reconcile(
+        "reed_solomon",
+        calibrate(96, 128, 8, |ctx| {
+            let enc = RsEncoder::new(7, 3);
+            enc.install(ctx);
+            let n = ctx.n_elements();
+            let msgs: Vec<Vec<u8>> = (0..n)
+                .map(|j| (0..7).map(|k| ((j * 7 + k * 3 + 1) & 0xFF) as u8).collect())
+                .collect();
+            enc.load_messages(ctx, &msgs);
+            enc.encode(ctx);
+        }),
+    );
+
+    assert!(
+        total_elided > 0,
+        "the app suite's chained logic kernels must exercise the peephole"
+    );
 }
 
 #[test]

@@ -149,6 +149,37 @@ fn nj_per_kb_efficiency() {
 }
 
 #[test]
+fn shift_table_censuses_are_fusion_invariant() {
+    // The serving default flipped to fuse_aap(true). Tables 2/3 price
+    // pure shift streams, and the migration-row handoff never produces
+    // the reverse AAP pair the peephole elides — so the fused default
+    // leaves every table kernel's census, latency, and energy untouched
+    // and the paper's numbers stand without re-deriving the tables.
+    use shiftdram::coordinator::{Kernel, SystemBuilder};
+    use shiftdram::pim::{CompiledProgram, PimOp};
+    let c = cfg();
+    for n in [1usize, 8, 64] {
+        let ops = [PimOp::ShiftBy { src: 0, dst: 0, n, dir: ShiftDir::Right }];
+        let plain = CompiledProgram::compile(&ops, &c);
+        let fused = CompiledProgram::compile_fused(&ops, &c);
+        assert_eq!(fused.elided_aaps(), 0, "shift-by-{n} has nothing to fuse");
+        assert_eq!(fused.census(), plain.census());
+        assert_eq!(fused.latency_ps(), plain.latency_ps());
+    }
+    // …and a default-built (fused) serving system still issues Table 3's
+    // 4 AAPs per single-bit shift, with the receipt saying so explicitly
+    let sys = SystemBuilder::new(&c).banks(1).build();
+    let client = sys.client();
+    let row = client.alloc().expect("row");
+    let receipt = client
+        .run(&Kernel::shift_by(8, ShiftDir::Right), std::slice::from_ref(&row))
+        .expect("kernel");
+    assert_eq!(receipt.census.aap, 32, "8-bit shift = 32 AAPs, fused or not");
+    assert_eq!(receipt.elided_aaps, 0);
+    assert!(sys.shutdown().is_clean());
+}
+
+#[test]
 fn multi_shift_workload_2048_scales() {
     let r = run_shift_workload(&cfg(), 2048, ShiftDir::Left, 11);
     assert!(r.verified);

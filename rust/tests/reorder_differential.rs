@@ -1,0 +1,329 @@
+//! Differential replay harness for the hazard-checked kernel reorderer.
+//!
+//! Reordering is semantics-risky, so this harness proves — per seeded
+//! case — that a system dispatching with `reorder_window(8)` is
+//! observationally **bit-identical** to strict FIFO (`reorder_window(0)`):
+//! the same randomly generated multi-client interleaving of row writes,
+//! row reads, and kernel submissions (mixed shapes, aliased handle
+//! tables, deferred/pinned fabric work) is executed under both windows,
+//! and every ticket result, every read-back, and every final row image
+//! must agree exactly. Across the corpus the planner must also have
+//! actually reordered something — a vacuously-FIFO corpus proves nothing.
+//!
+//! 160 system-level seeds + 48 fabric-level seeds = 208 interleavings.
+
+use shiftdram::config::DramConfig;
+use shiftdram::coordinator::{
+    JobSpec, Kernel, PimError, Receipt, RowHandle, SystemBuilder, SystemReport, Ticket,
+};
+use shiftdram::pim::{PimOp, PimTape};
+use shiftdram::util::{BitRow, Rng, ShiftDir};
+
+/// tiny_test geometry: 256-bit rows.
+const COLS: usize = 256;
+const SYSTEM_SEEDS: u64 = 160;
+const FABRIC_SEEDS: u64 = 48;
+
+/// The kernel shapes the generator mixes: single-op shifts and logic
+/// (including in-place forms) plus a multi-op chained kernel that the
+/// fused default actually peepholes.
+fn kernel_pool() -> Vec<Kernel> {
+    vec![
+        Kernel::shift_by(1, ShiftDir::Right),
+        Kernel::shift_by(2, ShiftDir::Right),
+        Kernel::shift_by(3, ShiftDir::Left),
+        Kernel::op(PimOp::Xor { a: 0, b: 1, dst: 2 }),
+        Kernel::op(PimOp::And { a: 0, b: 1, dst: 1 }),
+        Kernel::op(PimOp::Copy { src: 0, dst: 1 }),
+        Kernel::op(PimOp::Not { src: 0, dst: 0 }),
+        Kernel::record(8, |t| {
+            t.op(PimOp::Xor { a: 0, b: 1, dst: 2 });
+            t.op(PimOp::And { a: 2, b: 0, dst: 3 });
+            t.op(PimOp::ShiftBy { src: 3, dst: 3, n: 1, dir: ShiftDir::Right });
+        }),
+    ]
+}
+
+// ───────────────────────── system-level cases ─────────────────────────
+
+#[derive(Clone, Debug)]
+enum Action {
+    Write { session: usize, row: usize, bits: BitRow },
+    Read { session: usize, row: usize },
+    Run { session: usize, kernel: usize, rows: Vec<usize> },
+}
+
+#[derive(Clone, Debug)]
+struct Case {
+    banks: usize,
+    max_batch: usize,
+    sessions: usize,
+    rows_per_session: usize,
+    actions: Vec<Action>,
+}
+
+/// Generate one random interleaving. Every session's rows are written up
+/// front so no kernel ever senses an uninitialized row — the schedule is
+/// fully defined under any hazard-respecting order.
+fn gen_case(seed: u64) -> Case {
+    let mut rng = Rng::new(seed.wrapping_mul(2654435761).wrapping_add(17));
+    let pool = kernel_pool();
+    let banks = 1 + rng.below(2);
+    let max_batch = [2usize, 4, 8, 16][rng.below(4)];
+    let sessions = 2 + rng.below(2);
+    let rows_per_session = 6;
+    let mut actions = Vec::new();
+    for session in 0..sessions {
+        for row in 0..rows_per_session {
+            actions.push(Action::Write { session, row, bits: BitRow::random(COLS, &mut rng) });
+        }
+    }
+    for _ in 0..12 + rng.below(20) {
+        let session = rng.below(sessions);
+        match rng.below(8) {
+            0 => actions.push(Action::Write {
+                session,
+                row: rng.below(rows_per_session),
+                bits: BitRow::random(COLS, &mut rng),
+            }),
+            1 => actions.push(Action::Read { session, row: rng.below(rows_per_session) }),
+            _ => {
+                let kernel = rng.below(pool.len());
+                let need = pool[kernel].n_rows().max(1);
+                // handle tables drawn with replacement: aliased handles
+                // (two slots bound to one row) are part of the corpus
+                let rows: Vec<usize> =
+                    (0..need).map(|_| rng.below(rows_per_session)).collect();
+                actions.push(Action::Run { session, kernel, rows });
+            }
+        }
+    }
+    Case { banks, max_batch, sessions, rows_per_session, actions }
+}
+
+/// One ticket's decoded outcome — everything a client can observe.
+#[derive(Debug, PartialEq)]
+enum TicketResult {
+    Wrote(Result<(), PimError>),
+    Row(Result<BitRow, PimError>),
+    Ran(Result<Receipt, PimError>),
+}
+
+enum PendingTicket {
+    Write(Ticket<()>),
+    Read(Ticket<BitRow>),
+    Run(Ticket<Receipt>),
+}
+
+fn run_system_case(
+    case: &Case,
+    window: usize,
+) -> (Vec<TicketResult>, Vec<Vec<BitRow>>, SystemReport) {
+    let pool = kernel_pool();
+    let sys = SystemBuilder::new(&DramConfig::tiny_test())
+        .banks(case.banks)
+        .max_batch(case.max_batch)
+        .reorder_window(window)
+        .build();
+    let clients: Vec<_> = (0..case.sessions).map(|_| sys.client()).collect();
+    let handles: Vec<Vec<RowHandle>> = clients
+        .iter()
+        .map(|c| c.alloc_rows(case.rows_per_session).expect("rows"))
+        .collect();
+    let mut pending = Vec::with_capacity(case.actions.len());
+    for action in &case.actions {
+        match action {
+            Action::Write { session, row, bits } => pending.push(PendingTicket::Write(
+                clients[*session].write(&handles[*session][*row], bits.clone()),
+            )),
+            Action::Read { session, row } => pending
+                .push(PendingTicket::Read(clients[*session].read(&handles[*session][*row]))),
+            Action::Run { session, kernel, rows } => {
+                let table: Vec<RowHandle> =
+                    rows.iter().map(|&r| handles[*session][r].clone()).collect();
+                pending.push(PendingTicket::Run(
+                    clients[*session].submit(&pool[*kernel], &table),
+                ));
+            }
+        }
+    }
+    sys.flush();
+    let results = pending
+        .into_iter()
+        .map(|p| match p {
+            PendingTicket::Write(t) => TicketResult::Wrote(t.wait()),
+            PendingTicket::Read(t) => TicketResult::Row(t.wait()),
+            PendingTicket::Run(t) => TicketResult::Ran(t.wait()),
+        })
+        .collect();
+    let finals: Vec<Vec<BitRow>> = clients
+        .iter()
+        .zip(&handles)
+        .map(|(c, hs)| hs.iter().map(|h| c.read_now(h).expect("final read")).collect())
+        .collect();
+    (results, finals, sys.shutdown())
+}
+
+#[test]
+fn differential_replay_system_level_bit_identity() {
+    let mut total_reordered = 0u64;
+    let mut total_blocked = 0u64;
+    let mut merged_cases = 0u64;
+    for seed in 0..SYSTEM_SEEDS {
+        let case = gen_case(seed);
+        let (fifo_results, fifo_rows, fifo) = run_system_case(&case, 0);
+        let (plan_results, plan_rows, planned) = run_system_case(&case, 8);
+        assert_eq!(fifo_results.len(), plan_results.len());
+        for (i, (a, b)) in fifo_results.iter().zip(&plan_results).enumerate() {
+            assert_eq!(a, b, "seed {seed}: ticket {i} diverged");
+        }
+        assert_eq!(fifo_rows, plan_rows, "seed {seed}: final row images diverged");
+        assert_eq!(fifo.kernels, planned.kernels, "seed {seed}");
+        assert_eq!(fifo.requests, planned.requests, "seed {seed}");
+        assert_eq!(fifo.total_ops, planned.total_ops, "seed {seed}");
+        assert_eq!(fifo.total_aaps, planned.total_aaps, "seed {seed}");
+        assert_eq!(fifo.makespan_ps, planned.makespan_ps, "seed {seed}");
+        assert_eq!(fifo.reordered, 0, "seed {seed}: window 0 must stay FIFO");
+        assert!(
+            planned.replays <= fifo.replays,
+            "seed {seed}: merging must never add replays"
+        );
+        if planned.replays < fifo.replays {
+            merged_cases += 1;
+        }
+        assert!(fifo.is_clean() && planned.is_clean(), "seed {seed}");
+        total_reordered += planned.reordered;
+        total_blocked += planned.hazard_blocked;
+    }
+    assert!(total_reordered > 0, "the corpus must exercise hoisting");
+    assert!(total_blocked > 0, "the corpus must exercise the hazard check");
+    assert!(
+        merged_cases >= SYSTEM_SEEDS / 4,
+        "merged replays should land in a healthy share of cases: {merged_cases}"
+    );
+}
+
+// ───────────────────────── fabric-level cases ─────────────────────────
+
+#[derive(Clone, Debug)]
+enum FabricAction {
+    /// unplaced job homed on a shard (may be stolen and merged)
+    Job { home: usize, kernel: usize, inputs: Vec<BitRow> },
+    /// deferred handle-pinned kernel on one session (never migrates)
+    Deferred { session: usize, kernel: usize, rows: Vec<usize> },
+}
+
+#[derive(Clone, Debug)]
+struct FabricCase {
+    session_rows: Vec<Vec<BitRow>>,
+    actions: Vec<FabricAction>,
+}
+
+fn gen_fabric_case(seed: u64) -> FabricCase {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(3));
+    let pool = kernel_pool();
+    let rows_per_session = 4;
+    let session_rows: Vec<Vec<BitRow>> = (0..2)
+        .map(|_| (0..rows_per_session).map(|_| BitRow::random(COLS, &mut rng)).collect())
+        .collect();
+    let mut actions = Vec::new();
+    for _ in 0..8 + rng.below(10) {
+        if rng.below(4) == 0 {
+            let session = rng.below(2);
+            let kernel = rng.below(pool.len());
+            let need = pool[kernel].n_rows().max(1);
+            let rows: Vec<usize> = (0..need).map(|_| rng.below(rows_per_session)).collect();
+            actions.push(FabricAction::Deferred { session, kernel, rows });
+        } else {
+            let home = rng.below(2);
+            let kernel = rng.below(pool.len());
+            let need = pool[kernel].n_rows().max(1);
+            let inputs: Vec<BitRow> =
+                (0..need).map(|_| BitRow::random(COLS, &mut rng)).collect();
+            actions.push(FabricAction::Job { home, kernel, inputs });
+        }
+    }
+    FabricCase { session_rows, actions }
+}
+
+/// Job outcomes compare on receipt + read-backs only: *which* shard ran a
+/// stolen job is scheduling noise, the bits must not be.
+type JobResult = (Receipt, Vec<BitRow>);
+
+fn run_fabric_case(
+    case: &FabricCase,
+    window: usize,
+) -> (Vec<JobResult>, Vec<Result<Receipt, PimError>>, Vec<Vec<BitRow>>) {
+    let pool = kernel_pool();
+    let fabric = SystemBuilder::new(&DramConfig::tiny_test())
+        .channels(2)
+        .banks(1)
+        .reorder_window(window)
+        .build_fabric();
+    let sessions: Vec<_> = (0..2).map(|s| fabric.client_on(s)).collect();
+    let handles: Vec<Vec<RowHandle>> = sessions
+        .iter()
+        .zip(&case.session_rows)
+        .map(|(c, rows)| {
+            let hs = c.alloc_rows(rows.len()).expect("session rows");
+            for (h, bits) in hs.iter().zip(rows) {
+                c.write_now(h, bits.clone()).expect("seed write");
+            }
+            hs
+        })
+        .collect();
+    let mut job_tickets = Vec::new();
+    let mut deferred_tickets = Vec::new();
+    for action in &case.actions {
+        match action {
+            FabricAction::Job { home, kernel, inputs } => {
+                let mut spec = JobSpec::new(pool[*kernel].clone());
+                for (slot, bits) in inputs.iter().enumerate() {
+                    spec = spec.input(slot, bits.clone());
+                }
+                for slot in 0..inputs.len() {
+                    spec = spec.read_back(slot);
+                }
+                job_tickets.push(fabric.submit_job_on(*home, spec));
+            }
+            FabricAction::Deferred { session, kernel, rows } => {
+                let table: Vec<RowHandle> =
+                    rows.iter().map(|&r| handles[*session][r].clone()).collect();
+                deferred_tickets
+                    .push(sessions[*session].submit_deferred(&pool[*kernel], &table));
+            }
+        }
+    }
+    let jobs: Vec<JobResult> = job_tickets
+        .into_iter()
+        .map(|t| {
+            let out = t.wait().expect("fabric job");
+            (out.receipt, out.rows)
+        })
+        .collect();
+    let deferred: Vec<Result<Receipt, PimError>> =
+        deferred_tickets.into_iter().map(|t| t.wait()).collect();
+    let finals: Vec<Vec<BitRow>> = sessions
+        .iter()
+        .zip(&handles)
+        .map(|(c, hs)| hs.iter().map(|h| c.read_now(h).expect("final read")).collect())
+        .collect();
+    let report = fabric.shutdown();
+    assert!(report.is_clean(), "{:?}", report.worker_failures);
+    (jobs, deferred, finals)
+}
+
+#[test]
+fn differential_replay_fabric_level_bit_identity() {
+    for seed in 0..FABRIC_SEEDS {
+        let case = gen_fabric_case(seed);
+        let (jobs_fifo, defs_fifo, rows_fifo) = run_fabric_case(&case, 0);
+        let (jobs_plan, defs_plan, rows_plan) = run_fabric_case(&case, 8);
+        assert_eq!(jobs_fifo.len(), jobs_plan.len());
+        for (i, (a, b)) in jobs_fifo.iter().zip(&jobs_plan).enumerate() {
+            assert_eq!(a, b, "seed {seed}: job {i} diverged");
+        }
+        assert_eq!(defs_fifo, defs_plan, "seed {seed}: deferred receipts diverged");
+        assert_eq!(rows_fifo, rows_plan, "seed {seed}: session rows diverged");
+    }
+}
