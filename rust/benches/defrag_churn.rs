@@ -1,0 +1,133 @@
+//! Bench: row-mover churn — a seeded alloc/free/submit storm served with
+//! the background defragmenter off vs on. Measures the wall-clock cost of
+//! migrating placement under live traffic and reports what the mover
+//! bought (fragmentation before/after) and what it cost (simulated
+//! makespan delta from the copy fences).
+//!
+//! Emits `BENCH_defrag.json` (machine-readable measurements + metrics)
+//! via `util::benchx::JsonReport`; CI uploads it as an artifact.
+
+use shiftdram::config::DramConfig;
+use shiftdram::coordinator::{Kernel, RowHandle, SystemBuilder, SystemReport};
+use shiftdram::util::benchx::{Bench, JsonReport};
+use shiftdram::util::{BitRow, Rng, ShiftDir};
+
+const COLS: usize = 256;
+const SESSIONS: usize = 6;
+const MAX_LIVE: usize = 8;
+const ACTIONS: usize = 1500;
+
+/// One churn run: seeded storm of allocs, writes, frees, and shift
+/// kernels over several sessions, ending in a deliberately fragmented
+/// state (half of every session's handles freed, oldest first). Returns
+/// the final fragmentation score, a checksum row, and the report.
+fn churn(defrag: bool, seed: u64) -> (usize, BitRow, SystemReport) {
+    let sys = SystemBuilder::new(&DramConfig::tiny_test())
+        .banks(4)
+        .max_batch(8)
+        .defrag(defrag)
+        .defrag_threshold(1)
+        .build();
+    let clients: Vec<_> = (0..SESSIONS).map(|_| sys.client()).collect();
+    let mut rng = Rng::new(seed);
+    let mut handles: Vec<Vec<RowHandle>> = vec![Vec::new(); SESSIONS];
+    let shift = Kernel::shift_by(1, ShiftDir::Right);
+    for i in 0..ACTIONS {
+        let s = i % SESSIONS;
+        match rng.below(8) {
+            0..=2 => {
+                if handles[s].len() < MAX_LIVE {
+                    let h = clients[s].alloc().expect("under capacity");
+                    clients[s].write(&h, BitRow::random(COLS, &mut rng));
+                    handles[s].push(h);
+                }
+            }
+            3 => {
+                if !handles[s].is_empty() {
+                    let idx = rng.below(handles[s].len());
+                    let h = handles[s].swap_remove(idx);
+                    clients[s].free(h);
+                }
+            }
+            _ => {
+                if !handles[s].is_empty() {
+                    let idx = rng.below(handles[s].len());
+                    let row = handles[s][idx].clone();
+                    clients[s].submit(&shift, &[row]);
+                }
+            }
+        }
+    }
+    // deliberate comb: drop the older half of every session's handles so
+    // the surviving rows sit above guaranteed holes
+    for (s, hs) in handles.iter_mut().enumerate() {
+        let drop_n = hs.len() / 2;
+        for h in hs.drain(..drop_n) {
+            clients[s].free(h);
+        }
+    }
+    sys.flush();
+    if defrag {
+        sys.defrag_now();
+    }
+    // checksum: first surviving handle's bits (bit-exactness across runs)
+    let checksum = handles
+        .iter()
+        .zip(&clients)
+        .find_map(|(hs, c)| hs.first().map(|h| c.read_now(h).expect("read")))
+        .expect("someone survived the storm");
+    let frag = sys.fragmentation_score();
+    (frag, checksum, sys.shutdown())
+}
+
+fn main() {
+    let mut jr = JsonReport::new("defrag");
+    println!("=== row-mover churn: defrag off vs on ===");
+    let (frag_off, sum_off, off) = churn(false, 2024);
+    let (frag_on, sum_on, on) = churn(true, 2024);
+    assert_eq!(sum_off, sum_on, "migration must be invisible in the data");
+    assert!(
+        frag_on <= frag_off && (frag_off == 0 || frag_on < frag_off),
+        "the mover must strictly lower fragmentation: {frag_on} vs {frag_off}"
+    );
+    assert!(on.rows_migrated > 0, "the storm must exercise live migration");
+    assert_eq!(off.moves, 0);
+    println!(
+        "off: frag {frag_off}, makespan {:.3} us, {} kernels",
+        off.makespan_ps as f64 / 1e6,
+        off.kernels
+    );
+    println!(
+        "on:  frag {frag_on}, makespan {:.3} us, {} kernels, {} plans / {} rows migrated",
+        on.makespan_ps as f64 / 1e6,
+        on.kernels,
+        on.moves,
+        on.rows_migrated
+    );
+    let overhead = if off.makespan_ps == 0 {
+        0.0
+    } else {
+        on.makespan_ps as f64 / off.makespan_ps as f64 - 1.0
+    };
+    println!("simulated makespan overhead of migration: {:.2}%", overhead * 100.0);
+    jr.metric("frag_off", frag_off as f64);
+    jr.metric("frag_on", frag_on as f64);
+    jr.metric("rows_migrated", on.rows_migrated as f64);
+    jr.metric("move_plans", on.moves as f64);
+    jr.metric("makespan_overhead_pct", overhead * 100.0);
+
+    // wall-clock of the storm itself, off vs on
+    let b = Bench::quick();
+    let mut seed = 1u64;
+    jr.push(&b.run_elems("churn/defrag_off", ACTIONS as u64, || {
+        seed += 1;
+        churn(false, seed)
+    }));
+    jr.push(&b.run_elems("churn/defrag_on", ACTIONS as u64, || {
+        seed += 1;
+        churn(true, seed)
+    }));
+
+    let path = jr.write().expect("write bench json");
+    println!("\nwrote {}", path.display());
+}

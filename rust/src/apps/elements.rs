@@ -149,8 +149,8 @@ impl ElementCtx {
     }
 
     /// The kernel cache this context compiles into.
-    pub fn cache(&self) -> &Arc<ProgramCache> {
-        self.client.system().program_cache()
+    pub fn cache(&self) -> Arc<ProgramCache> {
+        self.client.system().program_cache().clone()
     }
 
     /// Execute one macro-op as a single-op kernel (reference entry point).

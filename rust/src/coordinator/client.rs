@@ -9,6 +9,18 @@
 //! submission returns a typed [`Ticket`] that resolves to
 //! `Result<T, PimError>` instead of panicking a worker thread.
 //!
+//! **Placement is dynamic.** A handle does not carry coordinates: it
+//! names a `(slot, generation)` in its session's shared [`SessionSeat`] —
+//! the one table that knows which system, bank, subarray, and physical
+//! rows currently back the session. Every operation resolves through the
+//! seat at submission time, which is what lets the background row mover
+//! ([`crate::coordinator::mover`]) compact fragmented subarrays and
+//! re-home whole sessions across fabric shards *underneath live
+//! handles*: the mover re-binds the seat, and every outstanding handle
+//! follows automatically. A freed slot bumps its generation, so a stale
+//! clone of a freed handle resolves to [`PimError::StaleHandle`] instead
+//! of silently aliasing the slot's next tenant.
+//!
 //! Kernel-granular submission is the point: a kernel of K macro-ops
 //! travels as *one* request, costs *one* program-cache fetch, and is
 //! served by *one* `BankSim::run_compiled` replay — the per-op
@@ -27,7 +39,7 @@
 
 use std::fmt;
 use std::sync::mpsc::{channel, Receiver};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::coordinator::reorder::Access;
 use crate::coordinator::system::{PimRequest, PimResponse, PimSystem};
@@ -59,6 +71,9 @@ pub enum PimError {
         got_bank: usize,
         got_subarray: usize,
     },
+    /// the handle's row was freed (and its slot possibly reissued) — the
+    /// generation check keeps stale clones from aliasing a new tenant
+    StaleHandle { slot: usize },
     /// the bank's worker thread is gone (it panicked or was shut down)
     WorkerLost { bank: usize },
     /// the multi-channel fabric was shut down before this work could be
@@ -96,6 +111,9 @@ impl fmt::Display for PimError {
                 "handle placed on bank {got_bank} subarray {got_subarray}, \
                  session is on bank {expected_bank} subarray {expected_subarray}"
             ),
+            PimError::StaleHandle { slot } => {
+                write!(f, "row handle is stale (slot {slot} was freed)")
+            }
             PimError::WorkerLost { bank } => write!(f, "bank {bank} worker is gone"),
             PimError::FabricDown => write!(f, "the fabric is shut down"),
             PimError::Protocol(what) => write!(f, "protocol violation: {what}"),
@@ -105,22 +123,179 @@ impl fmt::Display for PimError {
 
 impl std::error::Error for PimError {}
 
+/// One session's live placement and logical-row bindings, shared between
+/// the session's [`PimClient`], every [`RowHandle`] it allocated, the
+/// fabric's deferred tasks, and the row mover
+/// ([`crate::coordinator::mover`]).
+///
+/// The seat is the re-bind point of the whole migration design: the
+/// system, bank, subarray, and per-slot physical rows all live behind one
+/// lock, so the mover can rewrite any of them atomically and every
+/// outstanding handle resolves to the new placement on its next use.
+/// Submission paths hold the seat lock *across the wire enqueue*, which
+/// gives the mover its fence: by the time it acquires the lock, every
+/// request resolved against the old coordinates is already queued on the
+/// old bank — and the mover's own copies/reads queue behind them in the
+/// same per-bank FIFO.
+pub(crate) struct SessionSeat {
+    state: Mutex<SeatState>,
+}
+
+/// The lockable interior of a [`SessionSeat`].
+pub(crate) struct SeatState {
+    /// the serving system the seat currently submits to (swapped by
+    /// cross-shard re-homing)
+    pub(crate) sys: PimSystem,
+    /// fabric shard index of `sys` (0 outside a fabric)
+    pub(crate) shard: usize,
+    pub(crate) bank: usize,
+    pub(crate) subarray: usize,
+    /// core id of `sys` — the defragmenter skips seats that re-homed away
+    /// between its registry snapshot and taking the seat lock
+    pub(crate) owner: usize,
+    slots: Vec<SlotEntry>,
+    free_slots: Vec<usize>,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct SlotEntry {
+    row: usize,
+    gen: u32,
+    live: bool,
+}
+
+impl SessionSeat {
+    pub(crate) fn new(
+        sys: PimSystem,
+        shard: usize,
+        bank: usize,
+        subarray: usize,
+        owner: usize,
+    ) -> Arc<SessionSeat> {
+        Arc::new(SessionSeat {
+            state: Mutex::new(SeatState {
+                sys,
+                shard,
+                bank,
+                subarray,
+                owner,
+                slots: Vec::new(),
+                free_slots: Vec::new(),
+            }),
+        })
+    }
+
+    pub(crate) fn lock(&self) -> std::sync::MutexGuard<'_, SeatState> {
+        self.state.lock().unwrap()
+    }
+}
+
+impl SeatState {
+    /// Bind a freshly allocated row to a logical slot. Reused slots bump
+    /// their generation, so handles into the previous tenancy go stale.
+    fn bind(&mut self, row: usize) -> (usize, u32) {
+        if let Some(slot) = self.free_slots.pop() {
+            let entry = &mut self.slots[slot];
+            entry.gen = entry.gen.wrapping_add(1);
+            entry.row = row;
+            entry.live = true;
+            (slot, entry.gen)
+        } else {
+            self.slots.push(SlotEntry { row, gen: 0, live: true });
+            (self.slots.len() - 1, 0)
+        }
+    }
+
+    /// The physical row currently behind `(slot, gen)`, if still live.
+    fn resolve(&self, slot: usize, gen: u32) -> Option<usize> {
+        let e = self.slots.get(slot)?;
+        (e.live && e.gen == gen).then_some(e.row)
+    }
+
+    /// Release a slot back for reuse, returning the row it held.
+    fn release(&mut self, slot: usize, gen: u32) -> Option<usize> {
+        let e = self.slots.get_mut(slot)?;
+        if !e.live || e.gen != gen {
+            return None;
+        }
+        e.live = false;
+        self.free_slots.push(slot);
+        Some(e.row)
+    }
+
+    /// Point a live slot at a new physical row — the mover's re-bind.
+    /// Generations are untouched: migration is invisible to handles.
+    pub(crate) fn rebind(&mut self, slot: usize, row: usize) {
+        debug_assert!(self.slots[slot].live, "re-binding a freed slot");
+        self.slots[slot].row = row;
+    }
+
+    /// Every live `(slot, row)` binding, slot-ordered.
+    pub(crate) fn live_rows(&self) -> Vec<(usize, usize)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.live)
+            .map(|(slot, e)| (slot, e.row))
+            .collect()
+    }
+
+    /// Live bindings in this seat.
+    pub(crate) fn live_count(&self) -> usize {
+        self.slots.iter().filter(|e| e.live).count()
+    }
+
+    /// The live slot bound to the highest physical row strictly above
+    /// `floor` — the defragmenter's next compaction source.
+    pub(crate) fn highest_live_above(&self, floor: usize) -> Option<(usize, usize)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.live && e.row > floor)
+            .max_by_key(|(_, e)| e.row)
+            .map(|(slot, e)| (slot, e.row))
+    }
+}
+
 /// An opaque, system-placed row. Only the system knows (and chooses) the
 /// concrete `(bank, subarray, row)` behind it — clients move data and
 /// submit kernels purely in terms of handles, which is what lets the
-/// coordinator own placement (sharding, migration) underneath them.
-#[derive(Clone, Debug, PartialEq, Eq)]
+/// coordinator own placement (sharding, migration) underneath them. A
+/// handle names a `(slot, generation)` in its session's [`SessionSeat`];
+/// the physical coordinates are resolved at submission time, so the row
+/// mover can re-bind them without invalidating the handle — and a freed
+/// slot's bumped generation makes stale clones unrepresentable as live
+/// coordinates ([`PimError::StaleHandle`]).
+#[derive(Clone)]
 pub struct RowHandle {
-    pub(crate) bank: usize,
-    pub(crate) subarray: usize,
-    pub(crate) row: usize,
+    pub(crate) seat: Arc<SessionSeat>,
+    pub(crate) slot: usize,
+    pub(crate) gen: u32,
+}
+
+impl PartialEq for RowHandle {
+    fn eq(&self, other: &Self) -> bool {
+        Arc::ptr_eq(&self.seat, &other.seat) && self.slot == other.slot && self.gen == other.gen
+    }
+}
+
+impl Eq for RowHandle {}
+
+impl fmt::Debug for RowHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("RowHandle")
+            .field("slot", &self.slot)
+            .field("gen", &self.gen)
+            .finish()
+    }
 }
 
 impl RowHandle {
-    /// The bank this row was placed on (exposed for diagnostics/affinity;
-    /// the row coordinate itself stays private).
+    /// The bank this row currently lives on (exposed for
+    /// diagnostics/affinity; the row coordinate itself stays private — and
+    /// the bank may change when the mover re-homes the session).
     pub fn bank(&self) -> usize {
-        self.bank
+        self.seat.lock().bank
     }
 }
 
@@ -325,40 +500,63 @@ impl Kernel {
     }
 }
 
+/// Why a handle failed to resolve against a seat. The error value is
+/// materialized *after* the resolving seat's lock is dropped — building a
+/// `ForeignHandle` error needs the other seat's coordinates, and two seat
+/// locks must never nest.
+enum HandleIssue {
+    Foreign,
+    Stale { slot: usize },
+}
+
+/// A queued wire request's response channel plus the bank it landed on.
+type WireSlot = (Receiver<Result<PimResponse, PimError>>, usize);
+
 /// A client session: pinned by the router to one `(bank, subarray)` so
 /// every row it allocates is co-resident (kernels can only combine rows of
 /// one subarray). Cheap to create — open one session per independent
 /// stream of work and the placement policy spreads them over banks.
+///
+/// The client is a thin wrapper over its [`SessionSeat`]: every operation
+/// resolves the current system, bank, subarray, and rows under the seat
+/// lock, so a session the mover just compacted or re-homed keeps working
+/// without the caller noticing.
 pub struct PimClient {
-    sys: PimSystem,
-    bank: usize,
-    subarray: usize,
+    seat: Arc<SessionSeat>,
 }
 
 impl PimClient {
-    pub(crate) fn new(sys: PimSystem, bank: usize, subarray: usize) -> Self {
-        PimClient { sys, bank, subarray }
+    pub(crate) fn from_seat(seat: Arc<SessionSeat>) -> Self {
+        PimClient { seat }
     }
 
-    /// The bank this session was placed on.
+    /// The shared placement/binding table behind this session.
+    pub(crate) fn seat(&self) -> &Arc<SessionSeat> {
+        &self.seat
+    }
+
+    /// The bank this session currently lives on (the mover may change it).
     pub fn bank(&self) -> usize {
-        self.bank
+        self.seat.lock().bank
     }
 
-    /// The subarray this session's rows live in (the fabric's pinned
-    /// deferred submissions re-create an equivalent session later).
-    pub(crate) fn subarray(&self) -> usize {
-        self.subarray
-    }
-
-    /// The system this session talks to.
-    pub fn system(&self) -> &PimSystem {
-        &self.sys
+    /// The system this session currently talks to (a re-homed fabric
+    /// session answers with its new shard's system).
+    pub fn system(&self) -> PimSystem {
+        self.seat.lock().sys.clone()
     }
 
     /// Allocate one system-placed row.
     pub fn alloc(&self) -> Result<RowHandle, PimError> {
-        self.sys.alloc_row(self.bank, self.subarray)
+        let mut st = self.seat.lock();
+        let (bank, subarray) = (st.bank, st.subarray);
+        match st.sys.alloc_concrete(bank, subarray) {
+            Some(row) => {
+                let (slot, gen) = st.bind(row);
+                Ok(RowHandle { seat: self.seat.clone(), slot, gen })
+            }
+            None => Err(PimError::AllocExhausted { bank, subarray }),
+        }
     }
 
     /// Allocate `n` rows (all-or-nothing: on exhaustion every row already
@@ -370,7 +568,7 @@ impl PimClient {
                 Ok(h) => out.push(h),
                 Err(e) => {
                     for h in out {
-                        self.sys.free_row(&h);
+                        self.free(h);
                     }
                     return Err(e);
                 }
@@ -379,29 +577,40 @@ impl PimClient {
         Ok(out)
     }
 
-    /// Return a row to the system. False on double free.
+    /// Return a row to the system. False on double free, a stale handle,
+    /// or a handle from another session.
     pub fn free(&self, handle: RowHandle) -> bool {
-        self.sys.free_row(&handle)
+        if !Arc::ptr_eq(&handle.seat, &self.seat) {
+            return false;
+        }
+        let mut st = self.seat.lock();
+        match st.release(handle.slot, handle.gen) {
+            Some(row) => {
+                let (bank, subarray) = (st.bank, st.subarray);
+                st.sys.free_concrete(bank, subarray, row)
+            }
+            None => false,
+        }
     }
 
     /// Load host data into a row.
     pub fn write(&self, handle: &RowHandle, bits: BitRow) -> Ticket<()> {
-        if let Err(e) = self.check_handle(handle) {
-            return Ticket::failed(e, self.bank);
+        match self.wire_row_op(handle, |subarray, row| {
+            (Access::write_row(subarray, row), PimRequest::WriteRow { subarray, row, bits })
+        }) {
+            Ok((rx, bank)) => Ticket::new(rx, decode_done, bank),
+            Err((e, bank)) => Ticket::failed(e, bank),
         }
-        let access = Access::write_row(handle.subarray, handle.row);
-        let req = PimRequest::WriteRow { subarray: handle.subarray, row: handle.row, bits };
-        Ticket::new(self.sys.submit_wire(self.bank, 1, access, req), decode_done, self.bank)
     }
 
     /// Read a row back.
     pub fn read(&self, handle: &RowHandle) -> Ticket<BitRow> {
-        if let Err(e) = self.check_handle(handle) {
-            return Ticket::failed(e, self.bank);
+        match self.wire_row_op(handle, |subarray, row| {
+            (Access::read_row(subarray, row), PimRequest::ReadRow { subarray, row })
+        }) {
+            Ok((rx, bank)) => Ticket::new(rx, decode_row, bank),
+            Err((e, bank)) => Ticket::failed(e, bank),
         }
-        let access = Access::read_row(handle.subarray, handle.row);
-        let req = PimRequest::ReadRow { subarray: handle.subarray, row: handle.row };
-        Ticket::new(self.sys.submit_wire(self.bank, 1, access, req), decode_row, self.bank)
     }
 
     /// Submit a kernel: recording row `i` executes against `rows[i]`.
@@ -411,39 +620,64 @@ impl PimClient {
         if kernel.n_rows() > rows.len() {
             return Ticket::failed(
                 PimError::HandleTableTooShort { needs: kernel.n_rows(), got: rows.len() },
-                self.bank,
+                self.bank(),
             );
         }
-        let mut binding = Vec::with_capacity(kernel.slots().len());
-        for &r in kernel.slots() {
-            let h = &rows[r];
-            if let Err(e) = self.check_handle(h) {
-                return Ticket::failed(e, self.bank);
+        let outcome = {
+            let st = self.seat.lock();
+            let mut binding = Vec::with_capacity(kernel.slots().len());
+            let mut problem: Option<(HandleIssue, usize)> = None;
+            for &r in kernel.slots() {
+                match resolve_on(&st, &self.seat, &rows[r]) {
+                    Ok(row) => binding.push(row),
+                    Err(issue) => {
+                        problem = Some((issue, r));
+                        break;
+                    }
+                }
             }
-            binding.push(h.row);
+            match problem {
+                Some((issue, r)) => Err((issue, r, st.bank, st.subarray)),
+                None => {
+                    // rebase the recorded slot footprint onto the bound
+                    // rows — the hazard record the reorder planner checks
+                    // this kernel against
+                    let access = Access::Touch {
+                        subarray: st.subarray,
+                        rows: kernel.footprint().map(|slot| binding[slot]),
+                    };
+                    let req = PimRequest::RunKernel {
+                        subarray: st.subarray,
+                        shape: kernel.shape().clone(),
+                        ops: kernel.ops().clone(),
+                        binding,
+                    };
+                    // enqueued under the seat lock — see `wire_row_op`
+                    let (rx, full) = st.sys.enqueue_wire(st.bank, kernel.cost(), access, req);
+                    Ok((st.sys.clone(), st.bank, rx, full))
+                }
+            }
+        };
+        match outcome {
+            Ok((sys, bank, rx, full)) => {
+                if full {
+                    sys.flush_bank(bank);
+                }
+                Ticket::new(rx, decode_receipt, bank)
+            }
+            Err((issue, r, bank, subarray)) => {
+                Ticket::failed(issue_error(issue, &rows[r], bank, subarray), bank)
+            }
         }
-        // rebase the recorded slot footprint onto the bound rows — the
-        // hazard record the reorder planner checks this kernel against
-        let access = Access::Touch {
-            subarray: self.subarray,
-            rows: kernel.footprint().map(|slot| binding[slot]),
-        };
-        let req = PimRequest::RunKernel {
-            subarray: self.subarray,
-            shape: kernel.shape().clone(),
-            ops: kernel.ops().clone(),
-            binding,
-        };
-        Ticket::new(
-            self.sys.submit_wire(self.bank, kernel.cost(), access, req),
-            decode_receipt,
-            self.bank,
-        )
     }
 
     /// Dispatch this session's partially filled batch.
     pub fn flush(&self) {
-        self.sys.flush_bank(self.bank);
+        let (sys, bank) = {
+            let st = self.seat.lock();
+            (st.sys.clone(), st.bank)
+        };
+        sys.flush_bank(bank);
     }
 
     /// Submit, flush, and wait — the synchronous kernel call.
@@ -467,15 +701,69 @@ impl PimClient {
         t.wait()
     }
 
-    fn check_handle(&self, h: &RowHandle) -> Result<(), PimError> {
-        if h.bank != self.bank || h.subarray != self.subarray {
-            return Err(PimError::ForeignHandle {
-                expected_bank: self.bank,
-                expected_subarray: self.subarray,
-                got_bank: h.bank,
-                got_subarray: h.subarray,
-            });
+    /// Resolve one handle and enqueue the wire request built from its
+    /// coordinates, holding the seat lock across the enqueue. That hold is
+    /// the mover's fence: a request resolved against the old placement is
+    /// guaranteed queued on the old bank — and therefore ordered before
+    /// any migration copy — by the time the lock is released. A batch that
+    /// filled up dispatches after the lock drops (dispatch may trigger a
+    /// defrag pass, which takes seat locks itself).
+    fn wire_row_op(
+        &self,
+        handle: &RowHandle,
+        build: impl FnOnce(usize, usize) -> (Access, PimRequest),
+    ) -> Result<WireSlot, (PimError, usize)> {
+        let outcome = {
+            let st = self.seat.lock();
+            match resolve_on(&st, &self.seat, handle) {
+                Ok(row) => {
+                    let (access, req) = build(st.subarray, row);
+                    let (rx, full) = st.sys.enqueue_wire(st.bank, 1, access, req);
+                    Ok((st.sys.clone(), st.bank, rx, full))
+                }
+                Err(issue) => Err((issue, st.bank, st.subarray)),
+            }
+        };
+        match outcome {
+            Ok((sys, bank, rx, full)) => {
+                if full {
+                    sys.flush_bank(bank);
+                }
+                Ok((rx, bank))
+            }
+            Err((issue, bank, subarray)) => {
+                Err((issue_error(issue, handle, bank, subarray), bank))
+            }
         }
-        Ok(())
+    }
+}
+
+/// Resolve `handle` against the locked state of `seat`.
+fn resolve_on(
+    st: &SeatState,
+    seat: &Arc<SessionSeat>,
+    handle: &RowHandle,
+) -> Result<usize, HandleIssue> {
+    if !Arc::ptr_eq(&handle.seat, seat) {
+        return Err(HandleIssue::Foreign);
+    }
+    st.resolve(handle.slot, handle.gen)
+        .ok_or(HandleIssue::Stale { slot: handle.slot })
+}
+
+/// Materialize a [`HandleIssue`] into its error. Called with no seat lock
+/// held: the foreign case locks the *other* seat for its coordinates.
+fn issue_error(issue: HandleIssue, handle: &RowHandle, bank: usize, subarray: usize) -> PimError {
+    match issue {
+        HandleIssue::Stale { slot } => PimError::StaleHandle { slot },
+        HandleIssue::Foreign => {
+            let other = handle.seat.lock();
+            PimError::ForeignHandle {
+                expected_bank: bank,
+                expected_subarray: subarray,
+                got_bank: other.bank,
+                got_subarray: other.subarray,
+            }
+        }
     }
 }

@@ -28,7 +28,7 @@
 //! — the same policy applied at both levels.
 //!
 //! **Work stealing moves only unplaced work.** [`RowHandle`]s pin data to
-//! a bank, so a kernel bound to handles can never migrate. The stealable
+//! a bank, so a kernel bound to handles is never *stolen*. The stealable
 //! unit is therefore the [`JobSpec`]: a whole *unplaced* alloc+kernel
 //! session (input row images, one kernel, read-back list) that carries its
 //! data with it. Each shard's dispatcher drains its own deque FIFO; when
@@ -36,11 +36,23 @@
 //! pulls a whole job — never a fragment of one. Handle-pinned deferred
 //! kernels ([`FabricClient::submit_deferred`]) share the deque but are
 //! skipped by thieves and left in place (counted as `pinned_skips`), so
-//! they always execute on their home banks. A stolen job allocates fresh
-//! rows on the thief's banks and replays the identical kernel through the
-//! identical compile/replay path, so results are bit-identical wherever it
-//! runs, and its [`FabricTicket`] — created at submission — resolves
-//! normally.
+//! they always execute on their session's banks. A stolen job allocates
+//! fresh rows on the thief's banks and replays the identical kernel
+//! through the identical compile/replay path, so results are bit-identical
+//! wherever it runs, and its [`FabricTicket`] — created at submission —
+//! resolves normally.
+//!
+//! **Pinned work rebalances through session re-homing.** Stealing can't
+//! touch handle-pinned kernels, but the row mover can move *the session
+//! itself*: with [`crate::coordinator::SystemBuilder::rehome_after`] set
+//! (or via [`PimFabric::rehome_idle`]), a shard whose queued cost stays
+//! high while another idles gets one of its handle-pinned sessions
+//! drained — rows copied out through the wire like a [`JobSpec`]
+//! transfer, re-allocated on the idle shard, and every outstanding handle
+//! re-bound through the session's seat. Queued deferred kernels resolve
+//! the seat at execution time, so the session's backlog and all its
+//! future work follow it to the new shard (`rehomed_sessions` in the
+//! report counts the traffic).
 //!
 //! **Merged-run dispatch.** With a reorder window open
 //! ([`crate::coordinator::SystemBuilder::reorder_window`]), each
@@ -68,15 +80,24 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::coordinator::batcher::OverflowDeque;
-use crate::coordinator::client::{Kernel, PimClient, PimError, Receipt, RowHandle, Ticket};
+use crate::coordinator::client::{
+    Kernel, PimClient, PimError, Receipt, RowHandle, SessionSeat, Ticket,
+};
 use crate::coordinator::metrics::{FabricCounters, Metrics};
+use crate::coordinator::reorder::Access;
 use crate::coordinator::router::Placement;
-use crate::coordinator::system::{panic_message, PimSystem, ShardReport, SystemReport};
+use crate::coordinator::system::{
+    panic_message, PimRequest, PimResponse, PimSystem, ShardReport, SystemReport,
+};
 use crate::pim::compile::CacheStats;
 use crate::util::BitRow;
 
 /// How long an idle dispatcher sleeps between steal scans.
 const IDLE_POLL: Duration = Duration::from_micros(500);
+
+/// How often the fabric's mover thread re-evaluates shard loads for
+/// cross-shard session re-homing.
+const MOVER_POLL: Duration = Duration::from_micros(500);
 
 /// A whole *unplaced* unit of work: input row images, one kernel, and the
 /// rows to read back — everything needed to run anywhere. Because nothing
@@ -181,12 +202,14 @@ struct FabricJob {
     respond: Sender<Result<JobOutput, PimError>>,
 }
 
-/// A deferred kernel pinned to its session's bank by row handles — rides
-/// the same deque but never migrates.
+/// A deferred kernel pinned to its session by row handles — rides the
+/// same deque but is never *stolen*. It carries the session's seat, not
+/// coordinates: execution resolves the seat's current system at pop time,
+/// so a task queued before the mover re-homed its session simply runs on
+/// the session's new shard — previously pinned work schedules wherever
+/// the session now lives.
 struct PinnedTask {
-    shard: usize,
-    bank: usize,
-    subarray: usize,
+    seat: Arc<SessionSeat>,
     kernel: Kernel,
     rows: Vec<RowHandle>,
     respond: Sender<Result<Receipt, PimError>>,
@@ -222,7 +245,12 @@ fn mergeable(a: &FabricTask, b: &FabricTask) -> bool {
 
 pub(crate) struct FabricCore {
     shards: Vec<PimSystem>,
-    queues: Vec<ShardQueue>,
+    /// per-shard work queues. Each queue is its own `Arc` so a parked
+    /// dispatcher can wait on its condvar while holding **no** strong
+    /// reference to the core — the restructuring that makes a plain
+    /// `drop(PimFabric)` (no `shutdown()`) actually tear the fabric down
+    /// instead of leaking dispatcher threads that keep each other alive.
+    queues: Vec<Arc<ShardQueue>>,
     placement: Placement,
     rr_next: AtomicUsize,
     counters: FabricCounters,
@@ -232,22 +260,30 @@ pub(crate) struct FabricCore {
     /// dispatcher's merged-run lookahead over its deque (0 = one task at
     /// a time, exactly the pre-reorder behavior)
     window: usize,
+    /// queued-cost threshold for cross-shard session re-homing (0 = the
+    /// mover thread is not spawned; `rehome_idle` still works manually)
+    rehome_after: usize,
+    /// dispatcher + mover threads still running (observability for the
+    /// drop-teardown regression test)
+    live_threads: Arc<AtomicUsize>,
 }
 
 impl FabricCore {
-    pub(crate) fn new(shards: Vec<PimSystem>, placement: Placement) -> Self {
+    pub(crate) fn new(shards: Vec<PimSystem>, placement: Placement, rehome_after: usize) -> Self {
         assert!(!shards.is_empty());
         let n = shards.len();
         let window = shards[0].reorder_window();
         FabricCore {
             shards,
-            queues: (0..n).map(|_| ShardQueue::new()).collect(),
+            queues: (0..n).map(|_| Arc::new(ShardQueue::new())).collect(),
             placement,
             rr_next: AtomicUsize::new(0),
             counters: FabricCounters::new(n),
             stop: AtomicBool::new(false),
             dispatchers: Mutex::new(Vec::new()),
             window,
+            rehome_after,
+            live_threads: Arc::new(AtomicUsize::new(0)),
         }
     }
 
@@ -364,12 +400,10 @@ impl FabricCore {
                 let _ = respond.send(result);
             }
             FabricTask::Pinned(task) => {
-                // always the home shard's banks — thieves never take these
-                let client = PimClient::new(
-                    self.shards[task.shard].clone(),
-                    task.bank,
-                    task.subarray,
-                );
+                // thieves never take these; the session's *current* seat
+                // decides which shard's banks serve it (a re-homed
+                // session's backlog follows it to the new shard)
+                let client = PimClient::from_seat(task.seat);
                 let _ = task.respond.send(client.run(&task.kernel, &task.rows));
             }
         }
@@ -471,6 +505,139 @@ impl FabricCore {
         client.flush();
         finish_job(&client, &spec, rows, writes, run)
     }
+
+    /// Re-home one session's seat from shard `from` onto shard `to`:
+    /// drain its rows out through the wire (a `JobSpec`-like transfer —
+    /// row images travel, nothing bank-bound does), re-allocate on the
+    /// target shard, re-bind every slot, and swap the seat's system — all
+    /// under the seat lock, so no kernel can race the move (the same
+    /// fence discipline as [`crate::coordinator::mover`]). `from` is the
+    /// shard the caller *observed* the seat on; it is re-verified under
+    /// the lock, so a seat a concurrent scan already moved is never
+    /// dragged off a shard the caller never judged busy. On any failure
+    /// the seat is left exactly where it was.
+    fn rehome_seat(
+        &self,
+        seat: &Arc<SessionSeat>,
+        from: usize,
+        to: usize,
+    ) -> Result<u64, PimError> {
+        let mut st = seat.lock();
+        if st.shard != from || from == to {
+            return Err(PimError::Protocol("seat re-homed concurrently"));
+        }
+        let src = &self.shards[from];
+        let dst = &self.shards[to];
+        let (old_bank, old_sa) = (st.bank, st.subarray);
+        let live = st.live_rows();
+        // 1. drain: wire reads queue behind everything the session already
+        // submitted on its home bank (per-bank FIFO), so they observe its
+        // settled state — and the seat lock blocks new submissions
+        let mut reads = Vec::with_capacity(live.len());
+        for &(_, row) in &live {
+            let (rx, _full) = src.enqueue_wire(
+                old_bank,
+                1,
+                Access::read_row(old_sa, row),
+                PimRequest::ReadRow { subarray: old_sa, row },
+            );
+            reads.push(rx);
+        }
+        src.flush_bank_inner(old_bank);
+        let mut images = Vec::with_capacity(live.len());
+        for rx in reads {
+            match rx.recv() {
+                Ok(Ok(PimResponse::Row(bits))) => images.push(bits),
+                Ok(Ok(_)) => return Err(PimError::Protocol("expected a row image")),
+                Ok(Err(e)) => return Err(e),
+                Err(_) => return Err(PimError::WorkerLost { bank: old_bank }),
+            }
+        }
+        // 2. re-place on the target shard and allocate one row per slot
+        let (new_bank, new_sa) = dst.place_for_rehome();
+        let mut new_rows = Vec::with_capacity(live.len());
+        for _ in &live {
+            match dst.alloc_concrete(new_bank, new_sa) {
+                Some(row) => new_rows.push(row),
+                None => {
+                    for row in new_rows {
+                        dst.free_concrete(new_bank, new_sa, row);
+                    }
+                    return Err(PimError::AllocExhausted {
+                        bank: new_bank,
+                        subarray: new_sa,
+                    });
+                }
+            }
+        }
+        // 3. write the images onto the target bank
+        let mut writes = Vec::with_capacity(live.len());
+        for (&row, bits) in new_rows.iter().zip(&images) {
+            let (rx, _full) = dst.enqueue_wire(
+                new_bank,
+                1,
+                Access::write_row(new_sa, row),
+                PimRequest::WriteRow { subarray: new_sa, row, bits: bits.clone() },
+            );
+            writes.push(rx);
+        }
+        dst.flush_bank_inner(new_bank);
+        for rx in writes {
+            if !matches!(rx.recv(), Ok(Ok(PimResponse::Done))) {
+                for &row in &new_rows {
+                    dst.free_concrete(new_bank, new_sa, row);
+                }
+                return Err(PimError::WorkerLost { bank: new_bank });
+            }
+        }
+        // 4. commit: re-bind every slot, move the seat, free the old rows
+        for (&(slot, _), &row) in live.iter().zip(&new_rows) {
+            st.rebind(slot, row);
+        }
+        st.sys = dst.clone();
+        st.shard = to;
+        st.bank = new_bank;
+        st.subarray = new_sa;
+        st.owner = dst.core_id();
+        dst.register_seat(seat);
+        for &(_, row) in &live {
+            src.free_concrete(old_bank, old_sa, row);
+        }
+        let moved = live.len() as u64;
+        dst.metrics().mover().record_plan(moved);
+        self.counters.record_rehome();
+        Ok(moved)
+    }
+
+    /// One re-homing scan: when the busiest shard's queued cost reaches
+    /// `threshold` while the least-loaded shard sits idle, drain the
+    /// first handle-pinned session with live rows off the busy shard onto
+    /// the idle one. Returns the sessions moved (0 or 1).
+    pub(crate) fn rehome_scan(&self, threshold: usize) -> usize {
+        if self.shards.len() < 2 || threshold == 0 {
+            return 0;
+        }
+        let loads: Vec<usize> =
+            (0..self.shards.len()).map(|s| self.shard_load(s)).collect();
+        let busy = (0..loads.len()).max_by_key(|&s| loads[s]).expect("shards");
+        let idle = (0..loads.len()).min_by_key(|&s| loads[s]).expect("shards");
+        if busy == idle || loads[busy] < threshold || loads[idle] != 0 {
+            return 0;
+        }
+        for seat in self.shards[busy].live_seats() {
+            let wants = {
+                let st = seat.lock();
+                st.shard == busy && st.live_count() > 0
+            };
+            if !wants {
+                continue;
+            }
+            if self.rehome_seat(&seat, busy, idle).is_ok() {
+                return 1;
+            }
+        }
+        0
+    }
 }
 
 /// Resolve one in-flight job — the tail shared by the single-job and
@@ -515,19 +682,26 @@ fn finish_job(
 /// One shard's dispatcher: drain own deque FIFO; when idle, steal from the
 /// busiest shard; park briefly when there is nothing anywhere. Exits when
 /// the fabric shuts down (own deque drained — `push` rejects new work once
-/// `stop` is set) or every user handle is dropped (the `Weak` upgrade
-/// fails and the final `Arc` drop tears the shard systems down).
-fn dispatcher_loop(me: usize, core: Weak<FabricCore>) {
+/// `stop` is set) or every user handle is dropped.
+///
+/// The drop-only teardown works because the park holds **no strong
+/// reference to the core**: the thread owns its shard's queue `Arc`
+/// (condvar + deque survive the core) and upgrades its `Weak` once per
+/// iteration. The old shape held the upgraded `Arc` across the park, so
+/// with 2+ shards the dispatchers kept each other's upgrade succeeding
+/// forever and a fabric dropped without `shutdown()` leaked every thread.
+fn dispatcher_loop(
+    me: usize,
+    queue: Arc<ShardQueue>,
+    core: Weak<FabricCore>,
+    live: Arc<AtomicUsize>,
+) {
     loop {
         let Some(core) = core.upgrade() else { break };
         // merged-run drain: the front task plus (with a reorder window
         // open) any same-shape unplaced jobs within the lookahead —
         // pinned tasks are left in place and never merge
-        let run = core.queues[me]
-            .deque
-            .lock()
-            .unwrap()
-            .pop_front_run(core.window, mergeable);
+        let run = queue.deque.lock().unwrap().pop_front_run(core.window, mergeable);
         if !run.is_empty() {
             core.execute_run(me, run);
             continue;
@@ -536,16 +710,38 @@ fn dispatcher_loop(me: usize, core: Weak<FabricCore>) {
             core.execute_jobs(me, jobs);
             continue;
         }
-        let guard = core.queues[me].deque.lock().unwrap();
+        let guard = queue.deque.lock().unwrap();
         if !guard.is_empty() {
             continue;
         }
         if core.stop.load(Ordering::SeqCst) {
             break;
         }
-        let (_guard, _timed_out) =
-            core.queues[me].ready.wait_timeout(guard, IDLE_POLL).unwrap();
+        // release the strong ref BEFORE parking — if this was the last
+        // one (fabric dropped without shutdown), the core tears down here
+        // and the next upgrade fails
+        drop(core);
+        let (_guard, _timed_out) = queue.ready.wait_timeout(guard, IDLE_POLL).unwrap();
     }
+    live.fetch_sub(1, Ordering::SeqCst);
+}
+
+/// The fabric's mover thread (spawned only with a re-home threshold set):
+/// periodically scans shard loads and drains a pinned session off an
+/// overloaded shard onto an idle one. Parks with no strong core
+/// reference, like the dispatchers, so drop-only teardown stays clean.
+fn mover_loop(core: Weak<FabricCore>, rehome_after: usize, live: Arc<AtomicUsize>) {
+    loop {
+        {
+            let Some(core) = core.upgrade() else { break };
+            if core.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            core.rehome_scan(rehome_after);
+        }
+        std::thread::sleep(MOVER_POLL);
+    }
+    live.fetch_sub(1, Ordering::SeqCst);
 }
 
 /// A cheap, cloneable handle to the sharded fabric. Built with
@@ -556,13 +752,28 @@ pub struct PimFabric {
 }
 
 impl PimFabric {
-    pub(crate) fn launch(shards: Vec<PimSystem>, placement: Placement) -> PimFabric {
-        let core = Arc::new(FabricCore::new(shards, placement));
+    pub(crate) fn launch(
+        shards: Vec<PimSystem>,
+        placement: Placement,
+        rehome_after: usize,
+    ) -> PimFabric {
+        let core = Arc::new(FabricCore::new(shards, placement, rehome_after));
         {
             let mut dispatchers = core.dispatchers.lock().unwrap();
             for shard in 0..core.shards.len() {
                 let weak = Arc::downgrade(&core);
-                dispatchers.push(std::thread::spawn(move || dispatcher_loop(shard, weak)));
+                let queue = core.queues[shard].clone();
+                let live = core.live_threads.clone();
+                live.fetch_add(1, Ordering::SeqCst);
+                dispatchers
+                    .push(std::thread::spawn(move || dispatcher_loop(shard, queue, weak, live)));
+            }
+            if rehome_after > 0 && core.shards.len() > 1 {
+                let weak = Arc::downgrade(&core);
+                let live = core.live_threads.clone();
+                live.fetch_add(1, Ordering::SeqCst);
+                dispatchers
+                    .push(std::thread::spawn(move || mover_loop(weak, rehome_after, live)));
             }
         }
         PimFabric { core }
@@ -582,6 +793,28 @@ impl PimFabric {
         self.core.counters.steals()
     }
 
+    /// Sessions re-homed so far (live counter).
+    pub fn rehomed_sessions(&self) -> u64 {
+        self.core.counters.rehomed()
+    }
+
+    /// Run one re-homing scan right now, regardless of whether the
+    /// background mover thread is enabled: if the busiest shard has any
+    /// queued cost (or exceeds the configured `rehome_after` threshold,
+    /// when set) while another shard is idle, the first handle-pinned
+    /// session with live rows drains onto the idle shard. Returns the
+    /// sessions moved (0 or 1).
+    pub fn rehome_idle(&self) -> usize {
+        self.core.rehome_scan(self.core.rehome_after.max(1))
+    }
+
+    /// Dispatcher/mover threads still running — the drop-teardown
+    /// regression probe. Clone the gauge before dropping the fabric.
+    #[doc(hidden)]
+    pub fn thread_gauge(&self) -> Arc<AtomicUsize> {
+        self.core.live_threads.clone()
+    }
+
     /// Open a session: placement picks the shard, then the shard's router
     /// picks the bank and subarray.
     pub fn client(&self) -> FabricClient {
@@ -598,11 +831,10 @@ impl PimFabric {
 
     fn client_inner(&self, shard: usize) -> FabricClient {
         self.core.counters.record_session(shard);
-        FabricClient {
-            fabric: self.clone(),
-            shard,
-            client: self.core.shards[shard].client(),
-        }
+        // the shard's system stamps its own shard index onto the seat;
+        // the mover may later move the seat (and everything that resolves
+        // through it) to another shard
+        FabricClient { fabric: self.clone(), client: self.core.shards[shard].client() }
     }
 
     /// Queue an unplaced job; placement picks its home shard, and an idle
@@ -708,23 +940,31 @@ impl PimFabric {
             pinned_skips: counters.pinned_skips(),
             reordered: shards.iter().map(|s| s.report.reordered).sum(),
             hazard_blocked: shards.iter().map(|s| s.report.hazard_blocked).sum(),
+            moves: shards.iter().map(|s| s.report.moves).sum(),
+            rows_migrated: shards.iter().map(|s| s.report.rows_migrated).sum(),
+            rehomed_sessions: counters.rehomed(),
+            frag_before: shards.iter().map(|s| s.report.frag_before).sum(),
+            frag_after: shards.iter().map(|s| s.report.frag_after).sum(),
             shards,
         }
     }
 }
 
 /// A session on one fabric shard: a thin wrapper over the shard's
-/// [`PimClient`] plus the fabric-level deferred-submission path.
+/// [`PimClient`] plus the fabric-level deferred-submission path. Every
+/// operation resolves through the session's seat, so a session the mover
+/// re-homed keeps working — on its new shard — without the caller
+/// noticing.
 pub struct FabricClient {
     fabric: PimFabric,
-    shard: usize,
     client: PimClient,
 }
 
 impl FabricClient {
-    /// The shard (channel) this session was placed on.
+    /// The shard (channel) this session currently lives on (the mover's
+    /// re-homing may change it).
     pub fn shard(&self) -> usize {
-        self.shard
+        self.client.seat().lock().shard
     }
 
     /// The bank within the shard.
@@ -784,10 +1024,12 @@ impl FabricClient {
 
     /// Queue a kernel on this shard's deque instead of submitting it
     /// straight to the bank: the home dispatcher executes it
-    /// asynchronously. Because its row handles pin it to this session's
-    /// bank, thieves scan past it (`pinned_skips`) and it **never
-    /// migrates** — the deferred path trades latency for letting the
-    /// dispatcher interleave it with fabric jobs.
+    /// asynchronously. Because its row handles pin it to this session,
+    /// thieves scan past it (`pinned_skips`) and it is **never stolen** —
+    /// though if the mover re-homes the session, the task executes on the
+    /// session's new shard (it resolves the seat at pop time). The
+    /// deferred path trades latency for letting the dispatcher interleave
+    /// it with fabric jobs.
     pub fn submit_deferred(&self, kernel: &Kernel, rows: &[RowHandle]) -> FabricTicket<Receipt> {
         if kernel.n_rows() > rows.len() {
             return FabricTicket::failed(PimError::HandleTableTooShort {
@@ -797,14 +1039,14 @@ impl FabricClient {
         }
         let (tx, rx) = channel();
         let task = PinnedTask {
-            shard: self.shard,
-            bank: self.client.bank(),
-            subarray: self.client.subarray(),
+            seat: self.client.seat().clone(),
             kernel: kernel.clone(),
             rows: rows.to_vec(),
             respond: tx,
         };
-        self.fabric.core.push(self.shard, FabricTask::Pinned(task), kernel.cost());
+        // queue on the session's *current* home shard
+        let shard = self.shard();
+        self.fabric.core.push(shard, FabricTask::Pinned(task), kernel.cost());
         FabricTicket { rx }
     }
 }
@@ -823,13 +1065,13 @@ mod tests {
     use crate::util::{BitRow, Rng, ShiftDir};
 
     fn core(channels: usize, placement: Placement) -> FabricCore {
-        let (shards, placement) = SystemBuilder::new(&DramConfig::tiny_test())
+        let (shards, placement, rehome_after) = SystemBuilder::new(&DramConfig::tiny_test())
             .channels(channels)
             .banks(2)
             .placement(placement)
             .max_batch(4)
             .fabric_shards();
-        FabricCore::new(shards, placement)
+        FabricCore::new(shards, placement, rehome_after)
     }
 
     fn shift_job(bits: BitRow, n: usize) -> JobSpec {
@@ -888,9 +1130,7 @@ mod tests {
         core.push(
             0,
             FabricTask::Pinned(PinnedTask {
-                shard: 0,
-                bank: session.bank(),
-                subarray: session.subarray(),
+                seat: session.seat().clone(),
                 kernel: Kernel::shift_by(2, ShiftDir::Right),
                 rows: vec![row.clone()],
                 respond: ptx,
@@ -942,14 +1182,14 @@ mod tests {
     #[test]
     fn run_steal_migrates_whole_same_shape_runs_past_pinned_tasks() {
         let core = {
-            let (shards, placement) = SystemBuilder::new(&DramConfig::tiny_test())
+            let (shards, placement, rehome_after) = SystemBuilder::new(&DramConfig::tiny_test())
                 .channels(2)
                 .banks(2)
                 .placement(Placement::Pinned)
                 .max_batch(4)
                 .reorder_window(8)
                 .fabric_shards();
-            FabricCore::new(shards, placement)
+            FabricCore::new(shards, placement, rehome_after)
         };
         let mut rng = Rng::new(31);
         let inputs: Vec<BitRow> = (0..3).map(|_| BitRow::random(256, &mut rng)).collect();
@@ -963,9 +1203,7 @@ mod tests {
         core.push(
             0,
             FabricTask::Pinned(PinnedTask {
-                shard: 0,
-                bank: session.bank(),
-                subarray: session.subarray(),
+                seat: session.seat().clone(),
                 kernel: Kernel::shift_by(1, ShiftDir::Right),
                 rows: vec![row.clone()],
                 respond: ptx,
@@ -1010,13 +1248,13 @@ mod tests {
         // fall back to job-at-a-time execution — which succeeds, exactly
         // as FIFO dispatch would
         let core = {
-            let (shards, placement) = SystemBuilder::new(&DramConfig::tiny_test())
+            let (shards, placement, rehome_after) = SystemBuilder::new(&DramConfig::tiny_test())
                 .channels(1)
                 .banks(1)
                 .placement(Placement::Pinned)
                 .reorder_window(8)
                 .fabric_shards();
-            FabricCore::new(shards, placement)
+            FabricCore::new(shards, placement, rehome_after)
         };
         let chain = Kernel::record(8, |t| {
             for i in 0..19 {
@@ -1074,5 +1312,75 @@ mod tests {
         let t = core.enqueue_job(0, shift_job(BitRow::random(256, &mut rng), 1));
         assert_eq!(t.wait().unwrap_err(), PimError::FabricDown);
         assert!(core.queues[0].deque.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn rehome_drains_a_pinned_session_onto_the_idle_shard() {
+        // deterministic mover mechanics, no threads: a session with live
+        // rows sits on shard 0 behind queued deque cost; shard 1 idles.
+        // One scan must move the seat, its rows, and its data — and
+        // leave every outstanding handle resolving on the new shard.
+        let fc = core(2, Placement::Pinned);
+        let session = fc.shards[0].client();
+        let rows = session.alloc_rows(3).unwrap();
+        let mut rng = Rng::new(43);
+        let images: Vec<BitRow> = (0..3).map(|_| BitRow::random(256, &mut rng)).collect();
+        for (h, bits) in rows.iter().zip(&images) {
+            session.write_now(h, bits.clone()).unwrap();
+        }
+        // queued (unexecuted — no dispatcher) cost makes shard 0 busy
+        let _backlog = fc.enqueue_job(0, shift_job(BitRow::random(256, &mut rng), 30));
+        assert!(fc.shard_load(0) > 0);
+        assert_eq!(fc.shard_load(1), 0);
+        assert_eq!(fc.rehome_scan(1), 1, "the pinned session migrates");
+        assert_eq!(fc.counters.rehomed(), 1);
+        assert_eq!(session.seat().lock().shard, 1, "seat re-homed to shard 1");
+        // data followed the handles; kernels run on the new shard
+        for (h, bits) in rows.iter().zip(&images) {
+            assert_eq!(&session.read_now(h).unwrap(), bits);
+        }
+        let receipt = session
+            .run(&Kernel::shift_by(2, ShiftDir::Right), std::slice::from_ref(&rows[0]))
+            .unwrap();
+        assert_eq!(receipt.census.aap, 8);
+        assert_eq!(
+            fc.shards[1].metrics().total_kernels(),
+            1,
+            "the post-move kernel executed on shard 1's banks"
+        );
+        // the old shard's slab got its rows back
+        assert_eq!(fc.shards[0].fragmentation_score(), 0);
+        // an idle fabric (no overloaded shard) refuses to churn
+        let quiet = core(2, Placement::Pinned);
+        assert_eq!(quiet.rehome_scan(1), 0, "nothing queued, nothing moves");
+    }
+
+    #[test]
+    fn dropping_the_fabric_without_shutdown_reaps_every_dispatcher() {
+        // ROADMAP satellite: the old idle park held a strong core Arc, so
+        // with 2+ shards the dispatchers kept each other alive after a
+        // plain drop. The restructured park holds only the queue Arc;
+        // this would hang (gauge never reaching 0) under the old shape.
+        let fabric = SystemBuilder::new(&DramConfig::tiny_test())
+            .channels(2)
+            .banks(1)
+            .build_fabric();
+        // run something through it so the dispatchers are demonstrably live
+        let mut rng = Rng::new(47);
+        fabric
+            .submit_job(shift_job(BitRow::random(256, &mut rng), 1))
+            .wait()
+            .expect("job");
+        let gauge = fabric.thread_gauge();
+        assert!(gauge.load(Ordering::SeqCst) >= 2);
+        drop(fabric);
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while gauge.load(Ordering::SeqCst) != 0 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "dispatchers leaked after a drop-only teardown"
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
     }
 }

@@ -61,12 +61,56 @@ pub struct ReorderCounters {
     pub merged: AtomicU64,
 }
 
+/// Counters of the row mover ([`crate::coordinator::mover`]): migration
+/// plans executed, rows copied + re-bound, and the fragmentation gauge
+/// around the last pass. Lock-free — the mover updates them from whatever
+/// thread triggered a pass; reports read them at shutdown.
+#[derive(Debug, Default)]
+pub struct MoverCounters {
+    moves: AtomicU64,
+    rows_migrated: AtomicU64,
+    frag_before: AtomicU64,
+    frag_after: AtomicU64,
+}
+
+impl MoverCounters {
+    /// One migration plan (a per-seat compaction batch or a session
+    /// transfer) moved `rows` rows.
+    pub fn record_plan(&self, rows: u64) {
+        self.moves.fetch_add(1, Ordering::Relaxed);
+        self.rows_migrated.fetch_add(rows, Ordering::Relaxed);
+    }
+
+    /// Gauge the fragmentation score around one defrag pass.
+    pub fn record_frag(&self, before: u64, after: u64) {
+        self.frag_before.store(before, Ordering::Relaxed);
+        self.frag_after.store(after, Ordering::Relaxed);
+    }
+
+    pub fn moves(&self) -> u64 {
+        self.moves.load(Ordering::Relaxed)
+    }
+
+    pub fn rows_migrated(&self) -> u64 {
+        self.rows_migrated.load(Ordering::Relaxed)
+    }
+
+    pub fn frag_before(&self) -> u64 {
+        self.frag_before.load(Ordering::Relaxed)
+    }
+
+    pub fn frag_after(&self) -> u64 {
+        self.frag_after.load(Ordering::Relaxed)
+    }
+}
+
 /// Aggregated metrics registry.
 #[derive(Clone)]
 pub struct Metrics {
     banks: Arc<Vec<BankCounters>>,
     cache: Option<Arc<ProgramCache>>,
     reorder: Arc<ReorderCounters>,
+    mover: Arc<MoverCounters>,
 }
 
 impl Metrics {
@@ -75,7 +119,13 @@ impl Metrics {
             banks: Arc::new((0..n_banks).map(|_| BankCounters::default()).collect()),
             cache: None,
             reorder: Arc::new(ReorderCounters::default()),
+            mover: Arc::new(MoverCounters::default()),
         }
+    }
+
+    /// The row mover's counter block.
+    pub fn mover(&self) -> &MoverCounters {
+        &self.mover
     }
 
     /// Registry with the serving system's program cache attached, so cache
@@ -202,6 +252,7 @@ pub struct FabricCounters {
     stolen_out: Vec<AtomicU64>,
     steals: AtomicU64,
     pinned_skips: AtomicU64,
+    rehomed: AtomicU64,
 }
 
 impl FabricCounters {
@@ -213,7 +264,18 @@ impl FabricCounters {
             stolen_out: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
             steals: AtomicU64::new(0),
             pinned_skips: AtomicU64::new(0),
+            rehomed: AtomicU64::new(0),
         }
+    }
+
+    /// The mover drained a handle-pinned session off an overloaded shard
+    /// and re-bound it onto an idle one.
+    pub fn record_rehome(&self) {
+        self.rehomed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn rehomed(&self) -> u64 {
+        self.rehomed.load(Ordering::Relaxed)
     }
 
     pub fn n_shards(&self) -> usize {
@@ -370,6 +432,28 @@ mod tests {
         assert_eq!(c.pinned_skips(), 0);
         c.record_pinned_skips(3);
         assert_eq!(c.pinned_skips(), 3);
+    }
+
+    #[test]
+    fn mover_counters_accumulate_plans_and_gauge_fragmentation() {
+        let m = Metrics::new(1);
+        assert_eq!((m.mover().moves(), m.mover().rows_migrated()), (0, 0));
+        m.mover().record_plan(3);
+        m.mover().record_plan(1);
+        assert_eq!(m.mover().moves(), 2);
+        assert_eq!(m.mover().rows_migrated(), 4);
+        // the frag gauge tracks the *last* pass, not a sum
+        m.mover().record_frag(7, 2);
+        m.mover().record_frag(2, 0);
+        assert_eq!((m.mover().frag_before(), m.mover().frag_after()), (2, 0));
+        // clones share the registry
+        m.clone().mover().record_plan(5);
+        assert_eq!(m.mover().rows_migrated(), 9);
+        // fabric-level re-home counter
+        let c = FabricCounters::new(2);
+        assert_eq!(c.rehomed(), 0);
+        c.record_rehome();
+        assert_eq!(c.rehomed(), 1);
     }
 
     #[test]

@@ -52,6 +52,14 @@
 //! migrates between shards; handle-pinned kernels never do, because
 //! [`RowHandle`]s pin data to a bank.
 //!
+//! **Row mover.** Placement is dynamic underneath live handles
+//! ([`mover`]): handles resolve through their session's seat at
+//! submission time, so the background defragmenter can compact
+//! fragmented subarrays (copies ride the compiled AAP/RowClone path as
+//! `CopyRows` fences) and the fabric's mover can re-home whole sessions
+//! across shards — both invisible to clients and bit-identical to an
+//! unmigrated run (`tests/mover_churn.rs`).
+//!
 //! Substitution note: the offline build has no tokio; the serving loop is
 //! std threads + mpsc channels, which for a simulation-backed service is
 //! behaviourally equivalent (blocking queue per bank, one executor per
@@ -61,6 +69,7 @@ pub mod batcher;
 pub mod client;
 pub mod fabric;
 pub mod metrics;
+pub mod mover;
 pub mod reorder;
 pub mod router;
 pub mod system;
@@ -68,7 +77,8 @@ pub mod system;
 pub use batcher::{Batch, Batcher, OverflowDeque};
 pub use client::{Kernel, PimClient, PimError, Receipt, RowHandle, Ticket};
 pub use fabric::{FabricClient, FabricTicket, JobOutput, JobSpec, PimFabric};
-pub use metrics::{FabricCounters, Metrics, WorkerDelta};
+pub use metrics::{FabricCounters, Metrics, MoverCounters, WorkerDelta};
+pub use mover::MoveStats;
 pub use reorder::{Access, PlanStats, Reorderable};
 pub use router::{Placement, Router};
 pub use system::{

@@ -1,0 +1,257 @@
+//! The row mover: online migration of live rows under outstanding
+//! handles.
+//!
+//! The paper's migration cells were built for *row migration* in
+//! asymmetric subarrays before this repo repurposed them for shifting —
+//! this module closes the loop and makes placement dynamic end-to-end.
+//! Two movements exist:
+//!
+//! * **Defragmentation** ([`defrag_pass`], hooked after dispatched
+//!   batches via `SystemBuilder::defrag`): per-subarray fragmentation is
+//!   scored from slab occupancy (freed holes below the live span); when a
+//!   subarray crosses the threshold, each session's rows are compacted
+//!   downward — highest live row into the lowest hole — and the session
+//!   seat re-binds the affected slots. The copies travel as one
+//!   [`PimRequest::CopyRows`] wire request per seat: `BankSim` executes
+//!   them as an ordinary compiled `Copy` program (the AAP/RowClone path),
+//!   so timing/energy accounting and bit-exactness come for free.
+//! * **Cross-shard session re-homing** (fabric-level; see
+//!   `coordinator::fabric`): a whole seat drains off an overloaded shard
+//!   and re-binds onto an idle one, after which its previously pinned
+//!   work schedules there.
+//!
+//! # Why no kernel can race a move
+//!
+//! Every submission path resolves handle coordinates **and enqueues the
+//! wire request under the seat lock** ([`SessionSeat`]); the mover takes
+//! the same lock to plan. So when a pass runs, every request resolved
+//! against the old coordinates is already queued on the bank, and the
+//! `CopyRows` fence enqueues *behind* it in the same per-bank FIFO.
+//! Requests submitted after the pass resolve to the re-bound rows and
+//! queue behind the fence. The fence's [`Access`] footprint (reads every
+//! src, writes every dst) additionally pins the hazard-checked reorderer:
+//! nothing that conflicts with a move is ever hoisted across it. Within a
+//! pass, compaction destinations are **claimed before** the fence is
+//! queued and sources are **freed after** — so no concurrent allocation
+//! can collide with a row the fence still has to read or write.
+//!
+//! The result is the property `tests/mover_churn.rs` proves: under
+//! seeded alloc/free/submit storms, a defragmenting system stays
+//! bit-identical to a FIFO-placed one while its fragmentation score drops.
+
+use crate::coordinator::client::Kernel;
+use crate::coordinator::reorder::Access;
+use crate::coordinator::system::{PimRequest, PimSystem};
+use crate::pim::{PimOp, RowFootprint};
+
+/// What one mover invocation did ([`PimSystem::defrag_now`] returns it).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MoveStats {
+    /// migration plans executed (one `CopyRows` fence per seat touched)
+    pub plans: u64,
+    /// rows copied and re-bound
+    pub rows_moved: u64,
+    /// system fragmentation score entering the pass
+    pub frag_before: u64,
+    /// the score after compaction
+    pub frag_after: u64,
+}
+
+/// The two-slot copy kernel every migration fence replays: canonical
+/// `Copy { src: 0, dst: 1 }`, compiled once per config fingerprint and
+/// cached like any other kernel shape.
+fn copy_kernel() -> Kernel {
+    Kernel::op(PimOp::Copy { src: 0, dst: 1 })
+}
+
+/// One background compaction pass over every seat registered on `sys`.
+///
+/// Per seat (locked one at a time — seat locks never nest): if the seat's
+/// subarray scores at least `threshold`, repeatedly pair the subarray's
+/// lowest free hole with the seat's highest live row above it, claiming
+/// the hole and re-binding the slot under the router lock. The resulting
+/// pairs ship as one `CopyRows` fence; sources are freed only after the
+/// fence is queued, so a new tenant's first write is always ordered
+/// behind the copy that still reads the old bits.
+pub(crate) fn defrag_pass(sys: &PimSystem, threshold: usize) -> MoveStats {
+    let threshold = threshold.max(1);
+    // cheap gate: a clean system pays one short-circuiting occupancy scan
+    // and skips the seat walk and both global score snapshots entirely
+    if !sys.any_fragmented(threshold) {
+        return MoveStats::default();
+    }
+    let mut stats = MoveStats {
+        frag_before: sys.fragmentation_score() as u64,
+        ..MoveStats::default()
+    };
+    let copy = copy_kernel();
+    let mut touched: Vec<usize> = Vec::new();
+    for seat in sys.live_seats() {
+        let mut st = seat.lock();
+        if st.owner != sys.core_id() {
+            // the seat re-homed to another shard between snapshot and lock
+            continue;
+        }
+        let (bank, subarray) = (st.bank, st.subarray);
+        // plan: claim destinations and re-bind slots under the router lock
+        let mut pairs: Vec<(usize, usize)> = Vec::new();
+        {
+            let mut router = sys.router_lock();
+            if router.subarray_fragmentation(bank, subarray) >= threshold {
+                loop {
+                    let span = router.span(bank, subarray);
+                    let Some(hole) = router.lowest_free_below(bank, subarray, span) else {
+                        break;
+                    };
+                    let Some((slot, src)) = st.highest_live_above(hole) else {
+                        break;
+                    };
+                    let claimed = router.claim_row(bank, subarray, hole);
+                    debug_assert!(claimed, "hole was free under this router lock");
+                    st.rebind(slot, hole);
+                    pairs.push((src, hole));
+                }
+            }
+        }
+        if pairs.is_empty() {
+            continue;
+        }
+        // fence: one CopyRows request carrying every move of this seat,
+        // enqueued while the seat lock is still held
+        let mut rows = RowFootprint::new();
+        for &(src, dst) in &pairs {
+            rows.add_read(src);
+            rows.add_write(dst);
+        }
+        let cost = copy.cost() * pairs.len();
+        let n = pairs.len() as u64;
+        let req = PimRequest::CopyRows {
+            subarray,
+            shape: copy.shape().clone(),
+            ops: copy.ops().clone(),
+            pairs: pairs.clone(),
+        };
+        let (_fire_and_forget, _full) =
+            st.sys.enqueue_wire(bank, cost, Access::Touch { subarray, rows }, req);
+        // only now do the sources go back to the slab — an alloc that
+        // reuses one enqueues its first write behind the fence
+        {
+            let mut router = sys.router_lock();
+            for &(src, _) in &pairs {
+                let freed = router.free_row(bank, subarray, src);
+                debug_assert!(freed, "source was live until this free");
+            }
+            router.trim(bank, subarray);
+        }
+        stats.plans += 1;
+        stats.rows_moved += n;
+        sys.metrics().mover().record_plan(n);
+        if !touched.contains(&bank) {
+            touched.push(bank);
+        }
+    }
+    // push the fences through (without re-entering the defrag hook)
+    for bank in touched {
+        sys.flush_bank_inner(bank);
+    }
+    stats.frag_after = sys.fragmentation_score() as u64;
+    // gauge only passes that did something — a trailing no-op pass (e.g.
+    // the shutdown flush) must not overwrite the last real compaction
+    if stats.plans > 0 {
+        sys.metrics().mover().record_frag(stats.frag_before, stats.frag_after);
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DramConfig;
+    use crate::coordinator::system::SystemBuilder;
+    use crate::util::{BitRow, Rng, ShiftDir};
+
+    #[test]
+    fn defrag_compacts_holes_under_live_handles() {
+        // carve holes under a session's rows, then compact: the score
+        // drops to zero and every handle still reads its own bits
+        let sys = SystemBuilder::new(&DramConfig::tiny_test()).banks(1).build();
+        let c = sys.client();
+        let rows = c.alloc_rows(12).expect("rows");
+        let mut rng = Rng::new(71);
+        let mut images = Vec::new();
+        for h in &rows {
+            let bits = BitRow::random(256, &mut rng);
+            c.write_now(h, bits.clone()).expect("write");
+            images.push(bits);
+        }
+        // free every even-indexed row: 6 holes interleaved with 6 live
+        let mut kept = Vec::new();
+        let mut kept_images = Vec::new();
+        for (i, h) in rows.into_iter().enumerate() {
+            if i % 2 == 0 {
+                assert!(c.free(h));
+            } else {
+                kept.push(h);
+                kept_images.push(images[i].clone());
+            }
+        }
+        assert_eq!(sys.fragmentation_score(), 6, "six holes sit below live rows");
+        let stats = sys.defrag_now();
+        // 6 live rows over a 12-row span: the top 3 drop into the bottom
+        // 3 holes and the span collapses onto the survivors
+        assert_eq!(stats.rows_moved, 3, "{stats:?}");
+        assert_eq!(sys.fragmentation_score(), 0, "perfectly packed after the pass");
+        assert!(stats.frag_after < stats.frag_before);
+        for (h, bits) in kept.iter().zip(&kept_images) {
+            assert_eq!(&c.read_now(h).expect("read"), bits, "bits follow the re-bind");
+        }
+        // moved rows still run kernels
+        let receipt = c
+            .run(&Kernel::shift_by(1, ShiftDir::Right), std::slice::from_ref(&kept[0]))
+            .expect("kernel on a migrated row");
+        assert_eq!(receipt.census.aap, 4);
+        let report = sys.shutdown();
+        assert!(report.moves >= 1);
+        assert!(report.rows_migrated >= 3);
+        assert_eq!(report.frag_after, 0);
+        assert!(report.is_clean(), "{:?}", report.worker_failures);
+    }
+
+    #[test]
+    fn defrag_pass_is_a_noop_on_a_packed_slab() {
+        let sys = SystemBuilder::new(&DramConfig::tiny_test()).banks(1).build();
+        let c = sys.client();
+        let _rows = c.alloc_rows(8).expect("rows");
+        let stats = sys.defrag_now();
+        assert_eq!(stats, MoveStats::default(), "nothing to move: {stats:?}");
+        assert!(sys.shutdown().is_clean());
+    }
+
+    #[test]
+    fn background_hook_compacts_between_batches() {
+        // with the knob on, ordinary flush traffic triggers the pass —
+        // no explicit defrag_now needed
+        let sys = SystemBuilder::new(&DramConfig::tiny_test())
+            .banks(1)
+            .defrag(true)
+            .defrag_threshold(1)
+            .build();
+        let c = sys.client();
+        let mut rows = c.alloc_rows(8).expect("rows");
+        let keep = rows.pop().expect("the top row");
+        let mut rng = Rng::new(73);
+        let keep_bits = BitRow::random(256, &mut rng);
+        c.write_now(&keep, keep_bits.clone()).expect("write");
+        for h in rows {
+            assert!(c.free(h));
+        }
+        assert_eq!(sys.fragmentation_score(), 7, "seven holes under the kept row");
+        // any flush gives the hook its between-batches slot
+        c.flush();
+        assert_eq!(sys.fragmentation_score(), 0, "the hook compacted");
+        assert_eq!(c.read_now(&keep).expect("read"), keep_bits);
+        let report = sys.shutdown();
+        assert!(report.rows_migrated >= 1);
+        assert!(report.is_clean());
+    }
+}

@@ -24,17 +24,25 @@ pub enum Placement {
 
 /// Free-row allocator for one subarray: freed rows are reused LIFO, fresh
 /// rows are handed out in ascending order.
+///
+/// The occupancy surfaces ([`Self::span`], [`Self::fragmentation`],
+/// [`Self::claim`], [`Self::trim`]) exist for the row mover
+/// ([`crate::coordinator::mover`]): compaction claims specific holes,
+/// re-binds the rows living above them, and trims the slab so fresh
+/// allocation resumes at the compacted frontier.
 #[derive(Debug)]
 struct SubarraySlab {
     rows: usize,
     next_fresh: usize,
     freed: Vec<usize>,
     in_use: Vec<bool>,
+    /// rows currently allocated (kept so occupancy queries are O(1))
+    live: usize,
 }
 
 impl SubarraySlab {
     fn new(rows: usize) -> Self {
-        SubarraySlab { rows, next_fresh: 0, freed: Vec::new(), in_use: vec![false; rows] }
+        SubarraySlab { rows, next_fresh: 0, freed: Vec::new(), in_use: vec![false; rows], live: 0 }
     }
 
     fn alloc(&mut self) -> Option<usize> {
@@ -48,6 +56,7 @@ impl SubarraySlab {
             None => return None,
         };
         self.in_use[row] = true;
+        self.live += 1;
         Some(row)
     }
 
@@ -58,12 +67,65 @@ impl SubarraySlab {
             return false;
         }
         self.in_use[row] = false;
+        self.live -= 1;
         self.freed.push(row);
+        true
+    }
+
+    /// Claim a *specific* free row — the mover's compaction destinations.
+    /// False when the row is out of range or already in use.
+    fn claim(&mut self, row: usize) -> bool {
+        if row >= self.rows || self.in_use[row] {
+            return false;
+        }
+        if row < self.next_fresh {
+            let Some(i) = self.freed.iter().position(|&r| r == row) else {
+                return false;
+            };
+            self.freed.swap_remove(i);
+        } else {
+            // claiming past the fresh frontier turns the skipped rows into
+            // ordinary holes
+            for r in self.next_fresh..row {
+                self.freed.push(r);
+            }
+            self.next_fresh = row + 1;
+        }
+        self.in_use[row] = true;
+        self.live += 1;
         true
     }
 
     fn available(&self) -> usize {
         (self.rows - self.next_fresh) + self.freed.len()
+    }
+
+    /// One past the highest in-use row (0 when the subarray is empty).
+    fn span(&self) -> usize {
+        (0..self.next_fresh).rev().find(|&r| self.in_use[r]).map_or(0, |r| r + 1)
+    }
+
+    /// Holes under the span: how many freed rows sit *below* the highest
+    /// in-use row. 0 for a perfectly packed subarray — the score the
+    /// mover's defragmenter drives down.
+    fn fragmentation(&self) -> usize {
+        self.span() - self.live
+    }
+
+    /// The lowest free row strictly below `limit` (a compaction
+    /// destination), if any.
+    fn lowest_free_below(&self, limit: usize) -> Option<usize> {
+        self.freed.iter().copied().filter(|&r| r < limit).min()
+    }
+
+    /// Re-anchor the fresh frontier at the current span: freed rows at or
+    /// above it become fresh again. Run after compaction so new
+    /// allocations extend the packed region instead of refilling stale
+    /// holes beyond it.
+    fn trim(&mut self) {
+        let span = self.span();
+        self.freed.retain(|&r| r < span);
+        self.next_fresh = span;
     }
 }
 
@@ -171,6 +233,52 @@ impl Router {
     /// Return a row to its slab; false on double free / foreign row.
     pub fn free_row(&mut self, bank: usize, subarray: usize, row: usize) -> bool {
         self.slabs[bank].subarrays[subarray].free(row)
+    }
+
+    /// Claim a specific free row (mover compaction destination); false if
+    /// it is already in use.
+    pub fn claim_row(&mut self, bank: usize, subarray: usize, row: usize) -> bool {
+        self.slabs[bank].subarrays[subarray].claim(row)
+    }
+
+    /// Fragmentation score of one subarray: freed holes below its highest
+    /// in-use row (0 = perfectly packed).
+    pub fn subarray_fragmentation(&self, bank: usize, subarray: usize) -> usize {
+        self.slabs[bank].subarrays[subarray].fragmentation()
+    }
+
+    /// Fragmentation score summed over every subarray of every bank — the
+    /// system-level gauge `SystemReport::frag_before/after` snapshots.
+    pub fn fragmentation(&self) -> usize {
+        self.slabs
+            .iter()
+            .map(|s| s.subarrays.iter().map(|sa| sa.fragmentation()).sum::<usize>())
+            .sum()
+    }
+
+    /// True when any subarray's score reaches `threshold` — the cheap
+    /// gate the background defragmenter checks before walking seats
+    /// (short-circuits on the first hit; a packed slab answers in O(1)
+    /// per subarray because its span probe finds the top row immediately).
+    pub fn any_fragmented(&self, threshold: usize) -> bool {
+        self.slabs
+            .iter()
+            .any(|s| s.subarrays.iter().any(|sa| sa.fragmentation() >= threshold))
+    }
+
+    /// One past the highest in-use row of a subarray.
+    pub fn span(&self, bank: usize, subarray: usize) -> usize {
+        self.slabs[bank].subarrays[subarray].span()
+    }
+
+    /// The lowest free row strictly below `limit` in a subarray.
+    pub fn lowest_free_below(&self, bank: usize, subarray: usize, limit: usize) -> Option<usize> {
+        self.slabs[bank].subarrays[subarray].lowest_free_below(limit)
+    }
+
+    /// Re-anchor a subarray's fresh frontier after compaction.
+    pub fn trim(&mut self, bank: usize, subarray: usize) {
+        self.slabs[bank].subarrays[subarray].trim();
     }
 
     /// Allocatable rows left on a bank.
@@ -299,6 +407,63 @@ mod tests {
         // the other subarray still has its 8 rows
         assert_eq!(r.rows_available(0), 8);
         assert!(r.alloc_row(0, 1).is_some());
+    }
+
+    #[test]
+    fn fragmentation_counts_holes_under_the_span() {
+        let mut r = router(1, Placement::Pinned);
+        for _ in 0..6 {
+            r.alloc_row(0, 0);
+        }
+        assert_eq!(r.subarray_fragmentation(0, 0), 0, "packed slab has no holes");
+        assert!(r.free_row(0, 0, 1));
+        assert!(r.free_row(0, 0, 3));
+        assert_eq!(r.span(0, 0), 6);
+        assert_eq!(r.subarray_fragmentation(0, 0), 2, "two holes under row 5");
+        assert_eq!(r.fragmentation(), 2);
+        // freeing the top row shrinks the span, not the hole count
+        assert!(r.free_row(0, 0, 5));
+        assert_eq!(r.span(0, 0), 5);
+        assert_eq!(r.subarray_fragmentation(0, 0), 2);
+        // an empty subarray scores zero
+        let r2 = router(1, Placement::Pinned);
+        assert_eq!(r2.fragmentation(), 0);
+    }
+
+    #[test]
+    fn claim_takes_a_specific_hole_and_rejects_live_rows() {
+        let mut r = router(1, Placement::Pinned);
+        for _ in 0..4 {
+            r.alloc_row(0, 0);
+        }
+        assert!(r.free_row(0, 0, 1));
+        assert!(r.claim_row(0, 0, 1), "freed hole claimable");
+        assert!(!r.claim_row(0, 0, 1), "now in use");
+        assert!(!r.claim_row(0, 0, 2), "live row rejected");
+        // claiming past the fresh frontier turns skipped rows into holes
+        assert!(r.claim_row(0, 0, 6));
+        assert_eq!(r.subarray_fragmentation(0, 0), 2, "rows 4 and 5 became holes");
+        assert_eq!(r.lowest_free_below(0, 0, 6), Some(4));
+        assert_eq!(r.lowest_free_below(0, 0, 4), None);
+    }
+
+    #[test]
+    fn trim_reanchors_the_fresh_frontier_after_compaction() {
+        let mut r = router(1, Placement::Pinned);
+        for _ in 0..8 {
+            r.alloc_row(0, 0);
+        }
+        // free everything above row 1 — the compacted picture
+        for row in 2..8 {
+            assert!(r.free_row(0, 0, row));
+        }
+        assert_eq!(r.rows_available(0), 6 + 8, "6 free in subarray 0 + untouched subarray 1");
+        r.trim(0, 0);
+        assert_eq!(r.subarray_fragmentation(0, 0), 0);
+        assert_eq!(r.rows_available(0), 6 + 8, "trim changes layout, not capacity");
+        // fresh allocation resumes at the packed frontier
+        assert_eq!(r.alloc_row(0, 0), Some(2));
+        assert_eq!(r.alloc_row(0, 0), Some(3));
     }
 
     #[test]

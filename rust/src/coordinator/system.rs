@@ -34,15 +34,17 @@
 //! FIFO execution (proved per-seed by `tests/reorder_differential.rs`);
 //! the `reordered`/`hazard_blocked` counters report the traffic.
 
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, Weak};
 use std::thread::JoinHandle;
 
 use crate::config::DramConfig;
 use crate::coordinator::batcher::{Batch, Batcher};
-use crate::coordinator::client::{PimClient, PimError, RowHandle};
+use crate::coordinator::client::{PimClient, PimError, SessionSeat};
 use crate::coordinator::fabric::PimFabric;
 use crate::coordinator::metrics::{Metrics, WorkerDelta};
+use crate::coordinator::mover::{self, MoveStats};
 use crate::coordinator::reorder::{self, Access, Reorderable};
 use crate::coordinator::router::{Placement, Router};
 use crate::dram::address::BankId;
@@ -50,6 +52,12 @@ use crate::pim::compile::{CacheStats, CompiledProgram, ProgramCache, ProgramShap
 use crate::pim::PimOp;
 use crate::sim::BankSim;
 use crate::util::BitRow;
+
+/// Process-wide core id source: each [`PimSystem`] core gets a unique tag
+/// so session seats can name which core currently owns them (the
+/// defragmenter skips seats that re-homed to another shard between its
+/// registry snapshot and taking the seat lock).
+static NEXT_CORE_ID: AtomicUsize = AtomicUsize::new(0);
 
 /// Programs the serving cache keeps resident unless
 /// [`SystemBuilder::cache_capacity`] overrides it.
@@ -69,6 +77,19 @@ pub(crate) enum PimRequest {
         shape: ProgramShape,
         ops: Arc<Vec<PimOp>>,
         binding: Vec<usize>,
+    },
+    /// the row mover's migration fence: copy `pairs` of live rows
+    /// (src → dst) within one subarray through the compiled AAP/RowClone
+    /// path, so timing/energy accounting and bit-exactness ride the
+    /// ordinary program machinery. Its [`Access`] footprint (reads every
+    /// src, writes every dst) keeps the hazard-checked reorderer from
+    /// hoisting any conflicting kernel across the move — in-flight work
+    /// ordered before it stays before it.
+    CopyRows {
+        subarray: usize,
+        shape: ProgramShape,
+        ops: Arc<Vec<PimOp>>,
+        pairs: Vec<(usize, usize)>,
     },
     /// test hook: make the worker panic (exercises failure propagation)
     #[cfg(test)]
@@ -156,6 +177,19 @@ pub struct SystemReport {
     pub reordered: u64,
     /// same-shape merge candidates a RAW/WAW/WAR conflict pinned in place
     pub hazard_blocked: u64,
+    /// migration plans the row mover executed (compaction passes per seat
+    /// plus cross-shard session transfers)
+    pub moves: u64,
+    /// individual rows those plans copied and re-bound
+    pub rows_migrated: u64,
+    /// sessions the fabric's mover re-homed to another shard (0 outside a
+    /// fabric)
+    pub rehomed_sessions: u64,
+    /// fragmentation score (freed holes below the live span, summed over
+    /// every subarray) observed at the start of the mover's last pass
+    pub frag_before: u64,
+    /// the same score after that pass
+    pub frag_after: u64,
 }
 
 impl SystemReport {
@@ -197,6 +231,12 @@ pub struct SystemBuilder {
     per_channel_capacity: Option<usize>,
     fused: bool,
     reorder_window: usize,
+    defrag: bool,
+    defrag_threshold: usize,
+    rehome_after: usize,
+    /// fabric shard index stamped onto this system's session seats
+    /// (set internally by `fabric_shards`; 0 for a plain system)
+    shard_index: usize,
 }
 
 impl SystemBuilder {
@@ -212,6 +252,10 @@ impl SystemBuilder {
             per_channel_capacity: None,
             fused: true,
             reorder_window: default_reorder_window(),
+            defrag: default_defrag(),
+            defrag_threshold: 1,
+            rehome_after: 0,
+            shard_index: 0,
         }
     }
 
@@ -294,6 +338,40 @@ impl SystemBuilder {
         self
     }
 
+    /// Enable the background defragmenter (default: the `PIM_DEFRAG` env
+    /// var, else off). When on, a pass runs after dispatched batches: any
+    /// subarray whose fragmentation score (freed holes below its live
+    /// span) reaches [`Self::defrag_threshold`] has its live rows
+    /// compacted downward through the AAP/RowClone copy path and the
+    /// affected handles re-bound — invisibly to clients, bit-identically
+    /// to an unmigrated run (see `tests/mover_churn.rs`). Off, the mover
+    /// never runs and behavior is exactly the pre-mover system; a manual
+    /// [`PimSystem::defrag_now`] works either way.
+    pub fn defrag(mut self, on: bool) -> Self {
+        self.defrag = on;
+        self
+    }
+
+    /// Minimum per-subarray fragmentation score that triggers a
+    /// background compaction (default 1 = any hole below the live span).
+    pub fn defrag_threshold(mut self, n: usize) -> Self {
+        self.defrag_threshold = n.max(1);
+        self
+    }
+
+    /// Fabric-only: queued-cost threshold for cross-shard session
+    /// re-homing (default 0 = off). With `n > 0`, the fabric's mover
+    /// thread watches shard loads; when one shard's queued cost exceeds
+    /// `n` while another shard sits idle, a handle-pinned session is
+    /// drained off the busy shard (rows copied out through the wire,
+    /// re-allocated on the idle shard, handles re-bound) so its pinned
+    /// work rebalances like unplaced work does. Ignored by
+    /// [`Self::build`].
+    pub fn rehome_after(mut self, n: usize) -> Self {
+        self.rehome_after = n;
+        self
+    }
+
     /// Spin up the leader state and one worker thread per bank.
     pub fn build(self) -> PimSystem {
         assert_eq!(
@@ -311,14 +389,14 @@ impl SystemBuilder {
     /// metrics), fronted by two-level placement and work stealing. See
     /// [`crate::coordinator::fabric`].
     pub fn build_fabric(self) -> PimFabric {
-        let (shards, placement) = self.fabric_shards();
-        PimFabric::launch(shards, placement)
+        let (shards, placement, rehome_after) = self.fabric_shards();
+        PimFabric::launch(shards, placement, rehome_after)
     }
 
     /// The fabric's shard systems (one per channel) plus the shared
-    /// placement policy — split out so tests can assemble a fabric core
-    /// without spawning dispatcher threads.
-    pub(crate) fn fabric_shards(self) -> (Vec<PimSystem>, Placement) {
+    /// placement policy and re-home threshold — split out so tests can
+    /// assemble a fabric core without spawning dispatcher threads.
+    pub(crate) fn fabric_shards(self) -> (Vec<PimSystem>, Placement, usize) {
         let g = self.cfg.geometry.clone();
         assert!(
             self.channels >= 1 && self.channels <= g.channels,
@@ -330,6 +408,7 @@ impl SystemBuilder {
             "banks-per-channel outside geometry"
         );
         let placement = self.placement;
+        let rehome_after = self.rehome_after;
         let mut shards = Vec::with_capacity(self.channels);
         for channel in 0..self.channels {
             let banks: Vec<BankId> = BankId::all(&g)
@@ -348,10 +427,14 @@ impl SystemBuilder {
                 per_channel_capacity: None,
                 fused: self.fused,
                 reorder_window: self.reorder_window,
+                defrag: self.defrag,
+                defrag_threshold: self.defrag_threshold,
+                rehome_after: 0,
+                shard_index: channel,
             };
             shards.push(shard_builder.build_on(banks));
         }
-        (shards, placement)
+        (shards, placement, rehome_after)
     }
 
     /// Spin up one system over an explicit bank list.
@@ -393,12 +476,18 @@ impl SystemBuilder {
         );
         PimSystem {
             core: Arc::new(Core {
+                id: NEXT_CORE_ID.fetch_add(1, Ordering::Relaxed),
+                shard_index: self.shard_index,
                 router: Mutex::new(router),
                 batchers: (0..n_banks)
                     .map(|b| Mutex::new(Batcher::new(b, self.max_batch)))
                     .collect(),
                 max_batch: self.max_batch,
                 reorder_window: self.reorder_window,
+                defrag: self.defrag,
+                defrag_threshold: self.defrag_threshold,
+                mover_active: AtomicBool::new(false),
+                seats: Mutex::new(Vec::new()),
                 senders,
                 workers: Mutex::new(workers),
                 failures: Mutex::new(Vec::new()),
@@ -419,6 +508,19 @@ fn default_reorder_window() -> usize {
         .unwrap_or(0)
 }
 
+/// The builder's defragmenter default: on when `PIM_DEFRAG` is set to a
+/// non-zero value (CI runs tier-1 once with `PIM_DEFRAG=1` so the whole
+/// suite exercises live migration), else off.
+fn default_defrag() -> bool {
+    std::env::var("PIM_DEFRAG")
+        .ok()
+        .map(|v| {
+            let v = v.trim();
+            !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false")
+        })
+        .unwrap_or(false)
+}
+
 /// A cheap, cloneable handle to the serving system. Clones share the same
 /// leader state and workers; sessions hold one internally, so the system
 /// stays alive as long as any client does.
@@ -428,10 +530,22 @@ pub struct PimSystem {
 }
 
 struct Core {
+    /// process-unique core tag (see [`NEXT_CORE_ID`])
+    id: usize,
+    /// fabric shard index stamped onto this core's seats (0 standalone)
+    shard_index: usize,
     router: Mutex<Router>,
     batchers: Vec<Mutex<Batcher<Envelope>>>,
     max_batch: usize,
     reorder_window: usize,
+    /// background-defragmenter knob + per-subarray trigger score
+    defrag: bool,
+    defrag_threshold: usize,
+    /// throttles the post-dispatch defrag hook to one pass at a time
+    mover_active: AtomicBool,
+    /// every seat opened on this core (weak — seats die with their last
+    /// client/handle, and passes prune dead entries)
+    seats: Mutex<Vec<Weak<SessionSeat>>>,
     senders: Vec<Sender<WorkerMsg>>,
     workers: Mutex<Vec<JoinHandle<()>>>,
     failures: Mutex<Vec<String>>,
@@ -455,15 +569,51 @@ impl Drop for Core {
 impl PimSystem {
     /// Open a session placed by the configured policy.
     pub fn client(&self) -> PimClient {
-        let (bank, subarray) = self.core.router.lock().unwrap().place_session(None);
-        PimClient::new(self.clone(), bank, subarray)
+        PimClient::from_seat(self.open_seat(None))
     }
 
     /// Open a session pinned to a bank (panics if out of range — a
     /// configuration error, not a request error).
     pub fn client_on(&self, bank: usize) -> PimClient {
-        let (bank, subarray) = self.core.router.lock().unwrap().place_session(Some(bank));
-        PimClient::new(self.clone(), bank, subarray)
+        PimClient::from_seat(self.open_seat(Some(bank)))
+    }
+
+    /// Place a new seat on this core and register it with the mover.
+    fn open_seat(&self, pinned: Option<usize>) -> Arc<SessionSeat> {
+        let (bank, subarray) = self.core.router.lock().unwrap().place_session(pinned);
+        let seat =
+            SessionSeat::new(self.clone(), self.core.shard_index, bank, subarray, self.core.id);
+        self.register_seat(&seat);
+        seat
+    }
+
+    /// Register a seat with this core's mover registry (also called when a
+    /// re-homed seat arrives from another shard).
+    pub(crate) fn register_seat(&self, seat: &Arc<SessionSeat>) {
+        self.core.seats.lock().unwrap().push(Arc::downgrade(seat));
+    }
+
+    /// Snapshot the live seats registered on this core (dead weak entries
+    /// are pruned in passing). No seat lock is held during the snapshot.
+    pub(crate) fn live_seats(&self) -> Vec<Arc<SessionSeat>> {
+        let mut reg = self.core.seats.lock().unwrap();
+        reg.retain(|w| w.strong_count() > 0);
+        reg.iter().filter_map(Weak::upgrade).collect()
+    }
+
+    /// This core's process-unique tag (seat ownership checks).
+    pub(crate) fn core_id(&self) -> usize {
+        self.core.id
+    }
+
+    /// The locked router (the mover plans compactions under it).
+    pub(crate) fn router_lock(&self) -> MutexGuard<'_, Router> {
+        self.core.router.lock().unwrap()
+    }
+
+    /// Place a re-homed seat: policy-chosen bank + roomiest subarray.
+    pub(crate) fn place_for_rehome(&self) -> (usize, usize) {
+        self.core.router.lock().unwrap().place_session(None)
     }
 
     pub fn n_banks(&self) -> usize {
@@ -486,15 +636,54 @@ impl PimSystem {
         self.core.router.lock().unwrap().total_load()
     }
 
-    pub(crate) fn alloc_row(&self, bank: usize, subarray: usize) -> Result<RowHandle, PimError> {
-        match self.core.router.lock().unwrap().alloc_row(bank, subarray) {
-            Some(row) => Ok(RowHandle { bank, subarray, row }),
-            None => Err(PimError::AllocExhausted { bank, subarray }),
-        }
+    /// Allocate one concrete row from a bank's slab (the seat binds it to
+    /// a logical slot).
+    pub(crate) fn alloc_concrete(&self, bank: usize, subarray: usize) -> Option<usize> {
+        self.core.router.lock().unwrap().alloc_row(bank, subarray)
     }
 
-    pub(crate) fn free_row(&self, h: &RowHandle) -> bool {
-        self.core.router.lock().unwrap().free_row(h.bank, h.subarray, h.row)
+    /// Return a concrete row to its slab.
+    pub(crate) fn free_concrete(&self, bank: usize, subarray: usize, row: usize) -> bool {
+        self.core.router.lock().unwrap().free_row(bank, subarray, row)
+    }
+
+    /// Fragmentation score over every subarray of every bank: freed holes
+    /// below the live span (0 = perfectly packed). The gauge the mover
+    /// drives down and `SystemReport::frag_before/after` snapshot.
+    pub fn fragmentation_score(&self) -> usize {
+        self.core.router.lock().unwrap().fragmentation()
+    }
+
+    /// Short-circuiting check: does any subarray score at least
+    /// `threshold`? The defrag pass's cheap front gate.
+    pub(crate) fn any_fragmented(&self, threshold: usize) -> bool {
+        self.core.router.lock().unwrap().any_fragmented(threshold)
+    }
+
+    /// Run one full compaction pass right now (any hole below a live span
+    /// qualifies), regardless of the [`SystemBuilder::defrag`] knob, and
+    /// return what it did. Safe concurrently with live traffic: every
+    /// move is fenced by its seat lock and the per-bank wire FIFO.
+    pub fn defrag_now(&self) -> MoveStats {
+        mover::defrag_pass(self, 1)
+    }
+
+    /// The post-dispatch defrag hook: one bounded background pass when the
+    /// knob is on and no other pass is running.
+    fn maybe_defrag(&self) {
+        if !self.core.defrag {
+            return;
+        }
+        if self
+            .core
+            .mover_active
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return;
+        }
+        mover::defrag_pass(self, self.core.defrag_threshold);
+        self.core.mover_active.store(false, Ordering::Release);
     }
 
     /// The hazard-checked reorder window dispatched batches are planned
@@ -503,14 +692,18 @@ impl PimSystem {
         self.core.reorder_window
     }
 
-    /// Enqueue one wire request on a bank; dispatches the batch when full.
-    pub(crate) fn submit_wire(
+    /// Queue one wire request on a bank *without* dispatching; returns the
+    /// response channel and whether the batch is now full. Client
+    /// submission paths call this under their seat lock (the mover's
+    /// re-bind fence) and dispatch the full batch after dropping it —
+    /// dispatch may trigger a defrag pass, which takes seat locks itself.
+    pub(crate) fn enqueue_wire(
         &self,
         bank: usize,
         cost: usize,
         access: Access,
         req: PimRequest,
-    ) -> Receiver<Result<PimResponse, PimError>> {
+    ) -> (Receiver<Result<PimResponse, PimError>>, bool) {
         let (tx, rx) = channel();
         self.core.router.lock().unwrap().charge(bank, cost);
         let full = {
@@ -518,13 +711,36 @@ impl PimSystem {
             b.push(Envelope { req, cost, access, merged: false, respond: tx });
             b.len() >= self.core.max_batch
         };
+        (rx, full)
+    }
+
+    /// Enqueue one wire request on a bank; dispatches the batch when full.
+    #[cfg_attr(not(test), allow(dead_code))]
+    pub(crate) fn submit_wire(
+        &self,
+        bank: usize,
+        cost: usize,
+        access: Access,
+        req: PimRequest,
+    ) -> Receiver<Result<PimResponse, PimError>> {
+        let (rx, full) = self.enqueue_wire(bank, cost, access, req);
         if full {
             self.flush_bank(bank);
         }
         rx
     }
 
-    /// Dispatch a bank's partially filled batch.
+    /// Dispatch a bank's partially filled batch, then give the background
+    /// defragmenter its between-batches slot (a no-op unless
+    /// [`SystemBuilder::defrag`] is on and a subarray crossed the
+    /// threshold).
+    pub fn flush_bank(&self, bank: usize) {
+        self.flush_bank_inner(bank);
+        self.maybe_defrag();
+    }
+
+    /// The dispatch loop without the defrag hook — the mover uses this to
+    /// push its own copies through without re-entering itself.
     ///
     /// The batcher lock is held across the worker send: draining and
     /// delivering must be atomic per bank, or two threads flushing the
@@ -533,7 +749,7 @@ impl PimSystem {
     /// FIFO that every hazard guarantee of the reorder planner builds on.
     /// (Safe: nothing takes the batcher lock while holding the router
     /// lock, and the worker channel send never blocks.)
-    pub fn flush_bank(&self, bank: usize) {
+    pub(crate) fn flush_bank_inner(&self, bank: usize) {
         loop {
             let mut batcher = self.core.batchers[bank].lock().unwrap();
             match batcher.drain() {
@@ -546,8 +762,9 @@ impl PimSystem {
     /// Flush all partially-filled batches.
     pub fn flush(&self) {
         for bank in 0..self.core.batchers.len() {
-            self.flush_bank(bank);
+            self.flush_bank_inner(bank);
         }
+        self.maybe_defrag();
     }
 
     fn dispatch(&self, bank: usize, mut batch: Batch<Envelope>) {
@@ -611,6 +828,11 @@ impl PimSystem {
             pinned_skips: 0,
             reordered: m.reordered(),
             hazard_blocked: m.hazard_blocked(),
+            moves: m.mover().moves(),
+            rows_migrated: m.mover().rows_migrated(),
+            rehomed_sessions: 0,
+            frag_before: m.mover().frag_before(),
+            frag_after: m.mover().frag_after(),
         }
     }
 
@@ -666,8 +888,14 @@ fn worker_loop(
                         }
                     }
                     if group.is_empty() {
+                        // mover copies are internal housekeeping, not
+                        // client traffic — they cost simulated time and
+                        // energy but don't count as served requests
+                        let is_move = matches!(env.req, PimRequest::CopyRows { .. });
                         let resp = execute(&mut sim, env.req, &cache, &mut memo, &mut delta);
-                        delta.requests += 1;
+                        if !is_move {
+                            delta.requests += 1;
+                        }
                         // receiver may have hung up (fire-and-forget callers)
                         let _ = env.respond.send(resp);
                     } else {
@@ -846,6 +1074,23 @@ fn execute(
             delta.macro_ops += prog.blocks().len() as u64;
             delta.replays += 1;
             Ok(PimResponse::Ran { census: *prog.census(), elided_aaps: prog.elided_aaps() })
+        }
+        PimRequest::CopyRows { subarray, shape, ops, pairs } => {
+            check_subarray(subarray)?;
+            for &(src, dst) in &pairs {
+                check_row(src)?;
+                check_row(dst)?;
+            }
+            // K row moves = one program fetch + one merged replay of the
+            // compiled single-Copy program — the mover rides the same
+            // AAP/RowClone machinery kernels use, so every move is priced
+            // (latency/energy/census) and bit-exact by construction
+            let prog = fetch_compiled(cache, sim, memo, shape, &ops);
+            if prog.n_slots() > 2 {
+                return Err(PimError::Protocol("copy program wants more than two slots"));
+            }
+            sim.copy_rows(subarray, &prog, &pairs);
+            Ok(PimResponse::Done)
         }
         #[cfg(test)]
         PimRequest::Crash => panic!("injected worker crash"),
@@ -1203,6 +1448,33 @@ mod tests {
         // freeing returns capacity
         assert!(c.free(rows.into_iter().next_back().unwrap()));
         assert!(c.alloc().is_ok());
+    }
+
+    #[test]
+    fn stale_handles_fail_after_free_and_slot_reuse() {
+        // the handle-generation invariant: a freed handle's clone can
+        // never alias the slot's next tenant, even after the slot is
+        // reissued — its stale generation makes the coordinates
+        // unrepresentable
+        let sys = SystemBuilder::new(&cfg()).banks(1).build();
+        let c = sys.client();
+        let h = c.alloc().unwrap();
+        let stale = h.clone();
+        assert!(c.free(h));
+        // use-after-free: the slot is dead
+        let err = c.read(&stale).wait().unwrap_err();
+        assert!(matches!(err, PimError::StaleHandle { slot: 0 }), "{err:?}");
+        // slot reuse bumps the generation: the stale clone still fails
+        let fresh = c.alloc().unwrap();
+        assert_ne!(stale, fresh, "reissued slot carries a new generation");
+        let err = c.write(&stale, BitRow::zeros(256)).wait().unwrap_err();
+        assert!(matches!(err, PimError::StaleHandle { slot: 0 }), "{err:?}");
+        let err = c.run(&shift(1), std::slice::from_ref(&stale)).unwrap_err();
+        assert!(matches!(err, PimError::StaleHandle { .. }), "{err:?}");
+        assert!(!c.free(stale), "stale double free rejected");
+        // the live tenant is untouched by all of it
+        assert!(c.run(&shift(1), std::slice::from_ref(&fresh)).is_ok());
+        assert!(sys.shutdown().is_clean());
     }
 
     #[test]

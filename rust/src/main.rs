@@ -7,6 +7,7 @@
 //! shiftdram workload --shifts N [--seed S]
 //! shiftdram mc [--trials N] [--backend pjrt|native] [--node 22nm]
 //! shiftdram serve --banks N --ops K [--batch B] [--channels C] [--reorder-window W]
+//!                 [--defrag] [--defrag-threshold T] [--rehome-after R]
 //! shiftdram demo [gf|aes|rs|mul|adder]
 //! ```
 
@@ -85,14 +86,29 @@ fn main() {
             let batch = opt_usize(&args, "--batch", 16);
             let channels = opt_usize(&args, "--channels", 1);
             let window = opt_usize(&args, "--reorder-window", 0);
+            let defrag = flag(&args, "--defrag");
+            let defrag_threshold = opt_usize(&args, "--defrag-threshold", 1);
+            let rehome_after = opt_usize(&args, "--rehome-after", 0);
             if channels > 1 {
-                serve_fabric(&cfg, channels, banks, ops, batch, window);
+                serve_fabric(
+                    &cfg,
+                    channels,
+                    banks,
+                    ops,
+                    batch,
+                    window,
+                    defrag,
+                    defrag_threshold,
+                    rehome_after,
+                );
                 return;
             }
             let sys = SystemBuilder::new(&cfg)
                 .banks(banks)
                 .max_batch(batch)
                 .reorder_window(window)
+                .defrag(defrag)
+                .defrag_threshold(defrag_threshold)
                 .build();
             // one session per bank; each allocs one system-placed row and
             // submits shift kernels against its handle
@@ -125,6 +141,12 @@ fn main() {
                 r.cache.batched,
                 r.amortized_compile_ns
             );
+            if defrag {
+                println!(
+                    "row mover: {} plans, {} rows migrated, frag {} -> {}",
+                    r.moves, r.rows_migrated, r.frag_before, r.frag_after
+                );
+            }
             if !r.is_clean() {
                 eprintln!("worker failures: {:?}", r.worker_failures);
                 std::process::exit(1);
@@ -144,6 +166,7 @@ fn main() {
 /// `serve --channels C`: the sharded fabric path. Unplaced shift jobs
 /// (an uneven heavy/light mix) are all homed on shard 0; idle shards pull
 /// whole kernels off its deque, and the report shows the traffic.
+#[allow(clippy::too_many_arguments)]
 fn serve_fabric(
     cfg: &DramConfig,
     channels: usize,
@@ -151,6 +174,9 @@ fn serve_fabric(
     ops: usize,
     batch: usize,
     window: usize,
+    defrag: bool,
+    defrag_threshold: usize,
+    rehome_after: usize,
 ) {
     use shiftdram::coordinator::JobSpec;
     use shiftdram::util::{BitRow, Rng};
@@ -160,6 +186,9 @@ fn serve_fabric(
         .banks(banks)
         .max_batch(batch)
         .reorder_window(window)
+        .defrag(defrag)
+        .defrag_threshold(defrag_threshold)
+        .rehome_after(rehome_after)
         .build_fabric();
     let mut rng = Rng::new(7);
     let cols = cfg.geometry.cols_per_row;
@@ -178,14 +207,16 @@ fn serve_fabric(
     let r = fabric.shutdown();
     println!(
         "{} channels x {} banks, {} jobs: makespan {:.3} us, {:.2} MOps/s aggregate, \
-         {} steals ({} pinned skips)",
+         {} steals ({} pinned skips, {} sessions re-homed, {} rows migrated)",
         r.shards.len(),
         banks,
         r.jobs,
         r.makespan_ps as f64 / 1e6,
         r.throughput_mops,
         r.steals,
-        r.pinned_skips
+        r.pinned_skips,
+        r.rehomed_sessions,
+        r.rows_migrated
     );
     for s in &r.shards {
         println!(

@@ -211,6 +211,19 @@ impl BankSim {
         }
     }
 
+    /// Multi-row copy helper behind the coordinator's row mover: replay a
+    /// compiled two-slot copy program (`PimOp::Copy { src: 0, dst: 1 }`)
+    /// across `pairs` of `(src, dst)` rows of one subarray. K moves cost
+    /// one program fetch and one merged replay — row migration is priced
+    /// and executed by exactly the machinery kernels use, so its
+    /// latency/energy/census accounting and bit-exactness come for free.
+    pub fn copy_rows(&mut self, subarray: usize, prog: &CompiledProgram, pairs: &[(usize, usize)]) {
+        let bindings: Vec<[usize; 2]> = pairs.iter().map(|&(src, dst)| [src, dst]).collect();
+        let runs: Vec<(usize, &[usize])> =
+            bindings.iter().map(|b| (subarray, b.as_slice())).collect();
+        self.run_compiled_many(prog, &runs);
+    }
+
     /// Host-side full-row write (DMA in): functional only, burst energy
     /// accounted per 64 B column write.
     pub fn host_write_row(&mut self, subarray: usize, row: usize, bits: crate::util::BitRow) {
@@ -373,6 +386,35 @@ mod tests {
                     "subarray {sa} row {row}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn copy_rows_moves_bits_and_prices_like_sequential_copies() {
+        let cfg = DramConfig::tiny_test();
+        let mut moved = BankSim::new(cfg.clone());
+        let mut seq = BankSim::new(cfg.clone());
+        let mut rng = Rng::new(41);
+        let cols = cfg.geometry.cols_per_row;
+        let images: Vec<BitRow> = (0..3).map(|_| BitRow::random(cols, &mut rng)).collect();
+        for sim in [&mut moved, &mut seq] {
+            for (i, bits) in images.iter().enumerate() {
+                sim.bank().subarray(0).write_row(8 + i, bits.clone());
+            }
+        }
+        let prog =
+            CompiledProgram::compile(&[PimOp::Copy { src: 0, dst: 1 }], &cfg);
+        // compact rows 8..11 down to 0..3 in one helper call…
+        moved.copy_rows(0, &prog, &[(8, 0), (9, 1), (10, 2)]);
+        // …versus three explicit replays
+        for (i, _) in images.iter().enumerate() {
+            seq.run_compiled(0, &prog, Some(&[8 + i, i]));
+        }
+        assert_eq!(moved.now_ps, seq.now_ps);
+        assert_eq!(moved.counts, seq.counts);
+        assert_eq!(moved.energy.active_pj, seq.energy.active_pj);
+        for (i, bits) in images.iter().enumerate() {
+            assert_eq!(moved.bank().subarray(0).read_row(i), bits, "row {i} moved intact");
         }
     }
 

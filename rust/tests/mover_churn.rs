@@ -1,0 +1,271 @@
+//! Churn differential harness for the row mover.
+//!
+//! Migration is semantics-risky in exactly the way reordering was, so it
+//! gets the same style of proof: per seeded case, an alloc/free/submit
+//! storm (multiple sessions, interleaved ownership, handle tables with
+//! two-row kernels) runs once on a system with the defragmenter **off**
+//! and once with it **on** (threshold 1, so ordinary flush traffic
+//! triggers passes mid-storm). Every ticket result and every final row
+//! read-back must agree exactly — the mover's re-binds are invisible —
+//! while the migrating system ends with a strictly lower fragmentation
+//! score whenever there was any fragmentation to remove.
+
+use shiftdram::config::DramConfig;
+use shiftdram::coordinator::{
+    Kernel, PimError, Receipt, RowHandle, SystemBuilder, SystemReport, Ticket,
+};
+use shiftdram::util::{BitRow, Rng, ShiftDir};
+
+/// tiny_test geometry: 256-bit rows, 32 rows per subarray.
+const COLS: usize = 256;
+const SEEDS: u64 = 48;
+/// live handles per session stay below this so allocation can never
+/// systematically exhaust a subarray (3 sessions × 10 ≤ 32 even when the
+/// router stacks every session on one subarray)
+const MAX_LIVE: usize = 10;
+
+#[derive(Clone, Debug)]
+enum Action {
+    /// allocate one handle and load it with `bits`
+    Alloc { session: usize, bits: BitRow },
+    /// free the `idx`-th live handle
+    Free { session: usize, idx: usize },
+    /// read the `idx`-th live handle
+    Read { session: usize, idx: usize },
+    /// run a one-row shift kernel on the `idx`-th live handle
+    Shift { session: usize, idx: usize, n: usize },
+    /// run XOR(a, b) -> b over two live handles (may alias)
+    Xor { session: usize, a: usize, b: usize },
+}
+
+#[derive(Clone, Debug)]
+struct Case {
+    banks: usize,
+    max_batch: usize,
+    sessions: usize,
+    actions: Vec<Action>,
+}
+
+/// Generate one storm. A side model of per-session live-handle counts
+/// keeps every index valid, so the same action list replays identically
+/// on both systems (allocation success is layout-independent: the mover
+/// changes *where* rows live, never *how many* are free).
+fn gen_case(seed: u64) -> Case {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(19));
+    let banks = 1 + rng.below(2);
+    let max_batch = [1usize, 2, 4, 8][rng.below(4)];
+    let sessions = 2 + rng.below(2);
+    let mut live = vec![0usize; sessions];
+    let mut actions = Vec::new();
+    // seed every session with a couple of rows so the storm has targets
+    for session in 0..sessions {
+        for _ in 0..2 {
+            actions.push(Action::Alloc { session, bits: BitRow::random(COLS, &mut rng) });
+            live[session] += 1;
+        }
+    }
+    for _ in 0..60 + rng.below(60) {
+        let session = rng.below(sessions);
+        match rng.below(10) {
+            0..=2 => {
+                if live[session] < MAX_LIVE {
+                    actions.push(Action::Alloc {
+                        session,
+                        bits: BitRow::random(COLS, &mut rng),
+                    });
+                    live[session] += 1;
+                }
+            }
+            3..=4 => {
+                if live[session] > 0 {
+                    actions.push(Action::Free { session, idx: rng.below(live[session]) });
+                    live[session] -= 1;
+                }
+            }
+            5 => {
+                if live[session] > 0 {
+                    actions.push(Action::Read { session, idx: rng.below(live[session]) });
+                }
+            }
+            6..=8 => {
+                if live[session] > 0 {
+                    actions.push(Action::Shift {
+                        session,
+                        idx: rng.below(live[session]),
+                        n: 1 + rng.below(3),
+                    });
+                }
+            }
+            _ => {
+                if live[session] > 0 {
+                    actions.push(Action::Xor {
+                        session,
+                        a: rng.below(live[session]),
+                        b: rng.below(live[session]),
+                    });
+                }
+            }
+        }
+    }
+    Case { banks, max_batch, sessions, actions }
+}
+
+/// One ticket's decoded outcome — everything a client can observe.
+#[derive(Debug, PartialEq)]
+enum TicketResult {
+    Wrote(Result<(), PimError>),
+    Freed(bool),
+    Row(Result<BitRow, PimError>),
+    Ran(Result<Receipt, PimError>),
+}
+
+enum Pending {
+    Write(Ticket<()>),
+    Freed(bool),
+    Read(Ticket<BitRow>),
+    Run(Ticket<Receipt>),
+}
+
+/// Replay the case; returns (ticket results, final row images, final
+/// fragmentation score, report).
+fn run_case(
+    case: &Case,
+    defrag: bool,
+) -> (Vec<TicketResult>, Vec<Vec<BitRow>>, usize, SystemReport) {
+    let sys = SystemBuilder::new(&DramConfig::tiny_test())
+        .banks(case.banks)
+        .max_batch(case.max_batch)
+        .defrag(defrag)
+        .defrag_threshold(1)
+        .build();
+    let clients: Vec<_> = (0..case.sessions).map(|_| sys.client()).collect();
+    let mut handles: Vec<Vec<RowHandle>> = vec![Vec::new(); case.sessions];
+    let xor = Kernel::op(shiftdram::pim::PimOp::Xor { a: 0, b: 1, dst: 1 });
+    let mut pending = Vec::with_capacity(case.actions.len());
+    for action in &case.actions {
+        match action {
+            Action::Alloc { session, bits } => {
+                let h = clients[*session].alloc().expect("storm stays under capacity");
+                pending.push(Pending::Write(clients[*session].write(&h, bits.clone())));
+                handles[*session].push(h);
+            }
+            Action::Free { session, idx } => {
+                let h = handles[*session].swap_remove(*idx);
+                pending.push(Pending::Freed(clients[*session].free(h)));
+            }
+            Action::Read { session, idx } => {
+                pending.push(Pending::Read(clients[*session].read(&handles[*session][*idx])));
+            }
+            Action::Shift { session, idx, n } => {
+                let k = Kernel::shift_by(*n, ShiftDir::Right);
+                let row = handles[*session][*idx].clone();
+                pending.push(Pending::Run(clients[*session].submit(&k, &[row])));
+            }
+            Action::Xor { session, a, b } => {
+                let table =
+                    [handles[*session][*a].clone(), handles[*session][*b].clone()];
+                pending.push(Pending::Run(clients[*session].submit(&xor, &table)));
+            }
+        }
+    }
+    sys.flush();
+    let results: Vec<TicketResult> = pending
+        .into_iter()
+        .map(|p| match p {
+            Pending::Write(t) => TicketResult::Wrote(t.wait()),
+            Pending::Freed(ok) => TicketResult::Freed(ok),
+            Pending::Read(t) => TicketResult::Row(t.wait()),
+            Pending::Run(t) => TicketResult::Ran(t.wait()),
+        })
+        .collect();
+    // a migrating system also gets a final mop-up pass, so the score we
+    // compare reflects the mover having actually done its job
+    if defrag {
+        sys.defrag_now();
+    }
+    let finals: Vec<Vec<BitRow>> = clients
+        .iter()
+        .zip(&handles)
+        .map(|(c, hs)| hs.iter().map(|h| c.read_now(h).expect("final read")).collect())
+        .collect();
+    let frag = sys.fragmentation_score();
+    (results, finals, frag, sys.shutdown())
+}
+
+#[test]
+fn churn_differential_migration_is_invisible_and_defragments() {
+    let mut fragged_seeds = 0u64;
+    let mut migrated_rows = 0u64;
+    let mut frag_off_total = 0usize;
+    let mut frag_on_total = 0usize;
+    for seed in 0..SEEDS {
+        let case = gen_case(seed);
+        let (off_results, off_rows, frag_off, off) = run_case(&case, false);
+        let (on_results, on_rows, frag_on, on) = run_case(&case, true);
+        assert_eq!(off_results.len(), on_results.len());
+        for (i, (a, b)) in off_results.iter().zip(&on_results).enumerate() {
+            assert_eq!(a, b, "seed {seed}: ticket {i} diverged under migration");
+        }
+        assert_eq!(off_rows, on_rows, "seed {seed}: final row images diverged");
+        assert_eq!(off.requests, on.requests, "seed {seed}: moves must not count as requests");
+        assert_eq!(off.kernels, on.kernels, "seed {seed}");
+        assert_eq!(off.moves, 0, "seed {seed}: the mover never runs when off");
+        if frag_off > 0 {
+            fragged_seeds += 1;
+            assert!(
+                frag_on < frag_off,
+                "seed {seed}: migration must strictly lower the score ({frag_on} vs {frag_off})"
+            );
+        }
+        assert!(off.is_clean() && on.is_clean(), "seed {seed}");
+        migrated_rows += on.rows_migrated;
+        frag_off_total += frag_off;
+        frag_on_total += frag_on;
+    }
+    assert!(
+        fragged_seeds >= SEEDS / 2,
+        "the corpus must actually fragment (only {fragged_seeds}/{SEEDS} seeds did)"
+    );
+    assert!(migrated_rows > 0, "the corpus must exercise live migration");
+    assert!(
+        frag_on_total < frag_off_total,
+        "aggregate fragmentation must drop: {frag_on_total} vs {frag_off_total}"
+    );
+}
+
+#[test]
+fn defrag_now_packs_interleaved_sessions_to_zero() {
+    // two sessions interleave allocations on one bank, then one frees
+    // everything: compaction must cross session boundaries (the survivor's
+    // rows re-bind) and reach a perfectly packed slab
+    let sys = SystemBuilder::new(&DramConfig::tiny_test()).banks(1).build();
+    let a = sys.client_on(0);
+    let b = sys.client_on(0);
+    let mut rng = Rng::new(5);
+    let mut a_rows = Vec::new();
+    let mut b_rows = Vec::new();
+    let mut b_images = Vec::new();
+    for _ in 0..6 {
+        a_rows.push(a.alloc().expect("row"));
+        let h = b.alloc().expect("row");
+        let bits = BitRow::random(COLS, &mut rng);
+        b.write_now(&h, bits.clone()).expect("write");
+        b_rows.push(h);
+        b_images.push(bits);
+    }
+    // drop every one of A's rows — if A and B share a subarray the slab
+    // is now a comb; if the router split them, both subarrays are packed
+    for h in a_rows {
+        assert!(a.free(h));
+    }
+    let before = sys.fragmentation_score();
+    let stats = sys.defrag_now();
+    assert_eq!(sys.fragmentation_score(), 0, "packed after the pass ({stats:?})");
+    if before > 0 {
+        assert!(stats.rows_moved > 0, "holes existed, so rows must have moved");
+    }
+    for (h, bits) in b_rows.iter().zip(&b_images) {
+        assert_eq!(&b.read_now(h).expect("read"), bits, "B's bits follow the re-bind");
+    }
+    assert!(sys.shutdown().is_clean());
+}
