@@ -1,0 +1,150 @@
+//! Bench: the kernel compiler's pass pipeline — opt level 0 (the paper's
+//! literal per-op lowering) vs level 2 (constant folding, scratch-aware
+//! DCE, liveness-driven scratch reuse, cost-based lowering selection,
+//! cross-kernel chunk sharing) across the real app kernel shapes.
+//!
+//! Reports, per shape: lowered commands/kernel, total row slots/kernel,
+//! and declared-scratch slots/kernel at both levels, plus compile
+//! wall-clock and resident cache bytes — and asserts the pipeline's
+//! acceptance floor (>=10% fewer commands and >=20% fewer scratch slots
+//! on the multiplier and AES MixColumns kernels).
+//!
+//! Emits `BENCH_compile.json` (machine-readable measurements + metrics)
+//! via `util::benchx::JsonReport`; CI uploads it as an artifact.
+
+use shiftdram::apps::adder::build_kogge_stone_add;
+use shiftdram::apps::aes::build_mix_columns_with;
+use shiftdram::apps::elements::ProgramSketch;
+use shiftdram::apps::gf::build_gf_mul;
+use shiftdram::apps::multiplier::build_shift_and_add_mul;
+use shiftdram::apps::reed_solomon::RsEncoder;
+use shiftdram::config::DramConfig;
+use shiftdram::pim::compile::passes::optimize_kernel;
+use shiftdram::pim::{canonicalize, CompiledProgram, OptLevel, PimOp, ProgramCache};
+use shiftdram::util::benchx::{Bench, JsonReport};
+
+/// One recorded shape: raw ops + declared scratch rows.
+struct Shape {
+    name: &'static str,
+    ops: Vec<PimOp>,
+    scratch: Vec<usize>,
+}
+
+fn record(name: &'static str, build: impl FnOnce(&mut ProgramSketch)) -> Shape {
+    let mut sk = ProgramSketch::new(8);
+    build(&mut sk);
+    let (ops, scratch) = sk.into_parts();
+    Shape { name, ops, scratch }
+}
+
+fn shapes() -> Vec<Shape> {
+    vec![
+        record("adder_ks", |t| build_kogge_stone_add(t, 0, 1, 2)),
+        record("multiplier", |t| build_shift_and_add_mul(t, 0, 1, 2)),
+        record("gf_mul", |t| build_gf_mul(t, 0, 1, 2)),
+        record("aes_mix_columns", |t| build_mix_columns_with(t, [2, 3, 1, 1])),
+        record("rs_encode", |t| RsEncoder::new(7, 3).build_encode(t)),
+    ]
+}
+
+/// Per-shape, per-level stats: (commands, total slots, scratch slots).
+fn measure(shape: &Shape, cfg: &DramConfig) -> ((usize, usize, usize), (usize, usize, usize)) {
+    let fp = cfg.fingerprint();
+    let (canon, slots) = canonicalize(&shape.ops);
+    let scratch0 = slots.iter().filter(|r| shape.scratch.contains(r)).count();
+    let p0 = CompiledProgram::compile_opts(&canon, cfg, fp, OptLevel::O0);
+    let o0 = (p0.commands().len(), slots.len(), scratch0);
+
+    let tuned = optimize_kernel(canon, slots, &shape.scratch);
+    let p2 = CompiledProgram::compile_opts(&tuned.ops, cfg, fp, OptLevel::O2);
+    let o2 = (
+        p2.commands().len(),
+        tuned.slots.len(),
+        scratch0.saturating_sub(tuned.rows_saved),
+    );
+    (o0, o2)
+}
+
+fn main() {
+    let cfg = DramConfig::ddr3_1333_4gb();
+    let mut jr = JsonReport::new("compile");
+    println!("=== kernel compiler pass pipeline: opt level 0 vs 2 ===");
+
+    for shape in &shapes() {
+        let ((c0, s0, sc0), (c2, s2, sc2)) = measure(shape, &cfg);
+        println!(
+            "{:>16}: {c0} -> {c2} commands, {s0} -> {s2} slots ({sc0} -> {sc2} scratch)",
+            shape.name
+        );
+        assert!(c2 <= c0, "{}: O2 grew the command stream", shape.name);
+        assert!(s2 <= s0, "{}: O2 grew the slot count", shape.name);
+        jr.metric(&format!("{}_cmds_o0", shape.name), c0 as f64);
+        jr.metric(&format!("{}_cmds_o2", shape.name), c2 as f64);
+        jr.metric(&format!("{}_slots_o0", shape.name), s0 as f64);
+        jr.metric(&format!("{}_slots_o2", shape.name), s2 as f64);
+        jr.metric(&format!("{}_scratch_o0", shape.name), sc0 as f64);
+        jr.metric(&format!("{}_scratch_o2", shape.name), sc2 as f64);
+        // acceptance floor on the two Xor-heavy kernels
+        if shape.name == "multiplier" || shape.name == "aes_mix_columns" {
+            assert!(
+                (c2 as f64) <= 0.9 * c0 as f64,
+                "{}: pipeline must cut >=10% of commands ({c2} vs {c0})",
+                shape.name
+            );
+            assert!(
+                (sc2 as f64) <= 0.8 * sc0 as f64,
+                "{}: pipeline must merge >=20% of scratch slots ({sc2} vs {sc0})",
+                shape.name
+            );
+        }
+    }
+
+    // compile wall-clock: the whole shape set, level 0 vs level 2
+    // (level 2 includes the record-time passes, as the serving path does)
+    let b = Bench::quick();
+    let set = shapes();
+    let fp = cfg.fingerprint();
+    jr.push(&b.run_elems("compile/o0", set.len() as u64, || {
+        set.iter()
+            .map(|s| {
+                let (canon, _) = canonicalize(&s.ops);
+                CompiledProgram::compile_opts(&canon, &cfg, fp, OptLevel::O0)
+                    .commands()
+                    .len()
+            })
+            .sum::<usize>()
+    }));
+    jr.push(&b.run_elems("compile/o2", set.len() as u64, || {
+        set.iter()
+            .map(|s| {
+                let (canon, slots) = canonicalize(&s.ops);
+                let tuned = optimize_kernel(canon, slots, &s.scratch);
+                CompiledProgram::compile_opts(&tuned.ops, &cfg, fp, OptLevel::O2)
+                    .commands()
+                    .len()
+            })
+            .sum::<usize>()
+    }));
+
+    // resident cache bytes with the full shape set compiled at each level
+    // (the level-2 cache's miss path also exercises chunk sharing)
+    let cache0 = ProgramCache::with_opt(64, OptLevel::O0);
+    let cache2 = ProgramCache::with_opt(64, OptLevel::O2);
+    for s in &set {
+        let (canon, slots) = canonicalize(&s.ops);
+        let _ = cache0.get_or_compile_ops(&canon, &cfg);
+        let tuned = optimize_kernel(canon, slots, &s.scratch);
+        let _ = cache2.get_or_compile_ops(&tuned.ops, &cfg);
+    }
+    let (bytes0, bytes2) = (cache0.approx_bytes(), cache2.approx_bytes());
+    let shared = cache2.stats().shared_blocks;
+    println!(
+        "cache bytes: {bytes0} at O0 -> {bytes2} at O2 ({shared} chunk-shared blocks)"
+    );
+    jr.metric("cache_bytes_o0", bytes0 as f64);
+    jr.metric("cache_bytes_o2", bytes2 as f64);
+    jr.metric("shared_blocks_o2", shared as f64);
+
+    let path = jr.write().expect("write bench json");
+    println!("\nwrote {}", path.display());
+}

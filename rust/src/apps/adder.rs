@@ -74,6 +74,9 @@ pub fn build_ripple_add(
     row_out: usize,
 ) {
     let w = tape.width();
+    for t in [T_G, T_P, T_C, T_X] {
+        tape.scratch(t);
+    }
     tape.op(PimOp::And { a: row_a, b: row_b, dst: T_G });
     tape.op(PimOp::Xor { a: row_a, b: row_b, dst: T_P });
     // c = shift_up(G); then W-1 refinement rounds
@@ -106,6 +109,9 @@ pub fn build_kogge_stone_add(
 ) {
     let w = tape.width();
     assert!(w.is_power_of_two(), "Kogge-Stone wants power-of-two widths");
+    for t in [T_G, T_P, T_C, T_S, T_X] {
+        tape.scratch(t);
+    }
     tape.op(PimOp::And { a: row_a, b: row_b, dst: T_G });
     tape.op(PimOp::Xor { a: row_a, b: row_b, dst: T_P });
     // keep the half-sum: S = P (G/P get consumed by the prefix rounds)

@@ -79,7 +79,16 @@ fn mix_columns_with(ctx: &mut ElementCtx, coef: [u8; 4]) {
     ctx.run_kernel("aes.mix_columns", &[packed], |t| build_mix_columns_with(t, coef));
 }
 
-fn build_mix_columns_with(tape: &mut impl PimTape, coef: [u8; 4]) {
+/// Emit the MixColumns schedule for coefficient rows `coef` onto a tape
+/// (public like the other app builders, so it composes into larger
+/// kernels and the compile-pipeline bench can record it directly).
+pub fn build_mix_columns_with(tape: &mut impl PimTape, coef: [u8; 4]) {
+    // mix temps and the accumulator are dead once the staged outputs are
+    // copied back into the state rows (the GF layer declares its own temps)
+    for t in T_MIX {
+        tape.scratch(t);
+    }
+    tape.scratch(T_ACC);
     for col in 0..4 {
         let s = |r: usize| STATE_BASE + 4 * col + r;
         for out_r in 0..4 {

@@ -39,7 +39,7 @@ use std::sync::Arc;
 
 use crate::config::DramConfig;
 use crate::coordinator::{Kernel, PimClient, RowHandle, SystemBuilder};
-use crate::pim::compile::{CommandCensus, ProgramCache};
+use crate::pim::compile::{CommandCensus, OptLevel, ProgramCache};
 use crate::pim::PimOp;
 use crate::util::{BitRow, ShiftDir};
 
@@ -76,6 +76,9 @@ pub struct ElementCtx {
     /// `aaps + elided_aaps` recovers the unfused calibration totals
     pub elided_aaps: usize,
     cols: usize,
+    /// opt level the context's cache compiles at — kernel recordings
+    /// follow it so cache keys and compiled programs always agree
+    opt: OptLevel,
     client: PimClient,
     rows: Vec<RowHandle>,
 }
@@ -109,10 +112,11 @@ impl ElementCtx {
     /// Context with an explicit pricing config and kernel cache. The
     /// config's timing/energy model is kept; its geometry is replaced via
     /// [`DramConfig::single_channel`] — a single bank of one `rows × cols`
-    /// subarray sized to this context. Fusion policy follows the cache
-    /// ([`ProgramCache::is_fused`]): the process-wide default is fused,
-    /// and passing an unfused cache serves the paper's literal per-op
-    /// lowering.
+    /// subarray sized to this context. The opt level follows the cache
+    /// ([`ProgramCache::opt_level`]): the process-wide default is level 1
+    /// (fused); a level-0 cache serves the paper's literal per-op
+    /// lowering, a level-2 cache adds the full pass pipeline
+    /// ([`crate::pim::compile::passes`]).
     pub fn with_config(
         rows: usize,
         cols: usize,
@@ -122,17 +126,27 @@ impl ElementCtx {
     ) -> Self {
         assert!(cols % width == 0, "row must pack whole elements");
         let cfg = cfg.single_channel(rows, cols);
-        let fused = cache.is_fused();
+        let opt = cache.opt_level();
         let sys = SystemBuilder::new(&cfg)
             .banks(1)
             .shared_cache(cache)
-            .fuse_aap(fused)
+            .opt_level(opt)
             .build();
         let client = sys.client();
         let handles = client
             .alloc_rows(rows)
             .expect("context rows fit the freshly built subarray");
-        ElementCtx { width, aaps: 0, tras: 0, dras: 0, elided_aaps: 0, cols, client, rows: handles }
+        ElementCtx {
+            width,
+            aaps: 0,
+            tras: 0,
+            dras: 0,
+            elided_aaps: 0,
+            cols,
+            opt,
+            client,
+            rows: handles,
+        }
     }
 
     pub fn cols(&self) -> usize {
@@ -190,7 +204,7 @@ impl ElementCtx {
         let mut key_params = Vec::with_capacity(params.len() + 1);
         key_params.push(self.cols as u64);
         key_params.extend_from_slice(params);
-        let kernel = Kernel::named(name, self.width, &key_params, build);
+        let kernel = Kernel::named_opt(name, self.width, &key_params, self.opt, build);
         self.run(&kernel);
     }
 

@@ -85,6 +85,9 @@ pub fn xtime(ctx: &mut ElementCtx, src: usize, dst: usize) {
 
 /// Emit the xtime schedule onto a tape.
 pub fn build_xtime(tape: &mut impl PimTape, src: usize, dst: usize) {
+    for t in [T_SH, T_CARRY, T_RED, T_SPREAD] {
+        tape.scratch(t);
+    }
     // carry = bytes whose bit 7 is set, flag at bit 0
     tape.op(PimOp::And { a: src, b: M_MSB, dst: T_CARRY });
     shift_any(tape, T_CARRY, T_CARRY, Dir::Down, 7);
@@ -108,6 +111,8 @@ pub fn gf_mul_const(ctx: &mut ElementCtx, src: usize, dst: usize, k: u8) {
 /// Emit the constant-multiply schedule onto a tape.
 pub fn build_gf_mul_const(tape: &mut impl PimTape, src: usize, dst: usize, k: u8) {
     assert!(k > 0);
+    tape.scratch(T_ACC);
+    tape.scratch(T_AA);
     // Russian peasant with the constant known at build time:
     // acc = Σ_(bits of k) xtime^i(src)
     tape.op(PimOp::SetZero { dst: T_ACC });
@@ -138,6 +143,9 @@ pub fn gf_mul(ctx: &mut ElementCtx, row_a: usize, row_b: usize, dst: usize) {
 
 /// Emit the full-multiply schedule onto a tape.
 pub fn build_gf_mul(tape: &mut impl PimTape, row_a: usize, row_b: usize, dst: usize) {
+    for t in [T_ACC, T_AA, T_BB, T_LSB, T_COND] {
+        tape.scratch(t);
+    }
     tape.op(PimOp::SetZero { dst: T_ACC });
     tape.op(PimOp::Copy { src: row_a, dst: T_AA });
     tape.op(PimOp::Copy { src: row_b, dst: T_BB });
@@ -257,9 +265,21 @@ mod tests {
     #[test]
     fn cached_and_eager_paths_agree() {
         // the same kernel body through the recording tape (cached,
-        // semantic executor) and the eager tape (per-command executor)
-        let mut cached = setup();
-        let mut eager = setup();
+        // semantic executor) and the eager tape (per-command executor).
+        // Pinned to opt level 1: the elided-AAP reconciliation below is a
+        // property of the fused lowering alone — level 2 also rewrites the
+        // op stream, which the per-op eager path can't mirror.
+        use crate::config::DramConfig;
+        use crate::pim::compile::ProgramCache;
+        use std::sync::Arc;
+        let o1 = |cache: Arc<ProgramCache>| {
+            let mut c =
+                ElementCtx::with_config(40, 256, 8, DramConfig::ddr3_1333_4gb(), cache);
+            install_gf_masks(&mut c);
+            c
+        };
+        let mut cached = o1(Arc::new(ProgramCache::new_fused(64)));
+        let mut eager = o1(Arc::new(ProgramCache::new_fused(64)));
         let mut rng = Rng::new(17);
         let a: Vec<u64> = (0..32).map(|_| rng.below(256) as u64).collect();
         let b: Vec<u64> = (0..32).map(|_| rng.below(256) as u64).collect();

@@ -61,6 +61,12 @@ pub fn build_shift_and_add_mul(
     row_out: usize,
 ) {
     let w = tape.width();
+    // the multiplier temps and the inlined adder's temps (3..=7) are all
+    // dead after the kernel — declared so the opt-level-2 passes can
+    // merge their live ranges
+    for t in [T_ACC, T_SHA, T_B, T_BIT, T_BCAST, T_PARTIAL] {
+        tape.scratch(t);
+    }
     tape.op(PimOp::SetZero { dst: T_ACC });
     tape.op(PimOp::Copy { src: row_a, dst: T_SHA });
     tape.op(PimOp::Copy { src: row_b, dst: T_B });

@@ -96,9 +96,14 @@ impl RsEncoder {
         );
     }
 
-    /// Emit the LFSR encode schedule onto a tape.
-    fn build_encode(&self, tape: &mut impl PimTape) {
+    /// Emit the LFSR encode schedule onto a tape (public like the other
+    /// app builders, so it composes and benches can record it directly).
+    pub fn build_encode(&self, tape: &mut impl PimTape) {
         let np = self.n_parity;
+        // feedback/product rows are dead once the parity rows are final
+        // (the syndrome pass does NOT declare T_MUL — hosts read it back)
+        tape.scratch(T_FB);
+        tape.scratch(T_MUL);
         for j in 0..np {
             tape.op(PimOp::SetZero { dst: PAR_BASE + j });
         }

@@ -43,7 +43,8 @@ use std::sync::{Arc, Mutex};
 
 use crate::coordinator::reorder::Access;
 use crate::coordinator::system::{PimRequest, PimResponse, PimSystem};
-use crate::pim::compile::{canonicalize, CommandCensus, ProgramShape};
+use crate::pim::compile::passes::optimize_kernel;
+use crate::pim::compile::{canonicalize, CommandCensus, OptLevel, ProgramShape};
 use crate::pim::{PimOp, ProgramSketch, RowFootprint};
 use crate::util::{BitRow, ShiftDir};
 
@@ -408,12 +409,26 @@ struct KernelInner {
     /// handle table into the concrete footprint the hazard-checked
     /// reorderer ([`crate::coordinator::reorder`]) plans with
     footprint: RowFootprint,
+    /// scratch rows the opt-level-2 record-time passes merged away (0
+    /// below O2 or when the kernel declared no scratch rows)
+    rows_saved: usize,
 }
 
 impl Kernel {
-    fn build(shape: Option<(&'static str, Vec<u64>)>, raw_ops: &[PimOp]) -> Kernel {
+    fn build(
+        shape: Option<(&'static str, Vec<u64>)>,
+        raw_ops: &[PimOp],
+        scratch: &[usize],
+        opt: OptLevel,
+    ) -> Kernel {
         let (canonical, slots) = canonicalize(raw_ops);
-        let ops = Arc::new(canonical);
+        let (ops, slots, rows_saved) = if opt >= OptLevel::O2 {
+            let tuned = optimize_kernel(canonical, slots, scratch);
+            (tuned.ops, tuned.slots, tuned.rows_saved)
+        } else {
+            (canonical, slots, 0)
+        };
+        let ops = Arc::new(ops);
         let shape = match shape {
             Some((name, params)) => ProgramShape::Kernel { name, params },
             None => ProgramShape::Ops(ops.clone()),
@@ -421,39 +436,72 @@ impl Kernel {
         let n_rows = slots.iter().map(|&r| r + 1).max().unwrap_or(0);
         let cost = ops.iter().map(|op| op.lower().len()).sum::<usize>().max(1);
         let footprint = RowFootprint::of_ops(&ops);
-        Kernel { inner: Arc::new(KernelInner { shape, ops, slots, n_rows, cost, footprint }) }
+        Kernel {
+            inner: Arc::new(KernelInner { shape, ops, slots, n_rows, cost, footprint, rows_saved }),
+        }
     }
 
     /// Record an anonymous kernel: the builder emits macro-ops onto a
     /// fresh tape; the canonical op sequence itself keys the program
-    /// cache.
+    /// cache. Records at the process-default opt level (`PIM_OPT_LEVEL`).
     pub fn record(width: usize, build: impl FnOnce(&mut ProgramSketch)) -> Kernel {
+        Self::record_opt(width, OptLevel::from_env(), build)
+    }
+
+    /// [`Kernel::record`] at an explicit opt level. At [`OptLevel::O2`]
+    /// the record-time passes (constant folding, dead-code elimination,
+    /// liveness-driven scratch-row reuse over rows the builder declared
+    /// via [`crate::pim::PimTape::scratch`]) rewrite the canonical ops
+    /// before they are sealed into the kernel.
+    pub fn record_opt(
+        width: usize,
+        opt: OptLevel,
+        build: impl FnOnce(&mut ProgramSketch),
+    ) -> Kernel {
         let mut sketch = ProgramSketch::new(width);
         build(&mut sketch);
-        Self::build(None, sketch.ops())
+        let (ops, scratch) = sketch.into_parts();
+        Self::build(None, &ops, &scratch, opt)
     }
 
     /// Record a named kernel. `(name, width, params)` key the program
     /// cache — `params` must pin down everything the builder's op stream
     /// depends on besides `width` (operand count, constants, distances),
-    /// exactly the contract app kernels already follow.
+    /// exactly the contract app kernels already follow. Records at the
+    /// process-default opt level (`PIM_OPT_LEVEL`).
     pub fn named(
         name: &'static str,
         width: usize,
         params: &[u64],
         build: impl FnOnce(&mut ProgramSketch),
     ) -> Kernel {
-        let mut sketch = ProgramSketch::new(width);
-        build(&mut sketch);
-        let mut key = Vec::with_capacity(params.len() + 1);
-        key.push(width as u64);
-        key.extend_from_slice(params);
-        Self::build(Some((name, key)), sketch.ops())
+        Self::named_opt(name, width, params, OptLevel::from_env(), build)
     }
 
-    /// A kernel from a raw macro-op sequence.
+    /// [`Kernel::named`] at an explicit opt level. The level is folded
+    /// into the cache key, so kernels recorded at different levels never
+    /// alias each other's compiled programs.
+    pub fn named_opt(
+        name: &'static str,
+        width: usize,
+        params: &[u64],
+        opt: OptLevel,
+        build: impl FnOnce(&mut ProgramSketch),
+    ) -> Kernel {
+        let mut sketch = ProgramSketch::new(width);
+        build(&mut sketch);
+        let mut key = Vec::with_capacity(params.len() + 2);
+        key.push(width as u64);
+        key.extend_from_slice(params);
+        key.push(opt.index() as u64);
+        let (ops, scratch) = sketch.into_parts();
+        Self::build(Some((name, key)), &ops, &scratch, opt)
+    }
+
+    /// A kernel from a raw macro-op sequence. No rows are scratch, so the
+    /// record-time passes leave every row's final value observable.
     pub fn from_ops(ops: &[PimOp]) -> Kernel {
-        Self::build(None, ops)
+        Self::build(None, ops, &[], OptLevel::from_env())
     }
 
     /// A single-op kernel.
@@ -489,7 +537,11 @@ impl Kernel {
         &self.inner.ops
     }
 
-    pub(crate) fn slots(&self) -> &[usize] {
+    /// Slot → recording-row binding template: `slots()[i]` is the
+    /// recording row canonical slot `i` stands for. Its length is the
+    /// kernel's distinct-row count — the opt-level-2 scratch-reuse pass
+    /// shrinks it by [`Kernel::rows_saved`].
+    pub fn slots(&self) -> &[usize] {
         &self.inner.slots
     }
 
@@ -497,6 +549,12 @@ impl Kernel {
     /// reads and writes (see [`RowFootprint`]).
     pub fn footprint(&self) -> &RowFootprint {
         &self.inner.footprint
+    }
+
+    /// How many declared-scratch rows the opt-level-2 record-time passes
+    /// merged away (0 below [`OptLevel::O2`] or with no scratch rows).
+    pub fn rows_saved(&self) -> usize {
+        self.inner.rows_saved
     }
 }
 
@@ -660,6 +718,9 @@ impl PimClient {
         };
         match outcome {
             Ok((sys, bank, rx, full)) => {
+                if kernel.rows_saved() > 0 {
+                    sys.record_rows_saved(kernel.rows_saved() as u64);
+                }
                 if full {
                     sys.flush_bank(bank);
                 }

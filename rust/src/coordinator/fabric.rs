@@ -907,6 +907,8 @@ impl PimFabric {
                 cache.batched += s.batched;
                 cache.evictions += s.evictions;
                 cache.compile_ns += s.compile_ns;
+                cache.shared_blocks += s.shared_blocks;
+                cache.rows_saved += s.rows_saved;
             }
         }
 
@@ -934,6 +936,8 @@ impl PimFabric {
             cache,
             cache_hit_rate: cache.hit_rate(),
             amortized_compile_ns: cache.amortized_compile_ns(),
+            shared_blocks: cache.shared_blocks,
+            scratch_rows_saved: cache.rows_saved,
             worker_failures: failures,
             jobs: counters.jobs_total(),
             steals: counters.steals(),

@@ -150,6 +150,18 @@ impl Metrics {
         self.cache_stats().map_or(0.0, |s| s.amortized_compile_ns())
     }
 
+    /// Macro-ops whose lowering the compile layer served from its
+    /// cross-kernel subprogram memo (0 when no cache is attached).
+    pub fn shared_blocks(&self) -> u64 {
+        self.cache_stats().map_or(0, |s| s.shared_blocks)
+    }
+
+    /// Declared-scratch rows the record-time kernel passes merged away
+    /// (0 when no cache is attached).
+    pub fn scratch_rows_saved(&self) -> u64 {
+        self.cache_stats().map_or(0, |s| s.rows_saved)
+    }
+
     pub fn n_banks(&self) -> usize {
         self.banks.len()
     }

@@ -48,7 +48,7 @@ use crate::coordinator::mover::{self, MoveStats};
 use crate::coordinator::reorder::{self, Access, Reorderable};
 use crate::coordinator::router::{Placement, Router};
 use crate::dram::address::BankId;
-use crate::pim::compile::{CacheStats, CompiledProgram, ProgramCache, ProgramShape};
+use crate::pim::compile::{CacheStats, CompiledProgram, OptLevel, ProgramCache, ProgramShape};
 use crate::pim::PimOp;
 use crate::sim::BankSim;
 use crate::util::BitRow;
@@ -160,6 +160,12 @@ pub struct SystemReport {
     pub cache_hit_rate: f64,
     /// compile wall-clock amortized over every kernel fetch, ns
     pub amortized_compile_ns: f64,
+    /// macro-ops whose lowering the compile layer served from its
+    /// cross-kernel subprogram memo instead of re-lowering (opt level 2)
+    pub shared_blocks: u64,
+    /// declared-scratch rows the record-time passes merged away, summed
+    /// over every kernel submission (opt level 2)
+    pub scratch_rows_saved: u64,
     /// panic messages of workers that died (empty on a clean run)
     pub worker_failures: Vec<String>,
     /// per-shard breakdowns — empty for a single-coordinator system,
@@ -229,7 +235,7 @@ pub struct SystemBuilder {
     shared_cache: Option<Arc<ProgramCache>>,
     channels: usize,
     per_channel_capacity: Option<usize>,
-    fused: bool,
+    opt: OptLevel,
     reorder_window: usize,
     defrag: bool,
     defrag_threshold: usize,
@@ -250,7 +256,7 @@ impl SystemBuilder {
             shared_cache: None,
             channels: 1,
             per_channel_capacity: None,
-            fused: true,
+            opt: OptLevel::from_env(),
             reorder_window: default_reorder_window(),
             defrag: default_defrag(),
             defrag_threshold: 1,
@@ -316,9 +322,25 @@ impl SystemBuilder {
     /// default** — the app-kernel AAP calibrations are baselined against
     /// the fused lowering, and every [`Receipt`](crate::coordinator::Receipt)
     /// carries `elided_aaps` to recover the unfused count. Pass `false`
-    /// to serve the paper's literal per-op lowering.
+    /// to serve the paper's literal per-op lowering. Shorthand for
+    /// [`Self::opt_level`] with [`OptLevel::O1`]/[`OptLevel::O0`].
     pub fn fuse_aap(mut self, on: bool) -> Self {
-        self.fused = on;
+        self.opt = if on { OptLevel::O1 } else { OptLevel::O0 };
+        self
+    }
+
+    /// Compile-pipeline optimization level for this system's program
+    /// cache (default: the `PIM_OPT_LEVEL` env var, else [`OptLevel::O1`]
+    /// — the fused lowering). Level 0 serves the paper's literal per-op
+    /// lowering; level 2 adds cost-driven lowering selection and
+    /// cross-kernel subprogram sharing on top of fusion, and makes
+    /// [`crate::coordinator::Kernel`]s recorded at the process default
+    /// run the record-time passes (constant folding, dead-code
+    /// elimination, liveness-driven scratch-row reuse). Every level is
+    /// bit-exact on observable rows
+    /// (`tests/compile_opt_differential.rs`).
+    pub fn opt_level(mut self, level: OptLevel) -> Self {
+        self.opt = level;
         self
     }
 
@@ -425,7 +447,7 @@ impl SystemBuilder {
                 shared_cache: self.shared_cache.clone(),
                 channels: 1,
                 per_channel_capacity: None,
-                fused: self.fused,
+                opt: self.opt,
                 reorder_window: self.reorder_window,
                 defrag: self.defrag,
                 defrag_threshold: self.defrag_threshold,
@@ -442,18 +464,17 @@ impl SystemBuilder {
         let n_banks = banks.len();
         let cache = match self.shared_cache {
             Some(shared) => {
-                // fusion is a cache-wide policy: a shared cache must agree
-                // with the builder's knob, or the knob would be silently
-                // ignored
+                // the opt level is a cache-wide policy: a shared cache
+                // must agree with the builder's knob, or the knob would be
+                // silently ignored
                 assert_eq!(
-                    shared.is_fused(),
-                    self.fused,
-                    "shared cache fusion policy conflicts with fuse_aap()"
+                    shared.opt_level(),
+                    self.opt,
+                    "shared cache opt level conflicts with opt_level()/fuse_aap()"
                 );
                 shared
             }
-            None if self.fused => Arc::new(ProgramCache::new_fused(self.capacity)),
-            None => Arc::new(ProgramCache::new(self.capacity)),
+            None => Arc::new(ProgramCache::with_opt(self.capacity, self.opt)),
         };
         let metrics = Metrics::with_cache(n_banks, cache.clone());
 
@@ -627,6 +648,12 @@ impl PimSystem {
     /// The shared compiled-program cache (all workers consult it).
     pub fn program_cache(&self) -> &Arc<ProgramCache> {
         &self.core.cache
+    }
+
+    /// Fold client-side scratch-row savings into the serving cache's
+    /// counters (surfaced as [`SystemReport::scratch_rows_saved`]).
+    pub(crate) fn record_rows_saved(&self, n: u64) {
+        self.core.cache.record_rows_saved(n);
     }
 
     /// Cost units currently queued across every bank — the shard-level
@@ -821,6 +848,8 @@ impl PimSystem {
             cache,
             cache_hit_rate: cache.hit_rate(),
             amortized_compile_ns: cache.amortized_compile_ns(),
+            shared_blocks: cache.shared_blocks,
+            scratch_rows_saved: cache.rows_saved,
             worker_failures: self.core.failures.lock().unwrap().clone(),
             shards: Vec::new(),
             jobs: 0,

@@ -7,7 +7,7 @@
 //! shiftdram workload --shifts N [--seed S]
 //! shiftdram mc [--trials N] [--backend pjrt|native] [--node 22nm]
 //! shiftdram serve --banks N --ops K [--batch B] [--channels C] [--reorder-window W]
-//!                 [--defrag] [--defrag-threshold T] [--rehome-after R]
+//!                 [--defrag] [--defrag-threshold T] [--rehome-after R] [--opt-level L]
 //! shiftdram demo [gf|aes|rs|mul|adder]
 //! ```
 
@@ -15,6 +15,7 @@ use shiftdram::circuit::montecarlo::{Backend, MonteCarlo};
 use shiftdram::circuit::params::TechNode;
 use shiftdram::config::{DramConfig, McConfig};
 use shiftdram::coordinator::{Kernel, SystemBuilder};
+use shiftdram::pim::OptLevel;
 use shiftdram::report;
 use shiftdram::runtime::Runtime;
 use shiftdram::sim::run_shift_workload;
@@ -89,6 +90,12 @@ fn main() {
             let defrag = flag(&args, "--defrag");
             let defrag_threshold = opt_usize(&args, "--defrag-threshold", 1);
             let rehome_after = opt_usize(&args, "--rehome-after", 0);
+            // default follows PIM_OPT_LEVEL (level 1 when unset)
+            let opt_level = OptLevel::from_index(opt_usize(
+                &args,
+                "--opt-level",
+                OptLevel::from_env().index(),
+            ));
             if channels > 1 {
                 serve_fabric(
                     &cfg,
@@ -100,6 +107,7 @@ fn main() {
                     defrag,
                     defrag_threshold,
                     rehome_after,
+                    opt_level,
                 );
                 return;
             }
@@ -109,6 +117,7 @@ fn main() {
                 .reorder_window(window)
                 .defrag(defrag)
                 .defrag_threshold(defrag_threshold)
+                .opt_level(opt_level)
                 .build();
             // one session per bank; each allocs one system-placed row and
             // submits shift kernels against its handle
@@ -140,6 +149,12 @@ fn main() {
                 r.cache.misses,
                 r.cache.batched,
                 r.amortized_compile_ns
+            );
+            println!(
+                "opt level {}: {} shared blocks reused, {} scratch rows saved",
+                opt_level.index(),
+                r.shared_blocks,
+                r.scratch_rows_saved
             );
             if defrag {
                 println!(
@@ -177,6 +192,7 @@ fn serve_fabric(
     defrag: bool,
     defrag_threshold: usize,
     rehome_after: usize,
+    opt_level: OptLevel,
 ) {
     use shiftdram::coordinator::JobSpec;
     use shiftdram::util::{BitRow, Rng};
@@ -189,6 +205,7 @@ fn serve_fabric(
         .defrag(defrag)
         .defrag_threshold(defrag_threshold)
         .rehome_after(rehome_after)
+        .opt_level(opt_level)
         .build_fabric();
     let mut rng = Rng::new(7);
     let cols = cfg.geometry.cols_per_row;
@@ -217,6 +234,12 @@ fn serve_fabric(
         r.pinned_skips,
         r.rehomed_sessions,
         r.rows_migrated
+    );
+    println!(
+        "opt level {}: {} shared blocks reused, {} scratch rows saved",
+        opt_level.index(),
+        r.shared_blocks,
+        r.scratch_rows_saved
     );
     for s in &r.shards {
         println!(

@@ -43,6 +43,10 @@ use crate::dram::energy::{EnergyBreakdown, EnergyModel};
 use crate::dram::timing::CommandTimer;
 use crate::pim::isa::PimOp;
 
+pub mod passes;
+
+pub use passes::OptLevel;
+
 /// Named command census. One struct serves both the compile layer
 /// (footprints of [`CompiledProgram`] blocks) and the engine
 /// (`sim::CommandCounts` is an alias of this type), replacing the old
@@ -166,21 +170,22 @@ impl CompiledProgram {
     }
 
     /// Like [`Self::compile`] but with the cross-op AAP fusion peephole
-    /// enabled (see [`Self::compile_opts`]).
+    /// enabled (see [`Self::compile_opts`]) — opt level 1.
     pub fn compile_fused(ops: &[PimOp], cfg: &DramConfig) -> Self {
-        Self::compile_opts(ops, cfg, cfg.fingerprint(), true)
+        Self::compile_opts(ops, cfg, cfg.fingerprint(), OptLevel::O1)
     }
 
     /// Like [`Self::compile`] but with the fingerprint precomputed by the
     /// caller (the hot path computes it once per worker, not per request).
     pub fn compile_with_fingerprint(ops: &[PimOp], cfg: &DramConfig, cfg_fp: u64) -> Self {
-        Self::compile_opts(ops, cfg, cfg_fp, false)
+        Self::compile_opts(ops, cfg, cfg_fp, OptLevel::O0)
     }
 
-    /// Lower, optionally peephole-fuse, and price `ops` against `cfg`.
+    /// The pass pipeline: lower (with cost-driven instruction selection at
+    /// [`OptLevel::O2`], see [`passes::select_lowering`]), peephole-fuse
+    /// (at [`OptLevel::O1`]+), and price `ops` against `cfg`.
     ///
-    /// With `fuse_aap` set, the cross-op AAP fusion peephole runs once at
-    /// compile time, before pricing: when one op's *trailing* AAP
+    /// The cross-op AAP fusion peephole: when one op's *trailing* AAP
     /// (`Aap { src: S, dst: D }` — materializing its result row `D` from
     /// scratch row `S`) is immediately followed by the next op's *leading*
     /// AAP `Aap { src: D, dst: S }` (re-loading the same operand into the
@@ -193,9 +198,33 @@ impl CompiledProgram {
     /// (`And{a,b,t}; And{t,c,u}` …) each save one AAP; census, latency,
     /// and energy footprints shrink accordingly while functional replay
     /// stays bit-exact.
-    pub fn compile_opts(ops: &[PimOp], cfg: &DramConfig, cfg_fp: u64, fuse_aap: bool) -> Self {
+    pub fn compile_opts(ops: &[PimOp], cfg: &DramConfig, cfg_fp: u64, opt: OptLevel) -> Self {
+        Self::compile_shared(ops, cfg, cfg_fp, opt, None)
+    }
+
+    /// [`Self::compile_opts`] with an optional chunk store for cross-kernel
+    /// subprogram sharing (the [`ProgramCache`] miss path). Chunking only
+    /// changes *where* the per-op lowered streams come from — fusion and
+    /// pricing always run globally over the assembled stream — so the
+    /// result is bit-identical to an unshared compile at the same level.
+    fn compile_shared(
+        ops: &[PimOp],
+        cfg: &DramConfig,
+        cfg_fp: u64,
+        opt: OptLevel,
+        chunks: Option<&ChunkStore>,
+    ) -> Self {
         let timer = CommandTimer::new(cfg.timing.clone());
         let model = EnergyModel::new(&cfg.energy, &cfg.timing);
+        let streams: Vec<Vec<Command>> = match chunks {
+            Some(store) if opt >= OptLevel::O2 && ops.len() >= CHUNK_MIN_PROGRAM => {
+                store.lower_chunked(ops, opt, &timer, &model)
+            }
+            _ => ops
+                .iter()
+                .map(|op| passes::select_lowering(op, opt, &timer, &model))
+                .collect(),
+        };
         let mut cmds: Vec<Command> = Vec::new();
         let mut blocks: Vec<CompiledBlock> = Vec::new();
         let mut total_census = CommandCensus::default();
@@ -204,13 +233,12 @@ impl CompiledProgram {
         let mut n_slots = 0usize;
         let mut elided_aaps = 0u64;
 
-        for op in ops {
+        for (op, mut lowered) in ops.iter().zip(streams) {
             let _ = op.map_rows(|r| {
                 n_slots = n_slots.max(r + 1);
                 r
             });
-            let mut lowered = op.lower();
-            if fuse_aap {
+            if opt.fuses() {
                 if let (
                     Some(&Command::Aap { src: prev_src, dst: prev_dst }),
                     Some(&Command::Aap { src: next_src, dst: next_dst }),
@@ -310,35 +338,28 @@ impl CompiledProgram {
 
     /// Command `i` retargeted through `binding` (identity if `None`).
     pub fn command_rebased(&self, i: usize, binding: Option<&[usize]>) -> Command {
-        remap_command(self.cmds[i], binding)
+        apply_binding(self.cmds[i], binding)
     }
 }
 
-/// Retarget a row reference: data slots map through the binding, every
-/// scratch/control/migration reference is position-independent already.
-pub fn remap_rowref(r: RowRef, binding: &[usize]) -> RowRef {
-    match r {
-        RowRef::Data(slot) => RowRef::Data(binding[slot]),
+/// Apply a slot→row binding to one command: data slots map through the
+/// binding, every scratch/control/migration reference is
+/// position-independent already; identity when `binding` is `None`.
+/// This is the *single* binding-application path — the sim engine's
+/// per-command replay ([`CompiledProgram::command_rebased`]) and the
+/// chunk-shared lowering assembly both funnel through it, so the
+/// optimizer's notion of a rebase can never drift from the replay path's.
+pub fn apply_binding(cmd: Command, binding: Option<&[usize]>) -> Command {
+    let Some(bind) = binding else { return cmd };
+    let reref = |r: RowRef| match r {
+        RowRef::Data(slot) => RowRef::Data(bind[slot]),
         other => other,
-    }
-}
-
-/// Retarget one command through an optional slot→row binding.
-pub fn remap_command(cmd: Command, binding: Option<&[usize]>) -> Command {
-    let Some(b) = binding else { return cmd };
+    };
     match cmd {
-        Command::Act { row } => Command::Act { row: remap_rowref(row, b) },
-        Command::Aap { src, dst } => {
-            Command::Aap { src: remap_rowref(src, b), dst: remap_rowref(dst, b) }
-        }
-        Command::Dra { a, b: bb } => {
-            Command::Dra { a: remap_rowref(a, b), b: remap_rowref(bb, b) }
-        }
-        Command::Tra { a, b: bb, c } => Command::Tra {
-            a: remap_rowref(a, b),
-            b: remap_rowref(bb, b),
-            c: remap_rowref(c, b),
-        },
+        Command::Act { row } => Command::Act { row: reref(row) },
+        Command::Aap { src, dst } => Command::Aap { src: reref(src), dst: reref(dst) },
+        Command::Dra { a, b } => Command::Dra { a: reref(a), b: reref(b) },
+        Command::Tra { a, b, c } => Command::Tra { a: reref(a), b: reref(b), c: reref(c) },
         other => other,
     }
 }
@@ -364,6 +385,117 @@ pub fn canonicalize(ops: &[PimOp]) -> (Vec<PimOp>, Vec<usize>) {
         })
         .collect();
     (canonical, binding)
+}
+
+/// Minimum program length (ops) worth chunking, chunk length bounds, and
+/// the content-defined boundary modulus for [`ChunkStore`].
+const CHUNK_MIN_PROGRAM: usize = 16;
+const CHUNK_MIN: usize = 8;
+const CHUNK_MAX: usize = 48;
+const CHUNK_BOUNDARY_MOD: u64 = 16;
+/// Entry bound on the chunk memo (epoch-cleared on overflow).
+const CHUNK_STORE_CAP: usize = 1024;
+
+/// Cross-kernel subprogram sharing: a memo from *canonicalized op
+/// sub-sequences* to their lowered per-op command streams. Programs long
+/// enough to chunk are split at content-defined boundaries (a cut after ≥
+/// [`CHUNK_MIN`] ops wherever the op's hash lands on a fixed residue, or
+/// at [`CHUNK_MAX`]), each chunk is canonicalized locally, and kernels
+/// sharing a prefix/suffix/stanza — the multiplier's repeated shift+add,
+/// AES's per-column mix — reuse each other's lowering work instead of
+/// re-deriving it per shape. Entries are keyed by the canonical op
+/// sequence itself (no hash-collision unsoundness) and hold slot-relative
+/// streams; assembly rebases them through [`apply_binding`], then fusion
+/// and pricing run globally, so a chunk-shared compile is bit-identical
+/// to an unshared one.
+struct ChunkStore {
+    map: Mutex<HashMap<Vec<PimOp>, Arc<Vec<Vec<Command>>>>>,
+    /// blocks (ops) served from the memo instead of lowered fresh
+    shared_blocks: AtomicU64,
+}
+
+impl ChunkStore {
+    fn new() -> Self {
+        ChunkStore { map: Mutex::new(HashMap::new()), shared_blocks: AtomicU64::new(0) }
+    }
+
+    /// Content-defined chunk boundaries over `ops` (deterministic: the
+    /// boundary hash is `DefaultHasher`, which is fixed-key).
+    fn ranges(ops: &[PimOp]) -> Vec<(usize, usize)> {
+        use std::hash::{Hash, Hasher};
+        let mut out = Vec::new();
+        let mut start = 0;
+        for (i, op) in ops.iter().enumerate() {
+            let len = i - start + 1;
+            let mut h = std::collections::hash_map::DefaultHasher::new();
+            op.hash(&mut h);
+            let cut = len >= CHUNK_MAX
+                || (len >= CHUNK_MIN && h.finish() % CHUNK_BOUNDARY_MOD == 0);
+            if cut {
+                out.push((start, i + 1));
+                start = i + 1;
+            }
+        }
+        if start < ops.len() {
+            out.push((start, ops.len()));
+        }
+        out
+    }
+
+    /// Per-op lowered streams for `ops`, with chunk-level reuse.
+    fn lower_chunked(
+        &self,
+        ops: &[PimOp],
+        opt: OptLevel,
+        timer: &CommandTimer,
+        model: &EnergyModel,
+    ) -> Vec<Vec<Command>> {
+        let mut out: Vec<Vec<Command>> = Vec::with_capacity(ops.len());
+        for (start, end) in Self::ranges(ops) {
+            let (canon, binding) = canonicalize(&ops[start..end]);
+            let cached = {
+                let map = self.map.lock().unwrap();
+                map.get(&canon).cloned()
+            };
+            let streams = match cached {
+                Some(s) => {
+                    self.shared_blocks.fetch_add((end - start) as u64, Ordering::Relaxed);
+                    s
+                }
+                None => {
+                    let fresh: Arc<Vec<Vec<Command>>> = Arc::new(
+                        canon
+                            .iter()
+                            .map(|op| passes::select_lowering(op, opt, timer, model))
+                            .collect(),
+                    );
+                    let mut map = self.map.lock().unwrap();
+                    if map.len() >= CHUNK_STORE_CAP {
+                        map.clear();
+                    }
+                    map.entry(canon).or_insert_with(|| fresh.clone());
+                    fresh
+                }
+            };
+            for stream in streams.iter() {
+                out.push(
+                    stream.iter().map(|&c| apply_binding(c, Some(&binding))).collect(),
+                );
+            }
+        }
+        out
+    }
+
+    fn approx_bytes(&self) -> usize {
+        let map = self.map.lock().unwrap();
+        map.iter()
+            .map(|(k, v)| {
+                k.len() * std::mem::size_of::<PimOp>()
+                    + v.iter().map(|s| s.len()).sum::<usize>()
+                        * std::mem::size_of::<Command>()
+            })
+            .sum()
+    }
 }
 
 /// What a cache entry compiles: either a canonical op sequence, or a named
@@ -412,6 +544,12 @@ pub struct CacheStats {
     pub evictions: u64,
     /// cumulative wall-clock spent compiling, ns
     pub compile_ns: u64,
+    /// compiled blocks served from the cross-kernel chunk memo instead of
+    /// being lowered fresh (opt level 2 only)
+    pub shared_blocks: u64,
+    /// scratch/slab rows kernel submissions did not have to bind thanks to
+    /// the record-time liveness passes (opt level 2 only)
+    pub rows_saved: u64,
 }
 
 impl CacheStats {
@@ -445,57 +583,73 @@ impl CacheStats {
 /// most once per key while it stays resident.
 pub struct ProgramCache {
     capacity: usize,
-    /// compile with the cross-op AAP fusion peephole — a *cache-wide*
+    /// the optimization level programs are compiled at — a *cache-wide*
     /// policy, so one shape always maps to one program within a cache
-    fused: bool,
+    opt: OptLevel,
     inner: Mutex<CacheInner>,
+    /// cross-kernel subprogram memo (consulted at [`OptLevel::O2`] only)
+    chunks: ChunkStore,
     hits: AtomicU64,
     misses: AtomicU64,
     batched: AtomicU64,
     evictions: AtomicU64,
     compile_ns: AtomicU64,
+    rows_saved: AtomicU64,
 }
 
 impl ProgramCache {
+    /// A plain cache: opt level 0, no fusion.
     pub fn new(capacity: usize) -> Self {
-        Self::with_fusion(capacity, false)
+        Self::with_opt(capacity, OptLevel::O0)
     }
 
     /// A cache whose programs are compiled with the cross-op AAP fusion
-    /// peephole ([`CompiledProgram::compile_fused`]).
+    /// peephole ([`CompiledProgram::compile_fused`]) — opt level 1.
     pub fn new_fused(capacity: usize) -> Self {
-        Self::with_fusion(capacity, true)
+        Self::with_opt(capacity, OptLevel::O1)
     }
 
-    fn with_fusion(capacity: usize, fused: bool) -> Self {
+    /// A cache compiling at an explicit [`OptLevel`].
+    pub fn with_opt(capacity: usize, opt: OptLevel) -> Self {
         assert!(capacity > 0, "cache capacity must be positive");
         ProgramCache {
             capacity,
-            fused,
+            opt,
             inner: Mutex::new(CacheInner { map: HashMap::new(), tick: 0 }),
+            chunks: ChunkStore::new(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             batched: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             compile_ns: AtomicU64::new(0),
+            rows_saved: AtomicU64::new(0),
         }
     }
 
-    /// Whether this cache compiles with the AAP fusion peephole.
+    /// The optimization level this cache compiles at.
+    pub fn opt_level(&self) -> OptLevel {
+        self.opt
+    }
+
+    /// Whether this cache compiles with the AAP fusion peephole
+    /// (any level ≥ 1).
     pub fn is_fused(&self) -> bool {
-        self.fused
+        self.opt.fuses()
     }
 
     /// The process-wide cache the application layer defaults to.
     ///
-    /// Fused ([`Self::new_fused`]) since the serving default flipped to
-    /// `fuse_aap(true)`: app kernels compiled here drop their redundant
-    /// cross-op scratch reloads, and the app AAP calibrations are
-    /// baselined against the fused totals (`Receipt::elided_aaps`
-    /// recovers the paper's literal unfused counts).
+    /// Compiles at [`OptLevel::from_env`] — level 1 (fused, the previous
+    /// serving default) unless `PIM_OPT_LEVEL` overrides it: app kernels
+    /// compiled here drop their redundant cross-op scratch reloads, and
+    /// the app AAP calibrations are baselined against the fused totals
+    /// (`Receipt::elided_aaps` recovers the paper's literal unfused
+    /// counts).
     pub fn global() -> Arc<ProgramCache> {
         static GLOBAL: OnceLock<Arc<ProgramCache>> = OnceLock::new();
-        GLOBAL.get_or_init(|| Arc::new(ProgramCache::new_fused(512))).clone()
+        GLOBAL
+            .get_or_init(|| Arc::new(ProgramCache::with_opt(512, OptLevel::from_env())))
+            .clone()
     }
 
     /// Fetch or compile the program for `shape` under `cfg`. The build
@@ -537,8 +691,13 @@ impl ProgramCache {
         // both compile; the loser adopts the winner's entry below.
         let t0 = Instant::now();
         let ops = build();
-        let prog =
-            Arc::new(CompiledProgram::compile_opts(ops.as_slice(), cfg, cfg_fp, self.fused));
+        let prog = Arc::new(CompiledProgram::compile_shared(
+            ops.as_slice(),
+            cfg,
+            cfg_fp,
+            self.opt,
+            Some(&self.chunks),
+        ));
         self.compile_ns
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         self.misses.fetch_add(1, Ordering::Relaxed);
@@ -587,6 +746,12 @@ impl ProgramCache {
         self.batched.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Record slab rows a kernel submission did not have to bind because
+    /// the record-time liveness passes shrank its slot count.
+    pub fn record_rows_saved(&self, n: u64) {
+        self.rows_saved.fetch_add(n, Ordering::Relaxed);
+    }
+
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
@@ -594,6 +759,8 @@ impl ProgramCache {
             batched: self.batched.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
             compile_ns: self.compile_ns.load(Ordering::Relaxed),
+            shared_blocks: self.chunks.shared_blocks.load(Ordering::Relaxed),
+            rows_saved: self.rows_saved.load(Ordering::Relaxed),
         }
     }
 
@@ -604,6 +771,23 @@ impl ProgramCache {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Approximate resident bytes: compiled command streams and block
+    /// footprints plus the chunk memo (the compile-pipeline bench's cache
+    /// size metric).
+    pub fn approx_bytes(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        let progs: usize = inner
+            .map
+            .values()
+            .map(|e| {
+                e.prog.commands().len() * std::mem::size_of::<Command>()
+                    + e.prog.blocks().len() * std::mem::size_of::<CompiledBlock>()
+            })
+            .sum();
+        drop(inner);
+        progs + self.chunks.approx_bytes()
     }
 }
 
@@ -868,6 +1052,74 @@ mod tests {
         assert_eq!(sim.bank().subarray(0).read_row(6), &bits);
         assert_eq!(sim.bank().subarray(0).read_row(5), &bits);
         assert_eq!(sim.now_ps, c.timing.t_aap(), "one AAP of simulated time");
+    }
+
+    #[test]
+    fn o2_selects_the_compact_xor_lowering() {
+        let c = cfg();
+        let ops = [PimOp::Xor { a: 0, b: 1, dst: 2 }];
+        let o0 = CompiledProgram::compile(&ops, &c);
+        let o2 = CompiledProgram::compile_opts(&ops, &c, c.fingerprint(), OptLevel::O2);
+        assert_eq!(o0.census().total(), 15);
+        assert_eq!(o2.census().total(), 13);
+        assert_eq!(o2.census().aap + 1, o0.census().aap);
+        assert_eq!(o2.census().dra + 1, o0.census().dra);
+        assert!(o2.latency_ps() < o0.latency_ps());
+        assert!(o2.energy().total_pj() < o0.energy().total_pj());
+    }
+
+    #[test]
+    fn chunk_shared_compile_is_bit_identical_and_counted() {
+        let c = cfg();
+        // a repeated logic stanza long enough to chunk (≥ CHUNK_MIN_PROGRAM)
+        let stanza = |base: usize| {
+            vec![
+                PimOp::And { a: 0, b: 1, dst: base },
+                PimOp::Xor { a: base, b: 2, dst: base + 1 },
+                PimOp::Or { a: base + 1, b: 0, dst: base + 2 },
+                PimOp::Not { src: base + 2, dst: base },
+            ]
+        };
+        let mut a_ops = Vec::new();
+        for k in 0..20 {
+            a_ops.extend(stanza(3 + 3 * (k % 8)));
+        }
+        // a second kernel sharing exactly A's first chunk (identical
+        // prefixes cut identically — the boundary test sees only the ops
+        // so far), then diverging
+        let cut = ChunkStore::ranges(&a_ops)[0].1;
+        assert!(cut >= CHUNK_MIN && cut <= CHUNK_MAX);
+        let mut b_ops = a_ops[..cut].to_vec();
+        for k in 0..12 {
+            b_ops.push(PimOp::Maj { a: 0, b: 1, c: 2, dst: 5 + (k % 4) });
+        }
+
+        let cache = ProgramCache::with_opt(8, OptLevel::O2);
+        assert_eq!(cache.opt_level(), OptLevel::O2);
+        let (pa, _) = cache.get_or_compile_ops(&a_ops, &c);
+        let (pb, _) = cache.get_or_compile_ops(&b_ops, &c);
+        // the cached programs equal a direct (unshared) O2 compile
+        let (ca, _) = canonicalize(&a_ops);
+        let (cb, _) = canonicalize(&b_ops);
+        let da = CompiledProgram::compile_opts(&ca, &c, c.fingerprint(), OptLevel::O2);
+        let db = CompiledProgram::compile_opts(&cb, &c, c.fingerprint(), OptLevel::O2);
+        assert_eq!(pa.commands(), da.commands());
+        assert_eq!(pb.commands(), db.commands());
+        assert_eq!(pa.census(), da.census());
+        assert_eq!(pa.latency_ps(), da.latency_ps());
+        // kernel B's shared prefix chunks came from the memo
+        let s = cache.stats();
+        assert!(s.shared_blocks > 0, "prefix chunks must be served from the memo");
+        assert!(cache.approx_bytes() > 0);
+    }
+
+    #[test]
+    fn rows_saved_counter_accumulates() {
+        let cache = ProgramCache::new(4);
+        assert_eq!(cache.stats().rows_saved, 0);
+        cache.record_rows_saved(3);
+        cache.record_rows_saved(2);
+        assert_eq!(cache.stats().rows_saved, 5);
     }
 
     #[test]

@@ -1,0 +1,791 @@
+//! The optimizing pass pipeline behind [`crate::pim::compile`].
+//!
+//! PRADA-style kernel optimization for the PIM compiler, split into two
+//! stages that run at different layers:
+//!
+//! * **Kernel passes** (this module's [`optimize_kernel`]) run once at
+//!   kernel *record* time over the canonicalized macro-op sequence:
+//!   constant folding over the in-stream `SetZero`/`SetOnes` facts,
+//!   scratch-aware dead-code elimination, liveness-driven scratch-slot
+//!   reuse that renames dead scratch slots onto a free list — shrinking
+//!   `n_slots()` so sessions bind fewer slab rows — and fusion-aware
+//!   commutative operand canonicalization so chained logic ops expose
+//!   their redundant operand reloads to the AAP fusion peephole.
+//! * **Lowering selection** ([`select_lowering`]) runs per macro-op at
+//!   compile time: where an op admits more than one legal lowering (XOR's
+//!   15-command `(a&!b)|(!a&b)` form vs the 13-command `(a|b)&!(a&b)`
+//!   form), the `DramConfig`-derived latency/energy cost model picks,
+//!   instead of hardcoding one schedule per op.
+//!
+//! Both stages are gated by [`OptLevel`]: level 0 is the plain lowering,
+//! level 1 adds the cross-op AAP fusion peephole (the previous serving
+//! default), level 2 enables the full pipeline. Every rewrite is chosen so
+//! the per-kind command census of the optimized program is ≤ the level-0
+//! census — the differential harness (`tests/compile_opt_differential.rs`)
+//! asserts monotonicity and bit-identical results.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::dram::address::Command;
+use crate::dram::energy::EnergyModel;
+use crate::dram::timing::CommandTimer;
+use crate::pim::isa::PimOp;
+
+/// Compiler optimization level, settable per system via
+/// `SystemBuilder::opt_level` or process-wide via `PIM_OPT_LEVEL`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum OptLevel {
+    /// plain lowering, one fixed schedule per op, no fusion
+    O0,
+    /// + cross-op AAP fusion peephole (the previous serving default)
+    #[default]
+    O1,
+    /// + cost-driven lowering selection, kernel constant folding / DCE /
+    /// scratch-slot reuse, and cross-kernel chunk sharing
+    O2,
+}
+
+impl OptLevel {
+    /// Numeric level (`--opt-level` / `PIM_OPT_LEVEL` spelling).
+    pub fn index(self) -> usize {
+        match self {
+            OptLevel::O0 => 0,
+            OptLevel::O1 => 1,
+            OptLevel::O2 => 2,
+        }
+    }
+
+    pub fn from_index(n: usize) -> OptLevel {
+        match n {
+            0 => OptLevel::O0,
+            1 => OptLevel::O1,
+            2 => OptLevel::O2,
+            other => panic!("opt level must be 0, 1, or 2 (got {other})"),
+        }
+    }
+
+    /// The level `PIM_OPT_LEVEL` selects; 1 (the previous serving
+    /// behavior) when unset.
+    pub fn from_env() -> OptLevel {
+        match std::env::var("PIM_OPT_LEVEL") {
+            Ok(v) => match v.trim() {
+                "0" => OptLevel::O0,
+                "1" => OptLevel::O1,
+                "2" => OptLevel::O2,
+                other => panic!("PIM_OPT_LEVEL must be 0, 1, or 2 (got {other:?})"),
+            },
+            Err(_) => OptLevel::O1,
+        }
+    }
+
+    /// Whether this level runs the cross-op AAP fusion peephole.
+    pub fn fuses(self) -> bool {
+        self >= OptLevel::O1
+    }
+}
+
+/// The slot every op fully overwrites (each macro-op has exactly one dst,
+/// and every lowering writes it only with its trailing command).
+fn op_dst(op: &PimOp) -> usize {
+    match *op {
+        PimOp::Copy { dst, .. }
+        | PimOp::SetZero { dst }
+        | PimOp::SetOnes { dst }
+        | PimOp::Not { dst, .. }
+        | PimOp::And { dst, .. }
+        | PimOp::Or { dst, .. }
+        | PimOp::Maj { dst, .. }
+        | PimOp::Xor { dst, .. }
+        | PimOp::ShiftRight { dst, .. }
+        | PimOp::ShiftLeft { dst, .. }
+        | PimOp::ShiftBy { dst, .. } => dst,
+    }
+}
+
+/// Source slots of one op (dst is write-only for every op kind — in-place
+/// shifts read `src`, which the caller passes equal to `dst`).
+fn op_srcs(op: &PimOp) -> ([usize; 3], usize) {
+    match *op {
+        PimOp::SetZero { .. } | PimOp::SetOnes { .. } => ([0; 3], 0),
+        PimOp::Copy { src, .. }
+        | PimOp::Not { src, .. }
+        | PimOp::ShiftRight { src, .. }
+        | PimOp::ShiftLeft { src, .. }
+        | PimOp::ShiftBy { src, .. } => ([src, 0, 0], 1),
+        PimOp::And { a, b, .. } | PimOp::Or { a, b, .. } | PimOp::Xor { a, b, .. } => {
+            ([a, b, 0], 2)
+        }
+        PimOp::Maj { a, b, c, .. } => ([a, b, c], 3),
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Fact {
+    Zero,
+    Ones,
+}
+
+/// Forward constant folding over the facts the op stream itself
+/// establishes (`SetZero`/`SetOnes`, and propagated copies of them).
+/// `And` with a known-zero operand becomes `SetZero`, `Xor` with a
+/// known-zero becomes `Copy`, `Maj` with a known operand degrades to
+/// `And`/`Or`, a shift of known zeros is `SetZero` (zero fill), and
+/// operand-aliased ops (`Xor{a,a}`, `And{a,a}`…) collapse outright.
+/// Every rewrite lowers to a per-kind command census ≤ the original op's,
+/// so folding can only shrink the compiled footprint. No assumption is
+/// ever made about rows the kernel did not itself initialize.
+pub fn fold_constants(ops: &[PimOp]) -> Vec<PimOp> {
+    use PimOp::*;
+    let mut facts: HashMap<usize, Fact> = HashMap::new();
+    let mut out = Vec::with_capacity(ops.len());
+    for &op in ops {
+        let mut cur = op;
+        loop {
+            let f = |r: usize| facts.get(&r).copied();
+            let next = match cur {
+                Copy { src, dst } => match f(src) {
+                    Some(Fact::Zero) => Some(SetZero { dst }),
+                    Some(Fact::Ones) => Some(SetOnes { dst }),
+                    None => None,
+                },
+                Not { src, dst } => match f(src) {
+                    Some(Fact::Zero) => Some(SetOnes { dst }),
+                    Some(Fact::Ones) => Some(SetZero { dst }),
+                    None => None,
+                },
+                And { a, b, dst } => match (f(a), f(b)) {
+                    (Some(Fact::Zero), _) | (_, Some(Fact::Zero)) => Some(SetZero { dst }),
+                    (Some(Fact::Ones), _) => Some(Copy { src: b, dst }),
+                    (_, Some(Fact::Ones)) => Some(Copy { src: a, dst }),
+                    _ if a == b => Some(Copy { src: a, dst }),
+                    _ => None,
+                },
+                Or { a, b, dst } => match (f(a), f(b)) {
+                    (Some(Fact::Ones), _) | (_, Some(Fact::Ones)) => Some(SetOnes { dst }),
+                    (Some(Fact::Zero), _) => Some(Copy { src: b, dst }),
+                    (_, Some(Fact::Zero)) => Some(Copy { src: a, dst }),
+                    _ if a == b => Some(Copy { src: a, dst }),
+                    _ => None,
+                },
+                Xor { a, b, dst } => match (f(a), f(b)) {
+                    (Some(Fact::Zero), _) => Some(Copy { src: b, dst }),
+                    (_, Some(Fact::Zero)) => Some(Copy { src: a, dst }),
+                    (Some(Fact::Ones), _) => Some(Not { src: b, dst }),
+                    (_, Some(Fact::Ones)) => Some(Not { src: a, dst }),
+                    _ if a == b => Some(SetZero { dst }),
+                    _ => None,
+                },
+                Maj { a, b, c, dst } => match (f(a), f(b), f(c)) {
+                    (Some(Fact::Zero), _, _) => Some(And { a: b, b: c, dst }),
+                    (_, Some(Fact::Zero), _) => Some(And { a, b: c, dst }),
+                    (_, _, Some(Fact::Zero)) => Some(And { a, b, dst }),
+                    (Some(Fact::Ones), _, _) => Some(Or { a: b, b: c, dst }),
+                    (_, Some(Fact::Ones), _) => Some(Or { a, b: c, dst }),
+                    (_, _, Some(Fact::Ones)) => Some(Or { a, b, dst }),
+                    _ if a == b => Some(Copy { src: a, dst }),
+                    _ if a == c => Some(Copy { src: a, dst }),
+                    _ if b == c => Some(Copy { src: b, dst }),
+                    _ => None,
+                },
+                ShiftRight { src, dst } | ShiftLeft { src, dst } => match f(src) {
+                    Some(Fact::Zero) => Some(SetZero { dst }),
+                    _ => None,
+                },
+                ShiftBy { src, dst, n, .. } => match f(src) {
+                    Some(Fact::Zero) => Some(SetZero { dst }),
+                    _ if n == 0 => Some(Copy { src, dst }),
+                    _ => None,
+                },
+                SetZero { .. } | SetOnes { .. } => None,
+            };
+            match next {
+                Some(n2) if n2 != cur => cur = n2,
+                _ => break,
+            }
+        }
+        match cur {
+            SetZero { dst } => {
+                facts.insert(dst, Fact::Zero);
+            }
+            SetOnes { dst } => {
+                facts.insert(dst, Fact::Ones);
+            }
+            _ => {
+                facts.remove(&op_dst(&cur));
+            }
+        }
+        out.push(cur);
+    }
+    out
+}
+
+/// Backward dead-code elimination. `scratch[slot]` marks slots whose final
+/// value is *not* observable after the kernel (declared via
+/// [`crate::pim::program::PimTape::scratch`]); everything else is live at
+/// program end. An op is dropped when its dst is dead at that point; a
+/// full overwrite (dst not among the op's sources) kills the dst's
+/// liveness for earlier ops, so dead stores to observable rows are removed
+/// too. Slots beyond `scratch.len()` are treated as observable.
+pub fn dce(ops: &[PimOp], scratch: &[bool]) -> Vec<PimOp> {
+    let n_slots = ops
+        .iter()
+        .map(|op| {
+            let mut hi = 0;
+            let _ = op.map_rows(|r| {
+                hi = hi.max(r + 1);
+                r
+            });
+            hi
+        })
+        .max()
+        .unwrap_or(0);
+    let mut live: Vec<bool> = (0..n_slots)
+        .map(|s| !scratch.get(s).copied().unwrap_or(false))
+        .collect();
+    let mut keep = vec![true; ops.len()];
+    for (i, op) in ops.iter().enumerate().rev() {
+        let dst = op_dst(op);
+        let (srcs, n_srcs) = op_srcs(op);
+        let srcs = &srcs[..n_srcs];
+        if !live[dst] {
+            keep[i] = false;
+            continue;
+        }
+        if !srcs.contains(&dst) {
+            live[dst] = false;
+        }
+        for &s in srcs {
+            live[s] = true;
+        }
+    }
+    ops.iter()
+        .zip(keep)
+        .filter_map(|(op, k)| k.then_some(*op))
+        .collect()
+}
+
+/// Liveness-driven scratch-slot reuse at *live-range* granularity: each
+/// full overwrite of a scratch slot starts a fresh range, and every range
+/// is allocated its own physical slot by a forward linear scan over a free
+/// list of ranges that already ended. A temp redefined once per loop
+/// iteration therefore occupies one slot per *iteration's* lifetime — not
+/// one for the whole kernel — so disjoint iterations (and disjoint temps)
+/// merge onto the same row. Slots are renamed densely in order of first
+/// binding; `slots` is the old slot→row binding and the returned binding
+/// keeps, for each surviving slot, the row of its first tenant. Slots the
+/// ops no longer reference (post-DCE/folding) vanish from the binding.
+pub fn reuse_scratch(
+    ops: &[PimOp],
+    scratch: &[bool],
+    slots: &[usize],
+) -> (Vec<PimOp>, Vec<usize>) {
+    let is_scratch = |s: usize| scratch.get(s).copied().unwrap_or(false);
+    let n = ops.len();
+
+    // Backward pass: per touch, does the touched slot's live range end at
+    // this op? A range ends when the slot's next touch (if any) is a full
+    // overwrite; an in-place op (dst among its own sources) continues it.
+    let mut src_ends: Vec<[bool; 3]> = vec![[false; 3]; n];
+    let mut dst_ends: Vec<bool> = vec![false; n];
+    // looking forward from the op under scan: is the slot's next touch a
+    // full overwrite? (absent = never touched again)
+    let mut next_is_restart: HashMap<usize, bool> = HashMap::new();
+    for (i, op) in ops.iter().enumerate().rev() {
+        let dst = op_dst(op);
+        let (srcs, n_srcs) = op_srcs(op);
+        let srcs = &srcs[..n_srcs];
+        dst_ends[i] = next_is_restart.get(&dst).copied().unwrap_or(true);
+        for (k, &s) in srcs.iter().enumerate() {
+            // an in-place read belongs to the continuing range; the write
+            // side (dst_ends) decides that range's fate
+            src_ends[i][k] = s != dst && next_is_restart.get(&s).copied().unwrap_or(true);
+        }
+        for &s in srcs {
+            next_is_restart.insert(s, false);
+        }
+        next_is_restart.insert(dst, !srcs.contains(&dst));
+    }
+
+    // Forward linear scan, allocating one physical slot per live range.
+    let mut active: HashMap<usize, usize> = HashMap::new();
+    let mut new_slots: Vec<usize> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    // a scratch slot first touched as a *source* reads rows the kernel
+    // never wrote — pin it to its own binding and never recycle it
+    let mut pinned: HashSet<usize> = HashSet::new();
+    let mut renamed: Vec<PimOp> = Vec::with_capacity(n);
+    for (i, op) in ops.iter().enumerate() {
+        let dst = op_dst(op);
+        let (srcs, n_srcs) = op_srcs(op);
+        let srcs = &srcs[..n_srcs];
+        for &s in srcs {
+            if !active.contains_key(&s) {
+                new_slots.push(slots[s]);
+                active.insert(s, new_slots.len() - 1);
+                if is_scratch(s) {
+                    pinned.insert(s);
+                }
+            }
+        }
+        let src_map: Vec<(usize, usize)> = srcs.iter().map(|&s| (s, active[&s])).collect();
+        // sources whose range dies here release their slot before the dst
+        // lands, enabling in-place reuse within the same op (dst is written
+        // last by every lowering, so aliasing a dying source is bit-safe)
+        for (k, &s) in srcs.iter().enumerate() {
+            if src_ends[i][k] && is_scratch(s) && !pinned.contains(&s) {
+                if let Some(ns) = active.remove(&s) {
+                    free.push(ns);
+                }
+            }
+        }
+        let dnew = match active.get(&dst).copied() {
+            Some(ns) => ns,
+            None => {
+                let adopt = if is_scratch(dst) && !srcs.contains(&dst) {
+                    free.pop()
+                } else {
+                    None
+                };
+                let ns = adopt.unwrap_or_else(|| {
+                    new_slots.push(slots[dst]);
+                    new_slots.len() - 1
+                });
+                active.insert(dst, ns);
+                ns
+            }
+        };
+        renamed.push(op.map_rows(|s| {
+            if s == dst {
+                dnew
+            } else {
+                src_map
+                    .iter()
+                    .find(|(o, _)| *o == s)
+                    .map(|&(_, ns)| ns)
+                    .expect("source binding")
+            }
+        }));
+        // a value never read before its next full overwrite frees its slot
+        // immediately (DCE keeps such stores only for observable rows,
+        // which are not scratch and stay bound)
+        if dst_ends[i] && is_scratch(dst) && !pinned.contains(&dst) {
+            if let Some(ns) = active.remove(&dst) {
+                free.push(ns);
+            }
+        }
+    }
+    (renamed, new_slots)
+}
+
+/// Fusion-aware commutative operand canonicalization. `And`/`Or`/`Maj`
+/// and both `Xor` lowerings all stage operand `a` into `Compute(0)` first
+/// and land their result with a trailing `Aap{Compute(0)→dst}`, so the
+/// cross-op fusion peephole ([`crate::pim::compile::CompiledProgram`])
+/// elides the reload exactly when an op's *first* operand equals the
+/// previous op's dst. The ops are commutative, so when the previous dst
+/// sits in a later operand position, rotating it into `a` is bit-identical
+/// and exposes the elision (chained logic ops that happened to name their
+/// operands "backwards" stop paying one AAP per link). Dsts are never
+/// moved, operand sets are unchanged, and every lowering is
+/// operand-symmetric in cost, so liveness, footprints, and the per-kind
+/// census are all preserved. Runs last over the final op order — adjacency
+/// here is adjacency at lowering time.
+pub fn canonicalize_commutative(ops: &[PimOp]) -> Vec<PimOp> {
+    use PimOp::*;
+    let mut out: Vec<PimOp> = Vec::with_capacity(ops.len());
+    for &op in ops {
+        let prev = out.last().map(op_dst);
+        let cur = match (op, prev) {
+            (And { a, b, dst }, Some(p)) if b == p && a != p => And { a: b, b: a, dst },
+            (Or { a, b, dst }, Some(p)) if b == p && a != p => Or { a: b, b: a, dst },
+            (Xor { a, b, dst }, Some(p)) if b == p && a != p => Xor { a: b, b: a, dst },
+            (Maj { a, b, c, dst }, Some(p)) if b == p && a != p => Maj { a: b, b: a, c, dst },
+            (Maj { a, b, c, dst }, Some(p)) if c == p && a != p && b != p => {
+                Maj { a: c, b, c: a, dst }
+            }
+            _ => op,
+        };
+        out.push(cur);
+    }
+    out
+}
+
+/// Result of the record-time kernel pipeline.
+pub struct KernelOpt {
+    /// the optimized (slot-relative) op sequence
+    pub ops: Vec<PimOp>,
+    /// surviving slot→row binding (first-tenant row per slot)
+    pub slots: Vec<usize>,
+    /// slots the pipeline removed vs the canonical input
+    pub rows_saved: usize,
+}
+
+/// The full record-time pipeline: constant folding and scratch-aware DCE
+/// to a fixpoint, then liveness-driven scratch reuse, then fusion-aware
+/// commutative operand canonicalization. `ops`/`slots` are the output of
+/// [`crate::pim::compile::canonicalize`]; `scratch_rows` names the
+/// *recording* rows the kernel declared as temporaries.
+pub fn optimize_kernel(ops: Vec<PimOp>, slots: Vec<usize>, scratch_rows: &[usize]) -> KernelOpt {
+    let scratch: Vec<bool> = slots.iter().map(|r| scratch_rows.contains(r)).collect();
+    let before = slots.len();
+    let mut cur = ops;
+    for _ in 0..8 {
+        let next = dce(&fold_constants(&cur), &scratch);
+        let done = next == cur;
+        cur = next;
+        if done {
+            break;
+        }
+    }
+    let (ops, new_slots) = reuse_scratch(&cur, &scratch, &slots);
+    let ops = canonicalize_commutative(&ops);
+    KernelOpt { rows_saved: before - new_slots.len(), ops, slots: new_slots }
+}
+
+/// Every legal lowering of `op`, the default schedule first.
+pub fn candidate_lowerings(op: &PimOp) -> Vec<Vec<Command>> {
+    let mut cands = vec![op.lower()];
+    if let PimOp::Xor { a, b, dst } = *op {
+        cands.push(PimOp::xor_compact(a, b, dst));
+    }
+    cands
+}
+
+/// Cost-driven instruction selection: below O2 this is exactly
+/// [`PimOp::lower`]; at O2 every candidate lowering is priced with the
+/// config's timing/energy models and the cheapest (by latency, then
+/// energy, then command count) wins. Candidate structure depends only on
+/// the op kind — never on slot values — so selection commutes with slot
+/// rebinding and chunk canonicalization.
+pub fn select_lowering(
+    op: &PimOp,
+    opt: OptLevel,
+    timer: &CommandTimer,
+    model: &EnergyModel,
+) -> Vec<Command> {
+    if opt < OptLevel::O2 {
+        return op.lower();
+    }
+    let mut best: Option<(u64, f64, Vec<Command>)> = None;
+    for cand in candidate_lowerings(op) {
+        let lat: u64 = cand.iter().map(|c| timer.latency_ps(c)).sum();
+        let pj: f64 = cand.iter().map(|c| model.energy(c).total_pj()).sum();
+        let better = match &best {
+            None => true,
+            Some((bl, bp, bc)) => {
+                lat < *bl
+                    || (lat == *bl && pj < *bp)
+                    || (lat == *bl && pj == *bp && cand.len() < bc.len())
+            }
+        };
+        if better {
+            best = Some((lat, pj, cand));
+        }
+    }
+    best.expect("at least the default lowering").2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DramConfig;
+    use crate::dram::subarray::Subarray;
+    use crate::pim::executor;
+    use crate::util::{BitRow, Rng, ShiftDir};
+    use PimOp::*;
+
+    #[test]
+    fn opt_level_orders_and_indexes() {
+        assert!(OptLevel::O0 < OptLevel::O1 && OptLevel::O1 < OptLevel::O2);
+        for n in 0..3 {
+            assert_eq!(OptLevel::from_index(n).index(), n);
+        }
+        assert!(!OptLevel::O0.fuses());
+        assert!(OptLevel::O1.fuses() && OptLevel::O2.fuses());
+        assert_eq!(OptLevel::default(), OptLevel::O1);
+    }
+
+    #[test]
+    fn folding_uses_in_stream_facts() {
+        let ops = [
+            SetZero { dst: 3 },
+            And { a: 3, b: 0, dst: 4 },      // 0 & x = 0
+            Xor { a: 4, b: 1, dst: 5 },      // 0 ^ x = x
+            Maj { a: 3, b: 0, c: 1, dst: 6 }, // maj(0,a,b) = a & b
+            ShiftBy { src: 4, dst: 7, n: 3, dir: ShiftDir::Right }, // shift of 0 = 0
+            SetOnes { dst: 3 },
+            Xor { a: 3, b: 0, dst: 4 }, // 1 ^ x = !x
+        ];
+        let folded = fold_constants(&ops);
+        assert_eq!(
+            folded,
+            vec![
+                SetZero { dst: 3 },
+                SetZero { dst: 4 },
+                Copy { src: 1, dst: 5 },
+                And { a: 0, b: 1, dst: 6 },
+                SetZero { dst: 7 },
+                SetOnes { dst: 3 },
+                Not { src: 0, dst: 4 },
+            ]
+        );
+    }
+
+    #[test]
+    fn folding_kills_facts_on_overwrite() {
+        let ops = [
+            SetZero { dst: 2 },
+            Copy { src: 0, dst: 2 }, // 2 is no longer known-zero
+            And { a: 2, b: 1, dst: 3 },
+            Xor { a: 0, b: 0, dst: 4 }, // aliased operands fold regardless
+        ];
+        let folded = fold_constants(&ops);
+        assert_eq!(folded[2], And { a: 2, b: 1, dst: 3 });
+        assert_eq!(folded[3], SetZero { dst: 4 });
+    }
+
+    #[test]
+    fn dce_drops_dead_scratch_chains_only() {
+        // slot 3 is scratch; its final producer chain is dead once the
+        // last consumer is gone. Slots 0..3 observable.
+        let ops = [
+            And { a: 0, b: 1, dst: 3 },
+            Xor { a: 3, b: 1, dst: 2 }, // consumes 3 → keeps the And
+            ShiftRight { src: 2, dst: 3 }, // dead: 3 never read again
+        ];
+        let scratch = [false, false, false, true];
+        let kept = dce(&ops, &scratch);
+        assert_eq!(kept, vec![And { a: 0, b: 1, dst: 3 }, Xor { a: 3, b: 1, dst: 2 }]);
+    }
+
+    #[test]
+    fn dce_removes_dead_stores_to_observable_rows() {
+        let ops = [
+            Copy { src: 0, dst: 2 }, // fully overwritten below, never read
+            Copy { src: 1, dst: 2 },
+        ];
+        let kept = dce(&ops, &[false; 3]);
+        assert_eq!(kept, vec![Copy { src: 1, dst: 2 }]);
+        // but an in-place op reads its dst → the earlier store is live
+        let ops = [
+            Copy { src: 0, dst: 2 },
+            ShiftBy { src: 2, dst: 2, n: 1, dir: ShiftDir::Left },
+        ];
+        assert_eq!(dce(&ops, &[false; 3]).len(), 2);
+    }
+
+    #[test]
+    fn scratch_reuse_merges_disjoint_live_ranges() {
+        // two scratch temporaries (slots 2, 3) with disjoint lifetimes
+        let ops = vec![
+            And { a: 0, b: 1, dst: 2 },
+            Xor { a: 2, b: 1, dst: 4 }, // slot 2 dies here
+            Or { a: 0, b: 4, dst: 3 },  // slot 3 can reuse slot 2's row
+            Xor { a: 3, b: 4, dst: 5 },
+        ];
+        let scratch = vec![false, false, true, true, false, false];
+        let slots = vec![10, 11, 12, 13, 14, 15];
+        let (renamed, new_slots) = reuse_scratch(&ops, &scratch, &slots);
+        assert_eq!(new_slots, vec![10, 11, 12, 14, 15], "slot 13 merged into 12");
+        assert_eq!(
+            renamed,
+            vec![
+                And { a: 0, b: 1, dst: 2 },
+                Xor { a: 2, b: 1, dst: 3 },
+                Or { a: 0, b: 3, dst: 2 },
+                Xor { a: 2, b: 3, dst: 4 },
+            ]
+        );
+    }
+
+    #[test]
+    fn scratch_reuse_respects_overlapping_ranges() {
+        let ops = vec![
+            And { a: 0, b: 1, dst: 2 },
+            Or { a: 0, b: 1, dst: 3 },  // slot 2 still live → no reuse
+            Xor { a: 2, b: 3, dst: 4 },
+        ];
+        let scratch = vec![false, false, true, true, false];
+        let slots = vec![10, 11, 12, 13, 14];
+        let (renamed, new_slots) = reuse_scratch(&ops, &scratch, &slots);
+        assert_eq!(new_slots, slots);
+        assert_eq!(renamed, ops);
+    }
+
+    #[test]
+    fn scratch_reuse_splits_redefined_ranges() {
+        // loop-shaped reuse: scratch temps 3 and 4 are each redefined with
+        // interleaved lifetimes. Whole-interval liveness would keep both
+        // rows (each old slot spans most of the kernel); per-definition
+        // ranges let every new definition adopt the previous range's row.
+        let ops = vec![
+            And { a: 0, b: 1, dst: 3 }, // range 3a
+            Xor { a: 3, b: 1, dst: 2 }, // 3a dies
+            Or { a: 0, b: 2, dst: 4 },  // range 4a adopts 3a's row
+            Xor { a: 4, b: 2, dst: 2 }, // 4a dies
+            And { a: 2, b: 1, dst: 3 }, // range 3b adopts 4a's row
+            Xor { a: 3, b: 0, dst: 2 }, // 3b dies
+        ];
+        let scratch = vec![false, false, false, true, true];
+        let slots = vec![10, 11, 12, 13, 14];
+        let (renamed, new_slots) = reuse_scratch(&ops, &scratch, &slots);
+        assert_eq!(new_slots, vec![10, 11, 13, 12], "temps 13/14 share one row");
+        assert_eq!(
+            renamed,
+            vec![
+                And { a: 0, b: 1, dst: 2 },
+                Xor { a: 2, b: 1, dst: 3 },
+                Or { a: 0, b: 3, dst: 2 },
+                Xor { a: 2, b: 3, dst: 3 },
+                And { a: 3, b: 1, dst: 2 },
+                Xor { a: 2, b: 0, dst: 3 },
+            ]
+        );
+    }
+
+    #[test]
+    fn scratch_reuse_pins_read_before_write_temps() {
+        // a scratch slot read before any write observes whatever its row
+        // held — it must keep its own binding and never enter the free list
+        let ops = vec![
+            Xor { a: 2, b: 0, dst: 1 }, // scratch 2 read first: pinned
+            And { a: 0, b: 1, dst: 3 }, // fresh scratch range
+            Xor { a: 3, b: 0, dst: 1 }, // 3 dies
+            Or { a: 2, b: 1, dst: 4 },  // 4 may adopt 3's row, never 2's
+        ];
+        let scratch = vec![false, false, true, true, true];
+        let slots = vec![10, 11, 12, 13, 14];
+        let (renamed, new_slots) = reuse_scratch(&ops, &scratch, &slots);
+        // 4 adopted 3's dead row (13); pinned 2 kept its own row (12) out
+        // of the free list even though its last read precedes the Or's dst
+        assert_eq!(new_slots, vec![12, 10, 11, 13]);
+        assert_eq!(
+            renamed,
+            vec![
+                Xor { a: 0, b: 1, dst: 2 },
+                And { a: 1, b: 2, dst: 3 },
+                Xor { a: 3, b: 1, dst: 2 },
+                Or { a: 0, b: 2, dst: 3 },
+            ]
+        );
+    }
+
+    #[test]
+    fn commutative_canonicalization_rotates_prev_dst_into_first_operand() {
+        let ops = vec![
+            And { a: 0, b: 1, dst: 4 },
+            Or { a: 2, b: 4, dst: 4 },        // prev dst in `b` → swapped
+            Xor { a: 3, b: 4, dst: 5 },       // swapped (both Xor forms fuse)
+            Maj { a: 0, b: 1, c: 5, dst: 6 }, // prev dst in `c` → rotated
+            And { a: 6, b: 2, dst: 7 },       // already leads with it
+            Copy { src: 1, dst: 8 },          // non-commutative: untouched
+            Xor { a: 0, b: 1, dst: 9 },       // prev dst not an operand
+        ];
+        let canon = canonicalize_commutative(&ops);
+        assert_eq!(
+            canon,
+            vec![
+                And { a: 0, b: 1, dst: 4 },
+                Or { a: 4, b: 2, dst: 4 },
+                Xor { a: 4, b: 3, dst: 5 },
+                Maj { a: 5, b: 1, c: 0, dst: 6 },
+                And { a: 6, b: 2, dst: 7 },
+                Copy { src: 1, dst: 8 },
+                Xor { a: 0, b: 1, dst: 9 },
+            ]
+        );
+    }
+
+    #[test]
+    fn canonicalization_feeds_the_fusion_peephole() {
+        // the backwards-named chain compiles with zero elisions as
+        // written, one per link once canonicalized — and stays bit-exact
+        let cfg = DramConfig::tiny_test();
+        let ops = vec![
+            And { a: 0, b: 1, dst: 3 },
+            Or { a: 2, b: 3, dst: 4 },
+            And { a: 1, b: 4, dst: 5 },
+        ];
+        let raw = crate::pim::compile::CompiledProgram::compile(&ops, &cfg);
+        let fused_raw = crate::pim::compile::CompiledProgram::compile_fused(&ops, &cfg);
+        let canon = canonicalize_commutative(&ops);
+        let fused = crate::pim::compile::CompiledProgram::compile_fused(&canon, &cfg);
+        assert_eq!(fused_raw.elided_aaps(), 0, "backwards operands never fuse");
+        assert_eq!(fused.elided_aaps(), 2, "one elision per chained link");
+
+        let mut rng = Rng::new(11);
+        let mut sa0 = Subarray::new(8, 64);
+        let mut sa1 = Subarray::new(8, 64);
+        for r in 0..3 {
+            let bits = BitRow::random(64, &mut rng);
+            sa0.write_row(r, bits.clone());
+            sa1.write_row(r, bits);
+        }
+        executor::run(&mut sa0, raw.commands());
+        executor::run(&mut sa1, fused.commands());
+        for r in 0..8 {
+            assert_eq!(sa0.read_row(r), sa1.read_row(r), "row {r}");
+        }
+    }
+
+    #[test]
+    fn optimize_kernel_is_bit_exact_on_observable_rows() {
+        let mut rng = Rng::new(5);
+        // a multiplier-ish stanza: accumulator seeded to zero, temporaries
+        // declared scratch (recording rows 6..=8)
+        let raw = vec![
+            SetZero { dst: 6 },
+            And { a: 6, b: 0, dst: 7 },      // folds to SetZero
+            Xor { a: 6, b: 1, dst: 8 },      // folds to Copy
+            Or { a: 7, b: 8, dst: 6 },
+            ShiftBy { src: 6, dst: 2, n: 2, dir: ShiftDir::Left },
+            ShiftRight { src: 6, dst: 8 },   // dead: 8 never read again
+        ];
+        let (canonical, slots) = crate::pim::compile::canonicalize(&raw);
+        let opt = optimize_kernel(canonical.clone(), slots.clone(), &[6, 7, 8]);
+        assert!(opt.ops.len() < canonical.len(), "DCE removed something");
+        assert!(opt.slots.len() < slots.len(), "scratch slots merged");
+        assert_eq!(opt.rows_saved, slots.len() - opt.slots.len());
+
+        let cfg = DramConfig::tiny_test();
+        let base = crate::pim::compile::CompiledProgram::compile(&canonical, &cfg);
+        let tuned = crate::pim::compile::CompiledProgram::compile_opts(
+            &opt.ops,
+            &cfg,
+            cfg.fingerprint(),
+            OptLevel::O2,
+        );
+        assert!(tuned.census().total() < base.census().total());
+        assert!(tuned.n_slots() < base.n_slots());
+
+        // replay both against the same initial state through the original
+        // recording-row bindings; every non-scratch row must agree
+        let mut sa0 = Subarray::new(16, 128);
+        let mut sa2 = Subarray::new(16, 128);
+        for r in 0..3 {
+            let bits = BitRow::random(128, &mut rng);
+            sa0.write_row(r, bits.clone());
+            sa2.write_row(r, bits);
+        }
+        executor::run_compiled(&mut sa0, &base, Some(&slots));
+        executor::run_compiled(&mut sa2, &tuned, Some(&opt.slots));
+        for r in 0..6 {
+            assert_eq!(sa0.read_row(r), sa2.read_row(r), "observable row {r}");
+        }
+    }
+
+    #[test]
+    fn select_lowering_picks_compact_xor_at_o2() {
+        let cfg = DramConfig::tiny_test();
+        let timer = CommandTimer::new(cfg.timing.clone());
+        let model = EnergyModel::new(&cfg.energy, &cfg.timing);
+        let op = Xor { a: 0, b: 1, dst: 2 };
+        let o1 = select_lowering(&op, OptLevel::O1, &timer, &model);
+        let o2 = select_lowering(&op, OptLevel::O2, &timer, &model);
+        assert_eq!(o1, op.lower());
+        assert_eq!(o2, PimOp::xor_compact(0, 1, 2));
+        // ops with a single lowering are untouched at every level
+        let shift = ShiftRight { src: 0, dst: 1 };
+        assert_eq!(select_lowering(&shift, OptLevel::O2, &timer, &model), shift.lower());
+    }
+}

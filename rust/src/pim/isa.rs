@@ -136,6 +136,40 @@ impl PimOp {
         }
     }
 
+    /// Alternative XOR lowering via `(a|b) & !(a&b)`: 9 AAP + 3 TRA +
+    /// 1 DRA = 13 commands, vs 15 for the default `(a&!b)|(!a&b)` form.
+    /// The AND result is NOT-loaded into DCC0 straight from the compute
+    /// row (a DRA senses any fully-driven row, compute rows included), so
+    /// one DRA and one AAP of operand staging disappear. Same scratch
+    /// discipline as [`Self::lower`]: every compute/DCC row is
+    /// re-initialized before use and data rows are written only by the
+    /// trailing AAP. The cost-driven selection pass
+    /// ([`crate::pim::compile::passes::select_lowering`]) picks between
+    /// the two forms by the config's latency/energy model.
+    pub fn xor_compact(a: usize, b: usize, dst: usize) -> Vec<Command> {
+        use Command::*;
+        use RowRef::*;
+        vec![
+            // T0 := a & b
+            Aap { src: Data(a), dst: Compute(0) },
+            Aap { src: Data(b), dst: Compute(1) },
+            Aap { src: Zero, dst: Compute(2) },
+            Tra { a: Compute(0), b: Compute(1), c: Compute(2) },
+            // DCC0 := !(a & b), loaded directly off the compute row
+            Dra { a: Compute(0), b: DccComp(0) },
+            // T0 := a | b
+            Aap { src: Data(a), dst: Compute(0) },
+            Aap { src: Data(b), dst: Compute(1) },
+            Aap { src: One, dst: Compute(2) },
+            Tra { a: Compute(0), b: Compute(1), c: Compute(2) },
+            // T0 := (a | b) & !(a & b)
+            Aap { src: DccTrue(0), dst: Compute(1) },
+            Aap { src: Zero, dst: Compute(2) },
+            Tra { a: Compute(0), b: Compute(1), c: Compute(2) },
+            Aap { src: Compute(0), dst: Data(dst) },
+        ]
+    }
+
     fn tra_logic(a: usize, b: usize, control: RowRef, dst: usize) -> Vec<Command> {
         use Command::*;
         use RowRef::*;
@@ -233,6 +267,31 @@ mod tests {
             op.map_rows(|r| r * 2),
             PimOp::ShiftBy { src: 10, dst: 12, n: 3, dir: ShiftDir::Left }
         );
+    }
+
+    #[test]
+    fn xor_compact_is_bit_exact_and_cheaper() {
+        use crate::dram::subarray::Subarray;
+        use crate::pim::executor;
+        use crate::util::{BitRow, Rng};
+
+        let default = PimOp::Xor { a: 0, b: 1, dst: 2 }.lower();
+        let compact = PimOp::xor_compact(0, 1, 2);
+        assert_eq!(default.len(), 15);
+        assert_eq!(compact.len(), 13);
+        let mut rng = Rng::new(11);
+        for case in 0..32 {
+            let mut sa = Subarray::new(8, 256);
+            let a = BitRow::random(256, &mut rng);
+            // case 0 exercises aliased operands (a == b)
+            let b = if case == 0 { a.clone() } else { BitRow::random(256, &mut rng) };
+            sa.write_row(0, a.clone());
+            sa.write_row(1, b.clone());
+            executor::run(&mut sa, &compact);
+            assert_eq!(sa.read_row(2), &a.xor(&b), "case {case}");
+            assert_eq!(sa.read_row(0), &a, "operand a preserved");
+            assert_eq!(sa.read_row(1), &b, "operand b preserved");
+        }
     }
 
     #[test]

@@ -13,8 +13,8 @@ pub mod isa;
 pub mod program;
 
 pub use compile::{
-    canonicalize, CacheStats, CommandCensus, CompiledBlock, CompiledProgram, ProgramCache,
-    ProgramShape,
+    apply_binding, canonicalize, CacheStats, CommandCensus, CompiledBlock, CompiledProgram,
+    OptLevel, ProgramCache, ProgramShape,
 };
 pub use executor::{apply, apply_op, run, run_compiled};
 pub use isa::{shift_commands, PimOp};

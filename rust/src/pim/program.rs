@@ -162,17 +162,28 @@ pub trait PimTape {
     fn width(&self) -> usize;
     /// Accept one macro-op.
     fn op(&mut self, op: PimOp);
+    /// Declare `row` a kernel-private temporary: its value after the
+    /// kernel is *not* observable by the caller. The recording tape
+    /// ([`ProgramSketch`]) collects these so the opt-level-2 kernel
+    /// passes ([`crate::pim::compile::passes`]) may dead-code-eliminate
+    /// trailing writes to it and merge disjoint-lifetime temporaries onto
+    /// shared slots. Eager tapes ignore the declaration — a no-op default.
+    fn scratch(&mut self, row: usize) {
+        let _ = row;
+    }
 }
 
-/// Recording tape: collects the macro-op schedule of one kernel shape.
+/// Recording tape: collects the macro-op schedule of one kernel shape,
+/// plus the rows the kernel declared as private temporaries.
 pub struct ProgramSketch {
     width: usize,
     ops: Vec<PimOp>,
+    scratch: Vec<usize>,
 }
 
 impl ProgramSketch {
     pub fn new(width: usize) -> Self {
-        ProgramSketch { width, ops: Vec::new() }
+        ProgramSketch { width, ops: Vec::new(), scratch: Vec::new() }
     }
 
     pub fn ops(&self) -> &[PimOp] {
@@ -181,6 +192,15 @@ impl ProgramSketch {
 
     pub fn into_ops(self) -> Vec<PimOp> {
         self.ops
+    }
+
+    /// Recording rows declared scratch via [`PimTape::scratch`].
+    pub fn scratch_rows(&self) -> &[usize] {
+        &self.scratch
+    }
+
+    pub fn into_parts(self) -> (Vec<PimOp>, Vec<usize>) {
+        (self.ops, self.scratch)
     }
 }
 
@@ -191,6 +211,12 @@ impl PimTape for ProgramSketch {
 
     fn op(&mut self, op: PimOp) {
         self.ops.push(op);
+    }
+
+    fn scratch(&mut self, row: usize) {
+        if !self.scratch.contains(&row) {
+            self.scratch.push(row);
+        }
     }
 }
 

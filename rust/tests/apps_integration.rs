@@ -13,7 +13,7 @@ use shiftdram::apps::multiplier::{install_mul_masks, shift_and_add_mul};
 use shiftdram::apps::reed_solomon::{rs_encode_ref, RsEncoder};
 use shiftdram::config::DramConfig;
 use shiftdram::dram::subarray::Subarray;
-use shiftdram::pim::{executor, PimOp, ProgramCache};
+use shiftdram::pim::{executor, OptLevel, PimOp, ProgramCache};
 use shiftdram::util::proptest::{check, prop_assert_eq};
 use shiftdram::util::{BitRow, Rng, ShiftDir};
 
@@ -292,6 +292,117 @@ fn fused_default_aap_calibrations_for_app_kernels() {
         total_elided > 0,
         "the app suite's chained logic kernels must exercise the peephole"
     );
+}
+
+/// Run one app-kernel body at opt level 1 and level 2 against private
+/// caches and assert the pipeline is invisible in the named observable
+/// rows while never costing more commands. Returns `(o1_aaps, o2_aaps)`.
+fn calibrate_opt2(
+    rows: usize,
+    cols: usize,
+    width: usize,
+    out_rows: &[usize],
+    body: impl Fn(&mut ElementCtx),
+) -> (usize, usize) {
+    let cfg = DramConfig::ddr3_1333_4gb();
+    let run = |opt: OptLevel| {
+        let mut ctx = ElementCtx::with_config(
+            rows,
+            cols,
+            width,
+            cfg.clone(),
+            Arc::new(ProgramCache::with_opt(256, opt)),
+        );
+        body(&mut ctx);
+        ctx
+    };
+    let o1 = run(OptLevel::O1);
+    let o2 = run(OptLevel::O2);
+    for &r in out_rows {
+        assert_eq!(o2.row(r), o1.row(r), "opt level must be invisible in row {r}");
+    }
+    assert!(o2.aaps <= o1.aaps, "O2 AAPs {} regressed vs O1 {}", o2.aaps, o1.aaps);
+    assert!(o2.tras <= o1.tras, "O2 TRAs {} regressed vs O1 {}", o2.tras, o1.tras);
+    assert!(o2.dras <= o1.dras, "O2 DRAs {} regressed vs O1 {}", o2.dras, o1.dras);
+    (o1.aaps, o2.aaps)
+}
+
+#[test]
+fn opt2_pipeline_reconciles_app_calibrations() {
+    // The level-2 pass pipeline (constant folding, liveness-driven scratch
+    // reuse, cost-based lowering, chunk sharing) must be invisible in
+    // every observable row of every app kernel family, never cost more
+    // commands than the level-1 default, and strictly pay off on the
+    // Xor-heavy kernels (multiplier, AES MixColumns).
+    use shiftdram::apps::reed_solomon::PAR_BASE;
+
+    // adder (kogge-stone)
+    calibrate_opt2(48, 128, 8, &[0, 1, 2], |ctx| {
+        install_masks(ctx);
+        let n = ctx.n_elements();
+        let a: Vec<u64> = (0..n).map(|j| (j as u64 * 37 + 11) & 0xFF).collect();
+        let b: Vec<u64> = (0..n).map(|j| (j as u64 * 59 + 3) & 0xFF).collect();
+        ctx.set_row(0, ctx.pack(&a));
+        ctx.set_row(1, ctx.pack(&b));
+        kogge_stone_add(ctx, 0, 1, 2);
+    });
+
+    // gf (full vector multiply)
+    calibrate_opt2(40, 128, 8, &[0, 1, 2], |ctx| {
+        install_gf_masks(ctx);
+        let n = ctx.n_elements();
+        let a: Vec<u64> = (0..n).map(|j| (j as u64 * 13 + 7) & 0xFF).collect();
+        let b: Vec<u64> = (0..n).map(|j| (j as u64 * 29 + 1) & 0xFF).collect();
+        ctx.set_row(0, ctx.pack(&a));
+        ctx.set_row(1, ctx.pack(&b));
+        gf_mul(ctx, 0, 1, 2);
+    });
+
+    // multiplier (shift-and-add, inlined KS adders) — must strictly win
+    let (mul_o1, mul_o2) = calibrate_opt2(48, 128, 8, &[0, 1, 2], |ctx| {
+        install_masks(ctx);
+        install_mul_masks(ctx);
+        let n = ctx.n_elements();
+        let a: Vec<u64> = (0..n).map(|j| (j as u64 * 91 + 2) & 0xFF).collect();
+        let b: Vec<u64> = (0..n).map(|j| (j as u64 * 53 + 9) & 0xFF).collect();
+        ctx.set_row(0, ctx.pack(&a));
+        ctx.set_row(1, ctx.pack(&b));
+        shift_and_add_mul(ctx, 0, 1, 2);
+    });
+    assert!(
+        mul_o2 < mul_o1,
+        "multiplier must strictly benefit from the pipeline: {mul_o2} vs {mul_o1}"
+    );
+
+    // aes MixColumns — must strictly win
+    let aes_out: Vec<usize> = (0..16).map(|r| STATE_BASE + r).collect();
+    let (aes_o1, aes_o2) = calibrate_opt2(96, 128, 8, &aes_out, |ctx| {
+        install_aes(ctx);
+        let n = ctx.n_elements();
+        for r in 0..16 {
+            let vals: Vec<u64> =
+                (0..n).map(|j| ((r * 31 + j * 17 + 5) as u64) & 0xFF).collect();
+            ctx.set_row(STATE_BASE + r, ctx.pack(&vals));
+        }
+        mix_columns(ctx);
+    });
+    assert!(
+        aes_o2 < aes_o1,
+        "AES MixColumns must strictly benefit from the pipeline: {aes_o2} vs {aes_o1}"
+    );
+
+    // reed_solomon (RS(7,3) encode + parity rows observable)
+    let rs_out: Vec<usize> = (0..3).map(|j| PAR_BASE + j).collect();
+    calibrate_opt2(96, 128, 8, &rs_out, |ctx| {
+        let enc = RsEncoder::new(7, 3);
+        enc.install(ctx);
+        let n = ctx.n_elements();
+        let msgs: Vec<Vec<u8>> = (0..n)
+            .map(|j| (0..7).map(|k| ((j * 7 + k * 3 + 1) & 0xFF) as u8).collect())
+            .collect();
+        enc.load_messages(ctx, &msgs);
+        enc.encode(ctx);
+    });
 }
 
 #[test]

@@ -94,7 +94,9 @@ fn throughput_scales_linearly_to_32_banks() {
 
 #[test]
 fn multi_row_kernel_through_one_submission() {
-    let sys = SystemBuilder::new(&cfg()).banks(2).max_batch(3).build();
+    // pinned to opt level 1: the census assertions below are against the
+    // default XOR lowering (level 2 selects the cheaper compact form)
+    let sys = SystemBuilder::new(&cfg()).banks(2).max_batch(3).fuse_aap(true).build();
     let client = sys.client();
     let rows = client.alloc_rows(4).expect("rows");
     let mut rng = Rng::new(9);
