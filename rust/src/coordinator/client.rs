@@ -350,6 +350,22 @@ impl<T> Ticket<T> {
             Err(_) => Err(PimError::WorkerLost { bank: self.bank }),
         }
     }
+
+    /// Non-blocking resolution: `Some(result)` once the response has
+    /// arrived (or the worker is gone), `None` while still in flight.
+    /// This is what lets the network front end poll many tickets from
+    /// one writer thread and stream replies out-of-order — a slow
+    /// read-back never head-of-line-blocks the connection.
+    pub fn try_resolve(&mut self) -> Option<Result<T, PimError>> {
+        match self.rx.try_recv() {
+            Ok(Ok(resp)) => Some((self.decode)(resp)),
+            Ok(Err(e)) => Some(Err(e)),
+            Err(std::sync::mpsc::TryRecvError::Empty) => None,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                Some(Err(PimError::WorkerLost { bank: self.bank }))
+            }
+        }
+    }
 }
 
 fn decode_never<T>(_: PimResponse) -> Result<T, PimError> {

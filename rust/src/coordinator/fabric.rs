@@ -949,6 +949,7 @@ impl PimFabric {
             rehomed_sessions: counters.rehomed(),
             frag_before: shards.iter().map(|s| s.report.frag_before).sum(),
             frag_after: shards.iter().map(|s| s.report.frag_after).sum(),
+            rows_live: shards.iter().map(|s| s.report.rows_live).sum(),
             shards,
         }
     }

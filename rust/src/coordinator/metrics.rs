@@ -350,6 +350,95 @@ impl FabricCounters {
     }
 }
 
+/// Counters of the network serving front end ([`crate::net`]): one set
+/// per [`NetServer`], shared by every accept loop and connection thread.
+/// Lock-free, read by `Stats` requests and the shutdown summary.
+///
+/// [`NetServer`]: crate::net::NetServer
+#[derive(Debug, Default)]
+pub struct NetCounters {
+    connections: AtomicU64,
+    open: AtomicU64,
+    frames: AtomicU64,
+    busy_rejects: AtomicU64,
+    timeouts: AtomicU64,
+    reaped: AtomicU64,
+    malformed: AtomicU64,
+}
+
+impl NetCounters {
+    /// A connection was accepted (also bumps the open gauge).
+    pub fn record_connection(&self) {
+        self.connections.fetch_add(1, Ordering::Relaxed);
+        self.open.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A connection fully tore down (rows freed, seat released).
+    pub fn record_closed(&self) {
+        self.open.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// One well-formed frame arrived.
+    pub fn record_frame(&self) {
+        self.frames.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request bounced off the per-connection inflight cap.
+    pub fn record_busy_reject(&self) {
+        self.busy_rejects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A read or write hit its socket timeout.
+    pub fn record_timeout(&self) {
+        self.timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An idle connection was reaped by the server.
+    pub fn record_reaped(&self) {
+        self.reaped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A frame failed to decode (the connection is torn down).
+    pub fn record_malformed(&self) {
+        self.malformed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total connections ever accepted.
+    pub fn connections(&self) -> u64 {
+        self.connections.load(Ordering::Relaxed)
+    }
+
+    /// Connections currently open (gauge).
+    pub fn open(&self) -> u64 {
+        self.open.load(Ordering::Relaxed)
+    }
+
+    /// Well-formed frames received across all connections.
+    pub fn frames(&self) -> u64 {
+        self.frames.load(Ordering::Relaxed)
+    }
+
+    /// Requests rejected with `Busy` backpressure.
+    pub fn busy_rejects(&self) -> u64 {
+        self.busy_rejects.load(Ordering::Relaxed)
+    }
+
+    /// Socket read/write timeouts observed.
+    pub fn timeouts(&self) -> u64 {
+        self.timeouts.load(Ordering::Relaxed)
+    }
+
+    /// Idle connections reaped.
+    pub fn reaped(&self) -> u64 {
+        self.reaped.load(Ordering::Relaxed)
+    }
+
+    /// Malformed frames that tore a connection down.
+    pub fn malformed(&self) -> u64 {
+        self.malformed.load(Ordering::Relaxed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -491,5 +580,25 @@ mod tests {
         m.record(1, &delta(1000, 4000, 1_000_000_000, 0.0, 0));
         // 2000 requests / 1 ms = 2 MOps/s — parallelism doubles throughput
         assert!((m.throughput_mops() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn net_counters_track_lifecycle_and_gauge() {
+        let c = NetCounters::default();
+        c.record_connection();
+        c.record_connection();
+        assert_eq!((c.connections(), c.open()), (2, 2));
+        c.record_closed();
+        assert_eq!((c.connections(), c.open()), (2, 1), "open is a gauge");
+        c.record_frame();
+        c.record_busy_reject();
+        c.record_timeout();
+        c.record_reaped();
+        c.record_malformed();
+        assert_eq!(c.frames(), 1);
+        assert_eq!(c.busy_rejects(), 1);
+        assert_eq!(c.timeouts(), 1);
+        assert_eq!(c.reaped(), 1);
+        assert_eq!(c.malformed(), 1);
     }
 }

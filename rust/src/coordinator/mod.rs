@@ -77,7 +77,7 @@ pub mod system;
 pub use batcher::{Batch, Batcher, OverflowDeque};
 pub use client::{Kernel, PimClient, PimError, Receipt, RowHandle, Ticket};
 pub use fabric::{FabricClient, FabricTicket, JobOutput, JobSpec, PimFabric};
-pub use metrics::{FabricCounters, Metrics, MoverCounters, WorkerDelta};
+pub use metrics::{FabricCounters, Metrics, MoverCounters, NetCounters, WorkerDelta};
 pub use mover::MoveStats;
 pub use reorder::{Access, PlanStats, Reorderable};
 pub use router::{Placement, Router};

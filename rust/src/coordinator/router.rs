@@ -145,6 +145,11 @@ impl RowSlab {
         self.subarrays.iter().map(|s| s.available()).sum()
     }
 
+    /// Rows currently allocated in this bank.
+    pub fn live(&self) -> usize {
+        self.subarrays.iter().map(|s| s.live).sum()
+    }
+
     /// The subarray with the most free rows (sessions land there).
     fn roomiest(&self) -> usize {
         self.subarrays
@@ -284,6 +289,13 @@ impl Router {
     /// Allocatable rows left on a bank.
     pub fn rows_available(&self, bank: usize) -> usize {
         self.slabs[bank].available()
+    }
+
+    /// Rows currently allocated across every bank — the leak gauge
+    /// `SystemReport::rows_live` snapshots at shutdown (a clean teardown
+    /// of every session leaves it at zero).
+    pub fn rows_live(&self) -> usize {
+        self.slabs.iter().map(|s| s.live()).sum()
     }
 
     /// Charge `cost` units of queued work to a bank (on submit).

@@ -196,6 +196,10 @@ pub struct SystemReport {
     pub frag_before: u64,
     /// the same score after that pass
     pub frag_after: u64,
+    /// rows still allocated in the slabs at shutdown — the leak gauge:
+    /// zero when every session freed its rows (the network front end's
+    /// disconnect teardown is audited against this)
+    pub rows_live: u64,
 }
 
 impl SystemReport {
@@ -835,6 +839,7 @@ impl PimSystem {
         }
         let m = &self.core.metrics;
         let cache = self.core.cache.stats();
+        let rows_live = self.core.router.lock().unwrap().rows_live() as u64;
         SystemReport {
             banks: m.n_banks(),
             requests: m.total_requests(),
@@ -862,6 +867,7 @@ impl PimSystem {
             rehomed_sessions: 0,
             frag_before: m.mover().frag_before(),
             frag_after: m.mover().frag_after(),
+            rows_live,
         }
     }
 

@@ -40,6 +40,12 @@
 //!   ([`coordinator::fabric`]) runs one such coordinator per channel —
 //!   private caches, slabs, and metrics per shard — with two-level
 //!   placement and cost-weighted work stealing of unplaced jobs.
+//! * [`net`] — the network serving front end: a hand-rolled framed
+//!   binary protocol over TCP/Unix-domain sockets mapping each
+//!   connection onto a coordinator session, with out-of-order reply
+//!   streaming (correlation ids + non-blocking tickets), `Busy`
+//!   backpressure, idle reaping, leak-free disconnect teardown, and an
+//!   open-loop tail-latency load generator (`BENCH_serve.json`).
 //! * [`apps`] — application kernels compiled to PIM programs: adders,
 //!   shift-and-add multiplication, GF(2⁸), AES steps, Reed-Solomon —
 //!   each a thin client of the same serving API (`apps::ElementCtx`).
@@ -55,6 +61,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dram;
 pub mod layout;
+pub mod net;
 pub mod pim;
 pub mod report;
 pub mod runtime;

@@ -8,8 +8,18 @@
 //! shiftdram mc [--trials N] [--backend pjrt|native] [--node 22nm]
 //! shiftdram serve --banks N --ops K [--batch B] [--channels C] [--reorder-window W]
 //!                 [--defrag] [--defrag-threshold T] [--rehome-after R] [--opt-level L]
+//!                 [--listen ADDR] [--uds PATH] [--port-file F] [--exit-idle-s N]
+//!                 [--max-inflight M]
+//! shiftdram loadgen [--connect ADDR | --uds PATH] [--conns N] [--ops K] [--seed S]
+//!                   [--inflight D] [--gap-us U] [--banks N]
 //! shiftdram demo [gf|aes|rs|mul|adder]
 //! ```
+//!
+//! With `--listen`/`--uds`, `serve` fronts the system with the network
+//! protocol ([`shiftdram::net`]) instead of running the in-process demo
+//! workload. `loadgen` drives that socket path and writes
+//! `BENCH_serve.json`; with no target it spawns an in-process server on
+//! an ephemeral loopback port first.
 
 use shiftdram::circuit::montecarlo::{Backend, MonteCarlo};
 use shiftdram::circuit::params::TechNode;
@@ -29,8 +39,42 @@ fn opt(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
 }
 
+/// Strict `--flag N` lookup: an absent flag yields `default`, but a flag
+/// with a missing or malformed value is an error naming the flag — it is
+/// never silently swallowed into the default.
+fn try_opt_usize(args: &[String], name: &str, default: usize) -> Result<usize, String> {
+    match args.iter().position(|a| a == name) {
+        None => Ok(default),
+        Some(i) => match args.get(i + 1) {
+            None => Err(format!("flag {name} expects a value")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("flag {name} expects an unsigned integer, got {v:?}")),
+        },
+    }
+}
+
 fn opt_usize(args: &[String], name: &str, default: usize) -> usize {
-    opt(args, name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    match try_opt_usize(args, name, default) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn opt_f64(args: &[String], name: &str, default: f64) -> f64 {
+    match args.iter().position(|a| a == name) {
+        None => default,
+        Some(i) => match args.get(i + 1).and_then(|v| v.parse().ok()) {
+            Some(v) => v,
+            None => {
+                eprintln!("flag {name} expects a number");
+                std::process::exit(2);
+            }
+        },
+    }
 }
 
 fn main() {
@@ -96,6 +140,25 @@ fn main() {
                 "--opt-level",
                 OptLevel::from_env().index(),
             ));
+            let listen = opt(&args, "--listen");
+            let uds = opt(&args, "--uds");
+            if listen.is_some() || uds.is_some() {
+                serve_net(
+                    &cfg,
+                    &args,
+                    channels,
+                    banks,
+                    batch,
+                    window,
+                    defrag,
+                    defrag_threshold,
+                    rehome_after,
+                    opt_level,
+                    listen,
+                    uds,
+                );
+                return;
+            }
             if channels > 1 {
                 serve_fabric(
                     &cfg,
@@ -167,14 +230,220 @@ fn main() {
                 std::process::exit(1);
             }
         }
+        Some("loadgen") => loadgen_cmd(&cfg, &args),
         Some("demo") => demo(args.get(1).map(String::as_str).unwrap_or("gf")),
         _ => {
             eprintln!(
-                "usage: shiftdram <report|workload|mc|serve|demo> [options]\n\
+                "usage: shiftdram <report|workload|mc|serve|loadgen|demo> [options]\n\
                  see rust/src/main.rs header for the full grammar"
             );
             std::process::exit(2);
         }
+    }
+}
+
+/// `serve --listen ADDR` / `--uds PATH`: put the network front end in
+/// front of the system (or fabric, with `--channels C`) and serve until
+/// killed — or, with `--exit-idle-s N`, until at least one connection has
+/// come and gone and none have been open for `N` seconds (the CI smoke
+/// path). `--port-file F` writes the bound TCP address for `:0` binds.
+#[allow(clippy::too_many_arguments)]
+fn serve_net(
+    cfg: &DramConfig,
+    args: &[String],
+    channels: usize,
+    banks: usize,
+    batch: usize,
+    window: usize,
+    defrag: bool,
+    defrag_threshold: usize,
+    rehome_after: usize,
+    opt_level: OptLevel,
+    listen: Option<String>,
+    uds: Option<String>,
+) {
+    use shiftdram::net::{NetConfig, NetServer};
+    use std::time::{Duration, Instant};
+
+    let mut net_cfg = NetConfig::new(cfg.geometry.cols_per_row);
+    net_cfg.max_inflight = opt_usize(args, "--max-inflight", net_cfg.max_inflight);
+    let exit_idle_s = opt_usize(args, "--exit-idle-s", 0);
+
+    let server = if channels > 1 {
+        let fabric = SystemBuilder::new(cfg)
+            .channels(channels)
+            .banks(banks)
+            .max_batch(batch)
+            .reorder_window(window)
+            .defrag(defrag)
+            .defrag_threshold(defrag_threshold)
+            .rehome_after(rehome_after)
+            .opt_level(opt_level)
+            .build_fabric();
+        NetServer::over_fabric(fabric, net_cfg)
+    } else {
+        let sys = SystemBuilder::new(cfg)
+            .banks(banks)
+            .max_batch(batch)
+            .reorder_window(window)
+            .defrag(defrag)
+            .defrag_threshold(defrag_threshold)
+            .opt_level(opt_level)
+            .build();
+        NetServer::new(sys, net_cfg)
+    };
+
+    if let Some(addr) = &listen {
+        let local = match server.listen_tcp(addr) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("cannot listen on {addr}: {e}");
+                std::process::exit(1);
+            }
+        };
+        println!("listening on tcp {local}");
+        if let Some(f) = opt(args, "--port-file") {
+            if let Err(e) = std::fs::write(&f, format!("{local}\n")) {
+                eprintln!("cannot write port file {f}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    #[cfg(unix)]
+    if let Some(path) = &uds {
+        if let Err(e) = server.listen_uds(std::path::Path::new(path)) {
+            eprintln!("cannot listen on uds {path}: {e}");
+            std::process::exit(1);
+        }
+        println!("listening on uds {path}");
+    }
+    #[cfg(not(unix))]
+    if let Some(path) = &uds {
+        eprintln!("--uds {path}: unix sockets are unsupported on this platform");
+        std::process::exit(2);
+    }
+
+    let exit_idle = Duration::from_secs(exit_idle_s as u64);
+    let mut idle_since: Option<Instant> = None;
+    loop {
+        std::thread::sleep(Duration::from_millis(100));
+        if exit_idle_s == 0 {
+            continue; // serve until killed
+        }
+        let c = server.counters();
+        if c.connections() > 0 && c.open() == 0 {
+            let since = *idle_since.get_or_insert_with(Instant::now);
+            if since.elapsed() >= exit_idle {
+                break;
+            }
+        } else {
+            idle_since = None;
+        }
+    }
+
+    let stats = server.stats();
+    let r = server.shutdown();
+    println!(
+        "net: {} connections, {} frames, {} busy rejects, {} timeouts, {} reaped, {} malformed",
+        stats.connections, stats.frames, stats.busy_rejects, stats.timeouts, stats.reaped,
+        stats.malformed
+    );
+    println!(
+        "served {} kernels: makespan {:.3} us, {} AAPs, cache {:.1}% hit, {} rows live at shutdown",
+        r.kernels,
+        r.makespan_ps as f64 / 1e6,
+        r.total_aaps,
+        100.0 * r.cache_hit_rate,
+        r.rows_live
+    );
+    if !r.is_clean() {
+        eprintln!("worker failures: {:?}", r.worker_failures);
+        std::process::exit(1);
+    }
+}
+
+/// `loadgen`: drive a network front end with open-loop traffic and write
+/// the latency/goodput report to `BENCH_serve.json`. With `--connect` or
+/// `--uds` it targets a running server; with neither it spawns its own
+/// in-process server on an ephemeral loopback port (and then also checks
+/// that the run leaked no rows). Exits nonzero on any protocol error.
+fn loadgen_cmd(cfg: &DramConfig, args: &[String]) {
+    use shiftdram::net::{loadgen, LoadConfig, NetConfig, NetServer, Target};
+
+    let mut lcfg = LoadConfig::new(opt_usize(args, "--conns", 8), opt_usize(args, "--ops", 2048));
+    lcfg.seed = opt_usize(args, "--seed", lcfg.seed as usize) as u64;
+    lcfg.inflight = opt_usize(args, "--inflight", lcfg.inflight);
+    lcfg.mean_gap_us = opt_f64(args, "--gap-us", lcfg.mean_gap_us);
+
+    let target = if let Some(addr) = opt(args, "--connect") {
+        Some(Target::Tcp(addr))
+    } else {
+        match opt(args, "--uds") {
+            #[cfg(unix)]
+            Some(path) => Some(Target::Uds(path.into())),
+            #[cfg(not(unix))]
+            Some(path) => {
+                eprintln!("--uds {path}: unix sockets are unsupported on this platform");
+                std::process::exit(2);
+            }
+            None => None,
+        }
+    };
+    let (target, server) = match target {
+        Some(t) => (t, None),
+        None => {
+            let banks = opt_usize(args, "--banks", 8);
+            let sys = SystemBuilder::new(cfg).banks(banks).build();
+            let server = NetServer::new(sys, NetConfig::new(cfg.geometry.cols_per_row));
+            let local = server.listen_tcp("127.0.0.1:0").expect("bind loopback");
+            println!("spawned in-process server on {local}");
+            (Target::Tcp(local.to_string()), Some(server))
+        }
+    };
+
+    let report = match loadgen::run(&target, &lcfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("loadgen transport failure: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "{} conns x {} ops: {}/{} done, {} busy, {} errors in {:.2} s ({:.0} ops/s goodput)",
+        report.conns,
+        lcfg.ops_per_conn,
+        report.ops_done,
+        report.ops_sent,
+        report.busy,
+        report.errors,
+        report.elapsed_s,
+        report.goodput_ops_s
+    );
+    println!(
+        "latency: p50 {:.1} us, p99 {:.1} us, p999 {:.1} us",
+        report.p50_us, report.p99_us, report.p999_us
+    );
+    match loadgen::write_json(&report, "serve") {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => {
+            eprintln!("cannot write BENCH_serve.json: {e}");
+            std::process::exit(1);
+        }
+    }
+
+    let mut rows_leaked = 0u64;
+    if let Some(server) = server {
+        let r = server.shutdown();
+        rows_leaked = r.rows_live;
+        println!("in-process server: {} kernels served, {} rows live", r.kernels, r.rows_live);
+        if !r.is_clean() {
+            eprintln!("worker failures: {:?}", r.worker_failures);
+            std::process::exit(1);
+        }
+    }
+    if report.errors > 0 || rows_leaked > 0 {
+        eprintln!("loadgen saw {} protocol errors, {} leaked rows", report.errors, rows_leaked);
+        std::process::exit(1);
     }
 }
 
@@ -381,5 +650,46 @@ fn demo(which: &str) {
             eprintln!("unknown demo {other}; try gf|aes|rs|mul|adder");
             std::process::exit(2);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::try_opt_usize;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|a| a.to_string()).collect()
+    }
+
+    #[test]
+    fn opt_usize_defaults_when_flag_absent() {
+        assert_eq!(try_opt_usize(&argv(&["serve"]), "--banks", 8), Ok(8));
+    }
+
+    #[test]
+    fn opt_usize_parses_a_valid_value() {
+        assert_eq!(try_opt_usize(&argv(&["serve", "--banks", "4"]), "--banks", 8), Ok(4));
+    }
+
+    #[test]
+    fn opt_usize_rejects_garbage_naming_the_flag() {
+        let err = try_opt_usize(&argv(&["serve", "--banks", "four"]), "--banks", 8).unwrap_err();
+        assert!(err.contains("--banks"), "error must name the flag: {err}");
+        assert!(err.contains("four"), "error must echo the bad value: {err}");
+    }
+
+    #[test]
+    fn opt_usize_rejects_a_missing_value_naming_the_flag() {
+        let err = try_opt_usize(&argv(&["serve", "--banks"]), "--banks", 8).unwrap_err();
+        assert!(err.contains("--banks"), "error must name the flag: {err}");
+    }
+
+    #[test]
+    fn opt_usize_no_longer_swallows_a_trailing_flag_as_value() {
+        // regression: `--banks --defrag` used to silently fall back to the
+        // default instead of rejecting `--defrag` as the value
+        let err =
+            try_opt_usize(&argv(&["serve", "--banks", "--defrag"]), "--banks", 8).unwrap_err();
+        assert!(err.contains("--banks"), "error must name the flag: {err}");
     }
 }

@@ -1,0 +1,944 @@
+//! Hand-rolled binary wire codec for the network serving front end.
+//!
+//! Like the CLI parser, the codec vendors nothing: every frame is a fixed
+//! 20-byte header followed by a little-endian payload, written and parsed
+//! with checked readers that can never over-read or panic on hostile
+//! input — malformed bytes come back as a [`CodecError`], period.
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic        0x5049_4D31 ("PIM1")
+//!      4     2  version      protocol version (currently 1)
+//!      6     2  kind         0 = request, 1 = response
+//!      8     8  corr         correlation id, echoed on the reply
+//!     16     4  payload_len  bytes that follow (<= 1 MiB)
+//!     20     …  payload      one encoded NetRequest / NetResponse
+//! ```
+//!
+//! Responses stream back out-of-order; the correlation id is what ties a
+//! reply to its request, so a slow read-back never head-of-line-blocks
+//! the connection.
+
+use std::io::Read;
+
+use crate::pim::{CommandCensus, PimOp};
+use crate::util::{BitRow, ShiftDir};
+
+/// Frame magic: "PIM1" as a little-endian u32.
+pub const MAGIC: u32 = 0x5049_4d31;
+/// Protocol version spoken by this build (checked in `Hello`/`Welcome`).
+pub const PROTO_VERSION: u16 = 1;
+/// Fixed frame-header size in bytes.
+pub const HEADER_LEN: usize = 20;
+/// Hard cap on a frame payload; larger claims are rejected unread.
+pub const MAX_PAYLOAD: usize = 1 << 20;
+/// Cap on handles per `Alloc`/`Free`/`SubmitKernel`.
+pub const MAX_HANDLES: usize = 4096;
+/// Cap on macro-ops per submitted kernel.
+pub const MAX_OPS: usize = 65_536;
+/// Cap on an error-message string.
+const MAX_STRING: usize = 4096;
+
+/// Error-code namespace for [`NetResponse::Error`].
+pub const ERR_PROTOCOL: u16 = 1;
+/// The request was well-formed but the PIM system rejected it.
+pub const ERR_PIM: u16 = 2;
+/// The request named a handle this session does not own.
+pub const ERR_UNKNOWN_HANDLE: u16 = 3;
+
+/// Everything that can go wrong turning bytes into frames. Decoding is
+/// total: hostile input maps onto one of these, never a panic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodecError {
+    /// Header magic was not `PIM1`.
+    BadMagic,
+    /// Header version field did not match [`PROTO_VERSION`].
+    BadVersion(u16),
+    /// Header kind field was neither request nor response.
+    BadKind(u16),
+    /// Claimed payload length exceeds [`MAX_PAYLOAD`].
+    Oversized(u32),
+    /// The stream ended (or the buffer ran out) mid-frame.
+    Truncated,
+    /// Unknown message or op tag.
+    BadTag(u8),
+    /// Payload bytes left over after a complete message.
+    Trailing,
+    /// A field value was out of range (the str names the field).
+    BadValue(&'static str),
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::BadMagic => write!(f, "bad frame magic"),
+            CodecError::BadVersion(v) => write!(f, "unsupported protocol version {v}"),
+            CodecError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            CodecError::Oversized(n) => write!(f, "payload length {n} exceeds {MAX_PAYLOAD}"),
+            CodecError::Truncated => write!(f, "truncated frame"),
+            CodecError::BadTag(t) => write!(f, "unknown message tag {t}"),
+            CodecError::Trailing => write!(f, "trailing bytes after message"),
+            CodecError::BadValue(what) => write!(f, "bad field value: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// Which side of the protocol a frame carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    Request,
+    Response,
+}
+
+impl FrameKind {
+    fn to_u16(self) -> u16 {
+        match self {
+            FrameKind::Request => 0,
+            FrameKind::Response => 1,
+        }
+    }
+
+    fn from_u16(v: u16) -> Result<Self, CodecError> {
+        match v {
+            0 => Ok(FrameKind::Request),
+            1 => Ok(FrameKind::Response),
+            other => Err(CodecError::BadKind(other)),
+        }
+    }
+}
+
+/// One parsed frame: header fields plus the raw payload, ready for
+/// [`decode_request`] / [`decode_response`].
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub corr: u64,
+    pub payload: Vec<u8>,
+}
+
+/// A row handle as it crosses the wire: the session-local `(slot, gen)`
+/// pair. The server resolves it against the connection's own handle
+/// table, so one session can never name another session's rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct WireHandle {
+    pub slot: u32,
+    pub gen: u32,
+}
+
+/// Session verbs a client sends. `Hello` must come first; everything
+/// else is rejected until the handshake completes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum NetRequest {
+    /// Handshake: the client's protocol version.
+    Hello { proto: u16 },
+    /// Allocate `n` rows on the session's bank.
+    Alloc { n: u32 },
+    /// Free previously allocated rows.
+    Free { handles: Vec<WireHandle> },
+    /// Write a full row of bits.
+    WriteRow { handle: WireHandle, bits: BitRow },
+    /// Read a full row back.
+    ReadRow { handle: WireHandle },
+    /// Submit a whole kernel bound to the listed handle rows.
+    SubmitKernel { ops: Vec<PimOp>, handles: Vec<WireHandle> },
+    /// Snapshot the server's network counters.
+    Stats,
+    /// Clean goodbye: drain pending replies, then close.
+    Goodbye,
+}
+
+/// Snapshot of the server's [`NetCounters`] carried by
+/// [`NetResponse::Stats`].
+///
+/// [`NetCounters`]: crate::coordinator::NetCounters
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireStats {
+    pub connections: u64,
+    pub open: u64,
+    pub frames: u64,
+    pub busy_rejects: u64,
+    pub timeouts: u64,
+    pub reaped: u64,
+    pub malformed: u64,
+}
+
+/// Replies the server streams back, matched to requests by correlation
+/// id (out-of-order is normal).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum NetResponse {
+    /// Handshake accepted: server protocol version, row width in bits,
+    /// the bank this session landed on, and the inflight cap.
+    Welcome { proto: u16, cols: u32, bank: u32, max_inflight: u32 },
+    /// Rows allocated by `Alloc`.
+    Allocated { handles: Vec<WireHandle> },
+    /// How many handles `Free` actually released.
+    Freed { n: u32 },
+    /// A `WriteRow` completed.
+    Done,
+    /// A `ReadRow` result.
+    Row { bits: BitRow },
+    /// A `SubmitKernel` receipt: command census + elided AAPs.
+    Ran { census: CommandCensus, elided_aaps: u64 },
+    /// Counter snapshot for `Stats`.
+    Stats(WireStats),
+    /// Acknowledges `Goodbye`; the server closes after sending it.
+    Bye,
+    /// Backpressure: the connection is at its inflight cap. The request
+    /// was NOT enqueued — retry after a reply drains.
+    Busy { inflight: u32, cap: u32 },
+    /// The request failed; `code` is one of the `ERR_*` constants.
+    Error { code: u16, message: String },
+}
+
+// ---------------------------------------------------------------------
+// checked little-endian reader / writer
+// ---------------------------------------------------------------------
+
+struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if self.remaining() < n {
+            return Err(CodecError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, CodecError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, CodecError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, CodecError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// Every decode ends here: leftover bytes are a protocol error, not
+    /// something to silently ignore.
+    fn finish(self) -> Result<(), CodecError> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(CodecError::Trailing)
+        }
+    }
+}
+
+#[derive(Default)]
+struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn try_u32(v: usize, what: &'static str) -> Result<u32, CodecError> {
+    u32::try_from(v).map_err(|_| CodecError::BadValue(what))
+}
+
+// ---------------------------------------------------------------------
+// field codecs
+// ---------------------------------------------------------------------
+
+fn put_handle(w: &mut ByteWriter, h: &WireHandle) {
+    w.u32(h.slot);
+    w.u32(h.gen);
+}
+
+fn get_handle(r: &mut ByteReader) -> Result<WireHandle, CodecError> {
+    Ok(WireHandle { slot: r.u32()?, gen: r.u32()? })
+}
+
+fn put_handles(w: &mut ByteWriter, hs: &[WireHandle]) -> Result<(), CodecError> {
+    if hs.len() > MAX_HANDLES {
+        return Err(CodecError::BadValue("too many handles"));
+    }
+    w.u32(try_u32(hs.len(), "handle count")?);
+    for h in hs {
+        put_handle(w, h);
+    }
+    Ok(())
+}
+
+fn get_handles(r: &mut ByteReader) -> Result<Vec<WireHandle>, CodecError> {
+    let n = r.u32()? as usize;
+    if n > MAX_HANDLES {
+        return Err(CodecError::BadValue("too many handles"));
+    }
+    if r.remaining() < n * 8 {
+        return Err(CodecError::Truncated);
+    }
+    let mut hs = Vec::with_capacity(n);
+    for _ in 0..n {
+        hs.push(get_handle(r)?);
+    }
+    Ok(hs)
+}
+
+fn put_row(w: &mut ByteWriter, bits: &BitRow) -> Result<(), CodecError> {
+    if bits.is_empty() {
+        return Err(CodecError::BadValue("empty row"));
+    }
+    w.u32(try_u32(bits.len(), "row length")?);
+    for word in bits.words() {
+        w.u64(*word);
+    }
+    Ok(())
+}
+
+fn get_row(r: &mut ByteReader) -> Result<BitRow, CodecError> {
+    let len = r.u32()? as usize;
+    if len == 0 {
+        return Err(CodecError::BadValue("empty row"));
+    }
+    let words = len.div_ceil(64);
+    if r.remaining() < words * 8 {
+        return Err(CodecError::Truncated);
+    }
+    let mut row = BitRow::zeros(len);
+    for slot in row.words_mut() {
+        *slot = r.u64()?;
+    }
+    let tail = len % 64;
+    if tail != 0 && row.words().last().is_some_and(|w| w >> tail != 0) {
+        return Err(CodecError::BadValue("row tail bits set beyond len"));
+    }
+    Ok(row)
+}
+
+fn put_op(w: &mut ByteWriter, op: &PimOp) -> Result<(), CodecError> {
+    let slot = |v: usize| try_u32(v, "op row slot");
+    match *op {
+        PimOp::Copy { src, dst } => {
+            w.u8(0);
+            w.u32(slot(src)?);
+            w.u32(slot(dst)?);
+        }
+        PimOp::SetZero { dst } => {
+            w.u8(1);
+            w.u32(slot(dst)?);
+        }
+        PimOp::SetOnes { dst } => {
+            w.u8(2);
+            w.u32(slot(dst)?);
+        }
+        PimOp::Not { src, dst } => {
+            w.u8(3);
+            w.u32(slot(src)?);
+            w.u32(slot(dst)?);
+        }
+        PimOp::And { a, b, dst } => {
+            w.u8(4);
+            w.u32(slot(a)?);
+            w.u32(slot(b)?);
+            w.u32(slot(dst)?);
+        }
+        PimOp::Or { a, b, dst } => {
+            w.u8(5);
+            w.u32(slot(a)?);
+            w.u32(slot(b)?);
+            w.u32(slot(dst)?);
+        }
+        PimOp::Maj { a, b, c, dst } => {
+            w.u8(6);
+            w.u32(slot(a)?);
+            w.u32(slot(b)?);
+            w.u32(slot(c)?);
+            w.u32(slot(dst)?);
+        }
+        PimOp::Xor { a, b, dst } => {
+            w.u8(7);
+            w.u32(slot(a)?);
+            w.u32(slot(b)?);
+            w.u32(slot(dst)?);
+        }
+        PimOp::ShiftRight { src, dst } => {
+            w.u8(8);
+            w.u32(slot(src)?);
+            w.u32(slot(dst)?);
+        }
+        PimOp::ShiftLeft { src, dst } => {
+            w.u8(9);
+            w.u32(slot(src)?);
+            w.u32(slot(dst)?);
+        }
+        PimOp::ShiftBy { src, dst, n, dir } => {
+            w.u8(10);
+            w.u32(slot(src)?);
+            w.u32(slot(dst)?);
+            w.u32(try_u32(n, "shift amount")?);
+            w.u8(match dir {
+                ShiftDir::Right => 0,
+                ShiftDir::Left => 1,
+            });
+        }
+    }
+    Ok(())
+}
+
+fn get_op(r: &mut ByteReader) -> Result<PimOp, CodecError> {
+    let tag = r.u8()?;
+    let op = match tag {
+        0 => PimOp::Copy { src: r.u32()? as usize, dst: r.u32()? as usize },
+        1 => PimOp::SetZero { dst: r.u32()? as usize },
+        2 => PimOp::SetOnes { dst: r.u32()? as usize },
+        3 => PimOp::Not { src: r.u32()? as usize, dst: r.u32()? as usize },
+        4 => PimOp::And { a: r.u32()? as usize, b: r.u32()? as usize, dst: r.u32()? as usize },
+        5 => PimOp::Or { a: r.u32()? as usize, b: r.u32()? as usize, dst: r.u32()? as usize },
+        6 => PimOp::Maj {
+            a: r.u32()? as usize,
+            b: r.u32()? as usize,
+            c: r.u32()? as usize,
+            dst: r.u32()? as usize,
+        },
+        7 => PimOp::Xor { a: r.u32()? as usize, b: r.u32()? as usize, dst: r.u32()? as usize },
+        8 => PimOp::ShiftRight { src: r.u32()? as usize, dst: r.u32()? as usize },
+        9 => PimOp::ShiftLeft { src: r.u32()? as usize, dst: r.u32()? as usize },
+        10 => {
+            let src = r.u32()? as usize;
+            let dst = r.u32()? as usize;
+            let n = r.u32()? as usize;
+            let dir = match r.u8()? {
+                0 => ShiftDir::Right,
+                1 => ShiftDir::Left,
+                _ => return Err(CodecError::BadValue("shift direction")),
+            };
+            PimOp::ShiftBy { src, dst, n, dir }
+        }
+        other => return Err(CodecError::BadTag(other)),
+    };
+    Ok(op)
+}
+
+fn put_ops(w: &mut ByteWriter, ops: &[PimOp]) -> Result<(), CodecError> {
+    if ops.len() > MAX_OPS {
+        return Err(CodecError::BadValue("too many ops"));
+    }
+    w.u32(try_u32(ops.len(), "op count")?);
+    for op in ops {
+        put_op(w, op)?;
+    }
+    Ok(())
+}
+
+fn get_ops(r: &mut ByteReader) -> Result<Vec<PimOp>, CodecError> {
+    let n = r.u32()? as usize;
+    if n > MAX_OPS {
+        return Err(CodecError::BadValue("too many ops"));
+    }
+    // every op is at least 5 bytes (tag + one u32 field)
+    if r.remaining() < n * 5 {
+        return Err(CodecError::Truncated);
+    }
+    let mut ops = Vec::with_capacity(n);
+    for _ in 0..n {
+        ops.push(get_op(r)?);
+    }
+    Ok(ops)
+}
+
+fn put_string(w: &mut ByteWriter, s: &str) -> Result<(), CodecError> {
+    if s.len() > MAX_STRING {
+        return Err(CodecError::BadValue("string too long"));
+    }
+    w.u32(try_u32(s.len(), "string length")?);
+    w.buf.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+fn get_string(r: &mut ByteReader) -> Result<String, CodecError> {
+    let n = r.u32()? as usize;
+    if n > MAX_STRING {
+        return Err(CodecError::BadValue("string too long"));
+    }
+    let bytes = r.take(n)?;
+    String::from_utf8(bytes.to_vec()).map_err(|_| CodecError::BadValue("string not utf-8"))
+}
+
+fn put_census(w: &mut ByteWriter, c: &CommandCensus) {
+    w.u64(c.act);
+    w.u64(c.pre);
+    w.u64(c.read);
+    w.u64(c.write);
+    w.u64(c.aap);
+    w.u64(c.dra);
+    w.u64(c.tra);
+    w.u64(c.refresh);
+}
+
+fn get_census(r: &mut ByteReader) -> Result<CommandCensus, CodecError> {
+    Ok(CommandCensus {
+        act: r.u64()?,
+        pre: r.u64()?,
+        read: r.u64()?,
+        write: r.u64()?,
+        aap: r.u64()?,
+        dra: r.u64()?,
+        tra: r.u64()?,
+        refresh: r.u64()?,
+    })
+}
+
+// ---------------------------------------------------------------------
+// message payloads
+// ---------------------------------------------------------------------
+
+fn encode_request_payload(req: &NetRequest) -> Result<Vec<u8>, CodecError> {
+    let mut w = ByteWriter::default();
+    match req {
+        NetRequest::Hello { proto } => {
+            w.u8(0);
+            w.u16(*proto);
+        }
+        NetRequest::Alloc { n } => {
+            w.u8(1);
+            w.u32(*n);
+        }
+        NetRequest::Free { handles } => {
+            w.u8(2);
+            put_handles(&mut w, handles)?;
+        }
+        NetRequest::WriteRow { handle, bits } => {
+            w.u8(3);
+            put_handle(&mut w, handle);
+            put_row(&mut w, bits)?;
+        }
+        NetRequest::ReadRow { handle } => {
+            w.u8(4);
+            put_handle(&mut w, handle);
+        }
+        NetRequest::SubmitKernel { ops, handles } => {
+            w.u8(5);
+            put_ops(&mut w, ops)?;
+            put_handles(&mut w, handles)?;
+        }
+        NetRequest::Stats => w.u8(6),
+        NetRequest::Goodbye => w.u8(7),
+    }
+    Ok(w.buf)
+}
+
+/// Decode a request payload (the bytes after the frame header).
+pub fn decode_request(payload: &[u8]) -> Result<NetRequest, CodecError> {
+    let mut r = ByteReader::new(payload);
+    let req = match r.u8()? {
+        0 => NetRequest::Hello { proto: r.u16()? },
+        1 => {
+            let n = r.u32()?;
+            if n == 0 || n as usize > MAX_HANDLES {
+                return Err(CodecError::BadValue("alloc count"));
+            }
+            NetRequest::Alloc { n }
+        }
+        2 => NetRequest::Free { handles: get_handles(&mut r)? },
+        3 => NetRequest::WriteRow { handle: get_handle(&mut r)?, bits: get_row(&mut r)? },
+        4 => NetRequest::ReadRow { handle: get_handle(&mut r)? },
+        5 => NetRequest::SubmitKernel { ops: get_ops(&mut r)?, handles: get_handles(&mut r)? },
+        6 => NetRequest::Stats,
+        7 => NetRequest::Goodbye,
+        other => return Err(CodecError::BadTag(other)),
+    };
+    r.finish()?;
+    Ok(req)
+}
+
+fn encode_response_payload(resp: &NetResponse) -> Result<Vec<u8>, CodecError> {
+    let mut w = ByteWriter::default();
+    match resp {
+        NetResponse::Welcome { proto, cols, bank, max_inflight } => {
+            w.u8(0);
+            w.u16(*proto);
+            w.u32(*cols);
+            w.u32(*bank);
+            w.u32(*max_inflight);
+        }
+        NetResponse::Allocated { handles } => {
+            w.u8(1);
+            put_handles(&mut w, handles)?;
+        }
+        NetResponse::Freed { n } => {
+            w.u8(2);
+            w.u32(*n);
+        }
+        NetResponse::Done => w.u8(3),
+        NetResponse::Row { bits } => {
+            w.u8(4);
+            put_row(&mut w, bits)?;
+        }
+        NetResponse::Ran { census, elided_aaps } => {
+            w.u8(5);
+            put_census(&mut w, census);
+            w.u64(*elided_aaps);
+        }
+        NetResponse::Stats(s) => {
+            w.u8(6);
+            w.u64(s.connections);
+            w.u64(s.open);
+            w.u64(s.frames);
+            w.u64(s.busy_rejects);
+            w.u64(s.timeouts);
+            w.u64(s.reaped);
+            w.u64(s.malformed);
+        }
+        NetResponse::Bye => w.u8(7),
+        NetResponse::Busy { inflight, cap } => {
+            w.u8(8);
+            w.u32(*inflight);
+            w.u32(*cap);
+        }
+        NetResponse::Error { code, message } => {
+            w.u8(9);
+            w.u16(*code);
+            put_string(&mut w, message)?;
+        }
+    }
+    Ok(w.buf)
+}
+
+/// Decode a response payload (the bytes after the frame header).
+pub fn decode_response(payload: &[u8]) -> Result<NetResponse, CodecError> {
+    let mut r = ByteReader::new(payload);
+    let resp = match r.u8()? {
+        0 => NetResponse::Welcome {
+            proto: r.u16()?,
+            cols: r.u32()?,
+            bank: r.u32()?,
+            max_inflight: r.u32()?,
+        },
+        1 => NetResponse::Allocated { handles: get_handles(&mut r)? },
+        2 => NetResponse::Freed { n: r.u32()? },
+        3 => NetResponse::Done,
+        4 => NetResponse::Row { bits: get_row(&mut r)? },
+        5 => NetResponse::Ran { census: get_census(&mut r)?, elided_aaps: r.u64()? },
+        6 => NetResponse::Stats(WireStats {
+            connections: r.u64()?,
+            open: r.u64()?,
+            frames: r.u64()?,
+            busy_rejects: r.u64()?,
+            timeouts: r.u64()?,
+            reaped: r.u64()?,
+            malformed: r.u64()?,
+        }),
+        7 => NetResponse::Bye,
+        8 => NetResponse::Busy { inflight: r.u32()?, cap: r.u32()? },
+        9 => NetResponse::Error { code: r.u16()?, message: get_string(&mut r)? },
+        other => return Err(CodecError::BadTag(other)),
+    };
+    r.finish()?;
+    Ok(resp)
+}
+
+// ---------------------------------------------------------------------
+// frames
+// ---------------------------------------------------------------------
+
+fn encode_frame(kind: FrameKind, corr: u64, payload: Vec<u8>) -> Result<Vec<u8>, CodecError> {
+    if payload.len() > MAX_PAYLOAD {
+        return Err(CodecError::Oversized(payload.len() as u32));
+    }
+    let mut w = ByteWriter { buf: Vec::with_capacity(HEADER_LEN + payload.len()) };
+    w.u32(MAGIC);
+    w.u16(PROTO_VERSION);
+    w.u16(kind.to_u16());
+    w.u64(corr);
+    w.u32(payload.len() as u32);
+    w.buf.extend_from_slice(&payload);
+    Ok(w.buf)
+}
+
+/// Encode one request as a complete frame (header + payload).
+pub fn encode_request(corr: u64, req: &NetRequest) -> Result<Vec<u8>, CodecError> {
+    encode_frame(FrameKind::Request, corr, encode_request_payload(req)?)
+}
+
+/// Encode one response as a complete frame (header + payload).
+pub fn encode_response(corr: u64, resp: &NetResponse) -> Result<Vec<u8>, CodecError> {
+    encode_frame(FrameKind::Response, corr, encode_response_payload(resp)?)
+}
+
+fn parse_header(buf: &[u8]) -> Result<(FrameKind, u64, usize), CodecError> {
+    let mut r = ByteReader::new(buf);
+    if r.u32()? != MAGIC {
+        return Err(CodecError::BadMagic);
+    }
+    let version = r.u16()?;
+    if version != PROTO_VERSION {
+        return Err(CodecError::BadVersion(version));
+    }
+    let kind = FrameKind::from_u16(r.u16()?)?;
+    let corr = r.u64()?;
+    let len = r.u32()?;
+    if len as usize > MAX_PAYLOAD {
+        return Err(CodecError::Oversized(len));
+    }
+    Ok((kind, corr, len as usize))
+}
+
+/// What one [`FrameReader::poll`] call produced.
+#[derive(Debug)]
+pub enum FramePoll {
+    /// A complete frame arrived.
+    Frame(Frame),
+    /// The read would block / timed out; call again later. Any partial
+    /// frame stays buffered, so timeouts mid-frame lose nothing.
+    Idle,
+    /// The peer closed cleanly at a frame boundary.
+    Eof,
+}
+
+/// A frame-read failure: transport-level or protocol-level.
+#[derive(Debug)]
+pub enum ReadError {
+    Io(std::io::Error),
+    Codec(CodecError),
+}
+
+impl std::fmt::Display for ReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReadError::Io(e) => write!(f, "io error: {e}"),
+            ReadError::Codec(e) => write!(f, "codec error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ReadError {}
+
+/// Incremental frame parser over any [`Read`]. Designed for sockets with
+/// a read timeout: a timeout mid-frame returns [`FramePoll::Idle`] and
+/// keeps the partial bytes, so the caller can tick its idle/stop checks
+/// and resume without losing stream alignment.
+#[derive(Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pull bytes until a full frame, a quiet period, EOF, or an error.
+    pub fn poll(&mut self, r: &mut impl Read) -> Result<FramePoll, ReadError> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            if self.buf.len() >= HEADER_LEN {
+                let (kind, corr, len) =
+                    parse_header(&self.buf[..HEADER_LEN]).map_err(ReadError::Codec)?;
+                if self.buf.len() >= HEADER_LEN + len {
+                    let payload = self.buf[HEADER_LEN..HEADER_LEN + len].to_vec();
+                    self.buf.drain(..HEADER_LEN + len);
+                    return Ok(FramePoll::Frame(Frame { kind, corr, payload }));
+                }
+            }
+            match r.read(&mut chunk) {
+                Ok(0) => {
+                    return if self.buf.is_empty() {
+                        Ok(FramePoll::Eof)
+                    } else {
+                        Err(ReadError::Codec(CodecError::Truncated))
+                    };
+                }
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return Ok(FramePoll::Idle);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(ReadError::Io(e)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn roundtrip_req(req: &NetRequest) -> NetRequest {
+        let bytes = encode_request(7, req).unwrap();
+        let mut reader = FrameReader::new();
+        let mut src = &bytes[..];
+        match reader.poll(&mut src).unwrap() {
+            FramePoll::Frame(f) => {
+                assert_eq!(f.kind, FrameKind::Request);
+                assert_eq!(f.corr, 7);
+                decode_request(&f.payload).unwrap()
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let mut rng = Rng::new(0xC0DEC);
+        let reqs = vec![
+            NetRequest::Hello { proto: PROTO_VERSION },
+            NetRequest::Alloc { n: 3 },
+            NetRequest::Free {
+                handles: vec![WireHandle { slot: 1, gen: 0 }, WireHandle { slot: 9, gen: 4 }],
+            },
+            NetRequest::WriteRow {
+                handle: WireHandle { slot: 2, gen: 1 },
+                bits: BitRow::random(100, &mut rng),
+            },
+            NetRequest::ReadRow { handle: WireHandle { slot: 2, gen: 1 } },
+            NetRequest::SubmitKernel {
+                ops: vec![
+                    PimOp::ShiftBy { src: 0, dst: 0, n: 3, dir: ShiftDir::Left },
+                    PimOp::Xor { a: 0, b: 1, dst: 2 },
+                ],
+                handles: vec![WireHandle { slot: 0, gen: 0 }],
+            },
+            NetRequest::Stats,
+            NetRequest::Goodbye,
+        ];
+        for req in &reqs {
+            assert_eq!(&roundtrip_req(req), req);
+        }
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let mut rng = Rng::new(0xFACE);
+        let resps = vec![
+            NetResponse::Welcome { proto: 1, cols: 256, bank: 3, max_inflight: 64 },
+            NetResponse::Allocated { handles: vec![WireHandle { slot: 5, gen: 2 }] },
+            NetResponse::Freed { n: 2 },
+            NetResponse::Done,
+            NetResponse::Row { bits: BitRow::random(256, &mut rng) },
+            NetResponse::Ran {
+                census: CommandCensus { act: 1, pre: 2, aap: 12, ..CommandCensus::default() },
+                elided_aaps: 3,
+            },
+            NetResponse::Stats(WireStats { connections: 8, frames: 99, ..WireStats::default() }),
+            NetResponse::Bye,
+            NetResponse::Busy { inflight: 64, cap: 64 },
+            NetResponse::Error { code: ERR_PIM, message: "stale handle".into() },
+        ];
+        for resp in &resps {
+            let bytes = encode_response(42, resp).unwrap();
+            let (kind, corr, len) = parse_header(&bytes[..HEADER_LEN]).unwrap();
+            assert_eq!(kind, FrameKind::Response);
+            assert_eq!(corr, 42);
+            assert_eq!(len, bytes.len() - HEADER_LEN);
+            assert_eq!(&decode_response(&bytes[HEADER_LEN..]).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = encode_request(0, &NetRequest::Stats).unwrap();
+        bytes[0] ^= 0xff;
+        let mut reader = FrameReader::new();
+        match reader.poll(&mut &bytes[..]) {
+            Err(ReadError::Codec(CodecError::BadMagic)) => {}
+            other => panic!("expected BadMagic, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncation_never_panics() {
+        let bytes = encode_request(
+            1,
+            &NetRequest::SubmitKernel {
+                ops: vec![PimOp::Maj { a: 0, b: 1, c: 2, dst: 3 }],
+                handles: vec![WireHandle { slot: 0, gen: 0 }],
+            },
+        )
+        .unwrap();
+        for cut in 0..bytes.len() {
+            let mut reader = FrameReader::new();
+            match reader.poll(&mut &bytes[..cut]) {
+                Ok(FramePoll::Eof) if cut == 0 => {}
+                Err(ReadError::Codec(CodecError::Truncated)) => {}
+                other => panic!("cut at {cut}: unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_claim_rejected_unread() {
+        let mut bytes = encode_request(0, &NetRequest::Stats).unwrap();
+        bytes[16..20].copy_from_slice(&(MAX_PAYLOAD as u32 + 1).to_le_bytes());
+        let mut reader = FrameReader::new();
+        match reader.poll(&mut &bytes[..]) {
+            Err(ReadError::Codec(CodecError::Oversized(_))) => {}
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut payload = encode_request_payload(&NetRequest::Stats).unwrap();
+        payload.push(0);
+        assert_eq!(decode_request(&payload), Err(CodecError::Trailing));
+    }
+
+    #[test]
+    fn split_delivery_reassembles() {
+        let bytes = encode_request(9, &NetRequest::Alloc { n: 2 }).unwrap();
+        let mut reader = FrameReader::new();
+        let (a, b) = bytes.split_at(HEADER_LEN + 1);
+        match reader.poll(&mut &a[..]) {
+            // one Read source: EOF mid-frame surfaces after buffering,
+            // so feed the rest before judging
+            Err(ReadError::Codec(CodecError::Truncated)) => {}
+            other => panic!("expected Truncated on first half, got {other:?}"),
+        }
+        let mut reader = FrameReader::new();
+        let mut joined = a.to_vec();
+        joined.extend_from_slice(b);
+        match reader.poll(&mut &joined[..]).unwrap() {
+            FramePoll::Frame(f) => {
+                assert_eq!(decode_request(&f.payload).unwrap(), NetRequest::Alloc { n: 2 });
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+    }
+}

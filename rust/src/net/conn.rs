@@ -1,0 +1,574 @@
+//! Per-connection machinery: one reader thread (owns the session and its
+//! handle table) feeding one writer thread (polls tickets, streams
+//! replies out-of-order by correlation id).
+//!
+//! Robustness invariants:
+//! * a malformed frame gets a best-effort `Error` reply, then the
+//!   connection tears down;
+//! * teardown always frees every row the session still holds — after
+//!   waiting out in-flight work, so no stale queued write can land on a
+//!   row the slab has already re-issued;
+//! * the inflight cap is enforced before enqueueing: a connection at its
+//!   cap gets an immediate `Busy` reply and nothing is submitted.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{
+    FabricClient, Kernel, NetCounters, PimClient, PimError, Receipt, RowHandle, Ticket,
+};
+use crate::util::BitRow;
+
+use super::codec::{
+    decode_request, encode_response, FrameKind, FramePoll, FrameReader, NetRequest, NetResponse,
+    ReadError, WireHandle, WireStats, ERR_PIM, ERR_PROTOCOL, ERR_UNKNOWN_HANDLE, PROTO_VERSION,
+};
+use super::server::NetConfig;
+
+/// How often the reader wakes to check the stop flag and idle clock.
+const TICK: Duration = Duration::from_millis(25);
+
+/// A connection's session: a standalone-system client or a fabric one.
+/// Same verbs either way — the wire protocol does not care which
+/// topology serves it.
+pub(crate) enum Session {
+    Sys(PimClient),
+    Fab(FabricClient),
+}
+
+impl Session {
+    fn bank(&self) -> usize {
+        match self {
+            Session::Sys(c) => c.bank(),
+            Session::Fab(c) => c.bank(),
+        }
+    }
+
+    fn alloc_rows(&self, n: usize) -> Result<Vec<RowHandle>, PimError> {
+        match self {
+            Session::Sys(c) => c.alloc_rows(n),
+            Session::Fab(c) => c.alloc_rows(n),
+        }
+    }
+
+    fn free(&self, handle: RowHandle) -> bool {
+        match self {
+            Session::Sys(c) => c.free(handle),
+            Session::Fab(c) => c.free(handle),
+        }
+    }
+
+    fn write(&self, handle: &RowHandle, bits: BitRow) -> Ticket<()> {
+        match self {
+            Session::Sys(c) => c.write(handle, bits),
+            Session::Fab(c) => c.write(handle, bits),
+        }
+    }
+
+    fn read(&self, handle: &RowHandle) -> Ticket<BitRow> {
+        match self {
+            Session::Sys(c) => c.read(handle),
+            Session::Fab(c) => c.read(handle),
+        }
+    }
+
+    fn submit(&self, kernel: &Kernel, rows: &[RowHandle]) -> Ticket<Receipt> {
+        match self {
+            Session::Sys(c) => c.submit(kernel, rows),
+            Session::Fab(c) => c.submit(kernel, rows),
+        }
+    }
+
+    fn flush(&self) {
+        match self {
+            Session::Sys(c) => c.flush(),
+            Session::Fab(c) => c.flush(),
+        }
+    }
+}
+
+/// The minimal socket surface the connection machinery needs, so TCP and
+/// Unix-domain streams share one code path.
+pub(crate) trait StreamLike: Read + Write + Send + 'static {
+    fn try_clone_stream(&self) -> std::io::Result<Self>
+    where
+        Self: Sized;
+    fn set_read_timeout_opt(&self, d: Option<Duration>) -> std::io::Result<()>;
+    fn set_write_timeout_opt(&self, d: Option<Duration>) -> std::io::Result<()>;
+    fn shutdown_both(&self);
+}
+
+impl StreamLike for TcpStream {
+    fn try_clone_stream(&self) -> std::io::Result<Self> {
+        self.try_clone()
+    }
+
+    fn set_read_timeout_opt(&self, d: Option<Duration>) -> std::io::Result<()> {
+        self.set_read_timeout(d)
+    }
+
+    fn set_write_timeout_opt(&self, d: Option<Duration>) -> std::io::Result<()> {
+        self.set_write_timeout(d)
+    }
+
+    fn shutdown_both(&self) {
+        let _ = self.shutdown(Shutdown::Both);
+    }
+}
+
+#[cfg(unix)]
+impl StreamLike for UnixStream {
+    fn try_clone_stream(&self) -> std::io::Result<Self> {
+        self.try_clone()
+    }
+
+    fn set_read_timeout_opt(&self, d: Option<Duration>) -> std::io::Result<()> {
+        self.set_read_timeout(d)
+    }
+
+    fn set_write_timeout_opt(&self, d: Option<Duration>) -> std::io::Result<()> {
+        self.set_write_timeout(d)
+    }
+
+    fn shutdown_both(&self) {
+        let _ = self.shutdown(Shutdown::Both);
+    }
+}
+
+/// A ticket the writer is polling, typed by what it will decode to.
+enum Pending {
+    Done(Ticket<()>),
+    Row(Ticket<BitRow>),
+    Ran(Ticket<Receipt>),
+}
+
+/// Reader → writer commands.
+enum WriterItem {
+    /// Write this reply immediately.
+    Now(u64, NetResponse),
+    /// Poll this ticket; write its reply whenever it resolves.
+    Wait(u64, Pending),
+    /// Drain every pending reply in order, write `Bye`, then exit.
+    Bye(u64),
+    /// Exit without writing (teardown path).
+    Close,
+}
+
+fn pim_error(e: &PimError) -> NetResponse {
+    NetResponse::Error { code: ERR_PIM, message: e.to_string() }
+}
+
+fn protocol_error(message: &str) -> NetResponse {
+    NetResponse::Error { code: ERR_PROTOCOL, message: message.to_string() }
+}
+
+fn wait_pending(p: Pending) -> NetResponse {
+    match p {
+        Pending::Done(t) => match t.wait() {
+            Ok(()) => NetResponse::Done,
+            Err(e) => pim_error(&e),
+        },
+        Pending::Row(t) => match t.wait() {
+            Ok(bits) => NetResponse::Row { bits },
+            Err(e) => pim_error(&e),
+        },
+        Pending::Ran(t) => match t.wait() {
+            Ok(r) => NetResponse::Ran { census: r.census, elided_aaps: r.elided_aaps },
+            Err(e) => pim_error(&e),
+        },
+    }
+}
+
+fn try_resolve_pending(p: &mut Pending) -> Option<NetResponse> {
+    match p {
+        Pending::Done(t) => t.try_resolve().map(|r| match r {
+            Ok(()) => NetResponse::Done,
+            Err(e) => pim_error(&e),
+        }),
+        Pending::Row(t) => t.try_resolve().map(|r| match r {
+            Ok(bits) => NetResponse::Row { bits },
+            Err(e) => pim_error(&e),
+        }),
+        Pending::Ran(t) => t.try_resolve().map(|r| match r {
+            Ok(rc) => NetResponse::Ran { census: rc.census, elided_aaps: rc.elided_aaps },
+            Err(e) => pim_error(&e),
+        }),
+    }
+}
+
+/// Encode and write one reply. On failure the socket is shut down and
+/// `false` comes back — the writer goes dead but keeps consuming its
+/// queue so no ticket is ever lost.
+fn write_resp<S: StreamLike>(
+    stream: &mut S,
+    corr: u64,
+    resp: &NetResponse,
+    counters: &NetCounters,
+) -> bool {
+    let bytes = match encode_response(corr, resp) {
+        Ok(b) => b,
+        Err(_) => {
+            let fallback = protocol_error("unencodable response");
+            match encode_response(corr, &fallback) {
+                Ok(b) => b,
+                Err(_) => return false,
+            }
+        }
+    };
+    match stream.write_all(&bytes).and_then(|()| stream.flush()) {
+        Ok(()) => true,
+        Err(e) => {
+            if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) {
+                counters.record_timeout();
+            }
+            stream.shutdown_both();
+            false
+        }
+    }
+}
+
+/// The writer thread: streams immediate replies, polls pending tickets
+/// (out-of-order completion — correlation ids disambiguate), and on any
+/// exit path returns whatever is still unresolved so the reader can wait
+/// it out before freeing the session's rows.
+fn writer_loop<S: StreamLike>(
+    mut stream: S,
+    rx: Receiver<WriterItem>,
+    inflight: Arc<AtomicUsize>,
+    counters: Arc<NetCounters>,
+) -> VecDeque<(u64, Pending)> {
+    let mut pending: VecDeque<(u64, Pending)> = VecDeque::new();
+    let mut dead = false;
+    'serve: loop {
+        // take one queued command; block briefly only when no ticket
+        // needs polling
+        let item = if pending.is_empty() {
+            match rx.recv_timeout(TICK) {
+                Ok(it) => Some(it),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => break 'serve,
+            }
+        } else {
+            match rx.try_recv() {
+                Ok(it) => Some(it),
+                Err(TryRecvError::Empty) => None,
+                Err(TryRecvError::Disconnected) => break 'serve,
+            }
+        };
+        let mut progressed = item.is_some();
+        match item {
+            Some(WriterItem::Now(corr, resp)) => {
+                if !dead && !write_resp(&mut stream, corr, &resp, &counters) {
+                    dead = true;
+                }
+            }
+            Some(WriterItem::Wait(corr, p)) => pending.push_back((corr, p)),
+            Some(WriterItem::Bye(corr)) => {
+                while let Some((c, p)) = pending.pop_front() {
+                    let resp = wait_pending(p);
+                    inflight.fetch_sub(1, Ordering::Relaxed);
+                    if !dead && !write_resp(&mut stream, c, &resp, &counters) {
+                        dead = true;
+                    }
+                }
+                if !dead {
+                    write_resp(&mut stream, corr, &NetResponse::Bye, &counters);
+                }
+                break 'serve;
+            }
+            Some(WriterItem::Close) => break 'serve,
+            None => {}
+        }
+        // stream whichever pending tickets have resolved
+        let mut i = 0;
+        while i < pending.len() {
+            match try_resolve_pending(&mut pending[i].1) {
+                Some(resp) => {
+                    let (corr, _) = pending.remove(i).expect("index in range");
+                    inflight.fetch_sub(1, Ordering::Relaxed);
+                    progressed = true;
+                    if !dead && !write_resp(&mut stream, corr, &resp, &counters) {
+                        dead = true;
+                    }
+                }
+                None => i += 1,
+            }
+        }
+        if !progressed && !pending.is_empty() {
+            std::thread::sleep(Duration::from_micros(50));
+        }
+    }
+    stream.shutdown_both();
+    pending
+}
+
+/// Serve one connection to completion: handshake, request loop, and the
+/// teardown that frees every row the session still owns. Runs on its own
+/// thread; `stop` is the server-wide shutdown flag.
+pub(crate) fn handle_conn<S: StreamLike>(
+    mut stream: S,
+    session: Session,
+    cfg: NetConfig,
+    counters: Arc<NetCounters>,
+    stop: Arc<AtomicBool>,
+) {
+    counters.record_connection();
+    let _ = stream.set_read_timeout_opt(Some(TICK));
+
+    let writer_stream = match stream.try_clone_stream() {
+        Ok(s) => s,
+        Err(_) => {
+            counters.record_closed();
+            return;
+        }
+    };
+    let _ = writer_stream.set_write_timeout_opt(Some(cfg.write_timeout));
+
+    let inflight = Arc::new(AtomicUsize::new(0));
+    let (tx, rx) = channel::<WriterItem>();
+    let writer = {
+        let inflight = inflight.clone();
+        let counters = counters.clone();
+        std::thread::spawn(move || writer_loop(writer_stream, rx, inflight, counters))
+    };
+
+    let mut handles: HashMap<WireHandle, RowHandle> = HashMap::new();
+    read_loop(&mut stream, &session, &cfg, &counters, &stop, &inflight, &tx, &mut handles);
+
+    // teardown: stop the writer, wait out every in-flight ticket, then
+    // free whatever the session still holds — rows are never leaked and
+    // never freed under still-queued work
+    let _ = tx.send(WriterItem::Close);
+    drop(tx);
+    let leftover = writer.join().unwrap_or_default();
+    for (_, p) in leftover {
+        let _ = wait_pending(p);
+    }
+    for (_, h) in handles.drain() {
+        session.free(h);
+    }
+    session.flush();
+    counters.record_closed();
+}
+
+/// The reader loop: decode frames, enforce the handshake and the
+/// inflight cap, enqueue work, and hand replies to the writer.
+#[allow(clippy::too_many_arguments)]
+fn read_loop<S: StreamLike>(
+    stream: &mut S,
+    session: &Session,
+    cfg: &NetConfig,
+    counters: &Arc<NetCounters>,
+    stop: &Arc<AtomicBool>,
+    inflight: &Arc<AtomicUsize>,
+    tx: &Sender<WriterItem>,
+    handles: &mut HashMap<WireHandle, RowHandle>,
+) {
+    let mut reader = FrameReader::new();
+    let mut hello_done = false;
+    let mut last_activity = Instant::now();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let frame = match reader.poll(stream) {
+            Ok(FramePoll::Idle) => {
+                if inflight.load(Ordering::Relaxed) == 0
+                    && last_activity.elapsed() >= cfg.idle_timeout
+                {
+                    counters.record_reaped();
+                    return;
+                }
+                continue;
+            }
+            Ok(FramePoll::Eof) => return,
+            Ok(FramePoll::Frame(f)) => f,
+            Err(ReadError::Codec(e)) => {
+                counters.record_malformed();
+                let _ = tx.send(WriterItem::Now(0, protocol_error(&e.to_string())));
+                return;
+            }
+            Err(ReadError::Io(_)) => return,
+        };
+        counters.record_frame();
+        last_activity = Instant::now();
+        if frame.kind != FrameKind::Request {
+            counters.record_malformed();
+            let _ = tx.send(WriterItem::Now(frame.corr, protocol_error("expected a request")));
+            return;
+        }
+        let req = match decode_request(&frame.payload) {
+            Ok(r) => r,
+            Err(e) => {
+                counters.record_malformed();
+                let _ = tx.send(WriterItem::Now(frame.corr, protocol_error(&e.to_string())));
+                return;
+            }
+        };
+        let corr = frame.corr;
+        if !hello_done {
+            match req {
+                NetRequest::Hello { proto } if proto == PROTO_VERSION => {
+                    hello_done = true;
+                    let welcome = NetResponse::Welcome {
+                        proto: PROTO_VERSION,
+                        cols: cfg.cols as u32,
+                        bank: session.bank() as u32,
+                        max_inflight: cfg.max_inflight as u32,
+                    };
+                    let _ = tx.send(WriterItem::Now(corr, welcome));
+                }
+                NetRequest::Hello { proto } => {
+                    let msg = format!("unsupported protocol version {proto}");
+                    let _ = tx.send(WriterItem::Now(corr, protocol_error(&msg)));
+                    return;
+                }
+                _ => {
+                    let _ = tx.send(WriterItem::Now(corr, protocol_error("handshake required")));
+                    return;
+                }
+            }
+            continue;
+        }
+        match req {
+            NetRequest::Hello { .. } => {
+                let _ = tx.send(WriterItem::Now(corr, protocol_error("duplicate Hello")));
+                return;
+            }
+            NetRequest::Alloc { n } => {
+                let resp = match session.alloc_rows(n as usize) {
+                    Ok(rows) => {
+                        let wire: Vec<WireHandle> = rows
+                            .into_iter()
+                            .map(|h| {
+                                let w = WireHandle { slot: h.slot as u32, gen: h.gen };
+                                handles.insert(w, h);
+                                w
+                            })
+                            .collect();
+                        NetResponse::Allocated { handles: wire }
+                    }
+                    Err(e) => pim_error(&e),
+                };
+                let _ = tx.send(WriterItem::Now(corr, resp));
+            }
+            NetRequest::Free { handles: wire } => {
+                let mut n = 0u32;
+                for w in wire {
+                    if let Some(h) = handles.remove(&w) {
+                        if session.free(h) {
+                            n += 1;
+                        }
+                    }
+                }
+                let _ = tx.send(WriterItem::Now(corr, NetResponse::Freed { n }));
+            }
+            NetRequest::WriteRow { handle, bits } => {
+                if let Some(p) = admit(cfg, counters, inflight, tx, corr) {
+                    match handles.get(&handle) {
+                        Some(h) => {
+                            let ticket = session.write(h, bits);
+                            session.flush();
+                            p.enqueue(tx, corr, Pending::Done(ticket));
+                        }
+                        None => p.reject_unknown_handle(tx, corr, inflight),
+                    }
+                }
+            }
+            NetRequest::ReadRow { handle } => {
+                if let Some(p) = admit(cfg, counters, inflight, tx, corr) {
+                    match handles.get(&handle) {
+                        Some(h) => {
+                            let ticket = session.read(h);
+                            session.flush();
+                            p.enqueue(tx, corr, Pending::Row(ticket));
+                        }
+                        None => p.reject_unknown_handle(tx, corr, inflight),
+                    }
+                }
+            }
+            NetRequest::SubmitKernel { ops, handles: wire } => {
+                if let Some(p) = admit(cfg, counters, inflight, tx, corr) {
+                    let rows: Option<Vec<RowHandle>> =
+                        wire.iter().map(|w| handles.get(w).cloned()).collect();
+                    match rows {
+                        Some(rows) => {
+                            let kernel = Kernel::from_ops(&ops);
+                            let ticket = session.submit(&kernel, &rows);
+                            session.flush();
+                            p.enqueue(tx, corr, Pending::Ran(ticket));
+                        }
+                        None => p.reject_unknown_handle(tx, corr, inflight),
+                    }
+                }
+            }
+            NetRequest::Stats => {
+                let resp = NetResponse::Stats(snapshot(counters));
+                let _ = tx.send(WriterItem::Now(corr, resp));
+            }
+            NetRequest::Goodbye => {
+                let _ = tx.send(WriterItem::Bye(corr));
+                return;
+            }
+        }
+    }
+}
+
+/// Admission token: proof the inflight slot was taken. Either consumed
+/// by enqueueing a ticket or released on a pre-submission rejection.
+struct Admitted;
+
+impl Admitted {
+    fn enqueue(self, tx: &Sender<WriterItem>, corr: u64, p: Pending) {
+        let _ = tx.send(WriterItem::Wait(corr, p));
+    }
+
+    fn reject_unknown_handle(self, tx: &Sender<WriterItem>, corr: u64, inflight: &AtomicUsize) {
+        inflight.fetch_sub(1, Ordering::Relaxed);
+        let resp = NetResponse::Error {
+            code: ERR_UNKNOWN_HANDLE,
+            message: "handle not owned by this session".to_string(),
+        };
+        let _ = tx.send(WriterItem::Now(corr, resp));
+    }
+}
+
+/// Enforce the inflight cap: at capacity the request is NOT enqueued and
+/// the client gets an immediate `Busy` with the live count and cap.
+fn admit(
+    cfg: &NetConfig,
+    counters: &NetCounters,
+    inflight: &Arc<AtomicUsize>,
+    tx: &Sender<WriterItem>,
+    corr: u64,
+) -> Option<Admitted> {
+    let now = inflight.load(Ordering::Relaxed);
+    if now >= cfg.max_inflight {
+        counters.record_busy_reject();
+        let busy = NetResponse::Busy { inflight: now as u32, cap: cfg.max_inflight as u32 };
+        let _ = tx.send(WriterItem::Now(corr, busy));
+        return None;
+    }
+    inflight.fetch_add(1, Ordering::Relaxed);
+    Some(Admitted)
+}
+
+/// Snapshot the server counters for a `Stats` reply.
+pub(crate) fn snapshot(c: &NetCounters) -> WireStats {
+    WireStats {
+        connections: c.connections(),
+        open: c.open(),
+        frames: c.frames(),
+        busy_rejects: c.busy_rejects(),
+        timeouts: c.timeouts(),
+        reaped: c.reaped(),
+        malformed: c.malformed(),
+    }
+}

@@ -1,0 +1,302 @@
+//! Open-loop, trace-driven load generator for the socket front end.
+//!
+//! Each connection draws a seeded arrival trace up front — heavy-tailed
+//! (Pareto, α = 2) inter-arrival gaps and a skewed kernel-size mix — and
+//! then holds itself to it: op *k* is charged from its **scheduled**
+//! send time, not from when the socket finally drained, so queueing
+//! delay shows up in the percentiles instead of being absorbed
+//! (coordinated omission). p50/p99/p999 and goodput land in
+//! `BENCH_serve.json` via [`JsonReport`].
+
+use std::collections::HashMap;
+use std::io::{self, Write};
+use std::net::TcpStream;
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
+#[cfg(unix)]
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use crate::util::benchx::JsonReport;
+use crate::util::stats::percentile;
+use crate::util::{BitRow, Rng, ShiftDir};
+
+use crate::pim::PimOp;
+
+use super::codec::{
+    decode_response, encode_request, FramePoll, FrameReader, NetRequest, NetResponse, WireHandle,
+    PROTO_VERSION,
+};
+use super::conn::StreamLike;
+
+/// Where the generator connects.
+#[derive(Clone, Debug)]
+pub enum Target {
+    /// A TCP address, e.g. `127.0.0.1:7741`.
+    Tcp(String),
+    /// A Unix-domain socket path.
+    #[cfg(unix)]
+    Uds(PathBuf),
+}
+
+/// Generator tunables. `inflight` is the client-side pipeline depth —
+/// keep it at or below the server's `max_inflight` for a zero-`Busy`
+/// run, or push past it to measure the backpressure path.
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    pub conns: usize,
+    pub ops_per_conn: usize,
+    pub seed: u64,
+    pub inflight: usize,
+    /// Mean inter-arrival gap per connection, microseconds.
+    pub mean_gap_us: f64,
+}
+
+impl LoadConfig {
+    pub fn new(conns: usize, ops_per_conn: usize) -> Self {
+        LoadConfig { conns, ops_per_conn, seed: 0x5EED, inflight: 32, mean_gap_us: 50.0 }
+    }
+}
+
+/// What a run measured, merged over every connection.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    pub conns: u64,
+    pub ops_sent: u64,
+    pub ops_done: u64,
+    /// `Busy` backpressure replies (not counted as errors).
+    pub busy: u64,
+    /// Protocol errors + transport failures — zero on a healthy run.
+    pub errors: u64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+    pub goodput_ops_s: f64,
+    pub elapsed_s: f64,
+}
+
+#[derive(Default)]
+struct ConnStats {
+    sent: u64,
+    done: u64,
+    busy: u64,
+    errors: u64,
+    latencies_us: Vec<f64>,
+}
+
+/// Drive `target` with `cfg.conns` concurrent open-loop connections.
+/// Transport-level connect failures surface as `Err`; per-op protocol
+/// failures are counted in [`LoadReport::errors`].
+pub fn run(target: &Target, cfg: &LoadConfig) -> io::Result<LoadReport> {
+    let started = Instant::now();
+    let mut threads = Vec::new();
+    for i in 0..cfg.conns {
+        let seed = cfg.seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let ops = cfg.ops_per_conn;
+        let inflight = cfg.inflight.max(1);
+        let gap = cfg.mean_gap_us;
+        match target {
+            Target::Tcp(addr) => {
+                let stream = TcpStream::connect(addr)?;
+                threads.push(std::thread::spawn(move || worker(stream, ops, inflight, gap, seed)));
+            }
+            #[cfg(unix)]
+            Target::Uds(path) => {
+                let stream = UnixStream::connect(path)?;
+                threads.push(std::thread::spawn(move || worker(stream, ops, inflight, gap, seed)));
+            }
+        }
+    }
+    let mut lat: Vec<f64> = Vec::new();
+    let mut report = LoadReport { conns: cfg.conns as u64, ..LoadReport::default() };
+    for t in threads {
+        match t.join() {
+            Ok(s) => {
+                report.ops_sent += s.sent;
+                report.ops_done += s.done;
+                report.busy += s.busy;
+                report.errors += s.errors;
+                lat.extend(s.latencies_us);
+            }
+            Err(_) => report.errors += 1,
+        }
+    }
+    report.elapsed_s = started.elapsed().as_secs_f64();
+    if !lat.is_empty() {
+        report.p50_us = percentile(&lat, 50.0);
+        report.p99_us = percentile(&lat, 99.0);
+        report.p999_us = percentile(&lat, 99.9);
+    }
+    if report.elapsed_s > 0.0 {
+        report.goodput_ops_s = report.ops_done as f64 / report.elapsed_s;
+    }
+    Ok(report)
+}
+
+/// Write the report as `BENCH_<name>.json` in the current directory.
+pub fn write_json(report: &LoadReport, name: &str) -> io::Result<std::path::PathBuf> {
+    let mut j = JsonReport::new(name);
+    j.metric("conns", report.conns as f64);
+    j.metric("ops_sent", report.ops_sent as f64);
+    j.metric("ops_done", report.ops_done as f64);
+    j.metric("busy", report.busy as f64);
+    j.metric("errors", report.errors as f64);
+    j.metric("p50_us", report.p50_us);
+    j.metric("p99_us", report.p99_us);
+    j.metric("p999_us", report.p999_us);
+    j.metric("goodput_ops_s", report.goodput_ops_s);
+    j.metric("elapsed_s", report.elapsed_s);
+    j.write()
+}
+
+/// One Pareto(α=2) inter-arrival gap scaled to `mean_us`, capped at
+/// 100× the mean so a single extreme draw cannot stall the whole trace.
+fn pareto_gap(mean_us: f64, rng: &mut Rng) -> f64 {
+    let u = rng.uniform();
+    (0.5 * mean_us / (1.0 - u).sqrt()).min(mean_us * 100.0)
+}
+
+fn worker<S: StreamLike>(
+    mut stream: S,
+    ops: usize,
+    inflight: usize,
+    mean_gap_us: f64,
+    seed: u64,
+) -> ConnStats {
+    let mut stats = ConnStats::default();
+    if let Err(_e) = worker_inner(&mut stream, ops, inflight, mean_gap_us, seed, &mut stats) {
+        stats.errors += 1;
+    }
+    stats
+}
+
+fn send_req<S: StreamLike>(stream: &mut S, corr: u64, req: &NetRequest) -> Result<(), String> {
+    let bytes = encode_request(corr, req).map_err(|e| e.to_string())?;
+    stream.write_all(&bytes).and_then(|()| stream.flush()).map_err(|e| e.to_string())
+}
+
+fn next_response<S: StreamLike>(
+    stream: &mut S,
+    reader: &mut FrameReader,
+    deadline: Instant,
+) -> Result<(u64, NetResponse), String> {
+    loop {
+        match reader.poll(stream) {
+            Ok(FramePoll::Frame(f)) => {
+                let resp = decode_response(&f.payload).map_err(|e| e.to_string())?;
+                return Ok((f.corr, resp));
+            }
+            Ok(FramePoll::Idle) => {
+                if Instant::now() > deadline {
+                    return Err("timed out waiting for a response".into());
+                }
+            }
+            Ok(FramePoll::Eof) => return Err("connection closed".into()),
+            Err(e) => return Err(e.to_string()),
+        }
+    }
+}
+
+fn worker_inner<S: StreamLike>(
+    stream: &mut S,
+    ops: usize,
+    inflight: usize,
+    mean_gap_us: f64,
+    seed: u64,
+    stats: &mut ConnStats,
+) -> Result<(), String> {
+    let mut rng = Rng::new(seed);
+    let mut reader = FrameReader::new();
+    let _ = stream.set_read_timeout_opt(Some(Duration::from_millis(1)));
+    let long = |secs: u64| Instant::now() + Duration::from_secs(secs);
+
+    // prologue: handshake, one row allocated and seeded
+    send_req(stream, 0, &NetRequest::Hello { proto: PROTO_VERSION })?;
+    let cols = match next_response(stream, &mut reader, long(10))? {
+        (0, NetResponse::Welcome { cols, .. }) => cols as usize,
+        (_, other) => return Err(format!("expected Welcome, got {other:?}")),
+    };
+    send_req(stream, 1, &NetRequest::Alloc { n: 1 })?;
+    let handle: WireHandle = match next_response(stream, &mut reader, long(10))? {
+        (1, NetResponse::Allocated { handles }) if handles.len() == 1 => handles[0],
+        (_, other) => return Err(format!("expected Allocated, got {other:?}")),
+    };
+    let bits = BitRow::random(cols, &mut rng);
+    send_req(stream, 2, &NetRequest::WriteRow { handle, bits })?;
+    match next_response(stream, &mut reader, long(10))? {
+        (2, NetResponse::Done) => {}
+        (_, other) => return Err(format!("expected Done, got {other:?}")),
+    }
+
+    // the trace: op k is scheduled at start + Σ gaps, independent of how
+    // fast the server drains — that is what makes the loop open
+    let start = Instant::now();
+    let mut sched = Vec::with_capacity(ops);
+    let mut t_us = 0.0f64;
+    for _ in 0..ops {
+        t_us += pareto_gap(mean_gap_us, &mut rng);
+        sched.push(start + Duration::from_micros(t_us as u64));
+    }
+
+    let mut outstanding: HashMap<u64, Instant> = HashMap::new();
+    let mut next = 0usize;
+    let hard_deadline = long(300);
+    while (stats.done + stats.busy + stats.errors) < ops as u64 {
+        if Instant::now() > hard_deadline {
+            return Err("loadgen run deadline exceeded".into());
+        }
+        // launch everything due, bounded by the client pipeline depth
+        while next < ops && outstanding.len() < inflight && Instant::now() >= sched[next] {
+            let corr = 100 + next as u64;
+            // mix: mostly 1-bit shifts, some 8-bit, rare 64-bit, and a
+            // read-back every 16th op
+            let req = if next % 16 == 15 {
+                NetRequest::ReadRow { handle }
+            } else {
+                let n: usize = match rng.below(100) {
+                    0..=89 => 1,
+                    90..=98 => 8,
+                    _ => 64,
+                };
+                NetRequest::SubmitKernel {
+                    ops: vec![PimOp::ShiftBy { src: 0, dst: 0, n, dir: ShiftDir::Right }],
+                    handles: vec![handle],
+                }
+            };
+            send_req(stream, corr, &req)?;
+            stats.sent += 1;
+            outstanding.insert(corr, sched[next]);
+            next += 1;
+        }
+        match reader.poll(stream) {
+            Ok(FramePoll::Frame(f)) => {
+                let resp = decode_response(&f.payload).map_err(|e| e.to_string())?;
+                match outstanding.remove(&f.corr) {
+                    Some(scheduled) => match resp {
+                        NetResponse::Done | NetResponse::Row { .. } | NetResponse::Ran { .. } => {
+                            stats.done += 1;
+                            stats.latencies_us.push(scheduled.elapsed().as_secs_f64() * 1e6);
+                        }
+                        NetResponse::Busy { .. } => stats.busy += 1,
+                        _ => stats.errors += 1,
+                    },
+                    None => stats.errors += 1,
+                }
+            }
+            Ok(FramePoll::Idle) => {}
+            Ok(FramePoll::Eof) => return Err("server closed mid-run".into()),
+            Err(e) => return Err(e.to_string()),
+        }
+    }
+
+    // epilogue: a clean goodbye (the server drains, acks, closes)
+    send_req(stream, u64::MAX, &NetRequest::Goodbye)?;
+    loop {
+        match next_response(stream, &mut reader, long(10)) {
+            Ok((_, NetResponse::Bye)) => break,
+            Ok(_) => {}
+            Err(_) => break,
+        }
+    }
+    Ok(())
+}

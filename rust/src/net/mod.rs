@@ -1,0 +1,30 @@
+//! Network serving front end: the PIM system behind a real submission
+//! interface.
+//!
+//! The in-process serving API ([`crate::coordinator`]) stays the source
+//! of truth; this module puts a socket in front of it:
+//!
+//! * [`codec`] — a hand-rolled, length-prefixed, versioned binary wire
+//!   format (no external crates) carrying the session verbs `Hello` /
+//!   `Alloc` / `Free` / `WriteRow` / `ReadRow` / `SubmitKernel` /
+//!   `Stats` / `Goodbye` with checked, panic-free decoding;
+//! * [`NetServer`] — TCP + Unix-domain accept loops; each connection
+//!   becomes one `PimClient` session (standalone system or sharded
+//!   fabric), with replies streamed **out-of-order by correlation id**
+//!   via non-blocking `Ticket::try_resolve`, so a slow read-back never
+//!   head-of-line-blocks the connection;
+//! * robustness first: per-connection inflight caps answered with
+//!   explicit `Busy` backpressure, read/write timeouts, idle-connection
+//!   reaping, and teardown that frees every row on disconnect or
+//!   malformed frame (audited by `SystemReport::rows_live`);
+//! * [`loadgen`] — an open-loop, seeded, heavy-tailed load generator
+//!   driving the real socket path and reporting p50/p99/p999 latency
+//!   and goodput into `BENCH_serve.json`.
+
+pub mod codec;
+mod conn;
+pub mod loadgen;
+mod server;
+
+pub use loadgen::{LoadConfig, LoadReport, Target};
+pub use server::{NetConfig, NetServer};

@@ -1,0 +1,217 @@
+//! The socket front end: accept loops for TCP and Unix-domain listeners,
+//! one connection thread per accepted stream, and a shutdown path that
+//! joins everything before handing back the system's final report.
+
+use std::io;
+use std::net::{SocketAddr, TcpListener};
+#[cfg(unix)]
+use std::os::unix::net::UnixListener;
+#[cfg(unix)]
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::{NetCounters, PimFabric, PimSystem, SystemReport};
+
+use super::codec::WireStats;
+use super::conn::{handle_conn, snapshot, Session};
+
+/// How often an accept loop re-checks the stop flag when idle.
+const ACCEPT_TICK: Duration = Duration::from_millis(10);
+
+/// Tunables of the network front end. `cols` is the row width in bits of
+/// the serving system's DRAM geometry — handed to clients in `Welcome`
+/// so they can size their `WriteRow` payloads without guessing.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Row width in bits (`DramConfig::geometry.cols_per_row`).
+    pub cols: usize,
+    /// Per-connection cap on unresolved tickets; beyond it requests get
+    /// an immediate `Busy` reply and are NOT enqueued.
+    pub max_inflight: usize,
+    /// A connection silent this long (with nothing in flight) is reaped.
+    pub idle_timeout: Duration,
+    /// Socket write timeout; a stalled peer trips it and the connection
+    /// tears down instead of wedging the writer thread.
+    pub write_timeout: Duration,
+}
+
+impl NetConfig {
+    pub fn new(cols: usize) -> Self {
+        NetConfig {
+            cols,
+            max_inflight: 64,
+            idle_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// What the server fronts: a standalone system or a sharded fabric.
+#[derive(Clone)]
+enum Backend {
+    System(PimSystem),
+    Fabric(PimFabric),
+}
+
+impl Backend {
+    fn open_session(&self) -> Session {
+        match self {
+            Backend::System(s) => Session::Sys(s.client()),
+            Backend::Fabric(f) => Session::Fab(f.client()),
+        }
+    }
+
+    fn shutdown(&self) -> SystemReport {
+        match self {
+            Backend::System(s) => s.shutdown(),
+            Backend::Fabric(f) => f.shutdown(),
+        }
+    }
+}
+
+/// The network server: owns the serving system, listens on any number of
+/// TCP/UDS endpoints, and maps every accepted connection onto its own
+/// [`PimClient`] session (see [`super::conn`]).
+///
+/// [`PimClient`]: crate::coordinator::PimClient
+pub struct NetServer {
+    backend: Backend,
+    cfg: NetConfig,
+    counters: Arc<NetCounters>,
+    stop: Arc<AtomicBool>,
+    accept_threads: Mutex<Vec<JoinHandle<()>>>,
+    conn_threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    #[cfg(unix)]
+    uds_paths: Mutex<Vec<PathBuf>>,
+}
+
+impl NetServer {
+    /// Front a standalone single-channel system.
+    pub fn new(system: PimSystem, cfg: NetConfig) -> Self {
+        Self::with_backend(Backend::System(system), cfg)
+    }
+
+    /// Front a sharded multi-channel fabric: connections place their
+    /// sessions shard-first, exactly like in-process fabric clients.
+    pub fn over_fabric(fabric: PimFabric, cfg: NetConfig) -> Self {
+        Self::with_backend(Backend::Fabric(fabric), cfg)
+    }
+
+    fn with_backend(backend: Backend, cfg: NetConfig) -> Self {
+        NetServer {
+            backend,
+            cfg,
+            counters: Arc::new(NetCounters::default()),
+            stop: Arc::new(AtomicBool::new(false)),
+            accept_threads: Mutex::new(Vec::new()),
+            conn_threads: Arc::new(Mutex::new(Vec::new())),
+            #[cfg(unix)]
+            uds_paths: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The server's counters (shared with every connection thread).
+    pub fn counters(&self) -> &NetCounters {
+        &self.counters
+    }
+
+    /// Snapshot the counters in wire form.
+    pub fn stats(&self) -> WireStats {
+        snapshot(&self.counters)
+    }
+
+    /// Start a TCP accept loop. Returns the bound address, so `:0`
+    /// requests (ephemeral port) report where they actually landed.
+    pub fn listen_tcp(&self, addr: &str) -> io::Result<SocketAddr> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let backend = self.backend.clone();
+        let cfg = self.cfg.clone();
+        let counters = self.counters.clone();
+        let stop = self.stop.clone();
+        let conns = self.conn_threads.clone();
+        let handle = std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let _ = stream.set_nonblocking(false);
+                        let session = backend.open_session();
+                        let cfg = cfg.clone();
+                        let counters = counters.clone();
+                        let stop = stop.clone();
+                        let t = std::thread::spawn(move || {
+                            handle_conn(stream, session, cfg, counters, stop);
+                        });
+                        conns.lock().unwrap().push(t);
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(ACCEPT_TICK);
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        self.accept_threads.lock().unwrap().push(handle);
+        Ok(local)
+    }
+
+    /// Start a Unix-domain accept loop on `path` (an existing socket
+    /// file there is replaced; the file is unlinked again at shutdown).
+    #[cfg(unix)]
+    pub fn listen_uds(&self, path: &Path) -> io::Result<()> {
+        let _ = std::fs::remove_file(path);
+        let listener = UnixListener::bind(path)?;
+        listener.set_nonblocking(true)?;
+        self.uds_paths.lock().unwrap().push(path.to_path_buf());
+        let backend = self.backend.clone();
+        let cfg = self.cfg.clone();
+        let counters = self.counters.clone();
+        let stop = self.stop.clone();
+        let conns = self.conn_threads.clone();
+        let handle = std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let _ = stream.set_nonblocking(false);
+                        let session = backend.open_session();
+                        let cfg = cfg.clone();
+                        let counters = counters.clone();
+                        let stop = stop.clone();
+                        let t = std::thread::spawn(move || {
+                            handle_conn(stream, session, cfg, counters, stop);
+                        });
+                        conns.lock().unwrap().push(t);
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(ACCEPT_TICK);
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        self.accept_threads.lock().unwrap().push(handle);
+        Ok(())
+    }
+
+    /// Stop accepting, join every accept and connection thread (live
+    /// connections finish their teardown — rows freed, seats released),
+    /// then shut the system down and return its final report.
+    pub fn shutdown(self) -> SystemReport {
+        self.stop.store(true, Ordering::Relaxed);
+        for t in self.accept_threads.lock().unwrap().drain(..) {
+            let _ = t.join();
+        }
+        for t in self.conn_threads.lock().unwrap().drain(..) {
+            let _ = t.join();
+        }
+        #[cfg(unix)]
+        for p in self.uds_paths.lock().unwrap().drain(..) {
+            let _ = std::fs::remove_file(&p);
+        }
+        self.backend.shutdown()
+    }
+}

@@ -1,0 +1,338 @@
+//! Property tests for the wire codec: seeded round-trips over every
+//! request/response variant, and hostile-input totality — truncated,
+//! oversized, bad-magic, and random-garbage frames must come back as
+//! decode errors, never a panic or an over-read.
+
+use shiftdram::net::codec::{
+    decode_request, decode_response, encode_request, encode_response, CodecError, FrameKind,
+    FramePoll, FrameReader, NetRequest, NetResponse, ReadError, WireHandle, WireStats, HEADER_LEN,
+    MAX_PAYLOAD, PROTO_VERSION,
+};
+use shiftdram::pim::{CommandCensus, PimOp};
+use shiftdram::util::proptest::{check, prop_assert, prop_assert_eq};
+use shiftdram::util::{BitRow, Rng, ShiftDir};
+
+fn rand_handle(rng: &mut Rng) -> WireHandle {
+    WireHandle { slot: rng.below(10_000) as u32, gen: rng.below(1_000) as u32 }
+}
+
+fn rand_handles(rng: &mut Rng, max: usize) -> Vec<WireHandle> {
+    let n = rng.below(max + 1);
+    (0..n).map(|_| rand_handle(rng)).collect()
+}
+
+fn rand_row(rng: &mut Rng) -> BitRow {
+    let len = rng.below(300) + 1;
+    BitRow::random(len, rng)
+}
+
+fn rand_op(rng: &mut Rng) -> PimOp {
+    let s = |rng: &mut Rng| rng.below(64);
+    match rng.below(11) {
+        0 => PimOp::Copy { src: s(rng), dst: s(rng) },
+        1 => PimOp::SetZero { dst: s(rng) },
+        2 => PimOp::SetOnes { dst: s(rng) },
+        3 => PimOp::Not { src: s(rng), dst: s(rng) },
+        4 => PimOp::And { a: s(rng), b: s(rng), dst: s(rng) },
+        5 => PimOp::Or { a: s(rng), b: s(rng), dst: s(rng) },
+        6 => PimOp::Maj { a: s(rng), b: s(rng), c: s(rng), dst: s(rng) },
+        7 => PimOp::Xor { a: s(rng), b: s(rng), dst: s(rng) },
+        8 => PimOp::ShiftRight { src: s(rng), dst: s(rng) },
+        9 => PimOp::ShiftLeft { src: s(rng), dst: s(rng) },
+        _ => PimOp::ShiftBy {
+            src: s(rng),
+            dst: s(rng),
+            n: rng.below(128),
+            dir: if rng.bool() { ShiftDir::Right } else { ShiftDir::Left },
+        },
+    }
+}
+
+fn rand_census(rng: &mut Rng) -> CommandCensus {
+    CommandCensus {
+        act: rng.below(1 << 20) as u64,
+        pre: rng.below(1 << 20) as u64,
+        read: rng.below(1 << 20) as u64,
+        write: rng.below(1 << 20) as u64,
+        aap: rng.below(1 << 20) as u64,
+        dra: rng.below(1 << 20) as u64,
+        tra: rng.below(1 << 20) as u64,
+        refresh: rng.below(1 << 20) as u64,
+    }
+}
+
+/// Every request variant with randomized contents.
+fn all_requests(rng: &mut Rng) -> Vec<NetRequest> {
+    let n_ops = rng.below(8) + 1;
+    vec![
+        NetRequest::Hello { proto: rng.below(u16::MAX as usize) as u16 },
+        NetRequest::Alloc { n: rng.below(4096) as u32 },
+        NetRequest::Free { handles: rand_handles(rng, 8) },
+        NetRequest::WriteRow { handle: rand_handle(rng), bits: rand_row(rng) },
+        NetRequest::ReadRow { handle: rand_handle(rng) },
+        NetRequest::SubmitKernel {
+            ops: (0..n_ops).map(|_| rand_op(rng)).collect(),
+            handles: rand_handles(rng, 8),
+        },
+        NetRequest::Stats,
+        NetRequest::Goodbye,
+    ]
+}
+
+/// Every response variant with randomized contents.
+fn all_responses(rng: &mut Rng) -> Vec<NetResponse> {
+    vec![
+        NetResponse::Welcome {
+            proto: PROTO_VERSION,
+            cols: rng.below(1 << 20) as u32,
+            bank: rng.below(64) as u32,
+            max_inflight: rng.below(256) as u32,
+        },
+        NetResponse::Allocated { handles: rand_handles(rng, 8) },
+        NetResponse::Freed { n: rng.below(4096) as u32 },
+        NetResponse::Done,
+        NetResponse::Row { bits: rand_row(rng) },
+        NetResponse::Ran { census: rand_census(rng), elided_aaps: rng.below(1 << 20) as u64 },
+        NetResponse::Stats(WireStats {
+            connections: rng.below(1 << 20) as u64,
+            open: rng.below(64) as u64,
+            frames: rng.below(1 << 20) as u64,
+            busy_rejects: rng.below(1 << 20) as u64,
+            timeouts: rng.below(1 << 20) as u64,
+            reaped: rng.below(1 << 20) as u64,
+            malformed: rng.below(1 << 20) as u64,
+        }),
+        NetResponse::Bye,
+        NetResponse::Busy { inflight: rng.below(256) as u32, cap: rng.below(256) as u32 },
+        NetResponse::Error { code: rng.below(4) as u16, message: format!("e{}", rng.below(100)) },
+    ]
+}
+
+/// Parse one complete frame out of `bytes` via the incremental reader.
+fn parse_one(bytes: &[u8]) -> Result<(FrameKind, u64, Vec<u8>), String> {
+    let mut reader = FrameReader::new();
+    let mut src = bytes;
+    match reader.poll(&mut src) {
+        Ok(FramePoll::Frame(f)) => Ok((f.kind, f.corr, f.payload)),
+        other => Err(format!("expected a complete frame, got {other:?}")),
+    }
+}
+
+#[test]
+fn every_request_variant_roundtrips() {
+    check(96, |rng| {
+        for req in all_requests(rng) {
+            let corr = rng.below(1 << 40) as u64;
+            let bytes = encode_request(corr, &req).map_err(|e| e.to_string())?;
+            let (kind, got_corr, payload) = parse_one(&bytes)?;
+            prop_assert(kind == FrameKind::Request, "frame kind must be Request")?;
+            prop_assert_eq(got_corr, corr, "correlation id")?;
+            let back = decode_request(&payload).map_err(|e| e.to_string())?;
+            prop_assert_eq(back, req, "request roundtrip")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn every_response_variant_roundtrips() {
+    check(96, |rng| {
+        for resp in all_responses(rng) {
+            let corr = rng.below(1 << 40) as u64;
+            let bytes = encode_response(corr, &resp).map_err(|e| e.to_string())?;
+            let (kind, got_corr, payload) = parse_one(&bytes)?;
+            prop_assert(kind == FrameKind::Response, "frame kind must be Response")?;
+            prop_assert_eq(got_corr, corr, "correlation id")?;
+            let back = decode_response(&payload).map_err(|e| e.to_string())?;
+            prop_assert_eq(back, resp, "response roundtrip")?;
+        }
+        Ok(())
+    });
+}
+
+/// A strict prefix of a valid frame must never parse as a complete frame,
+/// and a strict prefix of a valid payload must never decode — the parse
+/// length is pinned by the length prefixes, so cuts always surface.
+#[test]
+fn truncation_always_errors_never_panics() {
+    check(48, |rng| {
+        let reqs = all_requests(rng);
+        let req = &reqs[rng.below(reqs.len())];
+        let bytes = encode_request(1, req).map_err(|e| e.to_string())?;
+        for cut in 0..bytes.len() {
+            let mut reader = FrameReader::new();
+            let mut src = &bytes[..cut];
+            if let Ok(FramePoll::Frame(_)) = reader.poll(&mut src) {
+                return Err(format!("cut at {cut}/{} parsed as a full frame", bytes.len()));
+            }
+        }
+        let payload = &bytes[HEADER_LEN..];
+        for cut in 0..payload.len() {
+            prop_assert(
+                decode_request(&payload[..cut]).is_err(),
+                format!("payload cut at {cut}/{} decoded", payload.len()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn bad_magic_is_rejected() {
+    let bytes = encode_request(1, &NetRequest::Stats).unwrap();
+    let mut evil = bytes.clone();
+    evil[0] ^= 0xFF;
+    let mut reader = FrameReader::new();
+    let mut src = &evil[..];
+    match reader.poll(&mut src) {
+        Err(ReadError::Codec(CodecError::BadMagic)) => {}
+        other => panic!("expected BadMagic, got {other:?}"),
+    }
+}
+
+#[test]
+fn bad_version_and_kind_are_rejected() {
+    let bytes = encode_request(1, &NetRequest::Stats).unwrap();
+    // version lives at bytes 4..6, kind at 6..8 (little-endian u16s)
+    let mut wrong_version = bytes.clone();
+    wrong_version[4..6].copy_from_slice(&99u16.to_le_bytes());
+    let mut reader = FrameReader::new();
+    let mut src = &wrong_version[..];
+    match reader.poll(&mut src) {
+        Err(ReadError::Codec(CodecError::BadVersion(99))) => {}
+        other => panic!("expected BadVersion(99), got {other:?}"),
+    }
+
+    let mut wrong_kind = bytes;
+    wrong_kind[6..8].copy_from_slice(&7u16.to_le_bytes());
+    let mut reader = FrameReader::new();
+    let mut src = &wrong_kind[..];
+    match reader.poll(&mut src) {
+        Err(ReadError::Codec(CodecError::BadKind(7))) => {}
+        other => panic!("expected BadKind(7), got {other:?}"),
+    }
+}
+
+/// An oversized length claim must be rejected from the header alone,
+/// before any attempt to buffer the claimed payload.
+#[test]
+fn oversized_claim_is_rejected_without_overread() {
+    let valid = encode_request(1, &NetRequest::Stats).unwrap();
+    let mut evil = valid[..HEADER_LEN].to_vec();
+    let huge = (MAX_PAYLOAD + 1) as u32;
+    evil[16..20].copy_from_slice(&huge.to_le_bytes());
+    let mut reader = FrameReader::new();
+    let mut src = &evil[..];
+    match reader.poll(&mut src) {
+        Err(ReadError::Codec(CodecError::Oversized(n))) => assert_eq!(n, huge),
+        other => panic!("expected Oversized, got {other:?}"),
+    }
+}
+
+#[test]
+fn trailing_bytes_are_rejected() {
+    check(48, |rng| {
+        let reqs = all_requests(rng);
+        let req = &reqs[rng.below(reqs.len())];
+        let bytes = encode_request(1, req).map_err(|e| e.to_string())?;
+        let mut payload = bytes[HEADER_LEN..].to_vec();
+        payload.push(0);
+        prop_assert_eq(
+            decode_request(&payload).err(),
+            Some(CodecError::Trailing),
+            "payload with an extra byte",
+        )
+    });
+}
+
+/// Pure fuzz: random bytes through both payload decoders and the frame
+/// reader. Everything must come back as `Ok`/`Err` values — no panics,
+/// no allocation proportional to claimed (not delivered) lengths.
+#[test]
+fn random_garbage_never_panics() {
+    check(512, |rng| {
+        let len = rng.below(96);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        let _ = decode_request(&bytes);
+        let _ = decode_response(&bytes);
+        let mut reader = FrameReader::new();
+        let mut src = &bytes[..];
+        let _ = reader.poll(&mut src);
+        Ok(())
+    });
+}
+
+/// A row whose tail word carries bits beyond the claimed length is
+/// corrupt and must be rejected, not silently truncated.
+#[test]
+fn row_tail_bits_beyond_len_are_rejected() {
+    let mut rng = Rng::new(0xBAD_7A11);
+    // len 65 -> two words, one live tail bit in the second word
+    let req = NetRequest::WriteRow {
+        handle: WireHandle { slot: 0, gen: 0 },
+        bits: BitRow::random(65, &mut rng),
+    };
+    let bytes = encode_request(1, &req).unwrap();
+    let mut payload = bytes[HEADER_LEN..].to_vec();
+    let last = payload.len() - 1;
+    payload[last] = 0x80; // sets bit 127 of the row, far past len 65
+    match decode_request(&payload) {
+        Err(CodecError::BadValue(_)) => {}
+        other => panic!("expected BadValue for tail bits, got {other:?}"),
+    }
+}
+
+/// Frames sliced into arbitrary delivery chunks reassemble losslessly —
+/// the reader never loses alignment across partial reads.
+#[test]
+fn chunked_delivery_reassembles() {
+    check(48, |rng| {
+        let mut stream = Vec::new();
+        let reqs = all_requests(rng);
+        for (i, req) in reqs.iter().enumerate() {
+            stream.extend_from_slice(&encode_request(i as u64, req).map_err(|e| e.to_string())?);
+        }
+        let mut reader = FrameReader::new();
+        let mut got = Vec::new();
+        let mut pos = 0;
+        while pos < stream.len() {
+            let n = (rng.below(40) + 1).min(stream.len() - pos);
+            let mut src = &stream[pos..pos + n];
+            pos += n;
+            loop {
+                match reader.poll(&mut src) {
+                    Ok(FramePoll::Frame(f)) => {
+                        got.push(decode_request(&f.payload).map_err(|e| e.to_string())?);
+                    }
+                    Ok(FramePoll::Eof) => break,
+                    Ok(FramePoll::Idle) => break,
+                    Err(e) => {
+                        // a drained chunk reads as EOF mid-frame; the
+                        // partial stays buffered for the next chunk
+                        if pos < stream.len() {
+                            break;
+                        }
+                        return Err(e.to_string());
+                    }
+                }
+            }
+        }
+        prop_assert_eq(got, reqs, "frames across chunk boundaries")
+    });
+}
+
+/// The same bytes always decode to the same value (decoding is a pure
+/// function of the payload — no hidden state in the reader).
+#[test]
+fn decoding_is_deterministic() {
+    check(48, |rng| {
+        for req in all_requests(rng) {
+            let bytes = encode_request(3, &req).map_err(|e| e.to_string())?;
+            let payload = &bytes[HEADER_LEN..];
+            let a = decode_request(payload).map_err(|e| e.to_string())?;
+            let b = decode_request(payload).map_err(|e| e.to_string())?;
+            prop_assert_eq(a, b, "repeat decode")?;
+        }
+        Ok(())
+    });
+}

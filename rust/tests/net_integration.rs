@@ -1,0 +1,339 @@
+//! Loopback integration tests for the network front end: the socket path
+//! must be bit-identical to the in-process `PimClient` path, abrupt
+//! disconnects and malformed frames must leak no rows (audited through
+//! `SystemReport::rows_live`), the inflight cap must answer `Busy`
+//! without poisoning the session, and idle connections must be reaped.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use shiftdram::config::DramConfig;
+use shiftdram::coordinator::{Kernel, SystemBuilder};
+use shiftdram::net::codec::{
+    decode_response, encode_request, FramePoll, FrameReader, NetRequest, NetResponse, WireHandle,
+    ERR_PROTOCOL, PROTO_VERSION,
+};
+use shiftdram::net::{NetConfig, NetServer};
+use shiftdram::pim::PimOp;
+use shiftdram::util::{BitRow, Rng, ShiftDir};
+
+fn tiny() -> DramConfig {
+    DramConfig::tiny_test()
+}
+
+fn start_server(banks: usize, tweak: impl FnOnce(&mut NetConfig)) -> (NetServer, String) {
+    let cfg = tiny();
+    let sys = SystemBuilder::new(&cfg).banks(banks).build();
+    let mut nc = NetConfig::new(cfg.geometry.cols_per_row);
+    tweak(&mut nc);
+    let server = NetServer::new(sys, nc);
+    let addr = server.listen_tcp("127.0.0.1:0").expect("bind loopback");
+    (server, addr.to_string())
+}
+
+/// A minimal protocol client for tests: blocking RPC over the real codec,
+/// with a read timeout so `recv` can enforce a deadline.
+struct TestClient<S: Read + Write> {
+    stream: S,
+    reader: FrameReader,
+    next_corr: u64,
+}
+
+impl TestClient<TcpStream> {
+    fn connect(addr: &str) -> Self {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_millis(10))).unwrap();
+        TestClient { stream, reader: FrameReader::new(), next_corr: 1 }
+    }
+}
+
+#[cfg(unix)]
+impl TestClient<std::os::unix::net::UnixStream> {
+    fn connect_uds(path: &std::path::Path) -> Self {
+        let stream = std::os::unix::net::UnixStream::connect(path).expect("connect uds");
+        stream.set_read_timeout(Some(Duration::from_millis(10))).unwrap();
+        TestClient { stream, reader: FrameReader::new(), next_corr: 1 }
+    }
+}
+
+impl<S: Read + Write> TestClient<S> {
+    fn send(&mut self, req: &NetRequest) -> u64 {
+        let corr = self.next_corr;
+        self.next_corr += 1;
+        let bytes = encode_request(corr, req).expect("encode");
+        self.stream.write_all(&bytes).expect("send");
+        self.stream.flush().expect("flush");
+        corr
+    }
+
+    fn recv(&mut self) -> (u64, NetResponse) {
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            match self.reader.poll(&mut self.stream) {
+                Ok(FramePoll::Frame(f)) => {
+                    return (f.corr, decode_response(&f.payload).expect("decode"));
+                }
+                Ok(FramePoll::Idle) => {
+                    assert!(Instant::now() < deadline, "timed out waiting for a reply");
+                }
+                Ok(FramePoll::Eof) => panic!("server closed unexpectedly"),
+                Err(e) => panic!("read failed: {e}"),
+            }
+        }
+    }
+
+    fn rpc(&mut self, req: &NetRequest) -> NetResponse {
+        let corr = self.send(req);
+        loop {
+            let (c, resp) = self.recv();
+            if c == corr {
+                return resp;
+            }
+        }
+    }
+
+    fn hello(&mut self) -> u32 {
+        match self.rpc(&NetRequest::Hello { proto: PROTO_VERSION }) {
+            NetResponse::Welcome { cols, .. } => cols,
+            other => panic!("expected Welcome, got {other:?}"),
+        }
+    }
+
+    fn alloc_one(&mut self) -> WireHandle {
+        match self.rpc(&NetRequest::Alloc { n: 1 }) {
+            NetResponse::Allocated { handles } if handles.len() == 1 => handles[0],
+            other => panic!("expected one handle, got {other:?}"),
+        }
+    }
+
+    fn write_row(&mut self, handle: WireHandle, bits: BitRow) {
+        match self.rpc(&NetRequest::WriteRow { handle, bits }) {
+            NetResponse::Done => {}
+            other => panic!("expected Done, got {other:?}"),
+        }
+    }
+
+    fn read_row(&mut self, handle: WireHandle) -> BitRow {
+        match self.rpc(&NetRequest::ReadRow { handle }) {
+            NetResponse::Row { bits } => bits,
+            other => panic!("expected Row, got {other:?}"),
+        }
+    }
+
+    fn shift(&mut self, handle: WireHandle, n: usize) {
+        let req = NetRequest::SubmitKernel {
+            ops: vec![PimOp::ShiftBy { src: 0, dst: 0, n, dir: ShiftDir::Right }],
+            handles: vec![handle],
+        };
+        match self.rpc(&req) {
+            NetResponse::Ran { .. } => {}
+            other => panic!("expected Ran, got {other:?}"),
+        }
+    }
+
+    fn goodbye(&mut self) {
+        self.send(&NetRequest::Goodbye);
+        loop {
+            let (_, resp) = self.recv();
+            if matches!(resp, NetResponse::Bye) {
+                break;
+            }
+        }
+    }
+}
+
+/// Two concurrent TCP clients run alloc → write → shift kernels → read
+/// back; each result must be bit-identical to the same work through an
+/// in-process `PimClient` on the same seed.
+#[test]
+fn two_tcp_clients_match_the_in_process_path() {
+    let (server, addr) = start_server(2, |_| {});
+    let seeds = [11u64, 23u64];
+    let shifts: [Vec<usize>; 2] = [vec![1, 8, 3], vec![64, 2, 5]];
+
+    let mut threads = Vec::new();
+    for (i, &seed) in seeds.iter().enumerate() {
+        let addr = addr.clone();
+        let ns = shifts[i].clone();
+        threads.push(std::thread::spawn(move || {
+            let mut c = TestClient::connect(&addr);
+            let cols = c.hello() as usize;
+            let mut rng = Rng::new(seed);
+            let bits = BitRow::random(cols, &mut rng);
+            let h = c.alloc_one();
+            c.write_row(h, bits.clone());
+            for n in ns {
+                c.shift(h, n);
+            }
+            let out = c.read_row(h);
+            c.goodbye();
+            (bits, out)
+        }));
+    }
+    let socket_results: Vec<_> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+    let report = server.shutdown();
+    assert!(report.is_clean(), "{:?}", report.worker_failures);
+    assert_eq!(report.rows_live, 0, "clean goodbyes must leak no rows");
+
+    // the same work through in-process sessions on a fresh system
+    let cfg = tiny();
+    let sys = SystemBuilder::new(&cfg).banks(2).build();
+    for (i, (input, socket_out)) in socket_results.iter().enumerate() {
+        let client = sys.client();
+        let handle = client.alloc().expect("row");
+        client.write(&handle, input.clone());
+        for &n in &shifts[i] {
+            client.submit(&Kernel::shift_by(n, ShiftDir::Right), std::slice::from_ref(&handle));
+        }
+        let want = client.read_now(&handle).expect("read");
+        assert_eq!(socket_out, &want, "socket path diverged for client {i}");
+    }
+    assert!(sys.shutdown().is_clean());
+}
+
+/// Dropping the TCP stream mid-session — allocated row, kernel still in
+/// flight, no `Free`, no `Goodbye` — must not leak the row.
+#[test]
+fn abrupt_disconnect_leaks_no_rows() {
+    let (server, addr) = start_server(2, |_| {});
+    {
+        let mut c = TestClient::connect(&addr);
+        let cols = c.hello() as usize;
+        let h = c.alloc_one();
+        let mut rng = Rng::new(5);
+        c.write_row(h, BitRow::random(cols, &mut rng));
+        // fire a kernel and vanish without waiting for the receipt
+        c.send(&NetRequest::SubmitKernel {
+            ops: vec![PimOp::ShiftBy { src: 0, dst: 0, n: 4, dir: ShiftDir::Right }],
+            handles: vec![h],
+        });
+    } // stream drops here
+    std::thread::sleep(Duration::from_millis(100));
+    let report = server.shutdown();
+    assert!(report.is_clean(), "{:?}", report.worker_failures);
+    assert_eq!(report.rows_live, 0, "disconnect teardown must free every row");
+}
+
+/// With `max_inflight = 1`, pipelining heavy kernels must surface `Busy`
+/// replies (request not enqueued) — and the session must stay usable.
+#[test]
+fn inflight_cap_answers_busy_and_recovers() {
+    let (server, addr) = start_server(1, |nc| nc.max_inflight = 1);
+    let mut c = TestClient::connect(&addr);
+    let cols = c.hello() as usize;
+    let h = c.alloc_one();
+    let mut rng = Rng::new(3);
+    c.write_row(h, BitRow::random(cols, &mut rng));
+
+    // a heavy kernel holds the single inflight slot while more arrive
+    let heavy = NetRequest::SubmitKernel {
+        ops: vec![PimOp::ShiftBy { src: 0, dst: 0, n: 64, dir: ShiftDir::Right }; 64],
+        handles: vec![h],
+    };
+    let total = 8u32;
+    let mut corrs = Vec::new();
+    for _ in 0..total {
+        corrs.push(c.send(&heavy));
+    }
+    let mut ran = 0u32;
+    let mut busy = 0u32;
+    for _ in 0..total {
+        let (corr, resp) = c.recv();
+        assert!(corrs.contains(&corr), "unknown correlation id {corr}");
+        match resp {
+            NetResponse::Ran { .. } => ran += 1,
+            NetResponse::Busy { cap, .. } => {
+                assert_eq!(cap, 1);
+                busy += 1;
+            }
+            other => panic!("expected Ran or Busy, got {other:?}"),
+        }
+    }
+    assert_eq!(ran + busy, total);
+    assert!(busy >= 1, "pipelining past the cap must surface Busy");
+    assert!(ran >= 1, "the admitted kernel must still complete");
+    // backpressure must not poison the session
+    let out = c.read_row(h);
+    assert_eq!(out.len(), cols);
+    c.goodbye();
+    assert!(server.counters().busy_rejects() >= busy as u64, "busy replies counted");
+    let report = server.shutdown();
+    assert!(report.is_clean(), "{:?}", report.worker_failures);
+    assert_eq!(report.rows_live, 0);
+}
+
+/// A connection that goes silent past `idle_timeout` with nothing in
+/// flight is reaped, and its rows come back to the slab.
+#[test]
+fn idle_connections_are_reaped_and_rows_reclaimed() {
+    let (server, addr) = start_server(1, |nc| nc.idle_timeout = Duration::from_millis(200));
+    let mut c = TestClient::connect(&addr);
+    let _cols = c.hello();
+    let _h = c.alloc_one();
+    // go silent: the server must reap the connection
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.counters().reaped() == 0 {
+        assert!(Instant::now() < deadline, "connection was never reaped");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    drop(c);
+    let report = server.shutdown();
+    assert!(report.is_clean(), "{:?}", report.worker_failures);
+    assert_eq!(report.rows_live, 0, "reaped session must free its rows");
+}
+
+/// A malformed frame draws an `ERR_PROTOCOL` reply, the connection is
+/// closed, and the session's rows are reclaimed.
+#[test]
+fn malformed_frame_tears_down_cleanly() {
+    let (server, addr) = start_server(1, |_| {});
+    let mut c = TestClient::connect(&addr);
+    let _ = c.hello();
+    let _h = c.alloc_one();
+    // 24 zero bytes: a full header's worth of garbage (bad magic)
+    c.stream.write_all(&[0u8; 24]).unwrap();
+    c.stream.flush().unwrap();
+    match c.recv() {
+        (_, NetResponse::Error { code, .. }) => assert_eq!(code, ERR_PROTOCOL),
+        (_, other) => panic!("expected a protocol Error, got {other:?}"),
+    }
+    // the server closes after the error reply
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match c.reader.poll(&mut c.stream) {
+            Ok(FramePoll::Eof) | Err(_) => break,
+            Ok(_) => assert!(Instant::now() < deadline, "server never closed"),
+        }
+    }
+    assert!(server.counters().malformed() >= 1, "malformed frame must be counted");
+    let report = server.shutdown();
+    assert!(report.is_clean(), "{:?}", report.worker_failures);
+    assert_eq!(report.rows_live, 0, "malformed teardown must free every row");
+}
+
+/// The same protocol over a Unix-domain socket: round-trip a shifted row
+/// and verify the server unlinks the socket file at shutdown.
+#[cfg(unix)]
+#[test]
+fn uds_roundtrip_matches_written_data() {
+    let cfg = tiny();
+    let sys = SystemBuilder::new(&cfg).banks(1).build();
+    let server = NetServer::new(sys, NetConfig::new(cfg.geometry.cols_per_row));
+    let path = std::env::temp_dir().join(format!("shiftdram_net_{}.sock", std::process::id()));
+    server.listen_uds(&path).expect("bind uds");
+    let mut c = TestClient::connect_uds(&path);
+    let cols = c.hello() as usize;
+    let mut rng = Rng::new(17);
+    let bits = BitRow::random(cols, &mut rng);
+    let h = c.alloc_one();
+    c.write_row(h, bits.clone());
+    c.shift(h, 8);
+    let got = c.read_row(h);
+    assert_eq!(got, bits.shifted_by(ShiftDir::Right, 8, false));
+    c.goodbye();
+    let report = server.shutdown();
+    assert!(report.is_clean(), "{:?}", report.worker_failures);
+    assert_eq!(report.rows_live, 0);
+    assert!(!path.exists(), "socket file must be unlinked at shutdown");
+}
