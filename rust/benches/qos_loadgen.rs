@@ -1,0 +1,78 @@
+//! Bench: QoS under load — the same open-loop socket workload run twice,
+//! once blended (every connection on the default class, controller off)
+//! and once mixed (latency/throughput/background split, feedback
+//! controller on). Reports blended tail latency against per-class tails,
+//! so the latency class's isolation under background pressure is a
+//! tracked number, not an anecdote.
+//!
+//! Emits `BENCH_qos.json` via `util::benchx::JsonReport`.
+
+use std::time::Duration;
+
+use shiftdram::config::DramConfig;
+use shiftdram::coordinator::{ControlConfig, QosClass, SystemBuilder};
+use shiftdram::net::{loadgen, LoadConfig, LoadReport, NetConfig, NetServer, Target};
+use shiftdram::util::benchx::JsonReport;
+
+fn run(cfg: &DramConfig, classes: [u64; 3], controller: bool) -> LoadReport {
+    let mut builder = SystemBuilder::new(cfg).banks(8).max_batch(16);
+    if controller {
+        let ctl = ControlConfig { tick: Duration::from_millis(5), ..ControlConfig::default() };
+        builder = builder.controller(true).control_config(ctl);
+    }
+    let sys = builder.build();
+    let server = NetServer::new(sys, NetConfig::new(cfg.geometry.cols_per_row));
+    let addr = server.listen_tcp("127.0.0.1:0").expect("bind loopback");
+    let mut lc = LoadConfig::new(10, 224);
+    lc.mean_gap_us = 30.0;
+    lc.classes = classes;
+    let report = loadgen::run(&Target::Tcp(addr.to_string()), &lc).expect("loadgen run");
+    let sr = server.shutdown();
+    assert!(sr.is_clean(), "workers must exit clean: {:?}", sr.worker_failures);
+    assert_eq!(sr.rows_live, 0, "loadgen sessions must leak no rows");
+    assert_eq!(report.errors, 0, "socket path must be error-free");
+    assert!(report.starved_classes().is_empty(), "no class may starve");
+    report
+}
+
+fn main() {
+    let cfg = DramConfig::ddr3_1333_4gb();
+    let mut jr = JsonReport::new("qos");
+    println!("=== QoS classes under open-loop load: blended vs mixed+controller ===");
+
+    let base = run(&cfg, [0, 1, 0], false);
+    println!(
+        "blended     : p50 {:>8.1} us  p99 {:>8.1} us  p999 {:>8.1} us  {:>7.0} ops/s  ({} busy)",
+        base.p50_us, base.p99_us, base.p999_us, base.goodput_ops_s, base.busy
+    );
+    jr.metric("blended_p50_us", base.p50_us);
+    jr.metric("blended_p99_us", base.p99_us);
+    jr.metric("blended_p999_us", base.p999_us);
+    jr.metric("blended_goodput_ops_s", base.goodput_ops_s);
+
+    let mixed = run(&cfg, [1, 8, 1], true);
+    for class in QosClass::ALL {
+        let s = &mixed.per_class[class.index()];
+        if s.conns == 0 {
+            continue;
+        }
+        println!(
+            "{:<12}: p50 {:>8.1} us  p99 {:>8.1} us  p999 {:>8.1} us  {:>4} conns  ({} busy)",
+            class.as_str(),
+            s.p50_us,
+            s.p99_us,
+            s.p999_us,
+            s.conns,
+            s.busy
+        );
+        let tag = class.as_str();
+        jr.metric(&format!("{tag}_p50_us"), s.p50_us);
+        jr.metric(&format!("{tag}_p99_us"), s.p99_us);
+        jr.metric(&format!("{tag}_p999_us"), s.p999_us);
+        jr.metric(&format!("{tag}_busy"), s.busy as f64);
+    }
+    jr.metric("mixed_goodput_ops_s", mixed.goodput_ops_s);
+
+    let path = jr.write().expect("write bench json");
+    println!("\nwrote {}", path.display());
+}

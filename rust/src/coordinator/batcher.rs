@@ -39,6 +39,38 @@ impl<T> Batch<T> {
         }
         runs
     }
+
+    /// QoS pre-pass: bubble higher-`rank` items ahead of lower-ranked
+    /// ones **without ever crossing a `conflicts` pair** — the same
+    /// hazard discipline as the reorder planner, so per-ticket results
+    /// stay bit-identical to FIFO dispatch. The sort is stable: items of
+    /// equal rank, and any pair the conflict predicate pins, keep their
+    /// FIFO order. Returns how many items moved forward at least one
+    /// slot.
+    ///
+    /// O(n²) worst case with n ≤ `max_batch` — a few dozen items, cheaper
+    /// than the planner's own footprint scan that follows it.
+    pub fn stable_promote(
+        &mut self,
+        rank: impl Fn(&T) -> u8,
+        conflicts: impl Fn(&T, &T) -> bool,
+    ) -> u64 {
+        let mut promoted = 0u64;
+        for i in 1..self.items.len() {
+            let mut j = i;
+            while j > 0
+                && rank(&self.items[j - 1]) < rank(&self.items[j])
+                && !conflicts(&self.items[j - 1], &self.items[j])
+            {
+                self.items.swap(j - 1, j);
+                j -= 1;
+            }
+            if j < i {
+                promoted += 1;
+            }
+        }
+        promoted
+    }
 }
 
 /// Bounded-batch accumulator for one bank.
@@ -273,6 +305,71 @@ mod tests {
         );
         let empty: Batch<i32> = Batch { bank: 0, items: vec![] };
         assert!(empty.runs_by_key(|&x| x).is_empty());
+    }
+
+    /// (name, rank, row) — items sharing a row conflict.
+    type Classed = (&'static str, u8, u32);
+
+    fn clash(a: &Classed, b: &Classed) -> bool {
+        a.2 == b.2
+    }
+
+    #[test]
+    fn stable_promote_lifts_high_ranks_without_crossing_conflicts() {
+        let mut b = Batch {
+            bank: 0,
+            items: vec![
+                ("bg1", 0u8, 10u32),
+                ("bg2", 0, 11),
+                ("lat", 2, 12), // disjoint rows: free to go first
+            ],
+        };
+        let n = b.stable_promote(|t| t.1, clash);
+        assert_eq!(n, 1);
+        assert_eq!(b.items.iter().map(|t| t.0).collect::<Vec<_>>(), vec!["lat", "bg1", "bg2"]);
+    }
+
+    #[test]
+    fn stable_promote_never_crosses_a_hazard() {
+        // the latency item shares a row with bg2: it may pass bg3 but
+        // must stay behind bg2 (and therefore bg1) — RAW order survives
+        let mut b = Batch {
+            bank: 0,
+            items: vec![("bg1", 0u8, 1u32), ("bg2", 0, 7), ("bg3", 0, 2), ("lat", 2, 7)],
+        };
+        let n = b.stable_promote(|t| t.1, clash);
+        assert_eq!(n, 1);
+        assert_eq!(
+            b.items.iter().map(|t| t.0).collect::<Vec<_>>(),
+            vec!["bg1", "bg2", "lat", "bg3"],
+            "promotion stops at the conflicting predecessor"
+        );
+    }
+
+    #[test]
+    fn stable_promote_is_stable_within_a_class() {
+        // equal ranks keep FIFO order; three classes interleave into
+        // rank-descending order with per-class FIFO preserved
+        let mut b = Batch {
+            bank: 0,
+            items: vec![
+                ("t1", 1u8, 1u32),
+                ("b1", 0, 2),
+                ("l1", 2, 3),
+                ("t2", 1, 4),
+                ("b2", 0, 5),
+                ("l2", 2, 6),
+            ],
+        };
+        b.stable_promote(|t| t.1, |_, _| false);
+        assert_eq!(
+            b.items.iter().map(|t| t.0).collect::<Vec<_>>(),
+            vec!["l1", "l2", "t1", "t2", "b1", "b2"]
+        );
+        // uniform class: nothing moves, nothing counted
+        let mut u = Batch { bank: 0, items: vec![("a", 1u8, 1u32), ("b", 1, 1), ("c", 1, 2)] };
+        assert_eq!(u.stable_promote(|t| t.1, clash), 0);
+        assert_eq!(u.items.iter().map(|t| t.0).collect::<Vec<_>>(), vec!["a", "b", "c"]);
     }
 
     #[test]

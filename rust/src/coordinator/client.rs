@@ -41,6 +41,7 @@ use std::fmt;
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Mutex};
 
+use crate::coordinator::control::QosClass;
 use crate::coordinator::reorder::Access;
 use crate::coordinator::system::{PimRequest, PimResponse, PimSystem};
 use crate::pim::compile::passes::optimize_kernel;
@@ -154,6 +155,9 @@ pub(crate) struct SeatState {
     /// core id of `sys` — the defragmenter skips seats that re-homed away
     /// between its registry snapshot and taking the seat lock
     pub(crate) owner: usize,
+    /// the session's QoS class: stamped onto every wire request this seat
+    /// submits (dispatch priority + admission-control quota)
+    pub(crate) qos: QosClass,
     slots: Vec<SlotEntry>,
     free_slots: Vec<usize>,
 }
@@ -173,6 +177,7 @@ impl SessionSeat {
         subarray: usize,
         owner: usize,
     ) -> Arc<SessionSeat> {
+        let qos = sys.default_qos();
         Arc::new(SessionSeat {
             state: Mutex::new(SeatState {
                 sys,
@@ -180,6 +185,7 @@ impl SessionSeat {
                 bank,
                 subarray,
                 owner,
+                qos,
                 slots: Vec::new(),
                 free_slots: Vec::new(),
             }),
@@ -620,6 +626,30 @@ impl PimClient {
         self.seat.lock().sys.clone()
     }
 
+    /// This session's QoS class (starts at the builder's
+    /// [`default_qos`](crate::coordinator::SystemBuilder::default_qos)).
+    pub fn qos(&self) -> QosClass {
+        self.seat.lock().qos
+    }
+
+    /// Change this session's QoS class. Takes effect from the next
+    /// submission: higher classes dispatch first within a hazard-safe
+    /// batch, `Background` is first to be shed by the network front end's
+    /// admission control. Classes never change results — only ordering
+    /// among non-conflicting requests (bit-identical by the promotion
+    /// pass's construction).
+    pub fn set_qos(&self, class: QosClass) {
+        self.seat.lock().qos = class;
+    }
+
+    /// Charge one admission-control shed against this session's core, so
+    /// [`SystemReport::control`](crate::coordinator::SystemReport) carries
+    /// the per-class shed ledger alongside the wire counters (the network
+    /// front end calls this when it bounces a request with `Busy`).
+    pub(crate) fn record_shed(&self, class: QosClass) {
+        self.seat.lock().sys.metrics().control().record_shed(class);
+    }
+
     /// Allocate one system-placed row.
     pub fn alloc(&self) -> Result<RowHandle, PimError> {
         let mut st = self.seat.lock();
@@ -727,7 +757,8 @@ impl PimClient {
                         binding,
                     };
                     // enqueued under the seat lock — see `wire_row_op`
-                    let (rx, full) = st.sys.enqueue_wire(st.bank, kernel.cost(), access, req);
+                    let (rx, full) =
+                        st.sys.enqueue_wire(st.bank, kernel.cost(), st.qos, access, req);
                     Ok((st.sys.clone(), st.bank, rx, full))
                 }
             }
@@ -795,7 +826,7 @@ impl PimClient {
             match resolve_on(&st, &self.seat, handle) {
                 Ok(row) => {
                     let (access, req) = build(st.subarray, row);
-                    let (rx, full) = st.sys.enqueue_wire(st.bank, 1, access, req);
+                    let (rx, full) = st.sys.enqueue_wire(st.bank, 1, st.qos, access, req);
                     Ok((st.sys.clone(), st.bank, rx, full))
                 }
                 Err(issue) => Err((issue, st.bank, st.subarray)),

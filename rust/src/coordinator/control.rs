@@ -1,0 +1,521 @@
+//! Self-tuning control plane: per-session QoS classes plus the feedback
+//! pieces that observe the live counters and actuate the existing knobs.
+//!
+//! Three cooperating mechanisms, all off by default:
+//!
+//! * **QoS classes** ([`QosClass`]) ride every session seat. At dispatch
+//!   time a drained batch is *stable-promoted*
+//!   ([`crate::coordinator::Batch::stable_promote`]): higher-class
+//!   requests bubble ahead of lower-class ones, but never across a
+//!   request whose [`crate::coordinator::Access`] footprint conflicts —
+//!   the same hazard discipline as the reorder planner, so results stay
+//!   bit-identical per ticket. A background kernel can therefore delay a
+//!   latency-class kernel by at most one batch (`max_batch` requests),
+//!   the bounded budget.
+//! * **Admission control** lives in the network front end: each
+//!   connection's class picks its inflight quota
+//!   ([`crate::net::NetConfig::class_cap`]), so an overloaded server
+//!   sheds `Background` traffic through the existing `Busy` reply path
+//!   before the `Latency` class degrades. Sheds are counted per class.
+//! * **The feedback controller** ([`crate::coordinator::SystemBuilder::
+//!   controller`]) ticks on a background thread: a [`WindowTuner`]
+//!   widens/narrows the hazard-checked reorder window from the observed
+//!   `reordered`/`hazard_blocked` rates, and a [`MoverGovernor`] gates
+//!   the defragmenter / cross-shard re-homing behind a cost model
+//!   (rows-to-move × copy cost vs. observed gain) with hysteresis and a
+//!   move-rate limiter, so the mover stops thrashing under churn.
+//!
+//! Every actuation is semantics-preserving by construction — the reorder
+//! planner is bit-identical at *any* window, promotion never crosses a
+//! conflict, and the governor only decides *whether* a (already
+//! invisible) migration runs — which is what `tests/control_qos.rs`
+//! proves differentially.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// A session's service class. Ordering is by dispatch priority:
+/// `Latency` outranks `Throughput` outranks `Background`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum QosClass {
+    /// small interactive kernels; dispatch first, never shed
+    Latency,
+    /// the default bulk-serving class
+    #[default]
+    Throughput,
+    /// batch/best-effort work (and the mover's own copy fences): first
+    /// to be shed under overload, last to dispatch within a batch
+    Background,
+}
+
+impl QosClass {
+    /// Every class, index-ordered (`Latency` = 0).
+    pub const ALL: [QosClass; 3] = [QosClass::Latency, QosClass::Throughput, QosClass::Background];
+
+    /// Stable per-class array index (`Latency` 0, `Throughput` 1,
+    /// `Background` 2) — also the wire encoding.
+    pub fn index(self) -> usize {
+        match self {
+            QosClass::Latency => 0,
+            QosClass::Throughput => 1,
+            QosClass::Background => 2,
+        }
+    }
+
+    /// Inverse of [`Self::index`] (`None` for an unknown byte off the
+    /// wire).
+    pub fn from_index(i: usize) -> Option<QosClass> {
+        QosClass::ALL.get(i).copied()
+    }
+
+    /// Dispatch priority: higher ranks bubble ahead of lower ones within
+    /// a hazard-safe batch.
+    pub fn rank(self) -> u8 {
+        match self {
+            QosClass::Latency => 2,
+            QosClass::Throughput => 1,
+            QosClass::Background => 0,
+        }
+    }
+
+    /// CLI/flag spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            QosClass::Latency => "latency",
+            QosClass::Throughput => "throughput",
+            QosClass::Background => "background",
+        }
+    }
+
+    /// Parse a CLI/flag spelling (case-insensitive).
+    pub fn parse(s: &str) -> Option<QosClass> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "latency" | "lat" => Some(QosClass::Latency),
+            "throughput" | "tput" => Some(QosClass::Throughput),
+            "background" | "bg" => Some(QosClass::Background),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for QosClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Tunables of the feedback controller. The defaults are deliberately
+/// gentle: a small step per tick, bounded window, and a move interval
+/// long enough that migration can never dominate a tick.
+#[derive(Clone, Debug)]
+pub struct ControlConfig {
+    /// controller tick interval
+    pub tick: Duration,
+    /// reorder-window bounds the tuner stays within
+    pub min_window: usize,
+    pub max_window: usize,
+    /// window widen/narrow step per tick
+    pub window_step: usize,
+    /// cost units one migrated row is assumed to cost (the `CopyRows`
+    /// fence is one compiled Copy program per row)
+    pub copy_cost_per_row: usize,
+    /// hysteresis: engage the mover when gain ≥ `engage_factor` × cost,
+    /// disengage when gain drops below cost
+    pub engage_factor: usize,
+    /// move-rate limiter: minimum spacing between permitted migrations
+    pub min_move_interval: Duration,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        ControlConfig {
+            tick: Duration::from_millis(10),
+            min_window: 0,
+            max_window: 32,
+            window_step: 2,
+            copy_cost_per_row: 1,
+            engage_factor: 2,
+            min_move_interval: Duration::from_millis(20),
+        }
+    }
+}
+
+/// Widens/narrows the hazard-checked reorder window from the observed
+/// counter *rates* (per-tick deltas of `reordered` / `hazard_blocked`).
+///
+/// Policy: hazards dominating hoists means the window is speculating past
+/// conflicting traffic — narrow it; hoists landing with few hazards means
+/// there is merge opportunity beyond the horizon — widen it; a closed
+/// window with live traffic opens a small probe window so the counters
+/// start carrying signal at all. Every answer is clamped to
+/// `[min_window, max_window]`, and any window is bit-identical to FIFO by
+/// the planner's construction — the tuner trades only throughput.
+#[derive(Debug)]
+pub struct WindowTuner {
+    min: usize,
+    max: usize,
+    step: usize,
+    last_reordered: u64,
+    last_blocked: u64,
+    last_requests: u64,
+}
+
+impl WindowTuner {
+    pub fn new(cfg: &ControlConfig) -> Self {
+        WindowTuner {
+            min: cfg.min_window,
+            max: cfg.max_window.max(cfg.min_window),
+            step: cfg.window_step.max(1),
+            last_reordered: 0,
+            last_blocked: 0,
+            last_requests: 0,
+        }
+    }
+
+    /// One tick: feed the *cumulative* counters, get the next window.
+    pub fn tune(
+        &mut self,
+        reordered: u64,
+        hazard_blocked: u64,
+        requests: u64,
+        cur: usize,
+    ) -> usize {
+        let d_reordered = reordered.saturating_sub(self.last_reordered);
+        let d_blocked = hazard_blocked.saturating_sub(self.last_blocked);
+        let d_requests = requests.saturating_sub(self.last_requests);
+        self.last_reordered = reordered;
+        self.last_blocked = hazard_blocked;
+        self.last_requests = requests;
+        let next = if cur == 0 {
+            // closed window: no reorder signal can ever accrue — open a
+            // probe window once traffic is flowing
+            if d_requests > 0 {
+                self.step
+            } else {
+                cur
+            }
+        } else if d_blocked > d_reordered {
+            // hazards dominate: the planner is paying scan cost to hoist
+            // nothing — pull the horizon in
+            cur.saturating_sub(self.step)
+        } else if d_reordered > 0 && d_blocked * 4 <= d_reordered {
+            // hoists land nearly unopposed: there is likely more merge
+            // opportunity just past the horizon
+            cur + self.step
+        } else {
+            cur
+        };
+        next.clamp(self.min, self.max)
+    }
+}
+
+/// Gates migrations (defrag passes, cross-shard re-homing) behind a cost
+/// model with hysteresis and a rate limiter.
+///
+/// The model: a migration moves `rows_to_move` rows at
+/// `copy_cost_per_row` cost units each; its gain is the imbalance (or
+/// fragmentation) it removes, in the same units. The governor engages
+/// when gain ≥ `engage_factor` × cost and disengages when gain < cost —
+/// the dead band between the two is the hysteresis that stops a
+/// borderline seat from ping-ponging. Independently, permitted moves are
+/// spaced at least `min_move_interval` apart, so churny traffic cannot
+/// make the mover thrash no matter what the model says.
+#[derive(Debug)]
+pub struct MoverGovernor {
+    copy_cost_per_row: usize,
+    engage_factor: usize,
+    min_move_interval: Duration,
+    engaged: bool,
+    last_move: Option<Instant>,
+}
+
+impl MoverGovernor {
+    pub fn new(cfg: &ControlConfig) -> Self {
+        MoverGovernor {
+            copy_cost_per_row: cfg.copy_cost_per_row.max(1),
+            engage_factor: cfg.engage_factor.max(1),
+            min_move_interval: cfg.min_move_interval,
+            engaged: false,
+            last_move: None,
+        }
+    }
+
+    /// Decide one candidate migration: `gain` is the cost-unit imbalance
+    /// (re-homing) or fragmentation score (defrag) the move would remove;
+    /// `rows_to_move` is how many rows it would copy. `true` also
+    /// consumes a rate-limiter slot.
+    pub fn permit(&mut self, gain: usize, rows_to_move: usize, now: Instant) -> bool {
+        let cost = rows_to_move.saturating_mul(self.copy_cost_per_row);
+        // hysteresis: engage high, disengage low
+        if self.engaged {
+            if gain < cost {
+                self.engaged = false;
+            }
+        } else if gain >= cost.saturating_mul(self.engage_factor) {
+            self.engaged = true;
+        }
+        if !self.engaged {
+            return false;
+        }
+        // rate limiter: moves are spaced even while engaged
+        if let Some(last) = self.last_move {
+            if now.duration_since(last) < self.min_move_interval {
+                return false;
+            }
+        }
+        self.last_move = Some(now);
+        true
+    }
+}
+
+/// Live counters of the control plane (one block per [`crate::coordinator::
+/// Metrics`] registry, i.e. per shard).
+#[derive(Debug, Default)]
+pub struct ControlCounters {
+    ticks: AtomicU64,
+    widened: AtomicU64,
+    narrowed: AtomicU64,
+    /// requests the QoS pre-pass bubbled ahead of lower-class traffic
+    promoted: AtomicU64,
+    /// admission-control `Busy` sheds per class (indexed by
+    /// [`QosClass::index`])
+    sheds: [AtomicU64; 3],
+    /// migrations the governor permitted / vetoed
+    mover_permits: AtomicU64,
+    mover_vetoes: AtomicU64,
+}
+
+impl ControlCounters {
+    pub fn record_tick(&self) {
+        self.ticks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_window_change(&self, from: usize, to: usize) {
+        if to > from {
+            self.widened.fetch_add(1, Ordering::Relaxed);
+        } else if to < from {
+            self.narrowed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn record_promoted(&self, n: u64) {
+        if n > 0 {
+            self.promoted.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn record_shed(&self, class: QosClass) {
+        self.sheds[class.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_mover_decision(&self, permitted: bool) {
+        if permitted {
+            self.mover_permits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.mover_vetoes.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn ticks(&self) -> u64 {
+        self.ticks.load(Ordering::Relaxed)
+    }
+
+    pub fn promoted(&self) -> u64 {
+        self.promoted.load(Ordering::Relaxed)
+    }
+
+    pub fn sheds(&self, class: QosClass) -> u64 {
+        self.sheds[class.index()].load(Ordering::Relaxed)
+    }
+
+    /// Snapshot into a report block (`final_window` is supplied by the
+    /// owning system, which knows its live window).
+    pub fn report(&self, final_window: usize) -> ControlReport {
+        ControlReport {
+            ticks: self.ticks.load(Ordering::Relaxed),
+            widened: self.widened.load(Ordering::Relaxed),
+            narrowed: self.narrowed.load(Ordering::Relaxed),
+            final_window,
+            promoted: self.promoted.load(Ordering::Relaxed),
+            shed_latency: self.sheds[0].load(Ordering::Relaxed),
+            shed_throughput: self.sheds[1].load(Ordering::Relaxed),
+            shed_background: self.sheds[2].load(Ordering::Relaxed),
+            mover_permits: self.mover_permits.load(Ordering::Relaxed),
+            mover_vetoes: self.mover_vetoes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The control plane's slice of the final
+/// [`crate::coordinator::SystemReport`]. All-zero when neither QoS
+/// classes nor the controller were used.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ControlReport {
+    /// controller ticks executed (0 with the controller off)
+    pub ticks: u64,
+    /// reorder-window widenings / narrowings the tuner applied
+    pub widened: u64,
+    pub narrowed: u64,
+    /// the reorder window at shutdown (a fabric reports the max over
+    /// shards)
+    pub final_window: usize,
+    /// requests the QoS pre-pass bubbled ahead of lower-class traffic
+    pub promoted: u64,
+    /// admission-control `Busy` sheds per class
+    pub shed_latency: u64,
+    pub shed_throughput: u64,
+    pub shed_background: u64,
+    /// migrations the governor permitted / vetoed
+    pub mover_permits: u64,
+    pub mover_vetoes: u64,
+}
+
+impl ControlReport {
+    /// Fold another shard's block into this one (fabric aggregation).
+    pub fn accumulate(&mut self, other: &ControlReport) {
+        self.ticks += other.ticks;
+        self.widened += other.widened;
+        self.narrowed += other.narrowed;
+        self.final_window = self.final_window.max(other.final_window);
+        self.promoted += other.promoted;
+        self.shed_latency += other.shed_latency;
+        self.shed_throughput += other.shed_throughput;
+        self.shed_background += other.shed_background;
+        self.mover_permits += other.mover_permits;
+        self.mover_vetoes += other.mover_vetoes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qos_class_parse_index_roundtrip() {
+        for c in QosClass::ALL {
+            assert_eq!(QosClass::parse(c.as_str()), Some(c));
+            assert_eq!(QosClass::from_index(c.index()), Some(c));
+        }
+        assert_eq!(QosClass::parse("LATENCY"), Some(QosClass::Latency));
+        assert_eq!(QosClass::parse("bg"), Some(QosClass::Background));
+        assert_eq!(QosClass::parse("gold"), None);
+        assert_eq!(QosClass::from_index(3), None);
+        assert_eq!(QosClass::default(), QosClass::Throughput);
+        assert!(QosClass::Latency.rank() > QosClass::Throughput.rank());
+        assert!(QosClass::Throughput.rank() > QosClass::Background.rank());
+    }
+
+    #[test]
+    fn tuner_opens_a_probe_window_under_traffic() {
+        let cfg = ControlConfig::default();
+        let mut t = WindowTuner::new(&cfg);
+        // idle: a closed window stays closed
+        assert_eq!(t.tune(0, 0, 0, 0), 0);
+        // traffic with no reorder signal: probe open
+        assert_eq!(t.tune(0, 0, 100, 0), cfg.window_step);
+    }
+
+    #[test]
+    fn tuner_widens_on_clean_hoists_and_narrows_on_hazards() {
+        let cfg = ControlConfig::default();
+        let mut t = WindowTuner::new(&cfg);
+        let mut w = 4;
+        // hoists with no hazards: widen toward the cap
+        let mut reordered = 0;
+        for _ in 0..64 {
+            reordered += 50;
+            w = t.tune(reordered, 0, reordered, w);
+        }
+        assert_eq!(w, cfg.max_window, "clean hoists saturate at max_window");
+        // hazards dominating: narrow back down, never below min
+        let mut blocked = 0;
+        for _ in 0..64 {
+            blocked += 100;
+            reordered += 1;
+            w = t.tune(reordered, blocked, reordered + blocked, w);
+        }
+        assert_eq!(w, cfg.min_window.max(cfg.window_step), "hazards pull the horizon in");
+        // (a narrowed-to-zero window immediately re-probes under traffic,
+        // so the floor under load is one step, not zero)
+    }
+
+    #[test]
+    fn tuner_holds_steady_on_mixed_signal() {
+        let cfg = ControlConfig::default();
+        let mut t = WindowTuner::new(&cfg);
+        t.tune(0, 0, 0, 8);
+        // hoists and hazards balanced inside the dead band: no change
+        assert_eq!(t.tune(10, 8, 100, 8), 8);
+    }
+
+    #[test]
+    fn governor_hysteresis_has_a_dead_band() {
+        let cfg = ControlConfig { min_move_interval: Duration::ZERO, ..ControlConfig::default() };
+        let mut g = MoverGovernor::new(&cfg);
+        let now = Instant::now();
+        // below the engage threshold (2× cost): stay off
+        assert!(!g.permit(15, 10, now), "gain 15 < 2×10: not engaged");
+        // at the threshold: engage
+        assert!(g.permit(20, 10, now));
+        // inside the dead band (cost ≤ gain < 2×cost): stay engaged
+        assert!(g.permit(12, 10, now));
+        // below cost: disengage
+        assert!(!g.permit(9, 10, now));
+        // and the dead band no longer admits until we cross 2× again
+        assert!(!g.permit(12, 10, now));
+        assert!(g.permit(20, 10, now));
+    }
+
+    #[test]
+    fn governor_rate_limits_even_when_engaged() {
+        let cfg = ControlConfig {
+            min_move_interval: Duration::from_millis(100),
+            ..ControlConfig::default()
+        };
+        let mut g = MoverGovernor::new(&cfg);
+        let t0 = Instant::now();
+        assert!(g.permit(1000, 1, t0));
+        // same instant, clearly profitable: still vetoed by the limiter
+        assert!(!g.permit(1000, 1, t0));
+        assert!(!g.permit(1000, 1, t0 + Duration::from_millis(50)));
+        assert!(g.permit(1000, 1, t0 + Duration::from_millis(150)));
+        // churn scenario: N profitable candidates in a tight loop move at
+        // most 1 + elapsed/interval times
+        let mut moved = 0;
+        for i in 0..1000u64 {
+            if g.permit(10_000, 1, t0 + Duration::from_millis(150 + i)) {
+                moved += 1;
+            }
+        }
+        assert!(moved <= 11, "rate limiter bounds thrash: {moved} moves in 1s");
+    }
+
+    #[test]
+    fn counters_report_roundtrip() {
+        let c = ControlCounters::default();
+        c.record_tick();
+        c.record_window_change(4, 6);
+        c.record_window_change(6, 2);
+        c.record_window_change(2, 2);
+        c.record_promoted(5);
+        c.record_shed(QosClass::Background);
+        c.record_shed(QosClass::Background);
+        c.record_shed(QosClass::Throughput);
+        c.record_mover_decision(true);
+        c.record_mover_decision(false);
+        let r = c.report(7);
+        assert_eq!(r.ticks, 1);
+        assert_eq!(r.widened, 1);
+        assert_eq!(r.narrowed, 1);
+        assert_eq!(r.final_window, 7);
+        assert_eq!(r.promoted, 5);
+        assert_eq!((r.shed_latency, r.shed_throughput, r.shed_background), (0, 1, 2));
+        assert_eq!((r.mover_permits, r.mover_vetoes), (1, 1));
+        let mut agg = ControlReport::default();
+        agg.accumulate(&r);
+        agg.accumulate(&r);
+        assert_eq!(agg.ticks, 2);
+        assert_eq!(agg.final_window, 7);
+        assert_eq!(agg.shed_background, 4);
+    }
+}

@@ -83,6 +83,7 @@ use crate::coordinator::batcher::OverflowDeque;
 use crate::coordinator::client::{
     Kernel, PimClient, PimError, Receipt, RowHandle, SessionSeat, Ticket,
 };
+use crate::coordinator::control::{ControlReport, MoverGovernor, QosClass};
 use crate::coordinator::metrics::{FabricCounters, Metrics};
 use crate::coordinator::reorder::Access;
 use crate::coordinator::router::Placement;
@@ -256,13 +257,13 @@ pub(crate) struct FabricCore {
     counters: FabricCounters,
     stop: AtomicBool,
     dispatchers: Mutex<Vec<JoinHandle<()>>>,
-    /// the shards' hazard-checked reorder window, reused as the
-    /// dispatcher's merged-run lookahead over its deque (0 = one task at
-    /// a time, exactly the pre-reorder behavior)
-    window: usize,
     /// queued-cost threshold for cross-shard session re-homing (0 = the
     /// mover thread is not spawned; `rehome_idle` still works manually)
     rehome_after: usize,
+    /// the feedback controller's re-homing gate: cost model + hysteresis
+    /// + rate limiter (None without a controller — every profitable scan
+    /// moves, exactly the pre-controller behavior)
+    governor: Option<Mutex<MoverGovernor>>,
     /// dispatcher + mover threads still running (observability for the
     /// drop-teardown regression test)
     live_threads: Arc<AtomicUsize>,
@@ -272,7 +273,6 @@ impl FabricCore {
     pub(crate) fn new(shards: Vec<PimSystem>, placement: Placement, rehome_after: usize) -> Self {
         assert!(!shards.is_empty());
         let n = shards.len();
-        let window = shards[0].reorder_window();
         FabricCore {
             shards,
             queues: (0..n).map(|_| Arc::new(ShardQueue::new())).collect(),
@@ -281,10 +281,25 @@ impl FabricCore {
             counters: FabricCounters::new(n),
             stop: AtomicBool::new(false),
             dispatchers: Mutex::new(Vec::new()),
-            window,
             rehome_after,
+            governor: None,
             live_threads: Arc::new(AtomicUsize::new(0)),
         }
+    }
+
+    /// Attach a re-homing governor (the controller path of
+    /// [`SystemBuilder::build_fabric`](crate::coordinator::SystemBuilder)).
+    pub(crate) fn with_governor(mut self, governor: Option<MoverGovernor>) -> Self {
+        self.governor = governor.map(Mutex::new);
+        self
+    }
+
+    /// The dispatcher's merged-run lookahead over `shard`'s deque: the
+    /// shard's **live** hazard-checked reorder window, re-read per drain
+    /// so the feedback controller's retunes reach the fabric layer too
+    /// (0 = one task at a time, exactly the pre-reorder behavior).
+    fn window(&self, shard: usize) -> usize {
+        self.shards[shard].reorder_window()
     }
 
     /// Queued cost visible at shard level: the shard's overflow deque plus
@@ -538,6 +553,7 @@ impl FabricCore {
             let (rx, _full) = src.enqueue_wire(
                 old_bank,
                 1,
+                QosClass::Background,
                 Access::read_row(old_sa, row),
                 PimRequest::ReadRow { subarray: old_sa, row },
             );
@@ -576,6 +592,7 @@ impl FabricCore {
             let (rx, _full) = dst.enqueue_wire(
                 new_bank,
                 1,
+                QosClass::Background,
                 Access::write_row(new_sa, row),
                 PimRequest::WriteRow { subarray: new_sa, row, bits: bits.clone() },
             );
@@ -625,12 +642,29 @@ impl FabricCore {
             return 0;
         }
         for seat in self.shards[busy].live_seats() {
-            let wants = {
+            let (wants, rows_to_move) = {
                 let st = seat.lock();
-                st.shard == busy && st.live_count() > 0
+                (st.shard == busy && st.live_count() > 0, st.live_count())
             };
             if !wants {
                 continue;
+            }
+            // the controller's cost model: moving this seat copies
+            // `rows_to_move` rows for a gain of the observed queued-cost
+            // imbalance. The governor's hysteresis + rate limiter decide;
+            // a veto leaves the seat (and the scan) alone until loads
+            // diverge further or the move interval elapses.
+            if let Some(gov) = &self.governor {
+                let imbalance = loads[busy] - loads[idle];
+                let permitted = gov.lock().unwrap().permit(
+                    imbalance,
+                    rows_to_move,
+                    std::time::Instant::now(),
+                );
+                self.shards[busy].metrics().control().record_mover_decision(permitted);
+                if !permitted {
+                    return 0;
+                }
             }
             if self.rehome_seat(&seat, busy, idle).is_ok() {
                 return 1;
@@ -701,12 +735,13 @@ fn dispatcher_loop(
         // merged-run drain: the front task plus (with a reorder window
         // open) any same-shape unplaced jobs within the lookahead —
         // pinned tasks are left in place and never merge
-        let run = queue.deque.lock().unwrap().pop_front_run(core.window, mergeable);
+        let window = core.window(me);
+        let run = queue.deque.lock().unwrap().pop_front_run(window, mergeable);
         if !run.is_empty() {
             core.execute_run(me, run);
             continue;
         }
-        if let Some(jobs) = core.try_steal_run(me, core.window) {
+        if let Some(jobs) = core.try_steal_run(me, window) {
             core.execute_jobs(me, jobs);
             continue;
         }
@@ -756,8 +791,10 @@ impl PimFabric {
         shards: Vec<PimSystem>,
         placement: Placement,
         rehome_after: usize,
+        governor: Option<MoverGovernor>,
     ) -> PimFabric {
-        let core = Arc::new(FabricCore::new(shards, placement, rehome_after));
+        let core =
+            Arc::new(FabricCore::new(shards, placement, rehome_after).with_governor(governor));
         {
             let mut dispatchers = core.dispatchers.lock().unwrap();
             for shard in 0..core.shards.len() {
@@ -923,6 +960,10 @@ impl PimFabric {
         for s in &shards {
             failures.extend(s.report.worker_failures.iter().cloned());
         }
+        let mut control = ControlReport::default();
+        for s in &shards {
+            control.accumulate(&s.report.control);
+        }
         SystemReport {
             banks,
             requests,
@@ -950,6 +991,7 @@ impl PimFabric {
             frag_before: shards.iter().map(|s| s.report.frag_before).sum(),
             frag_after: shards.iter().map(|s| s.report.frag_after).sum(),
             rows_live: shards.iter().map(|s| s.report.rows_live).sum(),
+            control,
             shards,
         }
     }
@@ -980,6 +1022,23 @@ impl FabricClient {
     /// The underlying shard session, for anything not delegated here.
     pub fn session(&self) -> &PimClient {
         &self.client
+    }
+
+    /// This session's QoS class (see [`PimClient::qos`]).
+    pub fn qos(&self) -> QosClass {
+        self.client.qos()
+    }
+
+    /// Re-class the session; follows it across re-homing (the class
+    /// lives in the seat). See [`PimClient::set_qos`].
+    pub fn set_qos(&self, class: QosClass) {
+        self.client.set_qos(class);
+    }
+
+    /// Charge one admission-control shed against the session's current
+    /// shard (see [`PimClient::record_shed`]).
+    pub(crate) fn record_shed(&self, class: QosClass) {
+        self.client.record_shed(class);
     }
 
     /// The fabric this session belongs to.

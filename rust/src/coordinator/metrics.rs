@@ -13,6 +13,7 @@
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
+use crate::coordinator::control::{ControlCounters, QosClass};
 use crate::coordinator::reorder::PlanStats;
 use crate::pim::compile::{CacheStats, ProgramCache};
 
@@ -111,6 +112,7 @@ pub struct Metrics {
     cache: Option<Arc<ProgramCache>>,
     reorder: Arc<ReorderCounters>,
     mover: Arc<MoverCounters>,
+    control: Arc<ControlCounters>,
 }
 
 impl Metrics {
@@ -120,12 +122,19 @@ impl Metrics {
             cache: None,
             reorder: Arc::new(ReorderCounters::default()),
             mover: Arc::new(MoverCounters::default()),
+            control: Arc::new(ControlCounters::default()),
         }
     }
 
     /// The row mover's counter block.
     pub fn mover(&self) -> &MoverCounters {
         &self.mover
+    }
+
+    /// The control plane's counter block (QoS promotions, controller
+    /// ticks, governor decisions).
+    pub fn control(&self) -> &ControlCounters {
+        &self.control
     }
 
     /// Registry with the serving system's program cache attached, so cache
@@ -364,6 +373,9 @@ pub struct NetCounters {
     timeouts: AtomicU64,
     reaped: AtomicU64,
     malformed: AtomicU64,
+    /// `Busy` sheds broken down by the connection's QoS class (indexed by
+    /// [`QosClass::index`]); sums to at most `busy_rejects`
+    shed: [AtomicU64; 3],
 }
 
 impl NetCounters {
@@ -386,6 +398,12 @@ impl NetCounters {
     /// A request bounced off the per-connection inflight cap.
     pub fn record_busy_reject(&self) {
         self.busy_rejects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A classed request was shed (admission control): bump the per-class
+    /// breakdown alongside the blended `busy_rejects` counter.
+    pub fn record_shed(&self, class: QosClass) {
+        self.shed[class.index()].fetch_add(1, Ordering::Relaxed);
     }
 
     /// A read or write hit its socket timeout.
@@ -436,6 +454,11 @@ impl NetCounters {
     /// Malformed frames that tore a connection down.
     pub fn malformed(&self) -> u64 {
         self.malformed.load(Ordering::Relaxed)
+    }
+
+    /// `Busy` sheds charged to one QoS class.
+    pub fn sheds(&self, class: QosClass) -> u64 {
+        self.shed[class.index()].load(Ordering::Relaxed)
     }
 }
 
@@ -600,5 +623,21 @@ mod tests {
         assert_eq!(c.timeouts(), 1);
         assert_eq!(c.reaped(), 1);
         assert_eq!(c.malformed(), 1);
+        // per-class shed breakdown rides alongside the blended counter
+        c.record_shed(QosClass::Background);
+        c.record_shed(QosClass::Background);
+        c.record_shed(QosClass::Latency);
+        assert_eq!(c.sheds(QosClass::Background), 2);
+        assert_eq!(c.sheds(QosClass::Latency), 1);
+        assert_eq!(c.sheds(QosClass::Throughput), 0);
+    }
+
+    #[test]
+    fn control_counters_are_shared_across_clones() {
+        let m = Metrics::new(1);
+        m.control().record_promoted(3);
+        m.clone().control().record_promoted(4);
+        assert_eq!(m.control().promoted(), 7);
+        assert_eq!(m.control().ticks(), 0);
     }
 }

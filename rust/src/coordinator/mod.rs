@@ -67,6 +67,7 @@
 
 pub mod batcher;
 pub mod client;
+pub mod control;
 pub mod fabric;
 pub mod metrics;
 pub mod mover;
@@ -76,6 +77,7 @@ pub mod system;
 
 pub use batcher::{Batch, Batcher, OverflowDeque};
 pub use client::{Kernel, PimClient, PimError, Receipt, RowHandle, Ticket};
+pub use control::{ControlConfig, ControlReport, MoverGovernor, QosClass, WindowTuner};
 pub use fabric::{FabricClient, FabricTicket, JobOutput, JobSpec, PimFabric};
 pub use metrics::{FabricCounters, Metrics, MoverCounters, NetCounters, WorkerDelta};
 pub use mover::MoveStats;

@@ -40,6 +40,7 @@
 //! bit-identical to a FIFO-placed one while its fragmentation score drops.
 
 use crate::coordinator::client::Kernel;
+use crate::coordinator::control::QosClass;
 use crate::coordinator::reorder::Access;
 use crate::coordinator::system::{PimRequest, PimSystem};
 use crate::pim::{PimOp, RowFootprint};
@@ -131,8 +132,16 @@ pub(crate) fn defrag_pass(sys: &PimSystem, threshold: usize) -> MoveStats {
             ops: copy.ops().clone(),
             pairs: pairs.clone(),
         };
-        let (_fire_and_forget, _full) =
-            st.sys.enqueue_wire(bank, cost, Access::Touch { subarray, rows }, req);
+        // mover copies ride the Background class: client kernels of any
+        // higher class dispatch ahead of a compaction fence whenever the
+        // hazard check allows it
+        let (_fire_and_forget, _full) = st.sys.enqueue_wire(
+            bank,
+            cost,
+            QosClass::Background,
+            Access::Touch { subarray, rows },
+            req,
+        );
         // only now do the sources go back to the slab — an alloc that
         // reuses one enqueues its first write behind the fence
         {

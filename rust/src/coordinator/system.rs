@@ -42,6 +42,9 @@ use std::thread::JoinHandle;
 use crate::config::DramConfig;
 use crate::coordinator::batcher::{Batch, Batcher};
 use crate::coordinator::client::{PimClient, PimError, SessionSeat};
+use crate::coordinator::control::{
+    ControlConfig, ControlReport, MoverGovernor, QosClass, WindowTuner,
+};
 use crate::coordinator::fabric::PimFabric;
 use crate::coordinator::metrics::{Metrics, WorkerDelta};
 use crate::coordinator::mover::{self, MoveStats};
@@ -109,6 +112,10 @@ struct Envelope {
     cost: usize,
     /// hazard record for the reorder planner (rows this request touches)
     access: Access,
+    /// the submitting session's QoS class: higher classes are
+    /// stable-promoted to the front of a dispatched batch (never across a
+    /// conflicting access, so results stay bit-identical to FIFO)
+    class: QosClass,
     /// set by the planner: this kernel continues the merged run started
     /// by the nearest preceding envelope (same shape, one shared
     /// `run_compiled_many` replay)
@@ -200,6 +207,10 @@ pub struct SystemReport {
     /// zero when every session freed its rows (the network front end's
     /// disconnect teardown is audited against this)
     pub rows_live: u64,
+    /// the control plane's slice: QoS promotions, controller ticks,
+    /// window retunes, per-class sheds, governor decisions (all zero when
+    /// neither QoS nor the controller were used)
+    pub control: ControlReport,
 }
 
 impl SystemReport {
@@ -244,6 +255,12 @@ pub struct SystemBuilder {
     defrag: bool,
     defrag_threshold: usize,
     rehome_after: usize,
+    /// QoS class new sessions start in (overridable per session)
+    default_qos: QosClass,
+    /// spawn the feedback controller thread
+    controller: bool,
+    /// controller tunables (tick, window bounds, governor cost model)
+    control_cfg: ControlConfig,
     /// fabric shard index stamped onto this system's session seats
     /// (set internally by `fabric_shards`; 0 for a plain system)
     shard_index: usize,
@@ -265,6 +282,9 @@ impl SystemBuilder {
             defrag: default_defrag(),
             defrag_threshold: 1,
             rehome_after: 0,
+            default_qos: QosClass::default(),
+            controller: false,
+            control_cfg: ControlConfig::default(),
             shard_index: 0,
         }
     }
@@ -398,6 +418,35 @@ impl SystemBuilder {
         self
     }
 
+    /// QoS class new sessions start in (default [`QosClass::Throughput`];
+    /// any session can change its own class with
+    /// [`PimClient::set_qos`](crate::coordinator::PimClient::set_qos)).
+    pub fn default_qos(mut self, class: QosClass) -> Self {
+        self.default_qos = class;
+        self
+    }
+
+    /// Spawn the feedback controller (default off): a background thread
+    /// that each tick retunes the reorder window from the observed
+    /// `reordered`/`hazard_blocked` rates ([`WindowTuner`]) and gates the
+    /// background defragmenter / the fabric's re-homing behind a
+    /// rows-moved × copy-cost model with hysteresis and a move-rate
+    /// limiter ([`MoverGovernor`]). Every actuation preserves results
+    /// bit-identically (`tests/control_qos.rs`); only throughput and tail
+    /// latency move.
+    pub fn controller(mut self, on: bool) -> Self {
+        self.controller = on;
+        self
+    }
+
+    /// Controller tunables (tick interval, window bounds/step, governor
+    /// cost model). Implies nothing by itself — [`Self::controller`]
+    /// switches the thread on.
+    pub fn control_config(mut self, cfg: ControlConfig) -> Self {
+        self.control_cfg = cfg;
+        self
+    }
+
     /// Spin up the leader state and one worker thread per bank.
     pub fn build(self) -> PimSystem {
         assert_eq!(
@@ -415,8 +464,11 @@ impl SystemBuilder {
     /// metrics), fronted by two-level placement and work stealing. See
     /// [`crate::coordinator::fabric`].
     pub fn build_fabric(self) -> PimFabric {
+        // with the controller on, the fabric's re-homing gets the same
+        // governor treatment the per-shard defragmenter does
+        let governor = self.controller.then(|| MoverGovernor::new(&self.control_cfg));
         let (shards, placement, rehome_after) = self.fabric_shards();
-        PimFabric::launch(shards, placement, rehome_after)
+        PimFabric::launch(shards, placement, rehome_after, governor)
     }
 
     /// The fabric's shard systems (one per channel) plus the shared
@@ -456,6 +508,9 @@ impl SystemBuilder {
                 defrag: self.defrag,
                 defrag_threshold: self.defrag_threshold,
                 rehome_after: 0,
+                default_qos: self.default_qos,
+                controller: self.controller,
+                control_cfg: self.control_cfg.clone(),
                 shard_index: channel,
             };
             shards.push(shard_builder.build_on(banks));
@@ -499,7 +554,7 @@ impl SystemBuilder {
             self.cfg.geometry.subarrays_per_bank,
             self.cfg.geometry.rows_per_subarray,
         );
-        PimSystem {
+        let sys = PimSystem {
             core: Arc::new(Core {
                 id: NEXT_CORE_ID.fetch_add(1, Ordering::Relaxed),
                 shard_index: self.shard_index,
@@ -508,17 +563,76 @@ impl SystemBuilder {
                     .map(|b| Mutex::new(Batcher::new(b, self.max_batch)))
                     .collect(),
                 max_batch: self.max_batch,
-                reorder_window: self.reorder_window,
+                reorder_window: AtomicUsize::new(self.reorder_window),
                 defrag: self.defrag,
                 defrag_threshold: self.defrag_threshold,
                 mover_active: AtomicBool::new(false),
+                // with the controller on, defrag passes wait for the
+                // governor's first permit; without it the gate is
+                // permanently open (pre-controller behavior, exactly)
+                mover_gate: AtomicBool::new(!self.controller),
+                controlled: self.controller,
+                default_qos: self.default_qos,
                 seats: Mutex::new(Vec::new()),
                 senders,
                 workers: Mutex::new(workers),
                 failures: Mutex::new(Vec::new()),
                 metrics,
                 cache,
+                ctl_stop: Arc::new(AtomicBool::new(false)),
+                ctl_thread: Mutex::new(None),
             }),
+        };
+        if self.controller {
+            let weak = Arc::downgrade(&sys.core);
+            let cfg = self.control_cfg.clone();
+            let stop = sys.core.ctl_stop.clone();
+            let handle = std::thread::spawn(move || controller_loop(weak, cfg, stop));
+            *sys.core.ctl_thread.lock().unwrap() = Some(handle);
+        }
+        sys
+    }
+}
+
+/// The feedback controller: one tick = read the cumulative counters,
+/// retune the reorder window, and (re-)decide whether the background
+/// defragmenter may run. Holds only a `Weak<Core>` — the thread dies on
+/// its own once the system it watches is gone, and `shutdown` joins it
+/// for a deterministic exit.
+fn controller_loop(core: Weak<Core>, cfg: ControlConfig, stop: Arc<AtomicBool>) {
+    let mut tuner = WindowTuner::new(&cfg);
+    let mut governor = MoverGovernor::new(&cfg);
+    loop {
+        std::thread::sleep(cfg.tick);
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+        let Some(core) = core.upgrade() else { break };
+        let m = &core.metrics;
+        m.control().record_tick();
+        // actuator 1: the hazard-checked reorder window. Any window is
+        // bit-identical to FIFO by the planner's construction, so the
+        // tuner is free to chase throughput.
+        let cur = core.reorder_window.load(Ordering::Relaxed);
+        let next = tuner.tune(m.reordered(), m.hazard_blocked(), m.total_requests(), cur);
+        if next != cur {
+            m.control().record_window_change(cur, next);
+            core.reorder_window.store(next, Ordering::Relaxed);
+        }
+        // actuator 2: the defragmenter gate. A compaction pass is modeled
+        // as moving roughly one row per threshold-unit of score, so the
+        // governor engages at frag ≥ engage_factor × threshold, lets go
+        // below the threshold, and spaces permits by the move-rate
+        // limiter. Each permit is good for exactly one pass (the gate is
+        // consumed by `maybe_defrag`).
+        if core.defrag {
+            let frag = core.router.lock().unwrap().fragmentation();
+            let permitted =
+                governor.permit(frag, core.defrag_threshold, std::time::Instant::now());
+            m.control().record_mover_decision(permitted);
+            if permitted {
+                core.mover_gate.store(true, Ordering::Release);
+            }
         }
     }
 }
@@ -562,12 +676,22 @@ struct Core {
     router: Mutex<Router>,
     batchers: Vec<Mutex<Batcher<Envelope>>>,
     max_batch: usize,
-    reorder_window: usize,
+    /// the live reorder window — atomic so the feedback controller can
+    /// retune it between batches (bit-identity holds at any value)
+    reorder_window: AtomicUsize,
     /// background-defragmenter knob + per-subarray trigger score
     defrag: bool,
     defrag_threshold: usize,
     /// throttles the post-dispatch defrag hook to one pass at a time
     mover_active: AtomicBool,
+    /// the governor's defrag permit: with the controller on, each `true`
+    /// admits exactly one pass (consumed by `maybe_defrag`); with it off
+    /// the gate stays open and behavior is exactly pre-controller
+    mover_gate: AtomicBool,
+    /// whether a feedback controller owns this core's knobs
+    controlled: bool,
+    /// QoS class new seats start in
+    default_qos: QosClass,
     /// every seat opened on this core (weak — seats die with their last
     /// client/handle, and passes prune dead entries)
     seats: Mutex<Vec<Weak<SessionSeat>>>,
@@ -576,10 +700,19 @@ struct Core {
     failures: Mutex<Vec<String>>,
     metrics: Metrics,
     cache: Arc<ProgramCache>,
+    /// stops the feedback controller thread (no-ops when none was spawned)
+    ctl_stop: Arc<AtomicBool>,
+    ctl_thread: Mutex<Option<JoinHandle<()>>>,
 }
 
 impl Drop for Core {
     fn drop(&mut self) {
+        self.ctl_stop.store(true, Ordering::Release);
+        if let Ok(ctl) = self.ctl_thread.get_mut() {
+            if let Some(h) = ctl.take() {
+                let _ = h.join();
+            }
+        }
         for s in &self.senders {
             let _ = s.send(WorkerMsg::Stop);
         }
@@ -705,6 +838,11 @@ impl PimSystem {
         if !self.core.defrag {
             return;
         }
+        // under a controller, each pass consumes one governor permit; the
+        // swap leaves the gate shut until the next profitable tick
+        if self.core.controlled && !self.core.mover_gate.swap(false, Ordering::AcqRel) {
+            return;
+        }
         if self
             .core
             .mover_active
@@ -718,9 +856,23 @@ impl PimSystem {
     }
 
     /// The hazard-checked reorder window dispatched batches are planned
-    /// with (0 = strict FIFO).
+    /// with (0 = strict FIFO). Live: the feedback controller retunes it
+    /// between batches.
     pub fn reorder_window(&self) -> usize {
-        self.core.reorder_window
+        self.core.reorder_window.load(Ordering::Relaxed)
+    }
+
+    /// Retune the reorder window (the controller's actuator, also usable
+    /// manually). Takes effect from the next dispatched batch; results
+    /// are bit-identical at any value, so this is always safe under live
+    /// traffic.
+    pub fn set_reorder_window(&self, n: usize) {
+        self.core.reorder_window.store(n, Ordering::Relaxed);
+    }
+
+    /// The QoS class new sessions on this core start in.
+    pub(crate) fn default_qos(&self) -> QosClass {
+        self.core.default_qos
     }
 
     /// Queue one wire request on a bank *without* dispatching; returns the
@@ -732,6 +884,7 @@ impl PimSystem {
         &self,
         bank: usize,
         cost: usize,
+        class: QosClass,
         access: Access,
         req: PimRequest,
     ) -> (Receiver<Result<PimResponse, PimError>>, bool) {
@@ -739,7 +892,7 @@ impl PimSystem {
         self.core.router.lock().unwrap().charge(bank, cost);
         let full = {
             let mut b = self.core.batchers[bank].lock().unwrap();
-            b.push(Envelope { req, cost, access, merged: false, respond: tx });
+            b.push(Envelope { req, cost, access, class, merged: false, respond: tx });
             b.len() >= self.core.max_batch
         };
         (rx, full)
@@ -754,7 +907,7 @@ impl PimSystem {
         access: Access,
         req: PimRequest,
     ) -> Receiver<Result<PimResponse, PimError>> {
-        let (rx, full) = self.enqueue_wire(bank, cost, access, req);
+        let (rx, full) = self.enqueue_wire(bank, cost, QosClass::default(), access, req);
         if full {
             self.flush_bank(bank);
         }
@@ -800,11 +953,22 @@ impl PimSystem {
 
     fn dispatch(&self, bank: usize, mut batch: Batch<Envelope>) {
         let cost: usize = batch.items.iter().map(|e| e.cost).sum();
+        // QoS pre-pass: higher classes bubble to the front of the batch,
+        // never across a conflicting access — so a background kernel
+        // delays a latency-class kernel by at most this one batch, and
+        // results stay bit-identical to FIFO (a no-op when every envelope
+        // shares a class)
+        if batch.items.len() > 1 {
+            let promoted = batch
+                .stable_promote(|e| e.class.rank(), |a, b| a.access.conflicts_with(&b.access));
+            self.core.metrics.control().record_promoted(promoted);
+        }
         // hazard-checked reorder pass over the drained queue prefix:
         // same-shape kernels regroup into merged runs when nothing they
         // would jump over conflicts (no-op with a zero window)
-        if self.core.reorder_window > 0 && batch.items.len() > 1 {
-            let stats = reorder::plan(&mut batch.items, self.core.reorder_window);
+        let window = self.core.reorder_window.load(Ordering::Relaxed);
+        if window > 0 && batch.items.len() > 1 {
+            let stats = reorder::plan(&mut batch.items, window);
             self.core.metrics.record_plan(&stats);
         }
         if let Err(lost) = self.core.senders[bank].send(WorkerMsg::Work(batch.items)) {
@@ -822,6 +986,12 @@ impl PimSystem {
     /// are joined here and surface in [`SystemReport::worker_failures`].
     pub fn shutdown(&self) -> SystemReport {
         self.flush();
+        // stop the feedback controller first: shutdown totals must not
+        // race a final retune (join waits at most one tick)
+        self.core.ctl_stop.store(true, Ordering::Release);
+        if let Some(h) = self.core.ctl_thread.lock().unwrap().take() {
+            let _ = h.join();
+        }
         for s in &self.core.senders {
             let _ = s.send(WorkerMsg::Stop);
         }
@@ -868,6 +1038,7 @@ impl PimSystem {
             frag_before: m.mover().frag_before(),
             frag_after: m.mover().frag_after(),
             rows_live,
+            control: m.control().report(self.reorder_window()),
         }
     }
 

@@ -8,10 +8,14 @@
 //! shiftdram mc [--trials N] [--backend pjrt|native] [--node 22nm]
 //! shiftdram serve --banks N --ops K [--batch B] [--channels C] [--reorder-window W]
 //!                 [--defrag] [--defrag-threshold T] [--rehome-after R] [--opt-level L]
+//!                 [--qos latency|throughput|background] [--controller on|off]
+//!                 [--controller-tick-ms T]
 //!                 [--listen ADDR] [--uds PATH] [--port-file F] [--exit-idle-s N]
-//!                 [--max-inflight M]
+//!                 [--max-inflight M] [--idle-timeout-ms T] [--write-timeout-ms T]
+//!                 [--net-tick-ms T] [--accept-tick-ms T]
 //! shiftdram loadgen [--connect ADDR | --uds PATH] [--conns N] [--ops K] [--seed S]
-//!                   [--inflight D] [--gap-us U] [--banks N]
+//!                   [--inflight D] [--gap-us U] [--banks N] [--mix A,B,C]
+//!                   [--classes L,T,B] [--out NAME]
 //! shiftdram demo [gf|aes|rs|mul|adder]
 //! ```
 //!
@@ -24,7 +28,7 @@
 use shiftdram::circuit::montecarlo::{Backend, MonteCarlo};
 use shiftdram::circuit::params::TechNode;
 use shiftdram::config::{DramConfig, McConfig};
-use shiftdram::coordinator::{Kernel, SystemBuilder};
+use shiftdram::coordinator::{ControlConfig, ControlReport, Kernel, QosClass, SystemBuilder};
 use shiftdram::pim::OptLevel;
 use shiftdram::report;
 use shiftdram::runtime::Runtime;
@@ -74,6 +78,51 @@ fn opt_f64(args: &[String], name: &str, default: f64) -> f64 {
                 std::process::exit(2);
             }
         },
+    }
+}
+
+/// `--flag A,B,C` triple of weights (kernel-size mix, class split).
+fn opt_weights(args: &[String], name: &str, default: [u64; 3]) -> [u64; 3] {
+    match opt(args, name) {
+        None => default,
+        Some(s) => {
+            let parts: Vec<u64> = s
+                .split(',')
+                .map(|p| p.trim().parse::<u64>().ok())
+                .collect::<Option<Vec<_>>>()
+                .unwrap_or_default();
+            if parts.len() != 3 {
+                eprintln!("flag {name} expects three comma-separated weights, got {s:?}");
+                std::process::exit(2);
+            }
+            [parts[0], parts[1], parts[2]]
+        }
+    }
+}
+
+/// `--qos latency|throughput|background` (default: the system default).
+fn opt_qos(args: &[String], name: &str) -> QosClass {
+    match opt(args, name) {
+        None => QosClass::default(),
+        Some(s) => match QosClass::parse(&s) {
+            Some(c) => c,
+            None => {
+                eprintln!("flag {name} expects latency|throughput|background, got {s:?}");
+                std::process::exit(2);
+            }
+        },
+    }
+}
+
+/// `--controller on|off` (default off).
+fn opt_controller(args: &[String]) -> bool {
+    match opt(args, "--controller").as_deref() {
+        None | Some("off") => false,
+        Some("on") => true,
+        Some(other) => {
+            eprintln!("flag --controller expects on|off, got {other:?}");
+            std::process::exit(2);
+        }
     }
 }
 
@@ -140,6 +189,16 @@ fn main() {
                 "--opt-level",
                 OptLevel::from_env().index(),
             ));
+            let qos = opt_qos(&args, "--qos");
+            let controller = opt_controller(&args);
+            let control_cfg = ControlConfig {
+                tick: std::time::Duration::from_millis(opt_usize(
+                    &args,
+                    "--controller-tick-ms",
+                    10,
+                ) as u64),
+                ..ControlConfig::default()
+            };
             let listen = opt(&args, "--listen");
             let uds = opt(&args, "--uds");
             if listen.is_some() || uds.is_some() {
@@ -154,6 +213,9 @@ fn main() {
                     defrag_threshold,
                     rehome_after,
                     opt_level,
+                    qos,
+                    controller,
+                    control_cfg,
                     listen,
                     uds,
                 );
@@ -171,6 +233,9 @@ fn main() {
                     defrag_threshold,
                     rehome_after,
                     opt_level,
+                    qos,
+                    controller,
+                    control_cfg,
                 );
                 return;
             }
@@ -181,6 +246,9 @@ fn main() {
                 .defrag(defrag)
                 .defrag_threshold(defrag_threshold)
                 .opt_level(opt_level)
+                .default_qos(qos)
+                .controller(controller)
+                .control_config(control_cfg)
                 .build();
             // one session per bank; each allocs one system-placed row and
             // submits shift kernels against its handle
@@ -225,6 +293,9 @@ fn main() {
                     r.moves, r.rows_migrated, r.frag_before, r.frag_after
                 );
             }
+            if controller {
+                print_control(&r.control);
+            }
             if !r.is_clean() {
                 eprintln!("worker failures: {:?}", r.worker_failures);
                 std::process::exit(1);
@@ -240,6 +311,25 @@ fn main() {
             std::process::exit(2);
         }
     }
+}
+
+/// One line of controller telemetry, shared by every serve path.
+fn print_control(c: &ControlReport) {
+    println!(
+        "control: {} ticks, reorder window {} ({} widened / {} narrowed), \
+         {} kernels promoted, mover {} permits / {} vetoes, \
+         sheds lat/tput/bg {}/{}/{}",
+        c.ticks,
+        c.final_window,
+        c.widened,
+        c.narrowed,
+        c.promoted,
+        c.mover_permits,
+        c.mover_vetoes,
+        c.shed_latency,
+        c.shed_throughput,
+        c.shed_background
+    );
 }
 
 /// `serve --listen ADDR` / `--uds PATH`: put the network front end in
@@ -259,14 +349,26 @@ fn serve_net(
     defrag_threshold: usize,
     rehome_after: usize,
     opt_level: OptLevel,
+    qos: QosClass,
+    controller: bool,
+    control_cfg: ControlConfig,
     listen: Option<String>,
     uds: Option<String>,
 ) {
     use shiftdram::net::{NetConfig, NetServer};
     use std::time::{Duration, Instant};
 
+    let ms = |v: usize| Duration::from_millis(v as u64);
     let mut net_cfg = NetConfig::new(cfg.geometry.cols_per_row);
     net_cfg.max_inflight = opt_usize(args, "--max-inflight", net_cfg.max_inflight);
+    net_cfg.idle_timeout =
+        ms(opt_usize(args, "--idle-timeout-ms", net_cfg.idle_timeout.as_millis() as usize));
+    net_cfg.write_timeout =
+        ms(opt_usize(args, "--write-timeout-ms", net_cfg.write_timeout.as_millis() as usize));
+    net_cfg.tick = ms(opt_usize(args, "--net-tick-ms", net_cfg.tick.as_millis() as usize));
+    net_cfg.accept_tick =
+        ms(opt_usize(args, "--accept-tick-ms", net_cfg.accept_tick.as_millis() as usize));
+    net_cfg.default_qos = qos;
     let exit_idle_s = opt_usize(args, "--exit-idle-s", 0);
 
     let server = if channels > 1 {
@@ -279,6 +381,9 @@ fn serve_net(
             .defrag_threshold(defrag_threshold)
             .rehome_after(rehome_after)
             .opt_level(opt_level)
+            .default_qos(qos)
+            .controller(controller)
+            .control_config(control_cfg)
             .build_fabric();
         NetServer::over_fabric(fabric, net_cfg)
     } else {
@@ -289,6 +394,9 @@ fn serve_net(
             .defrag(defrag)
             .defrag_threshold(defrag_threshold)
             .opt_level(opt_level)
+            .default_qos(qos)
+            .controller(controller)
+            .control_config(control_cfg)
             .build();
         NetServer::new(sys, net_cfg)
     };
@@ -344,8 +452,16 @@ fn serve_net(
     let stats = server.stats();
     let r = server.shutdown();
     println!(
-        "net: {} connections, {} frames, {} busy rejects, {} timeouts, {} reaped, {} malformed",
-        stats.connections, stats.frames, stats.busy_rejects, stats.timeouts, stats.reaped,
+        "net: {} connections, {} frames, {} busy rejects \
+         (shed lat/tput/bg {}/{}/{}), {} timeouts, {} reaped, {} malformed",
+        stats.connections,
+        stats.frames,
+        stats.busy_rejects,
+        stats.shed_latency,
+        stats.shed_throughput,
+        stats.shed_background,
+        stats.timeouts,
+        stats.reaped,
         stats.malformed
     );
     println!(
@@ -356,6 +472,9 @@ fn serve_net(
         100.0 * r.cache_hit_rate,
         r.rows_live
     );
+    if controller {
+        print_control(&r.control);
+    }
     if !r.is_clean() {
         eprintln!("worker failures: {:?}", r.worker_failures);
         std::process::exit(1);
@@ -374,6 +493,9 @@ fn loadgen_cmd(cfg: &DramConfig, args: &[String]) {
     lcfg.seed = opt_usize(args, "--seed", lcfg.seed as usize) as u64;
     lcfg.inflight = opt_usize(args, "--inflight", lcfg.inflight);
     lcfg.mean_gap_us = opt_f64(args, "--gap-us", lcfg.mean_gap_us);
+    lcfg.mix = opt_weights(args, "--mix", lcfg.mix);
+    lcfg.classes = opt_weights(args, "--classes", lcfg.classes);
+    let out = opt(args, "--out").unwrap_or_else(|| "serve".into());
 
     let target = if let Some(addr) = opt(args, "--connect") {
         Some(Target::Tcp(addr))
@@ -423,16 +545,42 @@ fn loadgen_cmd(cfg: &DramConfig, args: &[String]) {
         "latency: p50 {:.1} us, p99 {:.1} us, p999 {:.1} us",
         report.p50_us, report.p99_us, report.p999_us
     );
-    match loadgen::write_json(&report, "serve") {
+    for class in QosClass::ALL {
+        let s = &report.per_class[class.index()];
+        if s.conns == 0 {
+            continue;
+        }
+        println!(
+            "  {}: {} conns, {}/{} done, {} busy, p50 {:.1} / p99 {:.1} / p999 {:.1} us",
+            class, s.conns, s.ops_done, s.ops_sent, s.busy, s.p50_us, s.p99_us, s.p999_us
+        );
+    }
+    match loadgen::write_json(&report, &out) {
         Ok(p) => println!("wrote {}", p.display()),
         Err(e) => {
-            eprintln!("cannot write BENCH_serve.json: {e}");
+            eprintln!("cannot write BENCH_{out}.json: {e}");
             std::process::exit(1);
         }
     }
 
     let mut rows_leaked = 0u64;
     if let Some(server) = server {
+        // the in-process path prints the same NetCounters snapshot the
+        // `serve --listen` path reports at shutdown
+        let stats = server.stats();
+        println!(
+            "net: {} connections, {} frames, {} busy rejects \
+             (shed lat/tput/bg {}/{}/{}), {} timeouts, {} reaped, {} malformed",
+            stats.connections,
+            stats.frames,
+            stats.busy_rejects,
+            stats.shed_latency,
+            stats.shed_throughput,
+            stats.shed_background,
+            stats.timeouts,
+            stats.reaped,
+            stats.malformed
+        );
         let r = server.shutdown();
         rows_leaked = r.rows_live;
         println!("in-process server: {} kernels served, {} rows live", r.kernels, r.rows_live);
@@ -441,7 +589,12 @@ fn loadgen_cmd(cfg: &DramConfig, args: &[String]) {
             std::process::exit(1);
         }
     }
-    if report.errors > 0 || rows_leaked > 0 {
+    let starved = report.starved_classes();
+    if !starved.is_empty() {
+        let names: Vec<&str> = starved.iter().map(|c| c.as_str()).collect();
+        eprintln!("starved classes (work sent, nothing completed): {names:?}");
+    }
+    if report.errors > 0 || rows_leaked > 0 || !starved.is_empty() {
         eprintln!("loadgen saw {} protocol errors, {} leaked rows", report.errors, rows_leaked);
         std::process::exit(1);
     }
@@ -462,6 +615,9 @@ fn serve_fabric(
     defrag_threshold: usize,
     rehome_after: usize,
     opt_level: OptLevel,
+    qos: QosClass,
+    controller: bool,
+    control_cfg: ControlConfig,
 ) {
     use shiftdram::coordinator::JobSpec;
     use shiftdram::util::{BitRow, Rng};
@@ -475,6 +631,9 @@ fn serve_fabric(
         .defrag_threshold(defrag_threshold)
         .rehome_after(rehome_after)
         .opt_level(opt_level)
+        .default_qos(qos)
+        .controller(controller)
+        .control_config(control_cfg)
         .build_fabric();
     let mut rng = Rng::new(7);
     let cols = cfg.geometry.cols_per_row;
@@ -510,6 +669,9 @@ fn serve_fabric(
         r.shared_blocks,
         r.scratch_rows_saved
     );
+    if controller {
+        print_control(&r.control);
+    }
     for s in &r.shards {
         println!(
             "  shard {}: {} jobs run ({} stolen in, {} stolen out), {} kernels, \

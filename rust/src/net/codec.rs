@@ -23,6 +23,7 @@
 
 use std::io::Read;
 
+use crate::coordinator::QosClass;
 use crate::pim::{CommandCensus, PimOp};
 use crate::util::{BitRow, ShiftDir};
 
@@ -133,8 +134,11 @@ pub struct WireHandle {
 /// else is rejected until the handshake completes.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum NetRequest {
-    /// Handshake: the client's protocol version.
-    Hello { proto: u16 },
+    /// Handshake: the client's protocol version, plus an optional QoS
+    /// class for the whole session. `None` (and the original 3-byte
+    /// payload, which older clients still send) means the server's
+    /// default class — a protocol-minor extension, not a version bump.
+    Hello { proto: u16, qos: Option<QosClass> },
     /// Allocate `n` rows on the session's bank.
     Alloc { n: u32 },
     /// Free previously allocated rows.
@@ -164,6 +168,12 @@ pub struct WireStats {
     pub timeouts: u64,
     pub reaped: u64,
     pub malformed: u64,
+    /// Admission-control sheds per QoS class. Encoded after the original
+    /// seven counters; a peer speaking the pre-QoS minor omits them and
+    /// decodes to zero (see [`decode_response`]).
+    pub shed_latency: u64,
+    pub shed_throughput: u64,
+    pub shed_background: u64,
 }
 
 /// Replies the server streams back, matched to requests by correlation
@@ -528,9 +538,14 @@ fn get_census(r: &mut ByteReader) -> Result<CommandCensus, CodecError> {
 fn encode_request_payload(req: &NetRequest) -> Result<Vec<u8>, CodecError> {
     let mut w = ByteWriter::default();
     match req {
-        NetRequest::Hello { proto } => {
+        NetRequest::Hello { proto, qos } => {
             w.u8(0);
             w.u16(*proto);
+            // minor extension: the class byte is only present when the
+            // client opts into a non-default session class
+            if let Some(class) = qos {
+                w.u8(class.index() as u8);
+            }
         }
         NetRequest::Alloc { n } => {
             w.u8(1);
@@ -564,7 +579,19 @@ fn encode_request_payload(req: &NetRequest) -> Result<Vec<u8>, CodecError> {
 pub fn decode_request(payload: &[u8]) -> Result<NetRequest, CodecError> {
     let mut r = ByteReader::new(payload);
     let req = match r.u8()? {
-        0 => NetRequest::Hello { proto: r.u16()? },
+        0 => {
+            let proto = r.u16()?;
+            let qos = if r.remaining() > 0 {
+                let b = r.u8()?;
+                Some(
+                    QosClass::from_index(b as usize)
+                        .ok_or(CodecError::BadValue("qos class"))?,
+                )
+            } else {
+                None
+            };
+            NetRequest::Hello { proto, qos }
+        }
         1 => {
             let n = r.u32()?;
             if n == 0 || n as usize > MAX_HANDLES {
@@ -621,6 +648,9 @@ fn encode_response_payload(resp: &NetResponse) -> Result<Vec<u8>, CodecError> {
             w.u64(s.timeouts);
             w.u64(s.reaped);
             w.u64(s.malformed);
+            w.u64(s.shed_latency);
+            w.u64(s.shed_throughput);
+            w.u64(s.shed_background);
         }
         NetResponse::Bye => w.u8(7),
         NetResponse::Busy { inflight, cap } => {
@@ -652,15 +682,25 @@ pub fn decode_response(payload: &[u8]) -> Result<NetResponse, CodecError> {
         3 => NetResponse::Done,
         4 => NetResponse::Row { bits: get_row(&mut r)? },
         5 => NetResponse::Ran { census: get_census(&mut r)?, elided_aaps: r.u64()? },
-        6 => NetResponse::Stats(WireStats {
-            connections: r.u64()?,
-            open: r.u64()?,
-            frames: r.u64()?,
-            busy_rejects: r.u64()?,
-            timeouts: r.u64()?,
-            reaped: r.u64()?,
-            malformed: r.u64()?,
-        }),
+        6 => {
+            let mut s = WireStats {
+                connections: r.u64()?,
+                open: r.u64()?,
+                frames: r.u64()?,
+                busy_rejects: r.u64()?,
+                timeouts: r.u64()?,
+                reaped: r.u64()?,
+                malformed: r.u64()?,
+                ..WireStats::default()
+            };
+            // pre-QoS minor: the three shed counters may be absent
+            if r.remaining() > 0 {
+                s.shed_latency = r.u64()?;
+                s.shed_throughput = r.u64()?;
+                s.shed_background = r.u64()?;
+            }
+            NetResponse::Stats(s)
+        }
         7 => NetResponse::Bye,
         8 => NetResponse::Busy { inflight: r.u32()?, cap: r.u32()? },
         9 => NetResponse::Error { code: r.u16()?, message: get_string(&mut r)? },
@@ -818,7 +858,9 @@ mod tests {
     fn request_roundtrip() {
         let mut rng = Rng::new(0xC0DEC);
         let reqs = vec![
-            NetRequest::Hello { proto: PROTO_VERSION },
+            NetRequest::Hello { proto: PROTO_VERSION, qos: None },
+            NetRequest::Hello { proto: PROTO_VERSION, qos: Some(QosClass::Latency) },
+            NetRequest::Hello { proto: PROTO_VERSION, qos: Some(QosClass::Background) },
             NetRequest::Alloc { n: 3 },
             NetRequest::Free {
                 handles: vec![WireHandle { slot: 1, gen: 0 }, WireHandle { slot: 9, gen: 4 }],
@@ -856,7 +898,14 @@ mod tests {
                 census: CommandCensus { act: 1, pre: 2, aap: 12, ..CommandCensus::default() },
                 elided_aaps: 3,
             },
-            NetResponse::Stats(WireStats { connections: 8, frames: 99, ..WireStats::default() }),
+            NetResponse::Stats(WireStats {
+                connections: 8,
+                frames: 99,
+                shed_latency: 1,
+                shed_throughput: 2,
+                shed_background: 7,
+                ..WireStats::default()
+            }),
             NetResponse::Bye,
             NetResponse::Busy { inflight: 64, cap: 64 },
             NetResponse::Error { code: ERR_PIM, message: "stale handle".into() },
@@ -869,6 +918,54 @@ mod tests {
             assert_eq!(len, bytes.len() - HEADER_LEN);
             assert_eq!(&decode_response(&bytes[HEADER_LEN..]).unwrap(), resp);
         }
+    }
+
+    #[test]
+    fn short_hello_decodes_as_default_class() {
+        // a pre-QoS peer sends the original 3-byte Hello payload: tag,
+        // proto u16, nothing else — it must still decode, with qos None
+        let mut w = ByteWriter::default();
+        w.u8(0);
+        w.u16(PROTO_VERSION);
+        assert_eq!(
+            decode_request(&w.buf),
+            Ok(NetRequest::Hello { proto: PROTO_VERSION, qos: None })
+        );
+    }
+
+    #[test]
+    fn bad_qos_byte_rejected() {
+        let mut w = ByteWriter::default();
+        w.u8(0);
+        w.u16(PROTO_VERSION);
+        w.u8(3); // only 0/1/2 are classes
+        assert_eq!(decode_request(&w.buf), Err(CodecError::BadValue("qos class")));
+    }
+
+    #[test]
+    fn short_stats_decodes_with_zero_sheds() {
+        // a pre-QoS server encodes 7 counters; the shed fields read as 0
+        let mut w = ByteWriter::default();
+        w.u8(6);
+        for v in [4u64, 2, 100, 3, 0, 1, 5] {
+            w.u64(v);
+        }
+        let got = decode_response(&w.buf).unwrap();
+        assert_eq!(
+            got,
+            NetResponse::Stats(WireStats {
+                connections: 4,
+                open: 2,
+                frames: 100,
+                busy_rejects: 3,
+                timeouts: 0,
+                reaped: 1,
+                malformed: 5,
+                shed_latency: 0,
+                shed_throughput: 0,
+                shed_background: 0,
+            })
+        );
     }
 
     #[test]

@@ -22,7 +22,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{
-    FabricClient, Kernel, NetCounters, PimClient, PimError, Receipt, RowHandle, Ticket,
+    FabricClient, Kernel, NetCounters, PimClient, PimError, QosClass, Receipt, RowHandle, Ticket,
 };
 use crate::util::BitRow;
 
@@ -31,9 +31,6 @@ use super::codec::{
     ReadError, WireHandle, WireStats, ERR_PIM, ERR_PROTOCOL, ERR_UNKNOWN_HANDLE, PROTO_VERSION,
 };
 use super::server::NetConfig;
-
-/// How often the reader wakes to check the stop flag and idle clock.
-const TICK: Duration = Duration::from_millis(25);
 
 /// A connection's session: a standalone-system client or a fabric one.
 /// Same verbs either way — the wire protocol does not care which
@@ -90,6 +87,20 @@ impl Session {
         match self {
             Session::Sys(c) => c.flush(),
             Session::Fab(c) => c.flush(),
+        }
+    }
+
+    fn set_qos(&self, class: QosClass) {
+        match self {
+            Session::Sys(c) => c.set_qos(class),
+            Session::Fab(c) => c.set_qos(class),
+        }
+    }
+
+    fn record_shed(&self, class: QosClass) {
+        match self {
+            Session::Sys(c) => c.record_shed(class),
+            Session::Fab(c) => c.record_shed(class),
         }
     }
 }
@@ -243,6 +254,7 @@ fn writer_loop<S: StreamLike>(
     rx: Receiver<WriterItem>,
     inflight: Arc<AtomicUsize>,
     counters: Arc<NetCounters>,
+    tick: Duration,
 ) -> VecDeque<(u64, Pending)> {
     let mut pending: VecDeque<(u64, Pending)> = VecDeque::new();
     let mut dead = false;
@@ -250,7 +262,7 @@ fn writer_loop<S: StreamLike>(
         // take one queued command; block briefly only when no ticket
         // needs polling
         let item = if pending.is_empty() {
-            match rx.recv_timeout(TICK) {
+            match rx.recv_timeout(tick) {
                 Ok(it) => Some(it),
                 Err(RecvTimeoutError::Timeout) => None,
                 Err(RecvTimeoutError::Disconnected) => break 'serve,
@@ -320,7 +332,7 @@ pub(crate) fn handle_conn<S: StreamLike>(
     stop: Arc<AtomicBool>,
 ) {
     counters.record_connection();
-    let _ = stream.set_read_timeout_opt(Some(TICK));
+    let _ = stream.set_read_timeout_opt(Some(cfg.tick));
 
     let writer_stream = match stream.try_clone_stream() {
         Ok(s) => s,
@@ -336,7 +348,8 @@ pub(crate) fn handle_conn<S: StreamLike>(
     let writer = {
         let inflight = inflight.clone();
         let counters = counters.clone();
-        std::thread::spawn(move || writer_loop(writer_stream, rx, inflight, counters))
+        let tick = cfg.tick;
+        std::thread::spawn(move || writer_loop(writer_stream, rx, inflight, counters, tick))
     };
 
     let mut handles: HashMap<WireHandle, RowHandle> = HashMap::new();
@@ -373,6 +386,7 @@ fn read_loop<S: StreamLike>(
 ) {
     let mut reader = FrameReader::new();
     let mut hello_done = false;
+    let mut class = cfg.default_qos;
     let mut last_activity = Instant::now();
     loop {
         if stop.load(Ordering::Relaxed) {
@@ -415,17 +429,21 @@ fn read_loop<S: StreamLike>(
         let corr = frame.corr;
         if !hello_done {
             match req {
-                NetRequest::Hello { proto } if proto == PROTO_VERSION => {
+                NetRequest::Hello { proto, qos } if proto == PROTO_VERSION => {
                     hello_done = true;
+                    class = qos.unwrap_or(cfg.default_qos);
+                    // the class lives on the session seat, so every
+                    // kernel this connection submits carries it
+                    session.set_qos(class);
                     let welcome = NetResponse::Welcome {
                         proto: PROTO_VERSION,
                         cols: cfg.cols as u32,
                         bank: session.bank() as u32,
-                        max_inflight: cfg.max_inflight as u32,
+                        max_inflight: cfg.class_cap(class) as u32,
                     };
                     let _ = tx.send(WriterItem::Now(corr, welcome));
                 }
-                NetRequest::Hello { proto } => {
+                NetRequest::Hello { proto, .. } => {
                     let msg = format!("unsupported protocol version {proto}");
                     let _ = tx.send(WriterItem::Now(corr, protocol_error(&msg)));
                     return;
@@ -471,7 +489,7 @@ fn read_loop<S: StreamLike>(
                 let _ = tx.send(WriterItem::Now(corr, NetResponse::Freed { n }));
             }
             NetRequest::WriteRow { handle, bits } => {
-                if let Some(p) = admit(cfg, counters, inflight, tx, corr) {
+                if let Some(p) = admit(cfg, session, counters, inflight, tx, corr, class) {
                     match handles.get(&handle) {
                         Some(h) => {
                             let ticket = session.write(h, bits);
@@ -483,7 +501,7 @@ fn read_loop<S: StreamLike>(
                 }
             }
             NetRequest::ReadRow { handle } => {
-                if let Some(p) = admit(cfg, counters, inflight, tx, corr) {
+                if let Some(p) = admit(cfg, session, counters, inflight, tx, corr, class) {
                     match handles.get(&handle) {
                         Some(h) => {
                             let ticket = session.read(h);
@@ -495,7 +513,7 @@ fn read_loop<S: StreamLike>(
                 }
             }
             NetRequest::SubmitKernel { ops, handles: wire } => {
-                if let Some(p) = admit(cfg, counters, inflight, tx, corr) {
+                if let Some(p) = admit(cfg, session, counters, inflight, tx, corr, class) {
                     let rows: Option<Vec<RowHandle>> =
                         wire.iter().map(|w| handles.get(w).cloned()).collect();
                     match rows {
@@ -541,18 +559,27 @@ impl Admitted {
 }
 
 /// Enforce the inflight cap: at capacity the request is NOT enqueued and
-/// the client gets an immediate `Busy` with the live count and cap.
+/// the client gets an immediate `Busy` with the live count and the
+/// session class's quota ([`NetConfig::class_cap`] — Background runs
+/// under a reduced cap, so overload sheds background work first).
 fn admit(
     cfg: &NetConfig,
+    session: &Session,
     counters: &NetCounters,
     inflight: &Arc<AtomicUsize>,
     tx: &Sender<WriterItem>,
     corr: u64,
+    class: QosClass,
 ) -> Option<Admitted> {
+    let cap = cfg.class_cap(class);
     let now = inflight.load(Ordering::Relaxed);
-    if now >= cfg.max_inflight {
+    if now >= cap {
         counters.record_busy_reject();
-        let busy = NetResponse::Busy { inflight: now as u32, cap: cfg.max_inflight as u32 };
+        counters.record_shed(class);
+        // mirrored into the coordinator's control ledger, so the final
+        // SystemReport carries the per-class shed counts too
+        session.record_shed(class);
+        let busy = NetResponse::Busy { inflight: now as u32, cap: cap as u32 };
         let _ = tx.send(WriterItem::Now(corr, busy));
         return None;
     }
@@ -570,5 +597,8 @@ pub(crate) fn snapshot(c: &NetCounters) -> WireStats {
         timeouts: c.timeouts(),
         reaped: c.reaped(),
         malformed: c.malformed(),
+        shed_latency: c.sheds(QosClass::Latency),
+        shed_throughput: c.sheds(QosClass::Throughput),
+        shed_background: c.sheds(QosClass::Background),
     }
 }

@@ -17,6 +17,7 @@ use std::os::unix::net::UnixStream;
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::QosClass;
 use crate::util::benchx::JsonReport;
 use crate::util::stats::percentile;
 use crate::util::{BitRow, Rng, ShiftDir};
@@ -50,12 +51,62 @@ pub struct LoadConfig {
     pub inflight: usize,
     /// Mean inter-arrival gap per connection, microseconds.
     pub mean_gap_us: f64,
+    /// Kernel-size mix as weights for 1-bit / 8-bit / 64-bit shifts.
+    /// The default reproduces the original hardcoded 90/9/1 split.
+    pub mix: [u64; 3],
+    /// Connection QoS-class weights (Latency / Throughput / Background).
+    /// Connections are assigned deterministically in proportion — e.g.
+    /// `[1, 8, 1]` over 10 connections gives 1 Latency, 8 Throughput,
+    /// 1 Background. The default puts every connection on Throughput,
+    /// the server's default class.
+    pub classes: [u64; 3],
 }
 
 impl LoadConfig {
     pub fn new(conns: usize, ops_per_conn: usize) -> Self {
-        LoadConfig { conns, ops_per_conn, seed: 0x5EED, inflight: 32, mean_gap_us: 50.0 }
+        LoadConfig {
+            conns,
+            ops_per_conn,
+            seed: 0x5EED,
+            inflight: 32,
+            mean_gap_us: 50.0,
+            mix: [90, 9, 1],
+            classes: [0, 1, 0],
+        }
     }
+
+    /// The QoS class of connection `i` of `self.conns`: the weight
+    /// vector scaled onto the connection index, so the split is exact
+    /// (up to rounding) and independent of the seed.
+    pub fn class_of_conn(&self, i: usize) -> QosClass {
+        let total: u64 = self.classes.iter().sum();
+        if total == 0 || self.conns == 0 {
+            return QosClass::default();
+        }
+        // which weight bucket does position i*total/conns fall in?
+        let pos = (i as u64 * total) / self.conns as u64;
+        let mut acc = 0u64;
+        for (k, w) in self.classes.iter().enumerate() {
+            acc += w;
+            if pos < acc {
+                return QosClass::from_index(k).expect("three weights, three classes");
+            }
+        }
+        QosClass::Background
+    }
+}
+
+/// Per-QoS-class slice of a run (indexed by [`QosClass::index`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClassStats {
+    /// Connections assigned to this class.
+    pub conns: u64,
+    pub ops_sent: u64,
+    pub ops_done: u64,
+    pub busy: u64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
 }
 
 /// What a run measured, merged over every connection.
@@ -73,6 +124,23 @@ pub struct LoadReport {
     pub p999_us: f64,
     pub goodput_ops_s: f64,
     pub elapsed_s: f64,
+    /// Latency / Throughput / Background breakdown.
+    pub per_class: [ClassStats; 3],
+}
+
+impl LoadReport {
+    /// A class is *starved* when connections of that class sent work but
+    /// nothing of theirs ever completed — the CI smoke gate.
+    pub fn starved_classes(&self) -> Vec<QosClass> {
+        QosClass::ALL
+            .iter()
+            .copied()
+            .filter(|c| {
+                let s = &self.per_class[c.index()];
+                s.conns > 0 && s.ops_sent > 0 && s.ops_done == 0
+            })
+            .collect()
+    }
 }
 
 #[derive(Default)]
@@ -95,27 +163,42 @@ pub fn run(target: &Target, cfg: &LoadConfig) -> io::Result<LoadReport> {
         let ops = cfg.ops_per_conn;
         let inflight = cfg.inflight.max(1);
         let gap = cfg.mean_gap_us;
+        let mix = cfg.mix;
+        let class = cfg.class_of_conn(i);
         match target {
             Target::Tcp(addr) => {
                 let stream = TcpStream::connect(addr)?;
-                threads.push(std::thread::spawn(move || worker(stream, ops, inflight, gap, seed)));
+                let t = std::thread::spawn(move || {
+                    worker(stream, ops, inflight, gap, seed, mix, class)
+                });
+                threads.push((class, t));
             }
             #[cfg(unix)]
             Target::Uds(path) => {
                 let stream = UnixStream::connect(path)?;
-                threads.push(std::thread::spawn(move || worker(stream, ops, inflight, gap, seed)));
+                let t = std::thread::spawn(move || {
+                    worker(stream, ops, inflight, gap, seed, mix, class)
+                });
+                threads.push((class, t));
             }
         }
     }
     let mut lat: Vec<f64> = Vec::new();
+    let mut class_lat: [Vec<f64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
     let mut report = LoadReport { conns: cfg.conns as u64, ..LoadReport::default() };
-    for t in threads {
+    for (class, t) in threads {
+        let slot = &mut report.per_class[class.index()];
+        slot.conns += 1;
         match t.join() {
             Ok(s) => {
                 report.ops_sent += s.sent;
                 report.ops_done += s.done;
                 report.busy += s.busy;
                 report.errors += s.errors;
+                slot.ops_sent += s.sent;
+                slot.ops_done += s.done;
+                slot.busy += s.busy;
+                class_lat[class.index()].extend_from_slice(&s.latencies_us);
                 lat.extend(s.latencies_us);
             }
             Err(_) => report.errors += 1,
@@ -126,6 +209,13 @@ pub fn run(target: &Target, cfg: &LoadConfig) -> io::Result<LoadReport> {
         report.p50_us = percentile(&lat, 50.0);
         report.p99_us = percentile(&lat, 99.0);
         report.p999_us = percentile(&lat, 99.9);
+    }
+    for (k, lats) in class_lat.iter().enumerate() {
+        if !lats.is_empty() {
+            report.per_class[k].p50_us = percentile(lats, 50.0);
+            report.per_class[k].p99_us = percentile(lats, 99.0);
+            report.per_class[k].p999_us = percentile(lats, 99.9);
+        }
     }
     if report.elapsed_s > 0.0 {
         report.goodput_ops_s = report.ops_done as f64 / report.elapsed_s;
@@ -146,6 +236,19 @@ pub fn write_json(report: &LoadReport, name: &str) -> io::Result<std::path::Path
     j.metric("p999_us", report.p999_us);
     j.metric("goodput_ops_s", report.goodput_ops_s);
     j.metric("elapsed_s", report.elapsed_s);
+    for class in QosClass::ALL {
+        let s = &report.per_class[class.index()];
+        if s.conns == 0 {
+            continue;
+        }
+        let tag = class.as_str();
+        j.metric(&format!("{tag}_conns"), s.conns as f64);
+        j.metric(&format!("{tag}_ops_done"), s.ops_done as f64);
+        j.metric(&format!("{tag}_busy"), s.busy as f64);
+        j.metric(&format!("{tag}_p50_us"), s.p50_us);
+        j.metric(&format!("{tag}_p99_us"), s.p99_us);
+        j.metric(&format!("{tag}_p999_us"), s.p999_us);
+    }
     j.write()
 }
 
@@ -156,15 +259,36 @@ fn pareto_gap(mean_us: f64, rng: &mut Rng) -> f64 {
     (0.5 * mean_us / (1.0 - u).sqrt()).min(mean_us * 100.0)
 }
 
+/// Draw a shift distance from the weighted 1/8/64 kernel-size mix. An
+/// all-zero mix degenerates to 1-bit shifts.
+fn draw_shift(mix: &[u64; 3], rng: &mut Rng) -> usize {
+    let total: u64 = mix.iter().sum();
+    if total == 0 {
+        return 1;
+    }
+    let draw = rng.below(total as usize) as u64;
+    if draw < mix[0] {
+        1
+    } else if draw < mix[0] + mix[1] {
+        8
+    } else {
+        64
+    }
+}
+
 fn worker<S: StreamLike>(
     mut stream: S,
     ops: usize,
     inflight: usize,
     mean_gap_us: f64,
     seed: u64,
+    mix: [u64; 3],
+    class: QosClass,
 ) -> ConnStats {
     let mut stats = ConnStats::default();
-    if let Err(_e) = worker_inner(&mut stream, ops, inflight, mean_gap_us, seed, &mut stats) {
+    if let Err(_e) =
+        worker_inner(&mut stream, ops, inflight, mean_gap_us, seed, mix, class, &mut stats)
+    {
         stats.errors += 1;
     }
     stats
@@ -197,12 +321,15 @@ fn next_response<S: StreamLike>(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_inner<S: StreamLike>(
     stream: &mut S,
     ops: usize,
     inflight: usize,
     mean_gap_us: f64,
     seed: u64,
+    mix: [u64; 3],
+    class: QosClass,
     stats: &mut ConnStats,
 ) -> Result<(), String> {
     let mut rng = Rng::new(seed);
@@ -210,8 +337,9 @@ fn worker_inner<S: StreamLike>(
     let _ = stream.set_read_timeout_opt(Some(Duration::from_millis(1)));
     let long = |secs: u64| Instant::now() + Duration::from_secs(secs);
 
-    // prologue: handshake, one row allocated and seeded
-    send_req(stream, 0, &NetRequest::Hello { proto: PROTO_VERSION })?;
+    // prologue: handshake (carrying this connection's QoS class), one
+    // row allocated and seeded
+    send_req(stream, 0, &NetRequest::Hello { proto: PROTO_VERSION, qos: Some(class) })?;
     let cols = match next_response(stream, &mut reader, long(10))? {
         (0, NetResponse::Welcome { cols, .. }) => cols as usize,
         (_, other) => return Err(format!("expected Welcome, got {other:?}")),
@@ -253,11 +381,7 @@ fn worker_inner<S: StreamLike>(
             let req = if next % 16 == 15 {
                 NetRequest::ReadRow { handle }
             } else {
-                let n: usize = match rng.below(100) {
-                    0..=89 => 1,
-                    90..=98 => 8,
-                    _ => 64,
-                };
+                let n = draw_shift(&mix, &mut rng);
                 NetRequest::SubmitKernel {
                     ops: vec![PimOp::ShiftBy { src: 0, dst: 0, n, dir: ShiftDir::Right }],
                     handles: vec![handle],
@@ -299,4 +423,53 @@ fn worker_inner<S: StreamLike>(
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_split_is_proportional_and_deterministic() {
+        let mut cfg = LoadConfig::new(10, 1);
+        cfg.classes = [1, 8, 1];
+        let assigned: Vec<QosClass> = (0..10).map(|i| cfg.class_of_conn(i)).collect();
+        let count = |c: QosClass| assigned.iter().filter(|&&a| a == c).count();
+        assert_eq!(count(QosClass::Latency), 1, "{assigned:?}");
+        assert_eq!(count(QosClass::Throughput), 8, "{assigned:?}");
+        assert_eq!(count(QosClass::Background), 1, "{assigned:?}");
+        // same inputs, same split
+        assert_eq!(assigned, (0..10).map(|i| cfg.class_of_conn(i)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn default_classes_put_everyone_on_throughput() {
+        let cfg = LoadConfig::new(7, 1);
+        for i in 0..7 {
+            assert_eq!(cfg.class_of_conn(i), QosClass::Throughput);
+        }
+    }
+
+    #[test]
+    fn shift_mix_honors_weights() {
+        let mut rng = Rng::new(0xD1CE);
+        // degenerate weight vectors pin the draw
+        for _ in 0..32 {
+            assert_eq!(draw_shift(&[1, 0, 0], &mut rng), 1);
+            assert_eq!(draw_shift(&[0, 1, 0], &mut rng), 8);
+            assert_eq!(draw_shift(&[0, 0, 3], &mut rng), 64);
+            assert_eq!(draw_shift(&[0, 0, 0], &mut rng), 1);
+        }
+        // the default mix produces all three sizes over enough draws
+        let mut seen = [false; 3];
+        for _ in 0..4096 {
+            match draw_shift(&[90, 9, 1], &mut rng) {
+                1 => seen[0] = true,
+                8 => seen[1] = true,
+                64 => seen[2] = true,
+                other => panic!("unexpected shift {other}"),
+            }
+        }
+        assert_eq!(seen, [true; 3]);
+    }
 }

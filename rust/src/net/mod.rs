@@ -19,12 +19,17 @@
 //!   malformed frame (audited by `SystemReport::rows_live`);
 //! * [`loadgen`] — an open-loop, seeded, heavy-tailed load generator
 //!   driving the real socket path and reporting p50/p99/p999 latency
-//!   and goodput into `BENCH_serve.json`.
+//!   and goodput into `BENCH_serve.json`;
+//! * QoS-aware admission: a connection's `Hello` may carry a
+//!   [`QosClass`](crate::coordinator::QosClass); Background sessions run
+//!   under a reduced inflight quota ([`NetConfig::class_cap`]) so
+//!   overload sheds background work first, counted per class in
+//!   `WireStats`.
 
 pub mod codec;
 mod conn;
 pub mod loadgen;
 mod server;
 
-pub use loadgen::{LoadConfig, LoadReport, Target};
+pub use loadgen::{ClassStats, LoadConfig, LoadReport, Target};
 pub use server::{NetConfig, NetServer};

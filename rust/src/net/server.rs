@@ -13,13 +13,10 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::coordinator::{NetCounters, PimFabric, PimSystem, SystemReport};
+use crate::coordinator::{NetCounters, PimFabric, PimSystem, QosClass, SystemReport};
 
 use super::codec::WireStats;
 use super::conn::{handle_conn, snapshot, Session};
-
-/// How often an accept loop re-checks the stop flag when idle.
-const ACCEPT_TICK: Duration = Duration::from_millis(10);
 
 /// Tunables of the network front end. `cols` is the row width in bits of
 /// the serving system's DRAM geometry — handed to clients in `Welcome`
@@ -29,13 +26,23 @@ pub struct NetConfig {
     /// Row width in bits (`DramConfig::geometry.cols_per_row`).
     pub cols: usize,
     /// Per-connection cap on unresolved tickets; beyond it requests get
-    /// an immediate `Busy` reply and are NOT enqueued.
+    /// an immediate `Busy` reply and are NOT enqueued. Latency and
+    /// Throughput sessions get the full cap; Background sessions are
+    /// admitted against [`Self::class_cap`]'s reduced quota, so overload
+    /// sheds background work first.
     pub max_inflight: usize,
     /// A connection silent this long (with nothing in flight) is reaped.
     pub idle_timeout: Duration,
     /// Socket write timeout; a stalled peer trips it and the connection
     /// tears down instead of wedging the writer thread.
     pub write_timeout: Duration,
+    /// Reader/writer poll tick: how often a blocked socket read or an
+    /// empty reply queue re-checks stop/idle/teardown conditions.
+    pub tick: Duration,
+    /// How often an accept loop re-checks the stop flag when idle.
+    pub accept_tick: Duration,
+    /// Session class for connections whose `Hello` names none.
+    pub default_qos: QosClass,
 }
 
 impl NetConfig {
@@ -45,6 +52,18 @@ impl NetConfig {
             max_inflight: 64,
             idle_timeout: Duration::from_secs(30),
             write_timeout: Duration::from_secs(5),
+            tick: Duration::from_millis(25),
+            accept_tick: Duration::from_millis(10),
+            default_qos: QosClass::default(),
+        }
+    }
+
+    /// The admission quota a session of `class` runs under: full cap for
+    /// Latency/Throughput, a quarter (at least one) for Background.
+    pub fn class_cap(&self, class: QosClass) -> usize {
+        match class {
+            QosClass::Latency | QosClass::Throughput => self.max_inflight,
+            QosClass::Background => (self.max_inflight / 4).max(1),
         }
     }
 }
@@ -149,7 +168,7 @@ impl NetServer {
                         conns.lock().unwrap().push(t);
                     }
                     Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(ACCEPT_TICK);
+                        std::thread::sleep(cfg.accept_tick);
                     }
                     Err(_) => break,
                 }
@@ -187,7 +206,7 @@ impl NetServer {
                         conns.lock().unwrap().push(t);
                     }
                     Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(ACCEPT_TICK);
+                        std::thread::sleep(cfg.accept_tick);
                     }
                     Err(_) => break,
                 }

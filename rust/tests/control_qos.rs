@@ -1,0 +1,408 @@
+//! Control-plane acceptance: QoS classes and the feedback controller
+//! must never change results — only scheduling. Mixed-class workloads
+//! and controller-on runs are bit-identical per ticket to their uniform
+//! / controller-off twins; under a background flood the latency class's
+//! p99 strictly improves; and at the socket, admission control sheds
+//! background work first (counted per class in `WireStats`).
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use shiftdram::config::DramConfig;
+use shiftdram::coordinator::{ControlConfig, Kernel, QosClass, Receipt, SystemBuilder};
+use shiftdram::net::codec::{
+    decode_response, encode_request, FramePoll, FrameReader, NetRequest, NetResponse, WireHandle,
+    PROTO_VERSION,
+};
+use shiftdram::net::{NetConfig, NetServer};
+use shiftdram::pim::PimOp;
+use shiftdram::util::proptest::{check, prop_assert, prop_assert_eq};
+use shiftdram::util::{BitRow, Rng, ShiftDir};
+
+fn cfg() -> DramConfig {
+    DramConfig::tiny_test()
+}
+
+fn shift(n: usize) -> Kernel {
+    Kernel::shift_by(n, ShiftDir::Right)
+}
+
+/// One seeded three-session workload on a single bank: interleaved
+/// shift kernels, each session on its own rows. Returns every receipt
+/// in submission order plus the final row images — the whole observable
+/// outcome of the run.
+fn run_workload(
+    seed: u64,
+    classes: [QosClass; 3],
+    controller: bool,
+) -> (Vec<Receipt>, Vec<BitRow>) {
+    let mut rng = Rng::new(seed);
+    let mut builder = SystemBuilder::new(&cfg()).banks(1).max_batch(8);
+    if controller {
+        let ctl = ControlConfig { tick: Duration::from_millis(1), ..ControlConfig::default() };
+        builder = builder.controller(true).control_config(ctl);
+    }
+    let sys = builder.build();
+    let clients: Vec<_> = classes
+        .iter()
+        .map(|&class| {
+            let c = sys.client_on(0);
+            c.set_qos(class);
+            c
+        })
+        .collect();
+    let rows: Vec<_> = clients.iter().map(|c| c.alloc().expect("row")).collect();
+    for (c, r) in clients.iter().zip(&rows) {
+        c.write_now(r, BitRow::random(256, &mut rng)).expect("seed row");
+    }
+    let mut tickets = Vec::new();
+    for _ in 0..24 {
+        let i = rng.below(3);
+        let n = rng.below(6) + 1;
+        tickets.push(clients[i].submit(&shift(n), std::slice::from_ref(&rows[i])));
+    }
+    sys.flush();
+    let receipts: Vec<Receipt> = tickets.into_iter().map(|t| t.wait().expect("kernel")).collect();
+    let finals: Vec<BitRow> =
+        clients.iter().zip(&rows).map(|(c, r)| c.read_now(r).expect("read")).collect();
+    let report = sys.shutdown();
+    assert!(report.is_clean(), "workers exited clean");
+    if controller {
+        assert!(report.control.ticks > 0, "controller ticked at least once");
+    }
+    (receipts, finals)
+}
+
+/// Tentpole invariant 1: promoting classes inside a batch never changes
+/// what any ticket computes — a mixed-class run is bit-identical, per
+/// ticket and per row, to the same seeded run with every session on the
+/// default class.
+#[test]
+fn prop_mixed_classes_are_bit_identical_to_uniform() {
+    check(8, |rng| {
+        let seed = rng.below(1 << 30) as u64;
+        let mixed = [QosClass::Latency, QosClass::Throughput, QosClass::Background];
+        let uniform = [QosClass::Throughput; 3];
+        let (ra, fa) = run_workload(seed, mixed, false);
+        let (rb, fb) = run_workload(seed, uniform, false);
+        prop_assert_eq(ra, rb, "receipts per ticket")?;
+        prop_assert_eq(fa, fb, "final row images")
+    });
+}
+
+/// Tentpole invariant 2: the feedback controller only moves knobs whose
+/// every setting is result-equivalent, so controller-on equals
+/// controller-off bit for bit.
+#[test]
+fn prop_controller_toggle_preserves_results() {
+    check(8, |rng| {
+        let seed = rng.below(1 << 30) as u64;
+        let mixed = [QosClass::Latency, QosClass::Throughput, QosClass::Background];
+        let (ra, fa) = run_workload(seed, mixed, false);
+        let (rb, fb) = run_workload(seed, mixed, true);
+        prop_assert_eq(ra, rb, "receipts per ticket")?;
+        prop_assert_eq(fa, fb, "final row images")
+    });
+}
+
+/// Latency differential under a background flood, on one bank: each
+/// round enqueues 32 heavy background kernels and then one small
+/// latency-class kernel into the same batch. The QoS pre-pass bubbles
+/// the small kernel to the front, so its submit→resolve time must be
+/// strictly better at p99 than the same run with everyone on the
+/// default class.
+#[test]
+fn latency_class_p99_improves_under_background_flood() {
+    fn run(qos: bool) -> (Vec<Duration>, u64) {
+        let sys = SystemBuilder::new(&cfg()).banks(1).max_batch(64).build();
+        let bg: Vec<_> = (0..4).map(|_| sys.client_on(0)).collect();
+        let lat = sys.client_on(0);
+        if qos {
+            for c in &bg {
+                c.set_qos(QosClass::Background);
+            }
+            lat.set_qos(QosClass::Latency);
+        }
+        let bg_rows: Vec<_> = bg.iter().map(|c| c.alloc().expect("row")).collect();
+        let lat_row = lat.alloc().expect("row");
+        let heavy = shift(48);
+        let small = shift(1);
+        let mut samples = Vec::new();
+        for _ in 0..30 {
+            let mut tickets = Vec::new();
+            for _ in 0..8 {
+                for (c, r) in bg.iter().zip(&bg_rows) {
+                    tickets.push(c.submit(&heavy, std::slice::from_ref(r)));
+                }
+            }
+            let t0 = Instant::now();
+            let lt = lat.submit(&small, std::slice::from_ref(&lat_row));
+            lat.flush();
+            lt.wait().expect("latency kernel");
+            samples.push(t0.elapsed());
+            for t in tickets {
+                t.wait().expect("background kernel");
+            }
+        }
+        let report = sys.shutdown();
+        assert!(report.is_clean());
+        (samples, report.control.promoted)
+    }
+
+    fn p99(mut v: Vec<Duration>) -> Duration {
+        v.sort();
+        v[(v.len() * 99 / 100).min(v.len() - 1)]
+    }
+
+    let (base, base_promoted) = run(false);
+    let (tuned, tuned_promoted) = run(true);
+    assert_eq!(base_promoted, 0, "uniform classes promote nothing");
+    assert!(tuned_promoted > 0, "the QoS pre-pass promoted the latency kernels");
+    let (bp, tp) = (p99(base), p99(tuned));
+    assert!(tp < bp, "latency-class p99 must strictly improve: {tp:?} vs baseline {bp:?}");
+}
+
+// ---------------------------------------------------------------------
+// Socket admission: background sheds first, counted per class.
+// ---------------------------------------------------------------------
+
+struct TestClient {
+    stream: TcpStream,
+    reader: FrameReader,
+    next_corr: u64,
+}
+
+impl TestClient {
+    fn connect(addr: &str) -> Self {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_millis(10))).unwrap();
+        TestClient { stream, reader: FrameReader::new(), next_corr: 1 }
+    }
+
+    fn send(&mut self, req: &NetRequest) -> u64 {
+        let corr = self.next_corr;
+        self.next_corr += 1;
+        let bytes = encode_request(corr, req).expect("encode");
+        self.stream.write_all(&bytes).expect("send");
+        self.stream.flush().expect("flush");
+        corr
+    }
+
+    fn recv(&mut self) -> (u64, NetResponse) {
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            match self.reader.poll(&mut self.stream) {
+                Ok(FramePoll::Frame(f)) => {
+                    return (f.corr, decode_response(&f.payload).expect("decode"));
+                }
+                Ok(FramePoll::Idle) => {
+                    assert!(Instant::now() < deadline, "timed out waiting for a reply");
+                }
+                Ok(FramePoll::Eof) => panic!("server closed unexpectedly"),
+                Err(e) => panic!("read failed: {e}"),
+            }
+        }
+    }
+
+    fn rpc(&mut self, req: &NetRequest) -> NetResponse {
+        let corr = self.send(req);
+        loop {
+            let (c, resp) = self.recv();
+            if c == corr {
+                return resp;
+            }
+        }
+    }
+
+    fn hello(&mut self, qos: Option<QosClass>) -> u32 {
+        match self.rpc(&NetRequest::Hello { proto: PROTO_VERSION, qos }) {
+            NetResponse::Welcome { max_inflight, .. } => max_inflight,
+            other => panic!("expected Welcome, got {other:?}"),
+        }
+    }
+
+    fn alloc_one(&mut self) -> WireHandle {
+        match self.rpc(&NetRequest::Alloc { n: 1 }) {
+            NetResponse::Allocated { handles } if handles.len() == 1 => handles[0],
+            other => panic!("expected one handle, got {other:?}"),
+        }
+    }
+
+    /// Fire `reqs` back-to-back in one TCP write, then collect one reply
+    /// per request (out-of-order by correlation id).
+    fn burst(&mut self, reqs: &[NetRequest]) -> Vec<NetResponse> {
+        let mut bytes = Vec::new();
+        let mut corrs = Vec::new();
+        for req in reqs {
+            let corr = self.next_corr;
+            self.next_corr += 1;
+            corrs.push(corr);
+            bytes.extend_from_slice(&encode_request(corr, req).expect("encode"));
+        }
+        self.stream.write_all(&bytes).expect("send burst");
+        self.stream.flush().expect("flush");
+        let mut got: Vec<Option<NetResponse>> = corrs.iter().map(|_| None).collect();
+        while got.iter().any(Option::is_none) {
+            let (c, resp) = self.recv();
+            let i = corrs.iter().position(|&x| x == c).expect("burst corr");
+            got[i] = Some(resp);
+        }
+        got.into_iter().map(Option::unwrap).collect()
+    }
+
+    fn goodbye(&mut self) {
+        self.send(&NetRequest::Goodbye);
+        loop {
+            let (_, resp) = self.recv();
+            if matches!(resp, NetResponse::Bye) {
+                return;
+            }
+        }
+    }
+}
+
+/// A kernel heavy enough that its ticket is still in flight when the
+/// next back-to-back frame is decoded (microseconds later).
+fn heavy_kernel(handle: WireHandle) -> NetRequest {
+    let ops = vec![PimOp::ShiftBy { src: 0, dst: 0, n: 63, dir: ShiftDir::Right }; 64];
+    NetRequest::SubmitKernel { ops, handles: vec![handle] }
+}
+
+#[test]
+fn socket_admission_sheds_background_first() {
+    let dram = cfg();
+    let sys = SystemBuilder::new(&dram).banks(2).build();
+    let mut nc = NetConfig::new(dram.geometry.cols_per_row);
+    nc.max_inflight = 4; // background quota: (4/4).max(1) = 1
+    let server = NetServer::new(sys, nc);
+    let addr = server.listen_tcp("127.0.0.1:0").expect("bind loopback").to_string();
+
+    // background session: quota 1, so the second of two back-to-back
+    // kernels must bounce with Busy
+    let mut bg = TestClient::connect(&addr);
+    assert_eq!(bg.hello(Some(QosClass::Background)), 1, "background quota is a quarter");
+    let bh = bg.alloc_one();
+    let replies = bg.burst(&[heavy_kernel(bh), heavy_kernel(bh)]);
+    assert!(
+        matches!(replies[0], NetResponse::Ran { .. }),
+        "first kernel admitted, got {:?}",
+        replies[0]
+    );
+    assert!(
+        matches!(replies[1], NetResponse::Busy { cap: 1, .. }),
+        "second kernel shed, got {:?}",
+        replies[1]
+    );
+
+    // latency session on the same server: full quota, the same burst
+    // goes through untouched
+    let mut lat = TestClient::connect(&addr);
+    assert_eq!(lat.hello(Some(QosClass::Latency)), 4, "latency gets the full cap");
+    let lh = lat.alloc_one();
+    for r in lat.burst(&[heavy_kernel(lh), heavy_kernel(lh)]) {
+        assert!(matches!(r, NetResponse::Ran { .. }), "latency burst admitted, got {r:?}");
+    }
+
+    // the shed ledger: counted against background only
+    match lat.rpc(&NetRequest::Stats) {
+        NetResponse::Stats(s) => {
+            assert!(s.shed_background >= 1, "background shed counted: {s:?}");
+            assert_eq!(s.shed_latency, 0, "no latency shed: {s:?}");
+            assert_eq!(s.busy_rejects, s.shed_background + s.shed_throughput, "{s:?}");
+        }
+        other => panic!("expected Stats, got {other:?}"),
+    }
+
+    bg.goodbye();
+    lat.goodbye();
+    let report = server.shutdown();
+    assert!(report.is_clean());
+    assert_eq!(report.rows_live, 0, "teardown freed every row");
+    assert!(report.control.shed_background >= 1, "sheds surface in the system report");
+}
+
+/// A `Hello` that names no class lands on the server's configured
+/// default — and the default default is `Throughput` (full quota).
+#[test]
+fn hello_without_class_uses_server_default() {
+    let dram = cfg();
+    let sys = SystemBuilder::new(&dram).banks(1).build();
+    let mut nc = NetConfig::new(dram.geometry.cols_per_row);
+    nc.max_inflight = 8;
+    nc.default_qos = QosClass::Background;
+    let server = NetServer::new(sys, nc);
+    let addr = server.listen_tcp("127.0.0.1:0").expect("bind loopback").to_string();
+
+    let mut anon = TestClient::connect(&addr);
+    assert_eq!(anon.hello(None), 2, "classless Hello inherits the configured default");
+    let mut named = TestClient::connect(&addr);
+    assert_eq!(named.hello(Some(QosClass::Throughput)), 8, "an explicit class overrides it");
+    anon.goodbye();
+    named.goodbye();
+    assert!(server.shutdown().is_clean());
+}
+
+/// The tuner widens the reorder window under a reorder-friendly load
+/// and the report says so — the controller observably acts.
+#[test]
+fn controller_widens_the_window_under_uniform_load() {
+    let ctl = ControlConfig { tick: Duration::from_millis(1), ..ControlConfig::default() };
+    let sys = SystemBuilder::new(&cfg())
+        .banks(1)
+        .max_batch(16)
+        .reorder_window(0)
+        .controller(true)
+        .control_config(ctl)
+        .build();
+    let client = sys.client_on(0);
+    let row = client.alloc().expect("row");
+    let k = shift(1);
+    // uniform same-shape kernels: zero hazards, so every tick's verdict
+    // is "widen" until the cap
+    for _ in 0..40 {
+        for _ in 0..8 {
+            client.submit(&k, std::slice::from_ref(&row));
+        }
+        sys.flush();
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let report = sys.shutdown();
+    assert!(report.is_clean());
+    assert!(report.control.ticks > 0, "controller ran: {:?}", report.control);
+    assert!(report.control.widened > 0, "window widened: {:?}", report.control);
+    assert!(report.control.final_window > 0, "window ended open: {:?}", report.control);
+}
+
+/// Seeded sanity over the full mixed stack: random class assignments,
+/// random kernels, always bit-exact against a locally computed model.
+#[test]
+fn prop_mixed_class_results_match_the_model() {
+    check(8, |rng| {
+        let sys = SystemBuilder::new(&cfg()).banks(1).max_batch(rng.below(6) + 2).build();
+        let n_sessions = rng.below(3) + 2;
+        let mut sessions = Vec::new();
+        for _ in 0..n_sessions {
+            let c = sys.client_on(0);
+            let class = QosClass::from_index(rng.below(3)).expect("class index");
+            c.set_qos(class);
+            let row = c.alloc().map_err(|e| e.to_string())?;
+            let bits = BitRow::random(256, rng);
+            c.write(&row, bits.clone());
+            sessions.push((c, row, bits));
+        }
+        for _ in 0..32 {
+            let i = rng.below(sessions.len());
+            let n = rng.below(5) + 1;
+            let (c, row, model) = &mut sessions[i];
+            c.submit(&shift(n), std::slice::from_ref(row));
+            *model = model.shifted_by(ShiftDir::Right, n, false);
+        }
+        sys.flush();
+        for (i, (c, row, model)) in sessions.iter().enumerate() {
+            let got = c.read_now(row).map_err(|e| e.to_string())?;
+            prop_assert_eq(got, model.clone(), &format!("session {i} rows"))?;
+        }
+        prop_assert(sys.shutdown().is_clean(), "clean shutdown")
+    });
+}

@@ -248,6 +248,51 @@ fn shutdown_with_empty_queues_is_clean() {
 }
 
 #[test]
+fn try_resolve_races_worker_resolution_without_hanging() {
+    // a ticket polled from another thread while the worker resolves it
+    // must settle to Some(Ok) — never hang, never double-resolve
+    let sys = SystemBuilder::new(&cfg()).banks(1).max_batch(1).build();
+    let client = sys.client();
+    let row = client.alloc().expect("row");
+    for _ in 0..50 {
+        let mut t = client.submit(&shift(1), std::slice::from_ref(&row));
+        client.flush();
+        let poller = std::thread::spawn(move || {
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+            loop {
+                if let Some(r) = t.try_resolve() {
+                    return r;
+                }
+                assert!(std::time::Instant::now() < deadline, "try_resolve never settled");
+                std::thread::yield_now();
+            }
+        });
+        poller.join().expect("poller thread").expect("kernel result");
+    }
+    assert!(sys.shutdown().is_clean());
+}
+
+#[test]
+fn try_resolve_after_teardown_reports_worker_lost() {
+    // an unflushed ticket whose whole system is torn down resolves to
+    // WorkerLost — a definite answer, not a hang and not a panic
+    let sys = SystemBuilder::new(&cfg()).banks(1).max_batch(64).build();
+    let client = sys.client();
+    let row = client.alloc().expect("row");
+    let mut t = client.submit(&shift(1), std::slice::from_ref(&row));
+    assert!(t.try_resolve().is_none(), "batched ticket still pending before flush");
+    drop(row);
+    drop(client);
+    drop(sys); // last owner: workers join, the queued envelope drops
+    match t.try_resolve() {
+        Some(Err(PimError::WorkerLost { bank: 0 })) => {}
+        other => panic!("expected WorkerLost, got {other:?}"),
+    }
+    // resolution is sticky: polling again keeps answering
+    assert!(matches!(t.try_resolve(), Some(Err(PimError::WorkerLost { .. }))));
+}
+
+#[test]
 fn handles_do_not_leak_rows_across_free() {
     let sys = SystemBuilder::new(&cfg()).banks(1).build();
     let client = sys.client();

@@ -8,6 +8,7 @@ use shiftdram::net::codec::{
     FramePoll, FrameReader, NetRequest, NetResponse, ReadError, WireHandle, WireStats, HEADER_LEN,
     MAX_PAYLOAD, PROTO_VERSION,
 };
+use shiftdram::coordinator::QosClass;
 use shiftdram::pim::{CommandCensus, PimOp};
 use shiftdram::util::proptest::{check, prop_assert, prop_assert_eq};
 use shiftdram::util::{BitRow, Rng, ShiftDir};
@@ -65,7 +66,13 @@ fn rand_census(rng: &mut Rng) -> CommandCensus {
 fn all_requests(rng: &mut Rng) -> Vec<NetRequest> {
     let n_ops = rng.below(8) + 1;
     vec![
-        NetRequest::Hello { proto: rng.below(u16::MAX as usize) as u16 },
+        NetRequest::Hello {
+            proto: rng.below(u16::MAX as usize) as u16,
+            qos: match rng.below(4) {
+                0 => None,
+                i => QosClass::from_index(i - 1),
+            },
+        },
         NetRequest::Alloc { n: rng.below(4096) as u32 },
         NetRequest::Free { handles: rand_handles(rng, 8) },
         NetRequest::WriteRow { handle: rand_handle(rng), bits: rand_row(rng) },
@@ -101,6 +108,9 @@ fn all_responses(rng: &mut Rng) -> Vec<NetResponse> {
             timeouts: rng.below(1 << 20) as u64,
             reaped: rng.below(1 << 20) as u64,
             malformed: rng.below(1 << 20) as u64,
+            shed_latency: rng.below(1 << 20) as u64,
+            shed_throughput: rng.below(1 << 20) as u64,
+            shed_background: rng.below(1 << 20) as u64,
         }),
         NetResponse::Bye,
         NetResponse::Busy { inflight: rng.below(256) as u32, cap: rng.below(256) as u32 },

@@ -94,7 +94,7 @@ impl<S: Read + Write> TestClient<S> {
     }
 
     fn hello(&mut self) -> u32 {
-        match self.rpc(&NetRequest::Hello { proto: PROTO_VERSION }) {
+        match self.rpc(&NetRequest::Hello { proto: PROTO_VERSION, qos: None }) {
             NetResponse::Welcome { cols, .. } => cols,
             other => panic!("expected Welcome, got {other:?}"),
         }
