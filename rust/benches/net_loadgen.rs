@@ -3,15 +3,21 @@
 //! (heavy-tailed arrivals, skewed kernel mix, latency charged from the
 //! scheduled send time so queueing is not coordinated away).
 //!
+//! The high-`conns` points are the scoreboard for the coordinator's lock
+//! sharding: with the global router mutex, p99 climbed with connection
+//! count because every session's enqueue serialized on it. The contended
+//! lock counts ride along in the JSON so a regression shows up as a
+//! number, not a hunch.
+//!
 //! Emits `BENCH_net_loadgen.json` via `util::benchx::JsonReport`; the
 //! CLI's `loadgen` subcommand writes the separate `BENCH_serve.json`.
 
 use shiftdram::config::DramConfig;
-use shiftdram::coordinator::SystemBuilder;
+use shiftdram::coordinator::{LockReport, SystemBuilder};
 use shiftdram::net::{loadgen, LoadConfig, LoadReport, NetConfig, NetServer, Target};
 use shiftdram::util::benchx::JsonReport;
 
-fn run(cfg: &DramConfig, conns: usize, ops: usize) -> LoadReport {
+fn run(cfg: &DramConfig, conns: usize, ops: usize) -> (LoadReport, LockReport) {
     let sys = SystemBuilder::new(cfg).banks(8).max_batch(16).build();
     let server = NetServer::new(sys, NetConfig::new(cfg.geometry.cols_per_row));
     let addr = server.listen_tcp("127.0.0.1:0").expect("bind loopback");
@@ -22,25 +28,34 @@ fn run(cfg: &DramConfig, conns: usize, ops: usize) -> LoadReport {
     assert!(sr.is_clean(), "workers must exit clean: {:?}", sr.worker_failures);
     assert_eq!(sr.rows_live, 0, "loadgen sessions must leak no rows");
     assert_eq!(report.errors, 0, "socket path must be error-free");
-    report
+    (report, sr.locks)
 }
 
 fn main() {
     let cfg = DramConfig::ddr3_1333_4gb();
     let mut jr = JsonReport::new("net_loadgen");
     println!("=== network front end: open-loop tail latency over loopback TCP ===");
-    for (conns, ops) in [(2usize, 192usize), (8, 256)] {
-        let r = run(&cfg, conns, ops);
+    for (conns, ops) in [(2usize, 192usize), (8, 256), (32, 384)] {
+        let (r, locks) = run(&cfg, conns, ops);
         println!(
             "{:>2} conns x {} ops: p50 {:>8.1} us  p99 {:>8.1} us  p999 {:>8.1} us  \
-             {:>7.0} ops/s  ({} busy)",
-            conns, ops, r.p50_us, r.p99_us, r.p999_us, r.goodput_ops_s, r.busy
+             {:>7.0} ops/s  ({} busy, {} contended waits)",
+            conns,
+            ops,
+            r.p50_us,
+            r.p99_us,
+            r.p999_us,
+            r.goodput_ops_s,
+            r.busy,
+            locks.total_contended()
         );
         jr.metric(&format!("p50_us_{conns}c"), r.p50_us);
         jr.metric(&format!("p99_us_{conns}c"), r.p99_us);
         jr.metric(&format!("p999_us_{conns}c"), r.p999_us);
         jr.metric(&format!("goodput_ops_s_{conns}c"), r.goodput_ops_s);
         jr.metric(&format!("busy_{conns}c"), r.busy as f64);
+        jr.metric(&format!("lock_contended_{conns}c"), locks.total_contended() as f64);
+        jr.metric(&format!("lock_acquired_{conns}c"), locks.total_acquired() as f64);
     }
     let path = jr.write().expect("write bench json");
     println!("\nwrote {}", path.display());

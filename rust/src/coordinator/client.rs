@@ -39,9 +39,10 @@
 
 use std::fmt;
 use std::sync::mpsc::{channel, Receiver};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 use crate::coordinator::control::QosClass;
+use crate::coordinator::metrics::LockCounters;
 use crate::coordinator::reorder::Access;
 use crate::coordinator::system::{PimRequest, PimResponse, PimSystem};
 use crate::pim::compile::passes::optimize_kernel;
@@ -132,15 +133,28 @@ impl std::error::Error for PimError {}
 ///
 /// The seat is the re-bind point of the whole migration design: the
 /// system, bank, subarray, and per-slot physical rows all live behind one
-/// lock, so the mover can rewrite any of them atomically and every
+/// `RwLock`, so the mover can rewrite any of them atomically and every
 /// outstanding handle resolves to the new placement on its next use.
-/// Submission paths hold the seat lock *across the wire enqueue*, which
-/// gives the mover its fence: by the time it acquires the lock, every
-/// request resolved against the old coordinates is already queued on the
-/// old bank — and the mover's own copies/reads queue behind them in the
-/// same per-bank FIFO.
+///
+/// Submissions take the lock *shared* ([`Self::read`]) — resolution is
+/// read-only, so concurrent submitters on one session never serialize
+/// here — and hold it across the wire enqueue. Mutators (alloc, free,
+/// the mover's re-bind/re-home) take it *exclusive* ([`Self::write`]).
+/// That split is still the mover's fence: a write acquisition waits for
+/// every in-flight reader, so by the time the mover holds the lock,
+/// every request resolved against the old coordinates is already queued
+/// on the old bank — and the mover's own copies/reads queue behind them
+/// in the same per-bank FIFO. Acquisitions charge the shared
+/// [`LockCounters`] (`seat_read`/`seat_write` sites).
+///
+/// Dropping the seat (last client/handle gone) releases its placement
+/// slot in the router's per-bank session gauge — see [`Drop`] below.
 pub(crate) struct SessionSeat {
-    state: Mutex<SeatState>,
+    state: RwLock<SeatState>,
+    /// contention counters shared with the owning system's metrics
+    /// registry (cloned at seat creation; a re-homed seat keeps charging
+    /// its original registry — an accepted imprecision)
+    locks: Arc<LockCounters>,
 }
 
 /// The lockable interior of a [`SessionSeat`].
@@ -178,8 +192,9 @@ impl SessionSeat {
         owner: usize,
     ) -> Arc<SessionSeat> {
         let qos = sys.default_qos();
+        let locks = sys.metrics().locks().clone();
         Arc::new(SessionSeat {
-            state: Mutex::new(SeatState {
+            state: RwLock::new(SeatState {
                 sys,
                 shard,
                 bank,
@@ -189,11 +204,33 @@ impl SessionSeat {
                 slots: Vec::new(),
                 free_slots: Vec::new(),
             }),
+            locks,
         })
     }
 
-    pub(crate) fn lock(&self) -> std::sync::MutexGuard<'_, SeatState> {
-        self.state.lock().unwrap()
+    /// Shared-read acquire: the submission fast path (handle resolution
+    /// + wire enqueue). Concurrent readers never block each other.
+    pub(crate) fn read(&self) -> RwLockReadGuard<'_, SeatState> {
+        self.locks.seat_read.read(&self.state)
+    }
+
+    /// Exclusive acquire: alloc/free/QoS changes and the mover's
+    /// re-bind/re-home fence (waits out every in-flight reader).
+    pub(crate) fn write(&self) -> RwLockWriteGuard<'_, SeatState> {
+        self.locks.seat_write.write(&self.state)
+    }
+}
+
+impl Drop for SessionSeat {
+    fn drop(&mut self) {
+        // the placement-accounting half of session teardown: rows are
+        // freed by whoever owned the handles (client free / connection
+        // teardown); the seat itself releases the per-bank session slot
+        // so LeastLoaded placement re-balances after churn
+        if let Ok(st) = self.state.get_mut() {
+            let bank = st.bank;
+            st.sys.release_placement(bank);
+        }
     }
 }
 
@@ -302,7 +339,7 @@ impl RowHandle {
     /// diagnostics/affinity; the row coordinate itself stays private — and
     /// the bank may change when the mover re-homes the session).
     pub fn bank(&self) -> usize {
-        self.seat.lock().bank
+        self.seat.read().bank
     }
 }
 
@@ -617,19 +654,19 @@ impl PimClient {
 
     /// The bank this session currently lives on (the mover may change it).
     pub fn bank(&self) -> usize {
-        self.seat.lock().bank
+        self.seat.read().bank
     }
 
     /// The system this session currently talks to (a re-homed fabric
     /// session answers with its new shard's system).
     pub fn system(&self) -> PimSystem {
-        self.seat.lock().sys.clone()
+        self.seat.read().sys.clone()
     }
 
     /// This session's QoS class (starts at the builder's
     /// [`default_qos`](crate::coordinator::SystemBuilder::default_qos)).
     pub fn qos(&self) -> QosClass {
-        self.seat.lock().qos
+        self.seat.read().qos
     }
 
     /// Change this session's QoS class. Takes effect from the next
@@ -639,7 +676,7 @@ impl PimClient {
     /// among non-conflicting requests (bit-identical by the promotion
     /// pass's construction).
     pub fn set_qos(&self, class: QosClass) {
-        self.seat.lock().qos = class;
+        self.seat.write().qos = class;
     }
 
     /// Charge one admission-control shed against this session's core, so
@@ -647,12 +684,12 @@ impl PimClient {
     /// the per-class shed ledger alongside the wire counters (the network
     /// front end calls this when it bounces a request with `Busy`).
     pub(crate) fn record_shed(&self, class: QosClass) {
-        self.seat.lock().sys.metrics().control().record_shed(class);
+        self.seat.read().sys.metrics().control().record_shed(class);
     }
 
     /// Allocate one system-placed row.
     pub fn alloc(&self) -> Result<RowHandle, PimError> {
-        let mut st = self.seat.lock();
+        let mut st = self.seat.write();
         let (bank, subarray) = (st.bank, st.subarray);
         match st.sys.alloc_concrete(bank, subarray) {
             Some(row) => {
@@ -663,22 +700,22 @@ impl PimClient {
         }
     }
 
-    /// Allocate `n` rows (all-or-nothing: on exhaustion every row already
-    /// claimed is returned to the slab).
+    /// Allocate `n` rows, all or nothing, under **one** seat acquisition
+    /// and **one** slab call — on exhaustion nothing is claimed at all
+    /// (the slab checks capacity before handing out the first row).
     pub fn alloc_rows(&self, n: usize) -> Result<Vec<RowHandle>, PimError> {
-        let mut out = Vec::with_capacity(n);
-        for _ in 0..n {
-            match self.alloc() {
-                Ok(h) => out.push(h),
-                Err(e) => {
-                    for h in out {
-                        self.free(h);
-                    }
-                    return Err(e);
-                }
-            }
+        let mut st = self.seat.write();
+        let (bank, subarray) = (st.bank, st.subarray);
+        match st.sys.alloc_concrete_many(bank, subarray, n) {
+            Some(rows) => Ok(rows
+                .into_iter()
+                .map(|row| {
+                    let (slot, gen) = st.bind(row);
+                    RowHandle { seat: self.seat.clone(), slot, gen }
+                })
+                .collect()),
+            None => Err(PimError::AllocExhausted { bank, subarray }),
         }
-        Ok(out)
     }
 
     /// Return a row to the system. False on double free, a stale handle,
@@ -687,14 +724,21 @@ impl PimClient {
         if !Arc::ptr_eq(&handle.seat, &self.seat) {
             return false;
         }
-        let mut st = self.seat.lock();
-        match st.release(handle.slot, handle.gen) {
-            Some(row) => {
-                let (bank, subarray) = (st.bank, st.subarray);
-                st.sys.free_concrete(bank, subarray, row)
-            }
-            None => false,
+        let mut st = self.seat.write();
+        // resolve first and release the slot only after the slab accepts
+        // the row: releasing up front meant a slab rejection left the
+        // slot gone while the row stayed live in the slab — leaked
+        // forever with no handle able to reach it
+        let Some(row) = st.resolve(handle.slot, handle.gen) else {
+            return false;
+        };
+        let (bank, subarray) = (st.bank, st.subarray);
+        if !st.sys.free_concrete(bank, subarray, row) {
+            return false;
         }
+        let released = st.release(handle.slot, handle.gen);
+        debug_assert_eq!(released, Some(row), "slot changed between resolve and release");
+        true
     }
 
     /// Load host data into a row.
@@ -728,7 +772,7 @@ impl PimClient {
             );
         }
         let outcome = {
-            let st = self.seat.lock();
+            let st = self.seat.read();
             let mut binding = Vec::with_capacity(kernel.slots().len());
             let mut problem: Option<(HandleIssue, usize)> = None;
             for &r in kernel.slots() {
@@ -782,7 +826,7 @@ impl PimClient {
     /// Dispatch this session's partially filled batch.
     pub fn flush(&self) {
         let (sys, bank) = {
-            let st = self.seat.lock();
+            let st = self.seat.read();
             (st.sys.clone(), st.bank)
         };
         sys.flush_bank(bank);
@@ -822,7 +866,7 @@ impl PimClient {
         build: impl FnOnce(usize, usize) -> (Access, PimRequest),
     ) -> Result<WireSlot, (PimError, usize)> {
         let outcome = {
-            let st = self.seat.lock();
+            let st = self.seat.read();
             match resolve_on(&st, &self.seat, handle) {
                 Ok(row) => {
                     let (access, req) = build(st.subarray, row);
@@ -865,7 +909,7 @@ fn issue_error(issue: HandleIssue, handle: &RowHandle, bank: usize, subarray: us
     match issue {
         HandleIssue::Stale { slot } => PimError::StaleHandle { slot },
         HandleIssue::Foreign => {
-            let other = handle.seat.lock();
+            let other = handle.seat.read();
             PimError::ForeignHandle {
                 expected_bank: bank,
                 expected_subarray: subarray,
@@ -873,5 +917,58 @@ fn issue_error(issue: HandleIssue, handle: &RowHandle, bank: usize, subarray: us
                 got_subarray: other.subarray,
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DramConfig;
+    use crate::coordinator::system::SystemBuilder;
+
+    #[test]
+    fn free_rejected_by_the_slab_keeps_the_slot_bound() {
+        let sys = SystemBuilder::new(&DramConfig::tiny_test()).banks(1).build();
+        let c = sys.client();
+        let h = c.alloc().expect("row");
+        let (slot, gen) = (h.slot, h.gen);
+        let (bank, subarray, row) = {
+            let st = c.seat().read();
+            (st.bank, st.subarray, st.resolve(slot, gen).expect("live"))
+        };
+        // yank the row out from under the session, so the slab rejects
+        // the session's own free
+        assert!(sys.free_concrete(bank, subarray, row));
+        assert!(!c.free(h), "the slab saw a double free");
+        // the slot must survive a rejected free: releasing it *before*
+        // the slab answered meant a rejection dropped the last reference
+        // to a row the slab could still hold live — leaked until shutdown
+        let st = c.seat().read();
+        assert_eq!(st.resolve(slot, gen), Some(row), "slot still bound after the rejection");
+        drop(st);
+        drop(c);
+        let report = sys.shutdown();
+        assert_eq!(report.rows_live, 0, "nothing leaked");
+        assert!(report.is_clean(), "{:?}", report.worker_failures);
+    }
+
+    #[test]
+    fn batch_alloc_exhaustion_binds_nothing() {
+        // the subarray holds 32 rows (see system.rs's exhaustion test)
+        let sys = SystemBuilder::new(&DramConfig::tiny_test()).banks(1).build();
+        let c = sys.client();
+        let held = c.alloc_rows(30).expect("most of the subarray");
+        let err = c.alloc_rows(3).expect_err("only 2 rows remain");
+        assert!(matches!(err, PimError::AllocExhausted { .. }), "{err:?}");
+        // all-or-nothing: the failed batch neither claimed slab rows nor
+        // burned seat slots
+        assert_eq!(c.seat().read().live_count(), 30);
+        let rest = c.alloc_rows(2).expect("the two survivors are intact");
+        for h in held.into_iter().chain(rest) {
+            assert!(c.free(h));
+        }
+        let report = sys.shutdown();
+        assert_eq!(report.rows_live, 0);
+        assert!(report.is_clean(), "{:?}", report.worker_failures);
     }
 }

@@ -84,7 +84,7 @@ use crate::coordinator::client::{
     Kernel, PimClient, PimError, Receipt, RowHandle, SessionSeat, Ticket,
 };
 use crate::coordinator::control::{ControlReport, MoverGovernor, QosClass};
-use crate::coordinator::metrics::{FabricCounters, Metrics};
+use crate::coordinator::metrics::{FabricCounters, LockReport, Metrics};
 use crate::coordinator::reorder::Access;
 use crate::coordinator::router::Placement;
 use crate::coordinator::system::{
@@ -537,7 +537,7 @@ impl FabricCore {
         from: usize,
         to: usize,
     ) -> Result<u64, PimError> {
-        let mut st = seat.lock();
+        let mut st = seat.write();
         if st.shard != from || from == to {
             return Err(PimError::Protocol("seat re-homed concurrently"));
         }
@@ -570,22 +570,16 @@ impl FabricCore {
             }
         }
         // 2. re-place on the target shard and allocate one row per slot
+        // (placement charged dst's session gauge — every bail-out below
+        // must hand it back or the gauge drifts up with each failed move)
         let (new_bank, new_sa) = dst.place_for_rehome();
-        let mut new_rows = Vec::with_capacity(live.len());
-        for _ in &live {
-            match dst.alloc_concrete(new_bank, new_sa) {
-                Some(row) => new_rows.push(row),
-                None => {
-                    for row in new_rows {
-                        dst.free_concrete(new_bank, new_sa, row);
-                    }
-                    return Err(PimError::AllocExhausted {
-                        bank: new_bank,
-                        subarray: new_sa,
-                    });
-                }
+        let new_rows = match dst.alloc_concrete_many(new_bank, new_sa, live.len()) {
+            Some(rows) => rows,
+            None => {
+                dst.release_placement(new_bank);
+                return Err(PimError::AllocExhausted { bank: new_bank, subarray: new_sa });
             }
-        }
+        };
         // 3. write the images onto the target bank
         let mut writes = Vec::with_capacity(live.len());
         for (&row, bits) in new_rows.iter().zip(&images) {
@@ -604,6 +598,7 @@ impl FabricCore {
                 for &row in &new_rows {
                     dst.free_concrete(new_bank, new_sa, row);
                 }
+                dst.release_placement(new_bank);
                 return Err(PimError::WorkerLost { bank: new_bank });
             }
         }
@@ -620,6 +615,9 @@ impl FabricCore {
         for &(_, row) in &live {
             src.free_concrete(old_bank, old_sa, row);
         }
+        // the seat no longer sits on the source bank: give its placement
+        // slot back so LeastLoaded stops steering traffic away from it
+        src.release_placement(old_bank);
         let moved = live.len() as u64;
         dst.metrics().mover().record_plan(moved);
         self.counters.record_rehome();
@@ -643,7 +641,7 @@ impl FabricCore {
         }
         for seat in self.shards[busy].live_seats() {
             let (wants, rows_to_move) = {
-                let st = seat.lock();
+                let st = seat.read();
                 (st.shard == busy && st.live_count() > 0, st.live_count())
             };
             if !wants {
@@ -961,8 +959,10 @@ impl PimFabric {
             failures.extend(s.report.worker_failures.iter().cloned());
         }
         let mut control = ControlReport::default();
+        let mut locks = LockReport::default();
         for s in &shards {
             control.accumulate(&s.report.control);
+            locks.accumulate(&s.report.locks);
         }
         SystemReport {
             banks,
@@ -992,6 +992,7 @@ impl PimFabric {
             frag_after: shards.iter().map(|s| s.report.frag_after).sum(),
             rows_live: shards.iter().map(|s| s.report.rows_live).sum(),
             control,
+            locks,
             shards,
         }
     }
@@ -1011,7 +1012,7 @@ impl FabricClient {
     /// The shard (channel) this session currently lives on (the mover's
     /// re-homing may change it).
     pub fn shard(&self) -> usize {
-        self.client.seat().lock().shard
+        self.client.seat().read().shard
     }
 
     /// The bank within the shard.
@@ -1398,7 +1399,7 @@ mod tests {
         assert_eq!(fc.shard_load(1), 0);
         assert_eq!(fc.rehome_scan(1), 1, "the pinned session migrates");
         assert_eq!(fc.counters.rehomed(), 1);
-        assert_eq!(session.seat().lock().shard, 1, "seat re-homed to shard 1");
+        assert_eq!(session.seat().read().shard, 1, "seat re-homed to shard 1");
         // data followed the handles; kernels run on the new shard
         for (h, bits) in rows.iter().zip(&images) {
             assert_eq!(&session.read_now(h).unwrap(), bits);

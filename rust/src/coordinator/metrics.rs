@@ -11,11 +11,163 @@
 //! ⇒ one cache fetch, one replay).
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard, TryLockError};
 
 use crate::coordinator::control::{ControlCounters, QosClass};
 use crate::coordinator::reorder::PlanStats;
 use crate::pim::compile::{CacheStats, ProgramCache};
+
+/// Contention instrumentation for one lock site: every acquisition is
+/// counted, and acquisitions that found the lock held (the `try_lock`
+/// probe failed and the caller had to block) are counted separately.
+/// Two relaxed atomic bumps on the uncontended path — cheap enough for
+/// the wire hot path, and the ratio is exactly the serialization gauge
+/// the seat/slab sharding is judged by.
+#[derive(Debug, Default)]
+pub struct LockSite {
+    acquired: AtomicU64,
+    contended: AtomicU64,
+}
+
+impl LockSite {
+    /// Acquire `m`, counting the acquisition (and whether it contended).
+    pub fn lock<'a, T>(&self, m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+        self.acquired.fetch_add(1, Ordering::Relaxed);
+        match m.try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::WouldBlock) => {
+                self.contended.fetch_add(1, Ordering::Relaxed);
+                m.lock().unwrap()
+            }
+            Err(TryLockError::Poisoned(_)) => m.lock().unwrap(),
+        }
+    }
+
+    /// Shared-read acquire on an `RwLock` (the seat fast path).
+    pub fn read<'a, T>(&self, l: &'a RwLock<T>) -> RwLockReadGuard<'a, T> {
+        self.acquired.fetch_add(1, Ordering::Relaxed);
+        match l.try_read() {
+            Ok(g) => g,
+            Err(TryLockError::WouldBlock) => {
+                self.contended.fetch_add(1, Ordering::Relaxed);
+                l.read().unwrap()
+            }
+            Err(TryLockError::Poisoned(_)) => l.read().unwrap(),
+        }
+    }
+
+    /// Exclusive-write acquire on an `RwLock` (alloc/free/mover paths).
+    pub fn write<'a, T>(&self, l: &'a RwLock<T>) -> RwLockWriteGuard<'a, T> {
+        self.acquired.fetch_add(1, Ordering::Relaxed);
+        match l.try_write() {
+            Ok(g) => g,
+            Err(TryLockError::WouldBlock) => {
+                self.contended.fetch_add(1, Ordering::Relaxed);
+                l.write().unwrap()
+            }
+            Err(TryLockError::Poisoned(_)) => l.write().unwrap(),
+        }
+    }
+
+    pub fn acquired(&self) -> u64 {
+        self.acquired.load(Ordering::Relaxed)
+    }
+
+    pub fn contended(&self) -> u64 {
+        self.contended.load(Ordering::Relaxed)
+    }
+
+    fn report(&self) -> LockSiteReport {
+        LockSiteReport { acquired: self.acquired(), contended: self.contended() }
+    }
+}
+
+/// One counter block per coordinator lock site. Shared (behind one `Arc`
+/// in [`Metrics`]) by the router's placement lock, every per-bank slab
+/// and batcher lock, and every session seat's `RwLock` — so the report
+/// answers "which lock serializes this workload" without a profiler.
+#[derive(Debug, Default)]
+pub struct LockCounters {
+    /// the router's small placement lock (policy decision on session open)
+    pub placement: LockSite,
+    /// per-bank row-slab locks (alloc/free/claim + occupancy gauges)
+    pub slab: LockSite,
+    /// per-bank batcher locks (the wire enqueue/dispatch path)
+    pub batcher: LockSite,
+    /// seat shared-read acquisitions (submission-path handle resolution)
+    pub seat_read: LockSite,
+    /// seat exclusive-write acquisitions (alloc/free, the mover's fence)
+    pub seat_write: LockSite,
+}
+
+impl LockCounters {
+    pub fn report(&self) -> LockReport {
+        LockReport {
+            placement: self.placement.report(),
+            slab: self.slab.report(),
+            batcher: self.batcher.report(),
+            seat_read: self.seat_read.report(),
+            seat_write: self.seat_write.report(),
+        }
+    }
+}
+
+/// One lock site's totals in a [`LockReport`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LockSiteReport {
+    /// times the site's lock was taken
+    pub acquired: u64,
+    /// acquisitions that found it held and had to wait
+    pub contended: u64,
+}
+
+impl LockSiteReport {
+    fn accumulate(&mut self, other: &LockSiteReport) {
+        self.acquired += other.acquired;
+        self.contended += other.contended;
+    }
+}
+
+/// Lock-contention slice of the final report
+/// ([`SystemReport::locks`](crate::coordinator::SystemReport)): per-site
+/// acquisition and contended-wait totals. A fabric sums it over shards.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LockReport {
+    pub placement: LockSiteReport,
+    pub slab: LockSiteReport,
+    pub batcher: LockSiteReport,
+    pub seat_read: LockSiteReport,
+    pub seat_write: LockSiteReport,
+}
+
+impl LockReport {
+    /// Fold another report in (fabric shutdown aggregation).
+    pub fn accumulate(&mut self, other: &LockReport) {
+        self.placement.accumulate(&other.placement);
+        self.slab.accumulate(&other.slab);
+        self.batcher.accumulate(&other.batcher);
+        self.seat_read.accumulate(&other.seat_read);
+        self.seat_write.accumulate(&other.seat_write);
+    }
+
+    /// Total contended waits across every site.
+    pub fn total_contended(&self) -> u64 {
+        self.placement.contended
+            + self.slab.contended
+            + self.batcher.contended
+            + self.seat_read.contended
+            + self.seat_write.contended
+    }
+
+    /// Total acquisitions across every site.
+    pub fn total_acquired(&self) -> u64 {
+        self.placement.acquired
+            + self.slab.acquired
+            + self.batcher.acquired
+            + self.seat_read.acquired
+            + self.seat_write.acquired
+    }
+}
 
 /// One batch worth of worker progress.
 #[derive(Clone, Copy, Debug, Default)]
@@ -72,6 +224,7 @@ pub struct MoverCounters {
     rows_migrated: AtomicU64,
     frag_before: AtomicU64,
     frag_after: AtomicU64,
+    prompt_flushes: AtomicU64,
 }
 
 impl MoverCounters {
@@ -103,6 +256,17 @@ impl MoverCounters {
     pub fn frag_after(&self) -> u64 {
         self.frag_after.load(Ordering::Relaxed)
     }
+
+    /// A compaction fence filled a batch to `max_batch` mid-pass and the
+    /// mover dispatched that bank immediately instead of letting the
+    /// fence sit until the end-of-pass flush.
+    pub fn record_prompt_flush(&self) {
+        self.prompt_flushes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn prompt_flushes(&self) -> u64 {
+        self.prompt_flushes.load(Ordering::Relaxed)
+    }
 }
 
 /// Aggregated metrics registry.
@@ -113,6 +277,7 @@ pub struct Metrics {
     reorder: Arc<ReorderCounters>,
     mover: Arc<MoverCounters>,
     control: Arc<ControlCounters>,
+    locks: Arc<LockCounters>,
 }
 
 impl Metrics {
@@ -123,12 +288,24 @@ impl Metrics {
             reorder: Arc::new(ReorderCounters::default()),
             mover: Arc::new(MoverCounters::default()),
             control: Arc::new(ControlCounters::default()),
+            locks: Arc::new(LockCounters::default()),
         }
     }
 
     /// The row mover's counter block.
     pub fn mover(&self) -> &MoverCounters {
         &self.mover
+    }
+
+    /// The shared lock-contention counter block (router placement,
+    /// per-bank slab/batcher locks, seat `RwLock`s all charge here).
+    pub fn locks(&self) -> &Arc<LockCounters> {
+        &self.locks
+    }
+
+    /// Snapshot of per-site lock acquisition/contention totals.
+    pub fn lock_report(&self) -> LockReport {
+        self.locks.report()
     }
 
     /// The control plane's counter block (QoS promotions, controller
@@ -630,6 +807,67 @@ mod tests {
         assert_eq!(c.sheds(QosClass::Background), 2);
         assert_eq!(c.sheds(QosClass::Latency), 1);
         assert_eq!(c.sheds(QosClass::Throughput), 0);
+    }
+
+    #[test]
+    fn lock_sites_count_acquisitions_and_contended_waits() {
+        let m = Metrics::new(1);
+        let mu = Mutex::new(0usize);
+        {
+            let mut g = m.locks().placement.lock(&mu);
+            *g += 1;
+        }
+        {
+            let _g = m.locks().placement.lock(&mu);
+        }
+        let r = m.lock_report();
+        assert_eq!(r.placement.acquired, 2);
+        assert_eq!(r.placement.contended, 0, "uncontended single thread");
+        assert_eq!(*mu.lock().unwrap(), 1);
+
+        // a held lock makes the next instrumented acquire count as
+        // contended: the holder refuses to release until the waiter's
+        // try_lock probe has already failed (contended == 1), so the
+        // outcome is deterministic
+        let site = std::sync::Arc::new(LockSite::default());
+        let held = std::sync::Arc::new(Mutex::new(()));
+        let g = held.lock().unwrap();
+        let h = {
+            let (site, held) = (site.clone(), held.clone());
+            std::thread::spawn(move || {
+                let _g = site.lock(&held);
+            })
+        };
+        while site.contended() == 0 {
+            std::thread::yield_now();
+        }
+        drop(g);
+        h.join().unwrap();
+        assert_eq!((site.acquired(), site.contended()), (1, 1));
+
+        // RwLock read/write instrumentation and report accumulation
+        let rw = RwLock::new(7u32);
+        assert_eq!(*m.locks().seat_read.read(&rw), 7);
+        *m.locks().seat_write.write(&rw) = 8;
+        let mut total = m.lock_report();
+        assert_eq!(total.seat_read.acquired, 1);
+        assert_eq!(total.seat_write.acquired, 1);
+        total.accumulate(&m.lock_report());
+        assert_eq!(total.seat_read.acquired, 2);
+        assert_eq!(total.total_acquired(), 2 * m.lock_report().total_acquired());
+        assert_eq!(total.total_contended(), 0);
+        // clones share the registry
+        m.clone().locks().slab.lock(&mu);
+        assert_eq!(m.lock_report().slab.acquired, 1);
+    }
+
+    #[test]
+    fn mover_prompt_flush_counter_accumulates() {
+        let m = Metrics::new(1);
+        assert_eq!(m.mover().prompt_flushes(), 0);
+        m.mover().record_prompt_flush();
+        m.clone().mover().record_prompt_flush();
+        assert_eq!(m.mover().prompt_flushes(), 2);
     }
 
     #[test]

@@ -79,7 +79,10 @@ pub use batcher::{Batch, Batcher, OverflowDeque};
 pub use client::{Kernel, PimClient, PimError, Receipt, RowHandle, Ticket};
 pub use control::{ControlConfig, ControlReport, MoverGovernor, QosClass, WindowTuner};
 pub use fabric::{FabricClient, FabricTicket, JobOutput, JobSpec, PimFabric};
-pub use metrics::{FabricCounters, Metrics, MoverCounters, NetCounters, WorkerDelta};
+pub use metrics::{
+    FabricCounters, LockCounters, LockReport, LockSite, LockSiteReport, Metrics, MoverCounters,
+    NetCounters, WorkerDelta,
+};
 pub use mover::MoveStats;
 pub use reorder::{Access, PlanStats, Reorderable};
 pub use router::{Placement, Router};

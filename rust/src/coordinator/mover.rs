@@ -67,10 +67,14 @@ fn copy_kernel() -> Kernel {
 
 /// One background compaction pass over every seat registered on `sys`.
 ///
-/// Per seat (locked one at a time — seat locks never nest): if the seat's
-/// subarray scores at least `threshold`, repeatedly pair the subarray's
-/// lowest free hole with the seat's highest live row above it, claiming
-/// the hole and re-binding the slot under the router lock. The resulting
+/// Per seat (write-locked one at a time — seat locks never nest): if the
+/// seat's subarray scores at least `threshold`, repeatedly pair the
+/// subarray's lowest free hole with the seat's highest live row above it,
+/// claiming the hole and re-binding the slot under the bank's slab lock.
+/// Taking the seat *write* lock is itself the quiesce: it waits out every
+/// in-flight submission holding the read lock, so all requests resolved
+/// against the old coordinates are queued before planning starts. The
+/// resulting
 /// pairs ship as one `CopyRows` fence; sources are freed only after the
 /// fence is queued, so a new tenant's first write is always ordered
 /// behind the copy that still reads the old bits.
@@ -88,27 +92,28 @@ pub(crate) fn defrag_pass(sys: &PimSystem, threshold: usize) -> MoveStats {
     let copy = copy_kernel();
     let mut touched: Vec<usize> = Vec::new();
     for seat in sys.live_seats() {
-        let mut st = seat.lock();
+        let mut st = seat.write();
         if st.owner != sys.core_id() {
             // the seat re-homed to another shard between snapshot and lock
             continue;
         }
         let (bank, subarray) = (st.bank, st.subarray);
-        // plan: claim destinations and re-bind slots under the router lock
+        // plan: claim destinations and re-bind slots under this bank's
+        // slab lock — the only slab any of this seat's rows can live in
         let mut pairs: Vec<(usize, usize)> = Vec::new();
         {
-            let mut router = sys.router_lock();
-            if router.subarray_fragmentation(bank, subarray) >= threshold {
+            let mut slab = sys.router().slab(bank);
+            if slab.fragmentation_of(subarray) >= threshold {
                 loop {
-                    let span = router.span(bank, subarray);
-                    let Some(hole) = router.lowest_free_below(bank, subarray, span) else {
+                    let span = slab.span(subarray);
+                    let Some(hole) = slab.lowest_free_below(subarray, span) else {
                         break;
                     };
                     let Some((slot, src)) = st.highest_live_above(hole) else {
                         break;
                     };
-                    let claimed = router.claim_row(bank, subarray, hole);
-                    debug_assert!(claimed, "hole was free under this router lock");
+                    let claimed = slab.claim(subarray, hole);
+                    debug_assert!(claimed, "hole was free under this slab lock");
                     st.rebind(slot, hole);
                     pairs.push((src, hole));
                 }
@@ -135,7 +140,7 @@ pub(crate) fn defrag_pass(sys: &PimSystem, threshold: usize) -> MoveStats {
         // mover copies ride the Background class: client kernels of any
         // higher class dispatch ahead of a compaction fence whenever the
         // hazard check allows it
-        let (_fire_and_forget, _full) = st.sys.enqueue_wire(
+        let (_fire_and_forget, full) = st.sys.enqueue_wire(
             bank,
             cost,
             QosClass::Background,
@@ -145,12 +150,20 @@ pub(crate) fn defrag_pass(sys: &PimSystem, threshold: usize) -> MoveStats {
         // only now do the sources go back to the slab — an alloc that
         // reuses one enqueues its first write behind the fence
         {
-            let mut router = sys.router_lock();
+            let mut slab = sys.router().slab(bank);
             for &(src, _) in &pairs {
-                let freed = router.free_row(bank, subarray, src);
+                let freed = slab.free(subarray, src);
                 debug_assert!(freed, "source was live until this free");
             }
-            router.trim(bank, subarray);
+            slab.trim(subarray);
+        }
+        // a fence that filled the batch dispatches now, not at end of
+        // pass: the fence is already in the FIFO, so flushing early only
+        // shortens how long a full bank sits on queued work (safe under
+        // the seat lock — dispatch takes no seat locks)
+        if full {
+            sys.metrics().mover().record_prompt_flush();
+            sys.flush_bank_inner(bank);
         }
         stats.plans += 1;
         stats.rows_moved += n;
@@ -233,6 +246,31 @@ mod tests {
         let _rows = c.alloc_rows(8).expect("rows");
         let stats = sys.defrag_now();
         assert_eq!(stats, MoveStats::default(), "nothing to move: {stats:?}");
+        assert!(sys.shutdown().is_clean());
+    }
+
+    #[test]
+    fn full_banks_flush_promptly_inside_the_pass() {
+        // with a one-request batch every fence fills its bank: the pass
+        // must dispatch it on the spot instead of letting it sit until
+        // the end-of-pass sweep
+        let sys = SystemBuilder::new(&DramConfig::tiny_test()).banks(1).max_batch(1).build();
+        let c = sys.client();
+        let mut rows = c.alloc_rows(8).expect("rows");
+        let keep = rows.pop().expect("the top row");
+        let mut rng = Rng::new(79);
+        let keep_bits = BitRow::random(256, &mut rng);
+        c.write_now(&keep, keep_bits.clone()).expect("write");
+        for h in rows {
+            assert!(c.free(h));
+        }
+        let stats = sys.defrag_now();
+        assert!(stats.rows_moved >= 1, "{stats:?}");
+        assert!(
+            sys.metrics().mover().prompt_flushes() >= 1,
+            "a full bank must flush inside the pass"
+        );
+        assert_eq!(c.read_now(&keep).expect("read"), keep_bits, "bits survive the early flush");
         assert!(sys.shutdown().is_clean());
     }
 

@@ -8,7 +8,31 @@
 //! submitted kernel, one per data-movement request), so
 //! [`Placement::LeastLoaded`] balances real work — a shift-by-10 kernel
 //! weighs 40, not 1 — instead of request counts.
+//!
+//! # Lock sharding
+//!
+//! The router is *not* one lock. Sessions on different banks never
+//! serialize against each other here:
+//!
+//! - `load` and `sessions` are per-bank [`AtomicUsize`]s — the wire-path
+//!   [`charge`](Router::charge)/[`drained`](Router::drained) accounting
+//!   and the placement tiebreakers touch no lock at all;
+//! - each bank's [`RowSlab`] sits behind its own mutex, taken only for
+//!   alloc/free/claim and the occupancy gauges of that one bank;
+//! - a small placement mutex covers just the policy decision (the
+//!   round-robin cursor, and the LeastLoaded scan so concurrent opens
+//!   see each other's tiebreaker bump).
+//!
+//! Every acquisition charges the shared
+//! [`LockCounters`](crate::coordinator::metrics::LockCounters) so
+//! contention is observable per site. Lock order is placement → slab
+//! (placement is released before a slab is taken); nothing here takes a
+//! batcher or seat lock.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::coordinator::metrics::LockCounters;
 use crate::dram::address::BankId;
 
 /// Placement policy for new client sessions.
@@ -129,7 +153,10 @@ impl SubarraySlab {
     }
 }
 
-/// Per-bank row slab: one [`SubarraySlab`] per subarray.
+/// Per-bank row slab: one [`SubarraySlab`] per subarray. Lives behind its
+/// bank's mutex in the [`Router`]; the mover holds one guard
+/// ([`Router::slab`]) across an entire compaction plan so the picture it
+/// plans against cannot shift under it.
 #[derive(Debug)]
 pub struct RowSlab {
     subarrays: Vec<SubarraySlab>,
@@ -150,6 +177,64 @@ impl RowSlab {
         self.subarrays.iter().map(|s| s.live).sum()
     }
 
+    /// Allocate one row from a subarray.
+    pub fn alloc(&mut self, subarray: usize) -> Option<usize> {
+        self.subarrays[subarray].alloc()
+    }
+
+    /// Allocate `n` rows from one subarray, all or nothing: either every
+    /// row is handed out under this single slab acquisition or the slab
+    /// is left untouched. The batch path behind
+    /// [`alloc_rows`](crate::coordinator::PimClient::alloc_rows).
+    pub fn alloc_many(&mut self, subarray: usize, n: usize) -> Option<Vec<usize>> {
+        let sa = &mut self.subarrays[subarray];
+        if sa.available() < n {
+            return None;
+        }
+        Some((0..n).map(|_| sa.alloc().expect("capacity checked")).collect())
+    }
+
+    /// Return a row to its subarray; false on double free / foreign row.
+    pub fn free(&mut self, subarray: usize, row: usize) -> bool {
+        self.subarrays[subarray].free(row)
+    }
+
+    /// Claim a specific free row (a compaction destination); false if it
+    /// is already in use.
+    pub fn claim(&mut self, subarray: usize, row: usize) -> bool {
+        self.subarrays[subarray].claim(row)
+    }
+
+    /// One past the highest in-use row of a subarray.
+    pub fn span(&self, subarray: usize) -> usize {
+        self.subarrays[subarray].span()
+    }
+
+    /// The lowest free row strictly below `limit` in a subarray.
+    pub fn lowest_free_below(&self, subarray: usize, limit: usize) -> Option<usize> {
+        self.subarrays[subarray].lowest_free_below(limit)
+    }
+
+    /// Re-anchor a subarray's fresh frontier after compaction.
+    pub fn trim(&mut self, subarray: usize) {
+        self.subarrays[subarray].trim();
+    }
+
+    /// Fragmentation score of one subarray (holes under its span).
+    pub fn fragmentation_of(&self, subarray: usize) -> usize {
+        self.subarrays[subarray].fragmentation()
+    }
+
+    /// Fragmentation summed over this bank's subarrays.
+    pub fn fragmentation(&self) -> usize {
+        self.subarrays.iter().map(|s| s.fragmentation()).sum()
+    }
+
+    /// True when any subarray's score reaches `threshold`.
+    pub fn any_fragmented(&self, threshold: usize) -> bool {
+        self.subarrays.iter().any(|s| s.fragmentation() >= threshold)
+    }
+
     /// The subarray with the most free rows (sessions land there).
     fn roomiest(&self) -> usize {
         self.subarrays
@@ -161,19 +246,29 @@ impl RowSlab {
     }
 }
 
+/// The round-robin cursor, the only placement state that needs a lock.
+#[derive(Debug)]
+struct PlaceState {
+    rr_next: usize,
+}
+
 /// Routes sessions to bank indices `[0, n_banks)` and owns every bank's
-/// row slab.
+/// row slab — sharded per bank, so all methods take `&self` (see the
+/// module docs for the lock layout).
 #[derive(Debug)]
 pub struct Router {
     banks: Vec<BankId>,
     policy: Placement,
-    rr_next: usize,
-    /// queued-cost estimate per bank (charged on submit, relieved on drain)
-    load: Vec<usize>,
-    /// sessions placed per bank — the LeastLoaded tiebreaker, so sessions
-    /// opened on an idle system still spread over banks
-    sessions: Vec<usize>,
-    slabs: Vec<RowSlab>,
+    place: Mutex<PlaceState>,
+    /// queued-cost estimate per bank (charged on submit, relieved on
+    /// drain) — lock-free, the wire hot path touches only this
+    load: Vec<AtomicUsize>,
+    /// *live* sessions placed per bank — the LeastLoaded tiebreaker, so
+    /// sessions opened on an idle system still spread over banks;
+    /// decremented when a seat is released so churn can't skew it
+    sessions: Vec<AtomicUsize>,
+    slabs: Vec<Mutex<RowSlab>>,
+    locks: Arc<LockCounters>,
 }
 
 impl Router {
@@ -189,11 +284,21 @@ impl Router {
         Router {
             banks,
             policy,
-            rr_next: 0,
-            load: vec![0; n],
-            sessions: vec![0; n],
-            slabs: (0..n).map(|_| RowSlab::new(subarrays_per_bank, rows_per_subarray)).collect(),
+            place: Mutex::new(PlaceState { rr_next: 0 }),
+            load: (0..n).map(|_| AtomicUsize::new(0)).collect(),
+            sessions: (0..n).map(|_| AtomicUsize::new(0)).collect(),
+            slabs: (0..n)
+                .map(|_| Mutex::new(RowSlab::new(subarrays_per_bank, rows_per_subarray)))
+                .collect(),
+            locks: Arc::new(LockCounters::default()),
         }
+    }
+
+    /// Charge this router's lock acquisitions to a shared counter block
+    /// (the system's [`Metrics`](crate::coordinator::Metrics) registry)
+    /// instead of the private one `new` starts with.
+    pub fn share_locks(&mut self, locks: Arc<LockCounters>) {
+        self.locks = locks;
     }
 
     pub fn n_banks(&self) -> usize {
@@ -206,59 +311,99 @@ impl Router {
 
     /// Place a new session: choose its bank by policy (`pinned` overrides)
     /// and the subarray with the most free rows within it. LeastLoaded
-    /// orders banks by queued cost, then by sessions already placed — so
-    /// sessions opened on an idle system still spread over banks.
-    pub fn place_session(&mut self, pinned: Option<usize>) -> (usize, usize) {
+    /// orders banks by queued cost, then by live sessions placed — so
+    /// sessions opened on an idle system still spread over banks. The
+    /// placement must be paired with [`release_session`](Self::release_session)
+    /// when the seat dies, or churn skews the tiebreaker.
+    pub fn place_session(&self, pinned: Option<usize>) -> (usize, usize) {
         let bank = match pinned {
             Some(b) => {
                 assert!(b < self.banks.len(), "pinned bank {b} out of range");
+                self.sessions[b].fetch_add(1, Ordering::Relaxed);
                 b
             }
-            None => match self.policy {
-                Placement::Pinned => 0,
-                Placement::RoundRobin => {
-                    let i = self.rr_next;
-                    self.rr_next = (self.rr_next + 1) % self.banks.len();
-                    i
-                }
-                Placement::LeastLoaded => (0..self.banks.len())
-                    .min_by_key(|&i| (self.load[i], self.sessions[i]))
-                    .unwrap(),
-            },
+            None => {
+                let mut place = self.locks.placement.lock(&self.place);
+                let b = match self.policy {
+                    Placement::Pinned => 0,
+                    Placement::RoundRobin => {
+                        let i = place.rr_next;
+                        place.rr_next = (place.rr_next + 1) % self.banks.len();
+                        i
+                    }
+                    Placement::LeastLoaded => (0..self.banks.len())
+                        .min_by_key(|&i| {
+                            (
+                                self.load[i].load(Ordering::Relaxed),
+                                self.sessions[i].load(Ordering::Relaxed),
+                            )
+                        })
+                        .unwrap(),
+                };
+                // bump under the placement lock so concurrent opens see
+                // each other's tiebreaker effect
+                self.sessions[b].fetch_add(1, Ordering::Relaxed);
+                b
+            }
         };
-        self.sessions[bank] += 1;
-        (bank, self.slabs[bank].roomiest())
+        let subarray = self.slab(bank).roomiest();
+        (bank, subarray)
+    }
+
+    /// A placed session ended: release its slot in the per-bank session
+    /// gauge so LeastLoaded keeps reading *live* sessions under churn.
+    /// Saturating — a stray double release cannot wrap the gauge.
+    pub fn release_session(&self, bank: usize) {
+        let _ = self.sessions[bank].fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(1))
+        });
+    }
+
+    /// Live sessions currently placed on a bank.
+    pub fn sessions(&self, bank: usize) -> usize {
+        self.sessions[bank].load(Ordering::Relaxed)
+    }
+
+    /// Lock one bank's row slab (counted). The mover holds this guard
+    /// across a whole compaction plan; everything else should prefer the
+    /// one-shot methods below.
+    pub fn slab(&self, bank: usize) -> MutexGuard<'_, RowSlab> {
+        self.locks.slab.lock(&self.slabs[bank])
     }
 
     /// Allocate one row from a bank's subarray slab.
-    pub fn alloc_row(&mut self, bank: usize, subarray: usize) -> Option<usize> {
-        self.slabs[bank].subarrays[subarray].alloc()
+    pub fn alloc_row(&self, bank: usize, subarray: usize) -> Option<usize> {
+        self.slab(bank).alloc(subarray)
+    }
+
+    /// Allocate `n` rows from a bank's subarray under a single slab
+    /// acquisition, all or nothing.
+    pub fn alloc_rows(&self, bank: usize, subarray: usize, n: usize) -> Option<Vec<usize>> {
+        self.slab(bank).alloc_many(subarray, n)
     }
 
     /// Return a row to its slab; false on double free / foreign row.
-    pub fn free_row(&mut self, bank: usize, subarray: usize, row: usize) -> bool {
-        self.slabs[bank].subarrays[subarray].free(row)
+    pub fn free_row(&self, bank: usize, subarray: usize, row: usize) -> bool {
+        self.slab(bank).free(subarray, row)
     }
 
     /// Claim a specific free row (mover compaction destination); false if
     /// it is already in use.
-    pub fn claim_row(&mut self, bank: usize, subarray: usize, row: usize) -> bool {
-        self.slabs[bank].subarrays[subarray].claim(row)
+    pub fn claim_row(&self, bank: usize, subarray: usize, row: usize) -> bool {
+        self.slab(bank).claim(subarray, row)
     }
 
     /// Fragmentation score of one subarray: freed holes below its highest
     /// in-use row (0 = perfectly packed).
     pub fn subarray_fragmentation(&self, bank: usize, subarray: usize) -> usize {
-        self.slabs[bank].subarrays[subarray].fragmentation()
+        self.slab(bank).fragmentation_of(subarray)
     }
 
     /// Fragmentation score summed over every subarray of every bank — the
     /// system-level gauge `SystemReport::frag_before/after` snapshots.
+    /// Takes each bank's slab lock in turn (never two at once).
     pub fn fragmentation(&self) -> usize {
-        self.slabs
-            .iter()
-            .map(|s| s.subarrays.iter().map(|sa| sa.fragmentation()).sum::<usize>())
-            .sum()
+        (0..self.slabs.len()).map(|b| self.slab(b).fragmentation()).sum()
     }
 
     /// True when any subarray's score reaches `threshold` — the cheap
@@ -266,57 +411,59 @@ impl Router {
     /// (short-circuits on the first hit; a packed slab answers in O(1)
     /// per subarray because its span probe finds the top row immediately).
     pub fn any_fragmented(&self, threshold: usize) -> bool {
-        self.slabs
-            .iter()
-            .any(|s| s.subarrays.iter().any(|sa| sa.fragmentation() >= threshold))
+        (0..self.slabs.len()).any(|b| self.slab(b).any_fragmented(threshold))
     }
 
     /// One past the highest in-use row of a subarray.
     pub fn span(&self, bank: usize, subarray: usize) -> usize {
-        self.slabs[bank].subarrays[subarray].span()
+        self.slab(bank).span(subarray)
     }
 
     /// The lowest free row strictly below `limit` in a subarray.
     pub fn lowest_free_below(&self, bank: usize, subarray: usize, limit: usize) -> Option<usize> {
-        self.slabs[bank].subarrays[subarray].lowest_free_below(limit)
+        self.slab(bank).lowest_free_below(subarray, limit)
     }
 
     /// Re-anchor a subarray's fresh frontier after compaction.
-    pub fn trim(&mut self, bank: usize, subarray: usize) {
-        self.slabs[bank].subarrays[subarray].trim();
+    pub fn trim(&self, bank: usize, subarray: usize) {
+        self.slab(bank).trim(subarray);
     }
 
     /// Allocatable rows left on a bank.
     pub fn rows_available(&self, bank: usize) -> usize {
-        self.slabs[bank].available()
+        self.slab(bank).available()
     }
 
     /// Rows currently allocated across every bank — the leak gauge
     /// `SystemReport::rows_live` snapshots at shutdown (a clean teardown
     /// of every session leaves it at zero).
     pub fn rows_live(&self) -> usize {
-        self.slabs.iter().map(|s| s.live()).sum()
+        (0..self.slabs.len()).map(|b| self.slab(b).live()).sum()
     }
 
-    /// Charge `cost` units of queued work to a bank (on submit).
-    pub fn charge(&mut self, bank: usize, cost: usize) {
-        self.load[bank] += cost;
+    /// Charge `cost` units of queued work to a bank (on submit). Lock-free
+    /// — this is the wire hot path.
+    pub fn charge(&self, bank: usize, cost: usize) {
+        self.load[bank].fetch_add(cost, Ordering::Relaxed);
     }
 
     /// Relieve `cost` units drained from a bank's queue to its worker.
-    pub fn drained(&mut self, bank: usize, cost: usize) {
-        self.load[bank] = self.load[bank].saturating_sub(cost);
+    /// Saturating, lock-free.
+    pub fn drained(&self, bank: usize, cost: usize) {
+        let _ = self.load[bank].fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(cost))
+        });
     }
 
     pub fn load(&self, bank: usize) -> usize {
-        self.load[bank]
+        self.load[bank].load(Ordering::Relaxed)
     }
 
     /// Queued cost summed over every bank — the shard-level load signal
     /// the fabric's two-level `LeastLoaded` placement and steal-victim
-    /// ordering read.
+    /// ordering read. Lock-free.
     pub fn total_load(&self) -> usize {
-        self.load.iter().sum()
+        self.load.iter().map(|l| l.load(Ordering::Relaxed)).sum()
     }
 }
 
@@ -338,21 +485,21 @@ mod tests {
 
     #[test]
     fn round_robin_cycles_sessions() {
-        let mut r = router(4, Placement::RoundRobin);
+        let r = router(4, Placement::RoundRobin);
         let picks: Vec<usize> = (0..8).map(|_| r.place_session(None).0).collect();
         assert_eq!(picks, vec![0, 1, 2, 3, 0, 1, 2, 3]);
     }
 
     #[test]
     fn pinned_overrides_policy() {
-        let mut r = router(4, Placement::RoundRobin);
+        let r = router(4, Placement::RoundRobin);
         assert_eq!(r.place_session(Some(2)).0, 2);
         assert_eq!(r.place_session(Some(2)).0, 2);
     }
 
     #[test]
     fn pinned_policy_single_bank() {
-        let mut r = router(8, Placement::Pinned);
+        let r = router(8, Placement::Pinned);
         for _ in 0..5 {
             assert_eq!(r.place_session(None).0, 0);
         }
@@ -361,7 +508,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "out of range")]
     fn bad_pin_rejected() {
-        let mut r = router(2, Placement::RoundRobin);
+        let r = router(2, Placement::RoundRobin);
         r.place_session(Some(5));
     }
 
@@ -369,7 +516,7 @@ mod tests {
     fn least_loaded_spreads_sessions_on_an_idle_system() {
         // all loads tie at 0: the session-count tiebreaker must still
         // spread placements instead of stacking every session on bank 0
-        let mut r = router(3, Placement::LeastLoaded);
+        let r = router(3, Placement::LeastLoaded);
         let picks: Vec<usize> = (0..6).map(|_| r.place_session(None).0).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
     }
@@ -379,7 +526,7 @@ mod tests {
         // one 100-op kernel on bank 0 outweighs three 5-op kernels on
         // bank 1: the next session must land on neither-loaded bank 2,
         // and the one after that on bank 1 (15 < 100).
-        let mut r = router(3, Placement::LeastLoaded);
+        let r = router(3, Placement::LeastLoaded);
         let (b0, _) = r.place_session(None);
         r.charge(b0, 100);
         let (b1, _) = r.place_session(None);
@@ -399,8 +546,40 @@ mod tests {
     }
 
     #[test]
+    fn release_session_rebalances_least_loaded_after_churn() {
+        // regression: `sessions` used to be a cumulative-ever-placed
+        // counter, so after churn LeastLoaded kept stacking new sessions
+        // by placement history instead of live occupancy
+        let r = router(2, Placement::LeastLoaded);
+        assert_eq!(r.place_session(None).0, 0);
+        assert_eq!(r.place_session(None).0, 1);
+        assert_eq!((r.sessions(0), r.sessions(1)), (1, 1));
+        // the session on bank 1 closes; the next open must land on the
+        // emptied bank, not tie-break back to bank 0
+        r.release_session(1);
+        assert_eq!((r.sessions(0), r.sessions(1)), (1, 0));
+        assert_eq!(r.place_session(None).0, 1);
+        // a stray double release saturates instead of wrapping
+        r.release_session(1);
+        r.release_session(1);
+        r.release_session(1);
+        assert_eq!(r.sessions(1), 0);
+        // pinned placements charge the gauge too
+        r.place_session(Some(0));
+        assert_eq!(r.sessions(0), 2);
+    }
+
+    #[test]
+    fn drained_saturates_at_zero() {
+        let r = router(1, Placement::Pinned);
+        r.charge(0, 5);
+        r.drained(0, 9);
+        assert_eq!(r.load(0), 0);
+    }
+
+    #[test]
     fn slab_allocates_ascending_and_reuses_freed() {
-        let mut r = router(1, Placement::Pinned);
+        let r = router(1, Placement::Pinned);
         let rows: Vec<usize> = (0..4).map(|_| r.alloc_row(0, 0).unwrap()).collect();
         assert_eq!(rows, vec![0, 1, 2, 3]);
         assert!(r.free_row(0, 0, 1));
@@ -411,7 +590,7 @@ mod tests {
 
     #[test]
     fn slab_exhausts_cleanly() {
-        let mut r = router(1, Placement::Pinned);
+        let r = router(1, Placement::Pinned);
         for _ in 0..8 {
             assert!(r.alloc_row(0, 0).is_some());
         }
@@ -422,8 +601,25 @@ mod tests {
     }
 
     #[test]
+    fn alloc_rows_batch_is_all_or_nothing() {
+        let r = router(1, Placement::Pinned);
+        let first = r.alloc_rows(0, 0, 5).expect("5 of 8 rows fit");
+        assert_eq!(first, vec![0, 1, 2, 3, 4]);
+        // 3 rows left: a batch of 4 must fail without consuming any
+        assert_eq!(r.alloc_rows(0, 0, 4), None);
+        assert_eq!(r.rows_available(0), 3 + 8, "failed batch left the slab untouched");
+        assert_eq!(r.alloc_rows(0, 0, 3), Some(vec![5, 6, 7]));
+        assert_eq!(r.alloc_rows(0, 0, 1), None, "exhausted");
+        assert_eq!(r.alloc_rows(0, 0, 0), Some(vec![]), "empty batch is trivially satisfied");
+        // freed rows participate in batches (LIFO reuse before fresh)
+        assert!(r.free_row(0, 0, 2));
+        assert!(r.free_row(0, 0, 6));
+        assert_eq!(r.alloc_rows(0, 0, 2), Some(vec![6, 2]));
+    }
+
+    #[test]
     fn fragmentation_counts_holes_under_the_span() {
-        let mut r = router(1, Placement::Pinned);
+        let r = router(1, Placement::Pinned);
         for _ in 0..6 {
             r.alloc_row(0, 0);
         }
@@ -444,7 +640,7 @@ mod tests {
 
     #[test]
     fn claim_takes_a_specific_hole_and_rejects_live_rows() {
-        let mut r = router(1, Placement::Pinned);
+        let r = router(1, Placement::Pinned);
         for _ in 0..4 {
             r.alloc_row(0, 0);
         }
@@ -461,7 +657,7 @@ mod tests {
 
     #[test]
     fn trim_reanchors_the_fresh_frontier_after_compaction() {
-        let mut r = router(1, Placement::Pinned);
+        let r = router(1, Placement::Pinned);
         for _ in 0..8 {
             r.alloc_row(0, 0);
         }
@@ -480,11 +676,33 @@ mod tests {
 
     #[test]
     fn sessions_land_on_the_roomiest_subarray() {
-        let mut r = router(1, Placement::Pinned);
+        let r = router(1, Placement::Pinned);
         for _ in 0..3 {
             r.alloc_row(0, 0);
         }
         let (_, sa) = r.place_session(None);
         assert_eq!(sa, 1, "subarray 1 has more free rows");
+    }
+
+    #[test]
+    fn wire_path_accounting_is_lock_free_and_concurrent() {
+        let r = Arc::new(router(2, Placement::LeastLoaded));
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let r = r.clone();
+                std::thread::spawn(move || {
+                    let bank = t % 2;
+                    for _ in 0..1000 {
+                        r.charge(bank, 3);
+                        r.drained(bank, 3);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!((r.load(0), r.load(1)), (0, 0));
+        assert_eq!(r.total_load(), 0);
     }
 }

@@ -36,7 +36,7 @@
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex, MutexGuard, Weak};
+use std::sync::{Arc, Mutex, Weak};
 use std::thread::JoinHandle;
 
 use crate::config::DramConfig;
@@ -46,7 +46,7 @@ use crate::coordinator::control::{
     ControlConfig, ControlReport, MoverGovernor, QosClass, WindowTuner,
 };
 use crate::coordinator::fabric::PimFabric;
-use crate::coordinator::metrics::{Metrics, WorkerDelta};
+use crate::coordinator::metrics::{LockReport, Metrics, WorkerDelta};
 use crate::coordinator::mover::{self, MoveStats};
 use crate::coordinator::reorder::{self, Access, Reorderable};
 use crate::coordinator::router::{Placement, Router};
@@ -211,6 +211,10 @@ pub struct SystemReport {
     /// window retunes, per-class sheds, governor decisions (all zero when
     /// neither QoS nor the controller were used)
     pub control: ControlReport,
+    /// per-site lock acquisition/contention totals (placement, per-bank
+    /// slab and batcher locks, seat read/write) — the serialization gauge
+    /// the sharded coordinator is judged by; a fabric sums it over shards
+    pub locks: LockReport,
 }
 
 impl SystemReport {
@@ -548,17 +552,18 @@ impl SystemBuilder {
             senders.push(tx);
         }
 
-        let router = Router::new(
+        let mut router = Router::new(
             banks,
             self.placement,
             self.cfg.geometry.subarrays_per_bank,
             self.cfg.geometry.rows_per_subarray,
         );
+        router.share_locks(metrics.locks().clone());
         let sys = PimSystem {
             core: Arc::new(Core {
                 id: NEXT_CORE_ID.fetch_add(1, Ordering::Relaxed),
                 shard_index: self.shard_index,
-                router: Mutex::new(router),
+                router,
                 batchers: (0..n_banks)
                     .map(|b| Mutex::new(Batcher::new(b, self.max_batch)))
                     .collect(),
@@ -626,7 +631,7 @@ fn controller_loop(core: Weak<Core>, cfg: ControlConfig, stop: Arc<AtomicBool>) 
         // limiter. Each permit is good for exactly one pass (the gate is
         // consumed by `maybe_defrag`).
         if core.defrag {
-            let frag = core.router.lock().unwrap().fragmentation();
+            let frag = core.router.fragmentation();
             let permitted =
                 governor.permit(frag, core.defrag_threshold, std::time::Instant::now());
             m.control().record_mover_decision(permitted);
@@ -673,7 +678,10 @@ struct Core {
     id: usize,
     /// fabric shard index stamped onto this core's seats (0 standalone)
     shard_index: usize,
-    router: Mutex<Router>,
+    /// sharded internally (placement lock + per-bank slab locks +
+    /// lock-free load/session atomics) — no outer mutex; see
+    /// [`crate::coordinator::router`]
+    router: Router,
     batchers: Vec<Mutex<Batcher<Envelope>>>,
     max_batch: usize,
     /// the live reorder window — atomic so the feedback controller can
@@ -738,7 +746,7 @@ impl PimSystem {
 
     /// Place a new seat on this core and register it with the mover.
     fn open_seat(&self, pinned: Option<usize>) -> Arc<SessionSeat> {
-        let (bank, subarray) = self.core.router.lock().unwrap().place_session(pinned);
+        let (bank, subarray) = self.core.router.place_session(pinned);
         let seat =
             SessionSeat::new(self.clone(), self.core.shard_index, bank, subarray, self.core.id);
         self.register_seat(&seat);
@@ -764,14 +772,22 @@ impl PimSystem {
         self.core.id
     }
 
-    /// The locked router (the mover plans compactions under it).
-    pub(crate) fn router_lock(&self) -> MutexGuard<'_, Router> {
-        self.core.router.lock().unwrap()
+    /// The sharded router (the mover locks one bank's slab through it to
+    /// plan compactions).
+    pub(crate) fn router(&self) -> &Router {
+        &self.core.router
     }
 
     /// Place a re-homed seat: policy-chosen bank + roomiest subarray.
     pub(crate) fn place_for_rehome(&self) -> (usize, usize) {
-        self.core.router.lock().unwrap().place_session(None)
+        self.core.router.place_session(None)
+    }
+
+    /// A placed seat died (client drop, connection teardown, or a failed
+    /// re-home rollback): release its slot in the router's per-bank
+    /// session gauge so LeastLoaded placement keeps seeing live sessions.
+    pub(crate) fn release_placement(&self, bank: usize) {
+        self.core.router.release_session(bank);
     }
 
     pub fn n_banks(&self) -> usize {
@@ -797,31 +813,43 @@ impl PimSystem {
     /// load the fabric's placement and steal-victim ordering add to its
     /// own deque costs.
     pub(crate) fn queued_cost(&self) -> usize {
-        self.core.router.lock().unwrap().total_load()
+        self.core.router.total_load()
     }
 
     /// Allocate one concrete row from a bank's slab (the seat binds it to
     /// a logical slot).
     pub(crate) fn alloc_concrete(&self, bank: usize, subarray: usize) -> Option<usize> {
-        self.core.router.lock().unwrap().alloc_row(bank, subarray)
+        self.core.router.alloc_row(bank, subarray)
+    }
+
+    /// Allocate `n` concrete rows from one bank's subarray under a single
+    /// slab acquisition, all or nothing — the batch path behind
+    /// [`PimClient::alloc_rows`](crate::coordinator::PimClient::alloc_rows).
+    pub(crate) fn alloc_concrete_many(
+        &self,
+        bank: usize,
+        subarray: usize,
+        n: usize,
+    ) -> Option<Vec<usize>> {
+        self.core.router.alloc_rows(bank, subarray, n)
     }
 
     /// Return a concrete row to its slab.
     pub(crate) fn free_concrete(&self, bank: usize, subarray: usize, row: usize) -> bool {
-        self.core.router.lock().unwrap().free_row(bank, subarray, row)
+        self.core.router.free_row(bank, subarray, row)
     }
 
     /// Fragmentation score over every subarray of every bank: freed holes
     /// below the live span (0 = perfectly packed). The gauge the mover
     /// drives down and `SystemReport::frag_before/after` snapshot.
     pub fn fragmentation_score(&self) -> usize {
-        self.core.router.lock().unwrap().fragmentation()
+        self.core.router.fragmentation()
     }
 
     /// Short-circuiting check: does any subarray score at least
     /// `threshold`? The defrag pass's cheap front gate.
     pub(crate) fn any_fragmented(&self, threshold: usize) -> bool {
-        self.core.router.lock().unwrap().any_fragmented(threshold)
+        self.core.router.any_fragmented(threshold)
     }
 
     /// Run one full compaction pass right now (any hole below a live span
@@ -889,9 +917,12 @@ impl PimSystem {
         req: PimRequest,
     ) -> (Receiver<Result<PimResponse, PimError>>, bool) {
         let (tx, rx) = channel();
-        self.core.router.lock().unwrap().charge(bank, cost);
+        // lock-free load accounting: the wire hot path touches no router
+        // lock, only this bank's batcher mutex (the charge happens-before
+        // the push, so a drain can never relieve more than was charged)
+        self.core.router.charge(bank, cost);
         let full = {
-            let mut b = self.core.batchers[bank].lock().unwrap();
+            let mut b = self.core.metrics.locks().batcher.lock(&self.core.batchers[bank]);
             b.push(Envelope { req, cost, access, class, merged: false, respond: tx });
             b.len() >= self.core.max_batch
         };
@@ -931,11 +962,11 @@ impl PimSystem {
     /// same bank (a fabric dispatcher and a user session, say) could
     /// deliver their drained batches out of order — breaking the per-bank
     /// FIFO that every hazard guarantee of the reorder planner builds on.
-    /// (Safe: nothing takes the batcher lock while holding the router
-    /// lock, and the worker channel send never blocks.)
+    /// (Safe: nothing takes a batcher lock while holding a slab lock,
+    /// and the worker channel send never blocks.)
     pub(crate) fn flush_bank_inner(&self, bank: usize) {
         loop {
-            let mut batcher = self.core.batchers[bank].lock().unwrap();
+            let mut batcher = self.core.metrics.locks().batcher.lock(&self.core.batchers[bank]);
             match batcher.drain() {
                 Some(b) => self.dispatch(bank, b),
                 None => break,
@@ -979,7 +1010,7 @@ impl PimSystem {
                 }
             }
         }
-        self.core.router.lock().unwrap().drained(bank, cost);
+        self.core.router.drained(bank, cost);
     }
 
     /// Flush, stop workers, and produce the final report. Worker panics
@@ -1009,7 +1040,7 @@ impl PimSystem {
         }
         let m = &self.core.metrics;
         let cache = self.core.cache.stats();
-        let rows_live = self.core.router.lock().unwrap().rows_live() as u64;
+        let rows_live = self.core.router.rows_live() as u64;
         SystemReport {
             banks: m.n_banks(),
             requests: m.total_requests(),
@@ -1039,6 +1070,7 @@ impl PimSystem {
             frag_after: m.mover().frag_after(),
             rows_live,
             control: m.control().report(self.reorder_window()),
+            locks: m.lock_report(),
         }
     }
 
@@ -1732,5 +1764,33 @@ mod tests {
         let report = sys.shutdown();
         assert_eq!(report.kernels, 16);
         assert!(report.is_clean());
+    }
+
+    #[test]
+    fn closed_sessions_release_their_placement() {
+        // regression: the per-bank session gauge only ever went up, so
+        // after enough churn LeastLoaded saw every bank as crowded by
+        // ghosts and piled new sessions onto whichever came first
+        let sys = SystemBuilder::new(&cfg())
+            .banks(2)
+            .placement(Placement::LeastLoaded)
+            .build();
+        let a = sys.client();
+        let b = sys.client();
+        assert_ne!(a.bank(), b.bank(), "two idle banks take one session each");
+        let vacated = b.bank();
+        drop(b);
+        let c = sys.client();
+        assert_eq!(c.bank(), vacated, "the vacated bank is the emptiest again");
+        // churn a stack of short-lived sessions: the gauge must come back
+        // to exactly the two survivors
+        for _ in 0..16 {
+            let ephemeral = sys.client();
+            let h = ephemeral.alloc().unwrap();
+            assert!(ephemeral.free(h));
+        }
+        let counts: Vec<usize> = (0..2).map(|bk| sys.router().sessions(bk)).collect();
+        assert_eq!(counts.iter().sum::<usize>(), 2, "only a and c remain seated: {counts:?}");
+        assert!(sys.shutdown().is_clean());
     }
 }

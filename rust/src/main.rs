@@ -28,7 +28,9 @@
 use shiftdram::circuit::montecarlo::{Backend, MonteCarlo};
 use shiftdram::circuit::params::TechNode;
 use shiftdram::config::{DramConfig, McConfig};
-use shiftdram::coordinator::{ControlConfig, ControlReport, Kernel, QosClass, SystemBuilder};
+use shiftdram::coordinator::{
+    ControlConfig, ControlReport, Kernel, LockReport, QosClass, SystemBuilder,
+};
 use shiftdram::pim::OptLevel;
 use shiftdram::report;
 use shiftdram::runtime::Runtime;
@@ -313,6 +315,26 @@ fn main() {
     }
 }
 
+/// One line of lock telemetry: acquisitions and contended waits per
+/// coordinator lock site — the serialization gauge the sharded
+/// coordinator is judged by.
+fn print_locks(l: &LockReport) {
+    println!(
+        "locks: placement {}/{}, slab {}/{}, batcher {}/{}, \
+         seat r {}/{} w {}/{} (contended/acquired)",
+        l.placement.contended,
+        l.placement.acquired,
+        l.slab.contended,
+        l.slab.acquired,
+        l.batcher.contended,
+        l.batcher.acquired,
+        l.seat_read.contended,
+        l.seat_read.acquired,
+        l.seat_write.contended,
+        l.seat_write.acquired
+    );
+}
+
 /// One line of controller telemetry, shared by every serve path.
 fn print_control(c: &ControlReport) {
     println!(
@@ -472,6 +494,7 @@ fn serve_net(
         100.0 * r.cache_hit_rate,
         r.rows_live
     );
+    print_locks(&r.locks);
     if controller {
         print_control(&r.control);
     }
@@ -584,6 +607,7 @@ fn loadgen_cmd(cfg: &DramConfig, args: &[String]) {
         let r = server.shutdown();
         rows_leaked = r.rows_live;
         println!("in-process server: {} kernels served, {} rows live", r.kernels, r.rows_live);
+        print_locks(&r.locks);
         if !r.is_clean() {
             eprintln!("worker failures: {:?}", r.worker_failures);
             std::process::exit(1);
