@@ -1,11 +1,15 @@
 //! Bench: row-mover churn — a seeded alloc/free/submit storm served with
-//! the background defragmenter off vs on. Measures the wall-clock cost of
-//! migrating placement under live traffic and reports what the mover
-//! bought (fragmentation before/after) and what it cost (simulated
-//! makespan delta from the copy fences).
+//! the background defragmenter off vs on, and (defrag on) with migration
+//! fences priced as barriers vs as hazard edges (`--overlap`). Measures
+//! the wall-clock cost of migrating placement under live traffic and
+//! reports what the mover bought (fragmentation before/after), what it
+//! cost (simulated makespan delta from the copy fences), and what the
+//! overlap path clawed back (makespan with the same fences hidden behind
+//! disjoint compute).
 //!
 //! Emits `BENCH_defrag.json` (machine-readable measurements + metrics)
-//! via `util::benchx::JsonReport`; CI uploads it as an artifact.
+//! and `BENCH_overlap.json` (the overlap-axis slice) via
+//! `util::benchx::JsonReport`; CI uploads both as artifacts.
 
 use shiftdram::config::DramConfig;
 use shiftdram::coordinator::{Kernel, RowHandle, SystemBuilder, SystemReport};
@@ -19,14 +23,18 @@ const ACTIONS: usize = 1500;
 
 /// One churn run: seeded storm of allocs, writes, frees, and shift
 /// kernels over several sessions, ending in a deliberately fragmented
-/// state (half of every session's handles freed, oldest first). Returns
-/// the final fragmentation score, a checksum row, and the report.
-fn churn(defrag: bool, seed: u64) -> (usize, BitRow, SystemReport) {
+/// state (half of every session's handles freed, oldest first), then a
+/// post-defrag compute wave over the survivors (the traffic a hazard-edge
+/// fence hides behind). Returns the final fragmentation score, a checksum
+/// row, and the report. `overlap` is set explicitly so the axis stays
+/// controlled regardless of `PIM_OVERLAP` in the environment.
+fn churn(defrag: bool, overlap: bool, seed: u64) -> (usize, BitRow, SystemReport) {
     let sys = SystemBuilder::new(&DramConfig::tiny_test())
         .banks(4)
         .max_batch(8)
         .defrag(defrag)
         .defrag_threshold(1)
+        .overlap(overlap)
         .build();
     let clients: Vec<_> = (0..SESSIONS).map(|_| sys.client()).collect();
     let mut rng = Rng::new(seed);
@@ -70,6 +78,17 @@ fn churn(defrag: bool, seed: u64) -> (usize, BitRow, SystemReport) {
     if defrag {
         sys.defrag_now();
     }
+    // compute wave behind the final fences: every surviving handle gets
+    // shifted a few more times, so an overlapped copy has foreground
+    // work to hide under (and a barrier copy has work to stall)
+    for _ in 0..3 {
+        for (s, hs) in handles.iter().enumerate() {
+            for h in hs {
+                clients[s].submit(&shift, std::slice::from_ref(h));
+            }
+        }
+    }
+    sys.flush();
     // checksum: first surviving handle's bits (bit-exactness across runs)
     let checksum = handles
         .iter()
@@ -82,52 +101,111 @@ fn churn(defrag: bool, seed: u64) -> (usize, BitRow, SystemReport) {
 
 fn main() {
     let mut jr = JsonReport::new("defrag");
-    println!("=== row-mover churn: defrag off vs on ===");
-    let (frag_off, sum_off, off) = churn(false, 2024);
-    let (frag_on, sum_on, on) = churn(true, 2024);
+    println!("=== row-mover churn: defrag off vs on vs on+overlap ===");
+    let (frag_off, sum_off, off) = churn(false, false, 2024);
+    let (frag_on, sum_on, on) = churn(true, false, 2024);
+    let (frag_ov, sum_ov, ov) = churn(true, true, 2024);
     assert_eq!(sum_off, sum_on, "migration must be invisible in the data");
+    assert_eq!(sum_on, sum_ov, "overlap must be invisible in the data");
+    assert_eq!(frag_on, frag_ov, "overlap must not change what the mover does");
     assert!(
         frag_on <= frag_off && (frag_off == 0 || frag_on < frag_off),
         "the mover must strictly lower fragmentation: {frag_on} vs {frag_off}"
     );
     assert!(on.rows_migrated > 0, "the storm must exercise live migration");
     assert_eq!(off.moves, 0);
+    // the overlap acceptance gate: fences actually hid behind compute,
+    // every fence was classified, and the same storm finished strictly
+    // sooner than with barrier fences
+    assert!(ov.overlapped_moves > 0, "the storm must hide at least one fence behind compute");
+    assert_eq!(
+        ov.overlapped_moves + ov.stalled_moves,
+        ov.moves,
+        "every migration fence must be classified overlapped or stalled"
+    );
+    assert!(
+        ov.makespan_ps < on.makespan_ps,
+        "hazard-edge fences must strictly beat barrier fences: {} vs {} ps",
+        ov.makespan_ps,
+        on.makespan_ps
+    );
     println!(
-        "off: frag {frag_off}, makespan {:.3} us, {} kernels",
+        "off:     frag {frag_off}, makespan {:.3} us, {} kernels",
         off.makespan_ps as f64 / 1e6,
         off.kernels
     );
     println!(
-        "on:  frag {frag_on}, makespan {:.3} us, {} kernels, {} plans / {} rows migrated",
+        "on:      frag {frag_on}, makespan {:.3} us, {} kernels, {} plans / {} rows migrated",
         on.makespan_ps as f64 / 1e6,
         on.kernels,
         on.moves,
         on.rows_migrated
+    );
+    println!(
+        "overlap: frag {frag_ov}, makespan {:.3} us, {} fences hidden / {} stalled, \
+         {:.3} us of copy latency never reached the clock",
+        ov.makespan_ps as f64 / 1e6,
+        ov.overlapped_moves,
+        ov.stalled_moves,
+        ov.overlap_cycles_saved as f64 / 1e6
     );
     let overhead = if off.makespan_ps == 0 {
         0.0
     } else {
         on.makespan_ps as f64 / off.makespan_ps as f64 - 1.0
     };
+    let clawback = if on.makespan_ps == 0 {
+        0.0
+    } else {
+        1.0 - ov.makespan_ps as f64 / on.makespan_ps as f64
+    };
     println!("simulated makespan overhead of migration: {:.2}%", overhead * 100.0);
+    println!("overlap claws back {:.2}% of the defrag-on makespan", clawback * 100.0);
     jr.metric("frag_off", frag_off as f64);
     jr.metric("frag_on", frag_on as f64);
     jr.metric("rows_migrated", on.rows_migrated as f64);
     jr.metric("move_plans", on.moves as f64);
     jr.metric("makespan_overhead_pct", overhead * 100.0);
+    jr.metric("makespan_on_us", on.makespan_ps as f64 / 1e6);
+    jr.metric("makespan_overlap_us", ov.makespan_ps as f64 / 1e6);
+    jr.metric("overlap_clawback_pct", clawback * 100.0);
+    jr.metric("overlapped_moves", ov.overlapped_moves as f64);
+    jr.metric("stalled_moves", ov.stalled_moves as f64);
+    jr.metric("overlap_saved_us", ov.overlap_cycles_saved as f64 / 1e6);
 
-    // wall-clock of the storm itself, off vs on
+    // wall-clock of the storm itself, off vs on vs on+overlap
     let b = Bench::quick();
     let mut seed = 1u64;
     jr.push(&b.run_elems("churn/defrag_off", ACTIONS as u64, || {
         seed += 1;
-        churn(false, seed)
+        churn(false, false, seed)
     }));
     jr.push(&b.run_elems("churn/defrag_on", ACTIONS as u64, || {
         seed += 1;
-        churn(true, seed)
+        churn(true, false, seed)
     }));
 
     let path = jr.write().expect("write bench json");
     println!("\nwrote {}", path.display());
+
+    // the overlap-axis slice in its own artifact: the simulated-makespan
+    // comparison plus the wall-clock of the same defrag-on storm with
+    // fences priced as barriers vs as hazard edges
+    let mut jo = JsonReport::new("overlap");
+    jo.metric("makespan_serial_us", on.makespan_ps as f64 / 1e6);
+    jo.metric("makespan_overlap_us", ov.makespan_ps as f64 / 1e6);
+    jo.metric("overlap_clawback_pct", clawback * 100.0);
+    jo.metric("overlapped_moves", ov.overlapped_moves as f64);
+    jo.metric("stalled_moves", ov.stalled_moves as f64);
+    jo.metric("overlap_saved_us", ov.overlap_cycles_saved as f64 / 1e6);
+    jo.push(&b.run_elems("churn/overlap_off", ACTIONS as u64, || {
+        seed += 1;
+        churn(true, false, seed)
+    }));
+    jo.push(&b.run_elems("churn/overlap_on", ACTIONS as u64, || {
+        seed += 1;
+        churn(true, true, seed)
+    }));
+    let path = jo.write().expect("write overlap bench json");
+    println!("wrote {}", path.display());
 }

@@ -245,6 +245,15 @@ impl<T> OverflowDeque<T> {
         (taken_rev, skipped)
     }
 
+    /// Inspect (and annotate) the first `n` queued items in place without
+    /// dequeuing — the fabric's input-prefetch stager walks the next
+    /// `prefetch_depth` entries and stages their operand rows while the
+    /// dispatcher is still busy with the current run. Order, membership,
+    /// and queued cost are untouched.
+    pub fn peek_front_mut(&mut self, n: usize) -> impl Iterator<Item = &mut T> {
+        self.items.iter_mut().take(n).map(|(item, _)| item)
+    }
+
     /// Total cost units queued (the steal-victim ordering key).
     pub fn queued_cost(&self) -> usize {
         self.queued_cost
@@ -497,6 +506,26 @@ mod tests {
         assert_eq!(got, Some(("a1", 1, false)));
         assert_eq!(skipped, 0);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn peek_front_mut_annotates_in_place_without_dequeuing() {
+        let mut q: OverflowDeque<(&'static str, bool)> = OverflowDeque::new();
+        q.push_back(("a", false), 2);
+        q.push_back(("b", false), 3);
+        q.push_back(("c", false), 4);
+        // stage the first two entries in place
+        for item in q.peek_front_mut(2) {
+            item.1 = true;
+        }
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.queued_cost(), 9, "peeking moves no cost");
+        assert_eq!(q.pop_front(), Some(("a", true)));
+        assert_eq!(q.pop_front(), Some(("b", true)));
+        assert_eq!(q.pop_front(), Some(("c", false)), "beyond the depth: untouched");
+        // over-asking is clamped to the queue length
+        q.push_back(("d", false), 1);
+        assert_eq!(q.peek_front_mut(10).count(), 1);
     }
 
     #[test]

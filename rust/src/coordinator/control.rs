@@ -220,6 +220,14 @@ impl WindowTuner {
 /// borderline seat from ping-ponging. Independently, permitted moves are
 /// spaced at least `min_move_interval` apart, so churny traffic cannot
 /// make the mover thrash no matter what the model says.
+///
+/// With overlap pricing live the model learns from the observed outcome
+/// of past moves ([`Self::observe_overlap`]): a copy that fully hid
+/// behind disjoint compute cost almost nothing, a copy something had to
+/// wait out cost full freight. The modeled per-row cost is discounted by
+/// the hidden fraction (floored at 1/8 — even a perfectly overlapped
+/// mover still occupies its subarray), so a mover whose fences keep
+/// disappearing into compute gets progressively cheaper to engage.
 #[derive(Debug)]
 pub struct MoverGovernor {
     copy_cost_per_row: usize,
@@ -227,6 +235,9 @@ pub struct MoverGovernor {
     min_move_interval: Duration,
     engaged: bool,
     last_move: Option<Instant>,
+    /// cumulative overlapped/stalled move counts last observed
+    seen_overlapped: u64,
+    seen_stalled: u64,
 }
 
 impl MoverGovernor {
@@ -237,7 +248,29 @@ impl MoverGovernor {
             min_move_interval: cfg.min_move_interval,
             engaged: false,
             last_move: None,
+            seen_overlapped: 0,
+            seen_stalled: 0,
         }
+    }
+
+    /// Feed the observed overlap outcome (cumulative counters from
+    /// `MoverCounters`): the controller calls this every tick when overlap
+    /// pricing is on, and [`Self::permit`] discounts its modeled copy
+    /// cost by the fraction of moves that turned out hidden.
+    pub fn observe_overlap(&mut self, overlapped: u64, stalled: u64) {
+        self.seen_overlapped = overlapped;
+        self.seen_stalled = stalled;
+    }
+
+    /// The learned cost multiplier in eighths: 8 with no overlap signal
+    /// (or everything stalled), down to 1 when every observed move hid.
+    fn cost_factor_eighths(&self) -> usize {
+        let total = self.seen_overlapped + self.seen_stalled;
+        if total == 0 {
+            return 8;
+        }
+        let hidden_eighths = (8 * self.seen_overlapped / total) as usize;
+        (8 - hidden_eighths).max(1)
     }
 
     /// Decide one candidate migration: `gain` is the cost-unit imbalance
@@ -245,7 +278,10 @@ impl MoverGovernor {
     /// `rows_to_move` is how many rows it would copy. `true` also
     /// consumes a rate-limiter slot.
     pub fn permit(&mut self, gain: usize, rows_to_move: usize, now: Instant) -> bool {
-        let cost = rows_to_move.saturating_mul(self.copy_cost_per_row);
+        let raw = rows_to_move.saturating_mul(self.copy_cost_per_row);
+        // overlap pricing: moves that historically hid behind compute are
+        // modeled as nearly free, moves that stalled keep full freight
+        let cost = (raw.saturating_mul(self.cost_factor_eighths()) / 8).max(raw.min(1));
         // hysteresis: engage high, disengage low
         if self.engaged {
             if gain < cost {
@@ -488,6 +524,34 @@ mod tests {
             }
         }
         assert!(moved <= 11, "rate limiter bounds thrash: {moved} moves in 1s");
+    }
+
+    #[test]
+    fn governor_discounts_cost_after_observed_overlap() {
+        let cfg = ControlConfig { min_move_interval: Duration::ZERO, ..ControlConfig::default() };
+        let mut g = MoverGovernor::new(&cfg);
+        let now = Instant::now();
+        // raw model: 10 rows cost 10, engage needs gain ≥ 20
+        assert!(!g.permit(10, 10, now), "raw cost model vetoes gain 10");
+        // every observed move hid behind compute: cost shrinks to ~1/8
+        g.observe_overlap(8, 0);
+        assert!(g.permit(10, 10, now), "overlapped history makes the same move cheap");
+        // a mover that always stalls pays full freight again
+        let mut g = MoverGovernor::new(&cfg);
+        g.observe_overlap(0, 8);
+        assert!(!g.permit(10, 10, now), "stalled history keeps the raw cost");
+        assert!(g.permit(20, 10, now), "…but the raw threshold still engages");
+    }
+
+    #[test]
+    fn governor_overlap_discount_is_proportional() {
+        let cfg = ControlConfig { min_move_interval: Duration::ZERO, ..ControlConfig::default() };
+        let mut g = MoverGovernor::new(&cfg);
+        let now = Instant::now();
+        // half the moves hid: cost 10 → 5, engage threshold 20 → 10
+        g.observe_overlap(4, 4);
+        assert!(!g.permit(9, 10, now));
+        assert!(g.permit(10, 10, now));
     }
 
     #[test]

@@ -68,6 +68,20 @@
 //! exhaust a row slab, the group falls back to job-at-a-time execution,
 //! so merged dispatch never fails work FIFO dispatch would have served.
 //!
+//! **Input prefetch**
+//! ([`crate::coordinator::SystemBuilder::prefetch_depth`]). While a
+//! dispatcher executes the head of its deque, it stages the input rows
+//! of up to `prefetch_depth` queued unplaced jobs behind the head: a
+//! background-class session allocates the rows and fires the writes, so
+//! by the time the job reaches the front its operands are already
+//! resident on the shard's banks — and any migration fence those writes
+//! queued behind has already been absorbed by the bank's overlap
+//! timeline instead of stalling the job's first touch. A staged job's
+//! rows live on the staging shard, so it is pinned against stealing
+//! from that point on; `prefetched_rows` counts the staged traffic, and
+//! slab pressure simply stops the staging scan (execution then
+//! allocates lazily, exactly as without prefetch).
+//!
 //! [`PimFabric::shutdown`] drains every deque, joins the dispatchers, and
 //! aggregates the per-shard [`SystemReport`]s into one report whose
 //! `shards` vector carries the per-shard breakdowns and whose
@@ -196,10 +210,23 @@ impl<T> FabricTicket<T> {
     }
 }
 
-/// An unplaced job queued on its home shard (the stealable task kind).
+/// Input rows a dispatcher staged for a queued job ahead of execution:
+/// the background session that owns them, the allocated handles (one per
+/// recording row), and the in-flight write tickets. Execution consumes
+/// them in place of its own alloc+write phase.
+struct StagedInputs {
+    client: PimClient,
+    rows: Vec<RowHandle>,
+    writes: Vec<Ticket<()>>,
+}
+
+/// An unplaced job queued on its home shard (the stealable task kind —
+/// until a prefetch pass stages its inputs, which pins it to the staging
+/// shard's banks).
 struct FabricJob {
     spec: JobSpec,
     home: usize,
+    staged: Option<StagedInputs>,
     respond: Sender<Result<JobOutput, PimError>>,
 }
 
@@ -234,11 +261,14 @@ impl ShardQueue {
 
 /// Whether two queued tasks may ride one merged run: both unplaced jobs,
 /// same kernel shape (⇒ one compiled program serves both). Pinned tasks
-/// never merge — and never migrate.
+/// never merge — and never migrate. A staged job already owns its rows,
+/// so it executes alone through the staged path instead of merging.
 fn mergeable(a: &FabricTask, b: &FabricTask) -> bool {
     match (a, b) {
         (FabricTask::Job(x), FabricTask::Job(y)) => {
-            x.spec.kernel.shape() == y.spec.kernel.shape()
+            x.staged.is_none()
+                && y.staged.is_none()
+                && x.spec.kernel.shape() == y.spec.kernel.shape()
         }
         _ => false,
     }
@@ -347,8 +377,53 @@ impl FabricCore {
     fn enqueue_job(&self, home: usize, spec: JobSpec) -> FabricTicket<JobOutput> {
         let (tx, rx) = channel();
         let cost = spec.cost();
-        self.push(home, FabricTask::Job(FabricJob { spec, home, respond: tx }), cost);
+        self.push(
+            home,
+            FabricTask::Job(FabricJob { spec, home, staged: None, respond: tx }),
+            cost,
+        );
         FabricTicket { rx }
+    }
+
+    /// The dispatcher's prefetch pass: stage the input rows of up to
+    /// `depth` queued unplaced jobs behind `shard`'s deque head. Each
+    /// staged job gets a background-class session, its rows allocated up
+    /// front, and its input writes fired onto the wire — so the writes
+    /// ride the bank FIFO (and the overlap timeline) while the head
+    /// executes, and the job starts with resident operands. Slab
+    /// pressure stops the scan: an unstaged job just allocates lazily at
+    /// execution, exactly as without prefetch.
+    fn prefetch(&self, shard: usize, depth: usize) {
+        if depth == 0 {
+            return;
+        }
+        let mut staged_rows = 0u64;
+        {
+            let mut dq = self.queues[shard].deque.lock().unwrap();
+            for task in dq.peek_front_mut(depth) {
+                let FabricTask::Job(job) = task else { continue };
+                if job.staged.is_some() || job.spec.inputs.is_empty() {
+                    continue;
+                }
+                let client = self.shards[shard].client();
+                client.set_qos(QosClass::Background);
+                let Ok(rows) = client.alloc_rows(job.spec.n_rows()) else {
+                    break;
+                };
+                let writes: Vec<Ticket<()>> = job
+                    .spec
+                    .inputs
+                    .iter()
+                    .map(|(slot, bits)| client.write(&rows[*slot], bits.clone()))
+                    .collect();
+                staged_rows += job.spec.inputs.len() as u64;
+                job.staged = Some(StagedInputs { client, rows, writes });
+            }
+        }
+        if staged_rows > 0 {
+            self.shards[shard].metrics().mover().record_prefetch(staged_rows);
+            self.shards[shard].flush();
+        }
     }
 
     /// Cost-weighted steal: scan other shards busiest-first and pull the
@@ -375,7 +450,9 @@ impl FabricCore {
             }
             let (taken, skipped) = self.queues[victim].deque.lock().unwrap().steal_back_run(
                 window,
-                |t| matches!(t, FabricTask::Job(_)),
+                // staged jobs are pinned: their rows already live on the
+                // victim's banks
+                |t| matches!(t, FabricTask::Job(j) if j.staged.is_none()),
                 mergeable,
             );
             if taken.is_empty() {
@@ -407,10 +484,15 @@ impl FabricCore {
     fn execute(&self, shard: usize, task: FabricTask) {
         match task {
             FabricTask::Job(job) => {
-                let FabricJob { spec, home, respond } = job;
-                let result = self
-                    .run_job_on(shard, spec)
-                    .map(|(receipt, rows)| JobOutput { receipt, rows, shard, home });
+                let FabricJob { spec, home, staged, respond } = job;
+                let result = match staged {
+                    // staged jobs skip the alloc+write phase: their
+                    // operands are already resident (the prefetch pins
+                    // them to this shard, so `shard` is the stager)
+                    Some(st) => run_staged(st, &spec),
+                    None => self.run_job_on(shard, spec),
+                }
+                .map(|(receipt, rows)| JobOutput { receipt, rows, shard, home });
                 self.counters.record_job(shard);
                 let _ = respond.send(result);
             }
@@ -457,6 +539,17 @@ impl FabricCore {
     /// execution, so merged dispatch can never fail work FIFO dispatch
     /// would have served.
     fn execute_jobs(&self, shard: usize, jobs: Vec<FabricJob>) {
+        // staged jobs never merge (and never steal), so none should
+        // arrive here — but route any through the ordinary path anyway
+        // so staged rows can never leak
+        let (staged, jobs): (Vec<FabricJob>, Vec<FabricJob>) =
+            jobs.into_iter().partition(|j| j.staged.is_some());
+        for job in staged {
+            self.execute(shard, FabricTask::Job(job));
+        }
+        if jobs.is_empty() {
+            return;
+        }
         if jobs.len() == 1 {
             let job = jobs.into_iter().next().expect("len checked");
             self.execute(shard, FabricTask::Job(job));
@@ -499,7 +592,7 @@ impl FabricCore {
         for (((job, rows), writes), run) in
             jobs.into_iter().zip(allocs).zip(write_tickets).zip(run_tickets)
         {
-            let FabricJob { spec, home, respond } = job;
+            let FabricJob { spec, home, respond, .. } = job;
             let result = finish_job(&client, &spec, rows, writes, run)
                 .map(|(receipt, rows)| JobOutput { receipt, rows, shard, home });
             self.counters.record_job(shard);
@@ -672,6 +765,16 @@ impl FabricCore {
     }
 }
 
+/// Execute a job whose inputs a prefetch pass already staged: the rows
+/// are allocated and the writes in flight, so only the kernel submission
+/// remains before the shared resolution tail.
+fn run_staged(st: StagedInputs, spec: &JobSpec) -> Result<(Receipt, Vec<BitRow>), PimError> {
+    let StagedInputs { client, rows, writes } = st;
+    let run = client.submit(&spec.kernel, &rows);
+    client.flush();
+    finish_job(&client, spec, rows, writes, run)
+}
+
 /// Resolve one in-flight job — the tail shared by the single-job and
 /// merged-run execution paths: wait the input writes (folding the first
 /// error), wait the kernel receipt, read the requested rows back, and
@@ -736,6 +839,10 @@ fn dispatcher_loop(
         let window = core.window(me);
         let run = queue.deque.lock().unwrap().pop_front_run(window, mergeable);
         if !run.is_empty() {
+            // stage the next queued jobs' inputs before sinking into the
+            // head run: their writes ride the wire while this run
+            // executes (a no-op with prefetch_depth 0)
+            core.prefetch(me, core.shards[me].prefetch_depth());
             core.execute_run(me, run);
             continue;
         }
@@ -987,6 +1094,10 @@ impl PimFabric {
             hazard_blocked: shards.iter().map(|s| s.report.hazard_blocked).sum(),
             moves: shards.iter().map(|s| s.report.moves).sum(),
             rows_migrated: shards.iter().map(|s| s.report.rows_migrated).sum(),
+            overlapped_moves: shards.iter().map(|s| s.report.overlapped_moves).sum(),
+            stalled_moves: shards.iter().map(|s| s.report.stalled_moves).sum(),
+            prefetched_rows: shards.iter().map(|s| s.report.prefetched_rows).sum(),
+            overlap_cycles_saved: shards.iter().map(|s| s.report.overlap_cycles_saved).sum(),
             rehomed_sessions: counters.rehomed(),
             frag_before: shards.iter().map(|s| s.report.frag_before).sum(),
             frag_after: shards.iter().map(|s| s.report.frag_after).sum(),
@@ -1229,6 +1340,61 @@ mod tests {
             session.read_now(&row).unwrap(),
             b.shifted_by(ShiftDir::Right, 2, false)
         );
+    }
+
+    #[test]
+    fn prefetch_stages_inputs_pins_jobs_and_stays_bit_identical() {
+        let core = {
+            let (shards, placement, rehome_after) = SystemBuilder::new(&DramConfig::tiny_test())
+                .channels(2)
+                .banks(2)
+                .placement(Placement::Pinned)
+                .max_batch(4)
+                .prefetch_depth(2)
+                .fabric_shards();
+            FabricCore::new(shards, placement, rehome_after)
+        };
+        let mut rng = Rng::new(53);
+        let a = BitRow::random(256, &mut rng);
+        let b = BitRow::random(256, &mut rng);
+        let c = BitRow::random(256, &mut rng);
+        let ta = core.enqueue_job(0, shift_job(a.clone(), 1));
+        let tb = core.enqueue_job(0, shift_job(b.clone(), 2));
+        let tc = core.enqueue_job(0, shift_job(c.clone(), 3));
+        // depth 2: the first two jobs stage, the third stays beyond the
+        // horizon
+        core.prefetch(0, core.shards[0].prefetch_depth());
+        assert_eq!(core.shards[0].metrics().mover().prefetched_rows(), 2);
+        // a second pass over the same window re-stages nothing
+        core.prefetch(0, 2);
+        assert_eq!(core.shards[0].metrics().mover().prefetched_rows(), 2);
+        // staged operands pin their jobs; the unstaged tail job is still
+        // the thief's (newest-first) catch
+        let stolen = core.try_steal(1).expect("the unstaged job steals normally");
+        core.execute(1, FabricTask::Job(stolen));
+        assert_eq!(
+            tc.wait().expect("stolen job").rows[0],
+            c.shifted_by(ShiftDir::Right, 3, false)
+        );
+        assert!(core.try_steal(1).is_none(), "staged jobs never migrate");
+        // own-dispatcher execution consumes the staged rows bit-identically
+        for _ in 0..2 {
+            let task = core.queues[0].deque.lock().unwrap().pop_front().unwrap();
+            core.execute(0, task);
+        }
+        assert_eq!(
+            ta.wait().expect("staged job a").rows[0],
+            a.shifted_by(ShiftDir::Right, 1, false)
+        );
+        assert_eq!(
+            tb.wait().expect("staged job b").rows[0],
+            b.shifted_by(ShiftDir::Right, 2, false)
+        );
+        // staged rows were freed with their jobs: nothing leaks
+        let report = core.shards[0].shutdown();
+        assert_eq!(report.rows_live, 0, "staged rows all returned to the slab");
+        assert_eq!(report.prefetched_rows, 2);
+        assert!(report.is_clean(), "{:?}", report.worker_failures);
     }
 
     #[test]

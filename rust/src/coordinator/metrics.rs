@@ -225,6 +225,15 @@ pub struct MoverCounters {
     frag_before: AtomicU64,
     frag_after: AtomicU64,
     prompt_flushes: AtomicU64,
+    /// migration fences whose copy latency was fully hidden behind
+    /// disjoint compute on another subarray (overlap mode)
+    overlapped_moves: AtomicU64,
+    /// fences some later same-subarray request had to wait out
+    stalled_moves: AtomicU64,
+    /// input rows the fabric's prefetch stager wrote ahead of dispatch
+    prefetched_rows: AtomicU64,
+    /// copy picoseconds removed from the foreground clock by overlap
+    overlap_saved_ps: AtomicU64,
 }
 
 impl MoverCounters {
@@ -266,6 +275,44 @@ impl MoverCounters {
 
     pub fn prompt_flushes(&self) -> u64 {
         self.prompt_flushes.load(Ordering::Relaxed)
+    }
+
+    /// Fold one batch of overlap accounting in: `overlapped` fences were
+    /// fully hidden, `stalled` fences made a later request wait, and
+    /// `saved_ps` copy picoseconds never reached the foreground clock.
+    pub fn record_overlap(&self, overlapped: u64, stalled: u64, saved_ps: u64) {
+        if overlapped > 0 {
+            self.overlapped_moves.fetch_add(overlapped, Ordering::Relaxed);
+        }
+        if stalled > 0 {
+            self.stalled_moves.fetch_add(stalled, Ordering::Relaxed);
+        }
+        if saved_ps > 0 {
+            self.overlap_saved_ps.fetch_add(saved_ps, Ordering::Relaxed);
+        }
+    }
+
+    /// The prefetch stager wrote `rows` input rows for queued jobs.
+    pub fn record_prefetch(&self, rows: u64) {
+        if rows > 0 {
+            self.prefetched_rows.fetch_add(rows, Ordering::Relaxed);
+        }
+    }
+
+    pub fn overlapped_moves(&self) -> u64 {
+        self.overlapped_moves.load(Ordering::Relaxed)
+    }
+
+    pub fn stalled_moves(&self) -> u64 {
+        self.stalled_moves.load(Ordering::Relaxed)
+    }
+
+    pub fn prefetched_rows(&self) -> u64 {
+        self.prefetched_rows.load(Ordering::Relaxed)
+    }
+
+    pub fn overlap_cycles_saved(&self) -> u64 {
+        self.overlap_saved_ps.load(Ordering::Relaxed)
     }
 }
 
@@ -859,6 +906,24 @@ mod tests {
         // clones share the registry
         m.clone().locks().slab.lock(&mu);
         assert_eq!(m.lock_report().slab.acquired, 1);
+    }
+
+    #[test]
+    fn mover_overlap_counters_accumulate() {
+        let m = Metrics::new(1);
+        assert_eq!(m.mover().overlapped_moves(), 0);
+        assert_eq!(m.mover().stalled_moves(), 0);
+        assert_eq!(m.mover().prefetched_rows(), 0);
+        assert_eq!(m.mover().overlap_cycles_saved(), 0);
+        m.mover().record_overlap(2, 1, 500);
+        m.mover().record_overlap(0, 0, 0); // no-op deltas don't touch the atomics
+        m.clone().mover().record_overlap(1, 0, 250);
+        assert_eq!(m.mover().overlapped_moves(), 3);
+        assert_eq!(m.mover().stalled_moves(), 1);
+        assert_eq!(m.mover().overlap_cycles_saved(), 750);
+        m.mover().record_prefetch(4);
+        m.mover().record_prefetch(0);
+        assert_eq!(m.mover().prefetched_rows(), 4);
     }
 
     #[test]

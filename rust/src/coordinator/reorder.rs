@@ -86,6 +86,14 @@ pub trait Reorderable {
     /// same-shape kernel: the executor replays the whole marked run
     /// through one `run_compiled_many` call.
     fn mark_merged(&mut self);
+
+    /// `true` for migration fences (`CopyRows`). With overlap pricing
+    /// on, [`hoist_fences`] bubbles these toward the front of a drained
+    /// batch so the background copy starts as early as the hazard
+    /// discipline allows and the compute behind it runs under the copy.
+    fn is_fence(&self) -> bool {
+        false
+    }
 }
 
 /// What one [`plan`] pass did.
@@ -108,6 +116,40 @@ impl PlanStats {
         self.hazard_blocked += other.hazard_blocked;
         self.merged += other.merged;
     }
+}
+
+/// Overlap pre-pass: bubble every migration fence
+/// ([`Reorderable::is_fence`]) toward the front of the batch, past any
+/// predecessor it does not conflict with. Run *before* [`plan`] when
+/// overlap pricing is on: a fence dispatched early occupies its
+/// subarray's background timeline while the disjoint compute behind it
+/// keeps the foreground clock — dispatched late, the same fence has
+/// nothing left to hide under.
+///
+/// Hazard discipline matches [`plan`] and `Batch::stable_promote`: a
+/// fence never crosses a conflicting request (or another fence, keeping
+/// fences FIFO among themselves), so per-ticket results stay
+/// bit-identical to the unhoisted order. Returns how many fences moved
+/// forward at least one slot.
+pub fn hoist_fences<T: Reorderable>(items: &mut [T]) -> u64 {
+    let mut hoisted = 0u64;
+    for i in 1..items.len() {
+        if !items[i].is_fence() {
+            continue;
+        }
+        let mut j = i;
+        while j > 0
+            && !items[j - 1].is_fence()
+            && !items[j - 1].access().conflicts_with(items[j].access())
+        {
+            items.swap(j - 1, j);
+            j -= 1;
+        }
+        if j < i {
+            hoisted += 1;
+        }
+    }
+    hoisted
 }
 
 /// Plan one batch: stable, window-bounded, hazard-checked grouping of
@@ -425,5 +467,87 @@ mod tests {
         let stats = plan(&mut items, 8);
         assert_eq!(order(&items), vec!["k1", "k2", "w"]);
         assert_eq!(stats.merged, 1);
+    }
+
+    /// Minimal item for the fence-hoist pre-pass: only footprint and
+    /// fence-ness matter (shape never does — fences don't merge).
+    #[derive(Clone, Debug)]
+    struct FItem {
+        name: &'static str,
+        access: Access,
+        fence: bool,
+    }
+
+    impl Reorderable for FItem {
+        fn merge_shape(&self) -> Option<&ProgramShape> {
+            None
+        }
+        fn access(&self) -> &Access {
+            &self.access
+        }
+        fn mark_merged(&mut self) {}
+        fn is_fence(&self) -> bool {
+            self.fence
+        }
+    }
+
+    fn freq(name: &'static str, reads: &[usize], writes: &[usize], fence: bool) -> FItem {
+        let mut rows = RowFootprint::new();
+        for &r in reads {
+            rows.add_read(r);
+        }
+        for &w in writes {
+            rows.add_write(w);
+        }
+        FItem { name, access: Access::Touch { subarray: 0, rows }, fence }
+    }
+
+    fn forder(items: &[FItem]) -> Vec<&'static str> {
+        items.iter().map(|i| i.name).collect()
+    }
+
+    #[test]
+    fn fences_hoist_past_disjoint_work_to_the_front() {
+        let mut items = vec![
+            freq("k1", &[0], &[1], false),
+            freq("k2", &[2], &[3], false),
+            freq("f", &[10], &[11], true),
+        ];
+        assert_eq!(hoist_fences(&mut items), 1);
+        assert_eq!(forder(&items), vec!["f", "k1", "k2"]);
+        assert_eq!(hoist_fences(&mut items), 0, "idempotent once front-loaded");
+    }
+
+    #[test]
+    fn fence_hoist_stops_at_a_conflicting_predecessor() {
+        // k2 writes row 10, which the fence reads: the fence passes k3
+        // but pins behind k2 — the copy still reads post-k2 bits
+        let mut items = vec![
+            freq("k1", &[0], &[1], false),
+            freq("k2", &[2], &[10], false),
+            freq("k3", &[4], &[5], false),
+            freq("f", &[10], &[11], true),
+        ];
+        assert_eq!(hoist_fences(&mut items), 1);
+        assert_eq!(forder(&items), vec!["k1", "k2", "f", "k3"]);
+    }
+
+    #[test]
+    fn fences_stay_fifo_among_themselves_and_barriers_pin_them() {
+        // two disjoint fences: both reach the front, original order kept
+        let mut items = vec![
+            freq("k", &[0], &[1], false),
+            freq("f1", &[8], &[9], true),
+            freq("f2", &[12], &[13], true),
+        ];
+        assert_eq!(hoist_fences(&mut items), 2);
+        assert_eq!(forder(&items), vec!["f1", "f2", "k"]);
+        // a barrier access stops a fence like it stops the planner
+        let mut items = vec![
+            FItem { name: "x", access: Access::Barrier, fence: false },
+            freq("f", &[8], &[9], true),
+        ];
+        assert_eq!(hoist_fences(&mut items), 0);
+        assert_eq!(forder(&items), vec!["x", "f"]);
     }
 }

@@ -138,6 +138,10 @@ impl Reorderable for Envelope {
     fn mark_merged(&mut self) {
         self.merged = true;
     }
+
+    fn is_fence(&self) -> bool {
+        matches!(self.req, PimRequest::CopyRows { .. })
+    }
 }
 
 enum WorkerMsg {
@@ -195,6 +199,17 @@ pub struct SystemReport {
     pub moves: u64,
     /// individual rows those plans copied and re-bound
     pub rows_migrated: u64,
+    /// migration fences that fully hid behind disjoint compute under
+    /// overlap pricing (0 with [`SystemBuilder::overlap`] off)
+    pub overlapped_moves: u64,
+    /// migration fences some conflicting request had to wait out
+    pub stalled_moves: u64,
+    /// input rows the fabric's dispatchers staged for queued jobs ahead
+    /// of execution (0 without [`SystemBuilder::prefetch_depth`])
+    pub prefetched_rows: u64,
+    /// simulated picoseconds of copy latency hidden behind compute —
+    /// what serialized fences would have added to the makespan
+    pub overlap_cycles_saved: u64,
     /// sessions the fabric's mover re-homed to another shard (0 outside a
     /// fabric)
     pub rehomed_sessions: u64,
@@ -265,6 +280,12 @@ pub struct SystemBuilder {
     controller: bool,
     /// controller tunables (tick, window bounds, governor cost model)
     control_cfg: ControlConfig,
+    /// overlapped-move pricing: fences become hazard edges and copies
+    /// run on per-subarray background timelines
+    overlap: bool,
+    /// fabric-only: queued jobs whose input rows an idle dispatcher
+    /// stages ahead of execution (0 = no prefetch)
+    prefetch_depth: usize,
     /// fabric shard index stamped onto this system's session seats
     /// (set internally by `fabric_shards`; 0 for a plain system)
     shard_index: usize,
@@ -289,6 +310,8 @@ impl SystemBuilder {
             default_qos: QosClass::default(),
             controller: false,
             control_cfg: ControlConfig::default(),
+            overlap: default_overlap(),
+            prefetch_depth: 0,
             shard_index: 0,
         }
     }
@@ -451,6 +474,37 @@ impl SystemBuilder {
         self
     }
 
+    /// Overlapped row migration (default: the `PIM_OVERLAP` env var, else
+    /// off). On, a `CopyRows` migration fence stops draining the whole
+    /// per-bank FIFO: it is hoisted ahead of queued work whose row
+    /// footprint it doesn't touch (never past a conflicting request — the
+    /// same per-pair FIFO guarantee the reorderer gives, so results stay
+    /// bit-identical), and the bank simulator prices the copy on a
+    /// per-subarray background timeline — compute on *other* subarrays
+    /// runs concurrently with the copy instead of waiting it out, while a
+    /// request that touches the copying subarray stalls until the copy
+    /// tail finishes. Census/energy totals are unchanged; only occupancy
+    /// shrinks. The report's `overlapped_moves`/`stalled_moves`/
+    /// `overlap_cycles_saved` counters record the outcome, and the
+    /// governor's cost model learns from them.
+    pub fn overlap(mut self, on: bool) -> Self {
+        self.overlap = on;
+        self
+    }
+
+    /// Fabric-only input prefetch (default 0 = off): while a shard's
+    /// dispatcher executes the head of its deque, it stages the input
+    /// rows of up to `n` queued jobs behind the head — allocated and
+    /// written at background QoS so the rows are resident (and any
+    /// placement-triggered migration already fenced) by the time the job
+    /// reaches the front. Staged jobs are pinned against stealing; the
+    /// `prefetched_rows` report counter records the traffic. Ignored by
+    /// [`Self::build`].
+    pub fn prefetch_depth(mut self, n: usize) -> Self {
+        self.prefetch_depth = n;
+        self
+    }
+
     /// Spin up the leader state and one worker thread per bank.
     pub fn build(self) -> PimSystem {
         assert_eq!(
@@ -515,6 +569,8 @@ impl SystemBuilder {
                 default_qos: self.default_qos,
                 controller: self.controller,
                 control_cfg: self.control_cfg.clone(),
+                overlap: self.overlap,
+                prefetch_depth: self.prefetch_depth,
                 shard_index: channel,
             };
             shards.push(shard_builder.build_on(banks));
@@ -543,12 +599,14 @@ impl SystemBuilder {
 
         let mut senders = Vec::new();
         let mut workers = Vec::new();
+        let overlap = self.overlap;
         for bank in 0..n_banks {
             let (tx, rx) = channel::<WorkerMsg>();
             let m = metrics.clone();
             let cfg = self.cfg.clone();
             let cache = cache.clone();
-            workers.push(std::thread::spawn(move || worker_loop(bank, cfg, rx, m, cache)));
+            workers
+                .push(std::thread::spawn(move || worker_loop(bank, cfg, rx, m, cache, overlap)));
             senders.push(tx);
         }
 
@@ -577,6 +635,8 @@ impl SystemBuilder {
                 // permanently open (pre-controller behavior, exactly)
                 mover_gate: AtomicBool::new(!self.controller),
                 controlled: self.controller,
+                overlap: self.overlap,
+                prefetch_depth: self.prefetch_depth,
                 default_qos: self.default_qos,
                 seats: Mutex::new(Vec::new()),
                 senders,
@@ -624,6 +684,12 @@ fn controller_loop(core: Weak<Core>, cfg: ControlConfig, stop: Arc<AtomicBool>) 
             m.control().record_window_change(cur, next);
             core.reorder_window.store(next, Ordering::Relaxed);
         }
+        // with overlap pricing on, feed the governor the observed fence
+        // outcomes so its copy-cost model discounts moves that keep
+        // hiding behind compute
+        if core.overlap {
+            governor.observe_overlap(m.mover().overlapped_moves(), m.mover().stalled_moves());
+        }
         // actuator 2: the defragmenter gate. A compaction pass is modeled
         // as moving roughly one row per threshold-unit of score, so the
         // governor engages at frag ≥ engage_factor × threshold, lets go
@@ -656,7 +722,18 @@ fn default_reorder_window() -> usize {
 /// non-zero value (CI runs tier-1 once with `PIM_DEFRAG=1` so the whole
 /// suite exercises live migration), else off.
 fn default_defrag() -> bool {
-    std::env::var("PIM_DEFRAG")
+    env_flag("PIM_DEFRAG")
+}
+
+/// The builder's overlapped-migration default: on when `PIM_OVERLAP` is
+/// set to a non-zero value (CI runs tier-1 once with `PIM_OVERLAP=1` so
+/// the whole suite exercises fence-as-hazard-edge dispatch), else off.
+fn default_overlap() -> bool {
+    env_flag("PIM_OVERLAP")
+}
+
+fn env_flag(name: &str) -> bool {
+    std::env::var(name)
         .ok()
         .map(|v| {
             let v = v.trim();
@@ -698,6 +775,11 @@ struct Core {
     mover_gate: AtomicBool,
     /// whether a feedback controller owns this core's knobs
     controlled: bool,
+    /// overlapped-move pricing: fences hoist as hazard edges and the
+    /// workers run their simulators with per-subarray busy timelines
+    overlap: bool,
+    /// fabric-only staging depth (the dispatcher reads it off its shards)
+    prefetch_depth: usize,
     /// QoS class new seats start in
     default_qos: QosClass,
     /// every seat opened on this core (weak — seats die with their last
@@ -898,6 +980,18 @@ impl PimSystem {
         self.core.reorder_window.store(n, Ordering::Relaxed);
     }
 
+    /// Whether this core prices migration fences as hazard edges
+    /// ([`SystemBuilder::overlap`]).
+    pub fn overlap(&self) -> bool {
+        self.core.overlap
+    }
+
+    /// The input-prefetch staging depth a fabric dispatcher applies to
+    /// this shard's queued jobs ([`SystemBuilder::prefetch_depth`]).
+    pub(crate) fn prefetch_depth(&self) -> usize {
+        self.core.prefetch_depth
+    }
+
     /// The QoS class new sessions on this core start in.
     pub(crate) fn default_qos(&self) -> QosClass {
         self.core.default_qos
@@ -994,6 +1088,14 @@ impl PimSystem {
                 .stable_promote(|e| e.class.rank(), |a, b| a.access.conflicts_with(&b.access));
             self.core.metrics.control().record_promoted(promoted);
         }
+        // overlap pre-pass: migration fences bubble toward the front of
+        // the batch — past any request whose footprint they don't touch,
+        // never past one they conflict with — so the copy starts early
+        // and the disjoint work behind it executes under the copy's
+        // background timeline instead of behind a drained FIFO
+        if self.core.overlap && batch.items.len() > 1 {
+            let _ = reorder::hoist_fences(&mut batch.items);
+        }
         // hazard-checked reorder pass over the drained queue prefix:
         // same-shape kernels regroup into merged runs when nothing they
         // would jump over conflicts (no-op with a zero window)
@@ -1065,6 +1167,10 @@ impl PimSystem {
             hazard_blocked: m.hazard_blocked(),
             moves: m.mover().moves(),
             rows_migrated: m.mover().rows_migrated(),
+            overlapped_moves: m.mover().overlapped_moves(),
+            stalled_moves: m.mover().stalled_moves(),
+            prefetched_rows: m.mover().prefetched_rows(),
+            overlap_cycles_saved: m.mover().overlap_cycles_saved(),
             rehomed_sessions: 0,
             frag_before: m.mover().frag_before(),
             frag_after: m.mover().frag_after(),
@@ -1102,9 +1208,16 @@ fn worker_loop(
     rx: Receiver<WorkerMsg>,
     metrics: Metrics,
     cache: Arc<ProgramCache>,
+    overlap: bool,
 ) {
     let mut sim = BankSim::new(cfg);
+    sim.set_overlap(overlap);
     let mut last_aaps: u64 = 0;
+    // cumulative overlap counters already published to the metrics
+    // registry (per-batch deltas keep the live counters current)
+    let mut pub_overlapped: u64 = 0;
+    let mut pub_stalled: u64 = 0;
+    let mut pub_saved: u64 = 0;
     let mut memo: ProgramMemo = None;
     while let Ok(msg) = rx.recv() {
         match msg {
@@ -1142,13 +1255,36 @@ fn worker_loop(
                     }
                 }
                 delta.aaps = sim.counts.aap - last_aaps;
-                delta.sim_time_ps = sim.now_ps;
+                // the makespan includes any copy still running on a
+                // background timeline (== now_ps with overlap off)
+                delta.sim_time_ps = sim.horizon_ps();
                 delta.energy_pj = sim.energy.total_pj();
                 delta.refreshes = sim.counts.refresh;
                 metrics.record(bank, &delta);
                 last_aaps = sim.counts.aap;
+                if overlap {
+                    metrics.mover().record_overlap(
+                        sim.overlapped_copies - pub_overlapped,
+                        sim.stalled_copies - pub_stalled,
+                        sim.overlap_saved_ps - pub_saved,
+                    );
+                    pub_overlapped = sim.overlapped_copies;
+                    pub_stalled = sim.stalled_copies;
+                    pub_saved = sim.overlap_saved_ps;
+                }
             }
         }
+    }
+    if overlap {
+        // classify copies still on a background timeline at shutdown:
+        // a copy the clock already passed was fully hidden; one whose
+        // tail extends the horizon only gets its prefix credited
+        sim.settle_overlap();
+        metrics.mover().record_overlap(
+            sim.overlapped_copies - pub_overlapped,
+            sim.stalled_copies - pub_stalled,
+            sim.overlap_saved_ps - pub_saved,
+        );
     }
 }
 

@@ -8,13 +8,14 @@
 //! shiftdram mc [--trials N] [--backend pjrt|native] [--node 22nm]
 //! shiftdram serve --banks N --ops K [--batch B] [--channels C] [--reorder-window W]
 //!                 [--defrag] [--defrag-threshold T] [--rehome-after R] [--opt-level L]
+//!                 [--overlap] [--prefetch-depth P]
 //!                 [--qos latency|throughput|background] [--controller on|off]
 //!                 [--controller-tick-ms T]
 //!                 [--listen ADDR] [--uds PATH] [--port-file F] [--exit-idle-s N]
 //!                 [--max-inflight M] [--idle-timeout-ms T] [--write-timeout-ms T]
 //!                 [--net-tick-ms T] [--accept-tick-ms T]
 //! shiftdram loadgen [--connect ADDR | --uds PATH] [--conns N] [--ops K] [--seed S]
-//!                   [--inflight D] [--gap-us U] [--banks N] [--mix A,B,C]
+//!                   [--inflight D] [--gap-us U] [--banks N] [--overlap] [--mix A,B,C]
 //!                   [--classes L,T,B] [--out NAME]
 //! shiftdram demo [gf|aes|rs|mul|adder]
 //! ```
@@ -29,7 +30,7 @@ use shiftdram::circuit::montecarlo::{Backend, MonteCarlo};
 use shiftdram::circuit::params::TechNode;
 use shiftdram::config::{DramConfig, McConfig};
 use shiftdram::coordinator::{
-    ControlConfig, ControlReport, Kernel, LockReport, QosClass, SystemBuilder,
+    ControlConfig, ControlReport, Kernel, LockReport, QosClass, SystemBuilder, SystemReport,
 };
 use shiftdram::pim::OptLevel;
 use shiftdram::report;
@@ -185,6 +186,10 @@ fn main() {
             let defrag = flag(&args, "--defrag");
             let defrag_threshold = opt_usize(&args, "--defrag-threshold", 1);
             let rehome_after = opt_usize(&args, "--rehome-after", 0);
+            // --overlap turns migration fences into hazard edges; absent,
+            // the builder still honors PIM_OVERLAP=1 from the environment
+            let overlap = flag(&args, "--overlap");
+            let prefetch_depth = opt_usize(&args, "--prefetch-depth", 0);
             // default follows PIM_OPT_LEVEL (level 1 when unset)
             let opt_level = OptLevel::from_index(opt_usize(
                 &args,
@@ -214,6 +219,8 @@ fn main() {
                     defrag,
                     defrag_threshold,
                     rehome_after,
+                    overlap,
+                    prefetch_depth,
                     opt_level,
                     qos,
                     controller,
@@ -234,6 +241,8 @@ fn main() {
                     defrag,
                     defrag_threshold,
                     rehome_after,
+                    overlap,
+                    prefetch_depth,
                     opt_level,
                     qos,
                     controller,
@@ -241,7 +250,7 @@ fn main() {
                 );
                 return;
             }
-            let sys = SystemBuilder::new(&cfg)
+            let mut builder = SystemBuilder::new(&cfg)
                 .banks(banks)
                 .max_batch(batch)
                 .reorder_window(window)
@@ -250,8 +259,11 @@ fn main() {
                 .opt_level(opt_level)
                 .default_qos(qos)
                 .controller(controller)
-                .control_config(control_cfg)
-                .build();
+                .control_config(control_cfg);
+            if overlap {
+                builder = builder.overlap(true);
+            }
+            let sys = builder.build();
             // one session per bank; each allocs one system-placed row and
             // submits shift kernels against its handle
             let clients: Vec<_> = (0..banks).map(|b| sys.client_on(b)).collect();
@@ -295,6 +307,11 @@ fn main() {
                     r.moves, r.rows_migrated, r.frag_before, r.frag_after
                 );
             }
+            // the flag may be absent with PIM_OVERLAP set, so also key
+            // off the counters themselves
+            if overlap || r.overlapped_moves + r.stalled_moves + r.prefetched_rows > 0 {
+                print_overlap(&r);
+            }
             if controller {
                 print_control(&r.control);
             }
@@ -335,6 +352,19 @@ fn print_locks(l: &LockReport) {
     );
 }
 
+/// One line of mover overlap telemetry: migration fences that hid behind
+/// compute vs. ones that stalled the pipeline, rows staged by prefetch,
+/// and the simulated time the hazard-edge path saved.
+fn print_overlap(r: &SystemReport) {
+    println!(
+        "overlap: {} moves hidden / {} stalled, {} rows prefetched, {:.3} us saved",
+        r.overlapped_moves,
+        r.stalled_moves,
+        r.prefetched_rows,
+        r.overlap_cycles_saved as f64 / 1e6
+    );
+}
+
 /// One line of controller telemetry, shared by every serve path.
 fn print_control(c: &ControlReport) {
     println!(
@@ -370,6 +400,8 @@ fn serve_net(
     defrag: bool,
     defrag_threshold: usize,
     rehome_after: usize,
+    overlap: bool,
+    prefetch_depth: usize,
     opt_level: OptLevel,
     qos: QosClass,
     controller: bool,
@@ -394,7 +426,7 @@ fn serve_net(
     let exit_idle_s = opt_usize(args, "--exit-idle-s", 0);
 
     let server = if channels > 1 {
-        let fabric = SystemBuilder::new(cfg)
+        let mut b = SystemBuilder::new(cfg)
             .channels(channels)
             .banks(banks)
             .max_batch(batch)
@@ -402,14 +434,17 @@ fn serve_net(
             .defrag(defrag)
             .defrag_threshold(defrag_threshold)
             .rehome_after(rehome_after)
+            .prefetch_depth(prefetch_depth)
             .opt_level(opt_level)
             .default_qos(qos)
             .controller(controller)
-            .control_config(control_cfg)
-            .build_fabric();
-        NetServer::over_fabric(fabric, net_cfg)
+            .control_config(control_cfg);
+        if overlap {
+            b = b.overlap(true);
+        }
+        NetServer::over_fabric(b.build_fabric(), net_cfg)
     } else {
-        let sys = SystemBuilder::new(cfg)
+        let mut b = SystemBuilder::new(cfg)
             .banks(banks)
             .max_batch(batch)
             .reorder_window(window)
@@ -418,9 +453,11 @@ fn serve_net(
             .opt_level(opt_level)
             .default_qos(qos)
             .controller(controller)
-            .control_config(control_cfg)
-            .build();
-        NetServer::new(sys, net_cfg)
+            .control_config(control_cfg);
+        if overlap {
+            b = b.overlap(true);
+        }
+        NetServer::new(b.build(), net_cfg)
     };
 
     if let Some(addr) = &listen {
@@ -495,6 +532,7 @@ fn serve_net(
         r.rows_live
     );
     print_locks(&r.locks);
+    print_overlap(&r);
     if controller {
         print_control(&r.control);
     }
@@ -538,15 +576,18 @@ fn loadgen_cmd(cfg: &DramConfig, args: &[String]) {
         Some(t) => (t, None),
         None => {
             let banks = opt_usize(args, "--banks", 8);
-            let sys = SystemBuilder::new(cfg).banks(banks).build();
-            let server = NetServer::new(sys, NetConfig::new(cfg.geometry.cols_per_row));
+            let mut b = SystemBuilder::new(cfg).banks(banks);
+            if flag(args, "--overlap") {
+                b = b.overlap(true);
+            }
+            let server = NetServer::new(b.build(), NetConfig::new(cfg.geometry.cols_per_row));
             let local = server.listen_tcp("127.0.0.1:0").expect("bind loopback");
             println!("spawned in-process server on {local}");
             (Target::Tcp(local.to_string()), Some(server))
         }
     };
 
-    let report = match loadgen::run(&target, &lcfg) {
+    let mut report = match loadgen::run(&target, &lcfg) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("loadgen transport failure: {e}");
@@ -578,14 +619,6 @@ fn loadgen_cmd(cfg: &DramConfig, args: &[String]) {
             class, s.conns, s.ops_done, s.ops_sent, s.busy, s.p50_us, s.p99_us, s.p999_us
         );
     }
-    match loadgen::write_json(&report, &out) {
-        Ok(p) => println!("wrote {}", p.display()),
-        Err(e) => {
-            eprintln!("cannot write BENCH_{out}.json: {e}");
-            std::process::exit(1);
-        }
-    }
-
     let mut rows_leaked = 0u64;
     if let Some(server) = server {
         // the in-process path prints the same NetCounters snapshot the
@@ -606,10 +639,24 @@ fn loadgen_cmd(cfg: &DramConfig, args: &[String]) {
         );
         let r = server.shutdown();
         rows_leaked = r.rows_live;
+        // fold the mover's overlap counters into the benchmark record so
+        // BENCH_serve.json carries them beside the latency percentiles
+        report.overlapped_moves = r.overlapped_moves;
+        report.stalled_moves = r.stalled_moves;
+        report.prefetched_rows = r.prefetched_rows;
+        report.overlap_cycles_saved = r.overlap_cycles_saved;
         println!("in-process server: {} kernels served, {} rows live", r.kernels, r.rows_live);
         print_locks(&r.locks);
+        print_overlap(&r);
         if !r.is_clean() {
             eprintln!("worker failures: {:?}", r.worker_failures);
+            std::process::exit(1);
+        }
+    }
+    match loadgen::write_json(&report, &out) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => {
+            eprintln!("cannot write BENCH_{out}.json: {e}");
             std::process::exit(1);
         }
     }
@@ -638,6 +685,8 @@ fn serve_fabric(
     defrag: bool,
     defrag_threshold: usize,
     rehome_after: usize,
+    overlap: bool,
+    prefetch_depth: usize,
     opt_level: OptLevel,
     qos: QosClass,
     controller: bool,
@@ -646,7 +695,7 @@ fn serve_fabric(
     use shiftdram::coordinator::JobSpec;
     use shiftdram::util::{BitRow, Rng};
 
-    let fabric = SystemBuilder::new(cfg)
+    let mut builder = SystemBuilder::new(cfg)
         .channels(channels)
         .banks(banks)
         .max_batch(batch)
@@ -654,11 +703,15 @@ fn serve_fabric(
         .defrag(defrag)
         .defrag_threshold(defrag_threshold)
         .rehome_after(rehome_after)
+        .prefetch_depth(prefetch_depth)
         .opt_level(opt_level)
         .default_qos(qos)
         .controller(controller)
-        .control_config(control_cfg)
-        .build_fabric();
+        .control_config(control_cfg);
+    if overlap {
+        builder = builder.overlap(true);
+    }
+    let fabric = builder.build_fabric();
     let mut rng = Rng::new(7);
     let cols = cfg.geometry.cols_per_row;
     let tickets: Vec<_> = (0..ops)
@@ -693,6 +746,9 @@ fn serve_fabric(
         r.shared_blocks,
         r.scratch_rows_saved
     );
+    if overlap || prefetch_depth > 0 || r.prefetched_rows > 0 {
+        print_overlap(&r);
+    }
     if controller {
         print_control(&r.control);
     }

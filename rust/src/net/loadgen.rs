@@ -126,6 +126,16 @@ pub struct LoadReport {
     pub elapsed_s: f64,
     /// Latency / Throughput / Background breakdown.
     pub per_class: [ClassStats; 3],
+    /// Server-side mover counters, folded in after shutdown when the
+    /// generator owns the server (the in-process path); zero when it
+    /// drove a remote socket it cannot introspect.
+    pub overlapped_moves: u64,
+    /// Migration fences that stalled on a busy subarray timeline.
+    pub stalled_moves: u64,
+    /// Input rows staged ahead of queued jobs by idle-shard prefetch.
+    pub prefetched_rows: u64,
+    /// Simulated picoseconds of copy latency hidden behind compute.
+    pub overlap_cycles_saved: u64,
 }
 
 impl LoadReport {
@@ -236,6 +246,10 @@ pub fn write_json(report: &LoadReport, name: &str) -> io::Result<std::path::Path
     j.metric("p999_us", report.p999_us);
     j.metric("goodput_ops_s", report.goodput_ops_s);
     j.metric("elapsed_s", report.elapsed_s);
+    j.metric("overlapped_moves", report.overlapped_moves as f64);
+    j.metric("stalled_moves", report.stalled_moves as f64);
+    j.metric("prefetched_rows", report.prefetched_rows as f64);
+    j.metric("overlap_cycles_saved", report.overlap_cycles_saved as f64);
     for class in QosClass::ALL {
         let s = &report.per_class[class.index()];
         if s.conns == 0 {

@@ -127,16 +127,19 @@ enum Pending {
 }
 
 /// Replay the case; returns (ticket results, final row images, final
-/// fragmentation score, report).
+/// fragmentation score, report). `overlap` is pinned explicitly so the
+/// differential stays controlled under a `PIM_OVERLAP=1` environment.
 fn run_case(
     case: &Case,
     defrag: bool,
+    overlap: bool,
 ) -> (Vec<TicketResult>, Vec<Vec<BitRow>>, usize, SystemReport) {
     let sys = SystemBuilder::new(&DramConfig::tiny_test())
         .banks(case.banks)
         .max_batch(case.max_batch)
         .defrag(defrag)
         .defrag_threshold(1)
+        .overlap(overlap)
         .build();
     let clients: Vec<_> = (0..case.sessions).map(|_| sys.client()).collect();
     let mut handles: Vec<Vec<RowHandle>> = vec![Vec::new(); case.sessions];
@@ -200,8 +203,8 @@ fn churn_differential_migration_is_invisible_and_defragments() {
     let mut frag_on_total = 0usize;
     for seed in 0..SEEDS {
         let case = gen_case(seed);
-        let (off_results, off_rows, frag_off, off) = run_case(&case, false);
-        let (on_results, on_rows, frag_on, on) = run_case(&case, true);
+        let (off_results, off_rows, frag_off, off) = run_case(&case, false, false);
+        let (on_results, on_rows, frag_on, on) = run_case(&case, true, false);
         assert_eq!(off_results.len(), on_results.len());
         for (i, (a, b)) in off_results.iter().zip(&on_results).enumerate() {
             assert_eq!(a, b, "seed {seed}: ticket {i} diverged under migration");
@@ -230,6 +233,61 @@ fn churn_differential_migration_is_invisible_and_defragments() {
     assert!(
         frag_on_total < frag_off_total,
         "aggregate fragmentation must drop: {frag_on_total} vs {frag_off_total}"
+    );
+}
+
+#[test]
+fn churn_differential_overlap_is_bit_identical_and_never_slower() {
+    // the same storms, defrag on both times, with migration fences priced
+    // as barriers vs as hazard edges: everything a client can observe —
+    // every ticket result, every read-back, every final row image — must
+    // agree exactly, and turning fences into hazard edges must never make
+    // the simulated makespan worse (a fully stalled fence degenerates to
+    // exactly the serialized schedule, so equality is the floor)
+    let mut total_moves = 0u64;
+    let mut total_overlapped = 0u64;
+    let mut total_stalled = 0u64;
+    for seed in 0..SEEDS {
+        let case = gen_case(seed);
+        let (ser_results, ser_rows, frag_ser, ser) = run_case(&case, true, false);
+        let (ov_results, ov_rows, frag_ov, ov) = run_case(&case, true, true);
+        assert_eq!(ser_results.len(), ov_results.len());
+        for (i, (a, b)) in ser_results.iter().zip(&ov_results).enumerate() {
+            assert_eq!(a, b, "seed {seed}: ticket {i} diverged under overlap");
+        }
+        assert_eq!(ser_rows, ov_rows, "seed {seed}: final row images diverged under overlap");
+        assert_eq!(frag_ser, frag_ov, "seed {seed}: overlap must not change the mover's work");
+        assert_eq!(ser.requests, ov.requests, "seed {seed}");
+        assert_eq!(ser.kernels, ov.kernels, "seed {seed}");
+        assert_eq!(ser.moves, ov.moves, "seed {seed}: same storms, same plans");
+        assert!(
+            ov.makespan_ps <= ser.makespan_ps,
+            "seed {seed}: hazard-edge fences made the storm slower \
+             ({} vs {} ps)",
+            ov.makespan_ps,
+            ser.makespan_ps
+        );
+        assert_eq!(
+            ov.overlapped_moves + ov.stalled_moves,
+            ov.moves,
+            "seed {seed}: every fence must be classified overlapped or stalled"
+        );
+        assert_eq!(
+            ser.overlapped_moves + ser.stalled_moves,
+            0,
+            "seed {seed}: barriers don't classify"
+        );
+        assert!(ser.is_clean() && ov.is_clean(), "seed {seed}");
+        total_moves += ov.moves;
+        total_overlapped += ov.overlapped_moves;
+        total_stalled += ov.stalled_moves;
+    }
+    assert!(total_moves > 0, "the corpus must exercise live migration");
+    assert_eq!(total_overlapped + total_stalled, total_moves);
+    assert!(
+        total_overlapped > 0,
+        "across {SEEDS} storms at least one fence must hide behind compute \
+         ({total_overlapped} overlapped / {total_stalled} stalled)"
     );
 }
 
